@@ -1,0 +1,48 @@
+//! Fig. 9 ablation grid evaluation cost (per grid point, analytic part).
+//! Run: cargo bench --bench bench_ablation
+
+use speq::accel::{paper_dims, Accel};
+use speq::specdec::{expected_accept_length, theoretical_speedup, IterRecord, SpecTrace};
+use speq::util::bench::{black_box, Bench};
+
+fn trace_for(l: u32, accept: u32) -> SpecTrace {
+    SpecTrace {
+        iterations: vec![IterRecord { drafted: l, accepted: accept.min(l), early_exit: false }; 8],
+        produced: 8 * (accept.min(l) as usize + 1),
+        prompt_len: 128,
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("bench_ablation");
+    let accel = Accel::default();
+    let dims = paper_dims("Llama3.1-8b").unwrap();
+
+    b.bench("grid_point_sim", || {
+        for l in [4u32, 8, 12, 16, 20] {
+            let t = trace_for(l, l - 1);
+            black_box(accel.run_trace(dims, &t, 1024));
+        }
+    });
+    b.bench("eq1_eq2_grid_25pts", || {
+        for l in [4usize, 8, 12, 16, 20] {
+            for r in [0.5, 0.7, 0.9, 0.95, 0.99] {
+                black_box(expected_accept_length(r, l));
+                black_box(theoretical_speedup(r, l, 0.31, 1.0));
+            }
+        }
+    });
+
+    // The ablation's analytic shape: the best L shrinks as r drops.
+    for r in [0.8, 0.95] {
+        let best = [4usize, 8, 12, 16, 20]
+            .into_iter()
+            .max_by(|&a, &bb| {
+                theoretical_speedup(r, a, 0.31, 1.0)
+                    .partial_cmp(&theoretical_speedup(r, bb, 0.31, 1.0))
+                    .unwrap()
+            })
+            .unwrap();
+        b.metric(format!("best_L_at_r_{r}"), best as f64, "draft len");
+    }
+}

@@ -1,0 +1,43 @@
+//! End-to-end accelerator speedup evaluation (Table III / Fig. 7 engine).
+//! Replays measured traces if present, otherwise synthetic ones.
+//! Run: cargo bench --bench bench_accel_speedup
+
+use speq::accel::{paper_dims, speedup_vs_fp16, Accel, BaselineKind, PAPER_MODELS};
+use speq::specdec::{IterRecord, SpecTrace};
+use speq::util::bench::{black_box, Bench};
+use speq::workload::load_trace;
+
+fn synthetic_trace() -> SpecTrace {
+    SpecTrace {
+        iterations: vec![IterRecord { drafted: 16, accepted: 14, early_exit: false }; 16],
+        produced: 240,
+        prompt_len: 128,
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("bench_accel_speedup");
+    let accel = Accel::default();
+    let results = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/results");
+
+    for dims in PAPER_MODELS.iter() {
+        let tiny = format!("{}-tiny", dims.name.to_lowercase());
+        let trace = load_trace(&results, &tiny, "chat", 16, 0.6)
+            .map(|r| r.trace)
+            .unwrap_or_else(synthetic_trace);
+        b.bench(format!("run_trace_{}", dims.name), || {
+            black_box(accel.run_trace(dims, &trace, 1024));
+        });
+        let tc = accel.run_trace(dims, &trace, 1024);
+        b.metric(format!("{}_speedup", dims.name), tc.speedup(), "x vs FP16");
+    }
+
+    let dims = paper_dims("Llama2-7b").unwrap();
+    let trace = synthetic_trace();
+    b.bench("olive8_speedup_eval", || {
+        black_box(speedup_vs_fp16(BaselineKind::Olive8, &accel, dims, 1024, None));
+    });
+    b.bench("speq_speedup_eval", || {
+        black_box(speedup_vs_fp16(BaselineKind::Speq, &accel, dims, 1024, Some(&trace)));
+    });
+}

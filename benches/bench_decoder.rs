@@ -1,0 +1,43 @@
+//! Fig. 5 decoder datapath throughput (the 3.5%-area unit).
+//! Run: cargo bench --bench bench_decoder
+
+use speq::bsfp::{decode_draft_gate, decode_full_bits, decode_full_gate, encode_bits, BsfpCode};
+use speq::util::bench::{black_box, Bench};
+use speq::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("bench_decoder");
+    let mut rng = Rng::seed_from_u64(2);
+    let codes: Vec<BsfpCode> = (0..65536)
+        .map(|_| {
+            let bits = (rng.next_u32() as u16) & !(0x4000); // clear e4: exp <= 15
+            encode_bits(bits)
+        })
+        .collect();
+
+    let s = b.bench("draft_decode_64k", || {
+        let mut acc = 0u32;
+        for c in &codes {
+            acc = acc.wrapping_add(decode_draft_gate(c.w_q & 7) as u32);
+        }
+        black_box(acc);
+    });
+    b.metric("draft_decode_rate", 65536.0 / (s.mean_ns * 1e-9) / 1e9, "Gdecodes/s");
+
+    b.bench("full_decode_gate_64k", || {
+        let mut acc = 0u32;
+        for c in &codes {
+            let flag = ((c.w_r >> 11) & 1) as u8;
+            let e0 = ((c.w_r >> 10) & 1) as u8;
+            acc = acc.wrapping_add(decode_full_gate(c.w_q & 7, flag, e0) as u32);
+        }
+        black_box(acc);
+    });
+    b.bench("full_decode_lut_64k", || {
+        let mut acc = 0u32;
+        for &c in &codes {
+            acc = acc.wrapping_add(decode_full_bits(c) as u32);
+        }
+        black_box(acc);
+    });
+}

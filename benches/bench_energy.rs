@@ -1,0 +1,39 @@
+//! Energy model evaluation speed + Fig. 8 metrics.
+//! Run: cargo bench --bench bench_energy
+
+use speq::accel::{paper_dims, power_report, Accel, ArrayMode, BaselineKind, DesignPoint};
+use speq::specdec::{IterRecord, SpecTrace};
+use speq::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("bench_energy");
+    let accel = Accel::default();
+    let dims = paper_dims("Llama2-7b").unwrap();
+
+    b.bench("decode_step_energy_full", || {
+        black_box(accel.decode_step_cost(dims, 1024, ArrayMode::Full).energy);
+    });
+    b.bench("decode_step_energy_quant", || {
+        black_box(accel.decode_step_cost(dims, 1024, ArrayMode::Quant).energy);
+    });
+
+    let q = power_report(&accel.cfg, &accel.energy, true);
+    let f = power_report(&accel.cfg, &accel.energy, false);
+    b.metric("power_quantize_mode", q.total_mw, "mW (paper: 508)");
+    b.metric("power_full_mode", f.total_mw, "mW (paper: 559)");
+
+    let trace = SpecTrace {
+        iterations: vec![IterRecord { drafted: 16, accepted: 14, early_exit: false }; 16],
+        produced: 240,
+        prompt_len: 128,
+    };
+    let tc = accel.run_trace(dims, &trace, 1024);
+    b.metric("speq_energy_gain", tc.energy_efficiency_gain(), "x vs FP16 (paper: 1.74)");
+    let fp16 = DesignPoint::get(BaselineKind::Fp16).token_cost(&accel, dims, 1024);
+    let o8 = DesignPoint::get(BaselineKind::Olive8).token_cost(&accel, dims, 1024);
+    b.metric(
+        "olive8_energy_gain",
+        fp16.energy.total_pj() / o8.energy.total_pj(),
+        "x vs FP16",
+    );
+}

@@ -1,0 +1,25 @@
+//! PE-array cycle model (Fig. 6 modes) — the Table IV compute substrate.
+//! Run: cargo bench --bench bench_pe_array
+
+use speq::accel::{AccelConfig, ArrayMode, PeArray};
+use speq::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("bench_pe_array");
+    let pe = PeArray::new(&AccelConfig::default());
+
+    b.bench("gemm_cycles_full_4kx4k", || {
+        black_box(pe.gemm_cycles(1, 4096, 4096, ArrayMode::Full));
+    });
+    b.bench("gemm_cycles_quant_4kx4k", || {
+        black_box(pe.gemm_cycles(1, 4096, 4096, ArrayMode::Quant));
+    });
+    b.bench("gemm_activity_verify17", || {
+        black_box(pe.gemm_activity(17, 4096, 4096, ArrayMode::Full));
+    });
+
+    let cfg = AccelConfig::default();
+    b.metric("full_mode_peak", pe.peak_macs_per_s(ArrayMode::Full) / 1e12, "TMAC/s");
+    b.metric("quant_mode_peak", pe.peak_macs_per_s(ArrayMode::Quant) / 1e12, "TMAC/s");
+    b.metric("dram_bytes_per_cycle", cfg.dram_bytes_per_cycle(), "B/cyc");
+}

@@ -1,0 +1,40 @@
+//! BSFP codec throughput (supports Table I / the artifact pipeline).
+//! Run: cargo bench --bench bench_quantize
+
+use speq::bsfp::{encode_tensor, quantize_tensor, GROUP_SIZE};
+use speq::quant::{quantize_fp4, quantize_int, Fp4Variant, IntMethod};
+use speq::util::bench::{black_box, Bench};
+use speq::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("bench_quantize");
+    let k = GROUP_SIZE * 32; // 4096
+    let n = 256;
+    let w = Rng::seed_from_u64(1).normal_vec(k * n, 0.1);
+
+    b.bench("encode_1M_elems", || {
+        black_box(encode_tensor(black_box(&w)));
+    });
+    let s = b.bench("bsfp_quantize_1M_elems", || {
+        black_box(quantize_tensor(black_box(&w), k, n));
+    });
+    let elems_per_s = (k * n) as f64 / (s.mean_ns * 1e-9);
+    b.metric("bsfp_quantize_throughput", elems_per_s / 1e6, "Melem/s");
+
+    let qt = quantize_tensor(&w, k, n);
+    b.bench("dequant_draft_1M_elems", || {
+        black_box(qt.dequant_draft());
+    });
+    b.bench("reconstruct_full_1M_elems", || {
+        black_box(qt.reconstruct_fp16_bits());
+    });
+    b.bench("pack_wq_1M_elems", || {
+        black_box(qt.packed_wq());
+    });
+    b.bench("fp4_e3m0_1M_elems", || {
+        black_box(quantize_fp4(black_box(&w), k, n, Fp4Variant::E3M0));
+    });
+    b.bench("olive4_1M_elems", || {
+        black_box(quantize_int(black_box(&w), k, n, IntMethod::olive(4)));
+    });
+}

@@ -1,0 +1,46 @@
+//! Quickstart: load a model, BSFP-quantize it (implicitly, from its own
+//! bits), and generate with speculative decoding.
+//!
+//! Run after `make artifacts && cargo build --release`:
+//!     cargo run --release --example quickstart
+
+use anyhow::Result;
+use speq::model::{Manifest, ModelRuntime, SamplingParams};
+use speq::runtime::Runtime;
+use speq::specdec::{Engine, SpecConfig};
+
+fn main() -> Result<()> {
+    // 1. Load the artifacts manifest ($SPEQ_ARTIFACTS or ./artifacts).
+    let manifest = Manifest::load(Manifest::default_root())?;
+    println!("models available: {:?}", manifest.model_names());
+
+    // 2. Bring up the PJRT CPU runtime and one model. Loading compiles the
+    //    five AOT graphs and derives the BSFP draft weights from the FP16
+    //    bits — no second model, no training (the paper's core claim).
+    let rt = Runtime::cpu()?;
+    let model = ModelRuntime::load(&rt, &manifest, "vicuna-7b-tiny")?;
+    println!(
+        "loaded {} ({} params, draft shares all of them)",
+        model.entry.config.name, model.entry.config.param_count
+    );
+
+    // 3. Generate speculatively (greedy).
+    let engine = Engine::new(&model);
+    let prompt = b"Q: grace has 6 cups and buys 5 more. how many cups now?\nA: ";
+    let cfg = SpecConfig { gen_len: 96, ..Default::default() };
+    let spec = engine.generate_spec(prompt, &cfg)?;
+    println!("\n--- output ---\n{}", String::from_utf8_lossy(&spec.tokens));
+    println!(
+        "accept rate {:.3} | mean draft len {:.2} | {} verify passes for {} tokens",
+        spec.trace.accept_rate(),
+        spec.trace.mean_draft_len(),
+        spec.trace.verify_passes(),
+        spec.trace.produced
+    );
+
+    // 4. Losslessness: identical to plain full-precision decoding.
+    let ar = engine.generate_ar(prompt, 96, SamplingParams::greedy())?;
+    assert_eq!(ar.tokens, spec.tokens, "speculative output must be lossless");
+    println!("lossless: speculative == autoregressive, token for token");
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! END-TO-END driver (EXPERIMENTS.md §E2E): bring up the full serving
+//! stack — PJRT runtime, BSFP draft derivation, speculative engine, worker
+//! pool, request queue, sessions — and push a realistic mixed workload
+//! through it, reporting latency/throughput, accept rates, losslessness,
+//! and the simulated SPEQ-accelerator speedup for the measured traces.
+//!
+//! Run: cargo run --release --example serve_e2e [-- <requests> <gen_len>]
+
+use anyhow::Result;
+use speq::accel::{paper_dims, Accel};
+use speq::coordinator::{Mode, Priority, Server, ServerConfig};
+use speq::model::{Manifest, SamplingParams};
+use speq::specdec::SpecTrace;
+use speq::workload::{load_task, task_names};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(18);
+    let gen_len: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(96);
+    let model = "llama3.1-8b-tiny";
+
+    let manifest = Manifest::load(Manifest::default_root())?;
+    println!("== SPEQ end-to-end serving driver ==");
+    println!("model {model}, {n_requests} requests x {gen_len} tokens, 2 workers\n");
+
+    let server = Server::start(ServerConfig {
+        artifacts_root: manifest.root.clone(),
+        model: model.into(),
+        workers: 2,
+        queue_capacity: 64,
+        session_history: 96,
+    })?;
+
+    // Mixed workload: all three task families, one multi-turn session, and
+    // one autoregressive request as the lossless control.
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    let mut control: Option<(Vec<u8>, usize)> = None;
+    for i in 0..n_requests {
+        let task = task_names()[i % 3];
+        let ts = load_task(&manifest, task)?;
+        let prompt = ts.prompts[i % ts.prompts.len()].clone();
+        let mode = if i == 0 { Mode::Autoregressive } else { Mode::Speculative };
+        if i == 1 {
+            control = Some((prompt.clone(), gen_len));
+        }
+        let (id, rx) = server.submit(
+            &prompt,
+            gen_len,
+            mode,
+            if i % 3 == 0 { Priority::Interactive } else { Priority::Batch },
+            SamplingParams::greedy(),
+            if task == "chat" { Some(1000 + (i % 2) as u64) } else { None },
+            16,
+            0.6,
+        )?;
+        rxs.push((id, task, mode, rx));
+    }
+
+    let mut merged = SpecTrace::default();
+    let mut spec_tokens_of_control: Option<Vec<u8>> = None;
+    for (id, task, mode, rx) in rxs {
+        let resp = rx.recv()?;
+        let body = resp.result?;
+        println!(
+            "req {id:>3} [{task:<4}] {:?}  worker {}  {:>4} tok  {:>8.1} ms  r {:.3}",
+            mode,
+            body.worker,
+            body.tokens.len(),
+            body.latency_s * 1e3,
+            body.trace.accept_rate(),
+        );
+        if mode == Mode::Speculative {
+            merged.merge(&body.trace);
+            if spec_tokens_of_control.is_none() {
+                spec_tokens_of_control = Some(body.tokens.clone());
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Lossless control: re-run the same prompt autoregressively.
+    if let (Some((prompt, glen)), Some(spec_out)) = (control, spec_tokens_of_control) {
+        let (_, rx) = server.submit(
+            &prompt, glen, Mode::Autoregressive, Priority::Interactive,
+            SamplingParams::greedy(), None, 16, 0.6,
+        )?;
+        let ar_out = rx.recv()?.result?.tokens;
+        println!(
+            "\nlossless control: speculative output {} autoregressive",
+            if ar_out == spec_out { "== (IDENTICAL to)" } else { "!= (MISMATCH vs)" }
+        );
+        assert_eq!(ar_out, spec_out);
+    }
+
+    let snap = server.metrics().snapshot();
+    println!("\n== serving summary ==");
+    println!(
+        "completed {} | tokens {} | throughput {:.1} tok/s (CPU testbed)",
+        snap.completed, snap.tokens, snap.tokens as f64 / wall
+    );
+    println!(
+        "latency p50 {:.0} ms | p95 {:.0} ms | p99 {:.0} ms",
+        snap.latency_p50_ms, snap.latency_p95_ms, snap.latency_p99_ms
+    );
+    println!(
+        "engine: {} draft steps, {} verify passes, accept rate {:.3}, L-bar {:.2}",
+        merged.draft_steps(), merged.verify_passes(), merged.accept_rate(),
+        merged.mean_draft_len()
+    );
+
+    // Replay the aggregate measured trace on the simulated accelerator at
+    // the paper-scale geometry — this is the paper's headline number.
+    let dims = paper_dims(model).unwrap();
+    let tc = Accel::default().run_trace(dims, &merged, 1024);
+    println!("\n== simulated SPEQ accelerator ({} @ paper dims) ==", dims.name);
+    println!(
+        "speedup vs FP16 autoregressive: {:.2}x (paper: ~2.0x) | energy gain {:.2}x (paper: 1.74x)",
+        tc.speedup(), tc.energy_efficiency_gain()
+    );
+    server.shutdown();
+    Ok(())
+}

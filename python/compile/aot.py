@@ -1,0 +1,436 @@
+"""AOT pipeline: train -> quantize -> lower to HLO text -> artifacts/.
+
+Runs once at ``make artifacts``; Python never appears on the request path.
+Per model it emits
+
+    artifacts/<name>/weights.bin        FP16 bit patterns, param order
+    artifacts/<name>/{prefill,decode_full,decode_draft}.hlo.txt
+    artifacts/<name>/train_meta.json
+
+plus shared files
+
+    artifacts/manifest.json             configs, param tables, graph arg order
+    artifacts/goldens.bin               exhaustive BSFP encode vectors
+    artifacts/goldens.json              Eq.4-scale / qmatmul cross-layer vectors
+    artifacts/tasks/{math,code,chat}.json
+    artifacts/heldout.bin               held-out stream for perplexity (Table I)
+
+Interchange format is HLO **text**: jax >= 0.5 emits protos with 64-bit
+instruction ids that the xla crate's xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).  Graphs are lowered
+with ``return_tuple=False`` so outputs arrive as separate PJRT buffers and
+the Rust engine can thread the KV buffer between steps without host copies.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import bsfp, corpus, train
+from .model import (
+    MODEL_ZOO,
+    ModelConfig,
+    kv_shape,
+    linear_names,
+    make_decode,
+    make_decode_draft,
+    make_prefill,
+    param_shapes,
+    quantize_params,
+)
+
+GOLDEN_QMATMUL_K = 256
+GOLDEN_QMATMUL_N = 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def cfg_digest(cfg: ModelConfig) -> str:
+    # Include the corpus generator source: retrain when the data changes.
+    corpus_src = (pathlib.Path(__file__).parent / "corpus.py").read_bytes()
+    blob = json.dumps(
+        {
+            "corpus": hashlib.sha256(corpus_src).hexdigest(),
+            "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model,
+            "d_ff": cfg.d_ff,
+            "n_heads": cfg.n_heads,
+            "vocab": cfg.vocab,
+            "seed": cfg.seed,
+            "steps": train.STEPS,
+            "batch": train.BATCH,
+            "seq": train.SEQ,
+        },
+        sort_keys=True,
+    )
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+# ---- weights serialization -------------------------------------------------
+
+def save_weights(path: pathlib.Path, params: dict, cfg: ModelConfig):
+    """Concatenate FP16 bit patterns in param_shapes order."""
+    chunks = []
+    for name, shape in param_shapes(cfg):
+        w = np.asarray(params[name], dtype=np.float32)
+        assert tuple(w.shape) == tuple(shape), (name, w.shape, shape)
+        chunks.append(w.astype(np.float16).view(np.uint16).ravel())
+    blob = np.concatenate(chunks)
+    path.write_bytes(blob.tobytes())
+
+
+def load_weights(path: pathlib.Path, cfg: ModelConfig) -> dict:
+    raw = np.frombuffer(path.read_bytes(), dtype=np.uint16)
+    params, off = {}, 0
+    for name, shape in param_shapes(cfg):
+        n = int(np.prod(shape))
+        params[name] = raw[off : off + n].view(np.float16).astype(np.float32).reshape(shape)
+        off += n
+    assert off == raw.size
+    return params
+
+
+def param_table(cfg: ModelConfig):
+    table, off = [], 0
+    for name, shape in param_shapes(cfg):
+        n = int(np.prod(shape)) * 2
+        table.append(
+            {"name": name, "shape": list(shape), "dtype": "f16", "offset_bytes": off, "size_bytes": n}
+        )
+        off += n
+    return table
+
+
+# ---- graph export ----------------------------------------------------------
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def export_graphs(cfg: ModelConfig, out_dir: pathlib.Path, log=print):
+    from .model import S_SLOTS, make_eval, make_verify, state_len
+
+    names = [n for n, _ in param_shapes(cfg)]
+    shapes = dict(param_shapes(cfg))
+    lin = set(linear_names(cfg))
+    slen = state_len(cfg)
+
+    def emit(fname, fn, extra_args):
+        args = [_sds(shapes[n]) for n in names] + extra_args
+        (out_dir / fname).write_text(to_hlo_text(jax.jit(fn).lower(*args)))
+        log(f"  [{cfg.name}] {fname}")
+
+    # prefill(params..., tokens, length) -> state
+    def prefill_flat(*args):
+        params = dict(zip(names, args[: len(names)]))
+        tokens, length = args[len(names) :]
+        return make_prefill(cfg)(params, tokens, length)
+
+    emit(
+        "prefill.hlo.txt",
+        prefill_flat,
+        [_sds((cfg.prefill_len,), jnp.int32), _sds((), jnp.int32)],
+    )
+
+    # eval(params..., tokens, length) -> logits (P, V)
+    def eval_flat(*args):
+        params = dict(zip(names, args[: len(names)]))
+        tokens, length = args[len(names) :]
+        return make_eval(cfg)(params, tokens, length)
+
+    emit(
+        "eval.hlo.txt",
+        eval_flat,
+        [_sds((cfg.prefill_len,), jnp.int32), _sds((), jnp.int32)],
+    )
+
+    # decode_full(params..., token, pos, state) -> state
+    def decode_flat(*args):
+        params = dict(zip(names, args[: len(names)]))
+        token, pos, state = args[len(names) :]
+        return make_decode(cfg)(params, token, pos, state)
+
+    emit(
+        "decode_full.hlo.txt",
+        decode_flat,
+        [_sds((), jnp.int32), _sds((), jnp.int32), _sds((slen,))],
+    )
+
+    # verify(params..., tokens[S_SLOTS], pos0, state) -> state
+    def verify_flat(*args):
+        params = dict(zip(names, args[: len(names)]))
+        tokens, pos0, state = args[len(names) :]
+        return make_verify(cfg)(params, tokens, pos0, state)
+
+    emit(
+        "verify.hlo.txt",
+        verify_flat,
+        [_sds((S_SLOTS,), jnp.int32), _sds((), jnp.int32), _sds((slen,))],
+    )
+
+    # extract(state) -> logits slots (S_SLOTS, V).  The PJRT build cannot
+    # copy a raw prefix of a device buffer to the host, so this tiny graph
+    # slices the logits slots out of the threaded state on-device; only
+    # S_SLOTS * V floats ever cross the host boundary per step.
+    def extract_fn(state):
+        return state[: S_SLOTS * cfg.vocab].reshape(S_SLOTS, cfg.vocab)
+
+    (out_dir / "extract.hlo.txt").write_text(
+        to_hlo_text(jax.jit(extract_fn).lower(_sds((slen,))))
+    )
+    log(f"  [{cfg.name}] extract.hlo.txt")
+
+    # decode_draft(mixed args: quantized linears as (wq, scales))
+    draft_order = []  # manifest arg list
+    for n in names:
+        if n in lin:
+            draft_order += [n + ".wq", n + ".scales"]
+        else:
+            draft_order.append(n)
+
+    def draft_flat(*args):
+        params, qparams, i = {}, {}, 0
+        for n in names:
+            if n in lin:
+                qparams[n + ".wq"] = args[i]
+                qparams[n + ".scales"] = args[i + 1]
+                i += 2
+            else:
+                params[n] = args[i]
+                i += 1
+        token, pos, state = args[i:]
+        return make_decode_draft(cfg)(params, qparams, token, pos, state)
+
+    draft_args = []
+    for n in names:
+        if n in lin:
+            k, out = shapes[n]
+            draft_args.append(_sds((k // 2, out), jnp.uint8))
+            draft_args.append(_sds((k // bsfp.GROUP_SIZE, out), jnp.float32))
+        else:
+            draft_args.append(_sds(shapes[n]))
+    draft_args += [_sds((), jnp.int32), _sds((), jnp.int32), _sds((slen,))]
+    (out_dir / "decode_draft.hlo.txt").write_text(
+        to_hlo_text(jax.jit(draft_flat).lower(*draft_args))
+    )
+    log(f"  [{cfg.name}] decode_draft.hlo.txt")
+    return draft_order
+
+
+# ---- goldens ---------------------------------------------------------------
+
+def emit_goldens(out_dir: pathlib.Path):
+    """Exhaustive encode vectors + Eq.4/qmatmul cross-layer checks.
+
+    goldens.bin layout: for all 32768 valid FP16 bit patterns (exp <= 15),
+    ordered by bits = s<<15 | e<<10 | m ascending within s-major order:
+        [32768 x u8  W_q][32768 x u16 W_r (LE)]
+    """
+    pats = []
+    for s in range(2):
+        for e in range(16):
+            for m in range(1024):
+                pats.append((s << 15) | (e << 10) | m)
+    bits = np.asarray(pats, dtype=np.uint16)
+    w_q, w_r = bsfp.encode(bits)
+    assert np.array_equal(bsfp.decode_full(w_q, w_r), bits)
+    (out_dir / "goldens.bin").write_bytes(
+        w_q.astype(np.uint8).tobytes() + w_r.astype("<u2").tobytes()
+    )
+
+    rng = np.random.default_rng(7)
+    w = (rng.standard_normal((GOLDEN_QMATMUL_K, GOLDEN_QMATMUL_N)) * 0.07).astype(
+        np.float32
+    )
+    qt = bsfp.quantize_tensor(w)
+    x = rng.standard_normal((1, GOLDEN_QMATMUL_K)).astype(np.float32)
+    y = (x @ qt.dequant_draft()).astype(np.float32)
+    golden = {
+        "qmatmul": {
+            "w_f16_bits": bsfp.f32_to_bits(w).ravel().tolist(),
+            "k": GOLDEN_QMATMUL_K,
+            "n": GOLDEN_QMATMUL_N,
+            "x": x.ravel().tolist(),
+            "y": y.ravel().tolist(),
+            "scales": qt.scales.ravel().tolist(),
+            "wq_packed": qt.packed_wq().ravel().tolist(),
+        },
+        "eq4": {
+            "w_bits": bsfp.f32_to_bits(w[:128, 0]).tolist(),
+            "scale": float(qt.scales[0, 0]),
+        },
+    }
+    (out_dir / "goldens.json").write_text(json.dumps(golden))
+
+
+def emit_tasks(out_dir: pathlib.Path, prompt_len: int, n_prompts: int):
+    tdir = out_dir / "tasks"
+    tdir.mkdir(exist_ok=True)
+    files = {}
+    for i, task in enumerate(corpus.TASKS):
+        prompts = corpus.make_prompts(task, n_prompts, seed=1000 + i, prompt_len=prompt_len)
+        paper_name = {"math": "GSM8K", "code": "Humaneval", "chat": "MT-bench"}[task]
+        (tdir / f"{task}.json").write_text(
+            json.dumps({"task": task, "paper_analog": paper_name, "prompt_len": prompt_len, "prompts": prompts})
+        )
+        files[task] = f"tasks/{task}.json"
+    return files
+
+
+# ---- main ------------------------------------------------------------------
+
+def build_model(cfg: ModelConfig, out_root: pathlib.Path, force: bool, log=print):
+    mdir = out_root / cfg.name
+    mdir.mkdir(parents=True, exist_ok=True)
+    wpath = mdir / "weights.bin"
+    meta_path = mdir / "train_meta.json"
+    digest = cfg_digest(cfg)
+
+    if wpath.exists() and meta_path.exists() and not force:
+        meta = json.loads(meta_path.read_text())
+        if meta.get("digest") == digest:
+            log(f"  [{cfg.name}] cached weights (digest {digest})")
+            params = load_weights(wpath, cfg)
+        else:
+            params = None
+    else:
+        params = None
+
+    if params is None:
+        log(f"  [{cfg.name}] training ({cfg.param_count():,} params)...")
+        params, losses = train.train_model(cfg, log=log)
+        save_weights(wpath, params, cfg)
+        meta_path.write_text(
+            json.dumps(
+                {
+                    "digest": digest,
+                    "loss_first": losses[0],
+                    "loss_last": losses[-1],
+                    "loss_curve": losses[:: max(1, len(losses) // 50)],
+                }
+            )
+        )
+        params = load_weights(wpath, cfg)  # reload: canonical FP16 values
+
+    # Quantize (validates the lossless invariant) and export graphs.
+    from .model import S_SLOTS, state_len
+
+    _, qmeta = quantize_params(params, cfg)
+    draft_order = export_graphs(cfg, mdir, log=log)
+    meta = json.loads(meta_path.read_text())
+    return {
+        "state": {"slots": S_SLOTS, "state_len": state_len(cfg)},
+        "config": {
+            "name": cfg.name,
+            "paper_analog": cfg.paper_analog,
+            "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model,
+            "d_ff": cfg.d_ff,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "vocab": cfg.vocab,
+            "cache_len": cfg.cache_len,
+            "prefill_len": cfg.prefill_len,
+            "param_count": cfg.param_count(),
+        },
+        "params": param_table(cfg),
+        "linears": linear_names(cfg),
+        "quant_meta": qmeta,
+        "kv_shape": list(kv_shape(cfg)),
+        "graphs": {
+            "prefill": {
+                "file": f"{cfg.name}/prefill.hlo.txt",
+                "args": [n for n, _ in param_shapes(cfg)] + ["tokens", "length"],
+                "outputs": ["state"],
+            },
+            "eval": {
+                "file": f"{cfg.name}/eval.hlo.txt",
+                "args": [n for n, _ in param_shapes(cfg)] + ["tokens", "length"],
+                "outputs": ["logits"],
+            },
+            "decode_full": {
+                "file": f"{cfg.name}/decode_full.hlo.txt",
+                "args": [n for n, _ in param_shapes(cfg)] + ["token", "pos", "state"],
+                "outputs": ["state"],
+            },
+            "verify": {
+                "file": f"{cfg.name}/verify.hlo.txt",
+                "args": [n for n, _ in param_shapes(cfg)] + ["tokens", "pos0", "state"],
+                "outputs": ["state"],
+            },
+            "decode_draft": {
+                "file": f"{cfg.name}/decode_draft.hlo.txt",
+                "args": draft_order + ["token", "pos", "state"],
+                "outputs": ["state"],
+            },
+            "extract": {
+                "file": f"{cfg.name}/extract.hlo.txt",
+                "args": ["state"],
+                "outputs": ["logits_slots"],
+            },
+        },
+        "train": {"loss_first": meta["loss_first"], "loss_last": meta["loss_last"]},
+        "weights": f"{cfg.name}/weights.bin",
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="", help="comma-separated subset of model names")
+    ap.add_argument("--force", action="store_true", help="retrain even if cached")
+    ap.add_argument("--heldout-bytes", type=int, default=1 << 18)
+    ap.add_argument("--n-prompts", type=int, default=12)
+    args = ap.parse_args()
+
+    out_root = pathlib.Path(args.out_dir).resolve()
+    out_root.mkdir(parents=True, exist_ok=True)
+    wanted = [s for s in args.models.split(",") if s]
+    zoo = [c for c in MODEL_ZOO if not wanted or c.name in wanted]
+
+    print(f"AOT: building {len(zoo)} models into {out_root}")
+    models = {}
+    for cfg in zoo:
+        models[cfg.name] = build_model(cfg, out_root, args.force)
+
+    emit_goldens(out_root)
+    print("  goldens.bin / goldens.json")
+    prompt_len = 128
+    task_files = emit_tasks(out_root, prompt_len=prompt_len, n_prompts=args.n_prompts)
+    print("  tasks/*.json")
+    heldout = corpus.heldout(args.heldout_bytes, seed=99)
+    (out_root / "heldout.bin").write_bytes(heldout.tobytes())
+    print("  heldout.bin")
+
+    manifest = {
+        "version": 1,
+        "group_size": bsfp.GROUP_SIZE,
+        "models": models,
+        "tasks": task_files,
+        "prompt_len": prompt_len,
+        "heldout": "heldout.bin",
+        "goldens_bin": "goldens.bin",
+        "goldens_json": "goldens.json",
+    }
+    (out_root / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print("  manifest.json")
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,293 @@
+"""Bit-Sharing Floating Point (BSFP) reference codec — numpy, vectorized.
+
+Implements the SPEQ paper's core algorithm (Sections III-A/III-B):
+
+* FP16 weights of trained LLMs confine their exponents to [0, 15] (the top
+  exponent bit ``e4`` is wasted).  After the Algorithm-1 per-tensor pre-scale
+  (``scale = 1.999 / max|W|`` whenever ``max|W| > 2.0``) this holds for every
+  finite weight.
+* Each FP16 weight ``s eeeee mmmmmmmmmm`` is re-encoded as
+
+      W_q  (4 bits)  = [sign | c2 c1 c0]          -- the remapped E3M0 code
+      W_r  (12 bits) = [flag | e0 | m9..m0]       -- remainder
+
+  where ``flag`` lives in the bit position of the wasted ``e4`` and is set
+  whenever the stored exponent bits differ from the original (Fig. 3).
+  ``W_q ∥ W_r`` is exactly 16 bits: zero storage overhead, and the original
+  FP16 value is reconstructed losslessly by the Fig. 5(b) decoder.
+* The *remap* gives the critical exponents 9 and 11 their own codes (3'b000
+  and 3'b010, stolen from the low-magnitude pairs {0,1} and {4,5}):
+
+      E: 0 1 2 3 4 5 6 7 8 9 10 11 12 13 14 15
+      Q: 2 2 2 2 6 6 6 6 8 9 10 11 12 12 14 14      (quantized exponent)
+
+* Per-group (128 weights) scale ``s = Σ w·Q(w) / Σ Q(w)²`` (Eq. 4) minimizes
+  the group MSE; the draft weight is ``(-1)^sign · 2^(Q(E)-15) · s``.
+
+This module is the single source of truth for the Python side; the Rust side
+(``rust/src/bsfp``) mirrors it bit-for-bit and is cross-checked through golden
+vectors emitted by ``aot.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+GROUP_SIZE = 128
+FP16_BIAS = 15
+
+# ---- Fig. 3 remap tables -------------------------------------------------
+# Indexed by original exponent E in [0, 15].
+REMAP_CODE = np.array(
+    [1, 1, 1, 1, 3, 3, 3, 3, 4, 0, 5, 2, 6, 6, 7, 7], dtype=np.uint8
+)
+REMAP_FLAG = np.array(
+    [1, 1, 0, 0, 1, 1, 0, 0, 0, 1, 0, 1, 0, 0, 0, 0], dtype=np.uint8
+)
+# Indexed by the 3-bit code: the quantized exponent value Q(E)
+# (= the Fig. 5(a) draft decoder output).
+CODE_TO_QEXP = np.array([9, 2, 11, 6, 8, 10, 12, 14], dtype=np.int32)
+# Fig. 5(b) full decoder MUX: for flagged values, keyed by (c1, c0), the top
+# four exponent bits  E[4:1]  (E = mux<<1 | e0).  c2 is always 0 when flagged.
+FLAG_MUX_EHIGH = np.array([4, 0, 5, 2], dtype=np.uint8)  # (c1c0)=00,01,10,11
+
+
+def _require_u16(bits: np.ndarray) -> np.ndarray:
+    bits = np.asarray(bits)
+    if bits.dtype != np.uint16:
+        raise TypeError(f"expected uint16 bit patterns, got {bits.dtype}")
+    return bits
+
+
+def split_fields(bits: np.ndarray):
+    """Split FP16 bit patterns into (sign, exponent, mantissa)."""
+    bits = _require_u16(bits)
+    sign = (bits >> 15).astype(np.uint8)
+    exp = ((bits >> 10) & 0x1F).astype(np.uint8)
+    man = (bits & 0x3FF).astype(np.uint16)
+    return sign, exp, man
+
+
+def encode(bits: np.ndarray):
+    """Encode FP16 bit patterns into (w_q, w_r).
+
+    ``w_q`` is uint8 holding 4 significant bits ``[sign c2 c1 c0]``;
+    ``w_r`` is uint16 holding 12 significant bits ``[flag e0 m9..m0]``.
+
+    Precondition: every exponent is in [0, 15] (i.e. |w| < 2.0, guaranteed
+    after the Algorithm-1 pre-scale).  Raises ValueError otherwise.
+    """
+    sign, exp, man = split_fields(bits)
+    if np.any(exp > 15):
+        bad = int(np.sum(exp > 15))
+        raise ValueError(
+            f"{bad} weights have exponent > 15 (|w| >= 2.0); "
+            "apply the Algorithm-1 pre-scale first"
+        )
+    code = REMAP_CODE[exp]
+    flag = REMAP_FLAG[exp]
+    e0 = (exp & 1).astype(np.uint16)
+    w_q = ((sign << 3) | code).astype(np.uint8)
+    w_r = ((flag.astype(np.uint16) << 11) | (e0 << 10) | man).astype(np.uint16)
+    return w_q, w_r
+
+
+def decode_full(w_q: np.ndarray, w_r: np.ndarray) -> np.ndarray:
+    """Losslessly reconstruct the original FP16 bit patterns (Fig. 5(b))."""
+    w_q = np.asarray(w_q, dtype=np.uint8)
+    w_r = np.asarray(w_r, dtype=np.uint16)
+    sign = (w_q >> 3).astype(np.uint16) & 1
+    code = (w_q & 0x7).astype(np.uint16)
+    flag = (w_r >> 11) & 1
+    e0 = (w_r >> 10) & 1
+    man = w_r & 0x3FF
+    # Unflagged: exponent = code·2 + e0.  Flagged: MUX on (c1, c0).
+    ehigh_plain = code  # E[4:1] == code when unflagged (and e4 == 0)
+    ehigh_flagged = FLAG_MUX_EHIGH[(code & 0x3).astype(np.uint8)].astype(np.uint16)
+    ehigh = np.where(flag == 1, ehigh_flagged, ehigh_plain)
+    exp = (ehigh << 1) | e0
+    return ((sign << 15) | (exp << 10) | man).astype(np.uint16)
+
+
+def decode_draft_qexp(w_q: np.ndarray):
+    """Fig. 5(a) draft decoder: 3-bit code -> quantized exponent value."""
+    w_q = np.asarray(w_q, dtype=np.uint8)
+    sign = (w_q >> 3) & 1
+    code = w_q & 0x7
+    return sign, CODE_TO_QEXP[code]
+
+
+def draft_magnitude(w_q: np.ndarray) -> np.ndarray:
+    """Unscaled draft value magnitude: 2^(Q(E) - 15)."""
+    _, qexp = decode_draft_qexp(w_q)
+    return np.exp2(qexp.astype(np.float64) - FP16_BIAS)
+
+
+def draft_values(w_q: np.ndarray) -> np.ndarray:
+    """Signed, unscaled draft values Q(w)."""
+    sign, qexp = decode_draft_qexp(w_q)
+    mag = np.exp2(qexp.astype(np.float64) - FP16_BIAS)
+    return np.where(sign == 1, -mag, mag)
+
+
+def eq4_scales(w: np.ndarray, q: np.ndarray, group_size: int = GROUP_SIZE):
+    """Per-group MSE-optimal scales (Eq. 4), groups along axis 0.
+
+    ``w``: true values, shape (in, out) (or (n,) treated as (n, 1));
+    ``q``: unscaled quantized values, same shape.  ``in`` must be a multiple
+    of ``group_size``.  Returns scales of shape (in // group_size, out).
+    """
+    w = np.asarray(w, dtype=np.float64)
+    q = np.asarray(q, dtype=np.float64)
+    squeeze = w.ndim == 1
+    if squeeze:
+        w = w[:, None]
+        q = q[:, None]
+    n, m = w.shape
+    if n % group_size != 0:
+        raise ValueError(f"in-dim {n} not a multiple of group size {group_size}")
+    wg = w.reshape(n // group_size, group_size, m)
+    qg = q.reshape(n // group_size, group_size, m)
+    num = np.sum(wg * qg, axis=1)
+    den = np.sum(qg * qg, axis=1)
+    scales = np.where(den > 0, num / np.maximum(den, 1e-30), 1.0)
+    return scales[:, 0] if squeeze else scales
+
+
+@dataclasses.dataclass
+class QuantizedTensor:
+    """A BSFP-quantized linear weight (in, out)."""
+
+    w_q: np.ndarray          # uint8 (in, out), 4 significant bits
+    w_r: np.ndarray          # uint16 (in, out), 12 significant bits
+    scales: np.ndarray       # float32 (in // 128, out)
+    tensor_scale: float      # Algorithm-1 pre-scale (1.0 if none needed)
+    shape: tuple
+
+    def packed_wq(self) -> np.ndarray:
+        """Nibble-pack W_q along axis 0: out uint8 (in // 2, out).
+
+        Element ``2i`` goes to the low nibble, ``2i+1`` to the high nibble —
+        the layout the Pallas qmatmul kernel and the Rust runtime consume.
+        """
+        wq = self.w_q
+        return (wq[0::2, :] | (wq[1::2, :] << 4)).astype(np.uint8)
+
+    def dequant_draft(self) -> np.ndarray:
+        """Materialize the draft weights as float32 (in, out)."""
+        q = draft_values(self.w_q)
+        n = q.shape[0]
+        g = self.scales.astype(np.float64)
+        q = q.reshape(n // GROUP_SIZE, GROUP_SIZE, -1) * g[:, None, :]
+        return q.reshape(self.w_q.shape).astype(np.float32)
+
+    def reconstruct_fp16_bits(self) -> np.ndarray:
+        """Bit-exact FP16 reconstruction (before undoing the tensor scale)."""
+        return decode_full(self.w_q, self.w_r)
+
+    def reconstruct_full(self) -> np.ndarray:
+        """Full-precision weights as float32, tensor pre-scale undone."""
+        bits = self.reconstruct_fp16_bits()
+        vals = bits_to_f32(bits)
+        return (vals / self.tensor_scale).astype(np.float32)
+
+
+def f32_to_bits(w: np.ndarray) -> np.ndarray:
+    """float array -> FP16 bit patterns (round-to-nearest-even)."""
+    return np.asarray(w, dtype=np.float16).view(np.uint16)
+
+
+def bits_to_f32(bits: np.ndarray) -> np.ndarray:
+    return _require_u16(bits).view(np.float16).astype(np.float32)
+
+
+def algorithm1_prescale(w: np.ndarray) -> tuple[np.ndarray, float]:
+    """Algorithm 1: rescale so max|W| < 2.0 (exponent <= 15)."""
+    w = np.asarray(w, dtype=np.float32)
+    wmax = float(np.max(np.abs(w))) if w.size else 0.0
+    scale = 1.0
+    if wmax > 2.0:
+        scale = 1.999 / wmax
+        w = w * scale
+    return w, scale
+
+
+def quantize_tensor(w: np.ndarray, group_size: int = GROUP_SIZE) -> QuantizedTensor:
+    """Full BSFP quantization of a linear weight (in, out).
+
+    Steps: Algorithm-1 pre-scale -> FP16 cast -> encode (W_q, W_r) ->
+    Eq. 4 group scales on the draft magnitudes.
+    """
+    w = np.asarray(w, dtype=np.float32)
+    if w.ndim != 2:
+        raise ValueError(f"expected a 2-D weight, got shape {w.shape}")
+    if w.shape[0] % group_size != 0:
+        raise ValueError(
+            f"in-dim {w.shape[0]} not a multiple of group size {group_size}"
+        )
+    scaled, tscale = algorithm1_prescale(w)
+    bits = f32_to_bits(scaled)
+    w_q, w_r = encode(bits)
+    q = draft_values(w_q)
+    true_vals = bits_to_f32(bits).astype(np.float64)
+    scales = eq4_scales(true_vals, q, group_size).astype(np.float32)
+    return QuantizedTensor(
+        w_q=w_q, w_r=w_r, scales=scales, tensor_scale=tscale, shape=w.shape
+    )
+
+
+# ---- Table I baseline quantizers (bit-extraction FP4 variants) -----------
+
+def _extract_quant(bits: np.ndarray, exp_keep: int, man_keep: int) -> np.ndarray:
+    """Shared-bit FP4 quantization by extracting top exponent/mantissa bits.
+
+    ``exp_keep`` exponent MSBs (of e3..e0; e4 is always 0 here) and
+    ``man_keep`` mantissa MSBs are kept, the rest are zeroed.  This is the
+    "Naive" column of Fig. 3 generalized to E1M2/E2M1/E3M0.
+    """
+    sign, exp, man = split_fields(bits)
+    exp_mask = ((0xF << (4 - exp_keep)) & 0xF) if exp_keep < 4 else 0xF
+    qexp = (exp & exp_mask).astype(np.int32)
+    man_mask = ((0x3FF >> man_keep) ^ 0x3FF) if man_keep else 0
+    qman = (man & man_mask).astype(np.float64) / 1024.0
+    mag = np.exp2(qexp - FP16_BIAS) * (1.0 + qman)
+    # Exponent 0 is subnormal territory; the extraction treats it as 2^-15
+    # scale with no implicit 1 -- approximate with the same formula (error is
+    # negligible at weight scale and identical across variants).
+    return np.where(sign == 1, -mag, mag)
+
+
+def quantize_variant(w: np.ndarray, variant: str, group_size: int = GROUP_SIZE):
+    """Quantize with one of the Table I variants; returns draft f32 weights.
+
+    Variants: ``e1m2``, ``e2m1``, ``e3m0`` (naive, == LSB-cleared exponent),
+    ``bsfp`` (E3M0 + remap, the SPEQ draft).
+    """
+    w = np.asarray(w, dtype=np.float32)
+    scaled, tscale = algorithm1_prescale(w)
+    bits = f32_to_bits(scaled)
+    if variant == "bsfp":
+        qt = quantize_tensor(w, group_size)
+        return qt.dequant_draft()
+    if variant == "e3m0":
+        q = _extract_quant(bits, exp_keep=3, man_keep=0)
+    elif variant == "e2m1":
+        q = _extract_quant(bits, exp_keep=2, man_keep=1)
+    elif variant == "e1m2":
+        q = _extract_quant(bits, exp_keep=1, man_keep=2)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    true_vals = bits_to_f32(bits).astype(np.float64)
+    scales = eq4_scales(true_vals, q, group_size)
+    n = q.shape[0]
+    out = q.reshape(n // group_size, group_size, -1) * scales[:, None, :]
+    return (out.reshape(w.shape) / tscale).astype(np.float32)
+
+
+def exponent_histogram(w: np.ndarray) -> np.ndarray:
+    """Histogram of FP16 exponent values [0, 31] — the Fig. 2(c) analysis."""
+    bits = f32_to_bits(np.asarray(w, dtype=np.float32))
+    _, exp, _ = split_fields(bits)
+    return np.bincount(exp.ravel().astype(np.int64), minlength=32)

@@ -1,0 +1,149 @@
+"""Synthetic byte-level corpus with three task families.
+
+Substitute for the paper's GSM8K / HumanEval / MT-bench workloads (see
+DESIGN.md §2): the tiny target models are trained on a deterministic mixture
+of three structured text families with distinct token-entropy profiles —
+
+* ``math`` — few-shot grade-school arithmetic word problems (GSM8K analog),
+* ``code`` — small function definitions with doctests (HumanEval analog),
+* ``chat`` — multi-turn templated dialogue (MT-bench analog).
+
+Tokens are raw bytes (vocab = 256), so no tokenizer artifacts are needed on
+the Rust side.  Everything is seeded and reproducible.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+VOCAB = 256
+TASKS = ("math", "code", "chat")
+
+# Vocabulary pools are deliberately small: the tiny target models must
+# reach the low-entropy, high-confidence regime of the paper's 7B+ models
+# (GSM8K/HumanEval answers are near-deterministic for a strong model), or
+# the draft/target accept rate — the quantity under study — is dominated by
+# corpus noise rather than quantization noise. See DESIGN.md §2.
+_NAMES = ["ada", "bob", "carol", "dave", "erin", "frank"]
+_OBJECTS = ["apples", "pens", "books", "coins"]
+_VERBS = ["buys", "finds", "wins", "gets"]
+_FUNCS = ["add", "sub", "mul", "double", "square", "inc", "dec", "neg"]
+_GREET = ["hello", "hi there", "good morning"]
+_TOPICS = ["weather", "music", "books", "travel"]
+_REPLIES = ["that sounds great", "i agree with you", "tell me more about it"]
+
+
+def _math_sample(rng: np.random.Generator) -> str:
+    name = _NAMES[rng.integers(len(_NAMES))]
+    obj = _OBJECTS[rng.integers(len(_OBJECTS))]
+    verb = _VERBS[rng.integers(len(_VERBS))]
+    a = int(rng.integers(2, 30))
+    b = int(rng.integers(2, 15))
+    op = rng.integers(3)
+    if op == 0:
+        q = f"{name} has {a} {obj} and {verb} {b} more. how many {obj} now?"
+        ans, work = a + b, f"{a}+{b}={a + b}"
+    elif op == 1:
+        hi, lo = max(a, b), min(a, b)
+        q = f"{name} has {hi} {obj} and gives away {lo}. how many {obj} left?"
+        ans, work = hi - lo, f"{hi}-{lo}={hi - lo}"
+    else:
+        a2, b2 = int(rng.integers(2, 10)), int(rng.integers(2, 10))
+        q = f"{name} {verb} {a2} bags of {b2} {obj}. how many {obj} total?"
+        ans, work = a2 * b2, f"{a2}*{b2}={a2 * b2}"
+    return f"Q: {q}\nA: {work}. the answer is {ans}.\n"
+
+
+def _code_sample(rng: np.random.Generator) -> str:
+    f = _FUNCS[rng.integers(len(_FUNCS))]
+    a = int(rng.integers(1, 10))
+    x = int(rng.integers(1, 10))
+    body = {
+        "add": (f"x + {a}", x + a),
+        "sub": (f"x - {a}", x - a),
+        "mul": (f"x * {a}", x * a),
+        "double": ("x + x", 2 * x),
+        "square": ("x * x", x * x),
+        "inc": ("x + 1", x + 1),
+        "dec": ("x - 1", x - 1),
+        "neg": ("0 - x", -x),
+    }[f]
+    return (
+        f"def {f}_{a}(x):\n"
+        f"    return {body[0]}\n"
+        f"assert {f}_{a}({x}) == {body[1]}\n"
+    )
+
+
+def _chat_sample(rng: np.random.Generator) -> str:
+    g = _GREET[rng.integers(len(_GREET))]
+    t = _TOPICS[rng.integers(len(_TOPICS))]
+    r1 = _REPLIES[rng.integers(len(_REPLIES))]
+    r2 = _REPLIES[rng.integers(len(_REPLIES))]
+    return (
+        f"USER: {g}, can we talk about {t}?\n"
+        f"BOT: {r1}. {t} is a fine topic.\n"
+        f"USER: what do you think about {t} today?\n"
+        f"BOT: {r2}.\n"
+    )
+
+
+_SAMPLERS = {"math": _math_sample, "code": _code_sample, "chat": _chat_sample}
+
+
+def sample(task: str, rng: np.random.Generator) -> str:
+    return _SAMPLERS[task](rng)
+
+
+def make_stream(n_bytes: int, seed: int, mix=(1.0, 1.0, 1.0)) -> np.ndarray:
+    """Deterministic training stream: uint8 array of length >= n_bytes."""
+    rng = np.random.default_rng(seed)
+    probs = np.asarray(mix, dtype=np.float64)
+    probs /= probs.sum()
+    chunks: list[bytes] = []
+    total = 0
+    while total < n_bytes:
+        task = TASKS[rng.choice(3, p=probs)]
+        piece = sample(task, rng).encode()
+        chunks.append(piece)
+        total += len(piece)
+    return np.frombuffer(b"".join(chunks), dtype=np.uint8)[:n_bytes].copy()
+
+
+def make_prompts(task: str, n: int, seed: int, prompt_len: int):
+    """Task prompts for generation benchmarks (few-shot context + problem).
+
+    Mirrors the paper's benchmarks: each prompt ends with a *complete*
+    problem and an answer stem (GSM8K question + "A: ", HumanEval signature
+    + body start, MT-bench user turn + "BOT: "), so generation is the
+    model answering — the mostly-deterministic regime in which draft/target
+    alignment (the accept rate) is meaningful.  Returns uint8 token lists,
+    each exactly ``prompt_len`` long (left-truncated).
+    """
+    rng = np.random.default_rng(seed)
+    prompts = []
+    for _ in range(n):
+        ctx = "".join(sample(task, rng) for _ in range(6))
+        if task == "math":
+            # Full question, cut right before the worked answer.
+            q = sample("math", rng)
+            stem = q[: q.index("\nA: ") + len("\nA: ")]
+        elif task == "code":
+            # Signature + body start; the name determines the body.
+            c = sample("code", rng)
+            stem = c[: c.index("return ") + len("return ")]
+        else:
+            # Complete user turn; the bot reply follows.
+            c = sample("chat", rng)
+            stem = c[: c.index("BOT: ") + len("BOT: ")]
+        text = (ctx + stem).encode()
+        text = text[-prompt_len:]
+        if len(text) < prompt_len:
+            text = b" " * (prompt_len - len(text)) + text
+        prompts.append(list(text))
+    return prompts
+
+
+def heldout(n_bytes: int, seed: int) -> np.ndarray:
+    """Held-out evaluation stream (wikitext2-perplexity analog)."""
+    return make_stream(n_bytes, seed=seed ^ 0x5EED)

@@ -1,0 +1,63 @@
+"""Pallas BSFP encode kernel: FP16 bit patterns -> (W_q, W_r).
+
+The quantization itself happens once, offline — but expressing the encoder as
+a kernel (a) documents the paper's Fig. 3 remap as dataflow, and (b) gives the
+test suite a third independent implementation to cross-check (numpy codec,
+jnp oracle, Pallas kernel must all agree bit-for-bit).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def _remap(exp: jnp.ndarray):
+    """Fig. 3 remap in arithmetic form (kernels cannot capture LUT arrays).
+
+    naive code = E >> 1.  Codes 3'b000 / 3'b010 are stolen for E = 9 / 11, so
+    low-range values whose naive code is even round up to the next odd code
+    (flag set); E = 9 and E = 11 take the stolen codes (flag set); everything
+    else keeps its naive code (flag clear).
+    """
+    naive = exp >> 1
+    low_even = (exp < 8) & ((naive & 1) == 0)
+    critical = (exp == 9) | (exp == 11)
+    code = jnp.where(low_even, naive + 1, jnp.where(critical, exp - 9, naive))
+    flag = (low_even | critical).astype(jnp.int32)
+    return code, flag
+
+
+def _encode_kernel(bits_ref, wq_ref, wr_ref):
+    bits = bits_ref[...].astype(jnp.int32)  # uint16 widened for bit ops
+    sign = (bits >> 15) & 1
+    exp = (bits >> 10) & 0x1F
+    man = bits & 0x3FF
+    code, flag = _remap(exp)
+    e0 = exp & 1
+    wq_ref[...] = ((sign << 3) | code).astype(jnp.uint8)
+    wr_ref[...] = ((flag << 11) | (e0 << 10) | man).astype(jnp.uint16)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def encode(bits, *, interpret: bool = True):
+    """Encode FP16 bit patterns (uint16, any 2-D shape) into (W_q, W_r)."""
+    rows, cols = bits.shape
+    br = min(128, rows)
+    assert rows % br == 0, bits.shape
+    return pl.pallas_call(
+        _encode_kernel,
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, cols), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, cols), jnp.uint8),
+            jax.ShapeDtypeStruct((rows, cols), jnp.uint16),
+        ],
+        interpret=interpret,
+    )(bits)

@@ -1,0 +1,60 @@
+"""Pallas full-precision GEMM kernel — the verification-pass hot path.
+
+Full mode of the paper's reconfigurable PE array (Fig. 6, right): weights are
+consumed at full precision.  Tiles are sized for VMEM-style double buffering:
+the grid walks (M tiles, K tiles) and accumulates into the output tile so the
+weight tensor streams through exactly once per M tile (weight-stationary
+within a tile, matching the accelerator's W-buffer reuse).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    k = pl.program_id(1)
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul(x, w, *, interpret: bool = True):
+    """Full-precision GEMM ``x @ w`` with (M, K)-tiled accumulation.
+
+    Args:
+      x: (B, K) float32.
+      w: (K, N) float32.
+    Returns (B, N) float32.
+    """
+    b, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm = min(BLOCK_M, b)
+    bk = min(BLOCK_K, k)
+    assert b % bm == 0 and k % bk == 0, (x.shape, bm, bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(b // bm, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bk, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)

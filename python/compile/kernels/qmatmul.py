@@ -1,0 +1,102 @@
+"""Pallas draft-GEMM kernel: activations @ BSFP-packed 4-bit weights.
+
+This is the paper's quantize-mode hot path (Fig. 6, left) re-expressed for a
+TPU-style memory hierarchy instead of the ASIC PE array:
+
+* the weight stream into the kernel is the *packed* 4-bit ``W_q`` (two codes
+  per byte) plus the per-128-group Eq. 4 scales — 4.25 bits/element instead
+  of 16, which is exactly the bandwidth reduction the reconfigurable PE
+  array exploits in quantize mode;
+* the Fig. 5(a) draft decoder (code -> quantized exponent, a pure LUT) runs
+  in-register on the VMEM-resident tile before the MXU matmul;
+* the grid walks K in 128-wide groups (one scale row per grid step) and
+  accumulates into the output tile, i.e. the HBM->VMEM schedule replaces the
+  paper's threadblock/PE-tile schedule (see DESIGN.md §Hardware-Adaptation).
+
+Kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot run
+Mosaic custom-calls; numerics are identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import FP16_BIAS, GROUP_SIZE
+
+
+def _code_to_qexp(code: jnp.ndarray) -> jnp.ndarray:
+    """Fig. 5(a) LUT [9, 2, 11, 6, 8, 10, 12, 14] in arithmetic form.
+
+    Pallas kernels cannot close over constant arrays, so the decoder's
+    NOR-gate structure is expressed directly: the stolen codes 3'b000 and
+    3'b010 (both with c0 = c2 = 0) decode to 9 and 11 (= code + 9); every
+    other code decodes to 2*code, exactly the "append a zero" datapath.
+    """
+    code = code.astype(jnp.int32)
+    stolen = (code < 4) & ((code & 1) == 0)
+    return jnp.where(stolen, code + 9, 2 * code)
+
+
+def _decode_nibbles(codes: jnp.ndarray) -> jnp.ndarray:
+    """Fig. 5(a) decode of a nibble plane: 4-bit codes -> signed draft values."""
+    sign = (codes >> 3) & 1
+    qexp = _code_to_qexp(codes & 0x7)
+    mag = jnp.exp2(qexp.astype(jnp.float32) - FP16_BIAS)
+    return jnp.where(sign == 1, -mag, mag)
+
+
+def _qmatmul_kernel(x_ref, wq_ref, s_ref, o_ref):
+    # Perf (§Perf log, 3.0x in interpret mode): decode the low/high nibble
+    # planes separately and pair them with the even/odd activation lanes —
+    # y = x_even @ W_lo + x_odd @ W_hi — instead of interleaving the planes
+    # back into a (GROUP_SIZE, N) tile (stack + reshape dominated the step).
+    k = pl.program_id(0)
+    packed = wq_ref[...]
+    s = s_ref[...]
+    w_lo = _decode_nibbles(packed & 0xF) * s         # group rows 0, 2, 4, ...
+    w_hi = _decode_nibbles((packed >> 4) & 0xF) * s  # group rows 1, 3, 5, ...
+    x = x_ref[...]
+    acc = jnp.dot(x[:, 0::2], w_lo, preferred_element_type=jnp.float32) + jnp.dot(
+        x[:, 1::2], w_hi, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def qmatmul(x, wq_packed, scales, *, interpret: bool = True):
+    """Draft GEMM ``x @ dequant(wq_packed, scales)``.
+
+    Args:
+      x:          (B, K) float32 activations.
+      wq_packed:  (K // 2, N) uint8 nibble-packed W_q codes.
+      scales:     (K // GROUP_SIZE, N) float32 Eq. 4 group scales.
+    Returns (B, N) float32.
+    """
+    b, k = x.shape
+    kp, n = wq_packed.shape
+    assert kp * 2 == k, (x.shape, wq_packed.shape)
+    assert k % GROUP_SIZE == 0, f"K={k} must be a multiple of {GROUP_SIZE}"
+    groups = k // GROUP_SIZE
+    return pl.pallas_call(
+        _qmatmul_kernel,
+        grid=(groups,),
+        in_specs=[
+            pl.BlockSpec((b, GROUP_SIZE), lambda i: (0, i)),
+            pl.BlockSpec((GROUP_SIZE // 2, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(x, wq_packed, scales)

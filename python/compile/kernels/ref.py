@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+is pytest-verified (with hypothesis shape/dtype sweeps) against the matching
+function here, and the L2 graphs can be built against either implementation.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Fig. 5(a) draft decoder table: 3-bit remapped code -> quantized exponent.
+CODE_TO_QEXP = jnp.asarray([9, 2, 11, 6, 8, 10, 12, 14], dtype=jnp.int32)
+FP16_BIAS = 15
+GROUP_SIZE = 128
+
+
+def unpack_codes(wq_packed: jnp.ndarray) -> jnp.ndarray:
+    """Unpack nibble-packed W_q codes: (K//2, N) uint8 -> (K, N) uint8.
+
+    Element 2i sits in the low nibble, 2i+1 in the high nibble.
+    """
+    lo = wq_packed & 0xF
+    hi = (wq_packed >> 4) & 0xF
+    kp, n = wq_packed.shape
+    return jnp.stack([lo, hi], axis=1).reshape(2 * kp, n)
+
+
+def dequant_draft(wq_packed: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """Reference BSFP draft dequantization: packed codes + Eq.4 scales -> f32.
+
+    ``wq_packed``: (K//2, N) uint8; ``scales``: (K//GROUP_SIZE, N) f32.
+    Returns (K, N) float32 draft weights.
+    """
+    codes = unpack_codes(wq_packed)
+    sign = (codes >> 3) & 1
+    qexp = CODE_TO_QEXP[(codes & 0x7).astype(jnp.int32)]
+    mag = jnp.exp2(qexp.astype(jnp.float32) - FP16_BIAS)
+    w = jnp.where(sign == 1, -mag, mag)
+    k, n = w.shape
+    g = k // GROUP_SIZE
+    w = w.reshape(g, GROUP_SIZE, n) * scales.reshape(g, 1, n)
+    return w.reshape(k, n)
+
+
+def qmatmul(x: jnp.ndarray, wq_packed: jnp.ndarray, scales: jnp.ndarray):
+    """Reference draft GEMM: x (B, K) f32 @ BSFP-packed weight -> (B, N)."""
+    return x @ dequant_draft(wq_packed, scales)
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Reference full-precision GEMM."""
+    return x @ w
+
+
+def quantize_bits(bits: jnp.ndarray):
+    """jnp mirror of bsfp.encode on uint16 FP16 bit patterns.
+
+    Returns (w_q uint8, w_r uint16).  Used as the oracle for the Pallas
+    quantize kernel.
+    """
+    remap_code = jnp.asarray(
+        [1, 1, 1, 1, 3, 3, 3, 3, 4, 0, 5, 2, 6, 6, 7, 7], dtype=jnp.uint16
+    )
+    remap_flag = jnp.asarray(
+        [1, 1, 0, 0, 1, 1, 0, 0, 0, 1, 0, 1, 0, 0, 0, 0], dtype=jnp.uint16
+    )
+    bits = bits.astype(jnp.uint16)
+    sign = bits >> 15
+    exp = (bits >> 10) & 0x1F
+    man = bits & 0x3FF
+    code = remap_code[exp.astype(jnp.int32)]
+    flag = remap_flag[exp.astype(jnp.int32)]
+    e0 = exp & 1
+    w_q = ((sign << 3) | code).astype(jnp.uint8)
+    w_r = ((flag << 11) | (e0 << 10) | man).astype(jnp.uint16)
+    return w_q, w_r
+
+
+def np_goldens(rng: np.random.Generator, k: int = 256, n: int = 8):
+    """Random FP16-representable weights for golden-vector emission."""
+    return rng.standard_normal((k, n)).astype(np.float16).astype(np.float32)

@@ -1,0 +1,363 @@
+"""L2: decoder-only transformer in pure JAX — target model and BSFP draft.
+
+The same architecture serves as (a) the full-precision target, (b) the BSFP
+4-bit draft (identical graph, linear layers routed through the Pallas
+``qmatmul`` kernel over packed ``W_q`` + Eq. 4 scales), and (c) the training
+forward.  This mirrors the paper's parameter sharing: the draft *is* the
+target's weight bits.
+
+Graphs exported to HLO (see ``aot.py``):
+
+* ``prefill(params, tokens[P], length)        -> (logits[P,V], kv)``
+* ``decode_full(params, token, pos, kv)       -> (logits[V], kv')``
+* ``decode_draft(qparams, token, pos, kv)     -> (logits[V], kv')``
+
+KV cache layout: ``f32[L, 2, C, H, Dh]`` (axis 1: 0 = keys, 1 = values).
+The draft and full graphs share one cache (paper §III-C: zero KV overhead);
+verification overwrites the drafted positions with full-precision KV.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import full_matmul as k_full
+from .kernels import qmatmul as k_quant
+from . import bsfp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of one tiny target model (a paper-LLM analog)."""
+
+    name: str
+    paper_analog: str
+    n_layers: int
+    d_model: int
+    d_ff: int
+    n_heads: int
+    vocab: int = 256
+    cache_len: int = 512
+    prefill_len: int = 256
+    seed: int = 0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        return sum(int(np.prod(s)) for _, s in param_shapes(self))
+
+
+# The five paper models, scaled to CPU-trainable analogs (DESIGN.md §2).
+# Ordering mirrors the paper's Table II rows.
+MODEL_ZOO = [
+    ModelConfig("vicuna-7b-tiny", "Vicuna-7b", 2, 128, 256, 4, seed=11),
+    ModelConfig("llama2-7b-tiny", "Llama2-7b", 3, 128, 384, 4, seed=22),
+    ModelConfig("llama3.1-8b-tiny", "Llama3.1-8b", 4, 128, 384, 4, seed=33),
+    ModelConfig("llama3.2-3b-tiny", "Llama3.2-3b", 2, 128, 384, 4, seed=44),
+    ModelConfig("llama2-13b-tiny", "Llama2-13b", 4, 256, 512, 8, seed=55),
+]
+
+
+def zoo_by_name(name: str) -> ModelConfig:
+    for cfg in MODEL_ZOO:
+        if cfg.name == name:
+            return cfg
+    raise KeyError(name)
+
+
+# Linear weights quantized by BSFP (per layer + head); everything else
+# (embedding, norms) stays FP16, as in the paper (linear tensors only).
+_LAYER_LINEARS = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+def param_shapes(cfg: ModelConfig):
+    """Deterministic (name, shape) list — the manifest/flattening order."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    shapes: list[tuple[str, tuple]] = [("embed", (v, d))]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        shapes += [
+            (p + "attn_norm", (d,)),
+            (p + "wq", (d, d)),
+            (p + "wk", (d, d)),
+            (p + "wv", (d, d)),
+            (p + "wo", (d, d)),
+            (p + "mlp_norm", (d,)),
+            (p + "w_gate", (d, f)),
+            (p + "w_up", (d, f)),
+            (p + "w_down", (f, d)),
+        ]
+    shapes += [("final_norm", (d,)), ("lm_head", (d, v))]
+    return shapes
+
+
+def linear_names(cfg: ModelConfig) -> list[str]:
+    names = []
+    for l in range(cfg.n_layers):
+        names += [f"layer{l}.{w}" for w in _LAYER_LINEARS]
+    names.append("lm_head")
+    return names
+
+
+def init_params(cfg: ModelConfig) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(cfg.seed)
+    params = {}
+    for name, shape in param_shapes(cfg):
+        if name.endswith("norm"):
+            params[name] = np.ones(shape, dtype=np.float32)
+        else:
+            fan_in = shape[0]
+            std = 0.5 / np.sqrt(fan_in)
+            params[name] = (rng.standard_normal(shape) * std).astype(np.float32)
+    return params
+
+
+# ---- building blocks ------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rope(x: jnp.ndarray, pos: jnp.ndarray, head_dim: int) -> jnp.ndarray:
+    """Rotary embedding; x: (T, H, Dh), pos: (T,) int32."""
+    half = head_dim // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (np.log(10000.0) / half))
+    angles = pos[:, None].astype(jnp.float32) * freqs[None, :]  # (T, half)
+    cos = jnp.cos(angles)[:, None, :]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+LinearFn = Callable[[jnp.ndarray, str], jnp.ndarray]
+
+
+def _block(x, l: int, linear: LinearFn, params, cfg: ModelConfig, kv, pos, t):
+    """One transformer block over t tokens at positions ``pos``.
+
+    x: (T, D); kv: full cache; pos: (T,) positions being written.
+    Attention reads the cache after writing, so prefill (T = P) and
+    single-token decode (T = 1) share this code path.
+    """
+    h_count, hd, c = cfg.n_heads, cfg.head_dim, cfg.cache_len
+    h = rmsnorm(x, params[f"layer{l}.attn_norm"])
+    q = linear(h, f"layer{l}.wq").reshape(t, h_count, hd)
+    k = linear(h, f"layer{l}.wk").reshape(t, h_count, hd)
+    v = linear(h, f"layer{l}.wv").reshape(t, h_count, hd)
+    q = rope(q, pos, hd)
+    k = rope(k, pos, hd)
+    kv = jax.lax.dynamic_update_slice(kv, k[None, None], (l, 0, pos[0], 0, 0))
+    kv = jax.lax.dynamic_update_slice(kv, v[None, None], (l, 1, pos[0], 0, 0))
+    keys, vals = kv[l, 0], kv[l, 1]  # (C, H, Dh)
+    scores = jnp.einsum("thd,chd->htc", q, keys) / np.sqrt(hd)
+    cache_pos = jnp.arange(c, dtype=jnp.int32)
+    mask = cache_pos[None, :] <= pos[:, None]  # (T, C) causal over cache
+    scores = jnp.where(mask[None, :, :], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("htc,chd->thd", attn, vals).reshape(t, cfg.d_model)
+    x = x + linear(ctx, f"layer{l}.wo")
+    h = rmsnorm(x, params[f"layer{l}.mlp_norm"])
+    gate = jax.nn.silu(linear(h, f"layer{l}.w_gate"))
+    up = linear(h, f"layer{l}.w_up")
+    x = x + linear(gate * up, f"layer{l}.w_down")
+    return x, kv
+
+
+def _forward(tokens, pos, kv, params, linear: LinearFn, cfg: ModelConfig):
+    t = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)  # (T, D)
+    for l in range(cfg.n_layers):
+        x, kv = _block(x, l, linear, params, cfg, kv, pos, t)
+    x = rmsnorm(x, params["final_norm"])
+    logits = linear(x, "lm_head")
+    return logits, kv
+
+
+# ---- linear-op routings ---------------------------------------------------
+
+def full_linear(params, cfg: ModelConfig, *, use_pallas: bool) -> LinearFn:
+    """Full-precision linears — Pallas full-mode GEMM in exported graphs."""
+    lin = set(linear_names(cfg))
+
+    def linear(x, name):
+        if use_pallas and name in lin:
+            b = x.shape[0]
+            bm = min(k_full.BLOCK_M, b)
+            if b % bm == 0:
+                return k_full.matmul(x, params[name])
+        return x @ params[name]
+
+    return linear
+
+
+def draft_linear(qparams, params, cfg: ModelConfig) -> LinearFn:
+    """Draft linears — Pallas quantize-mode GEMM over packed W_q."""
+    lin = set(linear_names(cfg))
+
+    def linear(x, name):
+        if name in lin:
+            return k_quant.qmatmul(
+                x, qparams[name + ".wq"], qparams[name + ".scales"]
+            )
+        return x @ params[name]
+
+    return linear
+
+
+# ---- exported graph builders ---------------------------------------------
+#
+# PJRT returns multi-output graphs as one tuple buffer, which the Rust side
+# cannot split without a full host round-trip.  All request-path graphs
+# therefore return a SINGLE flat f32 "state" vector:
+#
+#     state = [ S_SLOTS * V logits slots | KV cache (flattened) ]
+#
+# Rust threads the state buffer output -> input and copies only the logits
+# prefix to the host each step.  The verify graph fills all S_SLOTS logits
+# rows (the paper's single parallel verification pass); prefill and the two
+# decode graphs fill slot 0 only.
+
+# Max draft length 20 (the paper ablates L up to 20; default L = 16) + 1
+# bonus token from verification.
+S_SLOTS = 21
+
+
+def kv_shape(cfg: ModelConfig):
+    return (cfg.n_layers, 2, cfg.cache_len, cfg.n_heads, cfg.head_dim)
+
+
+def state_len(cfg: ModelConfig) -> int:
+    return S_SLOTS * cfg.vocab + int(np.prod(kv_shape(cfg)))
+
+
+def _pack_state(slots: jnp.ndarray, kv: jnp.ndarray, cfg: ModelConfig):
+    return jnp.concatenate([slots.reshape(-1), kv.reshape(-1)])
+
+
+def _unpack_kv(state: jnp.ndarray, cfg: ModelConfig):
+    return state[S_SLOTS * cfg.vocab :].reshape(kv_shape(cfg))
+
+
+def make_prefill(cfg: ModelConfig, *, use_pallas: bool = True):
+    """Prefill graph: prompt -> state (slot 0 = logits at position len-1)."""
+
+    def prefill(params: dict, tokens, length):
+        kv = jnp.zeros(kv_shape(cfg), dtype=jnp.float32)
+        pos = jnp.arange(cfg.prefill_len, dtype=jnp.int32)
+        linear = full_linear(params, cfg, use_pallas=use_pallas)
+        # Zero padded tail tokens; their KV rows are written but never
+        # attended to (decode masks by true cache position).
+        tokens = jnp.where(pos < length, tokens, 0)
+        logits, kv = _forward(tokens, pos, kv, params, linear, cfg)
+        last = jax.lax.dynamic_slice(logits, (length - 1, 0), (1, cfg.vocab))
+        slots = jnp.zeros((S_SLOTS, cfg.vocab), dtype=jnp.float32)
+        slots = jax.lax.dynamic_update_slice(slots, last, (0, 0))
+        return _pack_state(slots, kv, cfg)
+
+    return prefill
+
+
+def make_eval(cfg: ModelConfig, *, use_pallas: bool = True):
+    """Eval graph: full per-position logits (P, V) — the perplexity harness."""
+
+    def evaluate(params: dict, tokens, length):
+        kv = jnp.zeros(kv_shape(cfg), dtype=jnp.float32)
+        pos = jnp.arange(cfg.prefill_len, dtype=jnp.int32)
+        linear = full_linear(params, cfg, use_pallas=use_pallas)
+        tokens = jnp.where(pos < length, tokens, 0)
+        logits, _ = _forward(tokens, pos, kv, params, linear, cfg)
+        return logits
+
+    return evaluate
+
+
+def _decode_step(linear, params, cfg, token, pos, state):
+    kv = _unpack_kv(state, cfg)
+    tokens = jnp.reshape(token, (1,)).astype(jnp.int32)
+    posv = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    logits, kv = _forward(tokens, posv, kv, params, linear, cfg)
+    slots = jnp.zeros((S_SLOTS, cfg.vocab), dtype=jnp.float32)
+    slots = slots.at[0].set(logits[0])
+    return _pack_state(slots, kv, cfg)
+
+
+def make_decode(cfg: ModelConfig, *, use_pallas: bool = True):
+    def decode(params: dict, token, pos, state):
+        linear = full_linear(params, cfg, use_pallas=use_pallas)
+        return _decode_step(linear, params, cfg, token, pos, state)
+
+    return decode
+
+
+def make_decode_draft(cfg: ModelConfig):
+    def decode_draft(params: dict, qparams: dict, token, pos, state):
+        linear = draft_linear(qparams, params, cfg)
+        return _decode_step(linear, params, cfg, token, pos, state)
+
+    return decode_draft
+
+
+def make_verify(cfg: ModelConfig, *, use_pallas: bool = True):
+    """Verification graph: score S_SLOTS tokens in ONE parallel pass.
+
+    Recomputes full-precision KV for every drafted position (overwriting the
+    draft's quantized-pass KV — the shared-cache scheme of §III-C) and fills
+    every logits slot.  Padded tail tokens write KV rows beyond the current
+    position, which are never attended to before being overwritten.
+    """
+
+    def verify(params: dict, tokens, pos0, state):
+        kv = _unpack_kv(state, cfg)
+        linear = full_linear(params, cfg, use_pallas=use_pallas)
+        tokens = jnp.reshape(tokens, (S_SLOTS,)).astype(jnp.int32)
+        pos = pos0 + jnp.arange(S_SLOTS, dtype=jnp.int32)
+        logits, kv = _forward(tokens, pos, kv, params, linear, cfg)
+        return _pack_state(logits, kv, cfg)
+
+    return verify
+
+
+# ---- training forward (batched, no cache, plain jnp) ----------------------
+
+def train_logits(params: dict, tokens: jnp.ndarray, cfg: ModelConfig):
+    """Batched training forward; tokens (B, S) -> logits (B, S, V)."""
+
+    def one(seq):
+        s = seq.shape[0]
+        cfg_local = dataclasses.replace(cfg, cache_len=s)
+        kv = jnp.zeros(kv_shape(cfg_local), dtype=jnp.float32)
+        pos = jnp.arange(s, dtype=jnp.int32)
+        linear = full_linear(params, cfg_local, use_pallas=False)
+        logits, _ = _forward(seq, pos, kv, params, linear, cfg_local)
+        return logits
+
+    return jax.vmap(one)(tokens)
+
+
+def quantize_params(params: dict, cfg: ModelConfig):
+    """BSFP-quantize every linear weight; returns the draft qparams dict.
+
+    Each linear ``name`` contributes ``name.wq`` (nibble-packed uint8) and
+    ``name.scales`` (f32).  Also returns per-tensor manifest metadata.
+    """
+    qparams: dict[str, np.ndarray] = {}
+    meta: dict[str, dict] = {}
+    for name in linear_names(cfg):
+        w = np.asarray(params[name], dtype=np.float32)
+        qt = bsfp.quantize_tensor(w)
+        # Lossless invariant (the paper's bit-sharing property).
+        rec = qt.reconstruct_fp16_bits()
+        orig_bits = bsfp.f32_to_bits(bsfp.algorithm1_prescale(w)[0])
+        assert np.array_equal(rec, orig_bits), f"lossless violation in {name}"
+        qparams[name + ".wq"] = qt.packed_wq()
+        qparams[name + ".scales"] = qt.scales.astype(np.float32)
+        meta[name] = {"tensor_scale": qt.tensor_scale, "shape": list(w.shape)}
+    return qparams, meta

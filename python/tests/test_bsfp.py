@@ -1,0 +1,141 @@
+"""BSFP codec correctness: exhaustive bit-level checks + hypothesis sweeps."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import bsfp
+
+
+def all_valid_bits():
+    """All 32768 FP16 patterns with exponent <= 15."""
+    s = np.arange(2, dtype=np.uint32)
+    e = np.arange(16, dtype=np.uint32)
+    m = np.arange(1024, dtype=np.uint32)
+    grid = (s[:, None, None] << 15) | (e[None, :, None] << 10) | m[None, None, :]
+    return grid.ravel().astype(np.uint16)
+
+
+class TestLossless:
+    def test_roundtrip_exhaustive(self):
+        bits = all_valid_bits()
+        w_q, w_r = bsfp.encode(bits)
+        assert np.array_equal(bsfp.decode_full(w_q, w_r), bits)
+
+    def test_encode_rejects_out_of_range(self):
+        with pytest.raises(ValueError):
+            bsfp.encode(np.array([0x7000], dtype=np.uint16))  # exp = 28
+
+    def test_bit_budget(self):
+        bits = all_valid_bits()
+        w_q, w_r = bsfp.encode(bits)
+        assert int(w_q.max()) <= 0xF, "W_q exceeds 4 bits"
+        assert int(w_r.max()) <= 0xFFF, "W_r exceeds 12 bits"
+
+
+class TestRemapTable:
+    def test_fig3_rows(self):
+        # (E, quantized value, flag) straight from Fig. 3.
+        rows = [
+            (0, 2, 1), (1, 2, 1), (2, 2, 0), (3, 2, 0),
+            (4, 6, 1), (5, 6, 1), (6, 6, 0), (7, 6, 0),
+            (8, 8, 0), (9, 9, 1), (10, 10, 0), (11, 11, 1),
+            (12, 12, 0), (13, 12, 0), (14, 14, 0), (15, 14, 0),
+        ]
+        for e, qval, flag in rows:
+            code = bsfp.REMAP_CODE[e]
+            assert bsfp.CODE_TO_QEXP[code] == qval, f"E={e}"
+            assert bsfp.REMAP_FLAG[e] == flag, f"E={e}"
+
+    def test_critical_exponents_have_unique_codes(self):
+        # 9 and 11 own the stolen codes 000 and 010.
+        assert bsfp.REMAP_CODE[9] == 0
+        assert bsfp.REMAP_CODE[11] == 2
+        # No other exponent maps to those codes.
+        for e in range(16):
+            if e not in (9, 11):
+                assert bsfp.REMAP_CODE[e] not in (0, 2)
+
+
+class TestAlgorithm1:
+    def test_no_scale_for_small_tensors(self):
+        w = np.array([[0.5, -1.2]], dtype=np.float32)
+        _, scale = bsfp.algorithm1_prescale(w)
+        assert scale == 1.0
+
+    def test_outlier_triggers_scale(self):
+        # The paper's Llama2-13B down_proj case: lone 2.4062.
+        w = np.full((4, 4), 0.1, dtype=np.float32)
+        w[0, 0] = 2.4062
+        scaled, scale = bsfp.algorithm1_prescale(w)
+        assert scale == pytest.approx(1.999 / 2.4062)
+        assert np.abs(scaled).max() < 2.0
+
+    @given(st.floats(min_value=2.001, max_value=1e4))
+    @settings(max_examples=50, deadline=None)
+    def test_scale_always_brings_in_range(self, wmax):
+        w = np.array([wmax, -0.3], dtype=np.float32)
+        scaled, _ = bsfp.algorithm1_prescale(w)
+        assert np.abs(scaled).max() < 2.0
+
+
+class TestQuantizeTensor:
+    @given(st.integers(0, 2**32 - 1), st.sampled_from([128, 256, 384]),
+           st.integers(1, 8), st.sampled_from([0.02, 0.2, 1.0]))
+    @settings(max_examples=25, deadline=None)
+    def test_lossless_random_tensors(self, seed, k, n, amp):
+        rng = np.random.default_rng(seed)
+        w = (rng.standard_normal((k, n)) * amp).astype(np.float32)
+        qt = bsfp.quantize_tensor(w)
+        scaled, _ = bsfp.algorithm1_prescale(w)
+        assert np.array_equal(qt.reconstruct_fp16_bits(), bsfp.f32_to_bits(scaled))
+
+    def test_eq4_scale_is_mse_optimal(self):
+        rng = np.random.default_rng(3)
+        w = (rng.standard_normal((128, 1)) * 0.1).astype(np.float32)
+        qt = bsfp.quantize_tensor(w)
+        q = bsfp.draft_values(qt.w_q).reshape(-1)
+        t = bsfp.bits_to_f32(bsfp.f32_to_bits(w)).reshape(-1)
+        def mse(s):
+            return float(np.mean((q * s - t) ** 2))
+        s0 = float(qt.scales[0, 0])
+        assert mse(s0) <= mse(s0 * 1.01) + 1e-15
+        assert mse(s0) <= mse(s0 * 0.99) + 1e-15
+
+    def test_packed_layout(self):
+        w = np.zeros((2, 1), dtype=np.float32)
+        w[0, 0] = 0.5   # sign 0
+        w[1, 0] = -0.5  # sign 1
+        qt = bsfp.quantize_tensor(np.tile(w, (64, 1)).astype(np.float32))
+        packed = qt.packed_wq()
+        lo = packed[0, 0] & 0xF
+        hi = (packed[0, 0] >> 4) & 0xF
+        assert lo == qt.w_q[0, 0] and hi == qt.w_q[1, 0]
+        assert (hi >> 3) == 1 and (lo >> 3) == 0  # signs preserved
+
+
+class TestVariants:
+    def test_ordering_on_top_magnitude_mse(self):
+        rng = np.random.default_rng(9)
+        w = (rng.standard_normal((512, 16)) * 0.07).astype(np.float32)
+        absw = np.abs(w)
+        thr = np.quantile(absw, 0.9)
+        def top_mse(q):
+            d = (q - w)[absw > thr]
+            return float(np.mean(d.astype(np.float64) ** 2))
+        errs = {v: top_mse(bsfp.quantize_variant(w, v))
+                for v in ["bsfp", "e3m0", "e2m1", "e1m2"]}
+        assert errs["bsfp"] < errs["e3m0"] < errs["e2m1"] < errs["e1m2"]
+
+    def test_unknown_variant_raises(self):
+        with pytest.raises(ValueError):
+            bsfp.quantize_variant(np.zeros((128, 1), dtype=np.float32), "int3")
+
+
+class TestExponentHistogram:
+    def test_trained_like_weights_confined(self):
+        rng = np.random.default_rng(1)
+        w = rng.standard_normal(4096).astype(np.float32) * 0.05
+        hist = bsfp.exponent_histogram(w)
+        assert hist[16:].sum() == 0
+        assert hist.sum() == 4096

@@ -1,0 +1,43 @@
+"""Corpus generator: determinism, task structure, prompt shapes."""
+
+import numpy as np
+
+from compile import corpus
+
+
+class TestStream:
+    def test_deterministic(self):
+        a = corpus.make_stream(4096, seed=1)
+        b = corpus.make_stream(4096, seed=1)
+        assert np.array_equal(a, b)
+        c = corpus.make_stream(4096, seed=2)
+        assert not np.array_equal(a, c)
+
+    def test_length_and_dtype(self):
+        s = corpus.make_stream(1000, seed=0)
+        assert s.dtype == np.uint8 and len(s) == 1000
+
+    def test_contains_all_three_families(self):
+        text = corpus.make_stream(1 << 16, seed=3).tobytes().decode()
+        assert "Q: " in text and "def " in text and "USER: " in text
+
+
+class TestPrompts:
+    def test_fixed_length(self):
+        for task in corpus.TASKS:
+            for p in corpus.make_prompts(task, 5, seed=1, prompt_len=128):
+                assert len(p) == 128
+                assert all(0 <= t < 256 for t in p)
+
+    def test_prompts_end_at_answer_stems(self):
+        math = bytes(corpus.make_prompts("math", 1, 1, 160)[0])
+        code = bytes(corpus.make_prompts("code", 1, 1, 160)[0])
+        chat = bytes(corpus.make_prompts("chat", 1, 1, 160)[0])
+        assert math.endswith(b"\nA: ") and b"Q: " in math
+        assert code.endswith(b"return ") and b"def " in code
+        assert chat.endswith(b"BOT: ") and b"USER: " in chat
+
+    def test_heldout_disjoint_from_train_seed(self):
+        train = corpus.make_stream(4096, seed=99)
+        held = corpus.heldout(4096, seed=99)
+        assert not np.array_equal(train, held)

@@ -1,0 +1,84 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import bsfp
+from compile.kernels import ref
+from compile.kernels.bsfp_quant import encode as k_encode
+from compile.kernels.full_matmul import matmul as k_matmul
+from compile.kernels.qmatmul import qmatmul as k_qmatmul
+
+
+def quantized_inputs(seed, k, n, amp=0.1):
+    rng = np.random.default_rng(seed)
+    w = (rng.standard_normal((k, n)) * amp).astype(np.float32)
+    qt = bsfp.quantize_tensor(w)
+    return w, qt
+
+
+class TestQmatmul:
+    @given(st.integers(0, 2**31), st.sampled_from([128, 256, 384]),
+           st.sampled_from([8, 33, 64]), st.sampled_from([1, 2, 5]))
+    @settings(max_examples=12, deadline=None)
+    def test_matches_reference(self, seed, k, n, b):
+        rng = np.random.default_rng(seed ^ 7)
+        _, qt = quantized_inputs(seed, k, n)
+        x = rng.standard_normal((b, k)).astype(np.float32)
+        wq = jnp.asarray(qt.packed_wq())
+        sc = jnp.asarray(qt.scales)
+        y_kernel = np.asarray(k_qmatmul(jnp.asarray(x), wq, sc))
+        y_ref = np.asarray(ref.qmatmul(jnp.asarray(x), wq, sc))
+        np.testing.assert_allclose(y_kernel, y_ref, rtol=1e-5, atol=1e-5)
+
+    def test_matches_dequantized_matmul(self):
+        _, qt = quantized_inputs(0, 256, 16)
+        x = np.random.default_rng(1).standard_normal((2, 256)).astype(np.float32)
+        y_kernel = np.asarray(
+            k_qmatmul(jnp.asarray(x), jnp.asarray(qt.packed_wq()), jnp.asarray(qt.scales))
+        )
+        y_deq = x @ qt.dequant_draft()
+        np.testing.assert_allclose(y_kernel, y_deq, rtol=1e-4, atol=1e-4)
+
+    def test_rejects_bad_group_size(self):
+        x = jnp.zeros((1, 130), dtype=jnp.float32)
+        wq = jnp.zeros((65, 4), dtype=jnp.uint8)
+        sc = jnp.zeros((1, 4), dtype=jnp.float32)
+        with pytest.raises(AssertionError):
+            k_qmatmul(x, wq, sc)
+
+
+class TestFullMatmul:
+    @given(st.integers(0, 2**31), st.sampled_from([128, 256]),
+           st.sampled_from([16, 96]), st.sampled_from([1, 2, 128, 256]))
+    @settings(max_examples=10, deadline=None)
+    def test_matches_reference(self, seed, k, n, b):
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((b, k)).astype(np.float32)
+        w = rng.standard_normal((k, n)).astype(np.float32)
+        y = np.asarray(k_matmul(jnp.asarray(x), jnp.asarray(w)))
+        np.testing.assert_allclose(y, x @ w, rtol=2e-5, atol=2e-5)
+
+
+class TestEncodeKernel:
+    def test_exhaustive_against_numpy_codec(self):
+        s = np.arange(2, dtype=np.uint32)
+        e = np.arange(16, dtype=np.uint32)
+        m = np.arange(1024, dtype=np.uint32)
+        bits = ((s[:, None, None] << 15) | (e[None, :, None] << 10) | m).ravel()
+        bits = bits.astype(np.uint16).reshape(256, 128)
+        wq_np, wr_np = bsfp.encode(bits)
+        wq_k, wr_k = k_encode(jnp.asarray(bits))
+        assert np.array_equal(np.asarray(wq_k), wq_np)
+        assert np.array_equal(np.asarray(wr_k), wr_np)
+
+    def test_matches_jnp_oracle(self):
+        rng = np.random.default_rng(5)
+        w = (rng.standard_normal((128, 32)) * 0.2).astype(np.float32)
+        bits = bsfp.f32_to_bits(w)
+        wq_k, wr_k = k_encode(jnp.asarray(bits))
+        wq_o, wr_o = ref.quantize_bits(jnp.asarray(bits))
+        assert np.array_equal(np.asarray(wq_k), np.asarray(wq_o))
+        assert np.array_equal(np.asarray(wr_k), np.asarray(wr_o))

@@ -1,0 +1,157 @@
+"""L2 model tests: shapes, masking, KV-cache consistency, draft routing."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import corpus
+from compile.model import (
+    MODEL_ZOO,
+    S_SLOTS,
+    init_params,
+    kv_shape,
+    linear_names,
+    make_decode,
+    make_decode_draft,
+    make_eval,
+    make_prefill,
+    make_verify,
+    param_shapes,
+    quantize_params,
+    state_len,
+    train_logits,
+)
+
+CFG = dataclasses.replace(MODEL_ZOO[0], cache_len=64, prefill_len=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return {k: jnp.asarray(v) for k, v in init_params(CFG).items()}
+
+
+@pytest.fixture(scope="module")
+def qparams(params):
+    np_params = {k: np.asarray(v) for k, v in params.items()}
+    qp, _ = quantize_params(np_params, CFG)
+    return {k: jnp.asarray(v) for k, v in qp.items()}
+
+
+def toks(n, seed=0):
+    return jnp.asarray(corpus.make_stream(n, seed), dtype=jnp.int32)
+
+
+class TestShapes:
+    def test_param_shapes_cover_all_linears(self):
+        names = {n for n, _ in param_shapes(CFG)}
+        for lin in linear_names(CFG):
+            assert lin in names
+
+    def test_in_dims_are_group_multiples(self):
+        shapes = dict(param_shapes(CFG))
+        for lin in linear_names(CFG):
+            assert shapes[lin][0] % 128 == 0, lin
+
+    def test_state_len(self):
+        assert state_len(CFG) == S_SLOTS * CFG.vocab + int(np.prod(kv_shape(CFG)))
+
+    def test_train_logits_shape(self, params):
+        logits = train_logits(params, toks(64).reshape(2, 32), CFG)
+        assert logits.shape == (2, 32, CFG.vocab)
+
+
+class TestPrefill:
+    def test_padding_does_not_change_logits(self, params):
+        """Tokens after `length` must not affect the last-position logits."""
+        pf = make_prefill(CFG, use_pallas=False)
+        t = toks(CFG.prefill_len)
+        s1 = pf(params, t, 16)
+        t2 = t.at[20:].set(99)  # corrupt only the padded tail
+        s2 = pf(params, t2, 16)
+        v = CFG.vocab
+        np.testing.assert_allclose(
+            np.asarray(s1[:v]), np.asarray(s2[:v]), rtol=1e-5, atol=1e-6
+        )
+
+    def test_eval_matches_prefill_last_position(self, params):
+        pf = make_prefill(CFG, use_pallas=False)
+        ev = make_eval(CFG, use_pallas=False)
+        t = toks(CFG.prefill_len)
+        length = 24
+        state = pf(params, t, length)
+        logits = ev(params, t, length)
+        v = CFG.vocab
+        np.testing.assert_allclose(
+            np.asarray(state[:v]),
+            np.asarray(logits[length - 1]),
+            rtol=1e-4, atol=1e-5,
+        )
+
+
+class TestDecode:
+    def test_decode_continues_prefill(self, params):
+        """decode(t, pos) after prefill == eval over the extended sequence."""
+        pf = make_prefill(CFG, use_pallas=False)
+        ev = make_eval(CFG, use_pallas=False)
+        dec = make_decode(CFG, use_pallas=False)
+        t = toks(CFG.prefill_len)
+        length = 20
+        state = pf(params, t, length)
+        nxt = int(t[length])  # feed the true next token
+        state2 = dec(params, nxt, length, state)
+        v = CFG.vocab
+        ref_logits = ev(params, t, length + 1)[length]
+        np.testing.assert_allclose(
+            np.asarray(state2[:v]), np.asarray(ref_logits), rtol=1e-3, atol=1e-4
+        )
+
+    def test_verify_matches_sequential_decode(self, params):
+        pf = make_prefill(CFG, use_pallas=False)
+        dec = make_decode(CFG, use_pallas=False)
+        ver = make_verify(CFG, use_pallas=False)
+        t = toks(CFG.prefill_len)
+        length = 10
+        state0 = pf(params, t, length)
+        chain = [int(x) for x in np.asarray(toks(S_SLOTS, seed=3))]
+        # Sequential.
+        state = state0
+        seq_rows = []
+        v = CFG.vocab
+        for i, tok in enumerate(chain):
+            state = dec(params, tok, length + i, state)
+            seq_rows.append(np.asarray(state[:v]))
+        # Parallel.
+        vstate = ver(params, jnp.asarray(chain, dtype=jnp.int32), length, state0)
+        for i in range(S_SLOTS):
+            np.testing.assert_allclose(
+                np.asarray(vstate[i * v:(i + 1) * v]), seq_rows[i],
+                rtol=1e-3, atol=1e-4,
+            )
+
+
+class TestDraft:
+    def test_draft_close_to_full(self, params, qparams):
+        pf = make_prefill(CFG, use_pallas=False)
+        dec = make_decode(CFG, use_pallas=False)
+        dec_d = make_decode_draft(CFG)
+        t = toks(CFG.prefill_len)
+        state = pf(params, t, 16)
+        v = CFG.vocab
+        full = dec(params, 65, 16, state)
+        draft = dec_d(params, qparams, 65, 16, state)
+        # Same argmax on a random init most of the time; at minimum the
+        # logits must correlate strongly.
+        a = np.asarray(full[:v], dtype=np.float64)
+        b = np.asarray(draft[:v], dtype=np.float64)
+        corr = np.corrcoef(a, b)[0, 1]
+        assert corr > 0.9, f"draft/full logit correlation {corr}"
+
+    def test_quantize_params_emits_packed_shapes(self, qparams):
+        shapes = dict(param_shapes(CFG))
+        for lin in linear_names(CFG):
+            k, n = shapes[lin]
+            assert qparams[lin + ".wq"].shape == (k // 2, n)
+            assert qparams[lin + ".scales"].shape == (k // 128, n)
+            assert qparams[lin + ".wq"].dtype == jnp.uint8

@@ -1,0 +1,257 @@
+//! Baseline accelerators (Figs. 7–8) and specdec baselines (§V-D).
+//!
+//! Every design shares the SPEQ substrate (same array size, buffers, DRAM
+//! channel) so comparisons isolate the *design* differences:
+//!
+//! * **FP16** — the same array, full mode only, plain autoregressive.
+//! * **Olive-4/8b** (ISCA'23) — INT PEs with outlier-victim pairs.  Weight
+//!   stream is `bits/8 (1 + index overhead)` bytes/elem; the outlier
+//!   machinery costs array utilization (OVP pairs serialize on outliers).
+//!   4-bit Olive is *lossy* (ppl 44.2 on Llama2-7b per the paper) — marked.
+//! * **Tender-4/8b** (ISCA'24) — decomposed INT with runtime requantization;
+//!   a shift-requant pass after each tile costs additional utilization.
+//! * **Medusa / Swift** — speculative baselines modeled analytically from
+//!   their published operating points, for the §V-D comparison.
+
+use super::dims::ModelDims;
+use super::pe::ArrayMode;
+use super::sim::{Accel, OpCost};
+use crate::specdec::{expected_accept_length, SpecTrace};
+
+/// Which design a point describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaselineKind {
+    Fp16,
+    Olive4,
+    Olive8,
+    Tender4,
+    Tender8,
+    Speq,
+}
+
+/// A design point for the Fig. 7/8 comparison.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub kind: BaselineKind,
+    pub label: &'static str,
+    /// Weight stream bytes per element.
+    pub weight_bytes: f64,
+    /// MAC energy, pJ (INT MACs are cheaper than FP16).
+    pub mac_pj: f64,
+    /// Array utilization factor (<1 models OVP serialization / requant
+    /// stalls; 1.0 for clean datapaths).
+    pub utilization: f64,
+    /// Whether the design degrades model quality (grayed out in Fig. 7).
+    pub lossy: bool,
+}
+
+impl DesignPoint {
+    pub fn get(kind: BaselineKind) -> DesignPoint {
+        match kind {
+            BaselineKind::Fp16 => DesignPoint {
+                kind,
+                label: "FP16",
+                weight_bytes: 2.0,
+                mac_pj: 0.4375,
+                utilization: 1.0,
+                lossy: false,
+            },
+            // Olive: 4/8-bit weights + ~6% outlier-victim index overhead;
+            // OVP handling costs ~12% utilization (outlier lanes serialize).
+            BaselineKind::Olive4 => DesignPoint {
+                kind,
+                label: "Olive-4b",
+                weight_bytes: 0.5 * 1.06,
+                mac_pj: 0.10,
+                utilization: 0.88,
+                lossy: true,
+            },
+            BaselineKind::Olive8 => DesignPoint {
+                kind,
+                label: "Olive-8b",
+                weight_bytes: 1.0 * 1.06,
+                mac_pj: 0.18,
+                utilization: 0.88,
+                lossy: false,
+            },
+            // Tender: decomposed INT + runtime requantization pass (~18%
+            // of tile time) between magnitude clusters.
+            BaselineKind::Tender4 => DesignPoint {
+                kind,
+                label: "Tender-4b",
+                weight_bytes: 0.5 * 1.04,
+                mac_pj: 0.10,
+                utilization: 0.82,
+                lossy: true,
+            },
+            BaselineKind::Tender8 => DesignPoint {
+                kind,
+                label: "Tender-8b",
+                weight_bytes: 1.0 * 1.04,
+                mac_pj: 0.18,
+                utilization: 0.82,
+                lossy: false,
+            },
+            BaselineKind::Speq => DesignPoint {
+                kind,
+                label: "SPEQ",
+                weight_bytes: 2.0, // full-mode stream; draft uses 0.625
+                mac_pj: 0.4375,
+                utilization: 1.0,
+                lossy: false,
+            },
+        }
+    }
+
+    /// Cost of one decode token for this (non-speculative) design.
+    pub fn token_cost(&self, accel: &Accel, dims: &ModelDims, ctx: usize) -> OpCost {
+        let mut total = OpCost::default();
+        for (k, n) in dims.token_linears() {
+            let mut c = accel.gemm_cost(1, k, n, ArrayMode::Full, self.weight_bytes);
+            // Utilization stretch on the compute component; energy scales
+            // with the design's MAC cost.
+            let stretched = (c.compute_cycles as f64 / self.utilization) as u64;
+            c.cycles = c.dram_cycles.max(stretched);
+            c.energy.pe_pj *= self.mac_pj / 0.4375;
+            total.add(&c);
+        }
+        total.add(&accel.attention_cost(dims, ctx, 1));
+        total
+    }
+}
+
+/// Speedup of a design over the FP16 baseline for one decode token stream.
+///
+/// For SPEQ, pass the measured trace (its draft/verify pattern defines the
+/// cost); for the INT designs the speedup is per-token.
+pub fn speedup_vs_fp16(
+    kind: BaselineKind,
+    accel: &Accel,
+    dims: &ModelDims,
+    ctx: usize,
+    trace: Option<&SpecTrace>,
+) -> f64 {
+    let fp16 = DesignPoint::get(BaselineKind::Fp16).token_cost(accel, dims, ctx);
+    match kind {
+        BaselineKind::Speq => {
+            let trace = trace.expect("SPEQ speedup needs a measured trace");
+            accel.run_trace(dims, trace, ctx).speedup()
+        }
+        _ => {
+            let c = DesignPoint::get(kind).token_cost(accel, dims, ctx);
+            fp16.cycles as f64 / c.cycles as f64
+        }
+    }
+}
+
+/// §V-D speculative-decoding baselines (analytic operating points from the
+/// respective papers, all verified on the same FP16 substrate):
+///
+/// * Medusa: head-based drafts — cheap draft (one extra-head pass ≈ 10% of
+///   an AR step) but lower alignment (r ≈ 0.80, effective L ≈ 4) and +11%
+///   weight memory on every pass.
+/// * Swift: layer-skip drafts — draft = half the layers (T_d ≈ 0.5 T_ar),
+///   r ≈ 0.88 after its dynamic-skip optimization, L ≈ 8.
+pub struct SpecdecBaseline {
+    pub name: &'static str,
+    pub accept_rate: f64,
+    pub draft_len: usize,
+    /// T_d / T_ar.
+    pub td_ratio: f64,
+    /// T_v / T_ar.
+    pub tv_ratio: f64,
+    /// Extra training required (paper Table in Fig. 2(b)).
+    pub needs_training: bool,
+    /// Extra memory overhead fraction.
+    pub memory_overhead: f64,
+}
+
+pub const SPECDEC_BASELINES: [SpecdecBaseline; 2] = [
+    SpecdecBaseline {
+        name: "Medusa",
+        accept_rate: 0.80,
+        draft_len: 4,
+        td_ratio: 0.10,
+        tv_ratio: 1.11, // +11% weights on the verification stream
+        needs_training: true,
+        memory_overhead: 0.11,
+    },
+    SpecdecBaseline {
+        name: "Swift",
+        accept_rate: 0.88,
+        draft_len: 8,
+        td_ratio: 0.50,
+        tv_ratio: 1.0,
+        needs_training: false,
+        memory_overhead: 0.0,
+    },
+];
+
+impl SpecdecBaseline {
+    /// Analytic speedup via Eq. 2.
+    pub fn speedup(&self) -> f64 {
+        expected_accept_length(self.accept_rate, self.draft_len)
+            / (self.draft_len as f64 * self.td_ratio + self.tv_ratio)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::dims::paper_dims;
+    use crate::specdec::IterRecord;
+
+    fn good_trace() -> SpecTrace {
+        SpecTrace {
+            iterations: vec![IterRecord { drafted: 16, accepted: 15, early_exit: false }; 16],
+            produced: 256,
+            prompt_len: 1024,
+        }
+    }
+
+    #[test]
+    fn fig7_ordering_holds() {
+        // SPEQ > Tender-8b >= Olive-8b > FP16; SPEQ ~ Olive-4b.  (The
+        // paper's 1.53x-vs-Olive8 > 1.45x-vs-Tender8 implies Tender-8b is
+        // the slightly faster 8-bit design.)
+        let a = Accel::default();
+        let dims = paper_dims("Llama2-7b").unwrap();
+        let trace = good_trace();
+        let speq = speedup_vs_fp16(BaselineKind::Speq, &a, dims, 1024, Some(&trace));
+        let o8 = speedup_vs_fp16(BaselineKind::Olive8, &a, dims, 1024, None);
+        let t8 = speedup_vs_fp16(BaselineKind::Tender8, &a, dims, 1024, None);
+        let o4 = speedup_vs_fp16(BaselineKind::Olive4, &a, dims, 1024, None);
+        assert!(speq > o8, "SPEQ {speq} vs Olive8 {o8}");
+        assert!(speq > t8, "SPEQ {speq} vs Tender8 {t8}");
+        assert!(t8 >= o8, "Tender8 {t8} vs Olive8 {o8}");
+        assert!(o8 > 1.0);
+        // SPEQ within +-35% of lossy Olive-4b (paper: "similar speedup").
+        assert!((speq / o4) > 0.65 && (speq / o4) < 1.35, "SPEQ {speq} vs Olive4 {o4}");
+    }
+
+    #[test]
+    fn lossy_designs_are_marked() {
+        assert!(DesignPoint::get(BaselineKind::Olive4).lossy);
+        assert!(DesignPoint::get(BaselineKind::Tender4).lossy);
+        assert!(!DesignPoint::get(BaselineKind::Olive8).lossy);
+        assert!(!DesignPoint::get(BaselineKind::Speq).lossy);
+    }
+
+    #[test]
+    fn specdec_baseline_ordering_matches_section_vd() {
+        // Paper: SPEQ 2.03x > Medusa (~1.9x) > Swift (~1.35x) on Vicuna-7b.
+        let medusa = SPECDEC_BASELINES[0].speedup();
+        let swift = SPECDEC_BASELINES[1].speedup();
+        assert!(medusa > swift, "medusa {medusa} swift {swift}");
+        assert!(swift > 1.0 && swift < 1.8, "swift {swift}");
+        assert!(medusa > 1.5 && medusa < 2.3, "medusa {medusa}");
+    }
+
+    #[test]
+    fn olive8_beats_fp16_but_less_than_2x() {
+        let a = Accel::default();
+        let dims = paper_dims("Llama2-7b").unwrap();
+        let s = speedup_vs_fp16(BaselineKind::Olive8, &a, dims, 1024, None);
+        assert!(s > 1.2 && s < 2.0, "olive8 {s}");
+    }
+}

@@ -1,0 +1,100 @@
+//! Accelerator instance parameters (Fig. 4).
+
+/// Hardware configuration of one SPEQ accelerator instance.
+#[derive(Debug, Clone)]
+pub struct AccelConfig {
+    /// PE array rows (paper: 32).
+    pub pe_rows: usize,
+    /// PE array cols (paper: 32; 8 tiles x 128 PEs).
+    pub pe_cols: usize,
+    /// Quantized weights processed per PE per cycle in quantize mode
+    /// (paper: 3 five-bit weights share one PE's datapath).
+    pub quant_lanes: usize,
+    /// Clock, Hz (paper: 500 MHz).
+    pub freq_hz: f64,
+    /// Weight/Activation/Output buffer sizes, bytes (paper: 3 x 512 KiB).
+    pub w_buf_bytes: usize,
+    pub a_buf_bytes: usize,
+    pub o_buf_bytes: usize,
+    /// Sustained DRAM bandwidth, bytes/s.  25.6 GB/s — a single LPDDR5
+    /// channel, the class of memory a 6.3 mm^2 28 nm edge accelerator pairs
+    /// with.  All designs in the comparison share this value, so speedup
+    /// *ratios* are insensitive to it (decode is bandwidth-bound everywhere).
+    pub dram_bytes_per_s: f64,
+    /// Stored bits per weight element in full mode (15 data bits stored in
+    /// 16; traffic is 2 bytes per paper §IV-C).
+    pub full_weight_bytes: f64,
+    /// Stored bits per weight element in quantize mode: the 4-bit W_q plus
+    /// the 1/128-amortized group scale -> 4.25 bits. The paper streams the
+    /// 5-bit [sign|code|flag-slot] lane, so we use 5 bits = 0.625 B.
+    pub quant_weight_bytes: f64,
+    /// KV cache element bytes (FP16).
+    pub kv_bytes: f64,
+    /// VPU lanes (softmax/norm throughput, elements per cycle).
+    pub vpu_lanes: usize,
+    /// Pipeline fill overhead per GEMM tile, cycles.
+    pub tile_fill_cycles: u64,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        Self {
+            pe_rows: 32,
+            pe_cols: 32,
+            quant_lanes: 3,
+            freq_hz: 500e6,
+            w_buf_bytes: 512 << 10,
+            a_buf_bytes: 512 << 10,
+            o_buf_bytes: 512 << 10,
+            dram_bytes_per_s: 25.6e9,
+            full_weight_bytes: 2.0,
+            quant_weight_bytes: 0.625,
+            kv_bytes: 2.0,
+            vpu_lanes: 128,
+            tile_fill_cycles: 64,
+        }
+    }
+}
+
+impl AccelConfig {
+    pub fn pes(&self) -> usize {
+        self.pe_rows * self.pe_cols
+    }
+
+    /// MACs per cycle in full mode.
+    pub fn full_macs_per_cycle(&self) -> u64 {
+        self.pes() as u64
+    }
+
+    /// MACs per cycle in quantize mode (3 weights per PE).
+    pub fn quant_macs_per_cycle(&self) -> u64 {
+        (self.pes() * self.quant_lanes) as u64
+    }
+
+    /// DRAM bytes deliverable per clock cycle.
+    pub fn dram_bytes_per_cycle(&self) -> f64 {
+        self.dram_bytes_per_s / self.freq_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_instance_numbers() {
+        let c = AccelConfig::default();
+        assert_eq!(c.pes(), 1024);
+        assert_eq!(c.full_macs_per_cycle(), 1024);
+        assert_eq!(c.quant_macs_per_cycle(), 3072);
+        // 25.6 GB/s at 500 MHz = 51.2 B/cycle.
+        assert!((c.dram_bytes_per_cycle() - 51.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quant_mode_bandwidth_advantage_is_3_2x() {
+        let c = AccelConfig::default();
+        let ratio = c.full_weight_bytes / c.quant_weight_bytes;
+        assert!((ratio - 3.2).abs() < 1e-9, "weight-stream ratio {ratio}");
+    }
+}

@@ -1,0 +1,154 @@
+//! Model geometries for hardware evaluation.
+//!
+//! The engine measures accept rates / draft lengths on the tiny trained
+//! analogs; the accelerator replays those traces against the *paper-scale*
+//! dimensions below (the actual Llama/Vicuna geometries), so the hardware
+//! numbers in Tables III–IV and Figs. 7–9 are computed for the models the
+//! paper evaluates.
+
+/// Transformer geometry as seen by the accelerator (linear shapes only).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelDims {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    /// MLP hidden size (SwiGLU: three d_model x d_ff projections).
+    pub d_ff: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub vocab: usize,
+}
+
+impl ModelDims {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Per-token linear GEMV shapes (k, n), weights streamed once each.
+    pub fn token_linears(&self) -> Vec<(usize, usize)> {
+        let d = self.d_model;
+        let kv = self.n_kv_heads * self.head_dim();
+        let mut v = Vec::new();
+        for _ in 0..self.n_layers {
+            v.push((d, d)); // wq
+            v.push((d, kv)); // wk
+            v.push((d, kv)); // wv
+            v.push((d, d)); // wo
+            v.push((d, self.d_ff)); // gate
+            v.push((d, self.d_ff)); // up
+            v.push((self.d_ff, d)); // down
+        }
+        v.push((d, self.vocab)); // lm head
+        v
+    }
+
+    /// Total weight elements in the linear layers.
+    pub fn weight_elems(&self) -> u64 {
+        self.token_linears().iter().map(|&(k, n)| (k * n) as u64).sum()
+    }
+
+    /// KV bytes read for one token's attention at context length `ctx`
+    /// (keys + values, all layers, FP16).
+    pub fn kv_read_bytes(&self, ctx: usize, kv_elem_bytes: f64) -> f64 {
+        let kv_width = self.n_kv_heads * self.head_dim();
+        2.0 * self.n_layers as f64 * ctx as f64 * kv_width as f64 * kv_elem_bytes
+    }
+}
+
+/// The five paper models at their real published geometries.
+pub const PAPER_MODELS: [ModelDims; 5] = [
+    ModelDims {
+        name: "Vicuna-7b",
+        n_layers: 32,
+        d_model: 4096,
+        d_ff: 11008,
+        n_heads: 32,
+        n_kv_heads: 32,
+        vocab: 32000,
+    },
+    ModelDims {
+        name: "Llama2-7b",
+        n_layers: 32,
+        d_model: 4096,
+        d_ff: 11008,
+        n_heads: 32,
+        n_kv_heads: 32,
+        vocab: 32000,
+    },
+    ModelDims {
+        name: "Llama3.1-8b",
+        n_layers: 32,
+        d_model: 4096,
+        d_ff: 14336,
+        n_heads: 32,
+        n_kv_heads: 8,
+        vocab: 128256,
+    },
+    ModelDims {
+        name: "Llama3.2-3b",
+        n_layers: 28,
+        d_model: 3072,
+        d_ff: 8192,
+        n_heads: 24,
+        n_kv_heads: 8,
+        vocab: 128256,
+    },
+    ModelDims {
+        name: "Llama2-13b",
+        n_layers: 40,
+        d_model: 5120,
+        d_ff: 13824,
+        n_heads: 40,
+        n_kv_heads: 40,
+        vocab: 32000,
+    },
+];
+
+/// Look up paper dims by the analog name used in the manifest
+/// (e.g. "vicuna-7b-tiny" -> Vicuna-7b) or by the paper name itself.
+pub fn paper_dims(name: &str) -> Option<&'static ModelDims> {
+    let needle = name.trim_end_matches("-tiny").to_ascii_lowercase().replace('_', ".");
+    PAPER_MODELS.iter().find(|m| m.name.to_ascii_lowercase() == needle)
+}
+
+/// Dims of a tiny trained analog, from its manifest config (for running the
+/// accel model against the testbed-scale geometry when wanted).
+pub fn tiny_dims(cfg: &crate::model::ModelConfig) -> ModelDims {
+    ModelDims {
+        name: "tiny",
+        n_layers: cfg.n_layers,
+        d_model: cfg.d_model,
+        d_ff: cfg.d_ff,
+        n_heads: cfg.n_heads,
+        n_kv_heads: cfg.n_heads,
+        vocab: cfg.vocab,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama2_7b_parameter_count_is_right() {
+        let m = paper_dims("llama2-7b-tiny").unwrap();
+        let linear = m.weight_elems();
+        // Linear params of Llama2-7B ~ 6.5e9 (6.74B total incl. embeddings).
+        assert!(linear > 6_200_000_000 && linear < 6_800_000_000, "{linear}");
+    }
+
+    #[test]
+    fn lookup_accepts_both_name_forms() {
+        assert!(paper_dims("Vicuna-7b").is_some());
+        assert!(paper_dims("vicuna-7b-tiny").is_some());
+        assert!(paper_dims("llama3.1-8b-tiny").is_some());
+        assert!(paper_dims("nope").is_none());
+    }
+
+    #[test]
+    fn gqa_shrinks_kv_traffic() {
+        let mha = paper_dims("Llama2-7b").unwrap();
+        let gqa = paper_dims("Llama3.1-8b").unwrap();
+        assert!(gqa.kv_read_bytes(1024, 2.0) < mha.kv_read_bytes(1024, 2.0));
+    }
+}

@@ -1,0 +1,34 @@
+//! SPEQ accelerator model (§IV) — cycle accounting + 28 nm energy/area.
+//!
+//! The simulator reproduces the paper's hardware evaluation:
+//!
+//! * [`config`] — the accelerator instance of Fig. 4: a 32×32 reconfigurable
+//!   PE array (8 tiles × 128 PEs), 3 × 512 KiB SRAM buffers, a DRAM channel,
+//!   SFU/VPU, and the BSFP decoders.
+//! * [`pe`] — the two PE-array modes of Fig. 6: full (1 FP16 MAC/PE/cycle)
+//!   and quantize (3 exponent-add MACs/PE/cycle on 5-bit weights).
+//! * [`sim`] — per-op cycle accounting (`max(compute, DRAM)` per tile, the
+//!   decode stage being weight-bandwidth-bound per Fig. 2(a)), composed into
+//!   decode/verify/prefill steps and full [`crate::specdec::SpecTrace`]
+//!   replays.
+//! * [`energy`] — 28 nm per-op energies calibrated against Table IV's
+//!   breakdown; area uses the paper's synthesis split.
+//! * [`dims`] — the *paper-scale* model geometries (Llama2-7B etc.): traces
+//!   measured on the tiny analogs are replayed against real-model dimensions
+//!   to regenerate Tables III–IV and Figs. 7–9.
+//! * [`baselines`] — Olive-4/8b, Tender-4/8b, the FP16 array, and the
+//!   Medusa/Swift analytic points of §V-D.
+
+mod baselines;
+mod config;
+mod dims;
+mod energy;
+mod pe;
+mod sim;
+
+pub use baselines::{speedup_vs_fp16, BaselineKind, DesignPoint, SPECDEC_BASELINES};
+pub use config::AccelConfig;
+pub use dims::{paper_dims, tiny_dims, ModelDims, PAPER_MODELS};
+pub use energy::{power_report, table4_area, EnergyBreakdown, EnergyParams, PowerReport};
+pub use pe::{ArrayMode, PeArray};
+pub use sim::{Accel, OpCost, TraceCost};

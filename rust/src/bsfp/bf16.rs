@@ -1,0 +1,148 @@
+//! BF16 model support (paper §IV-A).
+//!
+//! "For models represented in the BF16 format, we first round the exponent
+//! values that are smaller than 112 up to 112.  Subsequently, a similar
+//! remapping process is applied to the exponent component. ... Furthermore,
+//! we pad the mantissa component with three zeros.  This results in weights
+//! being represented in the same format as FP16 (S1E5M10)."
+//!
+//! BF16 is S1E8M7 with bias 127.  Weight-decayed LLM weights satisfy
+//! |w| < 2, i.e. biased exponent <= 127+0 = 127; exponents below 112
+//! (values < 2^-15, denormal territory for FP16) are rounded up (clamped in
+//! magnitude) — a no-op for any weight that matters.  After the shift by
+//! 112 the exponent fits 5 bits with the same wasted-top-bit property, and
+//! the whole FP16 BSFP pipeline applies unchanged.
+
+use super::fp16::join_fields;
+use super::fp16::Fp16Fields;
+
+/// BF16 bit pattern -> the S1E5M10 word the SPEQ datapath consumes.
+///
+/// Exponents `< 112` round up to 112 (the paper's clamp); exponents
+/// `> 127` (|w| >= 2) must have been removed by the Algorithm-1 pre-scale
+/// and panic in debug builds.
+#[inline]
+pub fn bf16_to_speq_fp16(bits: u16) -> u16 {
+    let sign = ((bits >> 15) & 1) as u8;
+    let exp8 = ((bits >> 7) & 0xff) as i32;
+    let man7 = bits & 0x7f;
+    debug_assert!(exp8 <= 127, "BF16 exponent {exp8} > 127: Algorithm-1 pre-scale missing");
+    let (exp5, man) = if exp8 == 0 && man7 == 0 {
+        (0u8, 0u16) // preserve signed zero
+    } else if exp8 <= 112 {
+        // "Round up to 112": value becomes 2^-15 * (1 + m/128).  FP16's
+        // exponent field 0 is subnormal (no implicit 1), so the implicit
+        // bit folds into the mantissa: 2^-14 * (0.5 + m/256) with
+        // mantissa 512 + 4m — exact for every m.
+        (0u8, 512 + 4 * (man7 as u16))
+    } else {
+        (((exp8 - 112) as u8) & 0x1f, (man7 as u16) << 3) // pad 3 zero bits
+    };
+    join_fields(Fp16Fields { sign, exp: exp5, man })
+}
+
+/// Inverse for the exact (non-clamped) range: S1E5M10 word -> BF16 bits.
+#[inline]
+pub fn speq_fp16_to_bf16(bits: u16) -> u16 {
+    let sign = (bits >> 15) & 1;
+    let exp5 = ((bits >> 10) & 0x1f) as i32;
+    let man10 = bits & 0x3ff;
+    if exp5 == 0 {
+        if man10 == 0 {
+            return sign << 15; // signed zero
+        }
+        // Subnormal encoding of the exp-112 band: man10 = 512 + 4*m.
+        debug_assert!(man10 >= 512 && (man10 - 512) % 4 == 0, "not a converted BF16 subnormal");
+        return (sign << 15) | (112u16 << 7) | ((man10 - 512) / 4);
+    }
+    debug_assert_eq!(man10 & 0x7, 0, "mantissa tail bits lost in BF16 round-trip");
+    let exp8 = (exp5 + 112) as u16;
+    (sign << 15) | (exp8 << 7) | (man10 >> 3)
+}
+
+/// Convert a BF16 tensor (raw bits) to the FP16-format bits BSFP consumes.
+pub fn convert_bf16_tensor(bits: &[u16]) -> Vec<u16> {
+    bits.iter().map(|&b| bf16_to_speq_fp16(b)).collect()
+}
+
+/// f32 -> BF16 bits (round-to-nearest-even), for building test tensors.
+pub fn f32_to_bf16(v: f32) -> u16 {
+    let b = v.to_bits();
+    let lsb = (b >> 16) & 1;
+    let rounded = b.wrapping_add(0x7fff + lsb);
+    (rounded >> 16) as u16
+}
+
+/// BF16 bits -> f32 (exact).
+pub fn bf16_to_f32(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsfp::fp16::f16_bits_to_f32;
+    use crate::bsfp::remap::{decode_full_bits, encode_bits};
+
+    #[test]
+    fn normal_range_converts_exactly() {
+        // BF16 values with exponent in [112, 127] convert to FP16 exactly
+        // (7 mantissa bits always fit in 10).
+        for v in [1.0f32, -0.5, 0.0625, 1.5, -1.9921875, 3.0517578125e-5] {
+            let bf = f32_to_bf16(v);
+            let fp = bf16_to_speq_fp16(bf);
+            assert_eq!(f16_bits_to_f32(fp), bf16_to_f32(bf), "value {v}");
+        }
+    }
+
+    #[test]
+    fn tiny_exponents_round_up_to_112() {
+        let tiny = f32_to_bf16(1e-9); // exponent << 112
+        let fp = bf16_to_speq_fp16(tiny);
+        let back = f16_bits_to_f32(fp);
+        // Clamped into the 2^-15 band: small but non-zero.
+        assert!(back.abs() >= 2.0f32.powi(-15) && back.abs() < 6.2e-5,
+                "clamped magnitude: {back}");
+    }
+
+    #[test]
+    fn signed_zero_preserved() {
+        assert_eq!(bf16_to_speq_fp16(f32_to_bf16(0.0)) & 0x7fff, 0);
+        assert_eq!(bf16_to_speq_fp16(f32_to_bf16(-0.0)) >> 15, 1);
+    }
+
+    #[test]
+    fn bsfp_pipeline_losslessly_roundtrips_converted_bf16() {
+        // The paper's property: converted BF16 weights flow through the
+        // same quantize/reconstruct path, bit-exactly.
+        let mut rng = crate::util::rng::Rng::seed_from_u64(42);
+        for _ in 0..1000 {
+            let v = (rng.gen_f32() - 0.5) * 3.9;
+            let bf = f32_to_bf16(v);
+            if bf16_to_f32(bf).abs() >= 2.0 || bf16_to_f32(bf).abs() < 3.1e-5 {
+                continue;
+            }
+            let fp = bf16_to_speq_fp16(bf);
+            let rec = decode_full_bits(encode_bits(fp));
+            assert_eq!(rec, fp);
+            // And back to BF16 exactly (mantissa tail is still zero).
+            assert_eq!(speq_fp16_to_bf16(rec), bf);
+        }
+    }
+
+    #[test]
+    fn exhaustive_bf16_in_range_roundtrip() {
+        // Every BF16 pattern with exponent in [112, 127]: convert -> BSFP
+        // encode -> decode -> convert back == identity.
+        for sign in 0..2u16 {
+            for exp in 112..=127u16 {
+                for man in 0..128u16 {
+                    let bf = (sign << 15) | (exp << 7) | man;
+                    let fp = bf16_to_speq_fp16(bf);
+                    let rec = decode_full_bits(encode_bits(fp));
+                    assert_eq!(speq_fp16_to_bf16(rec), bf, "bf16 {bf:#06x}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Gate-level emulation of the Fig. 5 BSFP decoders.
+//!
+//! These mirror the hardware datapath (NOR gate + bit rewiring for the draft
+//! decoder, MUX-based reconstruction for the full decoder) rather than the
+//! LUTs in [`super::remap`].  Tests prove both formulations equivalent — the
+//! same argument the paper makes for the decoder's 3.5% area cost being the
+//! only overhead of remapping.  The [`DecoderUnit`] also counts gate-level
+//! activity so the accelerator energy model (Table IV) can charge it.
+
+use super::remap::{decode_draft_exp, decode_full_bits, BsfpCode};
+
+/// Fig. 5(a): draft decoder as the paper's gate structure.
+///
+/// Input: 3-bit code.  `NOR(bit0, bit2)` detects the stolen codes 3'b000 and
+/// 3'b010; if set, the output is wired `[1, 0, c1, 1]` (i.e. 9 or 11 with
+/// `c1` selecting), otherwise the code is shifted left ("a zero is appended").
+#[inline]
+pub fn decode_draft_gate(code: u8) -> u8 {
+    let b0 = code & 1;
+    let b1 = (code >> 1) & 1;
+    let b2 = (code >> 2) & 1;
+    let nor = ((b0 | b2) ^ 1) & 1;
+    if nor == 1 {
+        // [bit3, bit2, bit1, bit0] = [1, 0, c1, 1]
+        (1 << 3) | (b1 << 1) | 1
+    } else {
+        code << 1
+    }
+}
+
+/// Fig. 5(b): full decoder as the paper's MUX structure.
+///
+/// Inputs: 3-bit code + 2-bit `W_r` exponent part `[flag, e0]`.  If `flag`
+/// is 0 the parts concatenate directly; otherwise a 2-in/3-out MUX keyed on
+/// `(c1, c0)` produces `E[3:1]` (with `E[4] = 0` always), concatenated with
+/// `e0`.
+#[inline]
+pub fn decode_full_gate(code: u8, flag: u8, e0: u8) -> u8 {
+    if flag & 1 == 0 {
+        (code << 1) | (e0 & 1)
+    } else {
+        let mux = match code & 0x3 {
+            0b00 => 0b100, // stolen 000: E = 9  -> E[3:1] = 100
+            0b01 => 0b000, // rounded {0,1}:     E[3:1] = 000
+            0b10 => 0b101, // stolen 010: E = 11 -> E[3:1] = 101
+            _ => 0b010,    // rounded {4,5}:     E[3:1] = 010
+        };
+        (mux << 1) | (e0 & 1)
+    }
+}
+
+/// A decoder unit instance with activity counters for the energy model.
+#[derive(Debug, Default, Clone)]
+pub struct DecoderUnit {
+    pub draft_decodes: u64,
+    pub full_decodes: u64,
+    /// How many decodes hit the flagged (lookup) path.
+    pub flagged: u64,
+}
+
+impl DecoderUnit {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Decode a draft weight (quantize mode), counting activity.
+    pub fn draft(&mut self, w_q: u8) -> (u8, u8) {
+        self.draft_decodes += 1;
+        let sign = (w_q >> 3) & 1;
+        let qexp = decode_draft_gate(w_q & 0x7);
+        (sign, qexp)
+    }
+
+    /// Decode a full weight (full mode), counting activity.
+    pub fn full(&mut self, c: BsfpCode) -> u16 {
+        self.full_decodes += 1;
+        if (c.w_r >> 11) & 1 == 1 {
+            self.flagged += 1;
+        }
+        decode_full_bits(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsfp::remap::{encode_bits, CODE_TO_QEXP};
+
+    #[test]
+    fn gate_draft_decoder_equals_lut() {
+        for code in 0..8u8 {
+            assert_eq!(decode_draft_gate(code), CODE_TO_QEXP[code as usize], "code {code}");
+        }
+        for w_q in 0..16u8 {
+            let mut unit = DecoderUnit::new();
+            assert_eq!(unit.draft(w_q), decode_draft_exp(w_q));
+        }
+    }
+
+    #[test]
+    fn gate_full_decoder_equals_lut_for_all_valid_patterns() {
+        for s in 0..2u16 {
+            for e in 0..16u16 {
+                for m in 0..1024u16 {
+                    let bits = (s << 15) | (e << 10) | m;
+                    let c = encode_bits(bits);
+                    let code = c.w_q & 0x7;
+                    let flag = ((c.w_r >> 11) & 1) as u8;
+                    let e0 = ((c.w_r >> 10) & 1) as u8;
+                    let exp = decode_full_gate(code, flag, e0);
+                    assert_eq!(exp as u16, e, "bits {bits:#06x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decoder_unit_counts_activity() {
+        let mut unit = DecoderUnit::new();
+        let c = encode_bits(0x0000); // E=0 -> flagged
+        unit.full(c);
+        unit.draft(c.w_q);
+        assert_eq!(unit.full_decodes, 1);
+        assert_eq!(unit.draft_decodes, 1);
+        assert_eq!(unit.flagged, 1);
+    }
+}

@@ -1,0 +1,76 @@
+//! FP16 bit-level utilities (substrate S1).
+
+/// Decomposed FP16 bit pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fp16Fields {
+    pub sign: u8,
+    /// Biased exponent, 5 bits `[0, 31]`.
+    pub exp: u8,
+    /// Mantissa, 10 bits.
+    pub man: u16,
+}
+
+/// Split an FP16 bit pattern into (sign, exponent, mantissa).
+#[inline]
+pub fn split_fields(bits: u16) -> Fp16Fields {
+    Fp16Fields { sign: (bits >> 15) as u8, exp: ((bits >> 10) & 0x1f) as u8, man: bits & 0x3ff }
+}
+
+/// Reassemble an FP16 bit pattern.
+#[inline]
+pub fn join_fields(f: Fp16Fields) -> u16 {
+    ((f.sign as u16) << 15) | ((f.exp as u16) << 10) | (f.man & 0x3ff)
+}
+
+/// f32 -> FP16 bit pattern (round-to-nearest-even, matching numpy/IEEE).
+#[inline]
+pub fn f32_to_f16_bits(v: f32) -> u16 {
+    crate::util::f16::f32_to_f16(v)
+}
+
+/// FP16 bit pattern -> f32 (exact).
+#[inline]
+pub fn f16_bits_to_f32(bits: u16) -> f32 {
+    crate::util::f16::f16_to_f32(bits)
+}
+
+/// Histogram of the biased exponent values `[0, 31]` — the Fig. 2(c)
+/// analysis that motivates BSFP: trained LLM weights leave `[16, 31]` empty.
+pub fn exponent_histogram(values: impl IntoIterator<Item = f32>) -> [u64; 32] {
+    let mut hist = [0u64; 32];
+    for v in values {
+        let f = split_fields(f32_to_f16_bits(v));
+        hist[f.exp as usize] += 1;
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_join_roundtrip_all_patterns() {
+        for bits in 0..=u16::MAX {
+            assert_eq!(join_fields(split_fields(bits)), bits);
+        }
+    }
+
+    #[test]
+    fn f16_conversion_matches_known_values() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f16_bits_to_f32(0x3c00), 1.0);
+        // 1.999 (the Algorithm-1 target) fits below exponent 16.
+        let f = split_fields(f32_to_f16_bits(1.999));
+        assert_eq!(f.exp, 15);
+    }
+
+    #[test]
+    fn exponent_histogram_confined_for_small_values() {
+        let vals = [0.5f32, -0.25, 0.03, 1.5, -1.999, 0.0001];
+        let hist = exponent_histogram(vals.iter().copied());
+        assert_eq!(hist[16..].iter().sum::<u64>(), 0);
+        assert_eq!(hist.iter().sum::<u64>(), vals.len() as u64);
+    }
+}

@@ -1,0 +1,39 @@
+//! Bit-Sharing Floating Point (BSFP) — the paper's core algorithm.
+//!
+//! Mirrors `python/compile/bsfp.py` bit-for-bit (cross-checked against the
+//! exhaustive golden vectors in `artifacts/goldens.bin`).
+//!
+//! Layout per FP16 weight `s eeeee mmmmmmmmmm` (exponent confined to
+//! `[0, 15]` after the Algorithm-1 pre-scale — the paper's Fig. 2(c)
+//! observation that the top exponent bit of trained LLM weights is wasted):
+//!
+//! ```text
+//!   W_q (4 bits)  = [sign | c2 c1 c0]      remapped E3M0 code (Fig. 3)
+//!   W_r (12 bits) = [flag | e0 | m9..m0]   remainder; flag sits where the
+//!                                          wasted e4 bit was
+//! ```
+//!
+//! `W_q ∥ W_r` is exactly 16 bits (zero storage overhead) and reconstructs
+//! the original FP16 value losslessly through the Fig. 5(b) decoder.  `W_q`
+//! alone, with per-128-group Eq. 4 scales, is the 4-bit draft model.
+
+mod bf16;
+mod codec;
+mod decoder;
+mod fp16;
+mod pack;
+mod remap;
+
+pub use bf16::{bf16_to_f32, bf16_to_speq_fp16, convert_bf16_tensor, f32_to_bf16, speq_fp16_to_bf16};
+pub use codec::{
+    algorithm1_prescale, encode_tensor, eq4_scales, quantize_tensor, QuantizedTensor,
+};
+pub use decoder::{decode_draft_gate, decode_full_gate, DecoderUnit};
+pub use fp16::{
+    exponent_histogram, f16_bits_to_f32, f32_to_f16_bits, split_fields, Fp16Fields,
+};
+pub use pack::{pack_nibbles, unpack_nibbles};
+pub use remap::{
+    decode_draft_exp, decode_full_bits, encode_bits, BsfpCode, CODE_TO_QEXP, FP16_BIAS,
+    GROUP_SIZE, REMAP_CODE, REMAP_FLAG,
+};

@@ -1,0 +1,60 @@
+//! Nibble packing for `W_q` streams.
+//!
+//! Layout matches `QuantizedTensor.packed_wq` on the Python side and the
+//! Pallas `qmatmul` kernel's expectation: element `2i` in the low nibble,
+//! `2i+1` in the high nibble, packed along the *in* dimension (axis 0) of a
+//! column-major-by-row (in, out) weight.
+
+/// Pack a (k, n) row-major `W_q` matrix (4 significant bits per entry) into
+/// a (k/2, n) row-major byte matrix. `k` must be even.
+pub fn pack_nibbles(w_q: &[u8], k: usize, n: usize) -> Vec<u8> {
+    assert_eq!(w_q.len(), k * n, "w_q length mismatch");
+    assert_eq!(k % 2, 0, "in-dim must be even to nibble-pack");
+    let mut out = vec![0u8; k / 2 * n];
+    for kp in 0..k / 2 {
+        let lo_row = &w_q[(2 * kp) * n..(2 * kp + 1) * n];
+        let hi_row = &w_q[(2 * kp + 1) * n..(2 * kp + 2) * n];
+        let dst = &mut out[kp * n..(kp + 1) * n];
+        for j in 0..n {
+            dst[j] = (lo_row[j] & 0xf) | ((hi_row[j] & 0xf) << 4);
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_nibbles`].
+pub fn unpack_nibbles(packed: &[u8], k: usize, n: usize) -> Vec<u8> {
+    assert_eq!(packed.len(), k / 2 * n, "packed length mismatch");
+    let mut out = vec![0u8; k * n];
+    for kp in 0..k / 2 {
+        let src = &packed[kp * n..(kp + 1) * n];
+        for j in 0..n {
+            out[(2 * kp) * n + j] = src[j] & 0xf;
+            out[(2 * kp + 1) * n + j] = (src[j] >> 4) & 0xf;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let k = 6;
+        let n = 3;
+        let w: Vec<u8> = (0..k * n).map(|i| (i % 16) as u8).collect();
+        let packed = pack_nibbles(&w, k, n);
+        assert_eq!(packed.len(), k / 2 * n);
+        assert_eq!(unpack_nibbles(&packed, k, n), w);
+    }
+
+    #[test]
+    fn layout_matches_python_convention() {
+        // w[0][0]=0xA (low nibble), w[1][0]=0x5 (high nibble) -> 0x5A.
+        let w = vec![0xA, 0x5];
+        let packed = pack_nibbles(&w, 2, 1);
+        assert_eq!(packed, vec![0x5A]);
+    }
+}

@@ -1,0 +1,157 @@
+//! Fig. 3 exponent remapping tables and the scalar encode/decode primitives.
+
+use super::fp16::{join_fields, split_fields, Fp16Fields};
+
+/// FP16 exponent bias.
+pub const FP16_BIAS: i32 = 15;
+/// Quantization group size (paper §III-B: fine-grained groups of 128).
+pub const GROUP_SIZE: usize = 128;
+
+/// Remapped E3M0 code per original exponent `E ∈ [0, 15]` (Fig. 3).
+///
+/// Codes 3'b000 / 3'b010 are stolen for the critical exponents 9 / 11; the
+/// low-magnitude pairs {0,1} and {4,5} round up into codes 001 / 011.
+pub const REMAP_CODE: [u8; 16] = [1, 1, 1, 1, 3, 3, 3, 3, 4, 0, 5, 2, 6, 6, 7, 7];
+
+/// Remap flag per original exponent: set when the stored bits differ from
+/// the original (the wasted-bit correction signal).
+pub const REMAP_FLAG: [u8; 16] = [1, 1, 0, 0, 1, 1, 0, 0, 0, 1, 0, 1, 0, 0, 0, 0];
+
+/// Fig. 5(a) draft decoder LUT: 3-bit code -> quantized exponent value.
+pub const CODE_TO_QEXP: [u8; 8] = [9, 2, 11, 6, 8, 10, 12, 14];
+
+/// Fig. 5(b) full decoder MUX: for flagged values, keyed by `(c1, c0)`,
+/// the top exponent bits `E[4:1]` (then `E = mux << 1 | e0`).
+pub const FLAG_MUX_EHIGH: [u8; 4] = [4, 0, 5, 2];
+
+/// One encoded weight: `(W_q, W_r)` as raw small integers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BsfpCode {
+    /// 4 significant bits: `[sign | c2 c1 c0]`.
+    pub w_q: u8,
+    /// 12 significant bits: `[flag | e0 | m9..m0]`.
+    pub w_r: u16,
+}
+
+/// Encode one FP16 bit pattern. Panics in debug builds if `exp > 15`
+/// (callers must apply the Algorithm-1 pre-scale first).
+#[inline]
+pub fn encode_bits(bits: u16) -> BsfpCode {
+    let Fp16Fields { sign, exp, man } = split_fields(bits);
+    debug_assert!(exp <= 15, "exponent {exp} > 15: Algorithm-1 pre-scale missing");
+    let exp = (exp & 0xf) as usize;
+    let code = REMAP_CODE[exp];
+    let flag = REMAP_FLAG[exp] as u16;
+    let e0 = (exp as u16) & 1;
+    BsfpCode { w_q: (sign << 3) | code, w_r: (flag << 11) | (e0 << 10) | man }
+}
+
+/// Fig. 5(b): losslessly reconstruct the original FP16 bit pattern.
+#[inline]
+pub fn decode_full_bits(c: BsfpCode) -> u16 {
+    let sign = (c.w_q >> 3) & 1;
+    let code = c.w_q & 0x7;
+    let flag = (c.w_r >> 11) & 1;
+    let e0 = ((c.w_r >> 10) & 1) as u8;
+    let man = c.w_r & 0x3ff;
+    let ehigh = if flag == 1 { FLAG_MUX_EHIGH[(code & 0x3) as usize] } else { code };
+    let exp = (ehigh << 1) | e0;
+    join_fields(Fp16Fields { sign, exp, man })
+}
+
+/// Fig. 5(a): draft decode — `(sign, quantized exponent value)`.
+#[inline]
+pub fn decode_draft_exp(w_q: u8) -> (u8, u8) {
+    ((w_q >> 3) & 1, CODE_TO_QEXP[(w_q & 0x7) as usize])
+}
+
+/// Unscaled draft value `(-1)^s · 2^(Q(E) - 15)`.
+#[inline]
+pub fn draft_value(w_q: u8) -> f32 {
+    let (sign, qexp) = decode_draft_exp(w_q);
+    let mag = (qexp as i32 - FP16_BIAS) as f32;
+    let v = mag.exp2();
+    if sign == 1 {
+        -v
+    } else {
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsfp::fp16::{f16_bits_to_f32, f32_to_f16_bits};
+
+    /// Fig. 3's literal rows: original exponent -> (stored 5-bit field, value).
+    #[test]
+    fn fig3_remap_rows() {
+        // (E, expected quantized value, expected flag)
+        let rows = [
+            (0u8, 2u8, 1u8),
+            (1, 2, 1),
+            (2, 2, 0),
+            (3, 2, 0),
+            (4, 6, 1),
+            (5, 6, 1),
+            (6, 6, 0),
+            (7, 6, 0),
+            (8, 8, 0),
+            (9, 9, 1),
+            (10, 10, 0),
+            (11, 11, 1),
+            (12, 12, 0),
+            (13, 12, 0),
+            (14, 14, 0),
+            (15, 14, 0),
+        ];
+        for (e, qval, flag) in rows {
+            let code = REMAP_CODE[e as usize];
+            assert_eq!(CODE_TO_QEXP[code as usize], qval, "E={e}");
+            assert_eq!(REMAP_FLAG[e as usize], flag, "E={e}");
+        }
+    }
+
+    #[test]
+    fn lossless_roundtrip_all_valid_patterns() {
+        // Every FP16 pattern with exponent <= 15 (sign x 16 exps x 1024 mans).
+        for s in 0..2u16 {
+            for e in 0..16u16 {
+                for m in 0..1024u16 {
+                    let bits = (s << 15) | (e << 10) | m;
+                    assert_eq!(decode_full_bits(encode_bits(bits)), bits);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stolen_codes_decode_to_critical_exponents() {
+        // Codes 3'b000 and 3'b010 are the remapped 9 and 11.
+        assert_eq!(decode_draft_exp(0b0000).1, 9);
+        assert_eq!(decode_draft_exp(0b0010).1, 11);
+        // Sign bit passes through.
+        assert_eq!(decode_draft_exp(0b1000), (1, 9));
+    }
+
+    #[test]
+    fn draft_value_sign_and_scale() {
+        // code 4 => qexp 8 => 2^-7
+        assert_eq!(draft_value(0b0100), (2.0f32).powi(-7));
+        assert_eq!(draft_value(0b1100), -(2.0f32).powi(-7));
+    }
+
+    #[test]
+    fn draft_exponent_matches_quantized_fp16_value() {
+        // For an in-range weight, the draft magnitude is 2^(Q(E)-15) where
+        // Q(E) follows the remap table.
+        let w = 0.037_f32; // exp ~ 10
+        let bits = f32_to_f16_bits(w);
+        let e = super::super::fp16::split_fields(bits).exp;
+        let c = encode_bits(bits);
+        let (_, qexp) = decode_draft_exp(c.w_q);
+        assert_eq!(qexp, CODE_TO_QEXP[REMAP_CODE[e as usize] as usize]);
+        // And reconstruction is exact.
+        assert_eq!(f16_bits_to_f32(decode_full_bits(c)), f16_bits_to_f32(bits));
+    }
+}

@@ -1,0 +1,98 @@
+//! Serving metrics: counters + latency percentiles.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Shared metrics sink (cheap atomic counters; latencies under a mutex).
+#[derive(Default)]
+pub struct Metrics {
+    pub requests_submitted: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub requests_rejected: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub draft_steps: AtomicU64,
+    pub verify_passes: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+    exec_us: Mutex<Vec<u64>>,
+}
+
+/// Point-in-time view with computed percentiles.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub tokens: u64,
+    pub draft_steps: u64,
+    pub verify_passes: u64,
+    pub latency_p50_ms: f64,
+    pub latency_p95_ms: f64,
+    pub latency_p99_ms: f64,
+    pub exec_p50_ms: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_completion(&self, tokens: u64, drafts: u64, verifies: u64, latency_s: f64, exec_s: f64) {
+        self.requests_completed.fetch_add(1, Ordering::Relaxed);
+        self.tokens_generated.fetch_add(tokens, Ordering::Relaxed);
+        self.draft_steps.fetch_add(drafts, Ordering::Relaxed);
+        self.verify_passes.fetch_add(verifies, Ordering::Relaxed);
+        self.latencies_us.lock().unwrap().push((latency_s * 1e6) as u64);
+        self.exec_us.lock().unwrap().push((exec_s * 1e6) as u64);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let pct = |v: &mut Vec<u64>, p: f64| -> f64 {
+            if v.is_empty() {
+                return 0.0;
+            }
+            v.sort_unstable();
+            let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
+            v[idx] as f64 / 1e3
+        };
+        let mut lat = self.latencies_us.lock().unwrap().clone();
+        let mut exec = self.exec_us.lock().unwrap().clone();
+        MetricsSnapshot {
+            submitted: self.requests_submitted.load(Ordering::Relaxed),
+            completed: self.requests_completed.load(Ordering::Relaxed),
+            rejected: self.requests_rejected.load(Ordering::Relaxed),
+            tokens: self.tokens_generated.load(Ordering::Relaxed),
+            draft_steps: self.draft_steps.load(Ordering::Relaxed),
+            verify_passes: self.verify_passes.load(Ordering::Relaxed),
+            latency_p50_ms: pct(&mut lat, 0.50),
+            latency_p95_ms: pct(&mut lat, 0.95),
+            latency_p99_ms: pct(&mut lat, 0.99),
+            exec_p50_ms: pct(&mut exec, 0.50),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_from_recorded_latencies() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record_completion(10, 5, 2, i as f64 / 1000.0, i as f64 / 2000.0);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.tokens, 1000);
+        assert!((s.latency_p50_ms - 50.0).abs() <= 2.0, "{}", s.latency_p50_ms);
+        assert!((s.latency_p95_ms - 95.0).abs() <= 2.0, "{}", s.latency_p95_ms);
+        assert!(s.exec_p50_ms < s.latency_p50_ms);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.latency_p50_ms, 0.0);
+    }
+}

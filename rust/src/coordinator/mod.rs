@@ -1,0 +1,29 @@
+//! Serving coordinator — the production wrapper around the SPEQ engine.
+//!
+//! Architecture (vLLM-router-like, scaled to a CPU testbed):
+//!
+//! ```text
+//!   clients ──submit──► RequestQueue (bounded, priority FIFO)
+//!                           │ pop (scheduler policy)
+//!              ┌────────────┼────────────┐
+//!           worker 0     worker 1     worker N-1        (threads)
+//!           Engine+model Engine+model Engine+model      (one PJRT stack each;
+//!              │            │            │               xla handles are not Send)
+//!              └───────────►└───responses►└──► per-request channel
+//! ```
+//!
+//! * [`queue`] — bounded priority queue with backpressure and FIFO fairness
+//!   within a priority class.
+//! * [`server`] — worker pool, dispatch loop, graceful shutdown.
+//! * [`session`] — multi-turn conversation state (token histories).
+//! * [`metrics`] — counters and latency percentiles for the serving report.
+
+mod metrics;
+mod queue;
+mod server;
+mod session;
+
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use queue::{Mode, Priority, QueueError, Request, RequestQueue, Response, ResponseBody};
+pub use server::{Server, ServerConfig};
+pub use session::SessionStore;

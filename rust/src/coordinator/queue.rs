@@ -1,0 +1,224 @@
+//! Bounded priority request queue with backpressure.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use crate::model::SamplingParams;
+use crate::specdec::SpecTrace;
+
+/// Request priority class; within a class, strict FIFO.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    Interactive,
+    Batch,
+}
+
+/// Decoding mode for a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// SPEQ speculative decoding (the default).
+    Speculative,
+    /// Full-precision autoregressive (baseline / comparison).
+    Autoregressive,
+}
+
+/// A generation request.
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u8>,
+    pub gen_len: usize,
+    pub max_draft: usize,
+    pub gamma: f32,
+    pub sampling: SamplingParams,
+    pub mode: Mode,
+    pub priority: Priority,
+    /// Session to append this exchange to (multi-turn), if any.
+    pub session: Option<u64>,
+    pub submitted: Instant,
+    pub respond_to: mpsc::Sender<Response>,
+}
+
+/// A finished generation (or an error).
+pub struct Response {
+    pub id: u64,
+    pub result: anyhow::Result<ResponseBody>,
+}
+
+pub struct ResponseBody {
+    pub tokens: Vec<u8>,
+    pub trace: SpecTrace,
+    /// Queue wait + execution, seconds.
+    pub latency_s: f64,
+    /// Execution only, seconds.
+    pub exec_s: f64,
+    pub worker: usize,
+}
+
+/// Errors surfaced to submitters.
+#[derive(Debug, PartialEq, Eq)]
+pub enum QueueError {
+    /// Backpressure: the queue is at capacity.
+    Full,
+    /// The server is shutting down.
+    Closed,
+}
+
+impl std::fmt::Display for QueueError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QueueError::Full => write!(f, "queue full (backpressure)"),
+            QueueError::Closed => write!(f, "queue closed"),
+        }
+    }
+}
+
+impl std::error::Error for QueueError {}
+
+struct Inner {
+    interactive: VecDeque<Request>,
+    batch: VecDeque<Request>,
+    closed: bool,
+}
+
+/// MPMC bounded queue: any thread may submit; workers pop.
+pub struct RequestQueue {
+    inner: Mutex<Inner>,
+    cond: Condvar,
+    capacity: usize,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                interactive: VecDeque::new(),
+                batch: VecDeque::new(),
+                closed: false,
+            }),
+            cond: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.interactive.len() + g.batch.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Non-blocking submit; `Err(Full)` signals backpressure to the client.
+    pub fn submit(&self, req: Request) -> Result<(), QueueError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(QueueError::Closed);
+        }
+        if g.interactive.len() + g.batch.len() >= self.capacity {
+            return Err(QueueError::Full);
+        }
+        match req.priority {
+            Priority::Interactive => g.interactive.push_back(req),
+            Priority::Batch => g.batch.push_back(req),
+        }
+        drop(g);
+        self.cond.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop: interactive first, then batch; `None` on shutdown.
+    pub fn pop(&self) -> Option<Request> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = g.interactive.pop_front() {
+                return Some(r);
+            }
+            if let Some(r) = g.batch.pop_front() {
+                return Some(r);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cond.wait(g).unwrap();
+        }
+    }
+
+    /// Close the queue; wakes all waiting workers.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cond.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn dummy_request(id: u64, priority: Priority) -> (Request, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                id,
+                prompt: vec![b'x'],
+                gen_len: 1,
+                max_draft: 16,
+                gamma: 0.6,
+                sampling: SamplingParams::greedy(),
+                mode: Mode::Speculative,
+                priority,
+                session: None,
+                submitted: Instant::now(),
+                respond_to: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn fifo_within_priority_and_interactive_first() {
+        let q = RequestQueue::new(8);
+        let (r1, _k1) = dummy_request(1, Priority::Batch);
+        let (r2, _k2) = dummy_request(2, Priority::Interactive);
+        let (r3, _k3) = dummy_request(3, Priority::Interactive);
+        q.submit(r1).unwrap();
+        q.submit(r2).unwrap();
+        q.submit(r3).unwrap();
+        assert_eq!(q.pop().unwrap().id, 2);
+        assert_eq!(q.pop().unwrap().id, 3);
+        assert_eq!(q.pop().unwrap().id, 1);
+    }
+
+    #[test]
+    fn capacity_backpressure() {
+        let q = RequestQueue::new(2);
+        let (r1, _k1) = dummy_request(1, Priority::Batch);
+        let (r2, _k2) = dummy_request(2, Priority::Batch);
+        let (r3, _k3) = dummy_request(3, Priority::Batch);
+        q.submit(r1).unwrap();
+        q.submit(r2).unwrap();
+        let err = q.submit(r3).unwrap_err();
+        assert_eq!(err, QueueError::Full);
+    }
+
+    #[test]
+    fn close_unblocks_poppers() {
+        let q = Arc::new(RequestQueue::new(2));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop().is_none());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap(), "pop should return None after close");
+    }
+
+    #[test]
+    fn submit_after_close_fails() {
+        let q = RequestQueue::new(2);
+        q.close();
+        let (r, _k) = dummy_request(1, Priority::Batch);
+        assert_eq!(q.submit(r).unwrap_err(), QueueError::Closed);
+    }
+}

@@ -1,0 +1,242 @@
+//! Worker pool + dispatch loop.
+//!
+//! PJRT handles are not `Send`, so each worker thread builds its own
+//! `Runtime` + `ModelRuntime` + `Engine` stack and pulls requests from the
+//! shared queue.  Responses flow back through the per-request channel.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::metrics::Metrics;
+use super::queue::{Mode, Priority, Request, RequestQueue, Response, ResponseBody};
+use super::session::SessionStore;
+use crate::model::{Manifest, ModelRuntime, SamplingParams};
+use crate::runtime::Runtime;
+use crate::specdec::{Engine, SpecConfig};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub artifacts_root: PathBuf,
+    pub model: String,
+    pub workers: usize,
+    pub queue_capacity: usize,
+    /// Trailing bytes of history kept per session.
+    pub session_history: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_root: Manifest::default_root(),
+            model: "vicuna-7b-tiny".to_string(),
+            workers: 2,
+            queue_capacity: 64,
+            session_history: 96,
+        }
+    }
+}
+
+/// A running SPEQ serving instance.
+pub struct Server {
+    queue: Arc<RequestQueue>,
+    metrics: Arc<Metrics>,
+    sessions: Arc<SessionStore>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Server {
+    /// Start the worker pool.  Each worker compiles the model graphs on its
+    /// own PJRT client before serving (cold-start happens here, not on the
+    /// request path).
+    pub fn start(cfg: ServerConfig) -> Result<Self> {
+        // Fail fast if the manifest is unusable before spawning threads.
+        let manifest = Manifest::load(&cfg.artifacts_root)?;
+        manifest.model(&cfg.model)?;
+
+        let queue = Arc::new(RequestQueue::new(cfg.queue_capacity));
+        let metrics = Arc::new(Metrics::new());
+        let sessions = Arc::new(SessionStore::new(cfg.session_history));
+
+        let mut workers = Vec::new();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        for wid in 0..cfg.workers.max(1) {
+            let queue = queue.clone();
+            let metrics = metrics.clone();
+            let sessions = sessions.clone();
+            let cfg = cfg.clone();
+            let ready = ready_tx.clone();
+            workers.push(std::thread::spawn(move || {
+                worker_main(wid, cfg, queue, metrics, sessions, ready);
+            }));
+        }
+        drop(ready_tx);
+        // Wait for all workers to finish loading (or fail).
+        for _ in 0..cfg.workers.max(1) {
+            ready_rx.recv().context("worker died during startup")??;
+        }
+        Ok(Self {
+            queue,
+            metrics,
+            sessions,
+            workers,
+            next_id: std::sync::atomic::AtomicU64::new(1),
+        })
+    }
+
+    /// Submit a generation request; returns `(id, receiver)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit(
+        &self,
+        prompt: &[u8],
+        gen_len: usize,
+        mode: Mode,
+        priority: Priority,
+        sampling: SamplingParams,
+        session: Option<u64>,
+        max_draft: usize,
+        gamma: f32,
+    ) -> Result<(u64, mpsc::Receiver<Response>)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        self.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
+        let req = Request {
+            id,
+            prompt: prompt.to_vec(),
+            gen_len,
+            max_draft,
+            gamma,
+            sampling,
+            mode,
+            priority,
+            session,
+            submitted: Instant::now(),
+            respond_to: tx,
+        };
+        if let Err(e) = self.queue.submit(req) {
+            self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!("submit failed: {e}");
+        }
+        Ok((id, rx))
+    }
+
+    /// Convenience: submit with defaults and wait for the reply.
+    pub fn generate(&self, prompt: &[u8], gen_len: usize) -> Result<ResponseBody> {
+        let (_, rx) = self.submit(
+            prompt,
+            gen_len,
+            Mode::Speculative,
+            Priority::Interactive,
+            SamplingParams::greedy(),
+            None,
+            16,
+            0.6,
+        )?;
+        let resp = rx.recv().context("server dropped the request")?;
+        resp.result
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn sessions(&self) -> &SessionStore {
+        &self.sessions
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Drain and stop all workers.
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(
+    wid: usize,
+    cfg: ServerConfig,
+    queue: Arc<RequestQueue>,
+    metrics: Arc<Metrics>,
+    sessions: Arc<SessionStore>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    // Build the per-worker PJRT stack.
+    let stack = (|| -> Result<(Manifest, ModelRuntime)> {
+        let manifest = Manifest::load(&cfg.artifacts_root)?;
+        let rt = Runtime::cpu()?;
+        let model = ModelRuntime::load(&rt, &manifest, &cfg.model)?;
+        Ok((manifest, model))
+    })();
+    let model = match stack {
+        Ok((_, model)) => {
+            let _ = ready.send(Ok(()));
+            model
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let engine = Engine::new(&model);
+
+    while let Some(req) = queue.pop() {
+        let exec_start = Instant::now();
+        let prompt = sessions.effective_prompt(req.session, &req.prompt);
+        let result = match req.mode {
+            Mode::Speculative => engine.generate_spec(
+                &prompt,
+                &SpecConfig {
+                    max_draft: req.max_draft,
+                    gamma: req.gamma,
+                    sampling: req.sampling,
+                    gen_len: req.gen_len,
+                },
+            ),
+            Mode::Autoregressive => engine.generate_ar(&prompt, req.gen_len, req.sampling),
+        };
+        let exec_s = exec_start.elapsed().as_secs_f64();
+        let latency_s = req.submitted.elapsed().as_secs_f64();
+        let body = result.map(|r| {
+            metrics.record_completion(
+                r.tokens.len() as u64,
+                r.trace.draft_steps(),
+                r.trace.verify_passes(),
+                latency_s,
+                exec_s,
+            );
+            if let Some(sid) = req.session {
+                sessions.append(sid, &req.prompt, &r.tokens);
+            }
+            ResponseBody {
+                tokens: r.tokens,
+                trace: r.trace,
+                latency_s,
+                exec_s,
+                worker: wid,
+            }
+        });
+        // The submitter may have gone away; that's fine.
+        let _ = req.respond_to.send(Response { id: req.id, result: body });
+    }
+}

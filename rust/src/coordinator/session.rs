@@ -1,0 +1,84 @@
+//! Multi-turn session store: rolling token histories per conversation.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Conversation state shared across workers.
+pub struct SessionStore {
+    sessions: Mutex<HashMap<u64, Vec<u8>>>,
+    /// Keep at most this many trailing tokens per session (prompt window).
+    max_history: usize,
+}
+
+impl SessionStore {
+    pub fn new(max_history: usize) -> Self {
+        Self { sessions: Mutex::new(HashMap::new()), max_history }
+    }
+
+    /// Build the effective prompt for a request: history + new prompt,
+    /// truncated to the trailing `max_history` bytes.
+    pub fn effective_prompt(&self, session: Option<u64>, prompt: &[u8]) -> Vec<u8> {
+        let mut full = Vec::new();
+        if let Some(sid) = session {
+            if let Some(hist) = self.sessions.lock().unwrap().get(&sid) {
+                full.extend_from_slice(hist);
+            }
+        }
+        full.extend_from_slice(prompt);
+        if full.len() > self.max_history {
+            full.drain(..full.len() - self.max_history);
+        }
+        full
+    }
+
+    /// Record an exchange into the session history.
+    pub fn append(&self, session: u64, prompt: &[u8], reply: &[u8]) {
+        let mut g = self.sessions.lock().unwrap();
+        let hist = g.entry(session).or_default();
+        hist.extend_from_slice(prompt);
+        hist.extend_from_slice(reply);
+        if hist.len() > self.max_history {
+            hist.drain(..hist.len() - self.max_history);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self, session: u64) {
+        self.sessions.lock().unwrap().remove(&session);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_accumulates_and_truncates() {
+        let s = SessionStore::new(10);
+        s.append(1, b"hello ", b"world ");
+        // 12 bytes of history + "x", truncated to the trailing 10 bytes.
+        let p = s.effective_prompt(Some(1), b"x");
+        assert_eq!(p, b"lo world x".to_vec());
+        assert!(p.len() <= 10);
+        assert!(p.ends_with(b"x"));
+    }
+
+    #[test]
+    fn sessions_are_isolated() {
+        let s = SessionStore::new(100);
+        s.append(1, b"a", b"b");
+        s.append(2, b"c", b"d");
+        assert_eq!(s.effective_prompt(Some(1), b"!"), b"ab!".to_vec());
+        assert_eq!(s.effective_prompt(Some(2), b"!"), b"cd!".to_vec());
+        assert_eq!(s.effective_prompt(None, b"!"), b"!".to_vec());
+        s.clear(1);
+        assert_eq!(s.effective_prompt(Some(1), b"!"), b"!".to_vec());
+    }
+}

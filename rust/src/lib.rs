@@ -1,0 +1,42 @@
+//! # SPEQ — lossless speculative LLM decoding via bit-sharing quantization
+//!
+//! Reproduction of *"From Quarter to All: Accelerating Speculative LLM
+//! Decoding via Floating-Point Exponent Remapping and Parameter Sharing"*
+//! (CS.AR 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * [`bsfp`] — the Bit-Sharing Floating Point codec (the paper's §III
+//!   algorithm): exponent remapping, Algorithm-1 outlier handling, Eq. 4
+//!   group scales, and the Fig. 5 hardware decoders.
+//! * [`quant`] — baseline quantizers (FP4 variants for Table I, INT4/8
+//!   Olive/Tender analogs for the accelerator comparison).
+//! * [`runtime`] — PJRT CPU client wrapper: loads the AOT-compiled HLO
+//!   graphs from `artifacts/` and executes them buffer-to-buffer.
+//! * [`model`] — model manifests, weight loading, logits post-processing.
+//! * [`specdec`] — the speculative decoding engine: quantized draft pass,
+//!   full verification pass, shared KV cache, early exit (§III-C), plus the
+//!   Eq. 1–2 analytic model.
+//! * [`coordinator`] — serving layer: request queue, scheduler, sessions,
+//!   metrics — the production wrapper around the engine.
+//! * [`accel`] — cycle-level simulator of the SPEQ accelerator (§IV):
+//!   reconfigurable PE array, BSFP decoders, SRAM buffers, DRAM channel,
+//!   28 nm area/energy model, and the Olive/Tender/FP16 baselines.
+//! * [`workload`] — synthetic task workloads (GSM8K/HumanEval/MT-bench
+//!   analogs) and trace capture.
+//! * [`report`] — regenerates every table and figure of the paper's
+//!   evaluation (see DESIGN.md §5 for the experiment index).
+
+pub mod accel;
+pub mod bsfp;
+pub mod coordinator;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod specdec;
+pub mod util;
+pub mod workload;
+
+/// Crate version (mirrors `Cargo.toml`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,234 @@
+//! `speq` — the SPEQ coordinator binary.
+//!
+//! Subcommands:
+//!   info                         manifest / model summary
+//!   report --exp <id|all>        regenerate a paper table/figure (DESIGN.md §5)
+//!   generate --model M --prompt  one-off generation (spec + AR comparison)
+//!   serve --model M --workers N  run the serving coordinator on a workload
+//!   bench-accel                  quick accelerator sanity sweep
+//!
+//! Common flags: --artifacts <dir> (default ./artifacts or $SPEQ_ARTIFACTS).
+
+use anyhow::Result;
+use speq::accel::{paper_dims, Accel, ArrayMode};
+use speq::coordinator::{Mode, Priority, Server, ServerConfig};
+use speq::model::{Manifest, ModelRuntime, SamplingParams};
+use speq::report::{run_experiment, ReportCtx, ReportOpts, EXPERIMENTS};
+use speq::runtime::Runtime;
+use speq::specdec::{Engine, SpecConfig};
+use speq::util::cli::Args;
+use speq::workload::{load_task, task_names};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn artifacts_root(args: &Args) -> std::path::PathBuf {
+    args.get("artifacts").map(Into::into).unwrap_or_else(Manifest::default_root)
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("info") => info(args),
+        Some("report") => report(args),
+        Some("generate") => generate(args),
+        Some("serve") => serve(args),
+        Some("bench-accel") => bench_accel(args),
+        Some("version") => {
+            println!("speq {}", speq::version());
+            Ok(())
+        }
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o:?}\n");
+            }
+            println!(
+                "usage: speq <info|report|generate|serve|bench-accel|version> [flags]\n\
+                 \n\
+                 speq report --exp <{}|all> [--models a,b] [--n-prompts N] [--gen-len N] [--fresh]\n\
+                 speq generate --model <name> --prompt <text> [--gen-len N] [--temperature T]\n\
+                 speq serve --model <name> [--workers N] [--requests N]\n\
+                 speq info",
+                EXPERIMENTS.join("|")
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(artifacts_root(args))?;
+    println!("artifacts: {} (v{})", manifest.root.display(), manifest.version);
+    println!("group size: {} | prompt len: {}", manifest.group_size, manifest.prompt_len);
+    println!("\n{:<18} {:>8} {:>7} {:>6} {:>6} {:>9} {:>12}", "model", "params", "layers", "d", "ff", "loss", "paper analog");
+    for name in manifest.model_names() {
+        let e = manifest.model(&name)?;
+        println!(
+            "{name:<18} {:>8} {:>7} {:>6} {:>6} {:>9.3} {:>12}",
+            e.config.param_count,
+            e.config.n_layers,
+            e.config.d_model,
+            e.config.d_ff,
+            e.train.loss_last,
+            e.config.paper_analog
+        );
+    }
+    println!("\ntasks: {:?}", manifest.tasks.keys().collect::<Vec<_>>());
+    Ok(())
+}
+
+fn report(args: &Args) -> Result<()> {
+    let exp = args.get_or("exp", "all").to_string();
+    let opts = ReportOpts {
+        artifacts_root: artifacts_root(args),
+        models: args
+            .get("models")
+            .map(|m| m.split(',').map(str::to_string).collect())
+            .unwrap_or_default(),
+        n_prompts: args.get_usize("n-prompts", 4),
+        gen_len: args.get_usize("gen-len", 256),
+        ppl_windows: args.get_usize("ppl-windows", 12),
+        fresh: args.has("fresh"),
+    };
+    let mut ctx = ReportCtx::new(opts)?;
+    run_experiment(&mut ctx, &exp)
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(artifacts_root(args))?;
+    let model_name = args.get_or("model", "vicuna-7b-tiny");
+    let prompt = args
+        .get("prompt")
+        .unwrap_or("Q: ada has 3 apples and finds 4 more. how many apples now?\nA: ")
+        .as_bytes()
+        .to_vec();
+    let gen_len = args.get_usize("gen-len", 128);
+    let temperature = args.get_f64("temperature", 0.0) as f32;
+
+    let rt = Runtime::cpu()?;
+    let model = ModelRuntime::load(&rt, &manifest, model_name)?;
+    let engine = Engine::new(&model);
+    let sampling = SamplingParams { temperature, seed: args.get_usize("seed", 0) as u64 };
+
+    let cfg = SpecConfig {
+        max_draft: args.get_usize("max-draft", 16),
+        gamma: args.get_f64("gamma", 0.6) as f32,
+        sampling,
+        gen_len,
+    };
+    let spec = engine.generate_spec(&prompt, &cfg)?;
+    println!("--- speculative ({:?}) ---", spec.wall);
+    println!("{}", String::from_utf8_lossy(&spec.tokens));
+    println!(
+        "\niters {} | draft steps {} | r {:.3} | L-bar {:.2} | accept-len {:.2} | early-exit {:.0}%",
+        spec.trace.verify_passes(),
+        spec.trace.draft_steps(),
+        spec.trace.accept_rate(),
+        spec.trace.mean_draft_len(),
+        spec.trace.mean_accept_len(),
+        spec.trace.early_exit_rate() * 100.0
+    );
+    if temperature == 0.0 {
+        let ar = engine.generate_ar(&prompt, gen_len, sampling)?;
+        println!("\nlossless check vs autoregressive: {}", if ar.tokens == spec.tokens { "IDENTICAL" } else { "MISMATCH!" });
+        // Simulated accelerator speedup for this very trace at paper scale.
+        if let Some(dims) = paper_dims(model_name) {
+            let tc = Accel::default().run_trace(dims, &spec.trace, 1024);
+            println!(
+                "simulated SPEQ accelerator ({}) speedup vs FP16: {:.2}x",
+                dims.name,
+                tc.speedup()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let cfg = ServerConfig {
+        artifacts_root: artifacts_root(args),
+        model: args.get_or("model", "vicuna-7b-tiny").to_string(),
+        workers: args.get_usize("workers", 2),
+        queue_capacity: args.get_usize("queue", 64),
+        session_history: 96,
+    };
+    let n_requests = args.get_usize("requests", 12);
+    let gen_len = args.get_usize("gen-len", 64);
+    println!("starting {} workers on {} ...", cfg.workers, cfg.model);
+    let manifest = Manifest::load(&cfg.artifacts_root)?;
+    let server = Server::start(cfg)?;
+
+    // Demo workload: cycle through the three task families.
+    let mut rxs = Vec::new();
+    let t0 = std::time::Instant::now();
+    for i in 0..n_requests {
+        let task = task_names()[i % 3];
+        let ts = load_task(&manifest, task)?;
+        let prompt = &ts.prompts[i % ts.prompts.len()];
+        let (_, rx) = server.submit(
+            prompt,
+            gen_len,
+            Mode::Speculative,
+            if i % 4 == 0 { Priority::Interactive } else { Priority::Batch },
+            SamplingParams::greedy(),
+            None,
+            16,
+            0.6,
+        )?;
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        let r = rx.recv()?;
+        let body = r.result?;
+        println!(
+            "req {:>3} worker {} | {:>3} tok | {:>7.1} ms | r {:.3}",
+            r.id,
+            body.worker,
+            body.tokens.len(),
+            body.latency_s * 1e3,
+            body.trace.accept_rate()
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = server.metrics().snapshot();
+    println!(
+        "\n{} requests | {} tokens | {:.1} tok/s | p50 {:.0} ms | p95 {:.0} ms | p99 {:.0} ms",
+        snap.completed,
+        snap.tokens,
+        snap.tokens as f64 / wall,
+        snap.latency_p50_ms,
+        snap.latency_p95_ms,
+        snap.latency_p99_ms
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn bench_accel(_args: &Args) -> Result<()> {
+    let accel = Accel::default();
+    println!("accelerator sanity sweep (paper dims, ctx 1024):");
+    for dims in speq::accel::PAPER_MODELS.iter() {
+        let full = accel.decode_step_cost(dims, 1024, ArrayMode::Full);
+        let quant = accel.decode_step_cost(dims, 1024, ArrayMode::Quant);
+        let ver = accel.verify_cost(dims, 1024, 17);
+        println!(
+            "{:<14} AR {:>9} cyc ({:>6.2} ms) | draft {:>9} cyc ({:.2}x cheaper) | verify17 {:>9} cyc ({:.2}x AR)",
+            dims.name,
+            full.cycles,
+            full.time_s(&accel.cfg) * 1e3,
+            quant.cycles,
+            full.cycles as f64 / quant.cycles as f64,
+            ver.cycles,
+            ver.cycles as f64 / full.cycles as f64,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,297 @@
+//! `artifacts/manifest.json` schema (written by `python/compile/aot.py`),
+//! parsed with the in-tree JSON module.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Value};
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub group_size: usize,
+    pub models: BTreeMap<String, ModelEntry>,
+    /// task name -> relative path of the prompt file
+    pub tasks: BTreeMap<String, String>,
+    pub prompt_len: usize,
+    pub heldout: String,
+    pub goldens_bin: String,
+    pub goldens_json: String,
+    /// Root directory the relative paths resolve against.
+    pub root: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub config: ModelConfig,
+    pub params: Vec<ParamInfo>,
+    pub linears: Vec<String>,
+    pub kv_shape: Vec<usize>,
+    pub graphs: BTreeMap<String, GraphEntry>,
+    pub train: TrainInfo,
+    pub weights: String,
+    /// Logits slots in the state vector (max draft length + 1 bonus).
+    pub state_slots: usize,
+    /// Total f32 length of the state vector: `slots * vocab + kv_elements`.
+    pub state_len: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub paper_analog: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub cache_len: usize,
+    pub prefill_len: usize,
+    pub param_count: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    pub offset_bytes: usize,
+    pub size_bytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct GraphEntry {
+    pub file: String,
+    pub args: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainInfo {
+    pub loss_first: f64,
+    pub loss_last: f64,
+}
+
+fn str_field(v: &Value, key: &str) -> Result<String> {
+    Ok(v.get(key)
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow::anyhow!("missing string field {key:?}"))?
+        .to_string())
+}
+
+fn usize_field(v: &Value, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Value::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("missing numeric field {key:?}"))
+}
+
+fn usize_vec(v: &Value) -> Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("expected array"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow::anyhow!("expected number")))
+        .collect()
+}
+
+fn str_vec(v: &Value) -> Result<Vec<String>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("expected array"))?
+        .iter()
+        .map(|x| {
+            x.as_str().map(str::to_string).ok_or_else(|| anyhow::anyhow!("expected string"))
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        anyhow::ensure!(
+            path.exists(),
+            "{} not found — run `make artifacts` first",
+            path.display()
+        );
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let mut models = BTreeMap::new();
+        for (name, entry) in
+            v.get("models").and_then(Value::as_obj).context("manifest missing models")?
+        {
+            models.insert(name.clone(), parse_model(entry).context(name.clone())?);
+        }
+        let mut tasks = BTreeMap::new();
+        for (name, path) in
+            v.get("tasks").and_then(Value::as_obj).context("manifest missing tasks")?
+        {
+            tasks.insert(
+                name.clone(),
+                path.as_str().context("task path must be a string")?.to_string(),
+            );
+        }
+        Ok(Self {
+            version: usize_field(&v, "version")? as u32,
+            group_size: usize_field(&v, "group_size")?,
+            models,
+            tasks,
+            prompt_len: usize_field(&v, "prompt_len")?,
+            heldout: str_field(&v, "heldout")?,
+            goldens_bin: str_field(&v, "goldens_bin")?,
+            goldens_json: str_field(&v, "goldens_json")?,
+            root,
+        })
+    }
+
+    /// Default artifacts root: `$SPEQ_ARTIFACTS` or `./artifacts`.
+    pub fn default_root() -> PathBuf {
+        std::env::var_os("SPEQ_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "model {name:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+}
+
+fn parse_model(v: &Value) -> Result<ModelEntry> {
+    let c = v.get("config").context("model missing config")?;
+    let config = ModelConfig {
+        name: str_field(c, "name")?,
+        paper_analog: str_field(c, "paper_analog")?,
+        n_layers: usize_field(c, "n_layers")?,
+        d_model: usize_field(c, "d_model")?,
+        d_ff: usize_field(c, "d_ff")?,
+        n_heads: usize_field(c, "n_heads")?,
+        head_dim: usize_field(c, "head_dim")?,
+        vocab: usize_field(c, "vocab")?,
+        cache_len: usize_field(c, "cache_len")?,
+        prefill_len: usize_field(c, "prefill_len")?,
+        param_count: usize_field(c, "param_count")?,
+    };
+    let mut params = Vec::new();
+    for p in v.get("params").and_then(Value::as_arr).context("model missing params")? {
+        params.push(ParamInfo {
+            name: str_field(p, "name")?,
+            shape: usize_vec(p.get("shape").context("param missing shape")?)?,
+            dtype: str_field(p, "dtype")?,
+            offset_bytes: usize_field(p, "offset_bytes")?,
+            size_bytes: usize_field(p, "size_bytes")?,
+        });
+    }
+    let linears = str_vec(v.get("linears").context("model missing linears")?)?;
+    let kv_shape = usize_vec(v.get("kv_shape").context("model missing kv_shape")?)?;
+    let mut graphs = BTreeMap::new();
+    for (name, g) in v.get("graphs").and_then(Value::as_obj).context("missing graphs")? {
+        graphs.insert(
+            name.clone(),
+            GraphEntry {
+                file: str_field(g, "file")?,
+                args: str_vec(g.get("args").context("graph missing args")?)?,
+                outputs: str_vec(g.get("outputs").context("graph missing outputs")?)?,
+            },
+        );
+    }
+    let t = v.get("train").context("model missing train")?;
+    let train = TrainInfo {
+        loss_first: t.get("loss_first").and_then(Value::as_f64).unwrap_or(f64::NAN),
+        loss_last: t.get("loss_last").and_then(Value::as_f64).unwrap_or(f64::NAN),
+    };
+    let state = v.get("state").context("model missing state")?;
+    Ok(ModelEntry {
+        config,
+        params,
+        linears,
+        kv_shape,
+        graphs,
+        train,
+        weights: str_field(v, "weights")?,
+        state_slots: usize_field(state, "slots")?,
+        state_len: usize_field(state, "state_len")?,
+    })
+}
+
+impl ModelEntry {
+    pub fn graph(&self, name: &str) -> Result<&GraphEntry> {
+        self.graphs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("graph {name:?} missing from manifest entry"))
+    }
+
+    pub fn kv_elements(&self) -> usize {
+        self.kv_shape.iter().product()
+    }
+
+    pub fn param(&self, name: &str) -> Result<&ParamInfo> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow::anyhow!("param {name:?} not in manifest"))
+    }
+
+    pub fn is_linear(&self, name: &str) -> bool {
+        self.linears.iter().any(|l| l == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let doc = r#"{
+          "version": 1, "group_size": 128, "prompt_len": 128,
+          "heldout": "heldout.bin", "goldens_bin": "g.bin", "goldens_json": "g.json",
+          "tasks": {"math": "tasks/math.json"},
+          "models": {"m": {
+            "config": {"name":"m","paper_analog":"X","n_layers":2,"d_model":128,
+                       "d_ff":256,"n_heads":4,"head_dim":32,"vocab":256,
+                       "cache_len":512,"prefill_len":256,"param_count":1000},
+            "params": [{"name":"embed","shape":[256,128],"dtype":"f16",
+                        "offset_bytes":0,"size_bytes":65536}],
+            "linears": ["lm_head"],
+            "kv_shape": [2,2,512,4,32],
+            "graphs": {"prefill":{"file":"m/prefill.hlo.txt",
+                                   "args":["embed","tokens","length"],
+                                   "outputs":["logits","kv"]}},
+            "train": {"loss_first": 5.5, "loss_last": 0.4},
+            "weights": "m/weights.bin",
+            "state": {"slots": 17, "state_len": 266496}
+          }}
+        }"#;
+        let dir = std::env::temp_dir().join("speq_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), doc).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.group_size, 128);
+        let e = m.model("m").unwrap();
+        assert_eq!(e.config.d_model, 128);
+        assert_eq!(e.params[0].size_bytes, 65536);
+        assert!(e.is_linear("lm_head"));
+        assert!(!e.is_linear("embed"));
+        assert_eq!(e.kv_elements(), 2 * 2 * 512 * 4 * 32);
+        assert_eq!(e.graph("prefill").unwrap().outputs, vec!["logits", "kv"]);
+        assert_eq!(e.state_slots, 17);
+        assert!(m.model("nope").is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Model substrate: manifests, weights, the executable model, and sampling.
+//!
+//! [`ModelRuntime`] is the bridge between the artifacts directory and the
+//! speculative-decoding engine: it owns the three compiled graphs (prefill,
+//! full decode, draft decode), the device-resident weight buffers (full
+//! FP16-derived params uploaded once; BSFP draft params derived by the Rust
+//! codec from the same bits and uploaded once), and exposes step functions
+//! that thread the KV cache buffer between calls.
+
+mod exec;
+mod manifest;
+mod sampling;
+mod weights;
+
+pub use exec::{ModelRuntime, StepOutput};
+pub use manifest::{GraphEntry, Manifest, ModelConfig, ModelEntry, ParamInfo};
+pub use sampling::{argmax, log_softmax, sample_from_logits, softmax, SamplingParams};
+pub use weights::{load_weights, HostWeights};

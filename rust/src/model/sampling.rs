@@ -1,0 +1,134 @@
+//! Logits post-processing: softmax, greedy argmax, temperature sampling.
+//!
+//! Sampling runs host-side (L3) on the logits returned by the compiled
+//! graphs, matching the accelerator's SFU placement in Fig. 4.
+
+use crate::util::rng::Rng;
+
+/// Sampling configuration for a generation request.
+#[derive(Debug, Clone, Copy)]
+pub struct SamplingParams {
+    /// 0.0 = greedy.
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self { temperature: 0.0, seed: 0 }
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy() -> Self {
+        Self::default()
+    }
+
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+}
+
+/// Index of the maximum logit (ties -> lowest index, matching jnp.argmax).
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Numerically-stable softmax.
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let exps: Vec<f32> = logits.iter().map(|&v| (v - m).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+/// Numerically-stable log-softmax.
+pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let z: f32 = logits.iter().map(|&v| (v - m).exp()).sum();
+    let lz = z.ln() + m;
+    logits.iter().map(|&v| v - lz).collect()
+}
+
+/// Sample a token; returns `(token, probs)` where `probs` is the (possibly
+/// temperature-scaled) distribution used — the speculative-sampling
+/// acceptance rule needs it.
+pub fn sample_from_logits(
+    logits: &[f32],
+    params: &SamplingParams,
+    rng: &mut Rng,
+) -> (usize, Vec<f32>) {
+    if params.is_greedy() {
+        let probs = softmax(logits);
+        (argmax(logits), probs)
+    } else {
+        let scaled: Vec<f32> = logits.iter().map(|&v| v / params.temperature).collect();
+        let probs = softmax(&scaled);
+        let u: f32 = rng.gen_f32();
+        let mut acc = 0.0;
+        for (i, &p) in probs.iter().enumerate() {
+            acc += p;
+            if u <= acc {
+                return (i, probs);
+            }
+        }
+        (probs.len() - 1, probs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max_and_first_tie() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[2.0, 2.0]), 0);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let p = softmax(&[1000.0, 1000.0, 999.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[0] > p[2]);
+    }
+
+    #[test]
+    fn log_softmax_consistent_with_softmax() {
+        let logits = [0.3f32, -1.2, 2.0, 0.0];
+        let p = softmax(&logits);
+        let lp = log_softmax(&logits);
+        for (a, b) in p.iter().zip(&lp) {
+            assert!((a.ln() - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let mut rng = Rng::seed_from_u64(0);
+        let logits = [0.0f32, 5.0, 1.0];
+        let (tok, _) = sample_from_logits(&logits, &SamplingParams::greedy(), &mut rng);
+        assert_eq!(tok, 1);
+    }
+
+    #[test]
+    fn temperature_sampling_covers_support() {
+        let mut rng = Rng::seed_from_u64(1);
+        let logits = [1.0f32, 1.0, 1.0];
+        let params = SamplingParams { temperature: 1.0, seed: 1 };
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            let (t, _) = sample_from_logits(&logits, &params, &mut rng);
+            seen[t] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all tokens should be sampled");
+    }
+}

@@ -1,0 +1,60 @@
+//! Weight loading: `weights.bin` (FP16 bit patterns, param order) -> host.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::manifest::ModelEntry;
+use crate::bsfp::f16_bits_to_f32;
+
+/// Host-resident weights for one model: FP16 bit patterns (canonical) plus
+/// f32 expansions (what the f32 HLO graphs consume).
+#[derive(Debug, Clone)]
+pub struct HostWeights {
+    /// param name -> FP16 bit patterns (row-major, manifest shape)
+    pub bits: BTreeMap<String, Vec<u16>>,
+    /// param name -> f32 values
+    pub f32s: BTreeMap<String, Vec<f32>>,
+    /// param name -> shape
+    pub shapes: BTreeMap<String, Vec<usize>>,
+}
+
+/// Load and expand a model's `weights.bin`.
+pub fn load_weights(path: impl AsRef<Path>, entry: &ModelEntry) -> Result<HostWeights> {
+    let path = path.as_ref();
+    let raw = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut bits = BTreeMap::new();
+    let mut f32s = BTreeMap::new();
+    let mut shapes = BTreeMap::new();
+    for p in &entry.params {
+        anyhow::ensure!(p.dtype == "f16", "unsupported dtype {} for {}", p.dtype, p.name);
+        let end = p.offset_bytes + p.size_bytes;
+        anyhow::ensure!(end <= raw.len(), "weights.bin truncated at {}", p.name);
+        let slice = &raw[p.offset_bytes..end];
+        let b: Vec<u16> =
+            slice.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
+        let f: Vec<f32> = b.iter().map(|&x| f16_bits_to_f32(x)).collect();
+        let n: usize = p.shape.iter().product();
+        anyhow::ensure!(b.len() == n, "size mismatch for {}", p.name);
+        bits.insert(p.name.clone(), b);
+        f32s.insert(p.name.clone(), f);
+        shapes.insert(p.name.clone(), p.shape.clone());
+    }
+    Ok(HostWeights { bits, f32s, shapes })
+}
+
+impl HostWeights {
+    pub fn shape(&self, name: &str) -> &[usize] {
+        &self.shapes[name]
+    }
+
+    pub fn f32(&self, name: &str) -> &[f32] {
+        &self.f32s[name]
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.f32s.values().map(|v| v.len()).sum()
+    }
+}

@@ -1,0 +1,46 @@
+//! Baseline quantizers.
+//!
+//! Two families:
+//!
+//! * **FP4 bit-extraction variants** (Table I): `E1M2`, `E2M1`, naive `E3M0`
+//!   — the same shared-bit extraction as BSFP but without the remap, used to
+//!   reproduce the perplexity ordering of Table I.
+//! * **INT quantizers** (accelerator baselines): symmetric per-group INT4/8,
+//!   an Olive-style outlier-victim-pair variant and a Tender-style
+//!   decomposed variant.  These are *lossy* (the paper reports ppl 44.2 /
+//!   36.5 for 4-bit Olive / Tender on Llama2-7b) and exist so Figs. 7–8 can
+//!   compare against their accelerator cost models with matching accuracy
+//!   caveats.
+
+mod fp4;
+mod int;
+
+pub use fp4::{quantize_fp4, Fp4Variant};
+pub use int::{quantize_int, IntMethod};
+
+/// Apply a named weight transform; the generic hook used by the perplexity
+/// harness (Table I) — every variant maps `(k, n)` f32 weights to the f32
+/// weights the draft model would actually use.
+pub fn transform_weights(
+    method: &str,
+    w: &[f32],
+    k: usize,
+    n: usize,
+) -> Result<Vec<f32>, String> {
+    match method {
+        "fp16" => Ok(w.to_vec()),
+        "bsfp" => Ok(crate::bsfp::quantize_tensor(w, k, n).dequant_draft()),
+        "e3m0" | "naive" => Ok(quantize_fp4(w, k, n, Fp4Variant::E3M0)),
+        "e2m1" => Ok(quantize_fp4(w, k, n, Fp4Variant::E2M1)),
+        "e1m2" => Ok(quantize_fp4(w, k, n, Fp4Variant::E1M2)),
+        "int4" | "olive4" => Ok(quantize_int(w, k, n, IntMethod::olive(4))),
+        "int8" | "olive8" => Ok(quantize_int(w, k, n, IntMethod::olive(8))),
+        "tender4" => Ok(quantize_int(w, k, n, IntMethod::tender(4))),
+        "tender8" => Ok(quantize_int(w, k, n, IntMethod::tender(8))),
+        other => Err(format!("unknown quantization method {other:?}")),
+    }
+}
+
+/// All method names accepted by [`transform_weights`], for CLI help/report.
+pub const METHODS: &[&str] =
+    &["fp16", "bsfp", "e3m0", "e2m1", "e1m2", "olive4", "olive8", "tender4", "tender8"];

@@ -1,0 +1,138 @@
+//! Shared experiment context: lazily-loaded models + trace caching.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::model::{Manifest, ModelRuntime, SamplingParams};
+use crate::runtime::Runtime;
+use crate::specdec::{Engine, SpecConfig, SpecTrace};
+use crate::util::json::Value;
+use crate::workload::{load_task, load_trace, save_trace, TraceRecord};
+
+/// Experiment sizing knobs (CLI-exposed).
+#[derive(Debug, Clone)]
+pub struct ReportOpts {
+    pub artifacts_root: PathBuf,
+    /// Subset of models (empty = all).
+    pub models: Vec<String>,
+    /// Prompts per (model, task) cell.
+    pub n_prompts: usize,
+    /// Tokens generated per prompt.
+    pub gen_len: usize,
+    /// Held-out windows for perplexity.
+    pub ppl_windows: usize,
+    /// Ignore cached traces.
+    pub fresh: bool,
+}
+
+impl Default for ReportOpts {
+    fn default() -> Self {
+        Self {
+            artifacts_root: Manifest::default_root(),
+            models: vec![],
+            n_prompts: 4,
+            gen_len: 256,
+            ppl_windows: 12,
+            fresh: false,
+        }
+    }
+}
+
+/// Lazily-loading experiment context.
+pub struct ReportCtx {
+    pub manifest: Manifest,
+    pub opts: ReportOpts,
+    rt: Runtime,
+    models: BTreeMap<String, ModelRuntime>,
+}
+
+impl ReportCtx {
+    pub fn new(opts: ReportOpts) -> Result<Self> {
+        let manifest = Manifest::load(&opts.artifacts_root)?;
+        let rt = Runtime::cpu()?;
+        Ok(Self { manifest, opts, rt, models: BTreeMap::new() })
+    }
+
+    /// Models selected for this run, in manifest order.
+    pub fn model_names(&self) -> Vec<String> {
+        if self.opts.models.is_empty() {
+            self.manifest.model_names()
+        } else {
+            self.opts.models.clone()
+        }
+    }
+
+    /// Load (and cache) a model runtime.
+    pub fn model(&mut self, name: &str) -> Result<&ModelRuntime> {
+        if !self.models.contains_key(name) {
+            let m = ModelRuntime::load(&self.rt, &self.manifest, name)
+                .with_context(|| format!("loading model {name}"))?;
+            self.models.insert(name.to_string(), m);
+        }
+        Ok(&self.models[name])
+    }
+
+    pub fn results_dir(&self) -> PathBuf {
+        self.manifest.root.join("results")
+    }
+
+    /// Measure (or load a cached) aggregate trace for one (model, task,
+    /// L, gamma) cell: runs the engine over `n_prompts` task prompts and
+    /// merges the traces.
+    pub fn trace_for(
+        &mut self,
+        model_name: &str,
+        task: &str,
+        max_draft: usize,
+        gamma: f32,
+    ) -> Result<SpecTrace> {
+        let dir = self.results_dir();
+        if !self.opts.fresh {
+            if let Some(rec) = load_trace(&dir, model_name, task, max_draft, gamma) {
+                if rec.gen_len == self.opts.gen_len {
+                    return Ok(rec.trace);
+                }
+            }
+        }
+        let taskset = load_task(&self.manifest, task)?;
+        let n = self.opts.n_prompts.min(taskset.prompts.len());
+        let gen_len = self.opts.gen_len;
+        let model = self.model(model_name)?;
+        let engine = Engine::new(model);
+        let mut merged = SpecTrace::default();
+        for prompt in taskset.prompts.iter().take(n) {
+            let cfg = SpecConfig {
+                max_draft,
+                gamma,
+                sampling: SamplingParams::greedy(),
+                gen_len,
+            };
+            let res = engine.generate_spec(prompt, &cfg)?;
+            merged.merge(&res.trace);
+            merged.prompt_len = res.trace.prompt_len;
+        }
+        let rec = TraceRecord {
+            model: model_name.to_string(),
+            task: task.to_string(),
+            max_draft,
+            gamma,
+            gen_len,
+            trace: merged.clone(),
+        };
+        save_trace(&dir, &rec)?;
+        Ok(merged)
+    }
+
+    /// Persist an experiment's JSON result.
+    pub fn save_result(&self, exp: &str, value: &Value) -> Result<()> {
+        let dir = self.results_dir();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{exp}.json"));
+        std::fs::write(&path, crate::util::json::write(value))
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!("  -> saved {}", path.display());
+        Ok(())
+    }
+}

@@ -1,0 +1,549 @@
+//! The per-experiment drivers (E1–E10 in DESIGN.md §5).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::context::ReportCtx;
+use super::perplexity::{perplexity, perplexity_with_transform};
+use crate::accel::{
+    paper_dims, power_report, speedup_vs_fp16, table4_area, Accel, BaselineKind,
+    DesignPoint, SPECDEC_BASELINES,
+};
+use crate::bsfp::exponent_histogram;
+use crate::quant::transform_weights;
+use crate::specdec::{expected_accept_length, SpecTrace};
+use crate::util::json::Value;
+use crate::workload::{heldout_windows, task_names};
+
+/// All experiment ids, in DESIGN.md order.
+pub const EXPERIMENTS: [&str; 10] = [
+    "fig2c", "table1", "table2", "table3", "table4", "fig7", "fig8", "fig9",
+    "specdec-cmp", "theory",
+];
+
+/// Run one experiment (or `all`).
+pub fn run_experiment(ctx: &mut ReportCtx, exp: &str) -> Result<()> {
+    match exp {
+        "all" => {
+            for e in EXPERIMENTS {
+                run_experiment(ctx, e)?;
+            }
+            Ok(())
+        }
+        "fig2c" => fig2c(ctx),
+        "table1" => table1(ctx),
+        "table2" => table2(ctx),
+        "table3" => table3(ctx),
+        "table4" => table4(ctx),
+        "fig7" => fig7(ctx),
+        "fig8" => fig8(ctx),
+        "fig9" => fig9(ctx),
+        "specdec-cmp" => specdec_cmp(ctx),
+        "theory" => theory(ctx),
+        other => anyhow::bail!("unknown experiment {other:?} (have {EXPERIMENTS:?} or 'all')"),
+    }
+}
+
+/// Deterministic trace realizing accept rate ~r at draft length l.
+fn synthetic_trace_with_rate(r: f64, l: u32, iters: usize) -> SpecTrace {
+    let mut iterations = Vec::new();
+    let mut acc = 0.0;
+    for _ in 0..iters {
+        acc += r * l as f64;
+        let accepted = (acc.min(l as f64)) as u32;
+        acc -= accepted as f64;
+        iterations.push(crate::specdec::IterRecord { drafted: l, accepted, early_exit: false });
+    }
+    let produced = iterations.iter().map(|i| i.accepted as usize + 1).sum();
+    SpecTrace { iterations, produced, prompt_len: 1024 }
+}
+
+fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn num(v: f64) -> Value {
+    Value::Num(v)
+}
+
+/// E1 / Fig. 2(c): exponent distribution of the trained models' weights.
+fn fig2c(ctx: &mut ReportCtx) -> Result<()> {
+    println!("\n== Fig. 2(c): FP16 exponent distribution of linear weights ==");
+    println!("{:<18} {:>12} {:>12} {:>10} {:>8}", "model", "exp<=15", "exp>=16", "%wasted-bit", "max exp");
+    let mut out = BTreeMap::new();
+    for name in ctx.model_names() {
+        let model = ctx.model(&name)?;
+        let mut hist = [0u64; 32];
+        for lin in model.entry.linears.clone() {
+            let h = exponent_histogram(model.weights.f32(&lin).iter().copied());
+            for (a, b) in hist.iter_mut().zip(h) {
+                *a += b;
+            }
+        }
+        let low: u64 = hist[..16].iter().sum();
+        let high: u64 = hist[16..].iter().sum();
+        let max_exp = hist.iter().rposition(|&c| c > 0).unwrap_or(0);
+        println!(
+            "{name:<18} {low:>12} {high:>12} {:>9.3}% {max_exp:>8}",
+            100.0 * low as f64 / (low + high) as f64
+        );
+        out.insert(
+            name.clone(),
+            obj(vec![
+                ("hist", Value::Arr(hist.iter().map(|&c| num(c as f64)).collect())),
+                ("low", num(low as f64)),
+                ("high", num(high as f64)),
+            ]),
+        );
+    }
+    println!("(the paper's premise: exponents confined to [0,15] — the top bit is free)");
+    ctx.save_result("fig2c", &Value::Obj(out))
+}
+
+/// E2 / Table I: perplexity of the FP4 variants.
+fn table1(ctx: &mut ReportCtx) -> Result<()> {
+    println!("\n== Table I: draft-model perplexity by quantization variant ==");
+    // The paper evaluates 3 models here.
+    let models: Vec<String> = ctx
+        .model_names()
+        .into_iter()
+        .filter(|m| ["llama3.1-8b-tiny", "llama2-7b-tiny", "vicuna-7b-tiny"].contains(&m.as_str()))
+        .collect();
+    let variants = ["fp16", "e1m2", "e2m1", "e3m0", "bsfp"];
+    let windows = heldout_windows(&ctx.manifest, 256, ctx.opts.ppl_windows)?;
+    println!(
+        "{:<10} {}",
+        "method",
+        models.iter().map(|m| format!("{m:>18}")).collect::<String>()
+    );
+    let mut rows = BTreeMap::new();
+    for variant in variants {
+        let mut cells = Vec::new();
+        for name in &models {
+            let model = ctx.model(name)?;
+            let ppl = if variant == "fp16" {
+                perplexity(model, &windows)?
+            } else {
+                perplexity_with_transform(model, &windows, |_, w, k, n| {
+                    transform_weights(variant, w, k, n).map_err(|e| anyhow::anyhow!(e))
+                })?
+            };
+            cells.push(ppl);
+        }
+        let label = match variant {
+            "e3m0" => "E3M0/Naive",
+            "bsfp" => "+Remap",
+            v => v,
+        };
+        println!(
+            "{label:<10} {}",
+            cells.iter().map(|p| format!("{p:>18.3}")).collect::<String>()
+        );
+        rows.insert(
+            variant.to_string(),
+            Value::Arr(cells.into_iter().map(num).collect()),
+        );
+    }
+    println!("(expect: E1M2 > E2M1 > E3M0 >> +Remap ~ FP16, as in the paper)");
+    let mut out = BTreeMap::new();
+    out.insert("models".to_string(), Value::Arr(models.into_iter().map(Value::Str).collect()));
+    out.insert("ppl".to_string(), Value::Obj(rows));
+    ctx.save_result("table1", &Value::Obj(out))
+}
+
+/// Shared: collect default-config traces for all (model, task) cells.
+fn default_traces(ctx: &mut ReportCtx) -> Result<BTreeMap<(String, String), SpecTrace>> {
+    let mut traces = BTreeMap::new();
+    for model in ctx.model_names() {
+        for task in task_names() {
+            let t = ctx.trace_for(&model, task, 16, 0.6)?;
+            traces.insert((model.clone(), task.to_string()), t);
+        }
+    }
+    Ok(traces)
+}
+
+/// E3 / Table II: average draft length and accept rate.
+fn table2(ctx: &mut ReportCtx) -> Result<()> {
+    println!("\n== Table II: draft length L-bar and accept rate r (L=16, gamma=0.6) ==");
+    let traces = default_traces(ctx)?;
+    println!(
+        "{:<18} {:>14} {:>14} {:>14} {:>8}",
+        "model", "code(HumEval)", "chat(MT-b)", "math(GSM8K)", "mean r"
+    );
+    let mut out = BTreeMap::new();
+    for model in ctx.model_names() {
+        let mut cells = Vec::new();
+        let mut rs = Vec::new();
+        for task in task_names() {
+            let t = &traces[&(model.clone(), task.to_string())];
+            cells.push(format!("{:>6.2}/{:<6.3}", t.mean_draft_len(), t.accept_rate()));
+            rs.push(t.accept_rate());
+        }
+        let mean_r = rs.iter().sum::<f64>() / rs.len() as f64;
+        println!("{model:<18} {} {mean_r:>8.3}", cells.join(" "));
+        out.insert(
+            model.clone(),
+            obj(vec![
+                (
+                    "per_task",
+                    Value::Obj(
+                        task_names()
+                            .iter()
+                            .map(|task| {
+                                let t = &traces[&(model.clone(), task.to_string())];
+                                (
+                                    task.to_string(),
+                                    obj(vec![
+                                        ("draft_len", num(t.mean_draft_len())),
+                                        ("accept_rate", num(t.accept_rate())),
+                                        ("accept_len", num(t.mean_accept_len())),
+                                    ]),
+                                )
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("mean_r", num(mean_r)),
+            ]),
+        );
+    }
+    println!("(format: L-bar/r; paper Table II reports L-bar 4.5-8.4, r 0.95-0.99)");
+    ctx.save_result("table2", &Value::Obj(out))
+}
+
+/// E4 / Table III: speedup vs FP16, per model x task, at paper-scale dims.
+fn table3(ctx: &mut ReportCtx) -> Result<()> {
+    println!("\n== Table III: SPEQ speedup over FP16 (accel sim @ paper dims, ctx 1024) ==");
+    let traces = default_traces(ctx)?;
+    let accel = Accel::default();
+    println!(
+        "{:<18} {:>10} {:>10} {:>10} {:>8}",
+        "model", "code", "chat", "math", "mean"
+    );
+    let mut out = BTreeMap::new();
+    for model in ctx.model_names() {
+        let dims = paper_dims(&model)
+            .ok_or_else(|| anyhow::anyhow!("no paper dims for {model}"))?;
+        let mut speeds = Vec::new();
+        for task in task_names() {
+            let t = &traces[&(model.clone(), task.to_string())];
+            let tc = accel.run_trace(dims, t, 1024);
+            speeds.push(tc.speedup());
+        }
+        let mean = speeds.iter().sum::<f64>() / speeds.len() as f64;
+        println!(
+            "{model:<18} {:>9.2}x {:>9.2}x {:>9.2}x {:>7.2}x",
+            speeds[0], speeds[1], speeds[2], mean
+        );
+        out.insert(
+            model.clone(),
+            obj(vec![
+                ("code", num(speeds[0])),
+                ("chat", num(speeds[1])),
+                ("math", num(speeds[2])),
+                ("mean", num(mean)),
+            ]),
+        );
+    }
+    println!("(paper Table III: 1.93x-2.21x, mean 2.08x)");
+    ctx.save_result("table3", &Value::Obj(out))
+}
+
+/// E5 / Table IV: area and power breakdown.
+fn table4(ctx: &mut ReportCtx) -> Result<()> {
+    println!("\n== Table IV: area & power breakdown @ 500 MHz (28 nm model) ==");
+    let accel = Accel::default();
+    let q = power_report(&accel.cfg, &accel.energy, true);
+    let f = power_report(&accel.cfg, &accel.energy, false);
+    println!(
+        "{:<10} {:>8} {:>22} {:>18}",
+        "module", "area", "power (quantize mode)", "power (full mode)"
+    );
+    let area = table4_area();
+    let rows = [
+        ("PE", q.pe_pct, f.pe_pct),
+        ("Decoder", q.decoder_pct, f.decoder_pct),
+        ("SRAM", q.sram_pct, f.sram_pct),
+        ("VPU", q.vpu_pct, f.vpu_pct),
+        ("Others", q.others_pct, f.others_pct),
+    ];
+    for (i, (name, qp, fp)) in rows.iter().enumerate() {
+        let area_pct = 100.0 * area[i].1 / 6.3;
+        println!("{name:<10} {area_pct:>7.1}% {qp:>21.1}% {fp:>17.1}%");
+    }
+    println!(
+        "{:<10} {:>7.1}mm2 {:>20.0}mW {:>16.0}mW",
+        "Total", 6.3, q.total_mw, f.total_mw
+    );
+    println!("(paper: 6.3 mm2; 508 mW quantize / 559 mW full)");
+    let out = obj(vec![
+        ("total_area_mm2", num(6.3)),
+        ("quant_mw", num(q.total_mw)),
+        ("full_mw", num(f.total_mw)),
+        ("quant_pe_pct", num(q.pe_pct)),
+        ("quant_decoder_pct", num(q.decoder_pct)),
+        ("quant_sram_pct", num(q.sram_pct)),
+        ("full_pe_pct", num(f.pe_pct)),
+        ("full_decoder_pct", num(f.decoder_pct)),
+    ]);
+    ctx.save_result("table4", &out)
+}
+
+/// E6 / Fig. 7: speedup vs the quantization accelerators.
+fn fig7(ctx: &mut ReportCtx) -> Result<()> {
+    println!("\n== Fig. 7: decoding speedup vs FP16 / Olive / Tender ==");
+    let traces = default_traces(ctx)?;
+    let accel = Accel::default();
+    let designs = [
+        BaselineKind::Fp16,
+        BaselineKind::Olive8,
+        BaselineKind::Tender8,
+        BaselineKind::Olive4,
+        BaselineKind::Tender4,
+        BaselineKind::Speq,
+    ];
+    println!(
+        "{:<18} {:>7} {:>9} {:>10} {:>9} {:>10} {:>7}",
+        "model", "FP16", "Olive-8b", "Tender-8b", "Olive-4b*", "Tender-4b*", "SPEQ"
+    );
+    let mut out = BTreeMap::new();
+    let mut sums = vec![0.0f64; designs.len()];
+    let names = ctx.model_names();
+    for model in &names {
+        let dims = paper_dims(model)
+            .ok_or_else(|| anyhow::anyhow!("no paper dims for {model}"))?;
+        // SPEQ uses the mean of the three tasks (paper's methodology).
+        let mut merged = SpecTrace::default();
+        for task in task_names() {
+            merged.merge(&traces[&(model.clone(), task.to_string())]);
+        }
+        let mut row = Vec::new();
+        for (i, kind) in designs.iter().enumerate() {
+            let s = speedup_vs_fp16(*kind, &accel, dims, 1024, Some(&merged));
+            sums[i] += s;
+            row.push(s);
+        }
+        println!(
+            "{model:<18} {:>6.2}x {:>8.2}x {:>9.2}x {:>8.2}x {:>9.2}x {:>6.2}x",
+            row[0], row[1], row[2], row[3], row[4], row[5]
+        );
+        out.insert(
+            model.clone(),
+            Value::Arr(row.into_iter().map(num).collect()),
+        );
+    }
+    let n = names.len() as f64;
+    println!(
+        "{:<18} {:>6.2}x {:>8.2}x {:>9.2}x {:>8.2}x {:>9.2}x {:>6.2}x",
+        "mean",
+        sums[0] / n,
+        sums[1] / n,
+        sums[2] / n,
+        sums[3] / n,
+        sums[4] / n,
+        sums[5] / n
+    );
+    let speq = sums[5] / n;
+    println!(
+        "SPEQ vs FP16 {:.2}x | vs Olive-8b {:.2}x | vs Tender-8b {:.2}x   (* = lossy designs)",
+        speq / (sums[0] / n),
+        speq / (sums[1] / n),
+        speq / (sums[2] / n)
+    );
+    // Hardware-model validation at the paper's measured operating point
+    // (r = 0.976, L-bar ~ 6.4 with early exit): replaying a synthetic trace
+    // with the paper's accept statistics isolates the accelerator model
+    // from the tiny-testbed accept rates.
+    let paper_trace = synthetic_trace_with_rate(0.976, 16, 64);
+    let mut cal = 0.0;
+    for model in &names {
+        let dims = paper_dims(model).unwrap();
+        cal += accel.run_trace(dims, &paper_trace, 1024).speedup();
+    }
+    println!(
+        "SPEQ @ paper operating point (r=0.976, L=16): {:.2}x vs FP16 (paper: 2.07x)",
+        cal / n
+    );
+    println!("(paper: 2.07x vs FP16, 1.53x vs Olive-8b, 1.45x vs Tender-8b; ~parity with Olive-4b)");
+    out.insert(
+        "designs".to_string(),
+        Value::Arr(designs.iter().map(|d| Value::Str(format!("{d:?}"))).collect()),
+    );
+    ctx.save_result("fig7", &Value::Obj(out))
+}
+
+/// E7 / Fig. 8: energy efficiency vs the baselines.
+fn fig8(ctx: &mut ReportCtx) -> Result<()> {
+    println!("\n== Fig. 8: energy efficiency (tokens/J, normalized to FP16) ==");
+    let traces = default_traces(ctx)?;
+    let accel = Accel::default();
+    println!(
+        "{:<18} {:>7} {:>9} {:>10} {:>7}",
+        "model", "FP16", "Olive-8b", "Tender-8b", "SPEQ"
+    );
+    let mut out = BTreeMap::new();
+    let mut sums = [0.0f64; 4];
+    let names = ctx.model_names();
+    for model in &names {
+        let dims = paper_dims(model)
+            .ok_or_else(|| anyhow::anyhow!("no paper dims for {model}"))?;
+        let mut merged = SpecTrace::default();
+        for task in task_names() {
+            merged.merge(&traces[&(model.clone(), task.to_string())]);
+        }
+        let fp16 = DesignPoint::get(BaselineKind::Fp16).token_cost(&accel, dims, 1024);
+        let fp16_e = fp16.energy.total_pj();
+        let o8 = DesignPoint::get(BaselineKind::Olive8).token_cost(&accel, dims, 1024);
+        let t8 = DesignPoint::get(BaselineKind::Tender8).token_cost(&accel, dims, 1024);
+        let tc = accel.run_trace(dims, &merged, 1024);
+        let speq_per_tok = tc.spec.energy.total_pj() / tc.tokens.max(1) as f64;
+        let row = [
+            1.0,
+            fp16_e / o8.energy.total_pj(),
+            fp16_e / t8.energy.total_pj(),
+            fp16_e / speq_per_tok,
+        ];
+        for (s, r) in sums.iter_mut().zip(row) {
+            *s += r;
+        }
+        println!(
+            "{model:<18} {:>6.2}x {:>8.2}x {:>9.2}x {:>6.2}x",
+            row[0], row[1], row[2], row[3]
+        );
+        out.insert(model.clone(), Value::Arr(row.iter().map(|&v| num(v)).collect()));
+    }
+    let n = names.len() as f64;
+    println!(
+        "{:<18} {:>6.2}x {:>8.2}x {:>9.2}x {:>6.2}x",
+        "mean",
+        sums[0] / n,
+        sums[1] / n,
+        sums[2] / n,
+        sums[3] / n
+    );
+    println!("(paper: SPEQ 1.74x vs FP16, 1.35x vs Olive-8b, 1.32x vs Tender-8b)");
+    ctx.save_result("fig8", &Value::Obj(out))
+}
+
+/// E8 / Fig. 9: L / gamma ablation on the chat task.
+fn fig9(ctx: &mut ReportCtx) -> Result<()> {
+    println!("\n== Fig. 9: hyperparameter ablation (chat task; accel speedup) ==");
+    let ls = [4usize, 8, 12, 16, 20];
+    let gammas = [0.0f32, 0.2, 0.4, 0.6, 0.8];
+    let accel = Accel::default();
+    let mut out = BTreeMap::new();
+    let models: Vec<String> = ctx
+        .model_names()
+        .into_iter()
+        .filter(|m| ["llama3.1-8b-tiny", "vicuna-7b-tiny"].contains(&m.as_str()))
+        .collect();
+    for model in &models {
+        let dims = paper_dims(model)
+            .ok_or_else(|| anyhow::anyhow!("no paper dims for {model}"))?;
+        println!("\n  {model} (rows = L, cols = gamma {gammas:?})");
+        let mut grid = Vec::new();
+        for &l in &ls {
+            let mut row = Vec::new();
+            for &g in &gammas {
+                let t = ctx.trace_for(model, "chat", l, g)?;
+                let s = accel.run_trace(dims, &t, 1024).speedup();
+                row.push(s);
+            }
+            println!(
+                "  L={l:<3} {}",
+                row.iter().map(|s| format!("{s:>7.2}x")).collect::<String>()
+            );
+            grid.push(Value::Arr(row.into_iter().map(num).collect()));
+        }
+        out.insert(model.clone(), Value::Arr(grid));
+    }
+    println!("(square = default L=16, gamma=0.6; paper: default within ~5% of optimum)");
+    out.insert("ls".into(), Value::Arr(ls.iter().map(|&l| num(l as f64)).collect()));
+    out.insert(
+        "gammas".into(),
+        Value::Arr(gammas.iter().map(|&g| num(g as f64)).collect()),
+    );
+    ctx.save_result("fig9", &Value::Obj(out))
+}
+
+/// E9 / §V-D: comparison with other speculative decoding methods.
+fn specdec_cmp(ctx: &mut ReportCtx) -> Result<()> {
+    println!("\n== §V-D: SPEQ vs Medusa / Swift (Vicuna-7b, chat/MT-bench) ==");
+    let model = "vicuna-7b-tiny".to_string();
+    let t = ctx.trace_for(&model, "chat", 16, 0.6)?;
+    let dims = paper_dims(&model).unwrap();
+    let accel = Accel::default();
+    let speq = accel.run_trace(dims, &t, 1024).speedup();
+    println!(
+        "{:<10} {:>9} {:>10} {:>12} {:>12}",
+        "method", "speedup", "vs SPEQ", "training?", "extra mem"
+    );
+    println!("{:<10} {speq:>8.2}x {:>10} {:>12} {:>12}", "SPEQ", "1.00x", "no", "0%");
+    let mut out = BTreeMap::new();
+    out.insert("SPEQ".to_string(), num(speq));
+    for b in &SPECDEC_BASELINES {
+        let s = b.speedup();
+        println!(
+            "{:<10} {s:>8.2}x {:>9.2}x {:>12} {:>11.0}%",
+            b.name,
+            speq / s,
+            if b.needs_training { "yes" } else { "no" },
+            b.memory_overhead * 100.0
+        );
+        out.insert(b.name.to_string(), num(s));
+    }
+    println!("(paper: SPEQ 2.03x, surpassing Swift by 1.52x and Medusa by 1.05x)");
+    ctx.save_result("specdec_cmp", &Value::Obj(out))
+}
+
+/// E10: validate Eq. 1–2 against the simulated traces.
+fn theory(ctx: &mut ReportCtx) -> Result<()> {
+    println!("\n== E10: Eq. 1-2 analytic model vs measured traces ==");
+    let traces = default_traces(ctx)?;
+    let accel = Accel::default();
+    println!(
+        "{:<18} {:<6} {:>7} {:>9} {:>9} {:>10} {:>10}",
+        "model", "task", "r", "La(eq1)", "La(meas)", "S(eq2)", "S(sim)"
+    );
+    let mut out = Vec::new();
+    for model in ctx.model_names() {
+        let dims = paper_dims(&model).unwrap();
+        for task in task_names() {
+            let t = &traces[&(model.clone(), task.to_string())];
+            let r = t.accept_rate();
+            // Eq. 1-2 assume drafting always runs to L; with early exit the
+            // effective draft length is L-bar, so the analytic model is
+            // evaluated there (the paper's equations, honestly applied).
+            let l_eff = t.mean_draft_len().round().max(1.0) as usize;
+            let la_pred = expected_accept_length(r, l_eff);
+            let la_meas = t.mean_accept_len();
+            // Eq. 2 with the simulator's own cost ratios.
+            let td = accel
+                .decode_step_cost(dims, 1024, crate::accel::ArrayMode::Quant)
+                .cycles as f64;
+            let tar = accel
+                .decode_step_cost(dims, 1024, crate::accel::ArrayMode::Full)
+                .cycles as f64;
+            let tv = accel.verify_cost(dims, 1024, l_eff + 1).cycles as f64;
+            let s_pred = crate::specdec::theoretical_speedup(r, l_eff, td / tar, tv / tar);
+            let s_sim = accel.run_trace(dims, t, 1024).speedup();
+            println!(
+                "{model:<18} {task:<6} {r:>7.3} {la_pred:>9.2} {la_meas:>9.2} {s_pred:>9.2}x {s_sim:>9.2}x"
+            );
+            out.push(obj(vec![
+                ("model", Value::Str(model.clone())),
+                ("task", Value::Str(task.to_string())),
+                ("r", num(r)),
+                ("la_pred", num(la_pred)),
+                ("la_meas", num(la_meas)),
+                ("s_pred", num(s_pred)),
+                ("s_sim", num(s_sim)),
+            ]));
+        }
+    }
+    println!("(Eq. 1 assumes geometric acceptance + fixed L; early exit makes measured");
+    println!(" La deviate at low r — the gap is the early-exit benefit, E8)");
+    ctx.save_result("theory", &Value::Arr(out))
+}

@@ -1,0 +1,26 @@
+//! The evaluation harness: regenerates every table and figure of the
+//! paper's §V (experiment index in DESIGN.md §5).
+//!
+//! | exp id        | paper artifact                         |
+//! |---------------|----------------------------------------|
+//! | `fig2c`       | exponent distribution of LLM weights   |
+//! | `table1`      | FP4-variant perplexity                 |
+//! | `table2`      | draft length & accept rate             |
+//! | `table3`      | speedup vs FP16 per model x task       |
+//! | `table4`      | area & power breakdown                 |
+//! | `fig7`        | speedup vs Olive/Tender                |
+//! | `fig8`        | energy efficiency                      |
+//! | `fig9`        | L / gamma ablation                     |
+//! | `specdec-cmp` | §V-D vs Medusa / Swift                 |
+//! | `theory`      | Eq. 1–2 vs simulation (E10)            |
+//!
+//! Results print as paper-style tables and persist as JSON under
+//! `artifacts/results/` for EXPERIMENTS.md.
+
+mod context;
+mod experiments;
+mod perplexity;
+
+pub use context::{ReportCtx, ReportOpts};
+pub use experiments::{run_experiment, EXPERIMENTS};
+pub use perplexity::{perplexity, perplexity_with_transform};

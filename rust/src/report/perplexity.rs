@@ -1,0 +1,52 @@
+//! Perplexity harness (Table I): next-token cross-entropy over held-out
+//! windows, with pluggable weight transforms for the quantization variants.
+
+use anyhow::Result;
+
+use crate::model::{log_softmax, ModelRuntime};
+
+/// Perplexity of the resident (FP16) weights.
+pub fn perplexity(model: &ModelRuntime, windows: &[Vec<u8>]) -> Result<f64> {
+    ppl_with_bufs(model, model.full_param_buffers(), windows)
+}
+
+/// Perplexity with every linear weight transformed (quantization variant).
+pub fn perplexity_with_transform(
+    model: &ModelRuntime,
+    windows: &[Vec<u8>],
+    transform: impl FnMut(&str, &[f32], usize, usize) -> Result<Vec<f32>>,
+) -> Result<f64> {
+    let bufs = model.build_transformed_params(transform)?;
+    ppl_with_bufs(model, &bufs, windows)
+}
+
+fn ppl_with_bufs(
+    model: &ModelRuntime,
+    bufs: &[xla::PjRtBuffer],
+    windows: &[Vec<u8>],
+) -> Result<f64> {
+    let p = model.prefill_len();
+    let v = model.vocab();
+    let mut nll = 0.0f64;
+    let mut count = 0u64;
+    for w in windows {
+        anyhow::ensure!(w.len() == p, "window must be prefill_len={p} tokens");
+        let toks: Vec<i32> = w.iter().map(|&b| b as i32).collect();
+        let logits = model.eval_logits_with(bufs, &toks, p)?;
+        // Position i predicts token i+1.
+        for i in 0..p - 1 {
+            let row = &logits[i * v..(i + 1) * v];
+            let lp = log_softmax(row);
+            nll -= lp[w[i + 1] as usize] as f64;
+            count += 1;
+        }
+    }
+    Ok((nll / count as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised end-to-end by rust/tests/integration_goldens.rs and the
+    // table1 experiment; unit coverage for log_softmax lives in
+    // model::sampling.
+}

@@ -1,0 +1,77 @@
+//! Executable wrapper: buffer-first execution with host read-back helpers.
+
+use anyhow::{Context, Result};
+
+/// A compiled graph plus its provenance, executed over PJRT buffers.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+/// A tensor copied back to the host.
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub data: Vec<f32>,
+    pub dims: Vec<usize>,
+}
+
+impl Executable {
+    pub(crate) fn new(exe: xla::PjRtLoadedExecutable, name: String) -> Self {
+        Self { exe, name }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute over device buffers; returns one buffer per graph output.
+    ///
+    /// Graphs are lowered with `return_tuple=False`, so PJRT hands back the
+    /// outputs individually — this is what lets the engine thread the KV
+    /// buffer between steps with zero host copies.
+    pub fn run(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut out = self
+            .exe
+            .execute_b(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        anyhow::ensure!(!out.is_empty(), "{}: no output device", self.name);
+        Ok(out.swap_remove(0))
+    }
+
+    /// Copy an f32 output buffer back to the host.
+    ///
+    /// Goes through a literal: this PJRT build (xla_extension 0.5.1 CPU)
+    /// does not implement raw host copies.
+    pub fn to_host_f32(buf: &xla::PjRtBuffer) -> Result<HostTensor> {
+        let shape = buf.on_device_shape()?;
+        let dims: Vec<usize> = match &shape {
+            xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+            _ => anyhow::bail!("expected array output, got {shape:?}"),
+        };
+        let literal = buf.to_literal_sync()?;
+        let data = literal.to_vec::<f32>()?;
+        anyhow::ensure!(
+            data.len() == dims.iter().product::<usize>(),
+            "element count mismatch: {} vs dims {dims:?}",
+            data.len()
+        );
+        Ok(HostTensor { data, dims })
+    }
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.dims.len(), 2, "row() needs a 2-D tensor");
+        let n = self.dims[1];
+        &self.data[i * n..(i + 1) * n]
+    }
+}

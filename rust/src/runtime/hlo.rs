@@ -1,0 +1,18 @@
+//! HLO-text loading (the AOT interchange format).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Parse an HLO text file into an [`xla::XlaComputation`].
+///
+/// Text is the only interchange format that round-trips between jax >= 0.5
+/// and xla_extension 0.5.1 (serialized protos carry 64-bit instruction ids
+/// the older runtime rejects; the text parser reassigns them).
+pub fn load_hlo_text(path: impl AsRef<Path>) -> Result<xla::XlaComputation> {
+    let path = path.as_ref();
+    anyhow::ensure!(path.exists(), "HLO file missing: {} (run `make artifacts`)", path.display());
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    Ok(xla::XlaComputation::from_proto(&proto))
+}

@@ -1,0 +1,76 @@
+//! PJRT runtime: load AOT-compiled HLO text, compile, execute.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin).  All graphs are produced
+//! once at build time by `python/compile/aot.py`; this module is the only
+//! boundary between the Rust request path and the compiled computations.
+//!
+//! Design notes:
+//! * Interchange is HLO **text** — xla_extension 0.5.1 rejects jax >= 0.5's
+//!   64-bit-id serialized protos; the text parser reassigns ids.
+//! * Everything stays in [`xla::PjRtBuffer`]s: weights are uploaded once,
+//!   the KV cache is threaded output->input between steps without touching
+//!   the host, and only tokens/positions/logits cross the host boundary.
+
+mod exec;
+mod hlo;
+
+pub use exec::{Executable, HostTensor};
+pub use hlo::load_hlo_text;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT client handle (cheaply cloneable).
+#[derive(Clone)]
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client: Arc::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load an HLO text file and compile it to an [`Executable`].
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let comp = load_hlo_text(path)?;
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable::new(exe, path.display().to_string()))
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload a u8 tensor (packed W_q) to the device.
+    pub fn upload_u8(&self, data: &[u8], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload an i32 scalar.
+    pub fn upload_i32_scalar(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    }
+
+    /// Upload an i32 vector.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+}

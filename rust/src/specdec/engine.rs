@@ -1,0 +1,205 @@
+//! The SPEQ generation engine: draft -> verify -> accept, with early exit.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::accept::{greedy_accept, speculative_sample_accept};
+use super::trace::{IterRecord, SpecTrace};
+use crate::model::{sample_from_logits, softmax, ModelRuntime, SamplingParams};
+use crate::util::rng::Rng;
+
+/// Speculative decoding hyperparameters (paper defaults: L = 16, γ = 0.6).
+#[derive(Debug, Clone, Copy)]
+pub struct SpecConfig {
+    /// Maximum draft length L per iteration (must be < model slots).
+    pub max_draft: usize,
+    /// §III-C early-exit threshold γ: stop drafting when the draft's top
+    /// probability falls below γ.
+    pub gamma: f32,
+    pub sampling: SamplingParams,
+    /// Tokens to generate.
+    pub gen_len: usize,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        Self { max_draft: 16, gamma: 0.6, sampling: SamplingParams::greedy(), gen_len: 256 }
+    }
+}
+
+/// One finished generation.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub tokens: Vec<u8>,
+    pub trace: SpecTrace,
+    pub wall: Duration,
+}
+
+/// The engine borrows a loaded model; it owns no device state between calls.
+pub struct Engine<'m> {
+    model: &'m ModelRuntime,
+}
+
+impl<'m> Engine<'m> {
+    pub fn new(model: &'m ModelRuntime) -> Self {
+        Self { model }
+    }
+
+    pub fn model(&self) -> &ModelRuntime {
+        self.model
+    }
+
+    fn pad_prompt(&self, prompt: &[u8]) -> (Vec<i32>, usize) {
+        let p = self.model.prefill_len();
+        let len = prompt.len().min(p);
+        let mut toks: Vec<i32> = prompt[prompt.len() - len..].iter().map(|&b| b as i32).collect();
+        while toks.len() < p {
+            toks.push(b' ' as i32);
+        }
+        // Left-pad semantics are handled by the caller (prompts are already
+        // fixed length); here we right-pad and mask by `len`.
+        (toks, len)
+    }
+
+    /// Maximum generable tokens given the KV cache capacity.
+    fn capacity(&self, prompt_len: usize) -> usize {
+        self.model.cache_len() - prompt_len - self.model.slots() - 1
+    }
+
+    /// Plain autoregressive decoding with the full-precision graph — the
+    /// lossless baseline (and the FP16 reference for speedup measurements).
+    pub fn generate_ar(
+        &self,
+        prompt: &[u8],
+        gen_len: usize,
+        sampling: SamplingParams,
+    ) -> Result<GenResult> {
+        let t0 = Instant::now();
+        let (toks, plen) = self.pad_prompt(prompt);
+        let gen_len = gen_len.min(self.capacity(plen));
+        let mut rng = Rng::seed_from_u64(sampling.seed);
+        let pre = self.model.prefill(&toks, plen)?;
+        let mut state = pre.state;
+        let (mut tok, _) = sample_from_logits(&pre.logits, &sampling, &mut rng);
+        let mut out = vec![tok as u8];
+        let mut pos = plen;
+        while out.len() < gen_len {
+            let step = self.model.decode_full(tok as i32, pos, &state)?;
+            state = step.state;
+            let (t, _) = sample_from_logits(&step.logits, &sampling, &mut rng);
+            tok = t;
+            out.push(tok as u8);
+            pos += 1;
+        }
+        Ok(GenResult {
+            tokens: out,
+            trace: SpecTrace { iterations: vec![], produced: gen_len, prompt_len: plen },
+            wall: t0.elapsed(),
+        })
+    }
+
+    /// SPEQ speculative decoding: BSFP draft + parallel verification.
+    pub fn generate_spec(&self, prompt: &[u8], cfg: &SpecConfig) -> Result<GenResult> {
+        let t0 = Instant::now();
+        let slots = self.model.slots();
+        anyhow::ensure!(
+            cfg.max_draft + 1 <= slots,
+            "max_draft {} exceeds graph slots {} - 1",
+            cfg.max_draft,
+            slots
+        );
+        let (toks, plen) = self.pad_prompt(prompt);
+        let gen_len = cfg.gen_len.min(self.capacity(plen));
+        let vocab = self.model.vocab();
+        let mut rng = Rng::seed_from_u64(cfg.sampling.seed);
+
+        let pre = self.model.prefill(&toks, plen)?;
+        let mut state = pre.state;
+        // The carry token: sampled from the target's prefill logits, not yet
+        // fed through the model.
+        let (mut carry, _) = sample_from_logits(&pre.logits, &cfg.sampling, &mut rng);
+        let mut out = vec![carry as u8];
+        let mut pos0 = plen; // carry token's position
+        let mut trace = SpecTrace { iterations: vec![], produced: 0, prompt_len: plen };
+
+        while out.len() < gen_len {
+            // ---- draft phase (quantized graph, shared KV) ----
+            let budget = cfg.max_draft.min(gen_len - out.len());
+            let mut drafts: Vec<usize> = Vec::with_capacity(budget);
+            let mut draft_probs: Vec<Vec<f32>> = Vec::with_capacity(budget);
+            let mut early_exit = false;
+            let mut tok = carry;
+            for i in 0..budget {
+                let step = self.model.decode_draft(tok as i32, pos0 + i, &state)?;
+                state = step.state;
+                let probs = if cfg.sampling.is_greedy() {
+                    softmax(&step.logits)
+                } else {
+                    softmax(
+                        &step
+                            .logits
+                            .iter()
+                            .map(|&v| v / cfg.sampling.temperature)
+                            .collect::<Vec<_>>(),
+                    )
+                };
+                let (d, _) = sample_from_logits(&step.logits, &cfg.sampling, &mut rng);
+                let top = probs.iter().fold(0.0f32, |m, &p| m.max(p));
+                drafts.push(d);
+                draft_probs.push(probs);
+                tok = d;
+                // §III-C: if the draft is not confident, verification will
+                // likely reject — stop drafting.
+                if top < cfg.gamma && i + 1 < budget {
+                    early_exit = true;
+                    break;
+                }
+            }
+
+            // ---- verification (one parallel full-precision pass) ----
+            let mut vtokens: Vec<i32> = Vec::with_capacity(slots);
+            vtokens.push(carry as i32);
+            vtokens.extend(drafts.iter().map(|&d| d as i32));
+            while vtokens.len() < slots {
+                vtokens.push(0);
+            }
+            let ver = self.model.verify(&vtokens, pos0, &state)?;
+            state = ver.state;
+
+            let outcome = if cfg.sampling.is_greedy() {
+                greedy_accept(&drafts, &ver.logits, vocab)
+            } else {
+                let rows: Vec<Vec<f32>> = (0..=drafts.len())
+                    .map(|i| {
+                        softmax(
+                            &ver.logits[i * vocab..(i + 1) * vocab]
+                                .iter()
+                                .map(|&v| v / cfg.sampling.temperature)
+                                .collect::<Vec<_>>(),
+                        )
+                    })
+                    .collect();
+                speculative_sample_accept(&drafts, &draft_probs, &rows, &mut rng)
+            };
+
+            trace.iterations.push(IterRecord {
+                drafted: drafts.len() as u32,
+                accepted: outcome.accepted as u32,
+                early_exit,
+            });
+
+            // Emit accepted drafts + the bonus/correction token.
+            for &d in &drafts[..outcome.accepted] {
+                out.push(d as u8);
+            }
+            out.push(outcome.next_token as u8);
+            pos0 += outcome.accepted + 1;
+            carry = outcome.next_token;
+        }
+
+        out.truncate(gen_len);
+        trace.produced = out.len();
+        Ok(GenResult { tokens: out, trace, wall: t0.elapsed() })
+    }
+}

@@ -1,0 +1,25 @@
+//! Speculative decoding engine — the paper's decoding loop (§II-B, §III-C).
+//!
+//! The draft model is the BSFP 4-bit view of the target's own weights; the
+//! target verifies up to `max_draft` tokens in one parallel pass.  Both
+//! passes share a single KV cache (state buffer), with verification
+//! overwriting the draft's quantized-pass KV — zero memory overhead.
+//!
+//! * [`engine`] — the generate loop: draft (with §III-C early exit), verify,
+//!   accept; plus the plain autoregressive baseline.
+//! * [`accept`] — acceptance rules: greedy longest-prefix and Leviathan
+//!   speculative sampling (lossless for temperature > 0).
+//! * [`trace`] — per-iteration records consumed by the accelerator
+//!   simulator and the report harness.
+//! * [`theory`] — the paper's Eq. 1 (expected accept length) and Eq. 2
+//!   (speedup), validated against simulation in experiment E10.
+
+mod accept;
+mod engine;
+mod theory;
+mod trace;
+
+pub use accept::{greedy_accept, speculative_sample_accept, AcceptOutcome};
+pub use engine::{Engine, GenResult, SpecConfig};
+pub use theory::{expected_accept_length, theoretical_speedup};
+pub use trace::{IterRecord, SpecTrace};

@@ -1,0 +1,66 @@
+//! The paper's analytic model (Eq. 1 and Eq. 2, after [Leviathan et al.]).
+
+/// Eq. 1: expected accept length `L_a = (1 - r^(L+1)) / (1 - r)` for draft
+/// length `L` and per-token accept rate `r`.
+pub fn expected_accept_length(r: f64, draft_len: usize) -> f64 {
+    assert!((0.0..=1.0).contains(&r), "accept rate out of range: {r}");
+    if (1.0 - r).abs() < 1e-12 {
+        return draft_len as f64 + 1.0;
+    }
+    (1.0 - r.powi(draft_len as i32 + 1)) / (1.0 - r)
+}
+
+/// Eq. 2: speedup over autoregressive decoding,
+/// `L_a * T_ar / (L * T_d + T_v)`.
+///
+/// `td_ratio` is `T_d / T_ar` (draft step cost relative to an
+/// autoregressive step) and `tv_ratio` is `T_v / T_ar` (one parallel
+/// verification pass relative to an autoregressive step).
+pub fn theoretical_speedup(r: f64, draft_len: usize, td_ratio: f64, tv_ratio: f64) -> f64 {
+    let la = expected_accept_length(r, draft_len);
+    la / (draft_len as f64 * td_ratio + tv_ratio)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accept_length_limits() {
+        // r = 0: only the bonus token survives each pass.
+        assert!((expected_accept_length(0.0, 16) - 1.0).abs() < 1e-12);
+        // r = 1: every draft accepted, plus the bonus.
+        assert!((expected_accept_length(1.0, 16) - 17.0).abs() < 1e-12);
+        // Monotone in r.
+        let mut prev = 0.0;
+        for i in 0..=10 {
+            let la = expected_accept_length(i as f64 / 10.0, 8);
+            assert!(la >= prev);
+            prev = la;
+        }
+    }
+
+    #[test]
+    fn geometric_series_identity() {
+        // L_a = sum_{i=0..L} r^i.
+        let (r, l): (f64, usize) = (0.9, 6);
+        let direct: f64 = (0..=l).map(|i| r.powi(i as i32)).sum();
+        assert!((expected_accept_length(r, l) - direct).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_scale_speedup() {
+        // Paper's operating point: r ~ 0.976, L = 16, quantize-mode draft
+        // ~3.2x cheaper than an AR step, verify ~ one AR step (parallel,
+        // weight-bound). The model should land near the reported ~2.1x.
+        let s = theoretical_speedup(0.976, 16, 1.0 / 3.2, 1.0);
+        assert!(s > 1.8 && s < 2.6, "speedup {s}");
+    }
+
+    #[test]
+    fn speedup_degrades_with_slow_draft() {
+        let fast = theoretical_speedup(0.95, 8, 0.2, 1.0);
+        let slow = theoretical_speedup(0.95, 8, 0.9, 1.0);
+        assert!(fast > slow);
+    }
+}

@@ -1,0 +1,116 @@
+//! Decode traces: what the engine did, for the accelerator simulator and
+//! the evaluation harness.
+
+/// One draft-verify iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IterRecord {
+    /// Draft tokens proposed this iteration (0 when early exit fired
+    /// immediately; the verify pass then scores only the carry token).
+    pub drafted: u32,
+    /// Draft tokens accepted by verification (<= drafted).
+    pub accepted: u32,
+    /// Whether §III-C early exit stopped the draft before `max_draft`.
+    pub early_exit: bool,
+}
+
+/// Full trace of one generation request.
+#[derive(Debug, Clone, Default)]
+pub struct SpecTrace {
+    pub iterations: Vec<IterRecord>,
+    /// Tokens produced (accepted drafts + bonus tokens).
+    pub produced: usize,
+    /// Prompt length consumed at prefill.
+    pub prompt_len: usize,
+}
+
+impl SpecTrace {
+    /// Total draft-model forward steps (each costs T_d).
+    pub fn draft_steps(&self) -> u64 {
+        self.iterations.iter().map(|i| i.drafted as u64).sum()
+    }
+
+    /// Total verification passes (each costs T_v).
+    pub fn verify_passes(&self) -> u64 {
+        self.iterations.len() as u64
+    }
+
+    /// Mean accepted draft tokens per verify pass.
+    pub fn mean_accept_len(&self) -> f64 {
+        if self.iterations.is_empty() {
+            return 0.0;
+        }
+        // +1: each verify also yields the bonus token, matching Eq. 1's
+        // average accept length L_a convention.
+        self.iterations.iter().map(|i| i.accepted as f64 + 1.0).sum::<f64>()
+            / self.iterations.len() as f64
+    }
+
+    /// Empirical per-token accept rate r: accepted / drafted.
+    pub fn accept_rate(&self) -> f64 {
+        let drafted: u64 = self.draft_steps();
+        if drafted == 0 {
+            return 1.0;
+        }
+        let accepted: u64 = self.iterations.iter().map(|i| i.accepted as u64).sum();
+        accepted as f64 / drafted as f64
+    }
+
+    /// Mean drafted length per iteration (the paper's L-bar in Table II).
+    pub fn mean_draft_len(&self) -> f64 {
+        if self.iterations.is_empty() {
+            return 0.0;
+        }
+        self.draft_steps() as f64 / self.iterations.len() as f64
+    }
+
+    /// Fraction of iterations ended by early exit.
+    pub fn early_exit_rate(&self) -> f64 {
+        if self.iterations.is_empty() {
+            return 0.0;
+        }
+        self.iterations.iter().filter(|i| i.early_exit).count() as f64
+            / self.iterations.len() as f64
+    }
+
+    /// Merge another trace into this one (aggregate statistics).
+    pub fn merge(&mut self, other: &SpecTrace) {
+        self.iterations.extend_from_slice(&other.iterations);
+        self.produced += other.produced;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace() -> SpecTrace {
+        SpecTrace {
+            iterations: vec![
+                IterRecord { drafted: 4, accepted: 4, early_exit: false },
+                IterRecord { drafted: 2, accepted: 1, early_exit: true },
+                IterRecord { drafted: 3, accepted: 0, early_exit: false },
+            ],
+            produced: 8,
+            prompt_len: 64,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let t = trace();
+        assert_eq!(t.draft_steps(), 9);
+        assert_eq!(t.verify_passes(), 3);
+        assert!((t.accept_rate() - 5.0 / 9.0).abs() < 1e-12);
+        assert!((t.mean_accept_len() - (5.0 + 3.0) / 3.0).abs() < 1e-12);
+        assert!((t.early_exit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = trace();
+        let b = trace();
+        a.merge(&b);
+        assert_eq!(a.iterations.len(), 6);
+        assert_eq!(a.produced, 16);
+    }
+}

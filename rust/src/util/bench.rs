@@ -1,0 +1,123 @@
+//! Micro-benchmark harness (criterion replacement for the offline build).
+//!
+//! Each `benches/*.rs` target (built with `harness = false`) constructs a
+//! [`Bench`], registers closures, and prints a stable, parseable report:
+//!
+//! ```text
+//! bench_quantize/encode_1M        1.234 ms/iter  (n=420, p50=1.2ms p95=1.4ms)
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// Target minimum sampling time per benchmark.
+const TARGET: Duration = Duration::from_millis(400);
+const WARMUP: Duration = Duration::from_millis(100);
+const MAX_ITERS: u64 = 1_000_000;
+
+/// One benchmark group (named per paper table/figure).
+pub struct Bench {
+    group: String,
+    results: Vec<(String, Stats)>,
+}
+
+/// Timing statistics over collected samples.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl Bench {
+    pub fn new(group: impl Into<String>) -> Self {
+        let group = group.into();
+        eprintln!("== bench group {group} ==");
+        Self { group, results: Vec::new() }
+    }
+
+    /// Time `f`, adaptively choosing iteration count.
+    pub fn bench(&mut self, name: impl Into<String>, mut f: impl FnMut()) -> Stats {
+        let name = name.into();
+        // Warmup.
+        let warm_start = Instant::now();
+        while warm_start.elapsed() < WARMUP {
+            f();
+        }
+        // Estimate per-iter cost.
+        let t0 = Instant::now();
+        f();
+        let est = t0.elapsed().max(Duration::from_nanos(50));
+        let chunk = ((TARGET.as_nanos() / 20 / est.as_nanos()).max(1) as u64).min(MAX_ITERS);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let mut total_iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < TARGET && total_iters < MAX_ITERS {
+            let t = Instant::now();
+            for _ in 0..chunk {
+                f();
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / chunk as f64);
+            total_iters += chunk;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let stats = Stats {
+            iters: total_iters,
+            mean_ns: mean,
+            p50_ns: samples[samples.len() / 2],
+            p95_ns: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+        };
+        println!(
+            "{}/{name:<40} {:>12}/iter  (n={}, p50={}, p95={})",
+            self.group,
+            fmt_ns(stats.mean_ns),
+            stats.iters,
+            fmt_ns(stats.p50_ns),
+            fmt_ns(stats.p95_ns),
+        );
+        self.results.push((name, stats.clone()));
+        stats
+    }
+
+    /// Report a derived metric (throughput, cycles, joules) alongside timings.
+    pub fn metric(&mut self, name: impl Into<String>, value: f64, unit: &str) {
+        println!("{}/{:<40} {value:>14.4} {unit}", self.group, name.into());
+    }
+
+    pub fn results(&self) -> &[(String, Stats)] {
+        &self.results
+    }
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// A guard against the optimizer eliding benchmarked work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(12.0), "12.0 ns");
+        assert_eq!(fmt_ns(12_500.0), "12.50 µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+    }
+}

@@ -1,0 +1,96 @@
+//! Flag-style CLI argument parsing (`--key value`, `--flag`).
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand, flags, and positional arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator (first element must already exclude argv[0]).
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(key.to_string(), v);
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("report --exp table1 --models m1,m2 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("report"));
+        assert_eq!(a.get("exp"), Some("table1"));
+        assert_eq!(a.get("models"), Some("m1,m2"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn equals_form_and_numbers() {
+        let a = parse("serve --port=8080 --gamma 0.6");
+        assert_eq!(a.get_usize("port", 0), 8080);
+        assert!((a.get_f64("gamma", 0.0) - 0.6).abs() < 1e-9);
+        assert_eq!(a.get_usize("absent", 7), 7);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("run --fast");
+        assert!(a.has("fast"));
+    }
+}

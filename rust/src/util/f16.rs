@@ -1,0 +1,142 @@
+//! IEEE 754 binary16 ("half") conversions.
+//!
+//! Exact `f16 -> f32` widening and round-to-nearest-even `f32 -> f16`
+//! narrowing, matching numpy's behaviour bit-for-bit (cross-checked by the
+//! exhaustive round-trip test below and by the Python-emitted goldens).
+
+/// Widen an FP16 bit pattern to f32 (exact).
+pub fn f16_to_f32(bits: u16) -> f32 {
+    let sign = ((bits >> 15) & 1) as u32;
+    let exp = ((bits >> 10) & 0x1f) as u32;
+    let man = (bits & 0x3ff) as u32;
+    let out = if exp == 0 {
+        if man == 0 {
+            sign << 31 // +/- 0
+        } else {
+            // Subnormal: renormalize.
+            let mut e = 127 - 15 + 1;
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            (sign << 31) | ((e as u32) << 23) | ((m & 0x3ff) << 13)
+        }
+    } else if exp == 0x1f {
+        // Inf / NaN.
+        (sign << 31) | (0xff << 23) | (man << 13)
+    } else {
+        (sign << 31) | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(out)
+}
+
+/// Narrow an f32 to an FP16 bit pattern (round-to-nearest-even).
+pub fn f32_to_f16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 31) & 1) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x7f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN: preserve a quiet NaN payload bit.
+        let m = if man != 0 { 0x200 | ((man >> 13) as u16 & 0x3ff) | 1 } else { 0 };
+        return (sign << 15) | (0x1f << 10) | if man != 0 && m & 0x3ff == 0 { 1 } else { m & 0x3ff };
+    }
+
+    // Unbiased exponent.
+    let e = exp - 127;
+    if e >= 16 {
+        // Overflow -> infinity.
+        return (sign << 15) | (0x1f << 10);
+    }
+    if e >= -14 {
+        // Normal range for f16.
+        let half_exp = (e + 15) as u16;
+        let mut half_man = (man >> 13) as u16;
+        // Round to nearest even on the 13 truncated bits.
+        let round_bits = man & 0x1fff;
+        if round_bits > 0x1000 || (round_bits == 0x1000 && half_man & 1 == 1) {
+            half_man += 1;
+        }
+        let mut out = ((half_exp as u32) << 10) + half_man as u32; // carry may bump exp
+        if out >= 0x7c00 {
+            out = 0x7c00; // rounded up to infinity
+        }
+        return (sign << 15) | out as u16;
+    }
+    if e >= -25 {
+        // Subnormal f16.
+        let shift = (-14 - e) as u32; // 1..=11
+        let full = 0x80_0000 | man; // implicit 1
+        let total_shift = 13 + shift;
+        let half_man = (full >> total_shift) as u16;
+        let round_mask = 1u32 << (total_shift - 1);
+        let rem = full & ((1 << total_shift) - 1);
+        let mut out = half_man;
+        if rem > round_mask || (rem == round_mask && half_man & 1 == 1) {
+            out += 1;
+        }
+        return (sign << 15) | out;
+    }
+    // Underflow -> signed zero.
+    sign << 15
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(1.0), 0x3c00);
+        assert_eq!(f32_to_f16(-2.0), 0xc000);
+        assert_eq!(f32_to_f16(65504.0), 0x7bff); // max finite f16
+        assert_eq!(f32_to_f16(65536.0), 0x7c00); // overflow -> inf
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7c00);
+        assert_eq!(f16_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_to_f32(0x3555), 0.33325195); // ~1/3
+        assert_eq!(f16_to_f32(0x0001), 5.9604645e-8); // smallest subnormal
+    }
+
+    #[test]
+    fn roundtrip_all_finite_f16_patterns() {
+        for bits in 0..=u16::MAX {
+            let exp = (bits >> 10) & 0x1f;
+            if exp == 0x1f {
+                continue; // inf/nan handled separately
+            }
+            let f = f16_to_f32(bits);
+            assert_eq!(f32_to_f16(f), bits, "bits {bits:#06x} -> {f} -> mismatch");
+        }
+    }
+
+    #[test]
+    fn nan_maps_to_nan() {
+        let nan16 = f32_to_f16(f32::NAN);
+        assert_eq!(nan16 & 0x7c00, 0x7c00);
+        assert_ne!(nan16 & 0x3ff, 0);
+        assert!(f16_to_f32(nan16).is_nan());
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1.0 + 2^-11 is exactly halfway between 1.0 and the next f16
+        // (1.0 + 2^-10); RNE keeps the even mantissa (1.0).
+        assert_eq!(f32_to_f16(1.0 + 2f32.powi(-11)), 0x3c00);
+        // 1.0 + 3*2^-11 is halfway between odd and even; rounds up to even.
+        assert_eq!(f32_to_f16(1.0 + 3.0 * 2f32.powi(-11)), 0x3c02);
+        // Just above halfway rounds up.
+        assert_eq!(f32_to_f16(1.0 + 2f32.powi(-11) + 2f32.powi(-20)), 0x3c01);
+    }
+
+    #[test]
+    fn subnormal_rounding() {
+        let tiny = f16_to_f32(0x0001);
+        assert_eq!(f32_to_f16(tiny * 0.49), 0x0000);
+        assert_eq!(f32_to_f16(tiny * 0.51), 0x0001);
+        assert_eq!(f32_to_f16(tiny * 1.5), 0x0002); // halfway -> even
+    }
+}

@@ -1,0 +1,22 @@
+//! In-tree substrates for an offline build.
+//!
+//! The build environment vendors only the `xla` closure, so the usual
+//! ecosystem crates are replaced by small, fully-tested implementations:
+//!
+//! * [`f16`] — IEEE 754 binary16 <-> f32 conversion (round-to-nearest-even),
+//!   the substrate under all BSFP bit manipulation.
+//! * [`json`] — a strict, minimal JSON parser/writer for `manifest.json`,
+//!   task files, goldens and report output.
+//! * [`rng`] — deterministic SplitMix64-based RNG (uniform, range, normal).
+//! * [`cli`] — flag-style argument parsing for the `speq` binary.
+//! * [`bench`] — a micro-benchmark harness (used by `benches/*.rs`, which
+//!   run with `harness = false`).
+//! * [`prop`] — a tiny property-testing driver (randomized invariant checks
+//!   with seed reporting on failure).
+
+pub mod bench;
+pub mod cli;
+pub mod f16;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,64 @@
+//! Tiny property-testing driver.
+//!
+//! `check(cases, name, |rng| ...)` runs the closure `cases` times with
+//! independent seeded RNGs; on panic it reports the failing seed so the case
+//! can be replayed with `check_one(seed, ...)`.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` random cases; each case gets a deterministic seed.
+/// Panics (with the seed) on the first failing case.
+pub fn check(cases: u64, name: &str, mut f: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0x5eed_0000_0000_0000 ^ hash_name(name).wrapping_add(case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::seed_from_u64(seed);
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single case by seed.
+pub fn check_one(seed: u64, f: impl FnOnce(&mut Rng)) {
+    let mut rng = Rng::seed_from_u64(seed);
+    f(&mut rng);
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a.
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(25, "trivial", |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports_seed() {
+        check(10, "fails", |rng| {
+            let v = rng.gen_range(4);
+            assert!(v < 2, "v={v}");
+        });
+    }
+}

@@ -1,0 +1,14 @@
+//! Workloads: task prompt sets, held-out evaluation windows, and trace
+//! persistence.
+//!
+//! The three task families are the paper's benchmark analogs (DESIGN.md §2):
+//! `math` -> GSM8K, `code` -> HumanEval, `chat` -> MT-bench.  Prompts are
+//! generated at artifact-build time by `python/compile/corpus.py`; this
+//! module loads them and provides the held-out stream for the Table I
+//! perplexity harness.
+
+mod tasks;
+mod traces;
+
+pub use tasks::{heldout_windows, load_task, task_names, TaskSet};
+pub use traces::{load_trace, save_trace, TraceRecord};

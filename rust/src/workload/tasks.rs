@@ -1,0 +1,114 @@
+//! Task prompt sets and held-out windows.
+
+use anyhow::{Context, Result};
+
+use crate::model::Manifest;
+use crate::util::json::{self, Value};
+
+/// A loaded task family.
+#[derive(Debug, Clone)]
+pub struct TaskSet {
+    pub task: String,
+    /// Paper benchmark this family substitutes for.
+    pub paper_analog: String,
+    pub prompt_len: usize,
+    /// Byte-token prompts, each exactly `prompt_len` long.
+    pub prompts: Vec<Vec<u8>>,
+}
+
+/// Canonical task order (matches the paper's table columns:
+/// Humaneval, MT-bench, GSM8K -> code, chat, math).
+pub fn task_names() -> [&'static str; 3] {
+    ["code", "chat", "math"]
+}
+
+/// Load one task family from the artifacts.
+pub fn load_task(manifest: &Manifest, task: &str) -> Result<TaskSet> {
+    let rel = manifest
+        .tasks
+        .get(task)
+        .with_context(|| format!("task {task:?} not in manifest"))?;
+    let text = std::fs::read_to_string(manifest.path(rel))
+        .with_context(|| format!("reading task file {rel}"))?;
+    let v = json::parse(&text).context("parsing task file")?;
+    let prompt_len = v.req("prompt_len").ok().and_then(Value::as_usize).unwrap_or(0);
+    let paper_analog =
+        v.get("paper_analog").and_then(Value::as_str).unwrap_or("?").to_string();
+    let mut prompts = Vec::new();
+    for p in v.get("prompts").and_then(Value::as_arr).context("task missing prompts")? {
+        let toks: Vec<u8> = p
+            .as_arr()
+            .context("prompt must be an array")?
+            .iter()
+            .map(|t| t.as_usize().unwrap_or(32) as u8)
+            .collect();
+        anyhow::ensure!(toks.len() == prompt_len, "prompt length mismatch");
+        prompts.push(toks);
+    }
+    anyhow::ensure!(!prompts.is_empty(), "task {task:?} has no prompts");
+    Ok(TaskSet { task: task.to_string(), paper_analog, prompt_len, prompts })
+}
+
+/// Slice the held-out stream into non-overlapping windows of `window`
+/// tokens (the wikitext2-perplexity analog for Table I).
+pub fn heldout_windows(manifest: &Manifest, window: usize, max_windows: usize) -> Result<Vec<Vec<u8>>> {
+    let bytes = std::fs::read(manifest.path(&manifest.heldout))
+        .with_context(|| format!("reading {}", manifest.heldout))?;
+    let mut windows = Vec::new();
+    let mut off = 0;
+    while off + window <= bytes.len() && windows.len() < max_windows {
+        windows.push(bytes[off..off + window].to_vec());
+        off += window;
+    }
+    anyhow::ensure!(!windows.is_empty(), "held-out stream too short");
+    Ok(windows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&root).ok()
+    }
+
+    #[test]
+    fn loads_all_three_tasks() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping (no artifacts)");
+            return;
+        };
+        for t in task_names() {
+            let ts = load_task(&m, t).unwrap();
+            assert!(!ts.prompts.is_empty());
+            assert_eq!(ts.prompt_len, m.prompt_len);
+            for p in &ts.prompts {
+                assert_eq!(p.len(), ts.prompt_len);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_analog_mapping() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping (no artifacts)");
+            return;
+        };
+        assert_eq!(load_task(&m, "math").unwrap().paper_analog, "GSM8K");
+        assert_eq!(load_task(&m, "code").unwrap().paper_analog, "Humaneval");
+        assert_eq!(load_task(&m, "chat").unwrap().paper_analog, "MT-bench");
+    }
+
+    #[test]
+    fn heldout_windows_are_disjoint_and_sized() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping (no artifacts)");
+            return;
+        };
+        let w = heldout_windows(&m, 256, 8).unwrap();
+        assert_eq!(w.len(), 8);
+        assert!(w.iter().all(|x| x.len() == 256));
+        assert_ne!(w[0], w[1]);
+    }
+}

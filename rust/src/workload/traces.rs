@@ -1,0 +1,123 @@
+//! Trace persistence: measured engine traces are cached under
+//! `artifacts/results/` so the hardware experiments (Tables III–IV,
+//! Figs. 7–9) can be regenerated without re-running the engine.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::specdec::{IterRecord, SpecTrace};
+use crate::util::json::{self, Value};
+
+/// A persisted trace with its provenance.
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    pub model: String,
+    pub task: String,
+    pub max_draft: usize,
+    pub gamma: f32,
+    pub gen_len: usize,
+    pub trace: SpecTrace,
+}
+
+impl TraceRecord {
+    pub fn file_name(model: &str, task: &str, max_draft: usize, gamma: f32) -> String {
+        format!("trace_{model}_{task}_L{max_draft}_g{:02}.json", (gamma * 10.0).round() as u32)
+    }
+}
+
+/// Save a trace record as JSON.
+pub fn save_trace(dir: &Path, rec: &TraceRecord) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut obj = BTreeMap::new();
+    obj.insert("model".into(), Value::Str(rec.model.clone()));
+    obj.insert("task".into(), Value::Str(rec.task.clone()));
+    obj.insert("max_draft".into(), Value::Num(rec.max_draft as f64));
+    obj.insert("gamma".into(), Value::Num(rec.gamma as f64));
+    obj.insert("gen_len".into(), Value::Num(rec.gen_len as f64));
+    obj.insert("produced".into(), Value::Num(rec.trace.produced as f64));
+    obj.insert("prompt_len".into(), Value::Num(rec.trace.prompt_len as f64));
+    let iters: Vec<Value> = rec
+        .trace
+        .iterations
+        .iter()
+        .map(|it| {
+            Value::Arr(vec![
+                Value::Num(it.drafted as f64),
+                Value::Num(it.accepted as f64),
+                Value::Num(if it.early_exit { 1.0 } else { 0.0 }),
+            ])
+        })
+        .collect();
+    obj.insert("iterations".into(), Value::Arr(iters));
+    let path = dir.join(TraceRecord::file_name(&rec.model, &rec.task, rec.max_draft, rec.gamma));
+    std::fs::write(&path, json::write(&Value::Obj(obj)))
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Load a trace record if present.
+pub fn load_trace(
+    dir: &Path,
+    model: &str,
+    task: &str,
+    max_draft: usize,
+    gamma: f32,
+) -> Option<TraceRecord> {
+    let path = dir.join(TraceRecord::file_name(model, task, max_draft, gamma));
+    let text = std::fs::read_to_string(path).ok()?;
+    let v = json::parse(&text).ok()?;
+    let mut iterations = Vec::new();
+    for it in v.get("iterations")?.as_arr()? {
+        let row = it.as_arr()?;
+        iterations.push(IterRecord {
+            drafted: row.first()?.as_f64()? as u32,
+            accepted: row.get(1)?.as_f64()? as u32,
+            early_exit: row.get(2)?.as_f64()? != 0.0,
+        });
+    }
+    Some(TraceRecord {
+        model: model.to_string(),
+        task: task.to_string(),
+        max_draft,
+        gamma,
+        gen_len: v.get("gen_len")?.as_usize()?,
+        trace: SpecTrace {
+            iterations,
+            produced: v.get("produced")?.as_usize()?,
+            prompt_len: v.get("prompt_len")?.as_usize()?,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("speq_trace_test");
+        let rec = TraceRecord {
+            model: "m".into(),
+            task: "math".into(),
+            max_draft: 16,
+            gamma: 0.6,
+            gen_len: 256,
+            trace: SpecTrace {
+                iterations: vec![
+                    IterRecord { drafted: 16, accepted: 12, early_exit: false },
+                    IterRecord { drafted: 3, accepted: 3, early_exit: true },
+                ],
+                produced: 17,
+                prompt_len: 128,
+            },
+        };
+        save_trace(&dir, &rec).unwrap();
+        let back = load_trace(&dir, "m", "math", 16, 0.6).unwrap();
+        assert_eq!(back.trace.iterations, rec.trace.iterations);
+        assert_eq!(back.trace.produced, 17);
+        assert_eq!(back.gen_len, 256);
+        assert!(load_trace(&dir, "m", "code", 16, 0.6).is_none());
+    }
+}

@@ -1,0 +1,192 @@
+//! Edge cases and failure injection: malformed artifacts, boundary
+//! generation lengths, queue stress.
+
+use speq::coordinator::{Priority, RequestQueue};
+use speq::model::{Manifest, ModelRuntime, SamplingParams};
+use speq::runtime::Runtime;
+use speq::specdec::{Engine, SpecConfig};
+
+fn artifacts_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_root().join("manifest.json").exists()
+}
+
+#[test]
+fn missing_manifest_is_a_clear_error() {
+    let err = Manifest::load("/nonexistent/path").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn corrupt_manifest_is_rejected() {
+    let dir = std::env::temp_dir().join("speq_corrupt_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{ not json !!").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+    // Structurally valid JSON but missing fields:
+    std::fs::write(dir.join("manifest.json"), r#"{"version": 1}"#).unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn truncated_weights_bin_is_rejected() {
+    if !have_artifacts() {
+        return;
+    }
+    let m = Manifest::load(artifacts_root()).unwrap();
+    let entry = m.model("vicuna-7b-tiny").unwrap();
+    let dir = std::env::temp_dir().join("speq_truncated_weights");
+    std::fs::create_dir_all(&dir).unwrap();
+    let full = std::fs::read(m.path(&entry.weights)).unwrap();
+    let trunc_path = dir.join("weights.bin");
+    std::fs::write(&trunc_path, &full[..full.len() / 2]).unwrap();
+    let err = speq::model::load_weights(&trunc_path, entry).unwrap_err();
+    assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+}
+
+#[test]
+fn unknown_model_name_is_a_clear_error() {
+    if !have_artifacts() {
+        return;
+    }
+    let m = Manifest::load(artifacts_root()).unwrap();
+    let err = m.model("gpt-5").unwrap_err();
+    assert!(format!("{err}").contains("not in manifest"));
+}
+
+#[test]
+fn engine_boundary_generation_lengths() {
+    if !have_artifacts() {
+        return;
+    }
+    let m = Manifest::load(artifacts_root()).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let model = ModelRuntime::load(&rt, &m, "vicuna-7b-tiny").unwrap();
+    let engine = Engine::new(&model);
+    // gen_len 1: exactly one token, no draft iterations needed.
+    let r = engine
+        .generate_spec(b"Q: ", &SpecConfig { gen_len: 1, ..Default::default() })
+        .unwrap();
+    assert_eq!(r.tokens.len(), 1);
+    // Oversized prompt: uses the trailing window, still works.
+    let huge = vec![b'a'; 10_000];
+    let r = engine
+        .generate_spec(&huge, &SpecConfig { gen_len: 4, ..Default::default() })
+        .unwrap();
+    assert_eq!(r.tokens.len(), 4);
+    // Requesting more than KV capacity: clamped, not crashed.
+    let r = engine
+        .generate_spec(b"Q: ", &SpecConfig { gen_len: 100_000, ..Default::default() })
+        .unwrap();
+    assert!(r.tokens.len() <= model.cache_len());
+    // max_draft beyond graph slots is rejected.
+    let err = engine
+        .generate_spec(b"Q: ", &SpecConfig { max_draft: 99, ..Default::default() })
+        .unwrap_err();
+    assert!(format!("{err}").contains("slots"));
+}
+
+#[test]
+fn engine_ar_spec_agree_at_tiny_lengths() {
+    if !have_artifacts() {
+        return;
+    }
+    let m = Manifest::load(artifacts_root()).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let model = ModelRuntime::load(&rt, &m, "llama3.2-3b-tiny").unwrap();
+    let engine = Engine::new(&model);
+    for gen_len in [1usize, 2, 3, 17, 18] {
+        let ar = engine
+            .generate_ar(b"def add_2(x):\n    return ", gen_len, SamplingParams::greedy())
+            .unwrap();
+        let spec = engine
+            .generate_spec(
+                b"def add_2(x):\n    return ",
+                &SpecConfig { gen_len, ..Default::default() },
+            )
+            .unwrap();
+        assert_eq!(ar.tokens, spec.tokens, "mismatch at gen_len {gen_len}");
+    }
+}
+
+#[test]
+fn queue_stress_many_producers() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{mpsc, Arc};
+    let q = Arc::new(RequestQueue::new(1024));
+    let popped = Arc::new(AtomicUsize::new(0));
+    let n_producers = 8;
+    let per = 100;
+
+    let mut consumers = Vec::new();
+    for _ in 0..4 {
+        let q = q.clone();
+        let popped = popped.clone();
+        consumers.push(std::thread::spawn(move || {
+            while q.pop().is_some() {
+                popped.fetch_add(1, Ordering::Relaxed);
+            }
+        }));
+    }
+    let mut producers = Vec::new();
+    for p in 0..n_producers {
+        let q = q.clone();
+        producers.push(std::thread::spawn(move || {
+            for i in 0..per {
+                let (tx, _rx) = mpsc::channel();
+                // _rx dropped: responses would be discarded; fine for stress.
+                let req = speq::coordinator::Request {
+                    id: (p * per + i) as u64,
+                    prompt: vec![b'x'],
+                    gen_len: 1,
+                    max_draft: 16,
+                    gamma: 0.6,
+                    sampling: SamplingParams::greedy(),
+                    mode: speq::coordinator::Mode::Speculative,
+                    priority: if i % 2 == 0 { Priority::Interactive } else { Priority::Batch },
+                    session: None,
+                    submitted: std::time::Instant::now(),
+                    respond_to: tx,
+                };
+                while q.submit(req_clone_hack(&req)).is_err() {
+                    std::thread::yield_now();
+                }
+                drop(req);
+            }
+        }));
+    }
+    for h in producers {
+        h.join().unwrap();
+    }
+    // Drain, then close.
+    while !q.is_empty() {
+        std::thread::yield_now();
+    }
+    q.close();
+    for h in consumers {
+        h.join().unwrap();
+    }
+    assert_eq!(popped.load(Ordering::Relaxed), n_producers * per);
+}
+
+// Request isn't Clone (contains a Sender we want unique); rebuild instead.
+fn req_clone_hack(r: &speq::coordinator::Request) -> speq::coordinator::Request {
+    let (tx, _rx) = std::sync::mpsc::channel();
+    speq::coordinator::Request {
+        id: r.id,
+        prompt: r.prompt.clone(),
+        gen_len: r.gen_len,
+        max_draft: r.max_draft,
+        gamma: r.gamma,
+        sampling: r.sampling,
+        mode: r.mode,
+        priority: r.priority,
+        session: r.session,
+        submitted: r.submitted,
+        respond_to: tx,
+    }
+}

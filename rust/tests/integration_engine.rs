@@ -1,0 +1,114 @@
+//! Integration: the speculative decoding engine over real artifacts.
+
+use speq::model::{Manifest, ModelRuntime, SamplingParams};
+use speq::runtime::Runtime;
+use speq::specdec::{Engine, SpecConfig};
+
+fn load_model(name: &str) -> Option<ModelRuntime> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let m = match Manifest::load(&root) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping integration test (no artifacts): {e}");
+            return None;
+        }
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    Some(ModelRuntime::load(&rt, &m, name).expect("model load"))
+}
+
+const PROMPT: &[u8] = b"Q: bob has 12 coins and wins 7 more. how many coins now?\nA: ";
+
+#[test]
+fn greedy_spec_decode_is_lossless() {
+    // The paper's core claim: speculative output == the full model's output,
+    // token for token.
+    let Some(model) = load_model("vicuna-7b-tiny") else { return };
+    let engine = Engine::new(&model);
+    let gen_len = 96;
+    let ar = engine.generate_ar(PROMPT, gen_len, SamplingParams::greedy()).expect("ar");
+    let cfg = SpecConfig { gen_len, ..Default::default() };
+    let spec = engine.generate_spec(PROMPT, &cfg).expect("spec");
+    assert_eq!(
+        ar.tokens,
+        spec.tokens,
+        "lossless violation:\n ar={:?}\n spec={:?}",
+        String::from_utf8_lossy(&ar.tokens),
+        String::from_utf8_lossy(&spec.tokens)
+    );
+}
+
+#[test]
+fn accept_rate_is_high_for_bsfp_draft() {
+    let Some(model) = load_model("vicuna-7b-tiny") else { return };
+    let engine = Engine::new(&model);
+    let cfg = SpecConfig { gen_len: 128, ..Default::default() };
+    let res = engine.generate_spec(PROMPT, &cfg).expect("spec");
+    let r = res.trace.accept_rate();
+    // Paper reports ~0.97 on real models; the tiny analogs should clear a
+    // loose bar (the in-distribution prompt keeps entropy moderate).
+    assert!(r > 0.6, "accept rate too low: {r}");
+    assert!(res.trace.mean_accept_len() > 2.0, "mean accept {}", res.trace.mean_accept_len());
+}
+
+#[test]
+fn spec_decode_reduces_full_model_passes() {
+    let Some(model) = load_model("vicuna-7b-tiny") else { return };
+    let engine = Engine::new(&model);
+    let cfg = SpecConfig { gen_len: 128, ..Default::default() };
+    let res = engine.generate_spec(PROMPT, &cfg).expect("spec");
+    // Verification passes should be far fewer than tokens produced — that
+    // is the whole point of speculative decoding.
+    assert!(
+        (res.trace.verify_passes() as usize) * 2 < res.trace.produced,
+        "verify passes {} vs produced {}",
+        res.trace.verify_passes(),
+        res.trace.produced
+    );
+}
+
+#[test]
+fn tight_gamma_causes_early_exits() {
+    let Some(model) = load_model("vicuna-7b-tiny") else { return };
+    let engine = Engine::new(&model);
+    let strict = SpecConfig { gen_len: 64, gamma: 0.99, ..Default::default() };
+    let res = engine.generate_spec(PROMPT, &strict).expect("spec");
+    let loose = SpecConfig { gen_len: 64, gamma: 0.0, ..Default::default() };
+    let res_loose = engine.generate_spec(PROMPT, &loose).expect("spec");
+    assert!(
+        res.trace.mean_draft_len() <= res_loose.trace.mean_draft_len(),
+        "strict gamma should shorten drafts: {} vs {}",
+        res.trace.mean_draft_len(),
+        res_loose.trace.mean_draft_len()
+    );
+    // gamma = 0 must never early-exit.
+    assert_eq!(res_loose.trace.early_exit_rate(), 0.0);
+}
+
+#[test]
+fn sampling_mode_generates_plausible_text() {
+    let Some(model) = load_model("vicuna-7b-tiny") else { return };
+    let engine = Engine::new(&model);
+    let cfg = SpecConfig {
+        gen_len: 64,
+        sampling: SamplingParams { temperature: 0.8, seed: 42 },
+        ..Default::default()
+    };
+    let res = engine.generate_spec(PROMPT, &cfg).expect("spec");
+    assert_eq!(res.tokens.len(), 64);
+    let printable =
+        res.tokens.iter().filter(|&&b| (32..127).contains(&b) || b == b'\n').count();
+    assert!(printable > 48, "sampled text implausible: {:?}", res.tokens);
+}
+
+#[test]
+fn lossless_across_models_and_prompts() {
+    // Spot-check a second model and a code-style prompt.
+    let Some(model) = load_model("llama3.2-3b-tiny") else { return };
+    let engine = Engine::new(&model);
+    let prompt: &[u8] = b"def add_3(x):\n    return ";
+    let ar = engine.generate_ar(prompt, 64, SamplingParams::greedy()).expect("ar");
+    let cfg = SpecConfig { gen_len: 64, ..Default::default() };
+    let spec = engine.generate_spec(prompt, &cfg).expect("spec");
+    assert_eq!(ar.tokens, spec.tokens);
+}

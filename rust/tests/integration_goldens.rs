@@ -1,0 +1,131 @@
+//! Cross-layer golden tests: the Rust BSFP codec must agree bit-for-bit
+//! with the Python reference that produced the artifacts.
+
+use speq::bsfp::{encode_bits, eq4_scales, f16_bits_to_f32, f32_to_f16_bits, quantize_tensor};
+use speq::model::Manifest;
+use speq::util::json;
+
+fn manifest() -> Option<Manifest> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Manifest::load(&root) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping goldens test (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn exhaustive_encode_matches_python_goldens() {
+    // goldens.bin: for all 32768 valid patterns (exp <= 15), ordered by
+    // bits ascending: [32768 x u8 W_q][32768 x u16 W_r (LE)].
+    let Some(m) = manifest() else { return };
+    let raw = std::fs::read(m.path(&m.goldens_bin)).expect("goldens.bin");
+    assert_eq!(raw.len(), 32768 + 2 * 32768);
+    let (wq_bytes, wr_bytes) = raw.split_at(32768);
+    let mut idx = 0usize;
+    for s in 0..2u16 {
+        for e in 0..16u16 {
+            for man in 0..1024u16 {
+                let bits = (s << 15) | (e << 10) | man;
+                let c = encode_bits(bits);
+                let golden_wq = wq_bytes[idx];
+                let golden_wr =
+                    u16::from_le_bytes([wr_bytes[2 * idx], wr_bytes[2 * idx + 1]]);
+                assert_eq!(c.w_q, golden_wq, "W_q mismatch at bits {bits:#06x}");
+                assert_eq!(c.w_r, golden_wr, "W_r mismatch at bits {bits:#06x}");
+                idx += 1;
+            }
+        }
+    }
+    assert_eq!(idx, 32768);
+}
+
+#[test]
+fn qmatmul_golden_vector_matches() {
+    // goldens.json carries an end-to-end qmatmul vector: FP16 weight bits,
+    // the Python-computed packed W_q + Eq.4 scales, and the expected y.
+    let Some(m) = manifest() else { return };
+    let text = std::fs::read_to_string(m.path(&m.goldens_json)).expect("goldens.json");
+    let v = json::parse(&text).expect("parse goldens.json");
+    let q = v.get("qmatmul").expect("qmatmul golden");
+    let k = q.get("k").unwrap().as_usize().unwrap();
+    let n = q.get("n").unwrap().as_usize().unwrap();
+    let w_bits: Vec<u16> = q
+        .get("w_f16_bits").unwrap().as_arr().unwrap()
+        .iter().map(|x| x.as_f64().unwrap() as u16).collect();
+    let x: Vec<f32> = q
+        .get("x").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_f64().unwrap() as f32).collect();
+    let y_expect: Vec<f32> = q
+        .get("y").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_f64().unwrap() as f32).collect();
+    let scales_expect: Vec<f32> = q
+        .get("scales").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_f64().unwrap() as f32).collect();
+    let wq_expect: Vec<u8> = q
+        .get("wq_packed").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_f64().unwrap() as u8).collect();
+
+    let w: Vec<f32> = w_bits.iter().map(|&b| f16_bits_to_f32(b)).collect();
+    let qt = quantize_tensor(&w, k, n);
+    assert_eq!(qt.packed_wq(), wq_expect, "packed W_q differs from python");
+    for (i, (&a, &b)) in qt.scales.iter().zip(&scales_expect).enumerate() {
+        assert!((a - b).abs() <= b.abs() * 1e-5 + 1e-7, "scale {i}: {a} vs {b}");
+    }
+    // y = x @ dequant_draft
+    let d = qt.dequant_draft();
+    let mut y = vec![0f32; n];
+    for i in 0..k {
+        for j in 0..n {
+            y[j] += x[i] * d[i * n + j];
+        }
+    }
+    for (j, (&a, &b)) in y.iter().zip(&y_expect).enumerate() {
+        assert!((a - b).abs() <= b.abs() * 1e-4 + 1e-4, "y[{j}]: {a} vs {b}");
+    }
+}
+
+#[test]
+fn eq4_golden_scale_matches() {
+    let Some(m) = manifest() else { return };
+    let text = std::fs::read_to_string(m.path(&m.goldens_json)).expect("goldens.json");
+    let v = json::parse(&text).expect("parse");
+    let g = v.get("eq4").expect("eq4 golden");
+    let bits: Vec<u16> = g
+        .get("w_bits").unwrap().as_arr().unwrap()
+        .iter().map(|x| x.as_f64().unwrap() as u16).collect();
+    let expect = g.get("scale").unwrap().as_f64().unwrap() as f32;
+    let w: Vec<f32> = bits.iter().map(|&b| f16_bits_to_f32(b)).collect();
+    let q: Vec<f32> = w
+        .iter()
+        .map(|&v| {
+            let c = encode_bits(f32_to_f16_bits(v));
+            speq::bsfp::decode_draft_exp(c.w_q);
+            let (s, qe) = speq::bsfp::decode_draft_exp(c.w_q);
+            let mag = ((qe as i32 - 15) as f32).exp2();
+            if s == 1 { -mag } else { mag }
+        })
+        .collect();
+    let scales = eq4_scales(&w, &q, 128, 1);
+    assert!((scales[0] - expect).abs() <= expect.abs() * 1e-5 + 1e-7,
+            "{} vs {}", scales[0], expect);
+}
+
+#[test]
+fn weights_bin_exponents_satisfy_premise() {
+    // Every trained model's linear weights must use only exponents [0, 15]
+    // (the Fig. 2(c) premise BSFP relies on).
+    let Some(m) = manifest() else { return };
+    let rt = speq::runtime::Runtime::cpu().unwrap();
+    for name in m.model_names() {
+        let model = speq::model::ModelRuntime::load(&rt, &m, &name).unwrap();
+        for lin in model.entry.linears.clone() {
+            let hist =
+                speq::bsfp::exponent_histogram(model.weights.f32(&lin).iter().copied());
+            let high: u64 = hist[16..].iter().sum();
+            assert_eq!(high, 0, "{name}/{lin} has exponents >= 16");
+        }
+    }
+}

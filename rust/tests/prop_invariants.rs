@@ -1,0 +1,198 @@
+//! Property-based invariants (randomized, seeded; see util::prop).
+
+use speq::bsfp::{
+    decode_full_bits, encode_bits, pack_nibbles, quantize_tensor, unpack_nibbles,
+    GROUP_SIZE,
+};
+use speq::quant::{quantize_fp4, quantize_int, Fp4Variant, IntMethod};
+use speq::specdec::{expected_accept_length, IterRecord, SpecTrace};
+use speq::util::json;
+use speq::util::prop::check;
+use speq::util::rng::Rng;
+
+#[test]
+fn prop_bsfp_roundtrip_random_tensors() {
+    check(50, "bsfp_roundtrip", |rng| {
+        let k = GROUP_SIZE * rng.gen_between(1, 4);
+        let n = rng.gen_between(1, 12);
+        let amp = [0.02f32, 0.2, 1.5, 3.5][rng.gen_range(4)];
+        let w = rng.normal_vec(k * n, amp);
+        let qt = quantize_tensor(&w, k, n);
+        // Lossless: reconstruct_full == FP16(w * tensor_scale) / tensor_scale.
+        let rec = qt.reconstruct_full();
+        for (i, (&r, &orig)) in rec.iter().zip(&w).enumerate() {
+            let expect = speq::bsfp::f16_bits_to_f32(speq::bsfp::f32_to_f16_bits(
+                orig * qt.tensor_scale,
+            )) / qt.tensor_scale;
+            assert!(
+                (r - expect).abs() <= expect.abs() * 1e-6 + 1e-9,
+                "idx {i}: {r} vs {expect}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_quantize_deterministic() {
+    check(20, "quantize_deterministic", |rng| {
+        let w = rng.normal_vec(GROUP_SIZE * 2 * 4, 0.1);
+        let a = quantize_tensor(&w, GROUP_SIZE * 2, 4);
+        let b = quantize_tensor(&w, GROUP_SIZE * 2, 4);
+        assert_eq!(a.w_q, b.w_q);
+        assert_eq!(a.w_r, b.w_r);
+        assert_eq!(a.scales, b.scales);
+    });
+}
+
+#[test]
+fn prop_scales_positive_and_bounded() {
+    // Eq. 4 scales must be positive and within the dequant bracket: the
+    // draft magnitudes sit within a factor of ~4 of the true values, so
+    // the MSE-optimal scale stays in a modest range.
+    check(40, "scales_bounded", |rng| {
+        let w = rng.normal_vec(GROUP_SIZE * 3, 0.3);
+        let qt = quantize_tensor(&w, GROUP_SIZE, 3);
+        for &s in &qt.scales {
+            assert!(s > 0.0 && s < 8.0, "scale out of range: {s}");
+        }
+    });
+}
+
+#[test]
+fn prop_pack_roundtrip() {
+    check(40, "pack_roundtrip", |rng| {
+        let k = 2 * rng.gen_between(1, 64);
+        let n = rng.gen_between(1, 16);
+        let w: Vec<u8> = (0..k * n).map(|_| (rng.gen_range(16)) as u8).collect();
+        assert_eq!(unpack_nibbles(&pack_nibbles(&w, k, n), k, n), w);
+    });
+}
+
+#[test]
+fn prop_encode_decode_is_identity_under_prescale() {
+    check(30, "encode_identity", |rng| {
+        // Any f32 value scaled into (|v| < 2) range round-trips bit-exactly.
+        for _ in 0..256 {
+            let v = (rng.gen_f32() - 0.5) * 3.9;
+            let bits = speq::bsfp::f32_to_f16_bits(v);
+            let exp = (bits >> 10) & 0x1f;
+            if exp > 15 {
+                continue;
+            }
+            assert_eq!(decode_full_bits(encode_bits(bits)), bits);
+        }
+    });
+}
+
+#[test]
+fn prop_fp4_variants_never_flip_sign() {
+    check(20, "fp4_sign", |rng| {
+        let w = rng.normal_vec(GROUP_SIZE * 2 * 2, 0.2);
+        for variant in [Fp4Variant::E1M2, Fp4Variant::E2M1, Fp4Variant::E3M0] {
+            let q = quantize_fp4(&w, GROUP_SIZE * 2, 2, variant);
+            for (&orig, &qv) in w.iter().zip(&q) {
+                assert!(
+                    orig == 0.0 || qv == 0.0 || orig.signum() == qv.signum(),
+                    "{variant:?} flipped sign: {orig} -> {qv}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_int_quant_bounded_by_range() {
+    check(20, "int_bounded", |rng| {
+        let w = rng.normal_vec(GROUP_SIZE * 2, 0.2);
+        for m in [IntMethod::olive(4), IntMethod::olive(8), IntMethod::tender(4)] {
+            let q = quantize_int(&w, GROUP_SIZE * 2, 1, m);
+            let wmax = w.iter().fold(0f32, |a, &b| a.max(b.abs()));
+            for &qv in &q {
+                assert!(qv.abs() <= wmax * 4.5, "{} exceeded range: {qv}", m.name());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_trace_statistics_consistent() {
+    check(40, "trace_stats", |rng| {
+        let iters: Vec<IterRecord> = (0..rng.gen_between(1, 40))
+            .map(|_| {
+                let drafted = rng.gen_between(1, 17) as u32;
+                IterRecord {
+                    drafted,
+                    accepted: rng.gen_range(drafted as usize + 1) as u32,
+                    early_exit: rng.gen_bool(0.3),
+                }
+            })
+            .collect();
+        let produced =
+            iters.iter().map(|i| i.accepted as usize + 1).sum::<usize>();
+        let t = SpecTrace { iterations: iters, produced, prompt_len: 64 };
+        assert!(t.accept_rate() >= 0.0 && t.accept_rate() <= 1.0);
+        assert!(t.mean_accept_len() >= 1.0);
+        assert!(t.mean_accept_len() <= 17.0 + 1e-9);
+        assert!(t.mean_draft_len() >= 1.0 && t.mean_draft_len() <= 16.0);
+        // produced tokens == sum(accepted + bonus).
+        assert_eq!(t.produced, produced);
+    });
+}
+
+#[test]
+fn prop_eq1_bounds_hold() {
+    check(40, "eq1_bounds", |rng| {
+        let r = rng.gen_f64();
+        let l = rng.gen_between(1, 21);
+        let la = expected_accept_length(r, l);
+        assert!(la >= 1.0 - 1e-12, "La < 1: {la}");
+        assert!(la <= l as f64 + 1.0 + 1e-12, "La > L+1: {la}");
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    check(60, "json_roundtrip", |rng| {
+        // Build a random JSON value, write, parse, compare.
+        fn gen(rng: &mut Rng, depth: usize) -> json::Value {
+            match if depth > 2 { rng.gen_range(4) } else { rng.gen_range(6) } {
+                0 => json::Value::Null,
+                1 => json::Value::Bool(rng.gen_bool(0.5)),
+                2 => json::Value::Num((rng.gen_f64() * 2e6).round() / 64.0),
+                3 => {
+                    let n = rng.gen_range(12);
+                    json::Value::Str(
+                        (0..n).map(|_| "ab\"\\\nξ☃e "
+                            .chars().nth(rng.gen_range(9)).unwrap()).collect(),
+                    )
+                }
+                4 => json::Value::Arr((0..rng.gen_range(5)).map(|_| gen(rng, depth + 1)).collect()),
+                _ => json::Value::Obj(
+                    (0..rng.gen_range(5))
+                        .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = gen(rng, 0);
+        let text = json::write(&v);
+        let back = json::parse(&text).expect("reparse");
+        assert_eq!(back, v, "roundtrip failed for {text}");
+    });
+}
+
+#[test]
+fn prop_accel_cycles_monotone_in_work() {
+    use speq::accel::{Accel, ArrayMode};
+    check(25, "accel_monotone", |rng| {
+        let a = Accel::default();
+        let k = 128 * rng.gen_between(1, 32);
+        let n = 128 * rng.gen_between(1, 32);
+        let c1 = a.gemm_cost(1, k, n, ArrayMode::Full, 2.0);
+        let c2 = a.gemm_cost(1, 2 * k, n, ArrayMode::Full, 2.0);
+        assert!(c2.cycles >= c1.cycles);
+        assert!(c2.energy.total_pj() >= c1.energy.total_pj());
+        let q = a.gemm_cost(1, k, n, ArrayMode::Quant, 0.625);
+        assert!(q.cycles <= c1.cycles, "quant mode slower than full");
+    });
+}
