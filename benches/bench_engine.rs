@@ -1,50 +1,59 @@
-//! Engine hot path over PJRT (needs artifacts; skips gracefully).
+//! Engine hot path over the execution backend (builtin native model; uses
+//! trained artifacts automatically when present).
 //! Run: cargo bench --bench bench_engine
 
-use speq::model::{Manifest, ModelRuntime, SamplingParams};
-use speq::runtime::Runtime;
+use speq::model::SamplingParams;
+use speq::runtime::{load_backend, Backend, ModelSource};
 use speq::specdec::{Engine, SpecConfig};
 use speq::util::bench::{black_box, Bench};
 
 fn main() {
-    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let Ok(manifest) = Manifest::load(&root) else {
-        eprintln!("bench_engine: no artifacts (run `make artifacts`), skipping");
-        return;
-    };
-    let rt = Runtime::cpu().expect("PJRT CPU client");
-    let model = ModelRuntime::load(&rt, &manifest, "vicuna-7b-tiny").expect("model");
-    let engine = Engine::new(&model);
-    let mut b = Bench::new("bench_engine");
+    let source = ModelSource::auto();
+    let backend = load_backend(&source, "vicuna-7b-tiny").expect("backend");
+    let model = backend.as_ref();
+    let engine = Engine::new(model);
+    let mut b = Bench::new(format!("bench_engine[{}]", model.backend_name()));
     let prompt: &[u8] = b"Q: ada has 3 apples and finds 4 more. how many apples now?\nA: ";
 
     // Single-step costs (the request-path atoms).
     let plen = prompt.len();
     let mut toks: Vec<i32> = prompt.iter().map(|&x| x as i32).collect();
     toks.resize(model.prefill_len(), b' ' as i32);
-    let pre = model.prefill(&toks, plen).expect("prefill");
     b.bench("prefill_256", || {
-        black_box(model.prefill(&toks, plen).expect("prefill"));
+        black_box(model.prefill(&toks, plen).expect("prefill").logits.len());
     });
+    // Steps thread the state through an Option so each iteration measures
+    // exactly one step (re-decoding position `plen` overwrites one KV row).
+    let mut state = Some(model.prefill(&toks, plen).expect("prefill").state);
     b.bench("decode_full_step", || {
-        black_box(model.decode_full(65, plen, &pre.state).expect("step"));
+        let out = model.decode_full(65, plen, state.take().unwrap()).expect("step");
+        black_box(out.logits.len());
+        state = Some(out.state);
     });
+    let mut state = Some(model.prefill(&toks, plen).expect("prefill").state);
     b.bench("decode_draft_step", || {
-        black_box(model.decode_draft(65, plen, &pre.state).expect("step"));
+        let out = model.decode_draft(65, plen, state.take().unwrap()).expect("step");
+        black_box(out.logits.len());
+        state = Some(out.state);
     });
     let vtokens: Vec<i32> = (0..model.slots() as i32).collect();
+    let mut state = Some(model.prefill(&toks, plen).expect("prefill").state);
     b.bench("verify_pass_full_slots", || {
-        black_box(model.verify(&vtokens, plen, &pre.state).expect("verify"));
+        let out = model.verify(&vtokens, plen, state.take().unwrap()).expect("verify");
+        black_box(out.logits.len());
+        state = Some(out.state);
     });
 
     // End-to-end generation (64 tokens).
     let cfg = SpecConfig { gen_len: 64, ..Default::default() };
     let s = b.bench("generate_spec_64tok", || {
-        black_box(engine.generate_spec(prompt, &cfg).expect("spec"));
+        black_box(engine.generate_spec(prompt, &cfg).expect("spec").tokens.len());
     });
     b.metric("spec_tokens_per_s", 64.0 / (s.mean_ns * 1e-9), "tok/s (CPU)");
     let s = b.bench("generate_ar_64tok", || {
-        black_box(engine.generate_ar(prompt, 64, SamplingParams::greedy()).expect("ar"));
+        black_box(
+            engine.generate_ar(prompt, 64, SamplingParams::greedy()).expect("ar").tokens.len(),
+        );
     });
     b.metric("ar_tokens_per_s", 64.0 / (s.mean_ns * 1e-9), "tok/s (CPU)");
 }

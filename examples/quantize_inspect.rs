@@ -1,25 +1,31 @@
-//! Inspect BSFP quantization on a real trained weight tensor: exponent
-//! histogram (Fig. 2c), bit-sharing layout, remap statistics, and the
-//! lossless reconstruction property — the paper's §III walked end to end.
+//! Inspect BSFP quantization on a real weight tensor: exponent histogram
+//! (Fig. 2c), bit-sharing layout, remap statistics, and the lossless
+//! reconstruction property — the paper's §III walked end to end.
 //!
+//! Runs on the builtin zoo with zero setup (trained artifacts are used
+//! automatically when present).
 //! Run: cargo run --release --example quantize_inspect [-- <model> <tensor>]
 
 use anyhow::Result;
 use speq::bsfp::{exponent_histogram, quantize_tensor, REMAP_FLAG};
-use speq::model::{Manifest, ModelRuntime};
-use speq::runtime::Runtime;
+use speq::runtime::{load_backend, Backend, ModelSource};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let model_name = args.first().map(String::as_str).unwrap_or("llama2-7b-tiny");
     let tensor = args.get(1).map(String::as_str).unwrap_or("layer0.w_down");
 
-    let manifest = Manifest::load(Manifest::default_root())?;
-    let rt = Runtime::cpu()?;
-    let model = ModelRuntime::load(&rt, &manifest, model_name)?;
-    let info = model.entry.param(tensor)?.clone();
-    let w = model.weights.f32(tensor);
-    println!("{model_name} / {tensor}: shape {:?}", info.shape);
+    let backend = load_backend(&ModelSource::auto(), model_name)?;
+    let model = backend.as_ref();
+    let shape = model
+        .weights()
+        .shapes
+        .get(tensor)
+        .ok_or_else(|| anyhow::anyhow!("tensor {tensor:?} not in model {model_name:?}"))?
+        .clone();
+    anyhow::ensure!(shape.len() == 2, "tensor {tensor:?} is not a 2-D linear");
+    let w = model.weights().f32(tensor);
+    println!("{model_name} / {tensor}: shape {shape:?} ({} backend)", model.backend_name());
 
     // Fig. 2(c): the exponent histogram.
     let hist = exponent_histogram(w.iter().copied());
@@ -35,7 +41,7 @@ fn main() -> Result<()> {
     println!("exponents >= 16: {wasted}  (the wasted bit the paper reclaims)");
 
     // Quantize and report the remap statistics.
-    let (k, n) = (info.shape[0], info.shape[1]);
+    let (k, n) = (shape[0], shape[1]);
     let qt = quantize_tensor(w, k, n);
     let flagged = qt
         .w_r
@@ -67,7 +73,7 @@ fn main() -> Result<()> {
 
     // Lossless property.
     let rec = qt.reconstruct_fp16_bits();
-    let orig: Vec<u16> = model.weights.bits[tensor].clone();
+    let orig: Vec<u16> = model.weights().bits[tensor].clone();
     assert_eq!(rec, orig, "lossless reconstruction failed");
     println!("lossless: W_q ∥ W_r reconstructs the FP16 weights bit-exactly");
 

@@ -1,31 +1,39 @@
 //! Quickstart: load a model, BSFP-quantize it (implicitly, from its own
 //! bits), and generate with speculative decoding.
 //!
-//! Run after `make artifacts && cargo build --release`:
+//! Works with zero setup — no artifacts, no XLA:
 //!     cargo run --release --example quickstart
+//! With trained artifacts (`make artifacts`) the same code picks them up
+//! automatically.
 
 use anyhow::Result;
-use speq::model::{Manifest, ModelRuntime, SamplingParams};
-use speq::runtime::Runtime;
+use speq::model::SamplingParams;
+use speq::runtime::{load_backend, Backend, ModelSource};
 use speq::specdec::{Engine, SpecConfig};
 
 fn main() -> Result<()> {
-    // 1. Load the artifacts manifest ($SPEQ_ARTIFACTS or ./artifacts).
-    let manifest = Manifest::load(Manifest::default_root())?;
-    println!("models available: {:?}", manifest.model_names());
+    // 1. Pick a model source: ./artifacts (or $SPEQ_ARTIFACTS) when a
+    //    manifest exists, else the builtin synthetic zoo.
+    let source = ModelSource::auto();
+    match &source {
+        ModelSource::Artifacts(p) => println!("using trained artifacts at {}", p.display()),
+        ModelSource::Builtin => println!("no artifacts found — using the builtin synthetic zoo"),
+    }
 
-    // 2. Bring up the PJRT CPU runtime and one model. Loading compiles the
-    //    five AOT graphs and derives the BSFP draft weights from the FP16
-    //    bits — no second model, no training (the paper's core claim).
-    let rt = Runtime::cpu()?;
-    let model = ModelRuntime::load(&rt, &manifest, "vicuna-7b-tiny")?;
+    // 2. Load one model. The BSFP draft weights are derived from the FP16
+    //    bits of the target's own parameters — no second model, no training
+    //    (the paper's core claim).
+    let backend = load_backend(&source, "vicuna-7b-tiny")?;
+    let model = backend.as_ref();
     println!(
-        "loaded {} ({} params, draft shares all of them)",
-        model.entry.config.name, model.entry.config.param_count
+        "loaded {} on the {} backend ({} params, draft shares all of them)",
+        model.config().name,
+        model.backend_name(),
+        model.config().param_count
     );
 
     // 3. Generate speculatively (greedy).
-    let engine = Engine::new(&model);
+    let engine = Engine::new(model);
     let prompt = b"Q: grace has 6 cups and buys 5 more. how many cups now?\nA: ";
     let cfg = SpecConfig { gen_len: 96, ..Default::default() };
     let spec = engine.generate_spec(prompt, &cfg)?;

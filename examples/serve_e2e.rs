@@ -1,17 +1,22 @@
 //! END-TO-END driver (EXPERIMENTS.md §E2E): bring up the full serving
-//! stack — PJRT runtime, BSFP draft derivation, speculative engine, worker
-//! pool, request queue, sessions — and push a realistic mixed workload
-//! through it, reporting latency/throughput, accept rates, losslessness,
-//! and the simulated SPEQ-accelerator speedup for the measured traces.
+//! stack — execution backend, BSFP draft derivation, speculative engine,
+//! worker pool, request queue, sessions — and push a realistic mixed
+//! workload through it, reporting latency/throughput, accept rates,
+//! losslessness, and the simulated SPEQ-accelerator speedup for the
+//! measured traces.
+//!
+//! Works with zero setup: without an artifacts directory the workers run
+//! builtin synthetic models on the native backend and the workload uses
+//! builtin prompts.
 //!
 //! Run: cargo run --release --example serve_e2e [-- <requests> <gen_len>]
 
 use anyhow::Result;
 use speq::accel::{paper_dims, Accel};
-use speq::coordinator::{Mode, Priority, Server, ServerConfig};
-use speq::model::{Manifest, SamplingParams};
+use speq::coordinator::{Mode, ModelSource, Priority, Server, ServerConfig};
+use speq::model::SamplingParams;
 use speq::specdec::SpecTrace;
-use speq::workload::{load_task, task_names};
+use speq::workload::{load_task_or_builtin, task_names};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -19,26 +24,35 @@ fn main() -> Result<()> {
     let gen_len: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(96);
     let model = "llama3.1-8b-tiny";
 
-    let manifest = Manifest::load(Manifest::default_root())?;
+    let source = ModelSource::auto();
+    let manifest = source.manifest()?;
     println!("== SPEQ end-to-end serving driver ==");
-    println!("model {model}, {n_requests} requests x {gen_len} tokens, 2 workers\n");
+    println!(
+        "model {model}, {n_requests} requests x {gen_len} tokens, 2 workers ({})\n",
+        if manifest.is_some() { "trained artifacts" } else { "builtin zoo, native backend" }
+    );
 
     let server = Server::start(ServerConfig {
-        artifacts_root: manifest.root.clone(),
+        source,
         model: model.into(),
         workers: 2,
         queue_capacity: 64,
         session_history: 96,
     })?;
 
-    // Mixed workload: all three task families, one multi-turn session, and
-    // one autoregressive request as the lossless control.
+    // Mixed workload: all three task families (each loaded once), one
+    // multi-turn session, and one autoregressive request as the lossless
+    // control.
+    let tasks: Vec<_> = task_names()
+        .iter()
+        .map(|&t| load_task_or_builtin(manifest.as_ref(), t, 64, n_requests.max(1)))
+        .collect::<Result<Vec<_>>>()?;
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
     let mut control: Option<(Vec<u8>, usize)> = None;
     for i in 0..n_requests {
         let task = task_names()[i % 3];
-        let ts = load_task(&manifest, task)?;
+        let ts = &tasks[i % 3];
         let prompt = ts.prompts[i % ts.prompts.len()].clone();
         let mode = if i == 0 { Mode::Autoregressive } else { Mode::Speculative };
         if i == 1 {

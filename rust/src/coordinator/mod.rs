@@ -7,10 +7,15 @@
 //!                           │ pop (scheduler policy)
 //!              ┌────────────┼────────────┐
 //!           worker 0     worker 1     worker N-1        (threads)
-//!           Engine+model Engine+model Engine+model      (one PJRT stack each;
-//!              │            │            │               xla handles are not Send)
+//!           Engine+model Engine+model Engine+model      (one Backend stack each;
+//!              │            │            │               backends are not Send)
 //!              └───────────►└───responses►└──► per-request channel
 //! ```
+//!
+//! Workers are backend-agnostic: each builds its model from the configured
+//! [`ModelSource`] — the builtin synthetic zoo (default, zero artifacts) or
+//! an artifacts directory (trained weights; PJRT graphs with the `pjrt`
+//! feature).
 //!
 //! * [`queue`] — bounded priority queue with backpressure and FIFO fairness
 //!   within a priority class.
@@ -27,3 +32,6 @@ pub use metrics::{Metrics, MetricsSnapshot};
 pub use queue::{Mode, Priority, QueueError, Request, RequestQueue, Response, ResponseBody};
 pub use server::{Server, ServerConfig};
 pub use session::SessionStore;
+
+// Re-exported for convenience: server configs name their model source.
+pub use crate::runtime::ModelSource;

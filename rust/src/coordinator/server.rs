@@ -1,10 +1,10 @@
 //! Worker pool + dispatch loop.
 //!
-//! PJRT handles are not `Send`, so each worker thread builds its own
-//! `Runtime` + `ModelRuntime` + `Engine` stack and pulls requests from the
-//! shared queue.  Responses flow back through the per-request channel.
+//! Execution backends are not `Send` (PJRT handles pin to their thread),
+//! so each worker thread builds its own backend + `Engine` stack from the
+//! configured [`ModelSource`] and pulls requests from the shared queue.
+//! Responses flow back through the per-request channel.
 
-use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -16,14 +16,15 @@ use anyhow::{Context, Result};
 use super::metrics::Metrics;
 use super::queue::{Mode, Priority, Request, RequestQueue, Response, ResponseBody};
 use super::session::SessionStore;
-use crate::model::{Manifest, ModelRuntime, SamplingParams};
-use crate::runtime::Runtime;
+use crate::model::{Manifest, SamplingParams};
+use crate::runtime::{builtin_config, load_backend, Backend, ModelSource};
 use crate::specdec::{Engine, SpecConfig};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
-    pub artifacts_root: PathBuf,
+    /// Where model weights come from (artifacts dir or the builtin zoo).
+    pub source: ModelSource,
     pub model: String,
     pub workers: usize,
     pub queue_capacity: usize,
@@ -34,7 +35,7 @@ pub struct ServerConfig {
 impl Default for ServerConfig {
     fn default() -> Self {
         Self {
-            artifacts_root: Manifest::default_root(),
+            source: ModelSource::auto(),
             model: "vicuna-7b-tiny".to_string(),
             workers: 2,
             queue_capacity: 64,
@@ -53,13 +54,20 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the worker pool.  Each worker compiles the model graphs on its
-    /// own PJRT client before serving (cold-start happens here, not on the
+    /// Start the worker pool.  Each worker loads the model on its own
+    /// backend stack before serving (cold-start happens here, not on the
     /// request path).
     pub fn start(cfg: ServerConfig) -> Result<Self> {
-        // Fail fast if the manifest is unusable before spawning threads.
-        let manifest = Manifest::load(&cfg.artifacts_root)?;
-        manifest.model(&cfg.model)?;
+        // Fail fast if the model source is unusable before spawning threads.
+        match &cfg.source {
+            ModelSource::Builtin => {
+                builtin_config(&cfg.model)?;
+            }
+            ModelSource::Artifacts(root) => {
+                let manifest = Manifest::load(root)?;
+                manifest.model(&cfg.model)?;
+            }
+        }
 
         let queue = Arc::new(RequestQueue::new(cfg.queue_capacity));
         let metrics = Arc::new(Metrics::new());
@@ -181,24 +189,18 @@ fn worker_main(
     sessions: Arc<SessionStore>,
     ready: mpsc::Sender<Result<()>>,
 ) {
-    // Build the per-worker PJRT stack.
-    let stack = (|| -> Result<(Manifest, ModelRuntime)> {
-        let manifest = Manifest::load(&cfg.artifacts_root)?;
-        let rt = Runtime::cpu()?;
-        let model = ModelRuntime::load(&rt, &manifest, &cfg.model)?;
-        Ok((manifest, model))
-    })();
-    let model = match stack {
-        Ok((_, model)) => {
+    // Build the per-worker backend stack.
+    let backend: Box<dyn Backend> = match load_backend(&cfg.source, &cfg.model) {
+        Ok(b) => {
             let _ = ready.send(Ok(()));
-            model
+            b
         }
         Err(e) => {
             let _ = ready.send(Err(e));
             return;
         }
     };
-    let engine = Engine::new(&model);
+    let engine = Engine::new(backend.as_ref());
 
     while let Some(req) = queue.pop() {
         let exec_start = Instant::now();

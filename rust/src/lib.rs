@@ -2,28 +2,54 @@
 //!
 //! Reproduction of *"From Quarter to All: Accelerating Speculative LLM
 //! Decoding via Floating-Point Exponent Remapping and Parameter Sharing"*
-//! (CS.AR 2025) as a three-layer Rust + JAX + Pallas stack:
+//! (CS.AR 2025) as a layered Rust + JAX + Pallas stack.
 //!
+//! ## Module map
+//!
+//! Algorithm layer:
 //! * [`bsfp`] — the Bit-Sharing Floating Point codec (the paper's §III
 //!   algorithm): exponent remapping, Algorithm-1 outlier handling, Eq. 4
 //!   group scales, and the Fig. 5 hardware decoders.
 //! * [`quant`] — baseline quantizers (FP4 variants for Table I, INT4/8
 //!   Olive/Tender analogs for the accelerator comparison).
-//! * [`runtime`] — PJRT CPU client wrapper: loads the AOT-compiled HLO
-//!   graphs from `artifacts/` and executes them buffer-to-buffer.
-//! * [`model`] — model manifests, weight loading, logits post-processing.
-//! * [`specdec`] — the speculative decoding engine: quantized draft pass,
-//!   full verification pass, shared KV cache, early exit (§III-C), plus the
-//!   Eq. 1–2 analytic model.
+//!
+//! Execution layer (the [`runtime::Backend`] abstraction):
+//! * [`runtime`] — the `Backend` trait every layer above is written
+//!   against (prefill / decode_full / decode_draft / verify / eval plus
+//!   opaque state threading), the always-available pure-Rust
+//!   [`runtime::NativeBackend`] (host-memory transformer, BSFP draft from
+//!   the same bits), the [`runtime::ModelSource`] factory, and — behind
+//!   the non-default `pjrt` cargo feature — the PJRT client wrapper that
+//!   executes AOT-compiled HLO graphs buffer-to-buffer.
+//! * [`model`] — manifests, weight loading, logits post-processing; with
+//!   `pjrt`, the `model::ModelRuntime` PJRT backend implementation.
+//!
+//! Decoding + serving layer:
+//! * [`specdec`] — the speculative decoding engine over any backend:
+//!   quantized draft pass, full verification pass, shared KV cache, early
+//!   exit (§III-C), plus the Eq. 1–2 analytic model.
 //! * [`coordinator`] — serving layer: request queue, scheduler, sessions,
 //!   metrics — the production wrapper around the engine.
+//!
+//! Evaluation layer:
 //! * [`accel`] — cycle-level simulator of the SPEQ accelerator (§IV):
 //!   reconfigurable PE array, BSFP decoders, SRAM buffers, DRAM channel,
 //!   28 nm area/energy model, and the Olive/Tender/FP16 baselines.
-//! * [`workload`] — synthetic task workloads (GSM8K/HumanEval/MT-bench
-//!   analogs) and trace capture.
+//! * [`workload`] — task workloads (GSM8K/HumanEval/MT-bench analogs,
+//!   from artifacts or builtin), trace capture.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation (see DESIGN.md §5 for the experiment index).
+//! * [`util`] — in-tree substrates for the offline build (f16, JSON, RNG,
+//!   CLI, bench, property testing).
+//!
+//! ## Backends at a glance
+//!
+//! The default build has **zero** external requirements: `cargo test`
+//! exercises the full draft → verify → accept loop on the native backend
+//! with builtin synthetic models, and greedy speculative decoding is
+//! asserted bit-identical to the autoregressive baseline.  Artifacts
+//! (trained weights) upgrade fidelity; the `pjrt` feature swaps in
+//! compiled-graph execution.  See README.md for the architecture diagram.
 
 pub mod accel;
 pub mod bsfp;

@@ -1,23 +1,26 @@
 //! `speq` — the SPEQ coordinator binary.
 //!
 //! Subcommands:
-//!   info                         manifest / model summary
+//!   info                         model summary (artifacts or builtin zoo)
 //!   report --exp <id|all>        regenerate a paper table/figure (DESIGN.md §5)
 //!   generate --model M --prompt  one-off generation (spec + AR comparison)
 //!   serve --model M --workers N  run the serving coordinator on a workload
 //!   bench-accel                  quick accelerator sanity sweep
+//!
+//! Every subcommand except `report` works without artifacts: models fall
+//! back to the builtin synthetic zoo on the native backend.
 //!
 //! Common flags: --artifacts <dir> (default ./artifacts or $SPEQ_ARTIFACTS).
 
 use anyhow::Result;
 use speq::accel::{paper_dims, Accel, ArrayMode};
 use speq::coordinator::{Mode, Priority, Server, ServerConfig};
-use speq::model::{Manifest, ModelRuntime, SamplingParams};
+use speq::model::{Manifest, SamplingParams};
 use speq::report::{run_experiment, ReportCtx, ReportOpts, EXPERIMENTS};
-use speq::runtime::Runtime;
+use speq::runtime::{builtin_config, builtin_model_names, load_backend, Backend, ModelSource};
 use speq::specdec::{Engine, SpecConfig};
 use speq::util::cli::Args;
-use speq::workload::{load_task, task_names};
+use speq::workload::{load_task_or_builtin, task_names};
 
 fn main() {
     let args = Args::from_env();
@@ -33,6 +36,16 @@ fn main() {
 
 fn artifacts_root(args: &Args) -> std::path::PathBuf {
     args.get("artifacts").map(Into::into).unwrap_or_else(Manifest::default_root)
+}
+
+/// An explicit `--artifacts` flag always selects artifacts (so a typo'd
+/// path errors instead of silently serving the builtin zoo); otherwise
+/// artifacts are used when the default root has a manifest.
+fn model_source(args: &Args) -> ModelSource {
+    match args.get("artifacts") {
+        Some(root) => ModelSource::Artifacts(root.into()),
+        None => ModelSource::auto(),
+    }
 }
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -65,23 +78,38 @@ fn dispatch(args: &Args) -> Result<()> {
 }
 
 fn info(args: &Args) -> Result<()> {
-    let manifest = Manifest::load(artifacts_root(args))?;
-    println!("artifacts: {} (v{})", manifest.root.display(), manifest.version);
-    println!("group size: {} | prompt len: {}", manifest.group_size, manifest.prompt_len);
-    println!("\n{:<18} {:>8} {:>7} {:>6} {:>6} {:>9} {:>12}", "model", "params", "layers", "d", "ff", "loss", "paper analog");
-    for name in manifest.model_names() {
-        let e = manifest.model(&name)?;
+    if let Some(manifest) = model_source(args).manifest()? {
+        println!("artifacts: {} (v{})", manifest.root.display(), manifest.version);
+        println!("group size: {} | prompt len: {}", manifest.group_size, manifest.prompt_len);
+        println!("\n{:<18} {:>8} {:>7} {:>6} {:>6} {:>9} {:>12}", "model", "params", "layers", "d", "ff", "loss", "paper analog");
+        for name in manifest.model_names() {
+            let e = manifest.model(&name)?;
+            println!(
+                "{name:<18} {:>8} {:>7} {:>6} {:>6} {:>9.3} {:>12}",
+                e.config.param_count,
+                e.config.n_layers,
+                e.config.d_model,
+                e.config.d_ff,
+                e.train.loss_last,
+                e.config.paper_analog
+            );
+        }
+        println!("\ntasks: {:?}", manifest.tasks.keys().collect::<Vec<_>>());
+    } else {
         println!(
-            "{name:<18} {:>8} {:>7} {:>6} {:>6} {:>9.3} {:>12}",
-            e.config.param_count,
-            e.config.n_layers,
-            e.config.d_model,
-            e.config.d_ff,
-            e.train.loss_last,
-            e.config.paper_analog
+            "no artifacts at {} — builtin synthetic zoo (native backend):",
+            artifacts_root(args).display()
         );
+        println!("\n{:<18} {:>8} {:>7} {:>6} {:>6} {:>12}", "model", "params", "layers", "d", "ff", "paper analog");
+        for name in builtin_model_names() {
+            let c = builtin_config(name)?;
+            println!(
+                "{name:<18} {:>8} {:>7} {:>6} {:>6} {:>12}",
+                c.param_count, c.n_layers, c.d_model, c.d_ff, c.paper_analog
+            );
+        }
+        println!("\ntasks: {:?} (builtin prompts)", task_names());
     }
-    println!("\ntasks: {:?}", manifest.tasks.keys().collect::<Vec<_>>());
     Ok(())
 }
 
@@ -103,7 +131,6 @@ fn report(args: &Args) -> Result<()> {
 }
 
 fn generate(args: &Args) -> Result<()> {
-    let manifest = Manifest::load(artifacts_root(args))?;
     let model_name = args.get_or("model", "vicuna-7b-tiny");
     let prompt = args
         .get("prompt")
@@ -113,9 +140,17 @@ fn generate(args: &Args) -> Result<()> {
     let gen_len = args.get_usize("gen-len", 128);
     let temperature = args.get_f64("temperature", 0.0) as f32;
 
-    let rt = Runtime::cpu()?;
-    let model = ModelRuntime::load(&rt, &manifest, model_name)?;
-    let engine = Engine::new(&model);
+    let source = model_source(args);
+    let backend = load_backend(&source, model_name)?;
+    println!(
+        "model {model_name} on {} backend (source: {})",
+        backend.backend_name(),
+        match &source {
+            ModelSource::Builtin => "builtin zoo".to_string(),
+            ModelSource::Artifacts(p) => p.display().to_string(),
+        }
+    );
+    let engine = Engine::new(backend.as_ref());
     let sampling = SamplingParams { temperature, seed: args.get_usize("seed", 0) as u64 };
 
     let cfg = SpecConfig {
@@ -153,8 +188,9 @@ fn generate(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
+    let source = model_source(args);
     let cfg = ServerConfig {
-        artifacts_root: artifacts_root(args),
+        source: source.clone(),
         model: args.get_or("model", "vicuna-7b-tiny").to_string(),
         workers: args.get_usize("workers", 2),
         queue_capacity: args.get_usize("queue", 64),
@@ -163,15 +199,18 @@ fn serve(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 12);
     let gen_len = args.get_usize("gen-len", 64);
     println!("starting {} workers on {} ...", cfg.workers, cfg.model);
-    let manifest = Manifest::load(&cfg.artifacts_root)?;
+    let manifest = source.manifest()?;
     let server = Server::start(cfg)?;
 
-    // Demo workload: cycle through the three task families.
+    // Demo workload: cycle through the three task families (each loaded once).
+    let tasks: Vec<_> = task_names()
+        .iter()
+        .map(|&t| load_task_or_builtin(manifest.as_ref(), t, 64, n_requests.max(1)))
+        .collect::<Result<_>>()?;
     let mut rxs = Vec::new();
     let t0 = std::time::Instant::now();
     for i in 0..n_requests {
-        let task = task_names()[i % 3];
-        let ts = load_task(&manifest, task)?;
+        let ts = &tasks[i % 3];
         let prompt = &ts.prompts[i % ts.prompts.len()];
         let (_, rx) = server.submit(
             prompt,

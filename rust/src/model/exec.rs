@@ -1,103 +1,79 @@
-//! [`ModelRuntime`]: one model's compiled graphs + device-resident weights.
+//! [`ModelRuntime`]: the PJRT execution backend (`pjrt` feature).
 //!
-//! Weights are uploaded once: full-precision params as f32 buffers, and the
-//! BSFP draft params (nibble-packed `W_q` + Eq. 4 scales) derived from the
-//! *same* FP16 bits by the Rust codec — the paper's parameter sharing made
+//! One model's compiled graphs + device-resident weights.  Weights are
+//! uploaded once: full-precision params as f32 buffers, and the BSFP draft
+//! params (nibble-packed `W_q` + Eq. 4 scales) derived from the *same*
+//! FP16 bits by the Rust codec — the paper's parameter sharing made
 //! literal.
 //!
 //! All request-path graphs return one flat f32 **state** vector
 //! `[S_SLOTS * V logits slots | KV]` (see `python/compile/model.py`): the
 //! state buffer is threaded output -> input entirely on-device, and each
-//! step copies only the logits prefix to the host.
+//! step copies only the logits prefix to the host.  The state travels
+//! through [`BackendState::Pjrt`] to satisfy the [`Backend`] contract.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use super::manifest::{Manifest, ModelEntry};
 use super::weights::{load_weights, HostWeights};
-use crate::bsfp::{quantize_tensor, GROUP_SIZE};
-use crate::runtime::{Executable, Runtime};
+use crate::bsfp::{f32_to_f16_bits, quantize_tensor, GROUP_SIZE};
+use crate::model::ModelConfig;
+use crate::runtime::{
+    Backend, BackendState, Executable, Runtime, StepOutput, VerifyOutput,
+};
 
-/// Logits (slot 0, length V) + the threaded state buffer.
-pub struct StepOutput {
-    pub logits: Vec<f32>,
-    pub state: xla::PjRtBuffer,
+/// The six compiled graphs of one model.
+struct Graphs {
+    prefill: Executable,
+    eval: Executable,
+    decode_full: Executable,
+    decode_draft: Executable,
+    verify: Executable,
+    /// Tiny on-device slicer: state -> logits slots (the PJRT build has no
+    /// raw prefix reads, so extraction happens device-side).
+    extract: Executable,
 }
 
-/// All `S_SLOTS` logits rows (flattened, S*V) + the threaded state buffer.
-pub struct VerifyOutput {
-    pub logits: Vec<f32>,
-    pub state: xla::PjRtBuffer,
-}
-
-/// A loaded, executable model (full target + BSFP draft).
+/// A loaded, executable model (full target + BSFP draft) over PJRT.
+///
+/// Graphs and parameter buffers are `Arc`-shared so
+/// [`Backend::with_transformed_weights`] variants reuse the compiled
+/// executables and the resident draft params.
 pub struct ModelRuntime {
     pub entry: ModelEntry,
     rt: Runtime,
-    prefill_exe: Executable,
-    eval_exe: Executable,
-    decode_full_exe: Executable,
-    decode_draft_exe: Executable,
-    verify_exe: Executable,
-    /// Tiny on-device slicer: state -> logits slots (the PJRT build has no
-    /// raw prefix reads, so extraction happens device-side).
-    extract_exe: Executable,
+    exes: Arc<Graphs>,
     /// Full-precision params, manifest `params` order.
-    full_bufs: Vec<xla::PjRtBuffer>,
+    full_bufs: Arc<Vec<xla::PjRtBuffer>>,
     /// Draft args, manifest `decode_draft.args` order (minus token/pos/state).
-    draft_bufs: Vec<xla::PjRtBuffer>,
+    draft_bufs: Arc<Vec<xla::PjRtBuffer>>,
     /// Host copies for analyses (exponent histograms, re-quantization).
     pub weights: HostWeights,
 }
 
 impl ModelRuntime {
-    /// Load a model by name from the manifest, compiling all five graphs.
+    /// Load a model by name from the manifest, compiling all graphs.
     pub fn load(rt: &Runtime, manifest: &Manifest, name: &str) -> Result<Self> {
         let entry = manifest.model(name)?.clone();
         let weights = load_weights(manifest.path(&entry.weights), &entry)
             .with_context(|| format!("loading weights for {name}"))?;
 
-        let prefill_exe = rt.load(manifest.path(&entry.graph("prefill")?.file))?;
-        let eval_exe = rt.load(manifest.path(&entry.graph("eval")?.file))?;
-        let decode_full_exe = rt.load(manifest.path(&entry.graph("decode_full")?.file))?;
-        let decode_draft_exe = rt.load(manifest.path(&entry.graph("decode_draft")?.file))?;
-        let verify_exe = rt.load(manifest.path(&entry.graph("verify")?.file))?;
-        let extract_exe = rt.load(manifest.path(&entry.graph("extract")?.file))?;
+        let exes = Arc::new(Graphs {
+            prefill: rt.load(manifest.path(&entry.graph("prefill")?.file))?,
+            eval: rt.load(manifest.path(&entry.graph("eval")?.file))?,
+            decode_full: rt.load(manifest.path(&entry.graph("decode_full")?.file))?,
+            decode_draft: rt.load(manifest.path(&entry.graph("decode_draft")?.file))?,
+            verify: rt.load(manifest.path(&entry.graph("verify")?.file))?,
+            extract: rt.load(manifest.path(&entry.graph("extract")?.file))?,
+        });
 
-        let full_bufs = upload_full_params(rt, &entry, &weights, None)?;
-        let draft_bufs = upload_draft_params(rt, &entry, &weights)?;
+        let full_bufs = Arc::new(upload_full_params(rt, &entry, &weights, None)?);
+        let draft_bufs = Arc::new(upload_draft_params(rt, &entry, &weights)?);
 
-        Ok(Self {
-            entry,
-            rt: rt.clone(),
-            prefill_exe,
-            eval_exe,
-            decode_full_exe,
-            decode_draft_exe,
-            verify_exe,
-            extract_exe,
-            full_bufs,
-            draft_bufs,
-            weights,
-        })
-    }
-
-    pub fn vocab(&self) -> usize {
-        self.entry.config.vocab
-    }
-
-    pub fn cache_len(&self) -> usize {
-        self.entry.config.cache_len
-    }
-
-    pub fn prefill_len(&self) -> usize {
-        self.entry.config.prefill_len
-    }
-
-    /// Number of logits slots in the state vector (max draft length + 1).
-    pub fn slots(&self) -> usize {
-        self.entry.state_slots
+        Ok(Self { entry, rt: rt.clone(), exes, full_bufs, draft_bufs, weights })
     }
 
     /// Total f32 length of the state vector.
@@ -106,97 +82,19 @@ impl ModelRuntime {
     }
 
     fn read_logits(&self, state: &xla::PjRtBuffer, rows: usize) -> Result<Vec<f32>> {
-        let mut out = self.extract_exe.run(&[state])?;
+        let mut out = self.exes.extract.run(&[state])?;
         anyhow::ensure!(out.len() == 1, "extract: expected 1 output");
         let t = Executable::to_host_f32(&out.pop().unwrap())?;
         Ok(t.data[..rows * self.vocab()].to_vec())
     }
 
-    /// Run the prefill graph over a (padded) prompt.
-    ///
-    /// Slot 0 of the returned logits is the prediction after position
-    /// `length - 1`.
-    pub fn prefill(&self, tokens: &[i32], length: usize) -> Result<StepOutput> {
-        self.prefill_with(&self.full_bufs, tokens, length)
-    }
-
-    /// Prefill with substituted parameter buffers.
-    pub fn prefill_with(
-        &self,
-        param_bufs: &[xla::PjRtBuffer],
-        tokens: &[i32],
-        length: usize,
-    ) -> Result<StepOutput> {
-        let p = self.entry.config.prefill_len;
-        anyhow::ensure!(tokens.len() == p, "prefill needs exactly {p} (padded) tokens");
-        anyhow::ensure!(length >= 1 && length <= p, "prefill length out of range");
-        let tok_buf = self.rt.upload_i32(tokens, &[p])?;
-        let len_buf = self.rt.upload_i32_scalar(length as i32)?;
-        let mut args: Vec<&xla::PjRtBuffer> = param_bufs.iter().collect();
-        args.push(&tok_buf);
-        args.push(&len_buf);
-        let mut out = self.prefill_exe.run(&args)?;
-        anyhow::ensure!(out.len() == 1, "prefill: expected 1 output, got {}", out.len());
-        let state = out.pop().unwrap();
-        let logits = self.read_logits(&state, 1)?;
-        Ok(StepOutput { logits, state })
-    }
-
-    /// Per-position logits `(P, V)` for a padded window — the perplexity
-    /// harness (Table I).
-    pub fn eval_logits(&self, tokens: &[i32], length: usize) -> Result<Vec<f32>> {
-        self.eval_logits_with(&self.full_bufs, tokens, length)
-    }
-
-    /// Eval with substituted parameter buffers (quantization variants).
-    pub fn eval_logits_with(
-        &self,
-        param_bufs: &[xla::PjRtBuffer],
-        tokens: &[i32],
-        length: usize,
-    ) -> Result<Vec<f32>> {
-        let p = self.entry.config.prefill_len;
-        anyhow::ensure!(tokens.len() == p, "eval needs exactly {p} (padded) tokens");
-        let tok_buf = self.rt.upload_i32(tokens, &[p])?;
-        let len_buf = self.rt.upload_i32_scalar(length as i32)?;
-        let mut args: Vec<&xla::PjRtBuffer> = param_bufs.iter().collect();
-        args.push(&tok_buf);
-        args.push(&len_buf);
-        let mut out = self.eval_exe.run(&args)?;
-        anyhow::ensure!(out.len() == 1, "eval: expected 1 output");
-        let t = Executable::to_host_f32(&out.pop().unwrap())?;
-        Ok(t.data)
-    }
-
-    /// One full-precision decode step (autoregressive baseline).
-    pub fn decode_full(
-        &self,
-        token: i32,
-        pos: usize,
-        state: &xla::PjRtBuffer,
-    ) -> Result<StepOutput> {
-        self.decode_with(&self.decode_full_exe, &self.full_bufs, token, pos, state)
-    }
-
-    /// One 4-bit BSFP draft decode step.
-    pub fn decode_draft(
-        &self,
-        token: i32,
-        pos: usize,
-        state: &xla::PjRtBuffer,
-    ) -> Result<StepOutput> {
-        self.decode_with(&self.decode_draft_exe, &self.draft_bufs, token, pos, state)
-    }
-
-    /// One decode step with substituted full-precision params.
-    pub fn decode_full_with(
-        &self,
-        param_bufs: &[xla::PjRtBuffer],
-        token: i32,
-        pos: usize,
-        state: &xla::PjRtBuffer,
-    ) -> Result<StepOutput> {
-        self.decode_with(&self.decode_full_exe, param_bufs, token, pos, state)
+    fn take_state(&self, state: BackendState) -> Result<xla::PjRtBuffer> {
+        match state {
+            BackendState::Pjrt(buf) => Ok(buf),
+            BackendState::Native(_) => {
+                anyhow::bail!("pjrt backend received a native host state")
+            }
+        }
     }
 
     fn decode_with(
@@ -206,7 +104,7 @@ impl ModelRuntime {
         token: i32,
         pos: usize,
         state: &xla::PjRtBuffer,
-    ) -> Result<StepOutput> {
+    ) -> Result<(Vec<f32>, xla::PjRtBuffer)> {
         let tok_buf = self.rt.upload_i32_scalar(token)?;
         let pos_buf = self.rt.upload_i32_scalar(pos as i32)?;
         let mut args: Vec<&xla::PjRtBuffer> = param_bufs.iter().collect();
@@ -217,57 +115,129 @@ impl ModelRuntime {
         anyhow::ensure!(out.len() == 1, "decode: expected 1 output, got {}", out.len());
         let state = out.pop().unwrap();
         let logits = self.read_logits(&state, 1)?;
-        Ok(StepOutput { logits, state })
+        Ok((logits, state))
+    }
+}
+
+impl Backend for ModelRuntime {
+    fn config(&self) -> &ModelConfig {
+        &self.entry.config
     }
 
-    /// Verify up to `slots()` tokens in one parallel full-precision pass.
-    ///
-    /// `tokens[i]` is scored at position `pos0 + i`; the returned logits hold
-    /// all `S_SLOTS` rows (rows beyond the real draft count are padding).
-    /// Full-precision KV overwrites the drafted positions (shared cache).
-    pub fn verify(
-        &self,
-        tokens: &[i32],
-        pos0: usize,
-        state: &xla::PjRtBuffer,
-    ) -> Result<VerifyOutput> {
+    fn slots(&self) -> usize {
+        self.entry.state_slots
+    }
+
+    fn linears(&self) -> &[String] {
+        &self.entry.linears
+    }
+
+    fn weights(&self) -> &HostWeights {
+        &self.weights
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn prefill(&self, tokens: &[i32], length: usize) -> Result<StepOutput> {
+        let p = self.entry.config.prefill_len;
+        anyhow::ensure!(tokens.len() == p, "prefill needs exactly {p} (padded) tokens");
+        anyhow::ensure!(length >= 1 && length <= p, "prefill length out of range");
+        let tok_buf = self.rt.upload_i32(tokens, &[p])?;
+        let len_buf = self.rt.upload_i32_scalar(length as i32)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.full_bufs.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        let mut out = self.exes.prefill.run(&args)?;
+        anyhow::ensure!(out.len() == 1, "prefill: expected 1 output, got {}", out.len());
+        let state = out.pop().unwrap();
+        let logits = self.read_logits(&state, 1)?;
+        Ok(StepOutput { logits, state: BackendState::Pjrt(state) })
+    }
+
+    fn decode_full(&self, token: i32, pos: usize, state: BackendState) -> Result<StepOutput> {
+        let buf = self.take_state(state)?;
+        let (logits, state) =
+            self.decode_with(&self.exes.decode_full, &self.full_bufs, token, pos, &buf)?;
+        Ok(StepOutput { logits, state: BackendState::Pjrt(state) })
+    }
+
+    fn decode_draft(&self, token: i32, pos: usize, state: BackendState) -> Result<StepOutput> {
+        let buf = self.take_state(state)?;
+        let (logits, state) =
+            self.decode_with(&self.exes.decode_draft, &self.draft_bufs, token, pos, &buf)?;
+        Ok(StepOutput { logits, state: BackendState::Pjrt(state) })
+    }
+
+    fn verify(&self, tokens: &[i32], pos0: usize, state: BackendState) -> Result<VerifyOutput> {
         let s = self.slots();
         anyhow::ensure!(tokens.len() == s, "verify needs exactly {s} (padded) tokens");
+        let buf = self.take_state(state)?;
         let tok_buf = self.rt.upload_i32(tokens, &[s])?;
         let pos_buf = self.rt.upload_i32_scalar(pos0 as i32)?;
         let mut args: Vec<&xla::PjRtBuffer> = self.full_bufs.iter().collect();
         args.push(&tok_buf);
         args.push(&pos_buf);
-        args.push(state);
-        let mut out = self.verify_exe.run(&args)?;
+        args.push(&buf);
+        let mut out = self.exes.verify.run(&args)?;
         anyhow::ensure!(out.len() == 1, "verify: expected 1 output, got {}", out.len());
         let state = out.pop().unwrap();
         let logits = self.read_logits(&state, s)?;
-        Ok(VerifyOutput { logits, state })
+        Ok(VerifyOutput { logits, state: BackendState::Pjrt(state) })
     }
 
-    /// Build full-precision parameter buffers with each linear weight passed
-    /// through `transform(name, w, k, n) -> w'` — the hook the Table I
-    /// perplexity harness uses to compare quantization variants.
-    pub fn build_transformed_params(
+    fn eval_logits(&self, tokens: &[i32], length: usize) -> Result<Vec<f32>> {
+        let p = self.entry.config.prefill_len;
+        anyhow::ensure!(tokens.len() == p, "eval needs exactly {p} (padded) tokens");
+        let tok_buf = self.rt.upload_i32(tokens, &[p])?;
+        let len_buf = self.rt.upload_i32_scalar(length as i32)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.full_bufs.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        let mut out = self.exes.eval.run(&args)?;
+        anyhow::ensure!(out.len() == 1, "eval: expected 1 output");
+        let t = Executable::to_host_f32(&out.pop().unwrap())?;
+        Ok(t.data)
+    }
+
+    fn with_transformed_weights(
         &self,
-        mut transform: impl FnMut(&str, &[f32], usize, usize) -> Result<Vec<f32>>,
-    ) -> Result<Vec<xla::PjRtBuffer>> {
+        transform: &mut dyn FnMut(&str, &[f32], usize, usize) -> Result<Vec<f32>>,
+    ) -> Result<Box<dyn Backend>> {
         let mut host: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+        let mut weights = self.weights.clone();
         for p in &self.entry.params {
             let w = self.weights.f32(&p.name);
             if self.entry.is_linear(&p.name) && p.shape.len() == 2 {
-                host.insert(p.name.clone(), transform(&p.name, w, p.shape[0], p.shape[1])?);
-            } else {
-                host.insert(p.name.clone(), w.to_vec());
+                let new = transform(&p.name, w, p.shape[0], p.shape[1])?;
+                anyhow::ensure!(
+                    new.len() == w.len(),
+                    "transform for {:?} returned {} values, expected {}",
+                    p.name,
+                    new.len(),
+                    w.len()
+                );
+                weights
+                    .bits
+                    .insert(p.name.clone(), new.iter().map(|&v| f32_to_f16_bits(v)).collect());
+                weights.f32s.insert(p.name.clone(), new.clone());
+                host.insert(p.name.clone(), new);
             }
         }
-        upload_full_params(&self.rt, &self.entry, &self.weights, Some(&host))
-    }
-
-    /// Expose the resident full-param buffers (for harness reuse).
-    pub fn full_param_buffers(&self) -> &[xla::PjRtBuffer] {
-        &self.full_bufs
+        let full_bufs = upload_full_params(&self.rt, &self.entry, &self.weights, Some(&host))?;
+        // Re-derive the draft from the transformed weights so the variant's
+        // draft pass shares the same bits as its full pass (matching the
+        // native backend's semantics).
+        let draft_bufs = upload_draft_params(&self.rt, &self.entry, &weights)?;
+        Ok(Box::new(Self {
+            entry: self.entry.clone(),
+            rt: self.rt.clone(),
+            exes: Arc::clone(&self.exes),
+            full_bufs: Arc::new(full_bufs),
+            draft_bufs: Arc::new(draft_bufs),
+            weights,
+        }))
     }
 }
 

@@ -1,18 +1,21 @@
-//! Model substrate: manifests, weights, the executable model, and sampling.
+//! Model substrate: manifests, weights, and logits post-processing.
 //!
-//! [`ModelRuntime`] is the bridge between the artifacts directory and the
-//! speculative-decoding engine: it owns the three compiled graphs (prefill,
-//! full decode, draft decode), the device-resident weight buffers (full
-//! FP16-derived params uploaded once; BSFP draft params derived by the Rust
-//! codec from the same bits and uploaded once), and exposes step functions
-//! that thread the KV cache buffer between calls.
+//! The artifacts manifest and `weights.bin` loader are backend-independent
+//! (the native backend executes straight from [`HostWeights`]).  With the
+//! `pjrt` feature, `ModelRuntime` additionally bridges the artifacts
+//! directory to compiled HLO execution: it owns the compiled graphs and
+//! the device-resident weight buffers (full FP16-derived params uploaded
+//! once; BSFP draft params derived by the Rust codec from the same bits),
+//! and implements [`crate::runtime::Backend`] over device state.
 
+#[cfg(feature = "pjrt")]
 mod exec;
 mod manifest;
 mod sampling;
 mod weights;
 
-pub use exec::{ModelRuntime, StepOutput};
+#[cfg(feature = "pjrt")]
+pub use exec::ModelRuntime;
 pub use manifest::{GraphEntry, Manifest, ModelConfig, ModelEntry, ParamInfo};
 pub use sampling::{argmax, log_softmax, sample_from_logits, softmax, SamplingParams};
 pub use weights::{load_weights, HostWeights};

@@ -5,8 +5,8 @@ use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
-use crate::model::{Manifest, ModelRuntime, SamplingParams};
-use crate::runtime::Runtime;
+use crate::model::{Manifest, SamplingParams};
+use crate::runtime::{load_backend, Backend, ModelSource};
 use crate::specdec::{Engine, SpecConfig, SpecTrace};
 use crate::util::json::Value;
 use crate::workload::{load_task, load_trace, save_trace, TraceRecord};
@@ -41,18 +41,22 @@ impl Default for ReportOpts {
 }
 
 /// Lazily-loading experiment context.
+///
+/// The report harness regenerates the paper's tables from *trained*
+/// checkpoints, so it requires an artifacts directory; models execute on
+/// whatever backend [`load_backend`] selects (native by default).
 pub struct ReportCtx {
     pub manifest: Manifest,
     pub opts: ReportOpts,
-    rt: Runtime,
-    models: BTreeMap<String, ModelRuntime>,
+    source: ModelSource,
+    models: BTreeMap<String, Box<dyn Backend>>,
 }
 
 impl ReportCtx {
     pub fn new(opts: ReportOpts) -> Result<Self> {
         let manifest = Manifest::load(&opts.artifacts_root)?;
-        let rt = Runtime::cpu()?;
-        Ok(Self { manifest, opts, rt, models: BTreeMap::new() })
+        let source = ModelSource::Artifacts(opts.artifacts_root.clone());
+        Ok(Self { manifest, opts, source, models: BTreeMap::new() })
     }
 
     /// Models selected for this run, in manifest order.
@@ -64,14 +68,14 @@ impl ReportCtx {
         }
     }
 
-    /// Load (and cache) a model runtime.
-    pub fn model(&mut self, name: &str) -> Result<&ModelRuntime> {
+    /// Load (and cache) a model backend.
+    pub fn model(&mut self, name: &str) -> Result<&dyn Backend> {
         if !self.models.contains_key(name) {
-            let m = ModelRuntime::load(&self.rt, &self.manifest, name)
+            let b = load_backend(&self.source, name)
                 .with_context(|| format!("loading model {name}"))?;
-            self.models.insert(name.to_string(), m);
+            self.models.insert(name.to_string(), b);
         }
-        Ok(&self.models[name])
+        Ok(self.models[name].as_ref())
     }
 
     pub fn results_dir(&self) -> PathBuf {

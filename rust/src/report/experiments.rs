@@ -75,8 +75,8 @@ fn fig2c(ctx: &mut ReportCtx) -> Result<()> {
     for name in ctx.model_names() {
         let model = ctx.model(&name)?;
         let mut hist = [0u64; 32];
-        for lin in model.entry.linears.clone() {
-            let h = exponent_histogram(model.weights.f32(&lin).iter().copied());
+        for lin in model.linears().to_vec() {
+            let h = exponent_histogram(model.weights().f32(&lin).iter().copied());
             for (a, b) in hist.iter_mut().zip(h) {
                 *a += b;
             }

@@ -1,30 +1,31 @@
 //! Perplexity harness (Table I): next-token cross-entropy over held-out
 //! windows, with pluggable weight transforms for the quantization variants.
+//!
+//! Backend-agnostic: variants are realized through
+//! [`Backend::with_transformed_weights`], so the same harness runs on the
+//! native interpreter and (with the `pjrt` feature) on compiled graphs.
 
 use anyhow::Result;
 
-use crate::model::{log_softmax, ModelRuntime};
+use crate::model::log_softmax;
+use crate::runtime::Backend;
 
 /// Perplexity of the resident (FP16) weights.
-pub fn perplexity(model: &ModelRuntime, windows: &[Vec<u8>]) -> Result<f64> {
-    ppl_with_bufs(model, model.full_param_buffers(), windows)
+pub fn perplexity(model: &dyn Backend, windows: &[Vec<u8>]) -> Result<f64> {
+    ppl_over(model, windows)
 }
 
 /// Perplexity with every linear weight transformed (quantization variant).
 pub fn perplexity_with_transform(
-    model: &ModelRuntime,
+    model: &dyn Backend,
     windows: &[Vec<u8>],
-    transform: impl FnMut(&str, &[f32], usize, usize) -> Result<Vec<f32>>,
+    mut transform: impl FnMut(&str, &[f32], usize, usize) -> Result<Vec<f32>>,
 ) -> Result<f64> {
-    let bufs = model.build_transformed_params(transform)?;
-    ppl_with_bufs(model, &bufs, windows)
+    let variant = model.with_transformed_weights(&mut transform)?;
+    ppl_over(variant.as_ref(), windows)
 }
 
-fn ppl_with_bufs(
-    model: &ModelRuntime,
-    bufs: &[xla::PjRtBuffer],
-    windows: &[Vec<u8>],
-) -> Result<f64> {
+fn ppl_over(model: &dyn Backend, windows: &[Vec<u8>]) -> Result<f64> {
     let p = model.prefill_len();
     let v = model.vocab();
     let mut nll = 0.0f64;
@@ -32,7 +33,7 @@ fn ppl_with_bufs(
     for w in windows {
         anyhow::ensure!(w.len() == p, "window must be prefill_len={p} tokens");
         let toks: Vec<i32> = w.iter().map(|&b| b as i32).collect();
-        let logits = model.eval_logits_with(bufs, &toks, p)?;
+        let logits = model.eval_logits(&toks, p)?;
         // Position i predicts token i+1.
         for i in 0..p - 1 {
             let row = &logits[i * v..(i + 1) * v];
@@ -46,7 +47,62 @@ fn ppl_with_bufs(
 
 #[cfg(test)]
 mod tests {
-    // Exercised end-to-end by rust/tests/integration_goldens.rs and the
-    // table1 experiment; unit coverage for log_softmax lives in
-    // model::sampling.
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::runtime::{InitStyle, NativeBackend};
+
+    fn tiny() -> NativeBackend {
+        let cfg = ModelConfig {
+            name: "ppl-tiny".into(),
+            paper_analog: "none".into(),
+            n_layers: 1,
+            d_model: 128,
+            d_ff: 128,
+            n_heads: 4,
+            head_dim: 32,
+            vocab: 64,
+            cache_len: 64,
+            prefill_len: 32,
+            param_count: 0,
+        };
+        NativeBackend::synthetic(cfg, 5, 42, InitStyle::Confident).expect("synthetic")
+    }
+
+    #[test]
+    fn identity_transform_matches_baseline() {
+        let model = tiny();
+        let windows: Vec<Vec<u8>> = (0..2)
+            .map(|s| (0..32).map(|i| ((i * 7 + s * 13) % 64) as u8).collect())
+            .collect();
+        let base = perplexity(&model, &windows).expect("ppl");
+        let same = perplexity_with_transform(&model, &windows, |_, w, _, _| Ok(w.to_vec()))
+            .expect("ppl");
+        assert!(base.is_finite() && base > 0.0);
+        assert_eq!(base, same, "identity transform changed perplexity");
+    }
+
+    #[test]
+    fn bsfp_draft_ppl_is_finite_and_close() {
+        let model = tiny();
+        // Byte-successor windows: in-distribution for the Confident init,
+        // so both full and draft models predict confidently and the ratio
+        // is meaningful.
+        let windows: Vec<Vec<u8>> = (0..2)
+            .map(|s| (0..32).map(|i| ((i + s * 11) % 64) as u8).collect())
+            .collect();
+        let base = perplexity(&model, &windows).expect("ppl");
+        let draft = perplexity_with_transform(&model, &windows, |_, w, k, n| {
+            let qt = crate::bsfp::quantize_tensor(w, k, n);
+            let mut out = qt.dequant_draft();
+            for o in out.iter_mut() {
+                *o /= qt.tensor_scale;
+            }
+            Ok(out)
+        })
+        .expect("ppl");
+        assert!(draft.is_finite() && draft > 0.0);
+        // The BSFP draft tracks the full model (paper Table I: ~FP16 ppl);
+        // allow a loose factor for the synthetic testbed.
+        assert!(draft < base * 4.0, "draft ppl {draft} vs full {base}");
+    }
 }

@@ -1,0 +1,176 @@
+//! The execution-backend abstraction.
+//!
+//! Everything above this layer (the speculative engine, the serving
+//! coordinator, the report harness) is written against [`Backend`]: the five
+//! request-path operations (`prefill`, `decode_full`, `decode_draft`,
+//! `verify`, `eval_logits`) plus opaque state threading.  Two
+//! implementations exist:
+//!
+//! * [`NativeBackend`] — pure-Rust interpreter over [`HostWeights`]
+//!   (always available; the default).
+//! * `model::ModelRuntime` — PJRT execution of AOT-compiled HLO (behind
+//!   the non-default `pjrt` cargo feature).
+//!
+//! State is passed *by value*: each step consumes the previous state and
+//! returns the next one, which lets the native backend mutate its KV cache
+//! in place and the PJRT backend thread device buffers without host copies.
+
+use anyhow::Result;
+
+use crate::model::{HostWeights, Manifest, ModelConfig};
+
+use super::native::NativeBackend;
+
+/// Opaque per-request state (logits slots + KV cache), backend-specific.
+pub enum BackendState {
+    /// Host-memory KV cache of the native interpreter.
+    Native(super::native::NativeState),
+    /// Device-resident state buffer of the PJRT backend.
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtBuffer),
+}
+
+/// Logits for slot 0 (length `vocab`) plus the threaded state.
+pub struct StepOutput {
+    pub logits: Vec<f32>,
+    pub state: BackendState,
+}
+
+/// All `slots` logits rows (flattened, `slots * vocab`) plus the state.
+pub struct VerifyOutput {
+    pub logits: Vec<f32>,
+    pub state: BackendState,
+}
+
+/// One executable model: full-precision target + BSFP draft, shared KV.
+///
+/// Implementations must keep the draft/verify contract of the paper: the
+/// draft pass runs the same architecture over the BSFP 4-bit view of the
+/// *same* weights, both passes share one KV cache, and `verify` overwrites
+/// drafted positions with full-precision KV.
+pub trait Backend {
+    /// Model architecture (dims, vocab, cache/prefill lengths).
+    fn config(&self) -> &ModelConfig;
+
+    /// Logits slots per state (max draft length + 1 bonus token).
+    fn slots(&self) -> usize;
+
+    /// Names of the BSFP-quantized linear weights.
+    fn linears(&self) -> &[String];
+
+    /// Host copies of the weights (analyses: exponent histograms, re-quantization).
+    fn weights(&self) -> &HostWeights;
+
+    /// Human-readable backend identifier (`"native"`, `"pjrt"`).
+    fn backend_name(&self) -> &'static str;
+
+    /// Run prefill over a padded prompt; slot 0 of the returned logits is
+    /// the prediction after position `length - 1`.
+    fn prefill(&self, tokens: &[i32], length: usize) -> Result<StepOutput>;
+
+    /// One full-precision decode step (the autoregressive baseline).
+    fn decode_full(&self, token: i32, pos: usize, state: BackendState) -> Result<StepOutput>;
+
+    /// One 4-bit BSFP draft decode step (parameter-sharing draft model).
+    fn decode_draft(&self, token: i32, pos: usize, state: BackendState) -> Result<StepOutput>;
+
+    /// Score `slots()` tokens in one full-precision verification pass;
+    /// `tokens[i]` is scored at position `pos0 + i` and full-precision KV
+    /// overwrites the drafted positions (shared cache, §III-C).
+    fn verify(&self, tokens: &[i32], pos0: usize, state: BackendState) -> Result<VerifyOutput>;
+
+    /// Per-position logits `(prefill_len, vocab)` for a padded window — the
+    /// perplexity harness (rows at positions `>= length` are padding).
+    fn eval_logits(&self, tokens: &[i32], length: usize) -> Result<Vec<f32>>;
+
+    /// Clone this model with every 2-D linear weight passed through
+    /// `transform(name, w, k, n) -> w'` — the hook the Table I perplexity
+    /// harness uses to compare quantization variants.
+    fn with_transformed_weights(
+        &self,
+        transform: &mut dyn FnMut(&str, &[f32], usize, usize) -> Result<Vec<f32>>,
+    ) -> Result<Box<dyn Backend>>;
+
+    fn vocab(&self) -> usize {
+        self.config().vocab
+    }
+
+    fn cache_len(&self) -> usize {
+        self.config().cache_len
+    }
+
+    fn prefill_len(&self) -> usize {
+        self.config().prefill_len
+    }
+}
+
+/// Where a model's weights come from.
+#[derive(Debug, Clone)]
+pub enum ModelSource {
+    /// The built-in synthetic zoo — no artifacts directory required.
+    Builtin,
+    /// An artifacts directory (trained weights; compiled HLO graphs when
+    /// the `pjrt` feature is active).
+    Artifacts(std::path::PathBuf),
+}
+
+impl ModelSource {
+    /// `Artifacts(root)` when `root` has a manifest, `Builtin` otherwise.
+    pub fn at(root: impl Into<std::path::PathBuf>) -> Self {
+        let root = root.into();
+        if root.join("manifest.json").exists() {
+            ModelSource::Artifacts(root)
+        } else {
+            ModelSource::Builtin
+        }
+    }
+
+    /// [`ModelSource::at`] the default artifacts root
+    /// (`$SPEQ_ARTIFACTS` or `./artifacts`).
+    pub fn auto() -> Self {
+        Self::at(Manifest::default_root())
+    }
+
+    /// The manifest backing this source (`None` for the builtin zoo).
+    pub fn manifest(&self) -> Result<Option<Manifest>> {
+        match self {
+            ModelSource::Builtin => Ok(None),
+            ModelSource::Artifacts(root) => Ok(Some(Manifest::load(root)?)),
+        }
+    }
+}
+
+/// Load an execution backend for `model` from `source`.
+///
+/// With the `pjrt` feature enabled and an artifacts source, the PJRT
+/// backend is tried first (unless `SPEQ_BACKEND=native`) and the native
+/// interpreter is the fallback; the default build always selects the
+/// native backend.
+pub fn load_backend(source: &ModelSource, model: &str) -> Result<Box<dyn Backend>> {
+    match source {
+        ModelSource::Builtin => Ok(Box::new(NativeBackend::builtin(model)?)),
+        ModelSource::Artifacts(root) => {
+            let manifest = Manifest::load(root)?;
+            #[cfg(feature = "pjrt")]
+            {
+                let force_native =
+                    std::env::var("SPEQ_BACKEND").map(|v| v == "native").unwrap_or(false);
+                if !force_native {
+                    match pjrt_backend(&manifest, model) {
+                        Ok(b) => return Ok(b),
+                        Err(e) => {
+                            eprintln!("pjrt backend unavailable ({e:#}); falling back to native")
+                        }
+                    }
+                }
+            }
+            Ok(Box::new(NativeBackend::from_manifest(&manifest, model)?))
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(manifest: &Manifest, model: &str) -> Result<Box<dyn Backend>> {
+    let rt = super::Runtime::cpu()?;
+    Ok(Box::new(crate::model::ModelRuntime::load(&rt, manifest, model)?))
+}

@@ -1,33 +1,52 @@
-//! PJRT runtime: load AOT-compiled HLO text, compile, execute.
+//! Execution backends: the [`Backend`] trait, the always-available
+//! pure-Rust [`NativeBackend`], and (behind the non-default `pjrt`
+//! feature) the PJRT runtime that executes AOT-compiled HLO graphs.
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU plugin).  All graphs are produced
-//! once at build time by `python/compile/aot.py`; this module is the only
-//! boundary between the Rust request path and the compiled computations.
-//!
-//! Design notes:
-//! * Interchange is HLO **text** — xla_extension 0.5.1 rejects jax >= 0.5's
-//!   64-bit-id serialized protos; the text parser reassigns ids.
-//! * Everything stays in [`xla::PjRtBuffer`]s: weights are uploaded once,
-//!   the KV cache is threaded output->input between steps without touching
-//!   the host, and only tokens/positions/logits cross the host boundary.
+//! * [`backend`] — the trait every layer above this one is written
+//!   against: five request-path operations plus opaque state threading,
+//!   and the [`ModelSource`]/[`load_backend`] factory.
+//! * [`native`] — host-memory interpreter for the tiny SPEQ transformer;
+//!   the draft pass runs through the in-tree BSFP codec, so the whole
+//!   stack builds, tests, and serves without PJRT or artifacts.
+//! * `exec`/`hlo` (`pjrt` feature) — the `xla` crate wrapper: HLO text
+//!   loading, compilation, buffer-to-buffer execution.  The interchange is
+//!   HLO **text** (xla_extension 0.5.1 rejects jax >= 0.5's 64-bit-id
+//!   serialized protos; the text parser reassigns ids).
 
+pub mod backend;
+pub mod native;
+
+pub use backend::{
+    load_backend, Backend, BackendState, ModelSource, StepOutput, VerifyOutput,
+};
+pub use native::{builtin_config, builtin_model_names, InitStyle, NativeBackend, S_SLOTS};
+
+#[cfg(feature = "pjrt")]
 mod exec;
+#[cfg(feature = "pjrt")]
 mod hlo;
 
+#[cfg(feature = "pjrt")]
 pub use exec::{Executable, HostTensor};
+#[cfg(feature = "pjrt")]
 pub use hlo::load_hlo_text;
 
+#[cfg(feature = "pjrt")]
 use std::path::Path;
+#[cfg(feature = "pjrt")]
 use std::sync::Arc;
 
+#[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};
 
 /// Shared PJRT client handle (cheaply cloneable).
+#[cfg(feature = "pjrt")]
 #[derive(Clone)]
 pub struct Runtime {
     client: Arc<xla::PjRtClient>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU PJRT runtime.
     pub fn cpu() -> Result<Self> {

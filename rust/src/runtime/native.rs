@@ -1,0 +1,714 @@
+//! [`NativeBackend`]: a pure-Rust interpreter for the tiny SPEQ transformer.
+//!
+//! Executes the same architecture as the AOT-compiled HLO graphs
+//! (`python/compile/model.py`) directly from [`HostWeights`]: RMSNorm +
+//! RoPE attention + SiLU-gated MLP, KV cache in host memory.  The draft
+//! pass routes every linear through the BSFP codec's 4-bit view of the
+//! *same* weight bits (`quantize_tensor` -> Eq. 4 scales -> dequant), so
+//! the paper's parameter sharing stays literal without any PJRT/XLA
+//! dependency.
+//!
+//! Determinism contract: `decode_full` and each row of `verify` run the
+//! exact same code path over the exact same f32 operations, which makes
+//! greedy speculative decoding *bit-identical* to the autoregressive
+//! baseline — the property `integration_engine.rs` asserts.
+//!
+//! Weights come from three sources:
+//! * [`NativeBackend::from_manifest`] — trained `weights.bin` artifacts
+//!   (no HLO or XLA library needed);
+//! * [`NativeBackend::builtin`] — the built-in synthetic zoo mirroring the
+//!   five paper-analog configs, constructed so next-token predictions are
+//!   confident (a stand-in for the trained near-zero-loss checkpoints);
+//! * [`NativeBackend::synthetic`] — custom configs for tests.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use super::backend::{Backend, BackendState, StepOutput, VerifyOutput};
+use crate::bsfp::{f16_bits_to_f32, f32_to_f16_bits, quantize_tensor, GROUP_SIZE};
+use crate::model::{load_weights, HostWeights, Manifest, ModelConfig};
+use crate::util::rng::Rng;
+
+/// Logits slots in the state (max draft length 20 + 1 bonus), mirroring
+/// `python/compile/model.py::S_SLOTS`.
+pub const S_SLOTS: usize = 21;
+
+/// The built-in synthetic zoo: the five paper-analog configurations of
+/// `python/compile/model.py::MODEL_ZOO` (name, paper analog, layers,
+/// d_model, d_ff, heads, seed).
+const BUILTIN_ZOO: [(&str, &str, usize, usize, usize, usize, u64); 5] = [
+    ("vicuna-7b-tiny", "Vicuna-7b", 2, 128, 256, 4, 11),
+    ("llama2-7b-tiny", "Llama2-7b", 3, 128, 384, 4, 22),
+    ("llama3.1-8b-tiny", "Llama3.1-8b", 4, 128, 384, 4, 33),
+    ("llama3.2-3b-tiny", "Llama3.2-3b", 2, 128, 384, 4, 44),
+    ("llama2-13b-tiny", "Llama2-13b", 4, 256, 512, 8, 55),
+];
+
+/// How synthetic weights are initialized.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitStyle {
+    /// Random init plus a byte-successor head structure that makes
+    /// next-token predictions confident — the analog of the trained
+    /// near-zero-loss checkpoints (high draft accept rate).
+    Confident,
+    /// Plain random init: diffuse, low-confidence predictions (exercises
+    /// the rejection/correction paths).
+    Random,
+}
+
+/// Host-memory request state: the flattened KV cache
+/// `f32[L, 2, C, H, Dh]`.
+pub struct NativeState {
+    kv: Vec<f32>,
+}
+
+impl NativeState {
+    /// Total f32 elements in the cache (diagnostics).
+    pub fn kv_len(&self) -> usize {
+        self.kv.len()
+    }
+}
+
+/// Which weight view a forward pass reads.
+#[derive(Debug, Clone, Copy)]
+enum WeightSet {
+    Full,
+    Draft,
+}
+
+/// A pure-Rust executable model (full target + BSFP draft, shared KV).
+pub struct NativeBackend {
+    config: ModelConfig,
+    slots: usize,
+    linears: Vec<String>,
+    weights: HostWeights,
+    /// Dequantized BSFP draft linears (original domain: Eq. 4 scales
+    /// applied, Algorithm-1 tensor scale undone), derived from the same
+    /// FP16 bits as the full weights.
+    draft: BTreeMap<String, Vec<f32>>,
+    /// RoPE frequencies, one per half head-dim.
+    freqs: Vec<f32>,
+    /// Precomputed per-layer parameter names (hot path: no formatting).
+    layer_names: Vec<LayerNames>,
+}
+
+/// Deterministic `(name, shape)` parameter list — mirrors
+/// `python/compile/model.py::param_shapes`.
+pub fn param_shapes(cfg: &ModelConfig) -> Vec<(String, Vec<usize>)> {
+    let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+    let mut shapes = vec![("embed".to_string(), vec![v, d])];
+    for l in 0..cfg.n_layers {
+        let p = format!("layer{l}.");
+        shapes.push((format!("{p}attn_norm"), vec![d]));
+        for w in ["wq", "wk", "wv", "wo"] {
+            shapes.push((format!("{p}{w}"), vec![d, d]));
+        }
+        shapes.push((format!("{p}mlp_norm"), vec![d]));
+        shapes.push((format!("{p}w_gate"), vec![d, f]));
+        shapes.push((format!("{p}w_up"), vec![d, f]));
+        shapes.push((format!("{p}w_down"), vec![f, d]));
+    }
+    shapes.push(("final_norm".to_string(), vec![d]));
+    shapes.push(("lm_head".to_string(), vec![d, v]));
+    shapes
+}
+
+/// The BSFP-quantized linear names — mirrors
+/// `python/compile/model.py::linear_names`.
+pub fn linear_names(cfg: &ModelConfig) -> Vec<String> {
+    let mut names = Vec::new();
+    for l in 0..cfg.n_layers {
+        for w in ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"] {
+            names.push(format!("layer{l}.{w}"));
+        }
+    }
+    names.push("lm_head".to_string());
+    names
+}
+
+/// Names of the built-in synthetic models.
+pub fn builtin_model_names() -> Vec<&'static str> {
+    BUILTIN_ZOO.iter().map(|z| z.0).collect()
+}
+
+/// Configuration of a built-in model by name.
+pub fn builtin_config(name: &str) -> Result<ModelConfig> {
+    let z = BUILTIN_ZOO
+        .iter()
+        .find(|z| z.0 == name)
+        .with_context(|| format!("model {name:?} not in builtin zoo (have {:?})", builtin_model_names()))?;
+    let mut cfg = ModelConfig {
+        name: z.0.to_string(),
+        paper_analog: z.1.to_string(),
+        n_layers: z.2,
+        d_model: z.3,
+        d_ff: z.4,
+        n_heads: z.5,
+        head_dim: z.3 / z.5,
+        vocab: 256,
+        cache_len: 512,
+        prefill_len: 256,
+        param_count: 0,
+    };
+    cfg.param_count =
+        param_shapes(&cfg).iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+    Ok(cfg)
+}
+
+/// Seed of a built-in model (weights are derived deterministically).
+fn builtin_seed(name: &str) -> u64 {
+    BUILTIN_ZOO.iter().find(|z| z.0 == name).map(|z| z.6).unwrap_or(1)
+}
+
+impl NativeBackend {
+    /// Build from explicit weights (the general constructor).
+    pub fn from_weights(
+        config: ModelConfig,
+        linears: Vec<String>,
+        weights: HostWeights,
+        slots: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(config.n_heads > 0 && config.d_model % config.n_heads == 0,
+            "d_model {} not divisible by n_heads {}", config.d_model, config.n_heads);
+        let head_dim = config.d_model / config.n_heads;
+        anyhow::ensure!(head_dim == config.head_dim,
+            "head_dim {} inconsistent with d_model/n_heads = {head_dim}", config.head_dim);
+        anyhow::ensure!(head_dim % 2 == 0, "RoPE needs an even head_dim, got {head_dim}");
+        anyhow::ensure!(slots >= 2, "need at least 2 logits slots (1 draft + bonus)");
+        anyhow::ensure!(config.prefill_len >= 1, "prefill_len must be >= 1");
+        for (name, shape) in param_shapes(&config) {
+            let n: usize = shape.iter().product();
+            let have = weights
+                .f32s
+                .get(&name)
+                .with_context(|| format!("weights missing param {name:?}"))?;
+            anyhow::ensure!(have.len() == n, "param {name:?}: {} values, expected {n}", have.len());
+        }
+        let draft = derive_draft(&weights, &linears);
+        let half = head_dim / 2;
+        let freqs: Vec<f32> = (0..half)
+            .map(|j| (-(j as f32) * (10000.0f32).ln() / half as f32).exp())
+            .collect();
+        let layer_names = (0..config.n_layers).map(LayerNames::layer).collect();
+        Ok(Self { config, slots, linears, weights, draft, freqs, layer_names })
+    }
+
+    /// Load trained weights from an artifacts manifest (no HLO needed).
+    pub fn from_manifest(manifest: &Manifest, name: &str) -> Result<Self> {
+        let entry = manifest.model(name)?;
+        let weights = load_weights(manifest.path(&entry.weights), entry)
+            .with_context(|| format!("loading weights for {name}"))?;
+        Self::from_weights(
+            entry.config.clone(),
+            entry.linears.clone(),
+            weights,
+            entry.state_slots,
+        )
+    }
+
+    /// A built-in synthetic model by zoo name (no artifacts required).
+    pub fn builtin(name: &str) -> Result<Self> {
+        let config = builtin_config(name)?;
+        Self::synthetic(config, S_SLOTS, builtin_seed(name), InitStyle::Confident)
+    }
+
+    /// Build a synthetic model for an arbitrary configuration.
+    ///
+    /// `config.param_count` is recomputed from the shapes.  All non-norm
+    /// parameters are rounded to FP16 (the codec's substrate), exactly as
+    /// the trained artifacts are.
+    pub fn synthetic(
+        mut config: ModelConfig,
+        slots: usize,
+        seed: u64,
+        style: InitStyle,
+    ) -> Result<Self> {
+        config.param_count =
+            param_shapes(&config).iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        let weights = synthetic_weights(&config, seed, style);
+        Self::from_weights(config.clone(), linear_names(&config), weights, slots)
+    }
+
+    fn kv_elements(&self) -> usize {
+        let c = &self.config;
+        c.n_layers * 2 * c.cache_len * c.n_heads * c.head_dim
+    }
+
+    /// Base offset of cache row `(layer, which, pos)`; the row holds
+    /// `n_heads * head_dim` contiguous f32s.
+    fn kv_index(&self, layer: usize, which: usize, pos: usize) -> usize {
+        let c = &self.config;
+        ((layer * 2 + which) * c.cache_len + pos) * c.n_heads * c.head_dim
+    }
+
+    fn take_state(&self, state: BackendState) -> Result<NativeState> {
+        match state {
+            BackendState::Native(s) => {
+                anyhow::ensure!(
+                    s.kv.len() == self.kv_elements(),
+                    "state has {} KV elements, this model needs {} (state from another model?)",
+                    s.kv.len(),
+                    self.kv_elements()
+                );
+                Ok(s)
+            }
+            #[cfg(feature = "pjrt")]
+            BackendState::Pjrt(_) => {
+                anyhow::bail!("native backend received a PJRT device state")
+            }
+        }
+    }
+
+    /// Weight view resolution: draft linears fall back to the full tensor
+    /// when not quantized (non-2-D or in-dim not a multiple of the group).
+    fn p(&self, set: WeightSet, name: &str) -> &[f32] {
+        if let WeightSet::Draft = set {
+            if let Some(d) = self.draft.get(name) {
+                return d;
+            }
+        }
+        self.weights.f32(name)
+    }
+
+    /// One decode step at `pos`: writes this position's KV, attends the
+    /// cache up to `pos`, returns the logits row.
+    fn step(&self, set: WeightSet, token: i32, pos: usize, kv: &mut [f32]) -> Result<Vec<f32>> {
+        let c = &self.config;
+        anyhow::ensure!(
+            token >= 0 && (token as usize) < c.vocab,
+            "token {token} outside vocab {}",
+            c.vocab
+        );
+        anyhow::ensure!(pos < c.cache_len, "position {pos} exceeds cache_len {}", c.cache_len);
+        let (d, hd, nh) = (c.d_model, c.head_dim, c.n_heads);
+        let tok = token as usize;
+        let mut x: Vec<f32> = self.p(set, "embed")[tok * d..(tok + 1) * d].to_vec();
+        for l in 0..c.n_layers {
+            let names = &self.layer_names[l];
+            // ---- attention ----
+            let h = rmsnorm(&x, self.p(set, &names.attn_norm));
+            let mut q = matvec(&h, self.p(set, &names.wq), d, d);
+            let mut k = matvec(&h, self.p(set, &names.wk), d, d);
+            let v = matvec(&h, self.p(set, &names.wv), d, d);
+            rope_in_place(&mut q, nh, hd, pos, &self.freqs);
+            rope_in_place(&mut k, nh, hd, pos, &self.freqs);
+            let kbase = self.kv_index(l, 0, pos);
+            kv[kbase..kbase + d].copy_from_slice(&k);
+            let vbase = self.kv_index(l, 1, pos);
+            kv[vbase..vbase + d].copy_from_slice(&v);
+            let mut ctx = vec![0.0f32; d];
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut scores = vec![0.0f32; pos + 1];
+            for head in 0..nh {
+                let qh = &q[head * hd..(head + 1) * hd];
+                for (t, s) in scores.iter_mut().enumerate() {
+                    let kr = &kv[self.kv_index(l, 0, t) + head * hd..][..hd];
+                    *s = dot(qh, kr) * scale;
+                }
+                softmax_in_place(&mut scores);
+                let ch = &mut ctx[head * hd..(head + 1) * hd];
+                for (t, &a) in scores.iter().enumerate() {
+                    let vr = &kv[self.kv_index(l, 1, t) + head * hd..][..hd];
+                    axpy(ch, a, vr);
+                }
+            }
+            let o = matvec(&ctx, self.p(set, &names.wo), d, d);
+            axpy(&mut x, 1.0, &o);
+            // ---- MLP ----
+            let h = rmsnorm(&x, self.p(set, &names.mlp_norm));
+            let mut gate = matvec(&h, self.p(set, &names.w_gate), d, c.d_ff);
+            let up = matvec(&h, self.p(set, &names.w_up), d, c.d_ff);
+            for (g, &u) in gate.iter_mut().zip(&up) {
+                let s = *g / (1.0 + (-*g).exp());
+                *g = s * u;
+            }
+            let down = matvec(&gate, self.p(set, &names.w_down), c.d_ff, d);
+            axpy(&mut x, 1.0, &down);
+        }
+        let xf = rmsnorm(&x, self.p(set, "final_norm"));
+        Ok(matvec(&xf, self.p(set, "lm_head"), d, c.vocab))
+    }
+}
+
+/// Per-layer parameter names, computed once at load time.
+struct LayerNames {
+    attn_norm: String,
+    wq: String,
+    wk: String,
+    wv: String,
+    wo: String,
+    mlp_norm: String,
+    w_gate: String,
+    w_up: String,
+    w_down: String,
+}
+
+impl LayerNames {
+    fn layer(l: usize) -> Self {
+        Self {
+            attn_norm: format!("layer{l}.attn_norm"),
+            wq: format!("layer{l}.wq"),
+            wk: format!("layer{l}.wk"),
+            wv: format!("layer{l}.wv"),
+            wo: format!("layer{l}.wo"),
+            mlp_norm: format!("layer{l}.mlp_norm"),
+            w_gate: format!("layer{l}.w_gate"),
+            w_up: format!("layer{l}.w_up"),
+            w_down: format!("layer{l}.w_down"),
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+
+    fn slots(&self) -> usize {
+        self.slots
+    }
+
+    fn linears(&self) -> &[String] {
+        &self.linears
+    }
+
+    fn weights(&self) -> &HostWeights {
+        &self.weights
+    }
+
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+
+    fn prefill(&self, tokens: &[i32], length: usize) -> Result<StepOutput> {
+        let p = self.config.prefill_len;
+        anyhow::ensure!(tokens.len() == p, "prefill needs exactly {p} (padded) tokens");
+        anyhow::ensure!(length >= 1 && length <= p, "prefill length out of range");
+        let mut kv = vec![0.0f32; self.kv_elements()];
+        let mut logits = Vec::new();
+        for (t, &tok) in tokens.iter().enumerate().take(length) {
+            logits = self.step(WeightSet::Full, tok, t, &mut kv)?;
+        }
+        Ok(StepOutput { logits, state: BackendState::Native(NativeState { kv }) })
+    }
+
+    fn decode_full(&self, token: i32, pos: usize, state: BackendState) -> Result<StepOutput> {
+        let mut s = self.take_state(state)?;
+        let logits = self.step(WeightSet::Full, token, pos, &mut s.kv)?;
+        Ok(StepOutput { logits, state: BackendState::Native(s) })
+    }
+
+    fn decode_draft(&self, token: i32, pos: usize, state: BackendState) -> Result<StepOutput> {
+        let mut s = self.take_state(state)?;
+        let logits = self.step(WeightSet::Draft, token, pos, &mut s.kv)?;
+        Ok(StepOutput { logits, state: BackendState::Native(s) })
+    }
+
+    fn verify(&self, tokens: &[i32], pos0: usize, state: BackendState) -> Result<VerifyOutput> {
+        let s = self.slots;
+        anyhow::ensure!(tokens.len() == s, "verify needs exactly {s} (padded) tokens");
+        let mut st = self.take_state(state)?;
+        let v = self.config.vocab;
+        let mut logits = vec![0.0f32; s * v];
+        // Each row runs the same full-precision step as `decode_full`, so
+        // verification is bit-identical to sequential decoding; rows past
+        // the real draft length score padding tokens whose KV rows are
+        // never attended before being overwritten.
+        for (i, &tok) in tokens.iter().enumerate() {
+            let row = self.step(WeightSet::Full, tok, pos0 + i, &mut st.kv)?;
+            logits[i * v..(i + 1) * v].copy_from_slice(&row);
+        }
+        Ok(VerifyOutput { logits, state: BackendState::Native(st) })
+    }
+
+    fn eval_logits(&self, tokens: &[i32], length: usize) -> Result<Vec<f32>> {
+        let p = self.config.prefill_len;
+        anyhow::ensure!(tokens.len() == p, "eval needs exactly {p} (padded) tokens");
+        anyhow::ensure!(length >= 1 && length <= p, "eval length out of range");
+        anyhow::ensure!(p <= self.config.cache_len, "prefill window exceeds cache");
+        let v = self.config.vocab;
+        let mut kv = vec![0.0f32; self.kv_elements()];
+        let mut out = vec![0.0f32; p * v];
+        for (t, &tok) in tokens.iter().enumerate().take(length) {
+            let row = self.step(WeightSet::Full, tok, t, &mut kv)?;
+            out[t * v..(t + 1) * v].copy_from_slice(&row);
+        }
+        Ok(out)
+    }
+
+    fn with_transformed_weights(
+        &self,
+        transform: &mut dyn FnMut(&str, &[f32], usize, usize) -> Result<Vec<f32>>,
+    ) -> Result<Box<dyn Backend>> {
+        let mut weights = self.weights.clone();
+        for name in &self.linears {
+            let shape = weights.shape(name).to_vec();
+            if shape.len() != 2 {
+                continue;
+            }
+            let (k, n) = (shape[0], shape[1]);
+            let new = transform(name, weights.f32(name), k, n)?;
+            anyhow::ensure!(
+                new.len() == k * n,
+                "transform for {name:?} returned {} values, expected {}",
+                new.len(),
+                k * n
+            );
+            // Keep the canonical bit view in sync (best effort: transformed
+            // values need not be FP16-representable, mirroring the PJRT
+            // path which uploads transformed weights as raw f32).
+            weights.bits.insert(name.clone(), new.iter().map(|&v| f32_to_f16_bits(v)).collect());
+            weights.f32s.insert(name.clone(), new);
+        }
+        let b = NativeBackend::from_weights(
+            self.config.clone(),
+            self.linears.clone(),
+            weights,
+            self.slots,
+        )?;
+        Ok(Box::new(b))
+    }
+}
+
+/// Derive the dequantized BSFP draft view of every quantizable linear.
+fn derive_draft(weights: &HostWeights, linears: &[String]) -> BTreeMap<String, Vec<f32>> {
+    let mut draft = BTreeMap::new();
+    for name in linears {
+        let shape = weights.shape(name);
+        if shape.len() != 2 || shape[0] % GROUP_SIZE != 0 {
+            continue;
+        }
+        let (k, n) = (shape[0], shape[1]);
+        let qt = quantize_tensor(weights.f32(name), k, n);
+        // Fold the Algorithm-1 pre-scale back out so the draft operates in
+        // the original weight domain (as the draft HLO graph does).
+        let mut d = qt.dequant_draft();
+        for v in &mut d {
+            *v /= qt.tensor_scale;
+        }
+        draft.insert(name.clone(), d);
+    }
+    draft
+}
+
+/// Deterministic synthetic weights for `cfg` (see [`InitStyle`]).
+fn synthetic_weights(cfg: &ModelConfig, seed: u64, style: InitStyle) -> HostWeights {
+    let mut rng = Rng::seed_from_u64(seed);
+    // Residual-path damping keeps the byte-successor structure dominant
+    // over the random mixing layers (deeper stacks need more damping).
+    let damp = if cfg.n_layers >= 4 { 0.15f32 } else { 0.25f32 };
+    let beta = 2.5f32;
+    let mut f32s: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+    let mut shapes: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for (name, shape) in param_shapes(cfg) {
+        let n: usize = shape.iter().product();
+        let data = if name.ends_with("norm") {
+            vec![1.0f32; n]
+        } else {
+            let mut std = 0.5 / (shape[0] as f32).sqrt();
+            if style == InitStyle::Confident
+                && (name.ends_with(".wo") || name.ends_with(".w_down"))
+            {
+                std *= damp;
+            }
+            rng.normal_vec(n, std)
+        };
+        shapes.insert(name.clone(), shape);
+        f32s.insert(name, data);
+    }
+    if style == InitStyle::Confident {
+        // Successor head: align lm_head column (t+1) mod V with embed row t,
+        // making the model a confident byte-successor predictor — the
+        // stand-in for training to near-zero loss.
+        let (v, d) = (cfg.vocab, cfg.d_model);
+        let embed = f32s["embed"].clone();
+        let lm = f32s.get_mut("lm_head").expect("lm_head exists");
+        for t in 0..v {
+            let row = &embed[t * d..(t + 1) * d];
+            let norm = dot(row, row).sqrt().max(1e-6);
+            let col = (t + 1) % v;
+            for (j, &e) in row.iter().enumerate() {
+                lm[j * v + col] += beta * e / norm;
+            }
+        }
+    }
+    // Round everything to FP16 — the canonical substrate of the codec.
+    let mut bits: BTreeMap<String, Vec<u16>> = BTreeMap::new();
+    for (name, data) in f32s.iter_mut() {
+        let b: Vec<u16> = data.iter().map(|&x| f32_to_f16_bits(x)).collect();
+        *data = b.iter().map(|&x| f16_bits_to_f32(x)).collect();
+        bits.insert(name.clone(), b);
+    }
+    HostWeights { bits, f32s, shapes }
+}
+
+// ---- f32 kernels -----------------------------------------------------------
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// `y += a * x`.
+fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// `x (1, k) @ w (k, n)` with `w` row-major; row-sequential accumulation.
+fn matvec(x: &[f32], w: &[f32], k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), k);
+    debug_assert_eq!(w.len(), k * n);
+    let mut y = vec![0.0f32; n];
+    for (i, &xi) in x.iter().enumerate() {
+        axpy(&mut y, xi, &w[i * n..(i + 1) * n]);
+    }
+    y
+}
+
+fn rmsnorm(x: &[f32], w: &[f32]) -> Vec<f32> {
+    let ms = x.iter().map(|&v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (ms + 1e-5).sqrt();
+    x.iter().zip(w).map(|(&v, &g)| v * r * g).collect()
+}
+
+fn softmax_in_place(v: &mut [f32]) {
+    let m = v.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut z = 0.0f32;
+    for s in v.iter_mut() {
+        *s = (*s - m).exp();
+        z += *s;
+    }
+    for s in v.iter_mut() {
+        *s /= z;
+    }
+}
+
+/// Rotary embedding over `(n_heads, head_dim)` flattened, matching
+/// `python/compile/model.py::rope`.
+fn rope_in_place(x: &mut [f32], n_heads: usize, head_dim: usize, pos: usize, freqs: &[f32]) {
+    let half = head_dim / 2;
+    for head in 0..n_heads {
+        let base = head * head_dim;
+        for (j, &f) in freqs.iter().enumerate() {
+            let (sin, cos) = (pos as f32 * f).sin_cos();
+            let a = x[base + j];
+            let b = x[base + half + j];
+            x[base + j] = a * cos - b * sin;
+            x[base + half + j] = a * sin + b * cos;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "unit-tiny".into(),
+            paper_analog: "none".into(),
+            n_layers: 1,
+            d_model: 128,
+            d_ff: 128,
+            n_heads: 4,
+            head_dim: 32,
+            vocab: 64,
+            cache_len: 96,
+            prefill_len: 32,
+            param_count: 0,
+        }
+    }
+
+    #[test]
+    fn builtin_zoo_loads_and_prefills() {
+        let b = NativeBackend::builtin("vicuna-7b-tiny").expect("builtin");
+        assert_eq!(b.vocab(), 256);
+        assert_eq!(b.slots(), S_SLOTS);
+        let toks = vec![b'a' as i32; b.prefill_len()];
+        let out = b.prefill(&toks, 8).expect("prefill");
+        assert_eq!(out.logits.len(), 256);
+        assert!(out.logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn unknown_builtin_is_an_error() {
+        let err = NativeBackend::builtin("gpt-5").unwrap_err();
+        assert!(format!("{err}").contains("builtin zoo"), "{err}");
+    }
+
+    #[test]
+    fn decode_is_deterministic() {
+        let b = NativeBackend::synthetic(tiny_cfg(), 5, 7, InitStyle::Random).unwrap();
+        let toks = vec![3i32; b.prefill_len()];
+        let run = || {
+            let pre = b.prefill(&toks, 4).unwrap();
+            let step = b.decode_full(1, 4, pre.state).unwrap();
+            step.logits
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn verify_rows_match_sequential_decode_bitwise() {
+        let b = NativeBackend::synthetic(tiny_cfg(), 5, 9, InitStyle::Confident).unwrap();
+        let toks = vec![5i32; b.prefill_len()];
+        let plen = 6usize;
+        let vtokens: Vec<i32> = (1..=5).collect();
+
+        let pre = b.prefill(&toks, plen).unwrap();
+        let ver = b.verify(&vtokens, plen, pre.state).unwrap();
+
+        let mut state = b.prefill(&toks, plen).unwrap().state;
+        let v = b.vocab();
+        for (i, &tok) in vtokens.iter().enumerate() {
+            let step = b.decode_full(tok, plen + i, state).unwrap();
+            state = step.state;
+            assert_eq!(
+                step.logits,
+                ver.logits[i * v..(i + 1) * v].to_vec(),
+                "verify row {i} diverged from sequential decode"
+            );
+        }
+    }
+
+    #[test]
+    fn draft_weights_are_derived_from_the_same_bits() {
+        let b = NativeBackend::synthetic(tiny_cfg(), 5, 3, InitStyle::Confident).unwrap();
+        // Every quantizable linear has a draft view, and it matches an
+        // independent quantize->dequant of the stored weights.
+        for name in b.linears().to_vec() {
+            let shape = b.weights().shape(&name).to_vec();
+            if shape.len() != 2 || shape[0] % GROUP_SIZE != 0 {
+                continue;
+            }
+            let qt = quantize_tensor(b.weights().f32(&name), shape[0], shape[1]);
+            let expect: Vec<f32> =
+                qt.dequant_draft().iter().map(|&v| v / qt.tensor_scale).collect();
+            assert_eq!(b.draft[&name], expect, "{name}");
+        }
+        assert!(b.draft.contains_key("lm_head"));
+    }
+
+    #[test]
+    fn state_from_another_model_is_rejected() {
+        let a = NativeBackend::synthetic(tiny_cfg(), 5, 1, InitStyle::Random).unwrap();
+        let mut big = tiny_cfg();
+        big.cache_len = 128;
+        let c = NativeBackend::synthetic(big, 5, 1, InitStyle::Random).unwrap();
+        let toks = vec![0i32; a.prefill_len()];
+        let pre = a.prefill(&toks, 2).unwrap();
+        let err = c.decode_full(0, 2, pre.state).unwrap_err();
+        assert!(format!("{err}").contains("KV elements"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_token_is_rejected() {
+        let b = NativeBackend::synthetic(tiny_cfg(), 5, 1, InitStyle::Random).unwrap();
+        let toks = vec![0i32; b.prefill_len()];
+        let pre = b.prefill(&toks, 2).unwrap();
+        let err = b.decode_full(64, 2, pre.state).unwrap_err();
+        assert!(format!("{err}").contains("vocab"), "{err}");
+    }
+}

@@ -1,4 +1,8 @@
 //! The SPEQ generation engine: draft -> verify -> accept, with early exit.
+//!
+//! The engine is generic over the execution backend: it drives any
+//! [`Backend`] (native interpreter or PJRT) through the five request-path
+//! operations and threads the opaque state between them.
 
 use std::time::{Duration, Instant};
 
@@ -6,7 +10,8 @@ use anyhow::Result;
 
 use super::accept::{greedy_accept, speculative_sample_accept};
 use super::trace::{IterRecord, SpecTrace};
-use crate::model::{sample_from_logits, softmax, ModelRuntime, SamplingParams};
+use crate::model::{sample_from_logits, softmax, SamplingParams};
+use crate::runtime::Backend;
 use crate::util::rng::Rng;
 
 /// Speculative decoding hyperparameters (paper defaults: L = 16, γ = 0.6).
@@ -36,22 +41,22 @@ pub struct GenResult {
     pub wall: Duration,
 }
 
-/// The engine borrows a loaded model; it owns no device state between calls.
+/// The engine borrows a loaded backend; it owns no state between calls.
 pub struct Engine<'m> {
-    model: &'m ModelRuntime,
+    backend: &'m dyn Backend,
 }
 
 impl<'m> Engine<'m> {
-    pub fn new(model: &'m ModelRuntime) -> Self {
-        Self { model }
+    pub fn new(backend: &'m dyn Backend) -> Self {
+        Self { backend }
     }
 
-    pub fn model(&self) -> &ModelRuntime {
-        self.model
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend
     }
 
     fn pad_prompt(&self, prompt: &[u8]) -> (Vec<i32>, usize) {
-        let p = self.model.prefill_len();
+        let p = self.backend.prefill_len();
         let len = prompt.len().min(p);
         let mut toks: Vec<i32> = prompt[prompt.len() - len..].iter().map(|&b| b as i32).collect();
         while toks.len() < p {
@@ -63,11 +68,23 @@ impl<'m> Engine<'m> {
     }
 
     /// Maximum generable tokens given the KV cache capacity.
-    fn capacity(&self, prompt_len: usize) -> usize {
-        self.model.cache_len() - prompt_len - self.model.slots() - 1
+    ///
+    /// Errors when the cache cannot even hold one verification window past
+    /// the prompt (`cache_len < prompt_len + slots + 1`) instead of
+    /// underflowing.
+    fn capacity(&self, prompt_len: usize) -> Result<usize> {
+        let need = prompt_len + self.backend.slots() + 1;
+        self.backend.cache_len().checked_sub(need).ok_or_else(|| {
+            anyhow::anyhow!(
+                "KV cache too small: cache_len {} < prompt {} + slots {} + 1",
+                self.backend.cache_len(),
+                prompt_len,
+                self.backend.slots()
+            )
+        })
     }
 
-    /// Plain autoregressive decoding with the full-precision graph — the
+    /// Plain autoregressive decoding with the full-precision pass — the
     /// lossless baseline (and the FP16 reference for speedup measurements).
     pub fn generate_ar(
         &self,
@@ -77,61 +94,67 @@ impl<'m> Engine<'m> {
     ) -> Result<GenResult> {
         let t0 = Instant::now();
         let (toks, plen) = self.pad_prompt(prompt);
-        let gen_len = gen_len.min(self.capacity(plen));
+        let gen_len = gen_len.min(self.capacity(plen)?);
+        let mut trace = SpecTrace { iterations: vec![], produced: 0, prompt_len: plen };
+        if gen_len == 0 {
+            return Ok(GenResult { tokens: vec![], trace, wall: t0.elapsed() });
+        }
         let mut rng = Rng::seed_from_u64(sampling.seed);
-        let pre = self.model.prefill(&toks, plen)?;
+        let pre = self.backend.prefill(&toks, plen)?;
         let mut state = pre.state;
         let (mut tok, _) = sample_from_logits(&pre.logits, &sampling, &mut rng);
         let mut out = vec![tok as u8];
         let mut pos = plen;
         while out.len() < gen_len {
-            let step = self.model.decode_full(tok as i32, pos, &state)?;
+            let step = self.backend.decode_full(tok as i32, pos, state)?;
             state = step.state;
             let (t, _) = sample_from_logits(&step.logits, &sampling, &mut rng);
             tok = t;
             out.push(tok as u8);
             pos += 1;
         }
-        Ok(GenResult {
-            tokens: out,
-            trace: SpecTrace { iterations: vec![], produced: gen_len, prompt_len: plen },
-            wall: t0.elapsed(),
-        })
+        // Report what was actually emitted (capacity may clamp `gen_len`).
+        trace.produced = out.len();
+        Ok(GenResult { tokens: out, trace, wall: t0.elapsed() })
     }
 
     /// SPEQ speculative decoding: BSFP draft + parallel verification.
     pub fn generate_spec(&self, prompt: &[u8], cfg: &SpecConfig) -> Result<GenResult> {
         let t0 = Instant::now();
-        let slots = self.model.slots();
+        let slots = self.backend.slots();
         anyhow::ensure!(
             cfg.max_draft + 1 <= slots,
             "max_draft {} exceeds graph slots {} - 1",
             cfg.max_draft,
             slots
         );
+        anyhow::ensure!(cfg.max_draft >= 1, "max_draft must be >= 1");
         let (toks, plen) = self.pad_prompt(prompt);
-        let gen_len = cfg.gen_len.min(self.capacity(plen));
-        let vocab = self.model.vocab();
+        let gen_len = cfg.gen_len.min(self.capacity(plen)?);
+        let vocab = self.backend.vocab();
+        let mut trace = SpecTrace { iterations: vec![], produced: 0, prompt_len: plen };
+        if gen_len == 0 {
+            return Ok(GenResult { tokens: vec![], trace, wall: t0.elapsed() });
+        }
         let mut rng = Rng::seed_from_u64(cfg.sampling.seed);
 
-        let pre = self.model.prefill(&toks, plen)?;
+        let pre = self.backend.prefill(&toks, plen)?;
         let mut state = pre.state;
         // The carry token: sampled from the target's prefill logits, not yet
         // fed through the model.
         let (mut carry, _) = sample_from_logits(&pre.logits, &cfg.sampling, &mut rng);
         let mut out = vec![carry as u8];
         let mut pos0 = plen; // carry token's position
-        let mut trace = SpecTrace { iterations: vec![], produced: 0, prompt_len: plen };
 
         while out.len() < gen_len {
-            // ---- draft phase (quantized graph, shared KV) ----
+            // ---- draft phase (quantized pass, shared KV) ----
             let budget = cfg.max_draft.min(gen_len - out.len());
             let mut drafts: Vec<usize> = Vec::with_capacity(budget);
             let mut draft_probs: Vec<Vec<f32>> = Vec::with_capacity(budget);
             let mut early_exit = false;
             let mut tok = carry;
             for i in 0..budget {
-                let step = self.model.decode_draft(tok as i32, pos0 + i, &state)?;
+                let step = self.backend.decode_draft(tok as i32, pos0 + i, state)?;
                 state = step.state;
                 let probs = if cfg.sampling.is_greedy() {
                     softmax(&step.logits)
@@ -164,7 +187,7 @@ impl<'m> Engine<'m> {
             while vtokens.len() < slots {
                 vtokens.push(0);
             }
-            let ver = self.model.verify(&vtokens, pos0, &state)?;
+            let ver = self.backend.verify(&vtokens, pos0, state)?;
             state = ver.state;
 
             let outcome = if cfg.sampling.is_greedy() {

@@ -1,7 +1,8 @@
 //! In-tree substrates for an offline build.
 //!
-//! The build environment vendors only the `xla` closure, so the usual
-//! ecosystem crates are replaced by small, fully-tested implementations:
+//! The build environment has no crate registry (see `third_party/` for the
+//! vendored `anyhow` shim and the `xla` stub), so the usual ecosystem
+//! crates are replaced by small, fully-tested implementations:
 //!
 //! * [`f16`] — IEEE 754 binary16 <-> f32 conversion (round-to-nearest-even),
 //!   the substrate under all BSFP bit manipulation.

@@ -10,5 +10,7 @@
 mod tasks;
 mod traces;
 
-pub use tasks::{heldout_windows, load_task, task_names, TaskSet};
+pub use tasks::{
+    builtin_task, heldout_windows, load_task, load_task_or_builtin, task_names, TaskSet,
+};
 pub use traces::{load_trace, save_trace, TraceRecord};

@@ -49,6 +49,61 @@ pub fn load_task(manifest: &Manifest, task: &str) -> Result<TaskSet> {
     Ok(TaskSet { task: task.to_string(), paper_analog, prompt_len, prompts })
 }
 
+/// Synthetic prompt set for `task` — the builtin fallback when no
+/// artifacts directory exists.  Emits the same three families as the
+/// artifact corpus generator (`python/compile/corpus.py` analogs), each
+/// prompt left-padded with spaces to exactly `prompt_len` bytes.
+pub fn builtin_task(task: &str, prompt_len: usize, n_prompts: usize) -> Result<TaskSet> {
+    anyhow::ensure!(n_prompts >= 1, "need at least one prompt");
+    let paper_analog = match task {
+        "math" => "GSM8K",
+        "code" => "Humaneval",
+        "chat" => "MT-bench",
+        other => anyhow::bail!("task {other:?} not a builtin family (have {:?})", task_names()),
+    };
+    let names = ["ada", "bob", "carol", "dan", "eve", "fred", "grace", "hugo"];
+    let items = ["apples", "coins", "books", "cups", "pens", "cards"];
+    let topics = ["music", "books", "travel", "games", "cooking", "film"];
+    let mut prompts = Vec::with_capacity(n_prompts);
+    for i in 0..n_prompts {
+        let text = match task {
+            "math" => format!(
+                "Q: {} has {} {} and finds {} more. how many {} now?\nA: ",
+                names[i % names.len()],
+                2 + i % 9,
+                items[i % items.len()],
+                1 + i % 7,
+                items[i % items.len()],
+            ),
+            "code" => format!("def add_{}(x):\n    return ", 1 + i % 9),
+            _ => format!(
+                "USER: hello, can we talk about {}?\nBOT: ",
+                topics[i % topics.len()]
+            ),
+        };
+        let mut p = text.into_bytes();
+        p.truncate(prompt_len);
+        let mut padded = vec![b' '; prompt_len - p.len()];
+        padded.extend_from_slice(&p);
+        prompts.push(padded);
+    }
+    Ok(TaskSet { task: task.to_string(), paper_analog: paper_analog.to_string(), prompt_len, prompts })
+}
+
+/// Load a task from the manifest when one is available, else fall back to
+/// the builtin synthetic prompts.
+pub fn load_task_or_builtin(
+    manifest: Option<&Manifest>,
+    task: &str,
+    prompt_len: usize,
+    n_prompts: usize,
+) -> Result<TaskSet> {
+    match manifest {
+        Some(m) => load_task(m, task),
+        None => builtin_task(task, prompt_len, n_prompts),
+    }
+}
+
 /// Slice the held-out stream into non-overlapping windows of `window`
 /// tokens (the wikitext2-perplexity analog for Table I).
 pub fn heldout_windows(manifest: &Manifest, window: usize, max_windows: usize) -> Result<Vec<Vec<u8>>> {
@@ -98,6 +153,21 @@ mod tests {
         assert_eq!(load_task(&m, "math").unwrap().paper_analog, "GSM8K");
         assert_eq!(load_task(&m, "code").unwrap().paper_analog, "Humaneval");
         assert_eq!(load_task(&m, "chat").unwrap().paper_analog, "MT-bench");
+    }
+
+    #[test]
+    fn builtin_tasks_cover_all_families_without_artifacts() {
+        for t in task_names() {
+            let ts = builtin_task(t, 64, 5).unwrap();
+            assert_eq!(ts.prompts.len(), 5);
+            assert!(ts.prompts.iter().all(|p| p.len() == 64));
+            assert_ne!(ts.prompts[0], ts.prompts[1]);
+        }
+        assert_eq!(builtin_task("math", 64, 2).unwrap().paper_analog, "GSM8K");
+        assert!(builtin_task("poetry", 64, 2).is_err());
+        // The fallback path selects builtin when no manifest is given.
+        let ts = load_task_or_builtin(None, "code", 48, 3).unwrap();
+        assert_eq!(ts.prompt_len, 48);
     }
 
     #[test]

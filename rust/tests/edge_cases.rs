@@ -1,9 +1,9 @@
 //! Edge cases and failure injection: malformed artifacts, boundary
-//! generation lengths, queue stress.
+//! generation lengths, capacity errors, queue stress.
 
 use speq::coordinator::{Priority, RequestQueue};
-use speq::model::{Manifest, ModelRuntime, SamplingParams};
-use speq::runtime::Runtime;
+use speq::model::{Manifest, ModelConfig, SamplingParams};
+use speq::runtime::{Backend, InitStyle, NativeBackend};
 use speq::specdec::{Engine, SpecConfig};
 
 fn artifacts_root() -> std::path::PathBuf {
@@ -60,18 +60,14 @@ fn unknown_model_name_is_a_clear_error() {
 
 #[test]
 fn engine_boundary_generation_lengths() {
-    if !have_artifacts() {
-        return;
-    }
-    let m = Manifest::load(artifacts_root()).unwrap();
-    let rt = Runtime::cpu().unwrap();
-    let model = ModelRuntime::load(&rt, &m, "vicuna-7b-tiny").unwrap();
+    let model = NativeBackend::builtin("vicuna-7b-tiny").unwrap();
     let engine = Engine::new(&model);
     // gen_len 1: exactly one token, no draft iterations needed.
     let r = engine
         .generate_spec(b"Q: ", &SpecConfig { gen_len: 1, ..Default::default() })
         .unwrap();
     assert_eq!(r.tokens.len(), 1);
+    assert_eq!(r.trace.produced, 1);
     // Oversized prompt: uses the trailing window, still works.
     let huge = vec![b'a'; 10_000];
     let r = engine
@@ -83,6 +79,7 @@ fn engine_boundary_generation_lengths() {
         .generate_spec(b"Q: ", &SpecConfig { gen_len: 100_000, ..Default::default() })
         .unwrap();
     assert!(r.tokens.len() <= model.cache_len());
+    assert_eq!(r.trace.produced, r.tokens.len());
     // max_draft beyond graph slots is rejected.
     let err = engine
         .generate_spec(b"Q: ", &SpecConfig { max_draft: 99, ..Default::default() })
@@ -91,13 +88,52 @@ fn engine_boundary_generation_lengths() {
 }
 
 #[test]
+fn zero_gen_len_produces_no_tokens() {
+    // Regression: `generate_ar` used to emit one token and report
+    // `produced: gen_len`, disagreeing with `tokens.len()`.
+    let model = NativeBackend::builtin("vicuna-7b-tiny").unwrap();
+    let engine = Engine::new(&model);
+    let ar = engine.generate_ar(b"Q: ", 0, SamplingParams::greedy()).unwrap();
+    assert!(ar.tokens.is_empty());
+    assert_eq!(ar.trace.produced, 0);
+    let spec = engine
+        .generate_spec(b"Q: ", &SpecConfig { gen_len: 0, ..Default::default() })
+        .unwrap();
+    assert!(spec.tokens.is_empty());
+    assert_eq!(spec.trace.produced, 0);
+}
+
+#[test]
+fn undersized_kv_cache_is_a_proper_error() {
+    // Regression: `Engine::capacity` used to underflow (usize wrap) when
+    // cache_len < prompt_len + slots + 1; it must be a clean error now.
+    let cfg = ModelConfig {
+        name: "cramped".into(),
+        paper_analog: "none".into(),
+        n_layers: 1,
+        d_model: 128,
+        d_ff: 128,
+        n_heads: 4,
+        head_dim: 32,
+        vocab: 64,
+        cache_len: 40, // < prefill(32) + slots(9) + 1
+        prefill_len: 32,
+        param_count: 0,
+    };
+    let model = NativeBackend::synthetic(cfg, 9, 5, InitStyle::Random).unwrap();
+    let engine = Engine::new(&model);
+    let prompt = vec![b' '; 32];
+    let err = engine
+        .generate_spec(&prompt, &SpecConfig { gen_len: 8, max_draft: 4, ..Default::default() })
+        .unwrap_err();
+    assert!(format!("{err}").contains("KV cache too small"), "{err}");
+    let err = engine.generate_ar(&prompt, 8, SamplingParams::greedy()).unwrap_err();
+    assert!(format!("{err}").contains("KV cache too small"), "{err}");
+}
+
+#[test]
 fn engine_ar_spec_agree_at_tiny_lengths() {
-    if !have_artifacts() {
-        return;
-    }
-    let m = Manifest::load(artifacts_root()).unwrap();
-    let rt = Runtime::cpu().unwrap();
-    let model = ModelRuntime::load(&rt, &m, "llama3.2-3b-tiny").unwrap();
+    let model = NativeBackend::builtin("llama3.2-3b-tiny").unwrap();
     let engine = Engine::new(&model);
     for gen_len in [1usize, 2, 3, 17, 18] {
         let ar = engine

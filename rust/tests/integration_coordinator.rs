@@ -1,28 +1,23 @@
 //! Integration: the serving coordinator end-to-end (worker pool + queue +
-//! sessions + metrics) over real artifacts.
+//! sessions + metrics) over the builtin native backend — no artifacts.
 
-use speq::coordinator::{Mode, Priority, Server, ServerConfig};
+use speq::coordinator::{Mode, ModelSource, Priority, Server, ServerConfig};
 use speq::model::SamplingParams;
 
-fn server(workers: usize) -> Option<Server> {
-    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !root.join("manifest.json").exists() {
-        eprintln!("skipping coordinator test (no artifacts)");
-        return None;
-    }
+fn server(workers: usize) -> Server {
     let cfg = ServerConfig {
-        artifacts_root: root,
+        source: ModelSource::Builtin,
         model: "vicuna-7b-tiny".into(),
         workers,
         queue_capacity: 32,
         session_history: 96,
     };
-    Some(Server::start(cfg).expect("server start"))
+    Server::start(cfg).expect("server start")
 }
 
 #[test]
 fn serves_a_single_request() {
-    let Some(server) = server(1) else { return };
+    let server = server(1);
     let body = server.generate(b"Q: ada has 2 pens and buys 3 more. how many pens now?\nA: ", 48).expect("generate");
     assert_eq!(body.tokens.len(), 48);
     let snap = server.metrics().snapshot();
@@ -34,7 +29,7 @@ fn serves_a_single_request() {
 
 #[test]
 fn serves_concurrent_requests_across_workers() {
-    let Some(server) = server(2) else { return };
+    let server = server(2);
     let prompts: Vec<&[u8]> = vec![
         b"Q: bob has 5 coins and wins 2 more. how many coins now?\nA: ",
         b"def inc_1(x):\n    return ",
@@ -74,7 +69,7 @@ fn serves_concurrent_requests_across_workers() {
 
 #[test]
 fn speculative_and_autoregressive_modes_agree() {
-    let Some(server) = server(1) else { return };
+    let server = server(1);
     let prompt: &[u8] = b"Q: ken has 8 books and sells 3. how many books left?\nA: ";
     let (_, rx_spec) = server
         .submit(prompt, 40, Mode::Speculative, Priority::Interactive,
@@ -87,7 +82,7 @@ fn speculative_and_autoregressive_modes_agree() {
     let spec = rx_spec.recv().unwrap().result.unwrap();
     let ar = rx_ar.recv().unwrap().result.unwrap();
     assert_eq!(spec.tokens, ar.tokens, "serving path lost losslessness");
-    // The speculative mode should have used drafts.
+    // The speculative mode should have used drafts and accepted some.
     assert!(spec.trace.draft_steps() > 0);
     assert_eq!(ar.trace.draft_steps(), 0);
     server.shutdown();
@@ -95,7 +90,7 @@ fn speculative_and_autoregressive_modes_agree() {
 
 #[test]
 fn sessions_carry_context_between_turns() {
-    let Some(server) = server(1) else { return };
+    let server = server(1);
     let sid = 7u64;
     let (_, rx1) = server
         .submit(b"USER: hello, can we talk about books?\nBOT: ", 24,
@@ -112,4 +107,30 @@ fn sessions_carry_context_between_turns() {
     let out2 = rx2.recv().unwrap().result.unwrap();
     assert_eq!(out2.tokens.len(), 24);
     server.shutdown();
+}
+
+#[test]
+fn unknown_builtin_model_fails_fast() {
+    let cfg = ServerConfig {
+        source: ModelSource::Builtin,
+        model: "gpt-5".into(),
+        workers: 1,
+        queue_capacity: 4,
+        session_history: 16,
+    };
+    let err = Server::start(cfg).unwrap_err();
+    assert!(format!("{err}").contains("builtin zoo"), "{err}");
+}
+
+#[test]
+fn missing_artifacts_source_fails_fast() {
+    let cfg = ServerConfig {
+        source: ModelSource::Artifacts("/nonexistent/artifacts".into()),
+        model: "vicuna-7b-tiny".into(),
+        workers: 1,
+        queue_capacity: 4,
+        session_history: 16,
+    };
+    let err = Server::start(cfg).unwrap_err();
+    assert!(format!("{err:#}").contains("make artifacts"), "{err:#}");
 }

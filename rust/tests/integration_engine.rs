@@ -1,20 +1,16 @@
-//! Integration: the speculative decoding engine over real artifacts.
+//! Integration: the speculative decoding engine over the native backend.
+//!
+//! Runs entirely on the builtin synthetic zoo — no artifacts, no PJRT —
+//! and asserts the paper's core properties end to end: the full
+//! draft → verify → accept loop executes, and greedy speculative decoding
+//! is **bit-identical** to the autoregressive baseline.
 
-use speq::model::{Manifest, ModelRuntime, SamplingParams};
-use speq::runtime::Runtime;
+use speq::model::SamplingParams;
+use speq::runtime::{Backend, NativeBackend};
 use speq::specdec::{Engine, SpecConfig};
 
-fn load_model(name: &str) -> Option<ModelRuntime> {
-    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let m = match Manifest::load(&root) {
-        Ok(m) => m,
-        Err(e) => {
-            eprintln!("skipping integration test (no artifacts): {e}");
-            return None;
-        }
-    };
-    let rt = Runtime::cpu().expect("PJRT CPU client");
-    Some(ModelRuntime::load(&rt, &m, name).expect("model load"))
+fn load_model(name: &str) -> NativeBackend {
+    NativeBackend::builtin(name).expect("builtin model")
 }
 
 const PROMPT: &[u8] = b"Q: bob has 12 coins and wins 7 more. how many coins now?\nA: ";
@@ -23,7 +19,7 @@ const PROMPT: &[u8] = b"Q: bob has 12 coins and wins 7 more. how many coins now?
 fn greedy_spec_decode_is_lossless() {
     // The paper's core claim: speculative output == the full model's output,
     // token for token.
-    let Some(model) = load_model("vicuna-7b-tiny") else { return };
+    let model = load_model("vicuna-7b-tiny");
     let engine = Engine::new(&model);
     let gen_len = 96;
     let ar = engine.generate_ar(PROMPT, gen_len, SamplingParams::greedy()).expect("ar");
@@ -39,21 +35,38 @@ fn greedy_spec_decode_is_lossless() {
 }
 
 #[test]
+fn draft_verify_accept_loop_is_exercised() {
+    let model = load_model("vicuna-7b-tiny");
+    let engine = Engine::new(&model);
+    let cfg = SpecConfig { gen_len: 96, ..Default::default() };
+    let res = engine.generate_spec(PROMPT, &cfg).expect("spec");
+    assert_eq!(res.tokens.len(), 96);
+    assert_eq!(res.trace.produced, res.tokens.len());
+    assert!(res.trace.draft_steps() > 0, "no draft steps ran");
+    assert!(res.trace.verify_passes() > 0, "no verification passes ran");
+    let accepted: u64 = res.trace.iterations.iter().map(|i| i.accepted as u64).sum();
+    assert!(accepted > 0, "verification never accepted a draft token");
+    for it in &res.trace.iterations {
+        assert!(it.accepted <= it.drafted, "accepted > drafted");
+    }
+}
+
+#[test]
 fn accept_rate_is_high_for_bsfp_draft() {
-    let Some(model) = load_model("vicuna-7b-tiny") else { return };
+    let model = load_model("vicuna-7b-tiny");
     let engine = Engine::new(&model);
     let cfg = SpecConfig { gen_len: 128, ..Default::default() };
     let res = engine.generate_spec(PROMPT, &cfg).expect("spec");
     let r = res.trace.accept_rate();
-    // Paper reports ~0.97 on real models; the tiny analogs should clear a
-    // loose bar (the in-distribution prompt keeps entropy moderate).
-    assert!(r > 0.6, "accept rate too low: {r}");
+    // Paper reports ~0.97 on real models; the confident builtin analogs
+    // should clear a loose bar.
+    assert!(r > 0.5, "accept rate too low: {r}");
     assert!(res.trace.mean_accept_len() > 2.0, "mean accept {}", res.trace.mean_accept_len());
 }
 
 #[test]
 fn spec_decode_reduces_full_model_passes() {
-    let Some(model) = load_model("vicuna-7b-tiny") else { return };
+    let model = load_model("vicuna-7b-tiny");
     let engine = Engine::new(&model);
     let cfg = SpecConfig { gen_len: 128, ..Default::default() };
     let res = engine.generate_spec(PROMPT, &cfg).expect("spec");
@@ -69,9 +82,9 @@ fn spec_decode_reduces_full_model_passes() {
 
 #[test]
 fn tight_gamma_causes_early_exits() {
-    let Some(model) = load_model("vicuna-7b-tiny") else { return };
+    let model = load_model("vicuna-7b-tiny");
     let engine = Engine::new(&model);
-    let strict = SpecConfig { gen_len: 64, gamma: 0.99, ..Default::default() };
+    let strict = SpecConfig { gen_len: 64, gamma: 0.9999, ..Default::default() };
     let res = engine.generate_spec(PROMPT, &strict).expect("spec");
     let loose = SpecConfig { gen_len: 64, gamma: 0.0, ..Default::default() };
     let res_loose = engine.generate_spec(PROMPT, &loose).expect("spec");
@@ -86,8 +99,25 @@ fn tight_gamma_causes_early_exits() {
 }
 
 #[test]
-fn sampling_mode_generates_plausible_text() {
-    let Some(model) = load_model("vicuna-7b-tiny") else { return };
+fn gamma_zero_drafts_run_to_full_length() {
+    let model = load_model("vicuna-7b-tiny");
+    let engine = Engine::new(&model);
+    let cfg = SpecConfig { gen_len: 80, gamma: 0.0, max_draft: 8, ..Default::default() };
+    let res = engine.generate_spec(PROMPT, &cfg).expect("spec");
+    // gamma = 0 disables §III-C: no iteration may early-exit, and the
+    // first iteration (budget not yet clamped by gen_len) drafts exactly
+    // max_draft tokens.
+    assert!(!res.trace.iterations.is_empty());
+    for it in &res.trace.iterations {
+        assert!(!it.early_exit, "gamma=0 must never early-exit");
+        assert!(it.drafted >= 1);
+    }
+    assert_eq!(res.trace.iterations[0].drafted, 8);
+}
+
+#[test]
+fn sampling_mode_produces_requested_length() {
+    let model = load_model("vicuna-7b-tiny");
     let engine = Engine::new(&model);
     let cfg = SpecConfig {
         gen_len: 64,
@@ -96,19 +126,33 @@ fn sampling_mode_generates_plausible_text() {
     };
     let res = engine.generate_spec(PROMPT, &cfg).expect("spec");
     assert_eq!(res.tokens.len(), 64);
-    let printable =
-        res.tokens.iter().filter(|&&b| (32..127).contains(&b) || b == b'\n').count();
-    assert!(printable > 48, "sampled text implausible: {:?}", res.tokens);
+    assert_eq!(res.trace.produced, 64);
+    assert!(res.tokens.iter().all(|&t| (t as usize) < model.vocab()));
+    // Same seed -> same output (the engine is deterministic end to end).
+    let again = engine.generate_spec(PROMPT, &cfg).expect("spec");
+    assert_eq!(res.tokens, again.tokens);
 }
 
 #[test]
 fn lossless_across_models_and_prompts() {
     // Spot-check a second model and a code-style prompt.
-    let Some(model) = load_model("llama3.2-3b-tiny") else { return };
+    let model = load_model("llama3.2-3b-tiny");
     let engine = Engine::new(&model);
     let prompt: &[u8] = b"def add_3(x):\n    return ";
     let ar = engine.generate_ar(prompt, 64, SamplingParams::greedy()).expect("ar");
     let cfg = SpecConfig { gen_len: 64, ..Default::default() };
     let spec = engine.generate_spec(prompt, &cfg).expect("spec");
+    assert_eq!(ar.tokens, spec.tokens);
+}
+
+#[test]
+fn lossless_on_a_deep_model() {
+    // 4-layer config: deeper stacks accumulate more numerical state; the
+    // bit-identity must still hold.
+    let model = load_model("llama3.1-8b-tiny");
+    let engine = Engine::new(&model);
+    let ar = engine.generate_ar(PROMPT, 48, SamplingParams::greedy()).expect("ar");
+    let cfg = SpecConfig { gen_len: 48, ..Default::default() };
+    let spec = engine.generate_spec(PROMPT, &cfg).expect("spec");
     assert_eq!(ar.tokens, spec.tokens);
 }

@@ -116,14 +116,15 @@ fn eq4_golden_scale_matches() {
 #[test]
 fn weights_bin_exponents_satisfy_premise() {
     // Every trained model's linear weights must use only exponents [0, 15]
-    // (the Fig. 2(c) premise BSFP relies on).
+    // (the Fig. 2(c) premise BSFP relies on).  Loads through the native
+    // backend: no XLA library required.
+    use speq::runtime::Backend;
     let Some(m) = manifest() else { return };
-    let rt = speq::runtime::Runtime::cpu().unwrap();
     for name in m.model_names() {
-        let model = speq::model::ModelRuntime::load(&rt, &m, &name).unwrap();
-        for lin in model.entry.linears.clone() {
+        let model = speq::runtime::NativeBackend::from_manifest(&m, &name).unwrap();
+        for lin in model.linears().to_vec() {
             let hist =
-                speq::bsfp::exponent_histogram(model.weights.f32(&lin).iter().copied());
+                speq::bsfp::exponent_histogram(model.weights().f32(&lin).iter().copied());
             let high: u64 = hist[16..].iter().sum();
             assert_eq!(high, 0, "{name}/{lin} has exponents >= 16");
         }

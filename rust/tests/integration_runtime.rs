@@ -1,30 +1,20 @@
-//! Integration: PJRT runtime + compiled artifacts.
+//! Integration: the execution-backend contract on the native interpreter.
 //!
-//! These tests need `make artifacts` to have run; they skip (with a message)
-//! when the artifacts directory is absent so `cargo test` stays green on a
-//! fresh checkout.
+//! These tests need no artifacts and no PJRT: they run the builtin
+//! synthetic zoo on `NativeBackend` and check the graph-level invariants
+//! the speculative engine relies on (verify == sequential decode, draft ==
+//! dequantized-weights route, transform hooks).  When an artifacts
+//! directory is present, an extra test loads the trained weights through
+//! the same backend.
 
-use speq::model::{argmax, Manifest, ModelRuntime};
-use speq::runtime::Runtime;
+use speq::model::{argmax, Manifest};
+use speq::runtime::{Backend, InitStyle, NativeBackend};
 
-fn manifest() -> Option<Manifest> {
-    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    match Manifest::load(&root) {
-        Ok(m) => Some(m),
-        Err(e) => {
-            eprintln!("skipping integration test (no artifacts): {e}");
-            None
-        }
-    }
+fn backend(name: &str) -> NativeBackend {
+    NativeBackend::builtin(name).expect("builtin model")
 }
 
-fn load_model(name: &str) -> Option<ModelRuntime> {
-    let m = manifest()?;
-    let rt = Runtime::cpu().expect("PJRT CPU client");
-    Some(ModelRuntime::load(&rt, &m, name).expect("model load"))
-}
-
-/// A short, in-distribution prompt (math task style).
+/// A short, in-distribution prompt (math task style), padded to `len`.
 fn test_prompt(len: usize) -> Vec<i32> {
     let text = b"Q: ada has 3 apples and finds 4 more. how many apples now?\nA: ";
     let mut toks: Vec<i32> = text.iter().map(|&b| b as i32).collect();
@@ -37,7 +27,7 @@ fn test_prompt(len: usize) -> Vec<i32> {
 
 #[test]
 fn prefill_produces_finite_logits() {
-    let Some(model) = load_model("vicuna-7b-tiny") else { return };
+    let model = backend("vicuna-7b-tiny");
     let prompt = test_prompt(model.prefill_len());
     let out = model.prefill(&prompt, 63).expect("prefill");
     assert_eq!(out.logits.len(), model.vocab());
@@ -45,48 +35,50 @@ fn prefill_produces_finite_logits() {
 }
 
 #[test]
-fn eval_graph_returns_full_position_logits() {
-    let Some(model) = load_model("vicuna-7b-tiny") else { return };
+fn eval_returns_full_position_logits() {
+    let model = backend("vicuna-7b-tiny");
     let p = model.prefill_len();
     let prompt = test_prompt(p);
     let logits = model.eval_logits(&prompt, 63).expect("eval");
     assert_eq!(logits.len(), p * model.vocab());
     assert!(logits.iter().all(|v| v.is_finite()));
+    // Row 0 of eval must match prefill at length 1 (same math, two entries).
+    let pre = model.prefill(&prompt, 1).expect("prefill");
+    assert_eq!(&logits[..model.vocab()], &pre.logits[..], "eval row 0 != prefill(len=1)");
 }
 
 #[test]
-fn decode_full_continues_the_prompt_plausibly() {
-    let Some(model) = load_model("vicuna-7b-tiny") else { return };
+fn decode_full_is_deterministic_and_in_vocab() {
+    let model = backend("vicuna-7b-tiny");
     let plen = 63usize;
     let prompt = test_prompt(model.prefill_len());
-    let out = model.prefill(&prompt, plen).expect("prefill");
-    let mut tok = argmax(&out.logits) as i32;
-    let mut state = out.state;
-    let mut generated = Vec::new();
-    for i in 0..16 {
-        let step = model.decode_full(tok, plen + i, &state).expect("decode");
-        state = step.state;
-        tok = argmax(&step.logits) as i32;
-        assert!((tok as usize) < model.vocab());
-        generated.push(tok as u8);
-    }
-    // The model was trained to near-zero loss on this grammar: continuations
-    // should be printable ASCII, not random bytes.
-    let printable =
-        generated.iter().filter(|&&b| (32..127).contains(&b) || b == b'\n').count();
-    assert!(printable >= 12, "implausible continuation: {generated:?}");
+    let run = || {
+        let out = model.prefill(&prompt, plen).expect("prefill");
+        let mut tok = argmax(&out.logits) as i32;
+        let mut state = out.state;
+        let mut generated = Vec::new();
+        for i in 0..16 {
+            let step = model.decode_full(tok, plen + i, state).expect("decode");
+            state = step.state;
+            tok = argmax(&step.logits) as i32;
+            assert!((tok as usize) < model.vocab());
+            generated.push(tok as u8);
+        }
+        generated
+    };
+    assert_eq!(run(), run(), "decode must be deterministic");
 }
 
 #[test]
-fn draft_graph_tracks_full_graph() {
-    let Some(model) = load_model("vicuna-7b-tiny") else { return };
+fn draft_pass_tracks_full_pass() {
+    let model = backend("vicuna-7b-tiny");
     let plen = 63usize;
     let prompt = test_prompt(model.prefill_len());
     let out_full = model.prefill(&prompt, plen).expect("prefill");
     let out_draft = model.prefill(&prompt, plen).expect("prefill");
     let tok0 = argmax(&out_full.logits) as i32;
 
-    // Run 24 greedy steps with the full graph and the draft graph from the
+    // Run 24 greedy steps with the full pass and the draft pass from the
     // same starting state; the BSFP draft should agree on most tokens
     // (paper: accept rate ~0.97). Draft re-syncs to full on divergence,
     // as verification does.
@@ -94,8 +86,8 @@ fn draft_graph_tracks_full_graph() {
     let (mut state_full, mut state_draft) = (out_full.state, out_draft.state);
     let (mut tok_full, mut tok_draft) = (tok0, tok0);
     for i in 0..24 {
-        let sf = model.decode_full(tok_full, plen + i, &state_full).expect("full");
-        let sd = model.decode_draft(tok_draft, plen + i, &state_draft).expect("draft");
+        let sf = model.decode_full(tok_full, plen + i, state_full).expect("full");
+        let sd = model.decode_draft(tok_draft, plen + i, state_draft).expect("draft");
         state_full = sf.state;
         state_draft = sd.state;
         tok_full = argmax(&sf.logits) as i32;
@@ -111,10 +103,12 @@ fn draft_graph_tracks_full_graph() {
 }
 
 #[test]
-fn verify_graph_matches_sequential_full_decode() {
-    // The single-pass verification must produce the same greedy tokens as
-    // running the full decode graph sequentially over the same tokens.
-    let Some(model) = load_model("vicuna-7b-tiny") else { return };
+fn verify_matches_sequential_full_decode_bitwise() {
+    // The single-pass verification must produce the same logits as running
+    // the full decode sequentially over the same tokens — on the native
+    // backend this is exact (identical code path), which is what makes
+    // greedy speculative decoding lossless.
+    let model = backend("vicuna-7b-tiny");
     let plen = 63usize;
     let s = model.slots();
     let prompt = test_prompt(model.prefill_len());
@@ -127,7 +121,7 @@ fn verify_graph_matches_sequential_full_decode() {
     let mut tok = tok0;
     let mut seq_logits = Vec::new();
     for i in 0..s {
-        let step = model.decode_full(tok, plen + i, &state).expect("decode");
+        let step = model.decode_full(tok, plen + i, state).expect("decode");
         state = step.state;
         tok = argmax(&step.logits) as i32;
         seq_logits.push(step.logits);
@@ -137,39 +131,38 @@ fn verify_graph_matches_sequential_full_decode() {
     }
 
     // Parallel: verify the same s tokens in one pass.
-    let ver = model.verify(&seq_tokens, plen, &pre.state).expect("verify");
+    let ver = model.verify(&seq_tokens, plen, pre.state).expect("verify");
     let v = model.vocab();
     for i in 0..s {
         let row = &ver.logits[i * v..(i + 1) * v];
-        let a = argmax(row);
-        let b = argmax(&seq_logits[i]);
-        assert_eq!(a, b, "verify row {i} argmax diverges from sequential decode");
+        assert_eq!(row, &seq_logits[i][..], "verify row {i} diverges from sequential decode");
     }
 }
 
 #[test]
 fn identity_transform_reproduces_baseline_logits() {
-    let Some(model) = load_model("vicuna-7b-tiny") else { return };
+    let model = backend("vicuna-7b-tiny");
     let prompt = test_prompt(model.prefill_len());
     let base = model.eval_logits(&prompt, 48).expect("eval");
-    let bufs =
-        model.build_transformed_params(|_, w, _, _| Ok(w.to_vec())).expect("transform");
-    let again = model.eval_logits_with(&bufs, &prompt, 48).expect("eval_with");
+    let variant = model
+        .with_transformed_weights(&mut |_, w, _, _| Ok(w.to_vec()))
+        .expect("transform");
+    let again = variant.eval_logits(&prompt, 48).expect("eval_with");
     assert_eq!(base, again, "identity transform changed logits");
 }
 
 #[test]
-fn bsfp_transform_matches_draft_graph() {
-    // Dequantized-BSFP weights through the *full* graph must match the
-    // packed-W_q draft graph (same math, two routes).
-    let Some(model) = load_model("vicuna-7b-tiny") else { return };
+fn bsfp_transform_matches_draft_pass() {
+    // Dequantized-BSFP weights through the *full* pass must match the
+    // draft pass (same math, two routes).
+    let model = backend("vicuna-7b-tiny");
     let plen = 63usize;
     let prompt = test_prompt(model.prefill_len());
     let pre = model.prefill(&prompt, plen).expect("prefill");
     let tok0 = argmax(&pre.logits) as i32;
 
-    let bufs = model
-        .build_transformed_params(|_, w, k, n| {
+    let variant = model
+        .with_transformed_weights(&mut |_, w, k, n| {
             let qt = speq::bsfp::quantize_tensor(w, k, n);
             // dequant_draft applies qt.scales (scaled domain); undo the
             // Algorithm-1 tensor scale to reach the original domain.
@@ -181,16 +174,56 @@ fn bsfp_transform_matches_draft_graph() {
         })
         .expect("bsfp transform");
 
-    let mut state_a = model.prefill(&prompt, plen).expect("prefill").state;
+    let mut state_a = variant.prefill(&prompt, plen).expect("prefill").state;
     let mut state_b = pre.state;
     let (mut tok_a, mut tok_b) = (tok0, tok0);
     for i in 0..8 {
-        let sa = model.decode_full_with(&bufs, tok_a, plen + i, &state_a).expect("a");
-        let sb = model.decode_draft(tok_b, plen + i, &state_b).expect("b");
+        let sa = variant.decode_full(tok_a, plen + i, state_a).expect("a");
+        let sb = model.decode_draft(tok_b, plen + i, state_b).expect("b");
         state_a = sa.state;
         state_b = sb.state;
         tok_a = argmax(&sa.logits) as i32;
         tok_b = argmax(&sb.logits) as i32;
-        assert_eq!(tok_a, tok_b, "step {i}: dequant route diverged from draft graph");
+        assert_eq!(tok_a, tok_b, "step {i}: dequant route diverged from draft pass");
     }
+}
+
+#[test]
+fn random_init_backend_still_honors_the_contract() {
+    // Even a diffuse (untrained-style) model keeps the structural
+    // invariants: finite logits, verify == sequential.
+    let mut cfg = speq::runtime::builtin_config("vicuna-7b-tiny").unwrap();
+    cfg.name = "random-tiny".into();
+    let model = NativeBackend::synthetic(cfg, 9, 123, InitStyle::Random).expect("synthetic");
+    let prompt = test_prompt(model.prefill_len());
+    let pre = model.prefill(&prompt, 32).expect("prefill");
+    assert!(pre.logits.iter().all(|v| v.is_finite()));
+    let vtokens: Vec<i32> = (0..9).collect();
+    let ver = model.verify(&vtokens, 32, pre.state).expect("verify");
+    let mut state = model.prefill(&prompt, 32).expect("prefill").state;
+    let v = model.vocab();
+    for (i, &t) in vtokens.iter().enumerate() {
+        let step = model.decode_full(t, 32 + i, state).expect("decode");
+        state = step.state;
+        assert_eq!(&ver.logits[i * v..(i + 1) * v], &step.logits[..], "row {i}");
+    }
+}
+
+#[test]
+fn trained_artifacts_load_on_the_native_backend() {
+    // Artifact-gated: when trained weights exist, the native backend runs
+    // them without any HLO or XLA library.
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let m = match Manifest::load(&root) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping artifacts test (no artifacts): {e}");
+            return;
+        }
+    };
+    let model = NativeBackend::from_manifest(&m, "vicuna-7b-tiny").expect("load");
+    let prompt = test_prompt(model.prefill_len());
+    let out = model.prefill(&prompt, 63).expect("prefill");
+    assert_eq!(out.logits.len(), model.vocab());
+    assert!(out.logits.iter().all(|v| v.is_finite()));
 }

@@ -4,8 +4,10 @@ use speq::bsfp::{
     decode_full_bits, encode_bits, pack_nibbles, quantize_tensor, unpack_nibbles,
     GROUP_SIZE,
 };
+use speq::model::{ModelConfig, SamplingParams};
 use speq::quant::{quantize_fp4, quantize_int, Fp4Variant, IntMethod};
-use speq::specdec::{expected_accept_length, IterRecord, SpecTrace};
+use speq::runtime::{InitStyle, NativeBackend};
+use speq::specdec::{expected_accept_length, Engine, IterRecord, SpecConfig, SpecTrace};
 use speq::util::json;
 use speq::util::prop::check;
 use speq::util::rng::Rng;
@@ -29,6 +31,91 @@ fn prop_bsfp_roundtrip_random_tensors() {
                 "idx {i}: {r} vs {expect}"
             );
         }
+    });
+}
+
+#[test]
+fn prop_bsfp_quantize_pack_decode_error_bound() {
+    // The full satellite pipeline: quantize -> nibble-pack -> unpack ->
+    // draft-decode.  Packing must be transparent, and the decoded draft's
+    // per-group error must respect the E3M0+Eq.4 bound: each draft value is
+    // a power of two within a factor of sqrt(2)-ish of its weight, so the
+    // group MSE stays below the group signal energy.
+    check(40, "bsfp_pipeline_error_bound", |rng| {
+        let k = GROUP_SIZE * rng.gen_between(1, 4);
+        let n = rng.gen_between(1, 10);
+        let amp = [0.02f32, 0.15, 1.2, 3.0][rng.gen_range(4)];
+        let w = rng.normal_vec(k * n, amp);
+        let qt = quantize_tensor(&w, k, n);
+        // Pack/unpack transparency over the real codes.
+        assert_eq!(unpack_nibbles(&qt.packed_wq(), k, n), qt.w_q);
+        // Decoded draft error bound vs the (pre-scaled) FP16 values.
+        let draft = qt.dequant_draft();
+        let full: Vec<f32> = qt
+            .reconstruct_fp16_bits()
+            .iter()
+            .map(|&b| speq::bsfp::f16_bits_to_f32(b))
+            .collect();
+        let (mut err2, mut sig2) = (0.0f64, 0.0f64);
+        for (d, t) in draft.iter().zip(&full) {
+            err2 += ((d - t) as f64).powi(2);
+            sig2 += (*t as f64).powi(2);
+        }
+        assert!(
+            err2 <= sig2 * 0.5 + 1e-12,
+            "draft error energy {err2} exceeds half the signal energy {sig2}"
+        );
+        // And the lossless path is still exact under the pre-scale.
+        for (i, (&r, &orig)) in qt.reconstruct_full().iter().zip(&w).enumerate() {
+            let expect = speq::bsfp::f16_bits_to_f32(speq::bsfp::f32_to_f16_bits(
+                orig * qt.tensor_scale,
+            )) / qt.tensor_scale;
+            assert!((r - expect).abs() <= expect.abs() * 1e-6 + 1e-9, "idx {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_native_greedy_spec_is_lossless() {
+    // Greedy speculative decoding must be token-identical to the
+    // autoregressive baseline on the NativeBackend for random models
+    // (confident and diffuse), random prompts, and random (L, gamma).
+    check(6, "native_greedy_lossless", |rng| {
+        let cfg = ModelConfig {
+            name: "prop-tiny".into(),
+            paper_analog: "none".into(),
+            n_layers: 1 + rng.gen_range(2),
+            d_model: 128,
+            d_ff: 128,
+            n_heads: 4,
+            head_dim: 32,
+            vocab: 64,
+            cache_len: 160,
+            prefill_len: 64,
+            param_count: 0,
+        };
+        let style = if rng.gen_bool(0.5) { InitStyle::Confident } else { InitStyle::Random };
+        let slots = 9;
+        let model =
+            NativeBackend::synthetic(cfg, slots, rng.next_u64(), style).expect("synthetic");
+        let engine = Engine::new(&model);
+        let prompt: Vec<u8> =
+            (0..rng.gen_between(4, 48)).map(|_| rng.gen_range(64) as u8).collect();
+        let gen_len = rng.gen_between(1, 40);
+        let cfg = SpecConfig {
+            max_draft: rng.gen_between(1, slots), // in [1, slots-1]
+            gamma: [0.0f32, 0.5, 0.9][rng.gen_range(3)],
+            sampling: SamplingParams::greedy(),
+            gen_len,
+        };
+        let ar = engine.generate_ar(&prompt, gen_len, SamplingParams::greedy()).expect("ar");
+        let spec = engine.generate_spec(&prompt, &cfg).expect("spec");
+        assert_eq!(
+            ar.tokens, spec.tokens,
+            "lossless violation (style {style:?}, L {}, gamma {})",
+            cfg.max_draft, cfg.gamma
+        );
+        assert_eq!(spec.trace.produced, spec.tokens.len());
     });
 }
 

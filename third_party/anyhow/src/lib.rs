@@ -1,0 +1,273 @@
+//! Minimal, offline-compatible subset of the `anyhow` crate.
+//!
+//! The SPEQ build environment has no network access and no vendored crate
+//! registry, so the ecosystem `anyhow` is replaced by this in-tree shim.
+//! It implements exactly the API surface the workspace uses:
+//!
+//! * [`Error`] — a context-chain error type (`Display` shows the outermost
+//!   message, `{:#}` shows the whole chain joined by `": "`).
+//! * [`Result<T>`] — alias with `Error` as the default error type.
+//! * [`Context`] — `.context(...)` / `.with_context(...)` on `Result` and
+//!   `Option`, including `Result<T, Error>` itself.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros.
+//! * A blanket `From<E: std::error::Error + Send + Sync + 'static>` so `?`
+//!   converts foreign errors (the source chain is flattened into the
+//!   context chain at conversion time; `downcast` is not supported).
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error` — that is what makes the blanket `From` impl and the
+//! `Context` impl for `Result<T, Error>` coherent.
+
+use std::fmt;
+
+/// `Result` with a context-chain [`Error`] default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-chain error: an outermost message plus the causes under it.
+pub struct Error {
+    /// Messages, outermost context first; always non-empty.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Convert a standard error, flattening its source chain.
+    fn from_std<E: std::error::Error + ?Sized>(error: &E) -> Self {
+        let mut chain = vec![error.to_string()];
+        let mut source = error.source();
+        while let Some(cause) = source {
+            chain.push(cause.to_string());
+            source = cause.source();
+        }
+        Self { chain }
+    }
+
+    /// The messages in the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The root (innermost) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Self {
+        Error::from_std(&error)
+    }
+}
+
+#[doc(hidden)]
+pub mod ext {
+    use super::Error;
+    use std::fmt;
+
+    /// Unifies foreign `std::error::Error` types and [`Error`] itself so a
+    /// single `Context` impl covers both (the real crate's layering).
+    pub trait StdError {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error;
+    }
+
+    impl<E> StdError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error {
+            Error::from_std(&self).context(context)
+        }
+    }
+
+    impl StdError for Error {
+        fn ext_context<C: fmt::Display>(self, context: C) -> Error {
+            self.context(context)
+        }
+    }
+}
+
+/// Attach context to errors (`Result`) or missing values (`Option`).
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::StdError,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("reading weights").unwrap_err();
+        assert_eq!(format!("{e}"), "reading weights");
+        assert_eq!(format!("{e:#}"), "reading weights: file missing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "file missing");
+    }
+
+    #[test]
+    fn context_stacks_on_anyhow_results() {
+        let e: Error = Err::<(), _>(anyhow!("root {}", 7))
+            .with_context(|| "outer".to_string())
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: root 7");
+        assert_eq!(e.root_cause(), "root 7");
+    }
+
+    #[test]
+    fn option_context_reports_missing_values() {
+        let v: Option<u32> = None;
+        let e = v.context("missing key").unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+        assert_eq!(Some(3u32).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            bail!("unreachable {}", "spot");
+        }
+        assert_eq!(format!("{}", f(false).unwrap_err()), "flag was false");
+        assert_eq!(format!("{}", f(true).unwrap_err()), "unreachable spot");
+        let from_string = anyhow!(String::from("owned message"));
+        assert_eq!(format!("{from_string}"), "owned message");
+    }
+
+    #[test]
+    fn debug_includes_causes() {
+        let e: Error = Err::<(), _>(io_err()).context("ctx").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("ctx") && dbg.contains("file missing"), "{dbg}");
+    }
+}

@@ -1,0 +1,159 @@
+//! Compile-only stub of the `xla` (PJRT) bindings.
+//!
+//! The SPEQ workspace builds offline and does not ship the XLA native
+//! library, so the optional `pjrt` feature links against this stub instead.
+//! It reproduces exactly the API surface `speq::runtime` and
+//! `speq::model::ModelRuntime` use, with every runtime entry point
+//! returning a clear "PJRT unavailable" error.  To execute AOT-compiled
+//! HLO for real, point the `xla` path dependency in the workspace
+//! `Cargo.toml` at the actual bindings (API-compatible with
+//! `xla_extension` 0.5.x) — no `speq` source changes are required.
+
+use std::fmt;
+use std::path::Path;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Error type mirroring the real bindings' error enum (string-backed here).
+#[derive(Debug, Clone)]
+pub struct Error {
+    message: String,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error {
+        message: format!(
+            "{what}: PJRT is unavailable in this build (the `pjrt` feature is linked \
+             against the compile-only xla stub; swap the `xla` path dependency for the \
+             real bindings, or use the default native backend)"
+        ),
+    }
+}
+
+/// Parsed HLO module (stub: never constructed).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        Err(unavailable(&format!("parsing {}", path.as_ref().display())))
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("creating PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compiling computation"))
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("uploading host buffer"))
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute over device buffers; one `Vec<PjRtBuffer>` per device.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executing computation"))
+    }
+}
+
+/// A device-resident buffer.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn on_device_shape(&self) -> Result<Shape> {
+        Err(unavailable("querying device shape"))
+    }
+
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("copying buffer to host"))
+    }
+}
+
+/// A host-side literal.
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>> {
+        Err(unavailable("reading literal"))
+    }
+}
+
+/// Device shapes (array or tuple), as in the real bindings.
+#[derive(Debug)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// Array shape: dims as i64, matching the real bindings.
+#[derive(Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub client must not construct");
+        assert!(err.to_string().contains("PJRT is unavailable"), "{err}");
+        let err = HloModuleProto::from_text_file("/tmp/nope.hlo.txt").err().unwrap();
+        assert!(err.to_string().contains("PJRT is unavailable"), "{err}");
+    }
+}
