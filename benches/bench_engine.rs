@@ -1,18 +1,21 @@
 //! Engine hot path over the execution backend (builtin native model; uses
 //! trained artifacts automatically when present).
+//!
 //! Run: cargo bench --bench bench_engine
+//! Quick CI regression guard: cargo bench --bench bench_engine -- --smoke
 
 use speq::model::SamplingParams;
-use speq::runtime::{load_backend, Backend, ModelSource};
-use speq::specdec::{Engine, SpecConfig};
-use speq::util::bench::{black_box, Bench};
+use speq::runtime::{load_backend, Backend, ModelSource, SeqSlot};
+use speq::specdec::{BatchEngine, Engine, SpecConfig};
+use speq::util::bench::{black_box, smoke_requested, Bench};
 
 fn main() {
+    let smoke = smoke_requested();
     let source = ModelSource::auto();
     let backend = load_backend(&source, "vicuna-7b-tiny").expect("backend");
     let model = backend.as_ref();
     let engine = Engine::new(model);
-    let mut b = Bench::new(format!("bench_engine[{}]", model.backend_name()));
+    let mut b = Bench::auto(format!("bench_engine[{}]", model.backend_name()));
     let prompt: &[u8] = b"Q: ada has 3 apples and finds 4 more. how many apples now?\nA: ";
 
     // Single-step costs (the request-path atoms).
@@ -44,16 +47,61 @@ fn main() {
         state = Some(out.state);
     });
 
-    // End-to-end generation (64 tokens).
-    let cfg = SpecConfig { gen_len: 64, ..Default::default() };
-    let s = b.bench("generate_spec_64tok", || {
+    // Batched decode: the continuous-batching lever.  Each step streams
+    // every weight once for the whole batch, so tokens/sec should scale
+    // strongly super-linearly vs sequential GEMVs on the memory-bound
+    // interpreter.
+    let mut tok_per_s = Vec::new();
+    for &bsz in &[1usize, 4, 8] {
+        let slots: Vec<SeqSlot> = (0..bsz).map(|_| model.alloc_slot()).collect();
+        let prompts: Vec<Vec<i32>> = vec![toks.clone(); bsz];
+        let lengths: Vec<usize> = vec![plen; bsz];
+        model.prefill_batch(&slots, &prompts, &lengths).expect("prefill_batch");
+        let tokens: Vec<i32> = vec![65; bsz];
+        let pos: Vec<usize> = vec![plen; bsz];
+        let s = b.bench(format!("batched_decode_b{bsz}"), || {
+            black_box(model.decode_full_batch(&slots, &tokens, &pos).expect("decode").len());
+        });
+        let tps = bsz as f64 / (s.mean_ns * 1e-9);
+        b.metric(format!("batched_decode_b{bsz}_tok_per_s"), tps, "tok/s (CPU)");
+        tok_per_s.push((bsz, tps));
+        for &slot in &slots {
+            model.free_slot(slot);
+        }
+    }
+    if let (Some(&(_, t1)), Some(&(_, t8))) = (tok_per_s.first(), tok_per_s.last()) {
+        b.metric("batched_decode_b8_vs_b1_speedup", t8 / t1, "x");
+    }
+
+    // End-to-end generation.
+    let gen = if smoke { 16 } else { 64 };
+    let cfg = SpecConfig { gen_len: gen, ..Default::default() };
+    let s = b.bench(format!("generate_spec_{gen}tok"), || {
         black_box(engine.generate_spec(prompt, &cfg).expect("spec").tokens.len());
     });
-    b.metric("spec_tokens_per_s", 64.0 / (s.mean_ns * 1e-9), "tok/s (CPU)");
-    let s = b.bench("generate_ar_64tok", || {
+    b.metric("spec_tokens_per_s", gen as f64 / (s.mean_ns * 1e-9), "tok/s (CPU)");
+    let s = b.bench(format!("generate_ar_{gen}tok"), || {
         black_box(
-            engine.generate_ar(prompt, 64, SamplingParams::greedy()).expect("ar").tokens.len(),
+            engine.generate_ar(prompt, gen, SamplingParams::greedy()).expect("ar").tokens.len(),
         );
     });
-    b.metric("ar_tokens_per_s", 64.0 / (s.mean_ns * 1e-9), "tok/s (CPU)");
+    b.metric("ar_tokens_per_s", gen as f64 / (s.mean_ns * 1e-9), "tok/s (CPU)");
+
+    // Batched end-to-end speculative serving throughput at batch 8.
+    let batch_engine = BatchEngine::new(model);
+    let requests: Vec<(Vec<u8>, SpecConfig)> = (0..8)
+        .map(|i| {
+            let mut p = prompt.to_vec();
+            p.push(b'0' + i as u8);
+            (p, SpecConfig { gen_len: gen, ..Default::default() })
+        })
+        .collect();
+    let s = b.bench(format!("batch8_generate_spec_{gen}tok"), || {
+        black_box(batch_engine.run_spec(&requests).expect("batched spec").len());
+    });
+    b.metric(
+        "batch8_spec_tokens_per_s",
+        (8 * gen) as f64 / (s.mean_ns * 1e-9),
+        "tok/s (CPU)",
+    );
 }

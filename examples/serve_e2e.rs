@@ -13,7 +13,7 @@
 
 use anyhow::Result;
 use speq::accel::{paper_dims, Accel};
-use speq::coordinator::{Mode, ModelSource, Priority, Server, ServerConfig};
+use speq::coordinator::{Mode, ModelSource, Priority, Server, ServerConfig, SubmitParams};
 use speq::model::SamplingParams;
 use speq::specdec::SpecTrace;
 use speq::workload::{load_task_or_builtin, task_names};
@@ -37,7 +37,7 @@ fn main() -> Result<()> {
         model: model.into(),
         workers: 2,
         queue_capacity: 64,
-        session_history: 96,
+        ..ServerConfig::default()
     })?;
 
     // Mixed workload: all three task families (each loaded once), one
@@ -58,24 +58,24 @@ fn main() -> Result<()> {
         if i == 1 {
             control = Some((prompt.clone(), gen_len));
         }
-        let (id, rx) = server.submit(
+        let (id, stream) = server.submit(
             &prompt,
-            gen_len,
-            mode,
-            if i % 3 == 0 { Priority::Interactive } else { Priority::Batch },
-            SamplingParams::greedy(),
-            if task == "chat" { Some(1000 + (i % 2) as u64) } else { None },
-            16,
-            0.6,
+            SubmitParams {
+                gen_len,
+                mode,
+                priority: if i % 3 == 0 { Priority::Interactive } else { Priority::Batch },
+                sampling: SamplingParams::greedy(),
+                session: if task == "chat" { Some(1000 + (i % 2) as u64) } else { None },
+                ..Default::default()
+            },
         )?;
-        rxs.push((id, task, mode, rx));
+        rxs.push((id, task, mode, stream));
     }
 
     let mut merged = SpecTrace::default();
     let mut spec_tokens_of_control: Option<Vec<u8>> = None;
-    for (id, task, mode, rx) in rxs {
-        let resp = rx.recv()?;
-        let body = resp.result?;
+    for (id, task, mode, stream) in rxs {
+        let body = stream.wait()?;
         println!(
             "req {id:>3} [{task:<4}] {:?}  worker {}  {:>4} tok  {:>8.1} ms  r {:.3}",
             mode,
@@ -95,11 +95,11 @@ fn main() -> Result<()> {
 
     // Lossless control: re-run the same prompt autoregressively.
     if let (Some((prompt, glen)), Some(spec_out)) = (control, spec_tokens_of_control) {
-        let (_, rx) = server.submit(
-            &prompt, glen, Mode::Autoregressive, Priority::Interactive,
-            SamplingParams::greedy(), None, 16, 0.6,
+        let (_, stream) = server.submit(
+            &prompt,
+            SubmitParams { gen_len: glen, mode: Mode::Autoregressive, ..Default::default() },
         )?;
-        let ar_out = rx.recv()?.result?.tokens;
+        let ar_out = stream.wait()?.tokens;
         println!(
             "\nlossless control: speculative output {} autoregressive",
             if ar_out == spec_out { "== (IDENTICAL to)" } else { "!= (MISMATCH vs)" }
@@ -116,6 +116,10 @@ fn main() -> Result<()> {
     println!(
         "latency p50 {:.0} ms | p95 {:.0} ms | p99 {:.0} ms",
         snap.latency_p50_ms, snap.latency_p95_ms, snap.latency_p99_ms
+    );
+    println!(
+        "batch occupancy mean {:.2} seqs/step | failed {} | sustained {:.1} tok/s",
+        snap.batch_occupancy_mean, snap.failed, snap.tokens_per_s
     );
     println!(
         "engine: {} draft steps, {} verify passes, accept rate {:.3}, L-bar {:.2}",

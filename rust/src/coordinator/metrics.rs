@@ -1,19 +1,28 @@
-//! Serving metrics: counters + latency percentiles.
+//! Serving metrics: counters, latency percentiles, batch-occupancy
+//! histogram, and throughput.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
-/// Shared metrics sink (cheap atomic counters; latencies under a mutex).
-#[derive(Default)]
+/// Shared metrics sink (cheap atomic counters; latencies and the batch
+/// histogram under mutexes).
 pub struct Metrics {
     pub requests_submitted: AtomicU64,
     pub requests_completed: AtomicU64,
     pub requests_rejected: AtomicU64,
+    /// Generations that errored (admission failure or an engine-step
+    /// failure) — previously invisible in the serving report.
+    pub requests_failed: AtomicU64,
     pub tokens_generated: AtomicU64,
     pub draft_steps: AtomicU64,
     pub verify_passes: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
     exec_us: Mutex<Vec<u64>>,
+    /// `occupancy[b]` = number of engine steps that ran with `b` active
+    /// sequences in the batch.
+    batch_occupancy: Mutex<Vec<u64>>,
+    started: Instant,
 }
 
 /// Point-in-time view with computed percentiles.
@@ -22,6 +31,7 @@ pub struct MetricsSnapshot {
     pub submitted: u64,
     pub completed: u64,
     pub rejected: u64,
+    pub failed: u64,
     pub tokens: u64,
     pub draft_steps: u64,
     pub verify_passes: u64,
@@ -29,11 +39,29 @@ pub struct MetricsSnapshot {
     pub latency_p95_ms: f64,
     pub latency_p99_ms: f64,
     pub exec_p50_ms: f64,
+    /// Tokens generated per wall-clock second since the sink was created.
+    pub tokens_per_s: f64,
+    /// Histogram of engine-step batch occupancy (`[b]` = steps at size b).
+    pub batch_occupancy: Vec<u64>,
+    /// Mean sequences per engine step (0 when no steps ran).
+    pub batch_occupancy_mean: f64,
 }
 
 impl Metrics {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            requests_submitted: AtomicU64::new(0),
+            requests_completed: AtomicU64::new(0),
+            requests_rejected: AtomicU64::new(0),
+            requests_failed: AtomicU64::new(0),
+            tokens_generated: AtomicU64::new(0),
+            draft_steps: AtomicU64::new(0),
+            verify_passes: AtomicU64::new(0),
+            latencies_us: Mutex::new(Vec::new()),
+            exec_us: Mutex::new(Vec::new()),
+            batch_occupancy: Mutex::new(Vec::new()),
+            started: Instant::now(),
+        }
     }
 
     pub fn record_completion(&self, tokens: u64, drafts: u64, verifies: u64, latency_s: f64, exec_s: f64) {
@@ -43,6 +71,15 @@ impl Metrics {
         self.verify_passes.fetch_add(verifies, Ordering::Relaxed);
         self.latencies_us.lock().unwrap().push((latency_s * 1e6) as u64);
         self.exec_us.lock().unwrap().push((exec_s * 1e6) as u64);
+    }
+
+    /// Record one scheduler engine step running `occupancy` sequences.
+    pub fn record_batch_step(&self, occupancy: usize) {
+        let mut h = self.batch_occupancy.lock().unwrap();
+        if h.len() <= occupancy {
+            h.resize(occupancy + 1, 0);
+        }
+        h[occupancy] += 1;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -56,18 +93,33 @@ impl Metrics {
         };
         let mut lat = self.latencies_us.lock().unwrap().clone();
         let mut exec = self.exec_us.lock().unwrap().clone();
+        let occupancy = self.batch_occupancy.lock().unwrap().clone();
+        let steps: u64 = occupancy.iter().sum();
+        let weighted: u64 = occupancy.iter().enumerate().map(|(b, &n)| b as u64 * n).sum();
+        let tokens = self.tokens_generated.load(Ordering::Relaxed);
+        let elapsed_s = self.started.elapsed().as_secs_f64();
         MetricsSnapshot {
             submitted: self.requests_submitted.load(Ordering::Relaxed),
             completed: self.requests_completed.load(Ordering::Relaxed),
             rejected: self.requests_rejected.load(Ordering::Relaxed),
-            tokens: self.tokens_generated.load(Ordering::Relaxed),
+            failed: self.requests_failed.load(Ordering::Relaxed),
+            tokens,
             draft_steps: self.draft_steps.load(Ordering::Relaxed),
             verify_passes: self.verify_passes.load(Ordering::Relaxed),
             latency_p50_ms: pct(&mut lat, 0.50),
             latency_p95_ms: pct(&mut lat, 0.95),
             latency_p99_ms: pct(&mut lat, 0.99),
             exec_p50_ms: pct(&mut exec, 0.50),
+            tokens_per_s: if elapsed_s > 0.0 { tokens as f64 / elapsed_s } else { 0.0 },
+            batch_occupancy: occupancy,
+            batch_occupancy_mean: if steps > 0 { weighted as f64 / steps as f64 } else { 0.0 },
         }
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -87,12 +139,35 @@ mod tests {
         assert!((s.latency_p50_ms - 50.0).abs() <= 2.0, "{}", s.latency_p50_ms);
         assert!((s.latency_p95_ms - 95.0).abs() <= 2.0, "{}", s.latency_p95_ms);
         assert!(s.exec_p50_ms < s.latency_p50_ms);
+        assert!(s.tokens_per_s > 0.0);
     }
 
     #[test]
     fn empty_snapshot_is_zeroed() {
         let s = Metrics::new().snapshot();
         assert_eq!(s.completed, 0);
+        assert_eq!(s.failed, 0);
         assert_eq!(s.latency_p50_ms, 0.0);
+        assert_eq!(s.batch_occupancy_mean, 0.0);
+        assert!(s.batch_occupancy.is_empty());
+    }
+
+    #[test]
+    fn failures_are_counted() {
+        let m = Metrics::new();
+        m.requests_failed.fetch_add(3, Ordering::Relaxed);
+        assert_eq!(m.snapshot().failed, 3);
+    }
+
+    #[test]
+    fn batch_occupancy_histogram_and_mean() {
+        let m = Metrics::new();
+        m.record_batch_step(3);
+        m.record_batch_step(3);
+        m.record_batch_step(1);
+        let s = m.snapshot();
+        assert_eq!(s.batch_occupancy[3], 2);
+        assert_eq!(s.batch_occupancy[1], 1);
+        assert!((s.batch_occupancy_mean - 7.0 / 3.0).abs() < 1e-12);
     }
 }

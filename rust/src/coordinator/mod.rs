@@ -1,27 +1,36 @@
 //! Serving coordinator — the production wrapper around the SPEQ engine.
 //!
-//! Architecture (vLLM-router-like, scaled to a CPU testbed):
+//! Architecture (continuous batching, vLLM-style, scaled to a CPU testbed):
 //!
 //! ```text
-//!   clients ──submit──► RequestQueue (bounded, priority FIFO)
-//!                           │ pop (scheduler policy)
+//!   clients ──submit──► RequestQueue (bounded, priority FIFO + age promotion)
+//!                           │ pop / try_pop (admission between steps)
 //!              ┌────────────┼────────────┐
-//!           worker 0     worker 1     worker N-1        (threads)
-//!           Engine+model Engine+model Engine+model      (one Backend stack each;
-//!              │            │            │               backends are not Send)
-//!              └───────────►└───responses►└──► per-request channel
+//!         scheduler 0  scheduler 1  scheduler N-1         (threads)
+//!         BatchEngine  BatchEngine  BatchEngine           (one Backend stack each;
+//!          + sessions   + sessions   + sessions            backends are not Send)
+//!              │            │            │
+//!        SeqSlot KV arena  (batched prefill/draft/verify, ≤ max_batch seqs)
+//!              │            │            │
+//!              └──Chunk*, Done──► per-request response channel (streaming)
 //! ```
 //!
-//! Workers are backend-agnostic: each builds its model from the configured
-//! [`ModelSource`] — the builtin synthetic zoo (default, zero artifacts) or
-//! an artifacts directory (trained weights; PJRT graphs with the `pjrt`
-//! feature).
+//! Each scheduler thread owns one backend and steps its active batch in
+//! lockstep: newly queued requests are admitted *between* engine steps (so
+//! a long generation never blocks admission), every step streams each
+//! weight once for the whole batch, and each accepted token chunk is pushed
+//! to the submitter immediately.  Schedulers are backend-agnostic: the
+//! builtin synthetic zoo (default, zero artifacts) or an artifacts
+//! directory (trained weights; PJRT graphs with the `pjrt` feature).
 //!
-//! * [`queue`] — bounded priority queue with backpressure and FIFO fairness
-//!   within a priority class.
-//! * [`server`] — worker pool, dispatch loop, graceful shutdown.
+//! * [`queue`] — bounded priority queue with backpressure, FIFO fairness
+//!   within a class, and age-based promotion so batch traffic cannot
+//!   starve; plus the streaming `Chunk*/Done` response protocol.
+//! * [`server`] — scheduler pool, continuous-batching loop, graceful
+//!   shutdown, [`SubmitParams`].
 //! * [`session`] — multi-turn conversation state (token histories).
-//! * [`metrics`] — counters and latency percentiles for the serving report.
+//! * [`metrics`] — counters, latency percentiles, failure counts, batch
+//!   occupancy histogram, and throughput for the serving report.
 
 mod metrics;
 mod queue;
@@ -29,8 +38,11 @@ mod server;
 mod session;
 
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use queue::{Mode, Priority, QueueError, Request, RequestQueue, Response, ResponseBody};
-pub use server::{Server, ServerConfig};
+pub use queue::{
+    Mode, Priority, QueueError, Request, RequestQueue, Response, ResponseBody, ResponseEvent,
+    ResponseStream, DEFAULT_BATCH_PROMOTE_AFTER,
+};
+pub use server::{Server, ServerConfig, SubmitParams};
 pub use session::SessionStore;
 
 // Re-exported for convenience: server configs name their model source.

@@ -1,12 +1,19 @@
-//! Bounded priority request queue with backpressure.
+//! Bounded priority request queue with backpressure, plus the streaming
+//! response protocol between the scheduler and submitters.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
 
 use crate::model::SamplingParams;
 use crate::specdec::SpecTrace;
+
+/// Batch requests older than this are served ahead of interactive traffic
+/// (anti-starvation), unless the queue overrides it.
+pub const DEFAULT_BATCH_PROMOTE_AFTER: Duration = Duration::from_millis(500);
 
 /// Request priority class; within a class, strict FIFO.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -40,10 +47,21 @@ pub struct Request {
     pub respond_to: mpsc::Sender<Response>,
 }
 
-/// A finished generation (or an error).
+/// One message on a request's response channel.
 pub struct Response {
     pub id: u64,
-    pub result: anyhow::Result<ResponseBody>,
+    pub event: ResponseEvent,
+}
+
+/// The streaming response protocol: zero or more `Chunk`s followed by
+/// exactly one `Done`.
+pub enum ResponseEvent {
+    /// Tokens accepted since the last chunk (clients can render these
+    /// incrementally instead of waiting for the full generation).
+    Chunk(Vec<u8>),
+    /// Generation finished (the body repeats the full token stream) or
+    /// failed.
+    Done(anyhow::Result<ResponseBody>),
 }
 
 pub struct ResponseBody {
@@ -51,9 +69,35 @@ pub struct ResponseBody {
     pub trace: SpecTrace,
     /// Queue wait + execution, seconds.
     pub latency_s: f64,
-    /// Execution only, seconds.
+    /// Time in the batch engine (admission to completion), seconds.
     pub exec_s: f64,
     pub worker: usize,
+}
+
+/// Client-side handle for one request's response stream.
+pub struct ResponseStream {
+    rx: mpsc::Receiver<Response>,
+}
+
+impl ResponseStream {
+    pub(crate) fn new(rx: mpsc::Receiver<Response>) -> Self {
+        Self { rx }
+    }
+
+    /// Next event (a token chunk or the final completion).
+    pub fn recv(&self) -> anyhow::Result<Response> {
+        self.rx.recv().context("server dropped the request")
+    }
+
+    /// Drain the stream to completion and return the final body.
+    pub fn wait(self) -> anyhow::Result<ResponseBody> {
+        loop {
+            match self.recv()?.event {
+                ResponseEvent::Chunk(_) => {}
+                ResponseEvent::Done(result) => return result,
+            }
+        }
+    }
 }
 
 /// Errors surfaced to submitters.
@@ -82,15 +126,38 @@ struct Inner {
     closed: bool,
 }
 
-/// MPMC bounded queue: any thread may submit; workers pop.
+impl Inner {
+    /// Scheduling policy: an aged batch request first (anti-starvation),
+    /// then interactive, then batch.
+    fn pick(&mut self, promote_after: Duration) -> Option<Request> {
+        if let Some(front) = self.batch.front() {
+            if front.submitted.elapsed() >= promote_after {
+                return self.batch.pop_front();
+            }
+        }
+        if let Some(r) = self.interactive.pop_front() {
+            return Some(r);
+        }
+        self.batch.pop_front()
+    }
+}
+
+/// MPMC bounded queue: any thread may submit; scheduler workers pop.
 pub struct RequestQueue {
     inner: Mutex<Inner>,
     cond: Condvar,
     capacity: usize,
+    /// Age at which a waiting batch request outranks interactive traffic.
+    promote_after: Duration,
 }
 
 impl RequestQueue {
     pub fn new(capacity: usize) -> Self {
+        Self::with_promotion(capacity, DEFAULT_BATCH_PROMOTE_AFTER)
+    }
+
+    /// A queue whose batch-starvation threshold is `promote_after`.
+    pub fn with_promotion(capacity: usize, promote_after: Duration) -> Self {
         Self {
             inner: Mutex::new(Inner {
                 interactive: VecDeque::new(),
@@ -99,6 +166,7 @@ impl RequestQueue {
             }),
             cond: Condvar::new(),
             capacity,
+            promote_after,
         }
     }
 
@@ -129,14 +197,11 @@ impl RequestQueue {
         Ok(())
     }
 
-    /// Blocking pop: interactive first, then batch; `None` on shutdown.
+    /// Blocking pop; `None` on shutdown (after draining queued requests).
     pub fn pop(&self) -> Option<Request> {
         let mut g = self.inner.lock().unwrap();
         loop {
-            if let Some(r) = g.interactive.pop_front() {
-                return Some(r);
-            }
-            if let Some(r) = g.batch.pop_front() {
+            if let Some(r) = g.pick(self.promote_after) {
                 return Some(r);
             }
             if g.closed {
@@ -144,6 +209,13 @@ impl RequestQueue {
             }
             g = self.cond.wait(g).unwrap();
         }
+    }
+
+    /// Non-blocking pop — the continuous-batching scheduler uses this to
+    /// admit queued requests between engine steps without stalling the
+    /// in-flight batch.
+    pub fn try_pop(&self) -> Option<Request> {
+        self.inner.lock().unwrap().pick(self.promote_after)
     }
 
     /// Close the queue; wakes all waiting workers.
@@ -190,6 +262,41 @@ mod tests {
         assert_eq!(q.pop().unwrap().id, 2);
         assert_eq!(q.pop().unwrap().id, 3);
         assert_eq!(q.pop().unwrap().id, 1);
+    }
+
+    #[test]
+    fn aged_batch_request_is_served_before_interactive() {
+        // A steady interactive stream must not starve batch traffic: once a
+        // batch request crosses the promotion threshold it is served next.
+        let q = RequestQueue::with_promotion(8, Duration::from_millis(25));
+        let (rb, _kb) = dummy_request(1, Priority::Batch);
+        q.submit(rb).unwrap();
+        std::thread::sleep(Duration::from_millis(40));
+        let (ri, _ki) = dummy_request(2, Priority::Interactive);
+        q.submit(ri).unwrap();
+        assert_eq!(q.pop().unwrap().id, 1, "aged batch request must be promoted");
+        assert_eq!(q.pop().unwrap().id, 2);
+    }
+
+    #[test]
+    fn young_batch_request_still_yields_to_interactive() {
+        let q = RequestQueue::with_promotion(8, Duration::from_secs(60));
+        let (rb, _kb) = dummy_request(1, Priority::Batch);
+        let (ri, _ki) = dummy_request(2, Priority::Interactive);
+        q.submit(rb).unwrap();
+        q.submit(ri).unwrap();
+        assert_eq!(q.pop().unwrap().id, 2);
+        assert_eq!(q.pop().unwrap().id, 1);
+    }
+
+    #[test]
+    fn try_pop_is_non_blocking() {
+        let q = RequestQueue::new(4);
+        assert!(q.try_pop().is_none());
+        let (r, _k) = dummy_request(1, Priority::Interactive);
+        q.submit(r).unwrap();
+        assert_eq!(q.try_pop().unwrap().id, 1);
+        assert!(q.try_pop().is_none());
     }
 
     #[test]

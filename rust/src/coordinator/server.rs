@@ -1,24 +1,30 @@
-//! Worker pool + dispatch loop.
+//! Scheduler loop + continuous batching dispatch.
 //!
 //! Execution backends are not `Send` (PJRT handles pin to their thread),
-//! so each worker thread builds its own backend + `Engine` stack from the
-//! configured [`ModelSource`] and pulls requests from the shared queue.
-//! Responses flow back through the per-request channel.
+//! so each scheduler thread builds its own backend + [`BatchEngine`] stack
+//! from the configured [`ModelSource`] and runs a continuous-batching loop:
+//! admit queued requests into the active batch (up to `max_batch`) between
+//! engine steps, step every in-flight session in lockstep, stream newly
+//! accepted tokens to each submitter as [`ResponseEvent::Chunk`]s, and
+//! retire completed sessions with a final [`ResponseEvent::Done`].
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::metrics::Metrics;
-use super::queue::{Mode, Priority, Request, RequestQueue, Response, ResponseBody};
+use super::queue::{
+    Mode, Priority, Request, RequestQueue, Response, ResponseBody, ResponseEvent, ResponseStream,
+    DEFAULT_BATCH_PROMOTE_AFTER,
+};
 use super::session::SessionStore;
 use crate::model::{Manifest, SamplingParams};
 use crate::runtime::{builtin_config, load_backend, Backend, ModelSource};
-use crate::specdec::{Engine, SpecConfig};
+use crate::specdec::{ArSession, BatchEngine, GenSession, SpecConfig, SpecSession};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -26,10 +32,16 @@ pub struct ServerConfig {
     /// Where model weights come from (artifacts dir or the builtin zoo).
     pub source: ModelSource,
     pub model: String,
+    /// Scheduler threads, each owning one backend stack.
     pub workers: usize,
     pub queue_capacity: usize,
     /// Trailing bytes of history kept per session.
     pub session_history: usize,
+    /// Maximum sequences batched per scheduler engine step.
+    pub max_batch: usize,
+    /// Age at which a waiting batch-priority request outranks interactive
+    /// traffic (anti-starvation).
+    pub batch_promote_after: Duration,
 }
 
 impl Default for ServerConfig {
@@ -40,6 +52,36 @@ impl Default for ServerConfig {
             workers: 2,
             queue_capacity: 64,
             session_history: 96,
+            max_batch: 8,
+            batch_promote_after: DEFAULT_BATCH_PROMOTE_AFTER,
+        }
+    }
+}
+
+/// Everything about a submission except the prompt; `Default` gives the
+/// common case (greedy speculative decoding, interactive priority).
+#[derive(Debug, Clone)]
+pub struct SubmitParams {
+    pub gen_len: usize,
+    pub mode: Mode,
+    pub priority: Priority,
+    pub sampling: SamplingParams,
+    /// Session to append this exchange to (multi-turn), if any.
+    pub session: Option<u64>,
+    pub max_draft: usize,
+    pub gamma: f32,
+}
+
+impl Default for SubmitParams {
+    fn default() -> Self {
+        Self {
+            gen_len: 64,
+            mode: Mode::Speculative,
+            priority: Priority::Interactive,
+            sampling: SamplingParams::greedy(),
+            session: None,
+            max_draft: 16,
+            gamma: 0.6,
         }
     }
 }
@@ -54,9 +96,9 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the worker pool.  Each worker loads the model on its own
-    /// backend stack before serving (cold-start happens here, not on the
-    /// request path).
+    /// Start the scheduler pool.  Each scheduler thread loads the model on
+    /// its own backend stack before serving (cold-start happens here, not
+    /// on the request path).
     pub fn start(cfg: ServerConfig) -> Result<Self> {
         // Fail fast if the model source is unusable before spawning threads.
         match &cfg.source {
@@ -69,7 +111,8 @@ impl Server {
             }
         }
 
-        let queue = Arc::new(RequestQueue::new(cfg.queue_capacity));
+        let queue =
+            Arc::new(RequestQueue::with_promotion(cfg.queue_capacity, cfg.batch_promote_after));
         let metrics = Arc::new(Metrics::new());
         let sessions = Arc::new(SessionStore::new(cfg.session_history));
 
@@ -82,7 +125,7 @@ impl Server {
             let cfg = cfg.clone();
             let ready = ready_tx.clone();
             workers.push(std::thread::spawn(move || {
-                worker_main(wid, cfg, queue, metrics, sessions, ready);
+                scheduler_main(wid, cfg, queue, metrics, sessions, ready);
             }));
         }
         drop(ready_tx);
@@ -99,32 +142,22 @@ impl Server {
         })
     }
 
-    /// Submit a generation request; returns `(id, receiver)`.
-    #[allow(clippy::too_many_arguments)]
-    pub fn submit(
-        &self,
-        prompt: &[u8],
-        gen_len: usize,
-        mode: Mode,
-        priority: Priority,
-        sampling: SamplingParams,
-        session: Option<u64>,
-        max_draft: usize,
-        gamma: f32,
-    ) -> Result<(u64, mpsc::Receiver<Response>)> {
+    /// Submit a generation request; returns `(id, stream)`.  The stream
+    /// yields incremental token chunks followed by the final body.
+    pub fn submit(&self, prompt: &[u8], params: SubmitParams) -> Result<(u64, ResponseStream)> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         self.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
         let req = Request {
             id,
             prompt: prompt.to_vec(),
-            gen_len,
-            max_draft,
-            gamma,
-            sampling,
-            mode,
-            priority,
-            session,
+            gen_len: params.gen_len,
+            max_draft: params.max_draft,
+            gamma: params.gamma,
+            sampling: params.sampling,
+            mode: params.mode,
+            priority: params.priority,
+            session: params.session,
             submitted: Instant::now(),
             respond_to: tx,
         };
@@ -132,23 +165,13 @@ impl Server {
             self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
             anyhow::bail!("submit failed: {e}");
         }
-        Ok((id, rx))
+        Ok((id, ResponseStream::new(rx)))
     }
 
     /// Convenience: submit with defaults and wait for the reply.
     pub fn generate(&self, prompt: &[u8], gen_len: usize) -> Result<ResponseBody> {
-        let (_, rx) = self.submit(
-            prompt,
-            gen_len,
-            Mode::Speculative,
-            Priority::Interactive,
-            SamplingParams::greedy(),
-            None,
-            16,
-            0.6,
-        )?;
-        let resp = rx.recv().context("server dropped the request")?;
-        resp.result
+        let (_, stream) = self.submit(prompt, SubmitParams { gen_len, ..Default::default() })?;
+        stream.wait()
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -181,7 +204,20 @@ impl Drop for Server {
     }
 }
 
-fn worker_main(
+/// One request in the scheduler's active batch.
+struct ActiveReq {
+    id: u64,
+    session: GenSession,
+    /// Conversation to append the exchange to on completion.
+    conversation: Option<u64>,
+    /// The submitted prompt (session history excluded), for the store.
+    prompt: Vec<u8>,
+    submitted: Instant,
+    admitted: Instant,
+    respond_to: mpsc::Sender<Response>,
+}
+
+fn scheduler_main(
     wid: usize,
     cfg: ServerConfig,
     queue: Arc<RequestQueue>,
@@ -189,7 +225,7 @@ fn worker_main(
     sessions: Arc<SessionStore>,
     ready: mpsc::Sender<Result<()>>,
 ) {
-    // Build the per-worker backend stack.
+    // Build the per-scheduler backend stack.
     let backend: Box<dyn Backend> = match load_backend(&cfg.source, &cfg.model) {
         Ok(b) => {
             let _ = ready.send(Ok(()));
@@ -200,45 +236,185 @@ fn worker_main(
             return;
         }
     };
-    let engine = Engine::new(backend.as_ref());
+    let engine = BatchEngine::new(backend.as_ref());
+    let max_batch = cfg.max_batch.max(1);
+    let mut active: Vec<ActiveReq> = Vec::new();
+    // Requests whose conversation already has an in-flight turn: co-batching
+    // them would read session history before the earlier turn appends it,
+    // so they wait here until the conflict retires.
+    let mut held: Vec<Request> = Vec::new();
 
-    while let Some(req) = queue.pop() {
-        let exec_start = Instant::now();
-        let prompt = sessions.effective_prompt(req.session, &req.prompt);
-        let result = match req.mode {
-            Mode::Speculative => engine.generate_spec(
-                &prompt,
-                &SpecConfig {
-                    max_draft: req.max_draft,
-                    gamma: req.gamma,
-                    sampling: req.sampling,
-                    gen_len: req.gen_len,
-                },
-            ),
-            Mode::Autoregressive => engine.generate_ar(&prompt, req.gen_len, req.sampling),
+    loop {
+        // ---- admission: refill the batch (held conflicts first) ----
+        let mut h = 0;
+        while h < held.len() && active.len() < max_batch {
+            if session_conflicts(&active, held[h].session) {
+                h += 1;
+            } else {
+                let req = held.remove(h);
+                admit(req, backend.as_ref(), &sessions, &metrics, &mut active);
+            }
+        }
+        if active.is_empty() && held.is_empty() {
+            // Idle: block until a request arrives (or shutdown).
+            match queue.pop() {
+                Some(req) => admit(req, backend.as_ref(), &sessions, &metrics, &mut active),
+                None => return, // closed and drained
+            }
+        }
+        while active.len() < max_batch {
+            match queue.try_pop() {
+                Some(req) => {
+                    if session_conflicts(&active, req.session) {
+                        held.push(req);
+                    } else {
+                        admit(req, backend.as_ref(), &sessions, &metrics, &mut active);
+                    }
+                }
+                None => break,
+            }
+        }
+        if active.is_empty() {
+            continue; // admission rejected everything it popped
+        }
+        metrics.record_batch_step(active.len());
+
+        // ---- one lockstep engine step over the whole batch ----
+        let step_result = {
+            let mut refs: Vec<&mut GenSession> =
+                active.iter_mut().map(|a| &mut a.session).collect();
+            engine.step(&mut refs)
         };
-        let exec_s = exec_start.elapsed().as_secs_f64();
-        let latency_s = req.submitted.elapsed().as_secs_f64();
-        let body = result.map(|r| {
-            metrics.record_completion(
-                r.tokens.len() as u64,
-                r.trace.draft_steps(),
-                r.trace.verify_passes(),
-                latency_s,
-                exec_s,
-            );
-            if let Some(sid) = req.session {
-                sessions.append(sid, &req.prompt, &r.tokens);
+        if let Err(e) = step_result {
+            // A batched op failed: no per-sequence attribution, so fail the
+            // whole in-flight batch (clients may retry; slots are freed).
+            for mut a in active.drain(..) {
+                a.session.release(backend.as_ref());
+                metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+                let _ = a.respond_to.send(Response {
+                    id: a.id,
+                    event: ResponseEvent::Done(Err(anyhow::anyhow!("engine step failed: {e:#}"))),
+                });
             }
-            ResponseBody {
-                tokens: r.tokens,
-                trace: r.trace,
-                latency_s,
-                exec_s,
-                worker: wid,
+            continue;
+        }
+
+        // ---- stream chunks; retire completed sessions ----
+        let mut i = 0;
+        while i < active.len() {
+            let a = &mut active[i];
+            let chunk = a.session.take_new_tokens();
+            if !chunk.is_empty() {
+                let _ = a
+                    .respond_to
+                    .send(Response { id: a.id, event: ResponseEvent::Chunk(chunk) });
             }
-        });
-        // The submitter may have gone away; that's fine.
-        let _ = req.respond_to.send(Response { id: req.id, result: body });
+            if a.session.is_done() {
+                let done = active.swap_remove(i);
+                finalize(done, wid, &metrics, &sessions);
+            } else {
+                i += 1;
+            }
+        }
     }
+}
+
+/// Whether `session` already has an in-flight turn in the active batch.
+fn session_conflicts(active: &[ActiveReq], session: Option<u64>) -> bool {
+    match session {
+        Some(sid) => active.iter().any(|a| a.conversation == Some(sid)),
+        None => false,
+    }
+}
+
+/// Validate the prompt window at admission: predictably bad input must be
+/// failed per-request here, never inside a batched engine step (where it
+/// would fail every co-batched request).
+fn validate_prompt(effective: &[u8], backend: &dyn Backend) -> Result<()> {
+    anyhow::ensure!(!effective.is_empty(), "empty prompt");
+    let vocab = backend.vocab();
+    let window = effective.len().min(backend.prefill_len());
+    if let Some(&bad) = effective[effective.len() - window..]
+        .iter()
+        .find(|&&b| (b as usize) >= vocab)
+    {
+        anyhow::bail!("prompt byte {bad} outside model vocab {vocab}");
+    }
+    Ok(())
+}
+
+/// Turn a queued request into an in-flight session (or fail it fast).
+fn admit(
+    req: Request,
+    backend: &dyn Backend,
+    sessions: &SessionStore,
+    metrics: &Metrics,
+    active: &mut Vec<ActiveReq>,
+) {
+    let effective = sessions.effective_prompt(req.session, &req.prompt);
+    if let Err(e) = validate_prompt(&effective, backend) {
+        metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+        let _ = req
+            .respond_to
+            .send(Response { id: req.id, event: ResponseEvent::Done(Err(e)) });
+        return;
+    }
+    let built = match req.mode {
+        Mode::Speculative => SpecSession::new(
+            backend,
+            &effective,
+            SpecConfig {
+                max_draft: req.max_draft,
+                gamma: req.gamma,
+                sampling: req.sampling,
+                gen_len: req.gen_len,
+            },
+        )
+        .map(GenSession::Spec),
+        Mode::Autoregressive => {
+            ArSession::new(backend, &effective, req.gen_len, req.sampling).map(GenSession::Ar)
+        }
+    };
+    match built {
+        Ok(session) => active.push(ActiveReq {
+            id: req.id,
+            session,
+            conversation: req.session,
+            prompt: req.prompt,
+            submitted: req.submitted,
+            admitted: Instant::now(),
+            respond_to: req.respond_to,
+        }),
+        Err(e) => {
+            metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+            let _ = req
+                .respond_to
+                .send(Response { id: req.id, event: ResponseEvent::Done(Err(e)) });
+        }
+    }
+}
+
+/// Record metrics + session history and send the final response.
+fn finalize(a: ActiveReq, wid: usize, metrics: &Metrics, sessions: &SessionStore) {
+    let exec_s = a.admitted.elapsed().as_secs_f64();
+    let latency_s = a.submitted.elapsed().as_secs_f64();
+    let r = a.session.into_result();
+    metrics.record_completion(
+        r.tokens.len() as u64,
+        r.trace.draft_steps(),
+        r.trace.verify_passes(),
+        latency_s,
+        exec_s,
+    );
+    if let Some(sid) = a.conversation {
+        sessions.append(sid, &a.prompt, &r.tokens);
+    }
+    let body = ResponseBody {
+        tokens: r.tokens,
+        trace: r.trace,
+        latency_s,
+        exec_s,
+        worker: wid,
+    };
+    let _ = a.respond_to.send(Response { id: a.id, event: ResponseEvent::Done(Ok(body)) });
 }

@@ -15,10 +15,14 @@
 //!
 //! Execution layer (the [`runtime::Backend`] abstraction):
 //! * [`runtime`] — the `Backend` trait every layer above is written
-//!   against (prefill / decode_full / decode_draft / verify / eval plus
-//!   opaque state threading), the always-available pure-Rust
+//!   against: the single-sequence ops (prefill / decode_full /
+//!   decode_draft / verify / eval with opaque state threading) plus the
+//!   batched serving ops (`prefill_batch` / `decode_full_batch` /
+//!   `decode_draft_batch` / `verify_batch`) over a backend-owned
+//!   `SeqSlot`-indexed KV arena; the always-available pure-Rust
 //!   [`runtime::NativeBackend`] (host-memory transformer, BSFP draft from
-//!   the same bits), the [`runtime::ModelSource`] factory, and — behind
+//!   the same bits, batched ops that stream each weight once per step for
+//!   the whole batch), the [`runtime::ModelSource`] factory, and — behind
 //!   the non-default `pjrt` cargo feature — the PJRT client wrapper that
 //!   executes AOT-compiled HLO graphs buffer-to-buffer.
 //! * [`model`] — manifests, weight loading, logits post-processing; with
@@ -27,9 +31,14 @@
 //! Decoding + serving layer:
 //! * [`specdec`] — the speculative decoding engine over any backend:
 //!   quantized draft pass, full verification pass, shared KV cache, early
-//!   exit (§III-C), plus the Eq. 1–2 analytic model.
-//! * [`coordinator`] — serving layer: request queue, scheduler, sessions,
-//!   metrics — the production wrapper around the engine.
+//!   exit (§III-C), the Eq. 1–2 analytic model, and the step-driven
+//!   continuous-batching engine (`SpecSession`/`ArSession` state machines
+//!   driven in lockstep by `BatchEngine`, bit-identical to sequential
+//!   decoding).
+//! * [`coordinator`] — serving layer: bounded priority queue with
+//!   age-based anti-starvation, continuous-batching scheduler threads,
+//!   streaming chunked responses, sessions, metrics (failures, batch
+//!   occupancy, throughput) — the production wrapper around the engine.
 //!
 //! Evaluation layer:
 //! * [`accel`] — cycle-level simulator of the SPEQ accelerator (§IV):

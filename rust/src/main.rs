@@ -14,7 +14,7 @@
 
 use anyhow::Result;
 use speq::accel::{paper_dims, Accel, ArrayMode};
-use speq::coordinator::{Mode, Priority, Server, ServerConfig};
+use speq::coordinator::{Mode, Priority, Server, ServerConfig, SubmitParams};
 use speq::model::{Manifest, SamplingParams};
 use speq::report::{run_experiment, ReportCtx, ReportOpts, EXPERIMENTS};
 use speq::runtime::{builtin_config, builtin_model_names, load_backend, Backend, ModelSource};
@@ -194,11 +194,15 @@ fn serve(args: &Args) -> Result<()> {
         model: args.get_or("model", "vicuna-7b-tiny").to_string(),
         workers: args.get_usize("workers", 2),
         queue_capacity: args.get_usize("queue", 64),
-        session_history: 96,
+        max_batch: args.get_usize("max-batch", 8),
+        ..ServerConfig::default()
     };
     let n_requests = args.get_usize("requests", 12);
     let gen_len = args.get_usize("gen-len", 64);
-    println!("starting {} workers on {} ...", cfg.workers, cfg.model);
+    println!(
+        "starting {} schedulers (max_batch {}) on {} ...",
+        cfg.workers, cfg.max_batch, cfg.model
+    );
     let manifest = source.manifest()?;
     let server = Server::start(cfg)?;
 
@@ -207,29 +211,28 @@ fn serve(args: &Args) -> Result<()> {
         .iter()
         .map(|&t| load_task_or_builtin(manifest.as_ref(), t, 64, n_requests.max(1)))
         .collect::<Result<_>>()?;
-    let mut rxs = Vec::new();
+    let mut streams = Vec::new();
     let t0 = std::time::Instant::now();
     for i in 0..n_requests {
         let ts = &tasks[i % 3];
         let prompt = &ts.prompts[i % ts.prompts.len()];
-        let (_, rx) = server.submit(
+        let (id, stream) = server.submit(
             prompt,
-            gen_len,
-            Mode::Speculative,
-            if i % 4 == 0 { Priority::Interactive } else { Priority::Batch },
-            SamplingParams::greedy(),
-            None,
-            16,
-            0.6,
+            SubmitParams {
+                gen_len,
+                mode: Mode::Speculative,
+                priority: if i % 4 == 0 { Priority::Interactive } else { Priority::Batch },
+                sampling: SamplingParams::greedy(),
+                ..Default::default()
+            },
         )?;
-        rxs.push(rx);
+        streams.push((id, stream));
     }
-    for rx in rxs {
-        let r = rx.recv()?;
-        let body = r.result?;
+    for (id, stream) in streams {
+        let body = stream.wait()?;
         println!(
             "req {:>3} worker {} | {:>3} tok | {:>7.1} ms | r {:.3}",
-            r.id,
+            id,
             body.worker,
             body.tokens.len(),
             body.latency_s * 1e3,
@@ -246,6 +249,10 @@ fn serve(args: &Args) -> Result<()> {
         snap.latency_p50_ms,
         snap.latency_p95_ms,
         snap.latency_p99_ms
+    );
+    println!(
+        "batch occupancy: mean {:.2} seqs/step | failed {}",
+        snap.batch_occupancy_mean, snap.failed
     );
     server.shutdown();
     Ok(())

@@ -22,7 +22,7 @@ use super::weights::{load_weights, HostWeights};
 use crate::bsfp::{f32_to_f16_bits, quantize_tensor, GROUP_SIZE};
 use crate::model::ModelConfig;
 use crate::runtime::{
-    Backend, BackendState, Executable, Runtime, StepOutput, VerifyOutput,
+    Backend, BackendState, Executable, Runtime, SlotArena, StepOutput, VerifyOutput,
 };
 
 /// The six compiled graphs of one model.
@@ -52,6 +52,9 @@ pub struct ModelRuntime {
     draft_bufs: Arc<Vec<xla::PjRtBuffer>>,
     /// Host copies for analyses (exponent histograms, re-quantization).
     pub weights: HostWeights,
+    /// Per-sequence device states for the batched serving API (the default
+    /// batched ops loop the single-sequence graphs through this arena).
+    arena: SlotArena,
 }
 
 impl ModelRuntime {
@@ -73,7 +76,15 @@ impl ModelRuntime {
         let full_bufs = Arc::new(upload_full_params(rt, &entry, &weights, None)?);
         let draft_bufs = Arc::new(upload_draft_params(rt, &entry, &weights)?);
 
-        Ok(Self { entry, rt: rt.clone(), exes, full_bufs, draft_bufs, weights })
+        Ok(Self {
+            entry,
+            rt: rt.clone(),
+            exes,
+            full_bufs,
+            draft_bufs,
+            weights,
+            arena: SlotArena::new(),
+        })
     }
 
     /// Total f32 length of the state vector.
@@ -138,6 +149,10 @@ impl Backend for ModelRuntime {
 
     fn backend_name(&self) -> &'static str {
         "pjrt"
+    }
+
+    fn arena(&self) -> &SlotArena {
+        &self.arena
     }
 
     fn prefill(&self, tokens: &[i32], length: usize) -> Result<StepOutput> {
@@ -237,6 +252,7 @@ impl Backend for ModelRuntime {
             full_bufs: Arc::new(full_bufs),
             draft_bufs: Arc::new(draft_bufs),
             weights,
+            arena: SlotArena::new(),
         }))
     }
 }

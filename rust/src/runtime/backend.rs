@@ -11,9 +11,23 @@
 //! * `model::ModelRuntime` — PJRT execution of AOT-compiled HLO (behind
 //!   the non-default `pjrt` cargo feature).
 //!
-//! State is passed *by value*: each step consumes the previous state and
-//! returns the next one, which lets the native backend mutate its KV cache
-//! in place and the PJRT backend thread device buffers without host copies.
+//! Two request-state disciplines coexist:
+//!
+//! * **By-value threading** (the original single-sequence API): each step
+//!   consumes the previous [`BackendState`] and returns the next one, which
+//!   lets the native backend mutate its KV cache in place and the PJRT
+//!   backend thread device buffers without host copies.
+//! * **Slot-indexed arena** (the batched serving API): the backend owns a
+//!   [`SlotArena`] of per-sequence states indexed by [`SeqSlot`].  Callers
+//!   allocate a slot per sequence and drive the batched operations
+//!   (`prefill_batch`, `decode_full_batch`, `decode_draft_batch`,
+//!   `verify_batch`), which read and write the arena in place.  Default
+//!   implementations loop the single-sequence operations — so every
+//!   backend (including PJRT) is batch-capable — while [`NativeBackend`]
+//!   overrides them to stream each weight through the whole batch once per
+//!   step (one `B×K · K×N` matmul instead of `B` GEMVs).
+
+use std::sync::Mutex;
 
 use anyhow::Result;
 
@@ -28,6 +42,102 @@ pub enum BackendState {
     /// Device-resident state buffer of the PJRT backend.
     #[cfg(feature = "pjrt")]
     Pjrt(xla::PjRtBuffer),
+}
+
+/// Index of one sequence's KV state in the backend-owned [`SlotArena`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SeqSlot(pub usize);
+
+struct SlotArenaInner {
+    /// Per-slot state; `None` for allocated-but-unprefilled slots.
+    states: Vec<Option<BackendState>>,
+    /// Whether the slot index is currently leased to a sequence.
+    allocated: Vec<bool>,
+    /// Recycled slot indices.
+    free: Vec<usize>,
+}
+
+/// Backend-owned arena of per-sequence request states.
+///
+/// Slots are allocated one per in-flight sequence; the state itself is
+/// created by `prefill_batch` and mutated in place by the batched decode /
+/// verify operations.  The arena is the backing store for the [`Backend`]
+/// batched-op default implementations, so every backend exposes the same
+/// allocate/free discipline to the serving layer.
+pub struct SlotArena {
+    inner: Mutex<SlotArenaInner>,
+}
+
+impl SlotArena {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(SlotArenaInner {
+                states: Vec::new(),
+                allocated: Vec::new(),
+                free: Vec::new(),
+            }),
+        }
+    }
+
+    /// Lease a slot (no state yet — `prefill_batch` creates it).
+    pub fn alloc(&self) -> SeqSlot {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(i) = g.free.pop() {
+            g.allocated[i] = true;
+            SeqSlot(i)
+        } else {
+            g.states.push(None);
+            g.allocated.push(true);
+            SeqSlot(g.states.len() - 1)
+        }
+    }
+
+    /// Return a slot to the arena, dropping its state.  Double-frees and
+    /// out-of-range slots are ignored (free is used on error paths).
+    pub fn free(&self, slot: SeqSlot) {
+        let mut g = self.inner.lock().unwrap();
+        if slot.0 < g.allocated.len() && g.allocated[slot.0] {
+            g.allocated[slot.0] = false;
+            g.states[slot.0] = None;
+            g.free.push(slot.0);
+        }
+    }
+
+    /// Move a slot's state out (the caller must `put` it back).
+    pub fn take(&self, slot: SeqSlot) -> Result<BackendState> {
+        let mut g = self.inner.lock().unwrap();
+        anyhow::ensure!(
+            slot.0 < g.allocated.len() && g.allocated[slot.0],
+            "slot {} is not allocated",
+            slot.0
+        );
+        g.states[slot.0]
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("slot {} has no state (prefill first?)", slot.0))
+    }
+
+    /// Store a slot's state.
+    pub fn put(&self, slot: SeqSlot, state: BackendState) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        anyhow::ensure!(
+            slot.0 < g.allocated.len() && g.allocated[slot.0],
+            "slot {} is not allocated",
+            slot.0
+        );
+        g.states[slot.0] = Some(state);
+        Ok(())
+    }
+
+    /// Number of currently leased slots.
+    pub fn in_use(&self) -> usize {
+        self.inner.lock().unwrap().allocated.iter().filter(|&&a| a).count()
+    }
+}
+
+impl Default for SlotArena {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 /// Logits for slot 0 (length `vocab`) plus the threaded state.
@@ -90,6 +200,122 @@ pub trait Backend {
         &self,
         transform: &mut dyn FnMut(&str, &[f32], usize, usize) -> Result<Vec<f32>>,
     ) -> Result<Box<dyn Backend>>;
+
+    // ---- batched serving API (continuous batching) ----------------------
+    //
+    // The serving scheduler drives many sequences in lockstep through these
+    // operations.  Per-sequence results are REQUIRED to be bit-identical to
+    // the corresponding single-sequence operation: batching is a throughput
+    // optimization, never a semantic change.
+    //
+    // Error contract: when a batched operation returns `Err`, the states of
+    // EVERY slot in the call are unspecified (some sequences may have
+    // advanced; the default impls may leave a failed sequence's state
+    // consumed).  Callers must treat the whole batch as failed and free the
+    // slots — which is exactly what the serving scheduler does.  Callers
+    // should therefore validate predictable bad input (token range, prompt
+    // shape) per-sequence *before* batching.
+
+    /// The backend-owned per-sequence state arena backing the batched ops.
+    fn arena(&self) -> &SlotArena;
+
+    /// Lease a KV slot for a new sequence (state is created by
+    /// [`Backend::prefill_batch`]).
+    fn alloc_slot(&self) -> SeqSlot {
+        self.arena().alloc()
+    }
+
+    /// Release a sequence's slot and drop its state.
+    fn free_slot(&self, slot: SeqSlot) {
+        self.arena().free(slot)
+    }
+
+    /// Run prefill for a batch of sequences; `prompts[i]` is padded to
+    /// `prefill_len` and masked by `lengths[i]`.  Stores each sequence's
+    /// fresh state in its slot and returns each sequence's slot-0 logits.
+    fn prefill_batch(
+        &self,
+        slots: &[SeqSlot],
+        prompts: &[Vec<i32>],
+        lengths: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            slots.len() == prompts.len() && slots.len() == lengths.len(),
+            "prefill_batch: mismatched batch arity"
+        );
+        let mut out = Vec::with_capacity(slots.len());
+        for ((slot, toks), &len) in slots.iter().zip(prompts).zip(lengths) {
+            let step = self.prefill(toks, len)?;
+            self.arena().put(*slot, step.state)?;
+            out.push(step.logits);
+        }
+        Ok(out)
+    }
+
+    /// One full-precision decode step for each sequence in the batch.
+    fn decode_full_batch(
+        &self,
+        slots: &[SeqSlot],
+        tokens: &[i32],
+        pos: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            slots.len() == tokens.len() && slots.len() == pos.len(),
+            "decode_full_batch: mismatched batch arity"
+        );
+        let mut out = Vec::with_capacity(slots.len());
+        for ((&slot, &tok), &p) in slots.iter().zip(tokens).zip(pos) {
+            let state = self.arena().take(slot)?;
+            let step = self.decode_full(tok, p, state)?;
+            self.arena().put(slot, step.state)?;
+            out.push(step.logits);
+        }
+        Ok(out)
+    }
+
+    /// One BSFP draft decode step for each sequence in the batch.
+    fn decode_draft_batch(
+        &self,
+        slots: &[SeqSlot],
+        tokens: &[i32],
+        pos: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            slots.len() == tokens.len() && slots.len() == pos.len(),
+            "decode_draft_batch: mismatched batch arity"
+        );
+        let mut out = Vec::with_capacity(slots.len());
+        for ((&slot, &tok), &p) in slots.iter().zip(tokens).zip(pos) {
+            let state = self.arena().take(slot)?;
+            let step = self.decode_draft(tok, p, state)?;
+            self.arena().put(slot, step.state)?;
+            out.push(step.logits);
+        }
+        Ok(out)
+    }
+
+    /// One verification pass for each sequence; `tokens[i]` holds exactly
+    /// `slots()` (padded) tokens scored from `pos0[i]`.  Returns each
+    /// sequence's flattened `slots() * vocab` logits.
+    fn verify_batch(
+        &self,
+        slots: &[SeqSlot],
+        tokens: &[Vec<i32>],
+        pos0: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            slots.len() == tokens.len() && slots.len() == pos0.len(),
+            "verify_batch: mismatched batch arity"
+        );
+        let mut out = Vec::with_capacity(slots.len());
+        for ((&slot, toks), &p0) in slots.iter().zip(tokens).zip(pos0) {
+            let state = self.arena().take(slot)?;
+            let ver = self.verify(toks, p0, state)?;
+            self.arena().put(slot, ver.state)?;
+            out.push(ver.logits);
+        }
+        Ok(out)
+    }
 
     fn vocab(&self) -> usize {
         self.config().vocab

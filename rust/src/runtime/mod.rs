@@ -4,10 +4,12 @@
 //!
 //! * [`backend`] — the trait every layer above this one is written
 //!   against: five request-path operations plus opaque state threading,
+//!   the batched serving API over the [`SeqSlot`]-indexed [`SlotArena`],
 //!   and the [`ModelSource`]/[`load_backend`] factory.
 //! * [`native`] — host-memory interpreter for the tiny SPEQ transformer;
 //!   the draft pass runs through the in-tree BSFP codec, so the whole
-//!   stack builds, tests, and serves without PJRT or artifacts.
+//!   stack builds, tests, and serves without PJRT or artifacts.  Batched
+//!   operations stream each weight once per step for the whole batch.
 //! * `exec`/`hlo` (`pjrt` feature) — the `xla` crate wrapper: HLO text
 //!   loading, compilation, buffer-to-buffer execution.  The interchange is
 //!   HLO **text** (xla_extension 0.5.1 rejects jax >= 0.5's 64-bit-id
@@ -17,7 +19,8 @@ pub mod backend;
 pub mod native;
 
 pub use backend::{
-    load_backend, Backend, BackendState, ModelSource, StepOutput, VerifyOutput,
+    load_backend, Backend, BackendState, ModelSource, SeqSlot, SlotArena, StepOutput,
+    VerifyOutput,
 };
 pub use native::{builtin_config, builtin_model_names, InitStyle, NativeBackend, S_SLOTS};
 

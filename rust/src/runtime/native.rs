@@ -25,7 +25,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
-use super::backend::{Backend, BackendState, StepOutput, VerifyOutput};
+use super::backend::{Backend, BackendState, SeqSlot, SlotArena, StepOutput, VerifyOutput};
 use crate::bsfp::{f16_bits_to_f32, f32_to_f16_bits, quantize_tensor, GROUP_SIZE};
 use crate::model::{load_weights, HostWeights, Manifest, ModelConfig};
 use crate::util::rng::Rng;
@@ -91,6 +91,8 @@ pub struct NativeBackend {
     freqs: Vec<f32>,
     /// Precomputed per-layer parameter names (hot path: no formatting).
     layer_names: Vec<LayerNames>,
+    /// Per-sequence KV states for the batched serving API.
+    arena: SlotArena,
 }
 
 /// Deterministic `(name, shape)` parameter list — mirrors
@@ -191,7 +193,16 @@ impl NativeBackend {
             .map(|j| (-(j as f32) * (10000.0f32).ln() / half as f32).exp())
             .collect();
         let layer_names = (0..config.n_layers).map(LayerNames::layer).collect();
-        Ok(Self { config, slots, linears, weights, draft, freqs, layer_names })
+        Ok(Self {
+            config,
+            slots,
+            linears,
+            weights,
+            draft,
+            freqs,
+            layer_names,
+            arena: SlotArena::new(),
+        })
     }
 
     /// Load trained weights from an artifacts manifest (no HLO needed).
@@ -272,62 +283,155 @@ impl NativeBackend {
     }
 
     /// One decode step at `pos`: writes this position's KV, attends the
-    /// cache up to `pos`, returns the logits row.
+    /// cache up to `pos`, returns the logits row.  Implemented as a
+    /// batch of one so single-sequence and batched execution share one
+    /// code path (the bit-identity contract of the batched serving API).
     fn step(&self, set: WeightSet, token: i32, pos: usize, kv: &mut [f32]) -> Result<Vec<f32>> {
+        let mut rows = self.step_batch(set, &[token], &[pos], &mut [kv])?;
+        Ok(rows.pop().expect("batch of one"))
+    }
+
+    /// One decode step for `B` independent sequences in lockstep.
+    ///
+    /// Every linear streams each weight row exactly once for the whole
+    /// batch (`B×K · K×N` instead of `B` GEMVs) — the memory-bandwidth win
+    /// continuous batching exists for.  Per-sequence accumulation order is
+    /// identical to a batch of one, so results are bit-identical to
+    /// sequential execution regardless of batch composition.
+    fn step_batch(
+        &self,
+        set: WeightSet,
+        tokens: &[i32],
+        pos: &[usize],
+        kvs: &mut [&mut [f32]],
+    ) -> Result<Vec<Vec<f32>>> {
         let c = &self.config;
+        let b = tokens.len();
         anyhow::ensure!(
-            token >= 0 && (token as usize) < c.vocab,
-            "token {token} outside vocab {}",
-            c.vocab
+            pos.len() == b && kvs.len() == b,
+            "step_batch: mismatched batch arity ({b} tokens, {} pos, {} states)",
+            pos.len(),
+            kvs.len()
         );
-        anyhow::ensure!(pos < c.cache_len, "position {pos} exceeds cache_len {}", c.cache_len);
+        for (&token, &p) in tokens.iter().zip(pos) {
+            anyhow::ensure!(
+                token >= 0 && (token as usize) < c.vocab,
+                "token {token} outside vocab {}",
+                c.vocab
+            );
+            anyhow::ensure!(p < c.cache_len, "position {p} exceeds cache_len {}", c.cache_len);
+        }
         let (d, hd, nh) = (c.d_model, c.head_dim, c.n_heads);
-        let tok = token as usize;
-        let mut x: Vec<f32> = self.p(set, "embed")[tok * d..(tok + 1) * d].to_vec();
+        let embed = self.p(set, "embed");
+        let mut xs: Vec<Vec<f32>> = tokens
+            .iter()
+            .map(|&t| embed[(t as usize) * d..(t as usize + 1) * d].to_vec())
+            .collect();
         for l in 0..c.n_layers {
             let names = &self.layer_names[l];
             // ---- attention ----
-            let h = rmsnorm(&x, self.p(set, &names.attn_norm));
-            let mut q = matvec(&h, self.p(set, &names.wq), d, d);
-            let mut k = matvec(&h, self.p(set, &names.wk), d, d);
-            let v = matvec(&h, self.p(set, &names.wv), d, d);
-            rope_in_place(&mut q, nh, hd, pos, &self.freqs);
-            rope_in_place(&mut k, nh, hd, pos, &self.freqs);
-            let kbase = self.kv_index(l, 0, pos);
-            kv[kbase..kbase + d].copy_from_slice(&k);
-            let vbase = self.kv_index(l, 1, pos);
-            kv[vbase..vbase + d].copy_from_slice(&v);
-            let mut ctx = vec![0.0f32; d];
-            let scale = 1.0 / (hd as f32).sqrt();
-            let mut scores = vec![0.0f32; pos + 1];
-            for head in 0..nh {
-                let qh = &q[head * hd..(head + 1) * hd];
-                for (t, s) in scores.iter_mut().enumerate() {
-                    let kr = &kv[self.kv_index(l, 0, t) + head * hd..][..hd];
-                    *s = dot(qh, kr) * scale;
+            let hs: Vec<Vec<f32>> =
+                xs.iter().map(|x| rmsnorm(x, self.p(set, &names.attn_norm))).collect();
+            let mut qs = matmul(&hs, self.p(set, &names.wq), d, d);
+            let mut ks = matmul(&hs, self.p(set, &names.wk), d, d);
+            let vs = matmul(&hs, self.p(set, &names.wv), d, d);
+            let mut ctxs: Vec<Vec<f32>> = Vec::with_capacity(b);
+            for i in 0..b {
+                rope_in_place(&mut qs[i], nh, hd, pos[i], &self.freqs);
+                rope_in_place(&mut ks[i], nh, hd, pos[i], &self.freqs);
+                let kv = &mut *kvs[i];
+                let kbase = self.kv_index(l, 0, pos[i]);
+                kv[kbase..kbase + d].copy_from_slice(&ks[i]);
+                let vbase = self.kv_index(l, 1, pos[i]);
+                kv[vbase..vbase + d].copy_from_slice(&vs[i]);
+                let mut ctx = vec![0.0f32; d];
+                let scale = 1.0 / (hd as f32).sqrt();
+                let mut scores = vec![0.0f32; pos[i] + 1];
+                for head in 0..nh {
+                    let qh = &qs[i][head * hd..(head + 1) * hd];
+                    for (t, s) in scores.iter_mut().enumerate() {
+                        let kr = &kv[self.kv_index(l, 0, t) + head * hd..][..hd];
+                        *s = dot(qh, kr) * scale;
+                    }
+                    softmax_in_place(&mut scores);
+                    let ch = &mut ctx[head * hd..(head + 1) * hd];
+                    for (t, &a) in scores.iter().enumerate() {
+                        let vr = &kv[self.kv_index(l, 1, t) + head * hd..][..hd];
+                        axpy(ch, a, vr);
+                    }
                 }
-                softmax_in_place(&mut scores);
-                let ch = &mut ctx[head * hd..(head + 1) * hd];
-                for (t, &a) in scores.iter().enumerate() {
-                    let vr = &kv[self.kv_index(l, 1, t) + head * hd..][..hd];
-                    axpy(ch, a, vr);
-                }
+                ctxs.push(ctx);
             }
-            let o = matvec(&ctx, self.p(set, &names.wo), d, d);
-            axpy(&mut x, 1.0, &o);
+            let os = matmul(&ctxs, self.p(set, &names.wo), d, d);
+            for (x, o) in xs.iter_mut().zip(&os) {
+                axpy(x, 1.0, o);
+            }
             // ---- MLP ----
-            let h = rmsnorm(&x, self.p(set, &names.mlp_norm));
-            let mut gate = matvec(&h, self.p(set, &names.w_gate), d, c.d_ff);
-            let up = matvec(&h, self.p(set, &names.w_up), d, c.d_ff);
-            for (g, &u) in gate.iter_mut().zip(&up) {
-                let s = *g / (1.0 + (-*g).exp());
-                *g = s * u;
+            let hs: Vec<Vec<f32>> =
+                xs.iter().map(|x| rmsnorm(x, self.p(set, &names.mlp_norm))).collect();
+            let mut gates = matmul(&hs, self.p(set, &names.w_gate), d, c.d_ff);
+            let ups = matmul(&hs, self.p(set, &names.w_up), d, c.d_ff);
+            for (gate, up) in gates.iter_mut().zip(&ups) {
+                for (g, &u) in gate.iter_mut().zip(up) {
+                    let s = *g / (1.0 + (-*g).exp());
+                    *g = s * u;
+                }
             }
-            let down = matvec(&gate, self.p(set, &names.w_down), c.d_ff, d);
-            axpy(&mut x, 1.0, &down);
+            let downs = matmul(&gates, self.p(set, &names.w_down), c.d_ff, d);
+            for (x, down) in xs.iter_mut().zip(&downs) {
+                axpy(x, 1.0, down);
+            }
         }
-        let xf = rmsnorm(&x, self.p(set, "final_norm"));
-        Ok(matvec(&xf, self.p(set, "lm_head"), d, c.vocab))
+        let xfs: Vec<Vec<f32>> =
+            xs.iter().map(|x| rmsnorm(x, self.p(set, "final_norm"))).collect();
+        Ok(matmul(&xfs, self.p(set, "lm_head"), d, c.vocab))
+    }
+
+    /// Move the native states of a slot batch out of the arena, validating
+    /// each.  On failure every already-taken state is restored.
+    fn take_native_states(&self, slots: &[SeqSlot]) -> Result<Vec<NativeState>> {
+        let mut states = Vec::with_capacity(slots.len());
+        for (i, &slot) in slots.iter().enumerate() {
+            let taken = self.arena.take(slot).and_then(|s| self.take_state(s));
+            match taken {
+                Ok(s) => states.push(s),
+                Err(e) => {
+                    self.restore_states(&slots[..i], states);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(states)
+    }
+
+    /// Put a batch of native states back into their slots.
+    fn restore_states(&self, slots: &[SeqSlot], states: Vec<NativeState>) {
+        for (&slot, s) in slots.iter().zip(states) {
+            let _ = self.arena.put(slot, BackendState::Native(s));
+        }
+    }
+
+    /// Shared body of the batched decode operations.
+    fn decode_batch(
+        &self,
+        set: WeightSet,
+        slots: &[SeqSlot],
+        tokens: &[i32],
+        pos: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            slots.len() == tokens.len() && slots.len() == pos.len(),
+            "decode batch: mismatched batch arity"
+        );
+        if slots.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut states = self.take_native_states(slots)?;
+        let mut kvs: Vec<&mut [f32]> = states.iter_mut().map(|s| s.kv.as_mut_slice()).collect();
+        let result = self.step_batch(set, tokens, pos, &mut kvs);
+        drop(kvs);
+        self.restore_states(slots, states);
+        result
     }
 }
 
@@ -379,6 +483,119 @@ impl Backend for NativeBackend {
 
     fn backend_name(&self) -> &'static str {
         "native"
+    }
+
+    fn arena(&self) -> &SlotArena {
+        &self.arena
+    }
+
+    fn prefill_batch(
+        &self,
+        slots: &[SeqSlot],
+        prompts: &[Vec<i32>],
+        lengths: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            slots.len() == prompts.len() && slots.len() == lengths.len(),
+            "prefill_batch: mismatched batch arity"
+        );
+        let p = self.config.prefill_len;
+        for (toks, &len) in prompts.iter().zip(lengths) {
+            anyhow::ensure!(toks.len() == p, "prefill needs exactly {p} (padded) tokens");
+            anyhow::ensure!(len >= 1 && len <= p, "prefill length out of range");
+        }
+        let b = slots.len();
+        let mut kvbufs: Vec<Vec<f32>> = (0..b).map(|_| vec![0.0f32; self.kv_elements()]).collect();
+        let mut logits: Vec<Vec<f32>> = vec![Vec::new(); b];
+        let maxlen = lengths.iter().copied().max().unwrap_or(0);
+        // Position-lockstep over the batch: sequences past their own length
+        // drop out, the rest share one weight stream per position.
+        for t in 0..maxlen {
+            let active: Vec<usize> = (0..b).filter(|&i| t < lengths[i]).collect();
+            let toks: Vec<i32> = active.iter().map(|&i| prompts[i][t]).collect();
+            let poss: Vec<usize> = vec![t; active.len()];
+            let mut kvs: Vec<&mut [f32]> = kvbufs
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| t < lengths[*i])
+                .map(|(_, kv)| kv.as_mut_slice())
+                .collect();
+            let rows = self.step_batch(WeightSet::Full, &toks, &poss, &mut kvs)?;
+            for (&i, row) in active.iter().zip(rows) {
+                logits[i] = row;
+            }
+        }
+        for (&slot, kv) in slots.iter().zip(kvbufs) {
+            self.arena.put(slot, BackendState::Native(NativeState { kv }))?;
+        }
+        Ok(logits)
+    }
+
+    fn decode_full_batch(
+        &self,
+        slots: &[SeqSlot],
+        tokens: &[i32],
+        pos: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.decode_batch(WeightSet::Full, slots, tokens, pos)
+    }
+
+    fn decode_draft_batch(
+        &self,
+        slots: &[SeqSlot],
+        tokens: &[i32],
+        pos: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.decode_batch(WeightSet::Draft, slots, tokens, pos)
+    }
+
+    fn verify_batch(
+        &self,
+        slots: &[SeqSlot],
+        tokens: &[Vec<i32>],
+        pos0: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        let s = self.slots;
+        let v = self.config.vocab;
+        anyhow::ensure!(
+            slots.len() == tokens.len() && slots.len() == pos0.len(),
+            "verify_batch: mismatched batch arity"
+        );
+        for toks in tokens {
+            anyhow::ensure!(toks.len() == s, "verify needs exactly {s} (padded) tokens");
+        }
+        if slots.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut states = self.take_native_states(slots)?;
+        let b = slots.len();
+        let mut out = vec![vec![0.0f32; s * v]; b];
+        let mut err = None;
+        // Verification rows are sequential per sequence (row i attends row
+        // i-1's KV), so the batch advances row-by-row: one shared weight
+        // stream scores row i of every sequence.
+        for row in 0..s {
+            let toks: Vec<i32> = tokens.iter().map(|t| t[row]).collect();
+            let poss: Vec<usize> = pos0.iter().map(|&p| p + row).collect();
+            let mut kvs: Vec<&mut [f32]> =
+                states.iter_mut().map(|st| st.kv.as_mut_slice()).collect();
+            match self.step_batch(WeightSet::Full, &toks, &poss, &mut kvs) {
+                Ok(rows) => {
+                    for (i, r) in rows.into_iter().enumerate() {
+                        out[i][row * v..(row + 1) * v].copy_from_slice(&r);
+                    }
+                }
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
+            }
+        }
+        self.restore_states(slots, states);
+        match err {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
     }
 
     fn prefill(&self, tokens: &[i32], length: usize) -> Result<StepOutput> {
@@ -556,15 +773,24 @@ fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
     }
 }
 
-/// `x (1, k) @ w (k, n)` with `w` row-major; row-sequential accumulation.
-fn matvec(x: &[f32], w: &[f32], k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(x.len(), k);
+/// `X (B, k) @ w (k, n)` with `w` row-major.
+///
+/// The weight-row loop is outermost so each row of `w` is streamed from
+/// memory exactly once for the whole batch — the continuous-batching
+/// bandwidth win.  Each output row accumulates in the same `i`-ascending
+/// order as a batch of one, so per-sequence results are bit-identical for
+/// every batch size.
+fn matmul(xs: &[Vec<f32>], w: &[f32], k: usize, n: usize) -> Vec<Vec<f32>> {
+    debug_assert!(xs.iter().all(|x| x.len() == k));
     debug_assert_eq!(w.len(), k * n);
-    let mut y = vec![0.0f32; n];
-    for (i, &xi) in x.iter().enumerate() {
-        axpy(&mut y, xi, &w[i * n..(i + 1) * n]);
+    let mut ys: Vec<Vec<f32>> = xs.iter().map(|_| vec![0.0f32; n]).collect();
+    for i in 0..k {
+        let row = &w[i * n..(i + 1) * n];
+        for (y, x) in ys.iter_mut().zip(xs) {
+            axpy(y, x[i], row);
+        }
     }
-    y
+    ys
 }
 
 fn rmsnorm(x: &[f32], w: &[f32]) -> Vec<f32> {
@@ -701,6 +927,63 @@ mod tests {
         let pre = a.prefill(&toks, 2).unwrap();
         let err = c.decode_full(0, 2, pre.state).unwrap_err();
         assert!(format!("{err}").contains("KV elements"), "{err}");
+    }
+
+    #[test]
+    fn batched_ops_match_single_sequence_bitwise() {
+        let b = NativeBackend::synthetic(tiny_cfg(), 5, 9, InitStyle::Confident).unwrap();
+        let p = b.prefill_len();
+        let prompts: Vec<Vec<i32>> = vec![vec![5i32; p], vec![7i32; p], vec![11i32; p]];
+        let lengths = vec![6usize, 3, 9];
+        let slots: Vec<SeqSlot> = (0..3).map(|_| b.alloc_slot()).collect();
+
+        // Batched prefill == per-sequence prefill, bitwise.
+        let pre = b.prefill_batch(&slots, &prompts, &lengths).unwrap();
+        let mut seq_states = Vec::new();
+        for (i, (toks, &len)) in prompts.iter().zip(&lengths).enumerate() {
+            let s = b.prefill(toks, len).unwrap();
+            assert_eq!(pre[i], s.logits, "prefill logits diverged for seq {i}");
+            seq_states.push(s.state);
+        }
+
+        // One batched draft step == sequential draft steps, bitwise.
+        let toks = [1i32, 2, 3];
+        let rows = b.decode_draft_batch(&slots, &toks, &lengths).unwrap();
+        let mut next_states = Vec::new();
+        for (i, state) in seq_states.into_iter().enumerate() {
+            let s = b.decode_draft(toks[i], lengths[i], state).unwrap();
+            assert_eq!(rows[i], s.logits, "draft logits diverged for seq {i}");
+            next_states.push(s.state);
+        }
+
+        // One batched verify pass == sequential verify passes, bitwise.
+        let vtokens: Vec<Vec<i32>> =
+            vec![vec![1, 2, 3, 4, 5], vec![2, 3, 4, 5, 6], vec![3, 4, 5, 6, 7]];
+        let pos0: Vec<usize> = lengths.iter().map(|&l| l + 1).collect();
+        let vrows = b.verify_batch(&slots, &vtokens, &pos0).unwrap();
+        for (i, state) in next_states.into_iter().enumerate() {
+            let v = b.verify(&vtokens[i], pos0[i], state).unwrap();
+            assert_eq!(vrows[i], v.logits, "verify logits diverged for seq {i}");
+        }
+        for &s in &slots {
+            b.free_slot(s);
+        }
+        assert_eq!(b.arena().in_use(), 0);
+    }
+
+    #[test]
+    fn slot_without_state_is_rejected_and_slots_recycle() {
+        let b = NativeBackend::synthetic(tiny_cfg(), 5, 2, InitStyle::Random).unwrap();
+        let slot = b.alloc_slot();
+        let err = b.decode_full_batch(&[slot], &[1], &[2]).unwrap_err();
+        assert!(format!("{err}").contains("no state"), "{err}");
+        b.free_slot(slot);
+        let again = b.alloc_slot();
+        assert_eq!(slot, again, "freed slot index should be recycled");
+        b.free_slot(again);
+        // Double-free is a no-op.
+        b.free_slot(again);
+        assert_eq!(b.arena().in_use(), 0);
     }
 
     #[test]

@@ -1,0 +1,621 @@
+//! Step-driven speculative decoding for continuous batching.
+//!
+//! [`Engine::generate_spec`] runs one request to completion inside one call,
+//! which forces worker-per-request serving.  This module decomposes that
+//! monolithic loop into a resumable per-request state machine
+//! ([`SpecSession`]: prefill → draft → verify → … → done, plus the
+//! autoregressive [`ArSession`] baseline) and a [`BatchEngine`] that steps a
+//! set of sessions in lockstep over the backend's batched operations.  The
+//! serving scheduler admits new sessions between steps (continuous
+//! batching) and drains incremental token chunks after every step.
+//!
+//! Determinism contract: a session performs exactly the same backend
+//! operations, in the same order, with the same per-request RNG as the
+//! monolithic loop — and the backend's batched ops are bit-identical per
+//! sequence to the single-sequence ops — so batched greedy decoding is
+//! bit-identical to N sequential `generate_spec` runs regardless of batch
+//! composition, per-sequence early exit, unequal accept lengths, or
+//! mid-batch completion (asserted by `rust/tests/integration_batch.rs`).
+//!
+//! [`Engine::generate_spec`]: super::Engine::generate_spec
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::accept::{greedy_accept, speculative_sample_accept};
+use super::engine::{capacity, pad_prompt};
+use super::trace::{IterRecord, SpecTrace};
+use super::{GenResult, SpecConfig};
+use crate::model::{sample_from_logits, softmax, SamplingParams};
+use crate::runtime::{Backend, SeqSlot};
+use crate::util::rng::Rng;
+
+/// Decode steps an autoregressive session takes per engine step, so AR
+/// baselines keep pace with speculative sessions in a mixed batch (a spec
+/// iteration emits several tokens per step).
+const AR_BURST: usize = 8;
+
+/// Where a speculative session is in its draft → verify cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SpecPhase {
+    /// Waiting for its prefill pass.
+    Prefill,
+    /// Drafting with the quantized pass (one token per engine sub-step).
+    Draft,
+    /// Draft chain complete; waiting for the verification pass.
+    Verify,
+    /// Generation finished.
+    Done,
+}
+
+/// Resumable per-request speculative decoding state machine.
+///
+/// Mirrors `Engine::generate_spec` exactly, but yields control to the
+/// [`BatchEngine`] at every backend operation so many sessions can share
+/// each weight stream.
+pub struct SpecSession {
+    cfg: SpecConfig,
+    slot: SeqSlot,
+    slot_released: bool,
+    rng: Rng,
+    phase: SpecPhase,
+    prompt_tokens: Vec<i32>,
+    prompt_len: usize,
+    /// Requested length clamped to the KV-cache capacity.
+    gen_len: usize,
+    out: Vec<u8>,
+    /// Streaming watermark: `out[..emitted]` has been handed to the caller.
+    emitted: usize,
+    trace: SpecTrace,
+    /// Position of the carry token (first unverified position).
+    pos0: usize,
+    /// Token sampled from the target but not yet fed through the model.
+    carry: usize,
+    drafts: Vec<usize>,
+    draft_probs: Vec<Vec<f32>>,
+    budget: usize,
+    early_exit: bool,
+    /// Next token to feed the draft pass.
+    draft_tok: usize,
+    started: Instant,
+    wall: Duration,
+}
+
+impl SpecSession {
+    /// Create a session and lease its KV slot.  Validates the config the
+    /// same way `generate_spec` does.
+    pub fn new(backend: &dyn Backend, prompt: &[u8], cfg: SpecConfig) -> Result<Self> {
+        let slots = backend.slots();
+        anyhow::ensure!(
+            cfg.max_draft + 1 <= slots,
+            "max_draft {} exceeds graph slots {} - 1",
+            cfg.max_draft,
+            slots
+        );
+        anyhow::ensure!(cfg.max_draft >= 1, "max_draft must be >= 1");
+        let (prompt_tokens, prompt_len) = pad_prompt(backend, prompt);
+        let gen_len = cfg.gen_len.min(capacity(backend, prompt_len)?);
+        let rng = Rng::seed_from_u64(cfg.sampling.seed);
+        let mut s = Self {
+            cfg,
+            slot: backend.alloc_slot(),
+            slot_released: false,
+            rng,
+            phase: SpecPhase::Prefill,
+            prompt_tokens,
+            prompt_len,
+            gen_len,
+            out: Vec::new(),
+            emitted: 0,
+            trace: SpecTrace { iterations: vec![], produced: 0, prompt_len },
+            pos0: 0,
+            carry: 0,
+            drafts: Vec::new(),
+            draft_probs: Vec::new(),
+            budget: 0,
+            early_exit: false,
+            draft_tok: 0,
+            started: Instant::now(),
+            wall: Duration::ZERO,
+        };
+        if s.gen_len == 0 {
+            s.finish();
+        }
+        Ok(s)
+    }
+
+    fn finish(&mut self) {
+        self.out.truncate(self.gen_len);
+        self.trace.produced = self.out.len();
+        self.wall = self.started.elapsed();
+        self.phase = SpecPhase::Done;
+    }
+
+    /// Start the next draft → verify iteration (or finish).
+    fn begin_iteration(&mut self) {
+        if self.out.len() >= self.gen_len {
+            self.finish();
+            return;
+        }
+        self.budget = self.cfg.max_draft.min(self.gen_len - self.out.len());
+        self.drafts.clear();
+        self.draft_probs.clear();
+        self.early_exit = false;
+        self.draft_tok = self.carry;
+        self.phase = SpecPhase::Draft;
+    }
+
+    fn on_prefill(&mut self, logits: &[f32]) {
+        let (carry, _) = sample_from_logits(logits, &self.cfg.sampling, &mut self.rng);
+        self.carry = carry;
+        self.out.push(carry as u8);
+        self.pos0 = self.prompt_len;
+        self.begin_iteration();
+    }
+
+    /// The draft step this session wants next: `(token, position)`.
+    fn draft_input(&self) -> (i32, usize) {
+        (self.draft_tok as i32, self.pos0 + self.drafts.len())
+    }
+
+    fn on_draft(&mut self, logits: &[f32]) {
+        let probs = if self.cfg.sampling.is_greedy() {
+            softmax(logits)
+        } else {
+            softmax(
+                &logits
+                    .iter()
+                    .map(|&v| v / self.cfg.sampling.temperature)
+                    .collect::<Vec<_>>(),
+            )
+        };
+        let (d, _) = sample_from_logits(logits, &self.cfg.sampling, &mut self.rng);
+        let top = probs.iter().fold(0.0f32, |m, &p| m.max(p));
+        self.drafts.push(d);
+        self.draft_probs.push(probs);
+        self.draft_tok = d;
+        if self.drafts.len() == self.budget {
+            // Budget exhausted: a full-length draft is not an early exit.
+            self.phase = SpecPhase::Verify;
+        } else if top < self.cfg.gamma {
+            // §III-C: if the draft is not confident, verification will
+            // likely reject — stop drafting.
+            self.early_exit = true;
+            self.phase = SpecPhase::Verify;
+        }
+    }
+
+    /// The verification window: carry + drafts, zero-padded to `slots`.
+    fn verify_tokens(&self, slots: usize) -> Vec<i32> {
+        let mut vtokens: Vec<i32> = Vec::with_capacity(slots);
+        vtokens.push(self.carry as i32);
+        vtokens.extend(self.drafts.iter().map(|&d| d as i32));
+        while vtokens.len() < slots {
+            vtokens.push(0);
+        }
+        vtokens
+    }
+
+    fn on_verify(&mut self, ver_logits: &[f32], vocab: usize) {
+        let outcome = if self.cfg.sampling.is_greedy() {
+            greedy_accept(&self.drafts, ver_logits, vocab)
+        } else {
+            let rows: Vec<Vec<f32>> = (0..=self.drafts.len())
+                .map(|i| {
+                    softmax(
+                        &ver_logits[i * vocab..(i + 1) * vocab]
+                            .iter()
+                            .map(|&v| v / self.cfg.sampling.temperature)
+                            .collect::<Vec<_>>(),
+                    )
+                })
+                .collect();
+            speculative_sample_accept(&self.drafts, &self.draft_probs, &rows, &mut self.rng)
+        };
+        self.trace.iterations.push(IterRecord {
+            drafted: self.drafts.len() as u32,
+            accepted: outcome.accepted as u32,
+            early_exit: self.early_exit,
+        });
+        // Emit accepted drafts + the bonus/correction token.
+        for &d in &self.drafts[..outcome.accepted] {
+            self.out.push(d as u8);
+        }
+        self.out.push(outcome.next_token as u8);
+        self.pos0 += outcome.accepted + 1;
+        self.carry = outcome.next_token;
+        self.begin_iteration();
+    }
+}
+
+/// Resumable per-request autoregressive state machine (the lossless
+/// full-precision baseline, batched).
+pub struct ArSession {
+    sampling: SamplingParams,
+    slot: SeqSlot,
+    slot_released: bool,
+    rng: Rng,
+    done: bool,
+    prefilled: bool,
+    prompt_tokens: Vec<i32>,
+    prompt_len: usize,
+    gen_len: usize,
+    out: Vec<u8>,
+    emitted: usize,
+    trace: SpecTrace,
+    pos: usize,
+    tok: usize,
+    started: Instant,
+    wall: Duration,
+}
+
+impl ArSession {
+    pub fn new(
+        backend: &dyn Backend,
+        prompt: &[u8],
+        gen_len: usize,
+        sampling: SamplingParams,
+    ) -> Result<Self> {
+        let (prompt_tokens, prompt_len) = pad_prompt(backend, prompt);
+        let gen_len = gen_len.min(capacity(backend, prompt_len)?);
+        let mut s = Self {
+            sampling,
+            slot: backend.alloc_slot(),
+            slot_released: false,
+            rng: Rng::seed_from_u64(sampling.seed),
+            done: false,
+            prefilled: false,
+            prompt_tokens,
+            prompt_len,
+            gen_len,
+            out: Vec::new(),
+            emitted: 0,
+            trace: SpecTrace { iterations: vec![], produced: 0, prompt_len },
+            pos: 0,
+            tok: 0,
+            started: Instant::now(),
+            wall: Duration::ZERO,
+        };
+        if s.gen_len == 0 {
+            s.finish();
+        }
+        Ok(s)
+    }
+
+    fn finish(&mut self) {
+        self.trace.produced = self.out.len();
+        self.wall = self.started.elapsed();
+        self.done = true;
+    }
+
+    fn on_prefill(&mut self, logits: &[f32]) {
+        let (tok, _) = sample_from_logits(logits, &self.sampling, &mut self.rng);
+        self.tok = tok;
+        self.out.push(tok as u8);
+        self.pos = self.prompt_len;
+        self.prefilled = true;
+        if self.out.len() >= self.gen_len {
+            self.finish();
+        }
+    }
+
+    fn on_decode(&mut self, logits: &[f32]) {
+        let (tok, _) = sample_from_logits(logits, &self.sampling, &mut self.rng);
+        self.tok = tok;
+        self.out.push(tok as u8);
+        self.pos += 1;
+        if self.out.len() >= self.gen_len {
+            self.finish();
+        }
+    }
+}
+
+/// One in-flight generation of either mode, as scheduled by the
+/// [`BatchEngine`].
+pub enum GenSession {
+    Spec(SpecSession),
+    Ar(ArSession),
+}
+
+impl GenSession {
+    pub fn slot(&self) -> SeqSlot {
+        match self {
+            GenSession::Spec(s) => s.slot,
+            GenSession::Ar(s) => s.slot,
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        match self {
+            GenSession::Spec(s) => s.phase == SpecPhase::Done,
+            GenSession::Ar(s) => s.done,
+        }
+    }
+
+    /// Tokens produced since the last call (for streaming responses).
+    /// Never returns bytes past the clamped generation length.
+    pub fn take_new_tokens(&mut self) -> Vec<u8> {
+        let (out, emitted, gen_len) = match self {
+            GenSession::Spec(s) => (&s.out, &mut s.emitted, s.gen_len),
+            GenSession::Ar(s) => (&s.out, &mut s.emitted, s.gen_len),
+        };
+        let hi = out.len().min(gen_len);
+        let chunk = out[*emitted..hi].to_vec();
+        *emitted = hi;
+        chunk
+    }
+
+    /// Release the session's KV slot (idempotent; called by the engine on
+    /// completion and by the scheduler on error paths).
+    pub fn release(&mut self, backend: &dyn Backend) {
+        let (slot, released) = match self {
+            GenSession::Spec(s) => (s.slot, &mut s.slot_released),
+            GenSession::Ar(s) => (s.slot, &mut s.slot_released),
+        };
+        if !*released {
+            backend.free_slot(slot);
+            *released = true;
+        }
+    }
+
+    /// The finished generation.  Call only when [`GenSession::is_done`].
+    pub fn into_result(self) -> GenResult {
+        match self {
+            GenSession::Spec(s) => GenResult { tokens: s.out, trace: s.trace, wall: s.wall },
+            GenSession::Ar(s) => GenResult { tokens: s.out, trace: s.trace, wall: s.wall },
+        }
+    }
+}
+
+/// Steps a set of [`GenSession`]s in lockstep over a backend's batched
+/// operations.  One [`BatchEngine::step`] advances every active session by
+/// one draft → verify iteration (speculative) or up to [`AR_BURST`] decode
+/// steps (autoregressive); the caller admits/retires sessions between
+/// steps.
+pub struct BatchEngine<'m> {
+    backend: &'m dyn Backend,
+}
+
+impl<'m> BatchEngine<'m> {
+    pub fn new(backend: &'m dyn Backend) -> Self {
+        Self { backend }
+    }
+
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend
+    }
+
+    /// Advance every non-done session by one engine step.
+    ///
+    /// Phases inside a step: (1) batched prefill for newly admitted
+    /// sessions, (2) batched draft decode repeated until every speculative
+    /// session has closed its chain (per-sequence early exit drops
+    /// finished drafters out of later sub-steps), (3) one batched
+    /// verification pass, (4) a burst of batched full-precision decodes
+    /// for autoregressive sessions.  Completed sessions release their KV
+    /// slots; the error of any batched op aborts the whole step.
+    pub fn step(&self, sessions: &mut [&mut GenSession]) -> Result<()> {
+        let backend = self.backend;
+        let slots_per_state = backend.slots();
+        let vocab = backend.vocab();
+
+        // ---- phase 1: prefill newly admitted sessions ----
+        let idx: Vec<usize> = (0..sessions.len())
+            .filter(|&i| match &*sessions[i] {
+                GenSession::Spec(s) => s.phase == SpecPhase::Prefill,
+                GenSession::Ar(s) => !s.done && !s.prefilled,
+            })
+            .collect();
+        if !idx.is_empty() {
+            let slots: Vec<SeqSlot> = idx.iter().map(|&i| sessions[i].slot()).collect();
+            let prompts: Vec<Vec<i32>> = idx
+                .iter()
+                .map(|&i| match &*sessions[i] {
+                    GenSession::Spec(s) => s.prompt_tokens.clone(),
+                    GenSession::Ar(s) => s.prompt_tokens.clone(),
+                })
+                .collect();
+            let lengths: Vec<usize> = idx
+                .iter()
+                .map(|&i| match &*sessions[i] {
+                    GenSession::Spec(s) => s.prompt_len,
+                    GenSession::Ar(s) => s.prompt_len,
+                })
+                .collect();
+            let logits = backend.prefill_batch(&slots, &prompts, &lengths)?;
+            for (&i, row) in idx.iter().zip(&logits) {
+                match &mut *sessions[i] {
+                    GenSession::Spec(s) => s.on_prefill(row),
+                    GenSession::Ar(s) => s.on_prefill(row),
+                }
+            }
+        }
+
+        // ---- phase 2: draft sub-steps until every chain is closed ----
+        loop {
+            let drafting: Vec<usize> = (0..sessions.len())
+                .filter(|&i| {
+                    matches!(&*sessions[i], GenSession::Spec(s) if s.phase == SpecPhase::Draft)
+                })
+                .collect();
+            if drafting.is_empty() {
+                break;
+            }
+            let slots: Vec<SeqSlot> = drafting.iter().map(|&i| sessions[i].slot()).collect();
+            let mut tokens = Vec::with_capacity(drafting.len());
+            let mut pos = Vec::with_capacity(drafting.len());
+            for &i in &drafting {
+                if let GenSession::Spec(s) = &*sessions[i] {
+                    let (t, p) = s.draft_input();
+                    tokens.push(t);
+                    pos.push(p);
+                }
+            }
+            let rows = backend.decode_draft_batch(&slots, &tokens, &pos)?;
+            for (&i, row) in drafting.iter().zip(&rows) {
+                if let GenSession::Spec(s) = &mut *sessions[i] {
+                    s.on_draft(row);
+                }
+            }
+        }
+
+        // ---- phase 3: one batched verification pass ----
+        let verifying: Vec<usize> = (0..sessions.len())
+            .filter(|&i| {
+                matches!(&*sessions[i], GenSession::Spec(s) if s.phase == SpecPhase::Verify)
+            })
+            .collect();
+        if !verifying.is_empty() {
+            let slots: Vec<SeqSlot> = verifying.iter().map(|&i| sessions[i].slot()).collect();
+            let mut tokens = Vec::with_capacity(verifying.len());
+            let mut pos0 = Vec::with_capacity(verifying.len());
+            for &i in &verifying {
+                if let GenSession::Spec(s) = &*sessions[i] {
+                    tokens.push(s.verify_tokens(slots_per_state));
+                    pos0.push(s.pos0);
+                }
+            }
+            let rows = backend.verify_batch(&slots, &tokens, &pos0)?;
+            for (&i, row) in verifying.iter().zip(&rows) {
+                if let GenSession::Spec(s) = &mut *sessions[i] {
+                    s.on_verify(row, vocab);
+                }
+            }
+        }
+
+        // ---- phase 4: autoregressive decode burst ----
+        for _ in 0..AR_BURST {
+            let decoding: Vec<usize> = (0..sessions.len())
+                .filter(|&i| matches!(&*sessions[i], GenSession::Ar(s) if !s.done && s.prefilled))
+                .collect();
+            if decoding.is_empty() {
+                break;
+            }
+            let slots: Vec<SeqSlot> = decoding.iter().map(|&i| sessions[i].slot()).collect();
+            let mut tokens = Vec::with_capacity(decoding.len());
+            let mut pos = Vec::with_capacity(decoding.len());
+            for &i in &decoding {
+                if let GenSession::Ar(s) = &*sessions[i] {
+                    tokens.push(s.tok as i32);
+                    pos.push(s.pos);
+                }
+            }
+            let rows = backend.decode_full_batch(&slots, &tokens, &pos)?;
+            for (&i, row) in decoding.iter().zip(&rows) {
+                if let GenSession::Ar(s) = &mut *sessions[i] {
+                    s.on_decode(row);
+                }
+            }
+        }
+
+        // ---- retire: release slots of completed sessions ----
+        for s in sessions.iter_mut() {
+            if s.is_done() {
+                s.release(backend);
+            }
+        }
+        Ok(())
+    }
+
+    /// Convenience driver: run a set of sessions to completion and return
+    /// their results in order (tests, benches, offline batch jobs).
+    pub fn run(&self, mut sessions: Vec<GenSession>) -> Result<Vec<GenResult>> {
+        loop {
+            let mut refs: Vec<&mut GenSession> = sessions.iter_mut().collect();
+            if refs.iter().all(|s| s.is_done()) {
+                break;
+            }
+            self.step(&mut refs)?;
+        }
+        Ok(sessions.into_iter().map(|s| s.into_result()).collect())
+    }
+
+    /// Convenience: batched speculative decoding of many prompts.
+    pub fn run_spec(&self, requests: &[(Vec<u8>, SpecConfig)]) -> Result<Vec<GenResult>> {
+        let sessions = requests
+            .iter()
+            .map(|(prompt, cfg)| {
+                SpecSession::new(self.backend, prompt, *cfg).map(GenSession::Spec)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.run(sessions)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::runtime::{InitStyle, NativeBackend};
+    use crate::specdec::Engine;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "batch-tiny".into(),
+            paper_analog: "none".into(),
+            n_layers: 1,
+            d_model: 64,
+            d_ff: 96,
+            n_heads: 2,
+            head_dim: 32,
+            // Full byte vocab: test prompts are ASCII strings.
+            vocab: 256,
+            cache_len: 128,
+            prefill_len: 32,
+            param_count: 0,
+        }
+    }
+
+    #[test]
+    fn single_session_matches_generate_spec() {
+        let model = NativeBackend::synthetic(tiny_cfg(), 6, 13, InitStyle::Confident).unwrap();
+        let engine = Engine::new(&model);
+        let cfg = SpecConfig { gen_len: 24, max_draft: 4, ..Default::default() };
+        let seq = engine.generate_spec(b"hello there", &cfg).unwrap();
+        let batch = BatchEngine::new(&model);
+        let results = batch.run_spec(&[(b"hello there".to_vec(), cfg)]).unwrap();
+        assert_eq!(results[0].tokens, seq.tokens);
+        assert_eq!(results[0].trace.iterations, seq.trace.iterations);
+        assert_eq!(model.arena().in_use(), 0, "slots must be released");
+    }
+
+    #[test]
+    fn zero_length_session_is_immediately_done() {
+        let model = NativeBackend::synthetic(tiny_cfg(), 6, 13, InitStyle::Random).unwrap();
+        let cfg = SpecConfig { gen_len: 0, max_draft: 4, ..Default::default() };
+        let s = SpecSession::new(&model, b"x", cfg).unwrap();
+        let mut g = GenSession::Spec(s);
+        assert!(g.is_done());
+        assert!(g.take_new_tokens().is_empty());
+        g.release(&model);
+        assert_eq!(model.arena().in_use(), 0);
+        assert!(g.into_result().tokens.is_empty());
+    }
+
+    #[test]
+    fn streaming_chunks_concatenate_to_the_full_output() {
+        let model = NativeBackend::synthetic(tiny_cfg(), 6, 13, InitStyle::Confident).unwrap();
+        let cfg = SpecConfig { gen_len: 20, max_draft: 4, ..Default::default() };
+        let engine = BatchEngine::new(&model);
+        let mut sessions =
+            vec![GenSession::Spec(SpecSession::new(&model, b"stream me", cfg).unwrap())];
+        let mut streamed = Vec::new();
+        let mut chunks = 0;
+        while !sessions[0].is_done() {
+            {
+                let mut refs: Vec<&mut GenSession> = sessions.iter_mut().collect();
+                engine.step(&mut refs).unwrap();
+            }
+            let c = sessions[0].take_new_tokens();
+            if !c.is_empty() {
+                chunks += 1;
+            }
+            streamed.extend(c);
+        }
+        assert!(chunks >= 2, "expected incremental chunks, got {chunks}");
+        let result = sessions.pop().unwrap().into_result();
+        assert_eq!(streamed, result.tokens);
+        assert_eq!(result.tokens.len(), 20);
+    }
+}

@@ -41,6 +41,38 @@ pub struct GenResult {
     pub wall: Duration,
 }
 
+/// Clip `prompt` to the backend's prefill window and right-pad; returns the
+/// padded token ids plus the real (masked) length.  Shared by the
+/// single-sequence [`Engine`] and the batched session state machines.
+pub(crate) fn pad_prompt(backend: &dyn Backend, prompt: &[u8]) -> (Vec<i32>, usize) {
+    let p = backend.prefill_len();
+    let len = prompt.len().min(p);
+    let mut toks: Vec<i32> = prompt[prompt.len() - len..].iter().map(|&b| b as i32).collect();
+    while toks.len() < p {
+        toks.push(b' ' as i32);
+    }
+    // Left-pad semantics are handled by the caller (prompts are already
+    // fixed length); here we right-pad and mask by `len`.
+    (toks, len)
+}
+
+/// Maximum generable tokens given the KV cache capacity.
+///
+/// Errors when the cache cannot even hold one verification window past
+/// the prompt (`cache_len < prompt_len + slots + 1`) instead of
+/// underflowing.
+pub(crate) fn capacity(backend: &dyn Backend, prompt_len: usize) -> Result<usize> {
+    let need = prompt_len + backend.slots() + 1;
+    backend.cache_len().checked_sub(need).ok_or_else(|| {
+        anyhow::anyhow!(
+            "KV cache too small: cache_len {} < prompt {} + slots {} + 1",
+            backend.cache_len(),
+            prompt_len,
+            backend.slots()
+        )
+    })
+}
+
 /// The engine borrows a loaded backend; it owns no state between calls.
 pub struct Engine<'m> {
     backend: &'m dyn Backend,
@@ -56,32 +88,11 @@ impl<'m> Engine<'m> {
     }
 
     fn pad_prompt(&self, prompt: &[u8]) -> (Vec<i32>, usize) {
-        let p = self.backend.prefill_len();
-        let len = prompt.len().min(p);
-        let mut toks: Vec<i32> = prompt[prompt.len() - len..].iter().map(|&b| b as i32).collect();
-        while toks.len() < p {
-            toks.push(b' ' as i32);
-        }
-        // Left-pad semantics are handled by the caller (prompts are already
-        // fixed length); here we right-pad and mask by `len`.
-        (toks, len)
+        pad_prompt(self.backend, prompt)
     }
 
-    /// Maximum generable tokens given the KV cache capacity.
-    ///
-    /// Errors when the cache cannot even hold one verification window past
-    /// the prompt (`cache_len < prompt_len + slots + 1`) instead of
-    /// underflowing.
     fn capacity(&self, prompt_len: usize) -> Result<usize> {
-        let need = prompt_len + self.backend.slots() + 1;
-        self.backend.cache_len().checked_sub(need).ok_or_else(|| {
-            anyhow::anyhow!(
-                "KV cache too small: cache_len {} < prompt {} + slots {} + 1",
-                self.backend.cache_len(),
-                prompt_len,
-                self.backend.slots()
-            )
-        })
+        capacity(self.backend, prompt_len)
     }
 
     /// Plain autoregressive decoding with the full-precision pass — the

@@ -5,8 +5,12 @@
 //! passes share a single KV cache (state buffer), with verification
 //! overwriting the draft's quantized-pass KV — zero memory overhead.
 //!
-//! * [`engine`] — the generate loop: draft (with §III-C early exit), verify,
-//!   accept; plus the plain autoregressive baseline.
+//! * [`engine`] — the single-sequence generate loop: draft (with §III-C
+//!   early exit), verify, accept; plus the plain autoregressive baseline.
+//! * [`batch`] — the same loop decomposed into resumable per-request state
+//!   machines ([`SpecSession`] / [`ArSession`]) stepped in lockstep by
+//!   [`BatchEngine`] over the backend's batched ops — the continuous
+//!   batching substrate of the serving scheduler.
 //! * [`accept`] — acceptance rules: greedy longest-prefix and Leviathan
 //!   speculative sampling (lossless for temperature > 0).
 //! * [`trace`] — per-iteration records consumed by the accelerator
@@ -15,11 +19,13 @@
 //!   (speedup), validated against simulation in experiment E10.
 
 mod accept;
+mod batch;
 mod engine;
 mod theory;
 mod trace;
 
 pub use accept::{greedy_accept, speculative_sample_accept, AcceptOutcome};
+pub use batch::{ArSession, BatchEngine, GenSession, SpecSession};
 pub use engine::{Engine, GenResult, SpecConfig};
 pub use theory::{expected_accept_length, theoretical_speedup};
 pub use trace::{IterRecord, SpecTrace};

@@ -12,12 +12,24 @@ use std::time::{Duration, Instant};
 /// Target minimum sampling time per benchmark.
 const TARGET: Duration = Duration::from_millis(400);
 const WARMUP: Duration = Duration::from_millis(100);
+/// Smoke mode (`-- --smoke`, used in CI): just enough sampling to catch
+/// gross regressions and prove the bench target still runs.
+const SMOKE_TARGET: Duration = Duration::from_millis(40);
+const SMOKE_WARMUP: Duration = Duration::from_millis(5);
 const MAX_ITERS: u64 = 1_000_000;
+
+/// Whether the process was invoked with a `--smoke` argument
+/// (`cargo bench --bench bench_engine -- --smoke`).
+pub fn smoke_requested() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
 
 /// One benchmark group (named per paper table/figure).
 pub struct Bench {
     group: String,
     results: Vec<(String, Stats)>,
+    target: Duration,
+    warmup: Duration,
 }
 
 /// Timing statistics over collected samples.
@@ -31,9 +43,28 @@ pub struct Stats {
 
 impl Bench {
     pub fn new(group: impl Into<String>) -> Self {
+        Self::with_durations(group, TARGET, WARMUP)
+    }
+
+    /// A group honoring [`smoke_requested`]: full sampling normally, a
+    /// fast low-confidence pass under `-- --smoke` (CI regression guard).
+    pub fn auto(group: impl Into<String>) -> Self {
+        if smoke_requested() {
+            Self::with_durations(group, SMOKE_TARGET, SMOKE_WARMUP)
+        } else {
+            Self::new(group)
+        }
+    }
+
+    /// A group with explicit sampling durations.
+    pub fn with_durations(
+        group: impl Into<String>,
+        target: Duration,
+        warmup: Duration,
+    ) -> Self {
         let group = group.into();
         eprintln!("== bench group {group} ==");
-        Self { group, results: Vec::new() }
+        Self { group, results: Vec::new(), target, warmup }
     }
 
     /// Time `f`, adaptively choosing iteration count.
@@ -41,19 +72,19 @@ impl Bench {
         let name = name.into();
         // Warmup.
         let warm_start = Instant::now();
-        while warm_start.elapsed() < WARMUP {
+        while warm_start.elapsed() < self.warmup {
             f();
         }
         // Estimate per-iter cost.
         let t0 = Instant::now();
         f();
         let est = t0.elapsed().max(Duration::from_nanos(50));
-        let chunk = ((TARGET.as_nanos() / 20 / est.as_nanos()).max(1) as u64).min(MAX_ITERS);
+        let chunk = ((self.target.as_nanos() / 20 / est.as_nanos()).max(1) as u64).min(MAX_ITERS);
 
         let mut samples: Vec<f64> = Vec::new();
         let mut total_iters = 0u64;
         let start = Instant::now();
-        while start.elapsed() < TARGET && total_iters < MAX_ITERS {
+        while start.elapsed() < self.target && total_iters < MAX_ITERS {
             let t = Instant::now();
             for _ in 0..chunk {
                 f();
