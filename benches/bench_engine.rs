@@ -47,6 +47,46 @@ fn main() {
         state = Some(out.state);
     });
 
+    // Weight-traffic accounting: the paper's quarter-to-all claim as a
+    // measured, regression-checked number.  Drain whatever the timing
+    // loops above accumulated, then meter a clean run of each pass.
+    model.drain_traffic();
+    let reps = 16usize;
+    let mut state = Some(model.prefill(&toks, plen).expect("prefill").state);
+    model.drain_traffic();
+    for i in 0..reps {
+        let out = model.decode_draft(65, plen + i, state.take().unwrap()).expect("draft");
+        state = Some(out.state);
+    }
+    let draft_traffic = model.drain_traffic();
+    let mut state = Some(model.prefill(&toks, plen).expect("prefill").state);
+    model.drain_traffic();
+    for i in 0..reps {
+        let out = model.decode_full(65, plen + i, state.take().unwrap()).expect("full");
+        state = Some(out.state);
+    }
+    let full_traffic = model.drain_traffic();
+    let draft_bpt = draft_traffic.draft_bytes_per_token();
+    let full_bpt = full_traffic.full_bytes_per_token();
+    if full_bpt > 0.0 {
+        let ratio = draft_bpt / full_bpt;
+        b.metric("bytes_per_token_draft", draft_bpt, "B/tok");
+        b.metric("bytes_per_token_full", full_bpt, "B/tok");
+        b.metric("draft_traffic_ratio", ratio, "x");
+        b.metrics_json(&[
+            ("bytes_per_token_draft", draft_bpt),
+            ("bytes_per_token_full", full_bpt),
+            ("draft_traffic_ratio", ratio),
+        ]);
+        // CI regression guard: the draft pass must stream at most 0.35x
+        // the full pass's weight bytes (the quarter claim plus scale/norm
+        // overhead).  A violated bound fails the bench target.
+        assert!(
+            ratio <= 0.35,
+            "draft/full weight-traffic ratio {ratio:.4} exceeds the 0.35 bound"
+        );
+    }
+
     // Batched decode: the continuous-batching lever.  Each step streams
     // every weight once for the whole batch, so tokens/sec should scale
     // strongly super-linearly vs sequential GEMVs on the memory-bound

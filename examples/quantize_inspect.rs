@@ -7,7 +7,7 @@
 //! Run: cargo run --release --example quantize_inspect [-- <model> <tensor>]
 
 use anyhow::Result;
-use speq::bsfp::{exponent_histogram, quantize_tensor, REMAP_FLAG};
+use speq::bsfp::{exponent_histogram, f32_to_f16_bits, quantize_tensor, REMAP_FLAG};
 use speq::runtime::{load_backend, Backend, ModelSource};
 
 fn main() -> Result<()> {
@@ -71,9 +71,11 @@ fn main() -> Result<()> {
         remap_rate_expected
     );
 
-    // Lossless property.
+    // Lossless property.  (The canonical FP16 bits of a packed linear live
+    // in the bit-plane store itself, so re-derive the expected bits from
+    // the f32 expansion — it is exactly the FP16 widening of those bits.)
     let rec = qt.reconstruct_fp16_bits();
-    let orig: Vec<u16> = model.weights().bits[tensor].clone();
+    let orig: Vec<u16> = w.iter().map(|&v| f32_to_f16_bits(v)).collect();
     assert_eq!(rec, orig, "lossless reconstruction failed");
     println!("lossless: W_q ∥ W_r reconstructs the FP16 weights bit-exactly");
 

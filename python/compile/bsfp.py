@@ -203,12 +203,18 @@ def bits_to_f32(bits: np.ndarray) -> np.ndarray:
     return _require_u16(bits).view(np.float16).astype(np.float32)
 
 
+# FP16 round-to-nearest-even midpoint below 2.0: any f32 at or above it
+# rounds UP to FP16 2.0 (exponent 16), outside the remap's domain — so the
+# pre-scale must trigger here, not at 2.0 (mirrors rust/src/bsfp/codec.rs).
+_FP16_TWO_MIDPOINT = 1.99951171875
+
+
 def algorithm1_prescale(w: np.ndarray) -> tuple[np.ndarray, float]:
     """Algorithm 1: rescale so max|W| < 2.0 (exponent <= 15)."""
     w = np.asarray(w, dtype=np.float32)
     wmax = float(np.max(np.abs(w))) if w.size else 0.0
     scale = 1.0
-    if wmax > 2.0:
+    if wmax >= _FP16_TWO_MIDPOINT:
         scale = 1.999 / wmax
         w = w * scale
     return w, scale

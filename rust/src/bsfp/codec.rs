@@ -1,8 +1,20 @@
 //! Tensor-level BSFP quantization: Algorithm 1 + encode + Eq. 4 scales.
 
-use super::fp16::{f16_bits_to_f32, f32_to_f16_bits};
+use super::fp16::{f16_bits_to_f32, f32_to_f16_bits, split_fields};
 use super::pack::pack_nibbles;
+use super::planes::PlanePair;
 use super::remap::{decode_full_bits, draft_value, encode_bits, BsfpCode, GROUP_SIZE};
+
+/// Whether every value is exactly FP16-representable with exponent in
+/// BSFP's domain (`exp <= 15`, i.e. `|v| < 2.0`) — the condition under
+/// which the bit-plane store reproduces the tensor losslessly for the
+/// full pass with no Algorithm-1 pre-scale and no dense copy.
+pub fn fp16_exact_in_domain(w: &[f32]) -> bool {
+    w.iter().all(|&v| {
+        let bits = f32_to_f16_bits(v);
+        split_fields(bits).exp <= 15 && f16_bits_to_f32(bits).to_bits() == v.to_bits()
+    })
+}
 
 /// A BSFP-quantized linear weight of shape `(k, n)` (in, out), row-major.
 #[derive(Debug, Clone)]
@@ -13,7 +25,8 @@ pub struct QuantizedTensor {
     pub w_r: Vec<u16>,
     /// Eq. 4 group scales, row-major `(k / GROUP_SIZE, n)`.
     pub scales: Vec<f32>,
-    /// Algorithm-1 per-tensor pre-scale (1.0 when `max|W| <= 2.0`).
+    /// Algorithm-1 per-tensor pre-scale (1.0 when `max|W|` stays below
+    /// the FP16 rounding midpoint `1.99951171875`).
     pub tensor_scale: f32,
     pub k: usize,
     pub n: usize,
@@ -23,9 +36,17 @@ pub struct QuantizedTensor {
 /// Returns `(scaled values, scale)`; multiply model *outputs* by `1/scale`
 /// (or fold into the next op) to undo — a per-tensor post-scaling with
 /// negligible overhead, as in the paper.
+///
+/// The threshold is the FP16 round-to-nearest-even midpoint below 2.0
+/// (`1.99951171875`): any f32 at or above it rounds *up* to FP16 `2.0`
+/// (exponent 16), which the remapped encoding cannot represent — so those
+/// tensors must be pre-scaled too, not just `max|W| > 2.0`.
 pub fn algorithm1_prescale(w: &[f32]) -> (Vec<f32>, f32) {
+    /// Midpoint between the largest FP16 value below 2.0 (`1.9990234375`)
+    /// and 2.0; RNE resolves the tie toward 2.0's even mantissa.
+    const FP16_TWO_MIDPOINT: f32 = 1.999_511_718_75;
     let wmax = w.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-    if wmax > 2.0 {
+    if wmax >= FP16_TWO_MIDPOINT {
         let scale = 1.999 / wmax;
         (w.iter().map(|&v| v * scale).collect(), scale)
     } else {
@@ -108,6 +129,12 @@ impl QuantizedTensor {
     /// Nibble-packed `W_q` for the draft HLO graph: `(k/2, n)` bytes.
     pub fn packed_wq(&self) -> Vec<u8> {
         pack_nibbles(&self.w_q, self.k, self.n)
+    }
+
+    /// Split into the bit-plane pair the packed weight store keeps
+    /// resident (prefix = packed `W_q`, residual = packed `W_r`).
+    pub fn planes(&self) -> PlanePair {
+        PlanePair::from_quantized(self)
     }
 
     /// Materialize the draft weights (scales applied) as f32, row-major.
@@ -194,6 +221,21 @@ mod tests {
     }
 
     #[test]
+    fn near_two_values_are_prescaled_not_rounded_out_of_domain() {
+        // 1.9996 < 2.0 but rounds UP to FP16 2.0 (exponent 16): Algorithm 1
+        // must kick in or encode_bits would be handed an invalid exponent.
+        let mut w = rand_weights(128, 2, 7, 0.1);
+        w[3] = 1.9996;
+        let qt = quantize_tensor(&w, 128, 2);
+        assert!(qt.tensor_scale < 1.0, "midpoint window must trigger the pre-scale");
+        // And values safely below the midpoint do not.
+        let mut w2 = rand_weights(128, 2, 8, 0.1);
+        w2[3] = 1.9990234375; // largest FP16 below 2.0, exactly
+        let qt2 = quantize_tensor(&w2, 128, 2);
+        assert_eq!(qt2.tensor_scale, 1.0);
+    }
+
+    #[test]
     fn eq4_scale_minimizes_group_mse() {
         // Perturbing the Eq.4 scale in either direction cannot reduce MSE.
         let w = rand_weights(128, 1, 3, 0.15);
@@ -211,6 +253,20 @@ mod tests {
         let s0 = qt.scales[0];
         assert!(mse(s0) <= mse(s0 * 1.02) + 1e-12);
         assert!(mse(s0) <= mse(s0 * 0.98) + 1e-12);
+    }
+
+    #[test]
+    fn fp16_exactness_classifier() {
+        // FP16-representable in-domain values pass (incl. a subnormal).
+        let tiny = f16_bits_to_f32(0x0001);
+        assert!(fp16_exact_in_domain(&[0.5, -0.25, 1.9990234, 0.0, -0.0, tiny]));
+        // Out-of-domain magnitude (exp >= 16).
+        assert!(!fp16_exact_in_domain(&[0.5, 2.5]));
+        // Not exactly representable in FP16.
+        assert!(!fp16_exact_in_domain(&[0.1]));
+        // Non-finite values.
+        assert!(!fp16_exact_in_domain(&[f32::INFINITY]));
+        assert!(!fp16_exact_in_domain(&[f32::NAN]));
     }
 
     #[test]

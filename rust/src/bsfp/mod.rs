@@ -16,24 +16,33 @@
 //! `W_q ∥ W_r` is exactly 16 bits (zero storage overhead) and reconstructs
 //! the original FP16 value losslessly through the Fig. 5(b) decoder.  `W_q`
 //! alone, with per-128-group Eq. 4 scales, is the 4-bit draft model.
+//!
+//! [`PlanePair`] materializes that split as the resident layout of the native
+//! backend's packed weight store: a nibble-packed *prefix plane* (`W_q`,
+//! the quarter-traffic draft stream) and a 12-bit-packed *residual plane*
+//! (`W_r`, additionally streamed by the full/verify pass), decoded on the
+//! fly by the `runtime::kernels` GEMM kernels.
 
 mod bf16;
 mod codec;
 mod decoder;
 mod fp16;
 mod pack;
+mod planes;
 mod remap;
 
 pub use bf16::{bf16_to_f32, bf16_to_speq_fp16, convert_bf16_tensor, f32_to_bf16, speq_fp16_to_bf16};
 pub use codec::{
-    algorithm1_prescale, encode_tensor, eq4_scales, quantize_tensor, QuantizedTensor,
+    algorithm1_prescale, encode_tensor, eq4_scales, fp16_exact_in_domain, quantize_tensor,
+    QuantizedTensor,
 };
 pub use decoder::{decode_draft_gate, decode_full_gate, DecoderUnit};
 pub use fp16::{
     exponent_histogram, f16_bits_to_f32, f32_to_f16_bits, split_fields, Fp16Fields,
 };
 pub use pack::{pack_nibbles, unpack_nibbles};
+pub use planes::{pack_residuals, unpack_residuals, PlanePair};
 pub use remap::{
-    decode_draft_exp, decode_full_bits, encode_bits, BsfpCode, CODE_TO_QEXP, FP16_BIAS,
-    GROUP_SIZE, REMAP_CODE, REMAP_FLAG,
+    decode_draft_exp, decode_full_bits, draft_value, encode_bits, try_encode_bits, BsfpCode,
+    CODE_TO_QEXP, FP16_BIAS, GROUP_SIZE, REMAP_CODE, REMAP_FLAG,
 };

@@ -1,0 +1,196 @@
+//! Bit-plane split of a BSFP-quantized tensor — the packed weight store.
+//!
+//! A quantized linear `(k, n)` is kept as two tightly packed planes that
+//! together hold exactly the 16 bits of every FP16 weight (zero storage
+//! overhead, matching the paper's `W_q ∥ W_r` layout):
+//!
+//! * **prefix plane** — the 4-bit `W_q` codes (sign + remapped E3M0
+//!   exponent), nibble-packed along the in-dimension: `(k/2, n)` bytes.
+//!   The draft pass streams *only* this plane (plus the Eq. 4 group
+//!   scales) — a quarter of the full pass's weight traffic.
+//! * **residual plane** — the 12-bit `W_r` remainders (flag, `e0`,
+//!   mantissa), packed two-per-three-bytes along the in-dimension:
+//!   `(k/2, n) * 3` bytes.  The full/verify pass streams prefix +
+//!   residual and reconstructs the original FP16 bits losslessly through
+//!   the Fig. 5(b) decoder.
+//!
+//! Both planes pair rows `2p` and `2p+1` at the same column, mirroring the
+//! nibble layout the Pallas `qmatmul` kernel expects, so the on-the-fly
+//! decode kernels (`runtime::kernels`) walk them with unit stride.
+
+use super::codec::QuantizedTensor;
+use super::fp16::f16_bits_to_f32;
+use super::pack::{pack_nibbles, unpack_nibbles};
+use super::remap::{decode_full_bits, BsfpCode};
+
+/// Pack a `(k, n)` row-major `W_r` matrix (12 significant bits per entry)
+/// into `(k/2, n)` 3-byte little-endian pairs: rows `2p` (low 12 bits) and
+/// `2p+1` (high 12 bits) share the 3 bytes at `3 * (p*n + j)`.  `k` must
+/// be even.
+pub fn pack_residuals(w_r: &[u16], k: usize, n: usize) -> Vec<u8> {
+    assert_eq!(w_r.len(), k * n, "w_r length mismatch");
+    assert_eq!(k % 2, 0, "in-dim must be even to pair-pack residuals");
+    let mut out = vec![0u8; k / 2 * n * 3];
+    for p in 0..k / 2 {
+        let lo_row = &w_r[(2 * p) * n..(2 * p + 1) * n];
+        let hi_row = &w_r[(2 * p + 1) * n..(2 * p + 2) * n];
+        for j in 0..n {
+            let r0 = lo_row[j] & 0xfff;
+            let r1 = hi_row[j] & 0xfff;
+            let base = 3 * (p * n + j);
+            out[base] = (r0 & 0xff) as u8;
+            out[base + 1] = ((r0 >> 8) as u8 & 0xf) | (((r1 & 0xf) as u8) << 4);
+            out[base + 2] = (r1 >> 4) as u8;
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_residuals`].
+pub fn unpack_residuals(packed: &[u8], k: usize, n: usize) -> Vec<u16> {
+    assert_eq!(packed.len(), k / 2 * n * 3, "packed residual length mismatch");
+    let mut out = vec![0u16; k * n];
+    for p in 0..k / 2 {
+        for j in 0..n {
+            let base = 3 * (p * n + j);
+            let (b0, b1, b2) = (packed[base] as u16, packed[base + 1] as u16, packed[base + 2] as u16);
+            out[(2 * p) * n + j] = b0 | ((b1 & 0xf) << 8);
+            out[(2 * p + 1) * n + j] = (b1 >> 4) | (b2 << 4);
+        }
+    }
+    out
+}
+
+/// The two bit planes of one quantized linear, row-major `(k, n)`.
+///
+/// Total size is `k * n * 2` bytes — exactly the FP16 footprint — of which
+/// the draft pass touches the `k * n / 2`-byte prefix plane only.
+#[derive(Debug, Clone)]
+pub struct PlanePair {
+    /// Nibble-packed 4-bit `W_q` codes, `(k/2, n)` bytes.
+    pub prefix: Vec<u8>,
+    /// 12-bit `W_r` remainders packed 2-per-3-bytes, `(k/2, n) * 3` bytes.
+    pub residual: Vec<u8>,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl PlanePair {
+    /// Split a quantized tensor into its planes.
+    pub fn from_quantized(qt: &QuantizedTensor) -> Self {
+        Self {
+            prefix: pack_nibbles(&qt.w_q, qt.k, qt.n),
+            residual: pack_residuals(&qt.w_r, qt.k, qt.n),
+            k: qt.k,
+            n: qt.n,
+        }
+    }
+
+    /// Bytes the draft pass streams (prefix plane only).
+    pub fn prefix_bytes(&self) -> usize {
+        self.prefix.len()
+    }
+
+    /// Bytes the full/verify pass streams (prefix + residual planes).
+    pub fn full_bytes(&self) -> usize {
+        self.prefix.len() + self.residual.len()
+    }
+
+    /// Decode the row pair `(2p, 2p+1)` of the full-precision view into
+    /// `lo`/`hi` (each of length `n`) — the hot-loop primitive of the
+    /// cache-blocked full GEMM kernel.
+    #[inline]
+    pub fn decode_row_pair_full(&self, p: usize, lo: &mut [f32], hi: &mut [f32]) {
+        let n = self.n;
+        debug_assert!(lo.len() == n && hi.len() == n);
+        let prow = &self.prefix[p * n..(p + 1) * n];
+        let rrow = &self.residual[3 * p * n..3 * (p + 1) * n];
+        for j in 0..n {
+            let byte = prow[j];
+            let base = 3 * j;
+            let (b0, b1, b2) = (rrow[base] as u16, rrow[base + 1] as u16, rrow[base + 2] as u16);
+            let c0 = BsfpCode { w_q: byte & 0xf, w_r: b0 | ((b1 & 0xf) << 8) };
+            let c1 = BsfpCode { w_q: byte >> 4, w_r: (b1 >> 4) | (b2 << 4) };
+            lo[j] = f16_bits_to_f32(decode_full_bits(c0));
+            hi[j] = f16_bits_to_f32(decode_full_bits(c1));
+        }
+    }
+
+    /// The unpacked 4-bit codes, row-major `(k, n)` (diagnostics/tests).
+    pub fn codes(&self) -> Vec<u8> {
+        unpack_nibbles(&self.prefix, self.k, self.n)
+    }
+
+    /// The unpacked 12-bit remainders, row-major `(k, n)` (diagnostics/tests).
+    pub fn residuals(&self) -> Vec<u16> {
+        unpack_residuals(&self.residual, self.k, self.n)
+    }
+
+    /// Decode the entire full-precision view to f32 (diagnostics/tests —
+    /// the kernels decode blockwise instead of materializing this).
+    pub fn decode_full_f32(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.k * self.n];
+        let mut lo = vec![0.0f32; self.n];
+        let mut hi = vec![0.0f32; self.n];
+        for p in 0..self.k / 2 {
+            self.decode_row_pair_full(p, &mut lo, &mut hi);
+            out[(2 * p) * self.n..(2 * p + 1) * self.n].copy_from_slice(&lo);
+            out[(2 * p + 1) * self.n..(2 * p + 2) * self.n].copy_from_slice(&hi);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsfp::codec::quantize_tensor;
+    use crate::bsfp::fp16::f32_to_f16_bits;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn residual_pack_roundtrip() {
+        let k = 6;
+        let n = 4;
+        let w_r: Vec<u16> = (0..k * n).map(|i| ((i * 2731) % 4096) as u16).collect();
+        let packed = pack_residuals(&w_r, k, n);
+        assert_eq!(packed.len(), k / 2 * n * 3);
+        assert_eq!(unpack_residuals(&packed, k, n), w_r);
+    }
+
+    #[test]
+    fn residual_layout_is_little_endian_pairs() {
+        // r0 = 0xABC (row 0), r1 = 0x123 (row 1) -> bytes [0xBC, 0x3A, 0x12].
+        let packed = pack_residuals(&[0xABC, 0x123], 2, 1);
+        assert_eq!(packed, vec![0xBC, 0x3A, 0x12]);
+    }
+
+    #[test]
+    fn planes_reconstruct_the_quantized_tensor_bitwise() {
+        let w = Rng::seed_from_u64(7).uniform_vec(256 * 6, 0.3);
+        let qt = quantize_tensor(&w, 256, 6);
+        let planes = PlanePair::from_quantized(&qt);
+        assert_eq!(planes.codes(), qt.w_q);
+        assert_eq!(planes.residuals(), qt.w_r);
+        // Full decode through the planes == the codec's reconstruction.
+        let decoded = planes.decode_full_f32();
+        let expect = qt.reconstruct_fp16_bits();
+        for (i, (&d, &b)) in decoded.iter().zip(&expect).enumerate() {
+            assert_eq!(d.to_bits(), f16_bits_to_f32(b).to_bits(), "idx {i}");
+        }
+        // And (tensor_scale == 1 here) == the original weights after FP16 cast.
+        for (i, (&d, &orig)) in decoded.iter().zip(&w).enumerate() {
+            assert_eq!(d.to_bits(), f16_bits_to_f32(f32_to_f16_bits(orig)).to_bits(), "idx {i}");
+        }
+    }
+
+    #[test]
+    fn plane_sizes_are_quarter_and_full() {
+        let w = Rng::seed_from_u64(9).uniform_vec(128 * 8, 0.2);
+        let qt = quantize_tensor(&w, 128, 8);
+        let planes = PlanePair::from_quantized(&qt);
+        // FP16 footprint: 2 bytes per weight; prefix alone: 1/2 byte.
+        assert_eq!(planes.full_bytes(), 128 * 8 * 2);
+        assert_eq!(planes.prefix_bytes() * 4, planes.full_bytes());
+    }
+}

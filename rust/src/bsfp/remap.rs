@@ -46,6 +46,18 @@ pub fn encode_bits(bits: u16) -> BsfpCode {
     BsfpCode { w_q: (sign << 3) | code, w_r: (flag << 11) | (e0 << 10) | man }
 }
 
+/// Total-function variant of [`encode_bits`]: `None` when the exponent is
+/// outside BSFP's domain (`exp > 15` — values `>= 2.0`, infinities, NaNs),
+/// which callers must handle by the Algorithm-1 pre-scale or a dense
+/// fallback.  The bit-plane weight store uses this to classify tensors.
+#[inline]
+pub fn try_encode_bits(bits: u16) -> Option<BsfpCode> {
+    if split_fields(bits).exp > 15 {
+        return None;
+    }
+    Some(encode_bits(bits))
+}
+
 /// Fig. 5(b): losslessly reconstruct the original FP16 bit pattern.
 #[inline]
 pub fn decode_full_bits(c: BsfpCode) -> u16 {

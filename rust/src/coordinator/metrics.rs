@@ -1,9 +1,11 @@
 //! Serving metrics: counters, latency percentiles, batch-occupancy
-//! histogram, and throughput.
+//! histogram, throughput, and weight-traffic accounting.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
+
+use crate::runtime::TrafficSnapshot;
 
 /// Shared metrics sink (cheap atomic counters; latencies and the batch
 /// histogram under mutexes).
@@ -22,6 +24,9 @@ pub struct Metrics {
     /// `occupancy[b]` = number of engine steps that ran with `b` active
     /// sequences in the batch.
     batch_occupancy: Mutex<Vec<u64>>,
+    /// Accumulated weight traffic drained from the backends after each
+    /// scheduler engine step (the quarter-to-all accounting).
+    traffic: Mutex<TrafficSnapshot>,
     started: Instant,
 }
 
@@ -45,6 +50,14 @@ pub struct MetricsSnapshot {
     pub batch_occupancy: Vec<u64>,
     /// Mean sequences per engine step (0 when no steps ran).
     pub batch_occupancy_mean: f64,
+    /// Accumulated weight traffic (zeros on backends without accounting).
+    pub traffic: TrafficSnapshot,
+    /// Draft-pass weight bytes per decoded token.
+    pub bytes_per_token_draft: f64,
+    /// Full-pass weight bytes per decoded token.
+    pub bytes_per_token_full: f64,
+    /// The measured quarter-to-all ratio (draft / full bytes per token).
+    pub draft_traffic_ratio: f64,
 }
 
 impl Metrics {
@@ -60,8 +73,16 @@ impl Metrics {
             latencies_us: Mutex::new(Vec::new()),
             exec_us: Mutex::new(Vec::new()),
             batch_occupancy: Mutex::new(Vec::new()),
+            traffic: Mutex::new(TrafficSnapshot::default()),
             started: Instant::now(),
         }
+    }
+
+    /// Fold one drained per-step traffic delta into the running totals
+    /// (the scheduler calls `backend.drain_traffic()` after every engine
+    /// step and reports the delta here).
+    pub fn record_traffic(&self, delta: &TrafficSnapshot) {
+        self.traffic.lock().unwrap().merge(delta);
     }
 
     pub fn record_completion(&self, tokens: u64, drafts: u64, verifies: u64, latency_s: f64, exec_s: f64) {
@@ -94,6 +115,7 @@ impl Metrics {
         let mut lat = self.latencies_us.lock().unwrap().clone();
         let mut exec = self.exec_us.lock().unwrap().clone();
         let occupancy = self.batch_occupancy.lock().unwrap().clone();
+        let traffic = *self.traffic.lock().unwrap();
         let steps: u64 = occupancy.iter().sum();
         let weighted: u64 = occupancy.iter().enumerate().map(|(b, &n)| b as u64 * n).sum();
         let tokens = self.tokens_generated.load(Ordering::Relaxed);
@@ -113,6 +135,10 @@ impl Metrics {
             tokens_per_s: if elapsed_s > 0.0 { tokens as f64 / elapsed_s } else { 0.0 },
             batch_occupancy: occupancy,
             batch_occupancy_mean: if steps > 0 { weighted as f64 / steps as f64 } else { 0.0 },
+            traffic,
+            bytes_per_token_draft: traffic.draft_bytes_per_token(),
+            bytes_per_token_full: traffic.full_bytes_per_token(),
+            draft_traffic_ratio: traffic.draft_full_ratio(),
         }
     }
 }
@@ -157,6 +183,34 @@ mod tests {
         let m = Metrics::new();
         m.requests_failed.fetch_add(3, Ordering::Relaxed);
         assert_eq!(m.snapshot().failed, 3);
+    }
+
+    #[test]
+    fn traffic_deltas_accumulate_into_the_snapshot() {
+        let m = Metrics::new();
+        let d1 = TrafficSnapshot {
+            draft_bytes: 100,
+            draft_tokens: 4,
+            full_bytes: 400,
+            full_tokens: 4,
+            ..Default::default()
+        };
+        let d2 = TrafficSnapshot { draft_bytes: 100, draft_tokens: 4, ..Default::default() };
+        m.record_traffic(&d1);
+        m.record_traffic(&d2);
+        let s = m.snapshot();
+        assert_eq!(s.traffic.draft_bytes, 200);
+        assert_eq!(s.traffic.draft_tokens, 8);
+        assert!((s.bytes_per_token_draft - 25.0).abs() < 1e-12);
+        assert!((s.bytes_per_token_full - 100.0).abs() < 1e-12);
+        assert!((s.draft_traffic_ratio - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_traffic_snapshot_is_zeroed() {
+        let s = Metrics::new().snapshot();
+        assert!(s.traffic.is_empty());
+        assert_eq!(s.draft_traffic_ratio, 0.0);
     }
 
     #[test]

@@ -285,6 +285,10 @@ fn scheduler_main(
                 active.iter_mut().map(|a| &mut a.session).collect();
             engine.step(&mut refs)
         };
+        // Fold this step's weight traffic into the shared sink (the drain
+        // keeps per-backend counters from double-counting across workers;
+        // backends without accounting report zeros).
+        metrics.record_traffic(&backend.drain_traffic());
         if let Err(e) = step_result {
             // A batched op failed: no per-sequence attribution, so fail the
             // whole in-flight batch (clients may retry; slots are freed).

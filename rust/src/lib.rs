@@ -9,22 +9,31 @@
 //! Algorithm layer:
 //! * [`bsfp`] — the Bit-Sharing Floating Point codec (the paper's §III
 //!   algorithm): exponent remapping, Algorithm-1 outlier handling, Eq. 4
-//!   group scales, and the Fig. 5 hardware decoders.
+//!   group scales, the Fig. 5 hardware decoders, and the bit-plane split
+//!   (`bsfp::PlanePair`: nibble-packed `W_q` prefix plane + 12-bit-packed
+//!   `W_r` residual plane — the packed weight store's resident layout).
 //! * [`quant`] — baseline quantizers (FP4 variants for Table I, INT4/8
 //!   Olive/Tender analogs for the accelerator comparison).
 //!
 //! Execution layer (the [`runtime::Backend`] abstraction):
 //! * [`runtime`] — the `Backend` trait every layer above is written
 //!   against: the single-sequence ops (prefill / decode_full /
-//!   decode_draft / verify / eval with opaque state threading) plus the
+//!   decode_draft / verify / eval with opaque state threading), the
 //!   batched serving ops (`prefill_batch` / `decode_full_batch` /
 //!   `decode_draft_batch` / `verify_batch`) over a backend-owned
-//!   `SeqSlot`-indexed KV arena; the always-available pure-Rust
-//!   [`runtime::NativeBackend`] (host-memory transformer, BSFP draft from
-//!   the same bits, batched ops that stream each weight once per step for
-//!   the whole batch), the [`runtime::ModelSource`] factory, and — behind
-//!   the non-default `pjrt` cargo feature — the PJRT client wrapper that
-//!   executes AOT-compiled HLO graphs buffer-to-buffer.
+//!   `SeqSlot`-indexed KV arena, and the weight-traffic accounting
+//!   surface (`runtime::TrafficSnapshot` via `Backend::traffic` /
+//!   `drain_traffic`); the always-available pure-Rust
+//!   [`runtime::NativeBackend`] keeps every quantizable linear once, in
+//!   a bit-plane packed store, and the cache-blocked kernels in
+//!   `runtime::kernels` decode it on the fly — the draft GEMV streams
+//!   only the prefix plane (a quarter of the full pass's weight bytes),
+//!   the full/verify GEMV streams prefix + residual (the FP16
+//!   footprint), and both share one accumulation order so outputs are
+//!   bit-identical to dense execution; the [`runtime::ModelSource`]
+//!   factory, and — behind the non-default `pjrt` cargo feature — the
+//!   PJRT client wrapper that executes AOT-compiled HLO graphs
+//!   buffer-to-buffer.
 //! * [`model`] — manifests, weight loading, logits post-processing; with
 //!   `pjrt`, the `model::ModelRuntime` PJRT backend implementation.
 //!
@@ -38,7 +47,9 @@
 //! * [`coordinator`] — serving layer: bounded priority queue with
 //!   age-based anti-starvation, continuous-batching scheduler threads,
 //!   streaming chunked responses, sessions, metrics (failures, batch
-//!   occupancy, throughput) — the production wrapper around the engine.
+//!   occupancy, throughput, per-pass weight traffic drained from the
+//!   backends after every engine step) — the production wrapper around
+//!   the engine.
 //!
 //! Evaluation layer:
 //! * [`accel`] — cycle-level simulator of the SPEQ accelerator (§IV):

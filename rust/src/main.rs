@@ -174,6 +174,18 @@ fn generate(args: &Args) -> Result<()> {
     if temperature == 0.0 {
         let ar = engine.generate_ar(&prompt, gen_len, sampling)?;
         println!("\nlossless check vs autoregressive: {}", if ar.tokens == spec.tokens { "IDENTICAL" } else { "MISMATCH!" });
+        // Weight-traffic accounting over both runs: the quarter-to-all
+        // ratio as a measured number (zeros on backends without counters).
+        let t = engine.backend().traffic();
+        if !t.is_empty() {
+            println!(
+                "weight traffic: draft {:.1} KB/tok | full {:.1} KB/tok | verify {:.1} KB/row | quarter ratio {:.3}",
+                t.draft_bytes_per_token() / 1024.0,
+                t.full_bytes_per_token() / 1024.0,
+                t.verify_bytes_per_row() / 1024.0,
+                t.draft_full_ratio()
+            );
+        }
         // Simulated accelerator speedup for this very trace at paper scale.
         if let Some(dims) = paper_dims(model_name) {
             let tc = Accel::default().run_trace(dims, &spec.trace, 1024);
@@ -254,6 +266,15 @@ fn serve(args: &Args) -> Result<()> {
         "batch occupancy: mean {:.2} seqs/step | failed {}",
         snap.batch_occupancy_mean, snap.failed
     );
+    if !snap.traffic.is_empty() {
+        println!(
+            "weight traffic: draft {:.1} KB/tok | full {:.1} KB/tok | verify {:.1} KB/row | quarter ratio {:.3}",
+            snap.bytes_per_token_draft / 1024.0,
+            snap.bytes_per_token_full / 1024.0,
+            snap.traffic.verify_bytes_per_row() / 1024.0,
+            snap.draft_traffic_ratio
+        );
+    }
     server.shutdown();
     Ok(())
 }

@@ -16,10 +16,12 @@ use crate::specdec::{expected_accept_length, SpecTrace};
 use crate::util::json::Value;
 use crate::workload::{heldout_windows, task_names};
 
-/// All experiment ids, in DESIGN.md order.
-pub const EXPERIMENTS: [&str; 10] = [
+/// All experiment ids, in DESIGN.md order (`traffic` is the measured
+/// quarter-to-all weight-stream accounting added with the bit-plane
+/// weight store).
+pub const EXPERIMENTS: [&str; 11] = [
     "fig2c", "table1", "table2", "table3", "table4", "fig7", "fig8", "fig9",
-    "specdec-cmp", "theory",
+    "specdec-cmp", "theory", "traffic",
 ];
 
 /// Run one experiment (or `all`).
@@ -41,6 +43,7 @@ pub fn run_experiment(ctx: &mut ReportCtx, exp: &str) -> Result<()> {
         "fig9" => fig9(ctx),
         "specdec-cmp" => specdec_cmp(ctx),
         "theory" => theory(ctx),
+        "traffic" => traffic(ctx),
         other => anyhow::bail!("unknown experiment {other:?} (have {EXPERIMENTS:?} or 'all')"),
     }
 }
@@ -546,4 +549,55 @@ fn theory(ctx: &mut ReportCtx) -> Result<()> {
     println!("(Eq. 1 assumes geometric acceptance + fixed L; early exit makes measured");
     println!(" La deviate at low r — the gap is the early-exit benefit, E8)");
     ctx.save_result("theory", &Value::Arr(out))
+}
+
+/// E11: measured weight traffic per pass — the quarter-to-all ratio as a
+/// number, straight from the bit-plane store's [`TrafficCounters`].
+///
+/// [`TrafficCounters`]: crate::runtime::TrafficCounters
+fn traffic(ctx: &mut ReportCtx) -> Result<()> {
+    println!("\n== E11: weight bytes streamed per decoded token (quarter-to-all) ==");
+    println!(
+        "{:<18} {:>13} {:>13} {:>13} {:>8}",
+        "model", "draft B/tok", "full B/tok", "verify B/row", "ratio"
+    );
+    let steps = 4usize;
+    let mut out = BTreeMap::new();
+    for name in ctx.model_names() {
+        let model = ctx.model(&name)?;
+        let plen = 8usize.min(model.prefill_len());
+        let toks = vec![b' ' as i32; model.prefill_len()];
+        let pre = model.prefill(&toks, plen)?;
+        model.drain_traffic();
+        let mut state = Some(pre.state);
+        for i in 0..steps {
+            let o = model.decode_draft(1, plen + i, state.take().unwrap())?;
+            state = Some(o.state);
+        }
+        let draft = model.drain_traffic();
+        for i in 0..steps {
+            let o = model.decode_full(1, plen + steps + i, state.take().unwrap())?;
+            state = Some(o.state);
+        }
+        let full = model.drain_traffic();
+        let vtokens: Vec<i32> = vec![0; model.slots()];
+        let _ = model.verify(&vtokens, plen + 2 * steps, state.take().unwrap())?;
+        let verify = model.drain_traffic();
+        let d = draft.draft_bytes_per_token();
+        let f = full.full_bytes_per_token();
+        let v = verify.verify_bytes_per_row();
+        let ratio = if f > 0.0 { d / f } else { 0.0 };
+        println!("{name:<18} {d:>13.0} {f:>13.0} {v:>13.0} {ratio:>7.3}x");
+        out.insert(
+            name.clone(),
+            obj(vec![
+                ("bytes_per_token_draft", num(d)),
+                ("bytes_per_token_full", num(f)),
+                ("bytes_per_row_verify", num(v)),
+                ("draft_full_ratio", num(ratio)),
+            ]),
+        );
+    }
+    println!("(the paper's headline: the draft pass reads a quarter of the weight bits)");
+    ctx.save_result("traffic", &Value::Obj(out))
 }

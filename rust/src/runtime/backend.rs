@@ -27,6 +27,7 @@
 //!   overrides them to stream each weight through the whole batch once per
 //!   step (one `B×K · K×N` matmul instead of `B` GEMVs).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use anyhow::Result;
@@ -34,6 +35,166 @@ use anyhow::Result;
 use crate::model::{HostWeights, Manifest, ModelConfig};
 
 use super::native::NativeBackend;
+
+/// Which request-path pass a kernel invocation serves — the key the
+/// traffic accounting is bucketed by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PassKind {
+    /// Prompt-window passes (`prefill`, `eval_logits`): full weights,
+    /// one position per token.
+    Prefill,
+    /// Quantized draft decode: prefix plane + Eq. 4 scales only.
+    Draft,
+    /// Full-precision decode (the autoregressive baseline path).
+    Full,
+    /// Verification rows (full weights; one row per scored position).
+    Verify,
+}
+
+/// Point-in-time weight-traffic totals: bytes the execution kernels
+/// streamed from the resident weight store, bucketed per [`PassKind`],
+/// plus the token/row counts to normalize them.
+///
+/// Only *weight* bytes are counted (packed planes, scales, dense
+/// fallbacks, norms, embedding rows) — KV-cache and activation traffic is
+/// out of scope: the paper's quarter-to-all claim is about the weight
+/// stream, which dominates at decode batch sizes.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TrafficSnapshot {
+    pub prefill_bytes: u64,
+    pub prefill_tokens: u64,
+    pub draft_bytes: u64,
+    pub draft_tokens: u64,
+    pub full_bytes: u64,
+    pub full_tokens: u64,
+    pub verify_bytes: u64,
+    pub verify_rows: u64,
+}
+
+impl TrafficSnapshot {
+    fn per(bytes: u64, count: u64) -> f64 {
+        if count == 0 {
+            0.0
+        } else {
+            bytes as f64 / count as f64
+        }
+    }
+
+    /// Draft-pass weight bytes per decoded token (0 when none ran).
+    pub fn draft_bytes_per_token(&self) -> f64 {
+        Self::per(self.draft_bytes, self.draft_tokens)
+    }
+
+    /// Full-pass weight bytes per decoded token (0 when none ran).
+    pub fn full_bytes_per_token(&self) -> f64 {
+        Self::per(self.full_bytes, self.full_tokens)
+    }
+
+    /// Verify-pass weight bytes per scored row (0 when none ran).
+    pub fn verify_bytes_per_row(&self) -> f64 {
+        Self::per(self.verify_bytes, self.verify_rows)
+    }
+
+    /// The measured quarter-to-all ratio: draft bytes/token over full
+    /// bytes/token (0 until both passes have run).
+    pub fn draft_full_ratio(&self) -> f64 {
+        let full = self.full_bytes_per_token();
+        if full == 0.0 {
+            0.0
+        } else {
+            self.draft_bytes_per_token() / full
+        }
+    }
+
+    /// Whether any pass recorded traffic.
+    pub fn is_empty(&self) -> bool {
+        self.prefill_bytes == 0 && self.draft_bytes == 0 && self.full_bytes == 0
+            && self.verify_bytes == 0
+    }
+
+    /// Accumulate another snapshot (metric sinks merge per-step drains).
+    pub fn merge(&mut self, o: &TrafficSnapshot) {
+        self.prefill_bytes += o.prefill_bytes;
+        self.prefill_tokens += o.prefill_tokens;
+        self.draft_bytes += o.draft_bytes;
+        self.draft_tokens += o.draft_tokens;
+        self.full_bytes += o.full_bytes;
+        self.full_tokens += o.full_tokens;
+        self.verify_bytes += o.verify_bytes;
+        self.verify_rows += o.verify_rows;
+    }
+}
+
+/// Atomic weight-traffic counters, owned by a backend and incremented by
+/// its kernels (`&self` methods throughout, so counting needs interior
+/// mutability).
+#[derive(Debug, Default)]
+pub struct TrafficCounters {
+    prefill_bytes: AtomicU64,
+    prefill_tokens: AtomicU64,
+    draft_bytes: AtomicU64,
+    draft_tokens: AtomicU64,
+    full_bytes: AtomicU64,
+    full_tokens: AtomicU64,
+    verify_bytes: AtomicU64,
+    verify_rows: AtomicU64,
+}
+
+impl TrafficCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket(&self, kind: PassKind) -> (&AtomicU64, &AtomicU64) {
+        match kind {
+            PassKind::Prefill => (&self.prefill_bytes, &self.prefill_tokens),
+            PassKind::Draft => (&self.draft_bytes, &self.draft_tokens),
+            PassKind::Full => (&self.full_bytes, &self.full_tokens),
+            PassKind::Verify => (&self.verify_bytes, &self.verify_rows),
+        }
+    }
+
+    /// Count weight bytes streamed by one kernel invocation.
+    pub fn add_bytes(&self, kind: PassKind, bytes: u64) {
+        self.bucket(kind).0.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Count tokens (or verify rows) served by one batched step.
+    pub fn add_tokens(&self, kind: PassKind, tokens: u64) {
+        self.bucket(kind).1.fetch_add(tokens, Ordering::Relaxed);
+    }
+
+    /// Cumulative totals since construction or the last [`drain`].
+    ///
+    /// [`drain`]: TrafficCounters::drain
+    pub fn snapshot(&self) -> TrafficSnapshot {
+        TrafficSnapshot {
+            prefill_bytes: self.prefill_bytes.load(Ordering::Relaxed),
+            prefill_tokens: self.prefill_tokens.load(Ordering::Relaxed),
+            draft_bytes: self.draft_bytes.load(Ordering::Relaxed),
+            draft_tokens: self.draft_tokens.load(Ordering::Relaxed),
+            full_bytes: self.full_bytes.load(Ordering::Relaxed),
+            full_tokens: self.full_tokens.load(Ordering::Relaxed),
+            verify_bytes: self.verify_bytes.load(Ordering::Relaxed),
+            verify_rows: self.verify_rows.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Return the totals and reset every counter to zero — the serving
+    /// metrics accumulate per-step deltas through this.
+    pub fn drain(&self) -> TrafficSnapshot {
+        TrafficSnapshot {
+            prefill_bytes: self.prefill_bytes.swap(0, Ordering::Relaxed),
+            prefill_tokens: self.prefill_tokens.swap(0, Ordering::Relaxed),
+            draft_bytes: self.draft_bytes.swap(0, Ordering::Relaxed),
+            draft_tokens: self.draft_tokens.swap(0, Ordering::Relaxed),
+            full_bytes: self.full_bytes.swap(0, Ordering::Relaxed),
+            full_tokens: self.full_tokens.swap(0, Ordering::Relaxed),
+            verify_bytes: self.verify_bytes.swap(0, Ordering::Relaxed),
+            verify_rows: self.verify_rows.swap(0, Ordering::Relaxed),
+        }
+    }
+}
 
 /// Opaque per-request state (logits slots + KV cache), backend-specific.
 pub enum BackendState {
@@ -317,6 +478,25 @@ pub trait Backend {
         Ok(out)
     }
 
+    // ---- weight-traffic accounting --------------------------------------
+    //
+    // Implementations that stream weights through instrumented kernels
+    // (the native backend's bit-plane store) report bytes per pass here;
+    // the defaults return zeros so backends without accounting (PJRT,
+    // where traffic happens device-side) remain conformant.
+
+    /// Cumulative weight-traffic totals since construction or the last
+    /// [`Backend::drain_traffic`].
+    fn traffic(&self) -> TrafficSnapshot {
+        TrafficSnapshot::default()
+    }
+
+    /// Return-and-reset the traffic totals (metric sinks accumulate the
+    /// per-step deltas; see `coordinator::Metrics::record_traffic`).
+    fn drain_traffic(&self) -> TrafficSnapshot {
+        TrafficSnapshot::default()
+    }
+
     fn vocab(&self) -> usize {
         self.config().vocab
     }
@@ -399,4 +579,53 @@ pub fn load_backend(source: &ModelSource, model: &str) -> Result<Box<dyn Backend
 fn pjrt_backend(manifest: &Manifest, model: &str) -> Result<Box<dyn Backend>> {
     let rt = super::Runtime::cpu()?;
     Ok(Box::new(crate::model::ModelRuntime::load(&rt, manifest, model)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traffic_counters_bucket_and_normalize() {
+        let c = TrafficCounters::new();
+        c.add_bytes(PassKind::Draft, 100);
+        c.add_tokens(PassKind::Draft, 4);
+        c.add_bytes(PassKind::Full, 400);
+        c.add_tokens(PassKind::Full, 4);
+        c.add_bytes(PassKind::Verify, 800);
+        c.add_tokens(PassKind::Verify, 8);
+        let s = c.snapshot();
+        assert_eq!(s.draft_bytes, 100);
+        assert_eq!(s.full_tokens, 4);
+        assert!((s.draft_bytes_per_token() - 25.0).abs() < 1e-12);
+        assert!((s.full_bytes_per_token() - 100.0).abs() < 1e-12);
+        assert!((s.verify_bytes_per_row() - 100.0).abs() < 1e-12);
+        assert!((s.draft_full_ratio() - 0.25).abs() < 1e-12);
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn traffic_drain_resets_and_merge_accumulates() {
+        let c = TrafficCounters::new();
+        c.add_bytes(PassKind::Prefill, 10);
+        c.add_tokens(PassKind::Prefill, 1);
+        let first = c.drain();
+        assert_eq!(first.prefill_bytes, 10);
+        assert!(c.snapshot().is_empty(), "drain must reset");
+        c.add_bytes(PassKind::Prefill, 5);
+        c.add_tokens(PassKind::Prefill, 1);
+        let mut total = first;
+        total.merge(&c.drain());
+        assert_eq!(total.prefill_bytes, 15);
+        assert_eq!(total.prefill_tokens, 2);
+    }
+
+    #[test]
+    fn empty_snapshot_ratios_are_zero() {
+        let s = TrafficSnapshot::default();
+        assert!(s.is_empty());
+        assert_eq!(s.draft_bytes_per_token(), 0.0);
+        assert_eq!(s.full_bytes_per_token(), 0.0);
+        assert_eq!(s.draft_full_ratio(), 0.0);
+    }
 }

@@ -1,0 +1,233 @@
+//! Cache-blocked GEMV/GEMM kernels over the bit-plane weight store.
+//!
+//! Three kernels share one contract: `X (B, k) @ W (k, n)` with `W`
+//! row-major, the weight-row loop outermost (each row is streamed from
+//! memory exactly once for the whole batch), and per-output accumulation
+//! in ascending-`i` order.  Because the accumulation order is identical
+//! across all three, a kernel swap can never change output bits as long
+//! as the decoded weight values are bitwise equal — the property the
+//! golden-test harness and `prop_planes.rs` pin.
+//!
+//! * [`gemm_dense`] — plain f32 weights (non-quantizable linears, the
+//!   Algorithm-1 outlier fallback, transformed-weight variants).
+//! * [`gemm_full_planes`] — decodes prefix + residual planes on the fly
+//!   ([`PlanePair::decode_row_pair_full`]), one [`BLOCK_ROWS`]-row block
+//!   at a time into a scratch tile that stays cache-resident while every
+//!   batch row consumes it.
+//! * [`gemm_draft_prefix`] — decodes *only* the nibble-packed prefix plane
+//!   (plus Eq. 4 group scales), streaming a quarter of the full pass's
+//!   weight bytes per token.
+
+use crate::bsfp::{draft_value, PlanePair, GROUP_SIZE};
+
+/// Weight rows decoded per block.  Must be even (the planes pack row
+/// pairs) and divide [`GROUP_SIZE`] (so a block never straddles a scale
+/// group); 16 rows of up to 512 f32 columns keep the scratch tile well
+/// inside L1.
+pub const BLOCK_ROWS: usize = 16;
+
+// Load-bearing invariant: `gemm_draft_prefix` reads one scale-group row
+// per block and the plane decoders walk row pairs — retuning BLOCK_ROWS
+// to a value violating either silently corrupts draft scales.
+const _: () = assert!(BLOCK_ROWS % 2 == 0 && GROUP_SIZE % BLOCK_ROWS == 0);
+
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// `y += a * x`.
+pub(crate) fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// `X (B, k) @ w (k, n)` with `w` row-major f32.
+///
+/// The weight-row loop is outermost so each row of `w` is streamed from
+/// memory exactly once for the whole batch — the continuous-batching
+/// bandwidth win.  Each output row accumulates in the same `i`-ascending
+/// order as a batch of one, so per-sequence results are bit-identical for
+/// every batch size.
+pub fn gemm_dense(xs: &[Vec<f32>], w: &[f32], k: usize, n: usize) -> Vec<Vec<f32>> {
+    debug_assert!(xs.iter().all(|x| x.len() == k));
+    debug_assert_eq!(w.len(), k * n);
+    let mut ys: Vec<Vec<f32>> = xs.iter().map(|_| vec![0.0f32; n]).collect();
+    for i in 0..k {
+        let row = &w[i * n..(i + 1) * n];
+        for (y, x) in ys.iter_mut().zip(xs) {
+            axpy(y, x[i], row);
+        }
+    }
+    ys
+}
+
+/// `X (B, k) @ decode_full(planes)` — the full/verify pass kernel.
+///
+/// Streams prefix + residual (2 bytes per weight, the FP16 footprint) and
+/// reconstructs each block of [`BLOCK_ROWS`] rows into a scratch tile via
+/// the Fig. 5(b) decoder before accumulating.  Row order inside a block is
+/// ascending, so results are bitwise equal to [`gemm_dense`] over the
+/// decoded values.
+pub fn gemm_full_planes(xs: &[Vec<f32>], planes: &PlanePair) -> Vec<Vec<f32>> {
+    let (k, n) = (planes.k, planes.n);
+    debug_assert!(xs.iter().all(|x| x.len() == k));
+    debug_assert_eq!(k % 2, 0);
+    let mut ys: Vec<Vec<f32>> = xs.iter().map(|_| vec![0.0f32; n]).collect();
+    let mut scratch = vec![0.0f32; BLOCK_ROWS * n];
+    let mut i0 = 0;
+    while i0 < k {
+        let rows = BLOCK_ROWS.min(k - i0);
+        debug_assert_eq!(rows % 2, 0, "plane row pairs require an even block");
+        for r in 0..rows / 2 {
+            let (lo, hi) = scratch[2 * r * n..(2 * r + 2) * n].split_at_mut(n);
+            planes.decode_row_pair_full(i0 / 2 + r, lo, hi);
+        }
+        for r in 0..rows {
+            let row = &scratch[r * n..(r + 1) * n];
+            for (y, x) in ys.iter_mut().zip(xs) {
+                axpy(y, x[i0 + r], row);
+            }
+        }
+        i0 += rows;
+    }
+    ys
+}
+
+/// `X (B, k) @ draft(prefix, scales)` — the quarter-traffic draft kernel.
+///
+/// Streams only the nibble-packed prefix plane plus the Eq. 4 group
+/// scales.  Each decoded value is computed as
+/// `draft_value(W_q) * scale / tensor_scale` — bitwise the exact sequence
+/// the retired `derive_draft` dequantization used (`dequant_draft`
+/// multiplied code value by scale, then divided by the Algorithm-1
+/// tensor scale), so kernel outputs are bit-identical to the old
+/// materialized draft weights.  `tensor_scale` is 1.0 for in-domain
+/// tensors (division by 1.0 is an IEEE identity).
+pub fn gemm_draft_prefix(
+    xs: &[Vec<f32>],
+    prefix: &[u8],
+    scales: &[f32],
+    tensor_scale: f32,
+    k: usize,
+    n: usize,
+) -> Vec<Vec<f32>> {
+    debug_assert!(xs.iter().all(|x| x.len() == k));
+    debug_assert_eq!(prefix.len(), k / 2 * n);
+    debug_assert_eq!(scales.len(), k / GROUP_SIZE * n);
+    debug_assert_eq!(k % GROUP_SIZE, 0);
+    let lut: [f32; 16] = std::array::from_fn(|c| draft_value(c as u8));
+    let mut ys: Vec<Vec<f32>> = xs.iter().map(|_| vec![0.0f32; n]).collect();
+    let mut scratch = vec![0.0f32; BLOCK_ROWS * n];
+    let mut i0 = 0;
+    while i0 < k {
+        let rows = BLOCK_ROWS.min(k - i0);
+        debug_assert_eq!(rows % 2, 0);
+        // BLOCK_ROWS divides GROUP_SIZE, so the whole block shares one
+        // scale-group row.
+        let srow = &scales[(i0 / GROUP_SIZE) * n..(i0 / GROUP_SIZE + 1) * n];
+        for r in 0..rows / 2 {
+            let prow = &prefix[(i0 / 2 + r) * n..(i0 / 2 + r + 1) * n];
+            let (lo, hi) = scratch[2 * r * n..(2 * r + 2) * n].split_at_mut(n);
+            for j in 0..n {
+                let byte = prow[j];
+                lo[j] = lut[(byte & 0xf) as usize] * srow[j] / tensor_scale;
+                hi[j] = lut[(byte >> 4) as usize] * srow[j] / tensor_scale;
+            }
+        }
+        for r in 0..rows {
+            let row = &scratch[r * n..(r + 1) * n];
+            for (y, x) in ys.iter_mut().zip(xs) {
+                axpy(y, x[i0 + r], row);
+            }
+        }
+        i0 += rows;
+    }
+    ys
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsfp::quantize_tensor;
+    use crate::util::rng::Rng;
+
+    fn batch(b: usize, k: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..b).map(|_| rng.normal_vec(k, 1.0)).collect()
+    }
+
+    #[test]
+    fn full_plane_kernel_matches_dense_bitwise() {
+        let (k, n) = (256, 24);
+        let w = Rng::seed_from_u64(3).uniform_vec(k * n, 0.4);
+        let qt = quantize_tensor(&w, k, n);
+        let planes = qt.planes();
+        // Dense reference over the *decoded* values: same accumulation
+        // order, so bits must match exactly.
+        let decoded = planes.decode_full_f32();
+        let xs = batch(3, k, 11);
+        let dense = gemm_dense(&xs, &decoded, k, n);
+        let packed = gemm_full_planes(&xs, &planes);
+        for (b, (dr, pr)) in dense.iter().zip(&packed).enumerate() {
+            for (j, (d, p)) in dr.iter().zip(pr).enumerate() {
+                assert_eq!(d.to_bits(), p.to_bits(), "batch {b} col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn draft_prefix_kernel_matches_retired_dequant_bitwise() {
+        let (k, n) = (256, 16);
+        let w = Rng::seed_from_u64(5).uniform_vec(k * n, 0.3);
+        let qt = quantize_tensor(&w, k, n);
+        // The retired derive_draft materialization: dequant then undo the
+        // Algorithm-1 pre-scale.
+        let mut old = qt.dequant_draft();
+        for v in &mut old {
+            *v /= qt.tensor_scale;
+        }
+        let xs = batch(2, k, 13);
+        let dense = gemm_dense(&xs, &old, k, n);
+        let packed =
+            gemm_draft_prefix(&xs, &qt.packed_wq(), &qt.scales, qt.tensor_scale, k, n);
+        for (b, (dr, pr)) in dense.iter().zip(&packed).enumerate() {
+            for (j, (d, p)) in dr.iter().zip(pr).enumerate() {
+                assert_eq!(d.to_bits(), p.to_bits(), "batch {b} col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn draft_kernel_handles_outlier_tensor_scale() {
+        let (k, n) = (128, 4);
+        let mut w = Rng::seed_from_u64(8).uniform_vec(k * n, 0.2);
+        w[10] = 2.75; // force the Algorithm-1 pre-scale
+        let qt = quantize_tensor(&w, k, n);
+        assert!(qt.tensor_scale < 1.0);
+        let mut old = qt.dequant_draft();
+        for v in &mut old {
+            *v /= qt.tensor_scale;
+        }
+        let xs = batch(1, k, 17);
+        let dense = gemm_dense(&xs, &old, k, n);
+        let packed =
+            gemm_draft_prefix(&xs, &qt.packed_wq(), &qt.scales, qt.tensor_scale, k, n);
+        assert_eq!(dense[0].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   packed[0].iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn kernels_are_batch_size_invariant() {
+        let (k, n) = (128, 8);
+        let w = Rng::seed_from_u64(21).uniform_vec(k * n, 0.3);
+        let qt = quantize_tensor(&w, k, n);
+        let planes = qt.planes();
+        let xs = batch(4, k, 23);
+        let full_b4 = gemm_full_planes(&xs, &planes);
+        for (i, x) in xs.iter().enumerate() {
+            let solo = gemm_full_planes(std::slice::from_ref(x), &planes);
+            assert_eq!(solo[0], full_b4[i], "full kernel diverged for seq {i}");
+        }
+    }
+}

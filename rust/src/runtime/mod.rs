@@ -7,20 +7,27 @@
 //!   the batched serving API over the [`SeqSlot`]-indexed [`SlotArena`],
 //!   and the [`ModelSource`]/[`load_backend`] factory.
 //! * [`native`] — host-memory interpreter for the tiny SPEQ transformer;
-//!   the draft pass runs through the in-tree BSFP codec, so the whole
-//!   stack builds, tests, and serves without PJRT or artifacts.  Batched
-//!   operations stream each weight once per step for the whole batch.
+//!   every quantizable linear lives once in a bit-plane packed store
+//!   (prefix plane = 4-bit `W_q`, residual plane = 12-bit `W_r`, Eq. 4
+//!   scales alongside), so the whole stack builds, tests, and serves
+//!   without PJRT or artifacts.  Batched operations stream each weight
+//!   once per step for the whole batch.
+//! * [`kernels`] — the cache-blocked GEMV/GEMM kernels that decode the
+//!   planes on the fly: the draft kernel streams only the prefix plane
+//!   (quarter traffic), the full/verify kernel streams both planes, and
+//!   all kernels share one accumulation order (bit-identity across paths).
 //! * `exec`/`hlo` (`pjrt` feature) — the `xla` crate wrapper: HLO text
 //!   loading, compilation, buffer-to-buffer execution.  The interchange is
 //!   HLO **text** (xla_extension 0.5.1 rejects jax >= 0.5's 64-bit-id
 //!   serialized protos; the text parser reassigns ids).
 
 pub mod backend;
+pub mod kernels;
 pub mod native;
 
 pub use backend::{
-    load_backend, Backend, BackendState, ModelSource, SeqSlot, SlotArena, StepOutput,
-    VerifyOutput,
+    load_backend, Backend, BackendState, ModelSource, PassKind, SeqSlot, SlotArena, StepOutput,
+    TrafficCounters, TrafficSnapshot, VerifyOutput,
 };
 pub use native::{builtin_config, builtin_model_names, InitStyle, NativeBackend, S_SLOTS};
 

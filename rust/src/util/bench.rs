@@ -117,6 +117,21 @@ impl Bench {
         println!("{}/{:<40} {value:>14.4} {unit}", self.group, name.into());
     }
 
+    /// Emit a machine-readable `BENCH_JSON {...}` line (one JSON object per
+    /// call) for CI and the report harness to consume — e.g. the
+    /// `bytes_per_token_{draft,full}` traffic numbers the quarter-to-all
+    /// regression check reads.  Non-finite values are serialized as 0.
+    pub fn metrics_json(&self, fields: &[(&str, f64)]) {
+        let body: Vec<String> = fields
+            .iter()
+            .map(|(key, value)| {
+                let v = if value.is_finite() { *value } else { 0.0 };
+                format!("\"{key}\":{v}")
+            })
+            .collect();
+        println!("BENCH_JSON {{\"group\":\"{}\",{}}}", self.group, body.join(","));
+    }
+
     pub fn results(&self) -> &[(String, Stats)] {
         &self.results
     }

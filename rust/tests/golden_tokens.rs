@@ -1,0 +1,162 @@
+//! Golden token-stream snapshot tests: pin draft/full/verify token
+//! sequences and accept-length traces for every builtin zoo model, in both
+//! engine modes (speculative + autoregressive) and both batch sizes (1 and
+//! 4), so any kernel rewrite that changes output bits fails loudly.
+//!
+//! Snapshot lifecycle:
+//! * **First run** (no `rust/tests/goldens/<model>.golden` yet): the test
+//!   records the snapshot and passes, printing where it wrote it.  CI runs
+//!   the debug suite first, so the release suite of the same workspace
+//!   compares against the debug-recorded snapshots — a cross-profile
+//!   bit-identity check on every push.
+//! * **Subsequent runs**: the regenerated stream must match the file
+//!   byte-for-byte.  `SPEQ_UPDATE_GOLDENS=1 cargo test --test
+//!   golden_tokens` re-records after an *intentional* output change.
+//!
+//! Independent of the files, every run asserts the structural identities:
+//! greedy speculative output == the autoregressive baseline, and batch-4
+//! output == batch-1 output per sequence.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::PathBuf;
+
+use speq::model::SamplingParams;
+use speq::runtime::{Backend, NativeBackend};
+use speq::specdec::{ArSession, BatchEngine, Engine, GenResult, GenSession, SpecConfig};
+
+const GEN_LEN: usize = 28;
+const MAX_DRAFT: usize = 8;
+const BASE_PROMPT: &[u8] = b"Q: ada has 3 apples and finds 4 more. how many apples now?\nA: ";
+
+fn goldens_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/goldens")
+}
+
+fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// `drafted:accepted:early_exit` per draft-verify iteration.
+fn trace_str(r: &GenResult) -> String {
+    r.trace
+        .iterations
+        .iter()
+        .map(|i| format!("{}:{}:{}", i.drafted, i.accepted, i.early_exit as u8))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn spec_cfg() -> SpecConfig {
+    SpecConfig { max_draft: MAX_DRAFT, gen_len: GEN_LEN, ..Default::default() }
+}
+
+/// Batch prompts: sequence 0 is the batch-1 prompt (so batch-vs-single
+/// identity is directly visible in the snapshot); the rest diverge.
+fn batch_prompts() -> Vec<Vec<u8>> {
+    (0..4usize)
+        .map(|i| {
+            let mut p = BASE_PROMPT.to_vec();
+            if i > 0 {
+                p.push(b'0' + i as u8);
+            }
+            p
+        })
+        .collect()
+}
+
+/// Generate every pinned stream for one model and render the snapshot.
+fn render(model: &str) -> String {
+    let backend = NativeBackend::builtin(model).expect("builtin model");
+    let engine = Engine::new(&backend);
+    let spec1 = engine.generate_spec(BASE_PROMPT, &spec_cfg()).expect("spec b1");
+    let ar1 =
+        engine.generate_ar(BASE_PROMPT, GEN_LEN, SamplingParams::greedy()).expect("ar b1");
+    assert_eq!(spec1.tokens.len(), GEN_LEN, "{model}: clamped spec generation");
+    // The paper's lossless claim: greedy speculative decoding must be
+    // bit-identical to the autoregressive baseline.
+    assert_eq!(spec1.tokens, ar1.tokens, "{model}: greedy spec != AR");
+
+    let batch = BatchEngine::new(&backend);
+    let requests: Vec<(Vec<u8>, SpecConfig)> =
+        batch_prompts().into_iter().map(|p| (p, spec_cfg())).collect();
+    let spec4 = batch.run_spec(&requests).expect("spec b4");
+    assert_eq!(spec4[0].tokens, spec1.tokens, "{model}: spec batch-4 seq 0 != batch-1");
+
+    let ar_sessions: Vec<GenSession> = batch_prompts()
+        .iter()
+        .map(|p| {
+            ArSession::new(&backend, p, GEN_LEN, SamplingParams::greedy())
+                .map(GenSession::Ar)
+                .expect("ar session")
+        })
+        .collect();
+    let ar4 = batch.run(ar_sessions).expect("ar b4");
+    assert_eq!(ar4[0].tokens, ar1.tokens, "{model}: AR batch-4 seq 0 != batch-1");
+    for (i, (s, a)) in spec4.iter().zip(&ar4).enumerate() {
+        assert_eq!(s.tokens, a.tokens, "{model}: batched greedy spec != AR for seq {i}");
+    }
+    assert_eq!(backend.arena().in_use(), 0, "{model}: leaked KV slots");
+
+    let mut out = String::new();
+    writeln!(out, "# golden token streams for {model} (recorded by golden_tokens.rs)").unwrap();
+    writeln!(out, "# regenerate: SPEQ_UPDATE_GOLDENS=1 cargo test --test golden_tokens").unwrap();
+    writeln!(out, "spec_b1 tokens={} trace={}", hex(&spec1.tokens), trace_str(&spec1)).unwrap();
+    writeln!(out, "ar_b1 tokens={}", hex(&ar1.tokens)).unwrap();
+    for (i, r) in spec4.iter().enumerate() {
+        writeln!(out, "spec_b4[{i}] tokens={} trace={}", hex(&r.tokens), trace_str(r)).unwrap();
+    }
+    for (i, r) in ar4.iter().enumerate() {
+        writeln!(out, "ar_b4[{i}] tokens={}", hex(&r.tokens)).unwrap();
+    }
+    out
+}
+
+fn check(model: &str) {
+    let rendered = render(model);
+    let dir = goldens_dir();
+    let path = dir.join(format!("{model}.golden"));
+    // Re-record only on an affirmative value: `SPEQ_UPDATE_GOLDENS=0` (or
+    // empty) must still compare, not silently overwrite the snapshots.
+    let update = std::env::var("SPEQ_UPDATE_GOLDENS")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    if path.exists() && !update {
+        let want = fs::read_to_string(&path).expect("read golden snapshot");
+        assert_eq!(
+            rendered, want,
+            "{model}: token streams diverged from {} — a kernel change altered \
+             output bits; if intentional, re-record with SPEQ_UPDATE_GOLDENS=1",
+            path.display()
+        );
+    } else {
+        fs::create_dir_all(&dir).expect("create goldens dir");
+        fs::write(&path, &rendered).expect("write golden snapshot");
+        eprintln!("recorded golden snapshot at {}", path.display());
+    }
+}
+
+#[test]
+fn golden_vicuna_7b_tiny() {
+    check("vicuna-7b-tiny");
+}
+
+#[test]
+fn golden_llama2_7b_tiny() {
+    check("llama2-7b-tiny");
+}
+
+#[test]
+fn golden_llama3_1_8b_tiny() {
+    check("llama3.1-8b-tiny");
+}
+
+#[test]
+fn golden_llama3_2_3b_tiny() {
+    check("llama3.2-3b-tiny");
+}
+
+#[test]
+fn golden_llama2_13b_tiny() {
+    check("llama2-13b-tiny");
+}

@@ -1,0 +1,136 @@
+//! Exhaustive properties of the exponent remap and the bit-plane split.
+//!
+//! Pushes **all 65,536 FP16 bit patterns** — subnormals, infinities and
+//! NaNs included — through the remap → plane-split pack → decode pipeline:
+//!
+//! * every in-domain pattern (`exp <= 15`) round-trips bit-exactly through
+//!   `try_encode_bits` → plane pack → plane unpack → full decode;
+//! * every out-of-domain pattern (`exp > 15`, which covers inf/NaN) is
+//!   rejected by `try_encode_bits` — the weight store routes such tensors
+//!   to its dense fallback, keeping full-pass exactness total;
+//! * the Eq. 4 scales satisfy the per-group MSE error bound over the
+//!   entire in-domain value population.
+
+use speq::bsfp::{
+    decode_full_bits, draft_value, f16_bits_to_f32, quantize_tensor, split_fields,
+    try_encode_bits, unpack_residuals, PlanePair, GROUP_SIZE,
+};
+
+/// All 32,768 in-domain FP16 bit patterns (sign x 16 exponents x 1024
+/// mantissas), ordered by bits ascending — 256 Eq. 4 groups of 128.
+fn domain_bits() -> Vec<u16> {
+    let mut out = Vec::with_capacity(32768);
+    for s in 0..2u16 {
+        for e in 0..16u16 {
+            for m in 0..1024u16 {
+                out.push((s << 15) | (e << 10) | m);
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn all_65536_patterns_encode_or_are_rejected() {
+    let mut encoded = 0usize;
+    let mut rejected = 0usize;
+    for bits in 0..=u16::MAX {
+        let exp = split_fields(bits).exp;
+        match try_encode_bits(bits) {
+            Some(c) => {
+                assert!(exp <= 15, "bits {bits:#06x}: encoded an out-of-domain exponent");
+                // Lossless reconstruction through the Fig. 5(b) decoder.
+                assert_eq!(decode_full_bits(c), bits, "bits {bits:#06x}");
+                // The packed fields stay in their bit budgets.
+                assert!(c.w_q <= 0xf, "bits {bits:#06x}: W_q overflows 4 bits");
+                assert!(c.w_r <= 0xfff, "bits {bits:#06x}: W_r overflows 12 bits");
+                encoded += 1;
+            }
+            None => {
+                assert!(exp > 15, "bits {bits:#06x}: rejected an in-domain exponent");
+                rejected += 1;
+            }
+        }
+    }
+    assert_eq!(encoded, 32768);
+    assert_eq!(rejected, 32768);
+}
+
+#[test]
+fn plane_split_is_lossless_over_the_entire_domain() {
+    // One tensor holding every in-domain pattern exactly once: (32768, 1).
+    let bits = domain_bits();
+    let w: Vec<f32> = bits.iter().map(|&b| f16_bits_to_f32(b)).collect();
+    let k = w.len();
+    let qt = quantize_tensor(&w, k, 1);
+    assert_eq!(qt.tensor_scale, 1.0, "the domain maxes at 1.9990234 < 2.0");
+    let planes = PlanePair::from_quantized(&qt);
+
+    // Plane packing is invertible: codes and residuals survive the nibble
+    // and 12-bit packings.
+    assert_eq!(planes.codes(), qt.w_q);
+    assert_eq!(unpack_residuals(&planes.residual, k, 1), qt.w_r);
+
+    // Full decode through the planes reproduces every FP16 pattern
+    // bit-exactly (subnormals and signed zeros included).
+    let decoded = planes.decode_full_f32();
+    for (i, (&d, &orig)) in decoded.iter().zip(&w).enumerate() {
+        assert_eq!(
+            d.to_bits(),
+            orig.to_bits(),
+            "bits {:#06x} (idx {i}) did not survive the plane round-trip",
+            bits[i]
+        );
+    }
+}
+
+#[test]
+fn eq4_error_bound_holds_per_group() {
+    // Over the full domain tensor: for every 128-element group, the Eq. 4
+    // scale must (a) be a local MSE minimum (perturbing it either way
+    // cannot help) and (b) beat the trivial scale-zero predictor, i.e.
+    // group draft MSE <= group signal energy.
+    let bits = domain_bits();
+    let w: Vec<f32> = bits.iter().map(|&b| f16_bits_to_f32(b)).collect();
+    let k = w.len();
+    let qt = quantize_tensor(&w, k, 1);
+    let q: Vec<f64> = qt.w_q.iter().map(|&c| draft_value(c) as f64).collect();
+    let groups = k / GROUP_SIZE;
+    assert_eq!(qt.scales.len(), groups);
+    for g in 0..groups {
+        let lo = g * GROUP_SIZE;
+        let hi = lo + GROUP_SIZE;
+        let mse = |s: f64| -> f64 {
+            (lo..hi).map(|i| (q[i] * s - w[i] as f64).powi(2)).sum::<f64>()
+                / GROUP_SIZE as f64
+        };
+        let s = qt.scales[g] as f64;
+        let at = mse(s);
+        assert!(at <= mse(s * 1.01) + 1e-18, "group {g}: scale not optimal (up)");
+        assert!(at <= mse(s * 0.99) + 1e-18, "group {g}: scale not optimal (down)");
+        let signal =
+            (lo..hi).map(|i| (w[i] as f64).powi(2)).sum::<f64>() / GROUP_SIZE as f64;
+        assert!(
+            at <= signal + 1e-18,
+            "group {g}: draft error {at} exceeds signal energy {signal}"
+        );
+    }
+}
+
+#[test]
+fn draft_plane_view_matches_the_codec_dequant_over_the_domain() {
+    // The prefix-plane draft view (what the quarter-traffic kernel
+    // streams) must equal the codec's dequantization bitwise, group
+    // scales applied.
+    let bits = domain_bits();
+    let w: Vec<f32> = bits.iter().map(|&b| f16_bits_to_f32(b)).collect();
+    let k = w.len();
+    let qt = quantize_tensor(&w, k, 1);
+    let planes = PlanePair::from_quantized(&qt);
+    let expect = qt.dequant_draft();
+    let codes = planes.codes();
+    for (i, &code) in codes.iter().enumerate() {
+        let got = draft_value(code) * qt.scales[i / GROUP_SIZE];
+        assert_eq!(got.to_bits(), expect[i].to_bits(), "idx {i}");
+    }
+}
