@@ -4,8 +4,10 @@
 //! Run: cargo bench --bench bench_engine
 //! Quick CI regression guard: cargo bench --bench bench_engine -- --smoke
 
+use std::collections::BTreeMap;
+
 use speq::model::SamplingParams;
-use speq::runtime::{load_backend, Backend, ModelSource, SeqSlot};
+use speq::runtime::{load_backend, load_backend_with, Backend, ModelSource, NativeConfig, SeqSlot};
 use speq::specdec::{BatchEngine, Engine, SpecConfig};
 use speq::util::bench::{black_box, smoke_requested, Bench};
 
@@ -112,6 +114,84 @@ fn main() {
     if let (Some(&(_, t1)), Some(&(_, t8))) = (tok_per_s.first(), tok_per_s.last()) {
         b.metric("batched_decode_b8_vs_b1_speedup", t8 / t1, "x");
     }
+
+    // Thread-scaling sweep: T in {1, 2, 4, 8} at batch 1/4/8.  The
+    // column-sharded kernels are bit-deterministic for every T (pinned by
+    // prop_threads.rs), so threads are purely a wall-clock lever — this
+    // sweep is what turns the quarter-traffic draft into measured
+    // tokens/sec.  Each cell emits a BENCH_JSON line with `threads` and
+    // `tokens_per_sec` for the perf trajectory (BENCH_*.json in CI).
+    let sweep: &[usize] = &[1, 2, 4, 8];
+    let sweep_batches: &[usize] = &[1, 4, 8];
+    let mut tps: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    for &t in sweep {
+        let backend_t =
+            load_backend_with(&source, "vicuna-7b-tiny", &NativeConfig::with_threads(t))
+                .expect("backend");
+        let model_t = backend_t.as_ref();
+        for &bsz in sweep_batches {
+            let slots: Vec<SeqSlot> = (0..bsz).map(|_| model_t.alloc_slot()).collect();
+            let prompts: Vec<Vec<i32>> = vec![toks.clone(); bsz];
+            let lengths: Vec<usize> = vec![plen; bsz];
+            model_t.prefill_batch(&slots, &prompts, &lengths).expect("prefill_batch");
+            let tokens: Vec<i32> = vec![65; bsz];
+            let pos: Vec<usize> = vec![plen; bsz];
+            let s = b.bench(format!("decode_b{bsz}_t{t}"), || {
+                black_box(
+                    model_t.decode_full_batch(&slots, &tokens, &pos).expect("decode").len(),
+                );
+            });
+            let v = bsz as f64 / (s.mean_ns * 1e-9);
+            b.metric(format!("decode_b{bsz}_t{t}_tok_per_s"), v, "tok/s (CPU)");
+            b.metrics_json(&[
+                ("threads", t as f64),
+                ("batch", bsz as f64),
+                ("tokens_per_sec", v),
+            ]);
+            tps.insert((t, bsz), v);
+            for &slot in &slots {
+                model_t.free_slot(slot);
+            }
+        }
+    }
+    for &bsz in sweep_batches {
+        let t1 = tps[&(1, bsz)];
+        for &t in &sweep[1..] {
+            let speedup = tps[&(t, bsz)] / t1;
+            b.metric(format!("thread_speedup_b{bsz}_t{t}"), speedup, "x vs T=1");
+            b.metric(
+                format!("parallel_efficiency_b{bsz}_t{t}"),
+                speedup / t as f64,
+                "(1.0 = linear)",
+            );
+        }
+    }
+    // CI regression guard: batched decode must actually scale with
+    // threads.  The full >= 1.7x bound at T=4 needs >= 4 real cores; on
+    // narrower machines the physical ceiling is the core count, so the
+    // bound degrades gracefully (and 1-core machines only check that
+    // threading is not a slowdown cliff).
+    let t4_speedup = tps[&(4, 8)] / tps[&(1, 8)];
+    b.metric("thread_gate_t4_vs_t1_b8", t4_speedup, "x");
+    b.metrics_json(&[
+        ("threads", 4.0),
+        ("batch", 8.0),
+        ("tokens_per_sec", tps[&(4, 8)]),
+        ("speedup_t4_vs_t1", t4_speedup),
+    ]);
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let required = if cores >= 4 {
+        1.7
+    } else if cores >= 2 {
+        1.3
+    } else {
+        0.5
+    };
+    assert!(
+        t4_speedup >= required,
+        "T=4 batched decode speedup {t4_speedup:.3}x below the {required}x bound \
+         ({cores} cores available)"
+    );
 
     // End-to-end generation.
     let gen = if smoke { 16 } else { 64 };

@@ -101,18 +101,35 @@ impl PlanePair {
     /// cache-blocked full GEMM kernel.
     #[inline]
     pub fn decode_row_pair_full(&self, p: usize, lo: &mut [f32], hi: &mut [f32]) {
+        self.decode_row_pair_full_cols(p, 0, self.n, lo, hi)
+    }
+
+    /// Column-ranged variant of [`PlanePair::decode_row_pair_full`]:
+    /// decode columns `j0..j1` of row pair `(2p, 2p+1)` into `lo`/`hi`
+    /// (each of length `j1 - j0`).  Both planes are column-independent, so
+    /// a parallel kernel shard touches only its own columns' bytes — the
+    /// per-column decode arithmetic is identical to the full-width call.
+    #[inline]
+    pub fn decode_row_pair_full_cols(
+        &self,
+        p: usize,
+        j0: usize,
+        j1: usize,
+        lo: &mut [f32],
+        hi: &mut [f32],
+    ) {
         let n = self.n;
-        debug_assert!(lo.len() == n && hi.len() == n);
-        let prow = &self.prefix[p * n..(p + 1) * n];
-        let rrow = &self.residual[3 * p * n..3 * (p + 1) * n];
-        for j in 0..n {
-            let byte = prow[j];
-            let base = 3 * j;
+        debug_assert!(j0 <= j1 && j1 <= n);
+        debug_assert!(lo.len() == j1 - j0 && hi.len() == j1 - j0);
+        let prow = &self.prefix[p * n + j0..p * n + j1];
+        let rrow = &self.residual[3 * (p * n + j0)..3 * (p * n + j1)];
+        for (jj, &byte) in prow.iter().enumerate() {
+            let base = 3 * jj;
             let (b0, b1, b2) = (rrow[base] as u16, rrow[base + 1] as u16, rrow[base + 2] as u16);
             let c0 = BsfpCode { w_q: byte & 0xf, w_r: b0 | ((b1 & 0xf) << 8) };
             let c1 = BsfpCode { w_q: byte >> 4, w_r: (b1 >> 4) | (b2 << 4) };
-            lo[j] = f16_bits_to_f32(decode_full_bits(c0));
-            hi[j] = f16_bits_to_f32(decode_full_bits(c1));
+            lo[jj] = f16_bits_to_f32(decode_full_bits(c0));
+            hi[jj] = f16_bits_to_f32(decode_full_bits(c1));
         }
     }
 
@@ -181,6 +198,29 @@ mod tests {
         // And (tensor_scale == 1 here) == the original weights after FP16 cast.
         for (i, (&d, &orig)) in decoded.iter().zip(&w).enumerate() {
             assert_eq!(d.to_bits(), f16_bits_to_f32(f32_to_f16_bits(orig)).to_bits(), "idx {i}");
+        }
+    }
+
+    #[test]
+    fn column_ranged_decode_matches_full_width_bitwise() {
+        let (k, n) = (64usize, 13usize); // odd n: exercises uneven ranges
+        let w = Rng::seed_from_u64(31).uniform_vec(k * n, 0.25);
+        let qt = quantize_tensor(&w, k, n);
+        let planes = PlanePair::from_quantized(&qt);
+        let mut lo = vec![0.0f32; n];
+        let mut hi = vec![0.0f32; n];
+        for p in 0..k / 2 {
+            planes.decode_row_pair_full(p, &mut lo, &mut hi);
+            for (j0, j1) in [(0usize, 5usize), (5, 6), (6, n), (0, n)] {
+                let w = j1 - j0;
+                let mut clo = vec![0.0f32; w];
+                let mut chi = vec![0.0f32; w];
+                planes.decode_row_pair_full_cols(p, j0, j1, &mut clo, &mut chi);
+                for jj in 0..w {
+                    assert_eq!(clo[jj].to_bits(), lo[j0 + jj].to_bits(), "p {p} col {}", j0 + jj);
+                    assert_eq!(chi[jj].to_bits(), hi[j0 + jj].to_bits(), "p {p} col {}", j0 + jj);
+                }
+            }
         }
     }
 

@@ -23,7 +23,7 @@ use super::queue::{
 };
 use super::session::SessionStore;
 use crate::model::{Manifest, SamplingParams};
-use crate::runtime::{builtin_config, load_backend, Backend, ModelSource};
+use crate::runtime::{builtin_config, load_backend_with, Backend, ModelSource, NativeConfig};
 use crate::specdec::{ArSession, BatchEngine, GenSession, SpecConfig, SpecSession};
 
 /// Server configuration.
@@ -42,6 +42,10 @@ pub struct ServerConfig {
     /// Age at which a waiting batch-priority request outranks interactive
     /// traffic (anti-starvation).
     pub batch_promote_after: Duration,
+    /// Kernel worker-pool width per scheduler backend (`0` = auto-detect;
+    /// default from `SPEQ_THREADS`, else serial).  Purely a wall-clock
+    /// knob: generated tokens are bit-identical for every value.
+    pub threads: NativeConfig,
 }
 
 impl Default for ServerConfig {
@@ -54,6 +58,7 @@ impl Default for ServerConfig {
             session_history: 96,
             max_batch: 8,
             batch_promote_after: DEFAULT_BATCH_PROMOTE_AFTER,
+            threads: NativeConfig::default(),
         }
     }
 }
@@ -226,7 +231,8 @@ fn scheduler_main(
     ready: mpsc::Sender<Result<()>>,
 ) {
     // Build the per-scheduler backend stack.
-    let backend: Box<dyn Backend> = match load_backend(&cfg.source, &cfg.model) {
+    let backend: Box<dyn Backend> = match load_backend_with(&cfg.source, &cfg.model, &cfg.threads)
+    {
         Ok(b) => {
             let _ = ready.send(Ok(()));
             b

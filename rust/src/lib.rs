@@ -30,10 +30,16 @@
 //!   only the prefix plane (a quarter of the full pass's weight bytes),
 //!   the full/verify GEMV streams prefix + residual (the FP16
 //!   footprint), and both share one accumulation order so outputs are
-//!   bit-identical to dense execution; the [`runtime::ModelSource`]
-//!   factory, and — behind the non-default `pjrt` cargo feature — the
-//!   PJRT client wrapper that executes AOT-compiled HLO graphs
-//!   buffer-to-buffer.
+//!   bit-identical to dense execution.  Kernels run column-sharded on a
+//!   std-only persistent worker pool (`runtime::pool`), attention runs
+//!   parallel over (sequence, head) pairs, and activations live in a
+//!   flat reusable workspace (no per-step allocation after warm-up);
+//!   because each output element keeps its exact ascending-index
+//!   accumulation order, results are bitwise identical for every thread
+//!   count ([`runtime::NativeConfig`], `--threads`, `SPEQ_THREADS`).
+//!   Also here: the [`runtime::ModelSource`] factory, and — behind the
+//!   non-default `pjrt` cargo feature — the PJRT client wrapper that
+//!   executes AOT-compiled HLO graphs buffer-to-buffer.
 //! * [`model`] — manifests, weight loading, logits post-processing; with
 //!   `pjrt`, the `model::ModelRuntime` PJRT backend implementation.
 //!

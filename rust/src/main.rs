@@ -17,7 +17,9 @@ use speq::accel::{paper_dims, Accel, ArrayMode};
 use speq::coordinator::{Mode, Priority, Server, ServerConfig, SubmitParams};
 use speq::model::{Manifest, SamplingParams};
 use speq::report::{run_experiment, ReportCtx, ReportOpts, EXPERIMENTS};
-use speq::runtime::{builtin_config, builtin_model_names, load_backend, Backend, ModelSource};
+use speq::runtime::{
+    builtin_config, builtin_model_names, load_backend_with, Backend, ModelSource, NativeConfig,
+};
 use speq::specdec::{Engine, SpecConfig};
 use speq::util::cli::Args;
 use speq::workload::{load_task_or_builtin, task_names};
@@ -48,6 +50,13 @@ fn model_source(args: &Args) -> ModelSource {
     }
 }
 
+/// Native runtime config: `--threads N` (0 = auto-detect) beats the
+/// `SPEQ_THREADS` env default.  Thread count never changes output bits —
+/// it is purely a wall-clock knob.
+fn native_config(args: &Args) -> NativeConfig {
+    NativeConfig::with_threads(args.get_usize("threads", NativeConfig::default().threads))
+}
+
 fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("info") => info(args),
@@ -66,10 +75,13 @@ fn dispatch(args: &Args) -> Result<()> {
             println!(
                 "usage: speq <info|report|generate|serve|bench-accel|version> [flags]\n\
                  \n\
-                 speq report --exp <{}|all> [--models a,b] [--n-prompts N] [--gen-len N] [--fresh]\n\
-                 speq generate --model <name> --prompt <text> [--gen-len N] [--temperature T]\n\
-                 speq serve --model <name> [--workers N] [--requests N]\n\
-                 speq info",
+                 speq report --exp <{}|all> [--models a,b] [--n-prompts N] [--gen-len N] [--fresh] [--threads T]\n\
+                 speq generate --model <name> --prompt <text> [--gen-len N] [--temperature T] [--threads T]\n\
+                 speq serve --model <name> [--workers N] [--requests N] [--threads T]\n\
+                 speq info\n\
+                 \n\
+                 --threads T sizes the native kernel worker pool (0 = auto, default\n\
+                 $SPEQ_THREADS or 1); output bits are identical for every T.",
                 EXPERIMENTS.join("|")
             );
             Ok(())
@@ -125,6 +137,7 @@ fn report(args: &Args) -> Result<()> {
         gen_len: args.get_usize("gen-len", 256),
         ppl_windows: args.get_usize("ppl-windows", 12),
         fresh: args.has("fresh"),
+        threads: native_config(args),
     };
     let mut ctx = ReportCtx::new(opts)?;
     run_experiment(&mut ctx, &exp)
@@ -141,10 +154,12 @@ fn generate(args: &Args) -> Result<()> {
     let temperature = args.get_f64("temperature", 0.0) as f32;
 
     let source = model_source(args);
-    let backend = load_backend(&source, model_name)?;
+    let native = native_config(args);
+    let backend = load_backend_with(&source, model_name, &native)?;
     println!(
-        "model {model_name} on {} backend (source: {})",
+        "model {model_name} on {} backend, {} thread(s) (source: {})",
         backend.backend_name(),
+        native.resolved_threads(),
         match &source {
             ModelSource::Builtin => "builtin zoo".to_string(),
             ModelSource::Artifacts(p) => p.display().to_string(),
@@ -207,13 +222,17 @@ fn serve(args: &Args) -> Result<()> {
         workers: args.get_usize("workers", 2),
         queue_capacity: args.get_usize("queue", 64),
         max_batch: args.get_usize("max-batch", 8),
+        threads: native_config(args),
         ..ServerConfig::default()
     };
     let n_requests = args.get_usize("requests", 12);
     let gen_len = args.get_usize("gen-len", 64);
     println!(
-        "starting {} schedulers (max_batch {}) on {} ...",
-        cfg.workers, cfg.max_batch, cfg.model
+        "starting {} schedulers (max_batch {}, {} kernel thread(s) each) on {} ...",
+        cfg.workers,
+        cfg.max_batch,
+        cfg.threads.resolved_threads(),
+        cfg.model
     );
     let manifest = source.manifest()?;
     let server = Server::start(cfg)?;

@@ -6,7 +6,7 @@ use std::path::PathBuf;
 use anyhow::{Context, Result};
 
 use crate::model::{Manifest, SamplingParams};
-use crate::runtime::{load_backend, Backend, ModelSource};
+use crate::runtime::{load_backend_with, Backend, ModelSource, NativeConfig};
 use crate::specdec::{Engine, SpecConfig, SpecTrace};
 use crate::util::json::Value;
 use crate::workload::{load_task, load_trace, save_trace, TraceRecord};
@@ -25,6 +25,9 @@ pub struct ReportOpts {
     pub ppl_windows: usize,
     /// Ignore cached traces.
     pub fresh: bool,
+    /// Native kernel worker-pool width (`--threads`; bit-identical results
+    /// for every value, so cached traces stay valid across widths).
+    pub threads: NativeConfig,
 }
 
 impl Default for ReportOpts {
@@ -36,6 +39,7 @@ impl Default for ReportOpts {
             gen_len: 256,
             ppl_windows: 12,
             fresh: false,
+            threads: NativeConfig::default(),
         }
     }
 }
@@ -71,7 +75,7 @@ impl ReportCtx {
     /// Load (and cache) a model backend.
     pub fn model(&mut self, name: &str) -> Result<&dyn Backend> {
         if !self.models.contains_key(name) {
-            let b = load_backend(&self.source, name)
+            let b = load_backend_with(&self.source, name, &self.opts.threads)
                 .with_context(|| format!("loading model {name}"))?;
             self.models.insert(name.to_string(), b);
         }

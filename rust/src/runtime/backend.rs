@@ -128,6 +128,15 @@ impl TrafficSnapshot {
 /// Atomic weight-traffic counters, owned by a backend and incremented by
 /// its kernels (`&self` methods throughout, so counting needs interior
 /// mutability).
+///
+/// Concurrency contract for the parallel runtime: the counters are
+/// thread-safe (relaxed atomics — totals are exact, only cross-bucket
+/// ordering is unspecified), but a kernel invocation is counted **once
+/// per call on the calling thread**, never inside pool shards.  A weight
+/// row decoded by shard 0 and a row decoded by shard 7 are part of the
+/// same single stream of the tensor; per-shard counting would multiply
+/// reported traffic by the thread count and break the quarter-to-all
+/// ratio's thread invariance.
 #[derive(Debug, Default)]
 pub struct TrafficCounters {
     prefill_bytes: AtomicU64,
@@ -546,15 +555,27 @@ impl ModelSource {
     }
 }
 
-/// Load an execution backend for `model` from `source`.
+/// Load an execution backend for `model` from `source` with the default
+/// native runtime config (`SPEQ_THREADS` or serial).
 ///
 /// With the `pjrt` feature enabled and an artifacts source, the PJRT
 /// backend is tried first (unless `SPEQ_BACKEND=native`) and the native
 /// interpreter is the fallback; the default build always selects the
 /// native backend.
 pub fn load_backend(source: &ModelSource, model: &str) -> Result<Box<dyn Backend>> {
+    load_backend_with(source, model, &super::native::NativeConfig::default())
+}
+
+/// [`load_backend`] with an explicit native runtime config (the
+/// `--threads` CLI knob).  The config only affects the native backend's
+/// worker-pool width — results are bit-identical for every value.
+pub fn load_backend_with(
+    source: &ModelSource,
+    model: &str,
+    native: &super::native::NativeConfig,
+) -> Result<Box<dyn Backend>> {
     match source {
-        ModelSource::Builtin => Ok(Box::new(NativeBackend::builtin(model)?)),
+        ModelSource::Builtin => Ok(Box::new(NativeBackend::builtin_with(model, native)?)),
         ModelSource::Artifacts(root) => {
             let manifest = Manifest::load(root)?;
             #[cfg(feature = "pjrt")]
@@ -570,7 +591,7 @@ pub fn load_backend(source: &ModelSource, model: &str) -> Result<Box<dyn Backend
                     }
                 }
             }
-            Ok(Box::new(NativeBackend::from_manifest(&manifest, model)?))
+            Ok(Box::new(NativeBackend::from_manifest_with(&manifest, model, native)?))
         }
     }
 }

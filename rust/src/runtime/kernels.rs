@@ -1,23 +1,38 @@
-//! Cache-blocked GEMV/GEMM kernels over the bit-plane weight store.
+//! Cache-blocked, column-sharded GEMV/GEMM kernels over the bit-plane
+//! weight store.
 //!
 //! Three kernels share one contract: `X (B, k) @ W (k, n)` with `W`
-//! row-major, the weight-row loop outermost (each row is streamed from
-//! memory exactly once for the whole batch), and per-output accumulation
-//! in ascending-`i` order.  Because the accumulation order is identical
-//! across all three, a kernel swap can never change output bits as long
-//! as the decoded weight values are bitwise equal — the property the
-//! golden-test harness and `prop_planes.rs` pin.
+//! row-major, activations and outputs as *flat* row-major batches
+//! (`xs[b * k + i]`, `ys[b * n + j]` — no per-row heap allocation), the
+//! weight-row loop outermost inside each shard (each row's bytes are
+//! streamed from memory exactly once per shard for the whole batch), and
+//! per-output accumulation in ascending-`i` order.
+//!
+//! **Parallelism and determinism.**  Every kernel splits the *output
+//! column* dimension into contiguous per-shard ranges
+//! ([`pool::col_range`]) executed on a [`WorkerPool`].  A shard owns its
+//! columns outright: it zeroes them, decodes only those columns of each
+//! weight block into a private scratch tile, and accumulates in the exact
+//! ascending-`i` order of the serial loop.  Because each output element is
+//! produced by exactly one shard with an unchanged accumulation order,
+//! kernel outputs are **bitwise identical for every thread count** — the
+//! property `prop_threads.rs` and the golden harness pin.  Traffic
+//! accounting stays with the caller (one count per kernel call, never per
+//! shard — see [`super::TrafficCounters`]).
 //!
 //! * [`gemm_dense`] — plain f32 weights (non-quantizable linears, the
 //!   Algorithm-1 outlier fallback, transformed-weight variants).
 //! * [`gemm_full_planes`] — decodes prefix + residual planes on the fly
-//!   ([`PlanePair::decode_row_pair_full`]), one [`BLOCK_ROWS`]-row block
-//!   at a time into a scratch tile that stays cache-resident while every
-//!   batch row consumes it.
+//!   ([`PlanePair::decode_row_pair_full_cols`]), one [`BLOCK_ROWS`]-row
+//!   block at a time into a scratch tile that stays cache-resident while
+//!   every batch row consumes it.
 //! * [`gemm_draft_prefix`] — decodes *only* the nibble-packed prefix plane
 //!   (plus Eq. 4 group scales), streaming a quarter of the full pass's
 //!   weight bytes per token.
+//!
+//! [`pool::col_range`]: super::pool::col_range
 
+use super::pool::{col_range, SharedSlice, WorkerPool};
 use crate::bsfp::{draft_value, PlanePair, GROUP_SIZE};
 
 /// Weight rows decoded per block.  Must be even (the planes pack row
@@ -42,59 +57,138 @@ pub(crate) fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
     }
 }
 
-/// `X (B, k) @ w (k, n)` with `w` row-major f32.
-///
-/// The weight-row loop is outermost so each row of `w` is streamed from
-/// memory exactly once for the whole batch — the continuous-batching
-/// bandwidth win.  Each output row accumulates in the same `i`-ascending
-/// order as a batch of one, so per-sequence results are bit-identical for
-/// every batch size.
-pub fn gemm_dense(xs: &[Vec<f32>], w: &[f32], k: usize, n: usize) -> Vec<Vec<f32>> {
-    debug_assert!(xs.iter().all(|x| x.len() == k));
-    debug_assert_eq!(w.len(), k * n);
-    let mut ys: Vec<Vec<f32>> = xs.iter().map(|_| vec![0.0f32; n]).collect();
-    for i in 0..k {
-        let row = &w[i * n..(i + 1) * n];
-        for (y, x) in ys.iter_mut().zip(xs) {
-            axpy(y, x[i], row);
-        }
-    }
-    ys
+/// The 16-entry draft dequantization LUT (`draft_value` per 4-bit code).
+pub(crate) fn draft_lut() -> [f32; 16] {
+    std::array::from_fn(|c| draft_value(c as u8))
 }
 
-/// `X (B, k) @ decode_full(planes)` — the full/verify pass kernel.
+/// Decode one nibble-packed prefix row (rows `2p` / `2p+1` at the same
+/// columns) into `lo`/`hi` through the draft LUT:
+/// `draft_value(W_q) * scale / tensor_scale` — bitwise the exact sequence
+/// the retired `derive_draft` dequantization used.  Shared by the draft
+/// GEMM kernel and the cold `decode_linear` diagnostics path (which
+/// previously materialized the whole unpacked-code matrix instead).
+#[inline]
+pub(crate) fn decode_draft_row_pair(
+    prow: &[u8],
+    srow: &[f32],
+    lut: &[f32; 16],
+    tensor_scale: f32,
+    lo: &mut [f32],
+    hi: &mut [f32],
+) {
+    debug_assert!(prow.len() == srow.len() && prow.len() == lo.len() && prow.len() == hi.len());
+    for (jj, &byte) in prow.iter().enumerate() {
+        lo[jj] = lut[(byte & 0xf) as usize] * srow[jj] / tensor_scale;
+        hi[jj] = lut[(byte >> 4) as usize] * srow[jj] / tensor_scale;
+    }
+}
+
+/// `X (B, k) @ w (k, n)` with `w` row-major f32, into `ys (B, n)`.
 ///
-/// Streams prefix + residual (2 bytes per weight, the FP16 footprint) and
-/// reconstructs each block of [`BLOCK_ROWS`] rows into a scratch tile via
-/// the Fig. 5(b) decoder before accumulating.  Row order inside a block is
-/// ascending, so results are bitwise equal to [`gemm_dense`] over the
-/// decoded values.
-pub fn gemm_full_planes(xs: &[Vec<f32>], planes: &PlanePair) -> Vec<Vec<f32>> {
-    let (k, n) = (planes.k, planes.n);
-    debug_assert!(xs.iter().all(|x| x.len() == k));
-    debug_assert_eq!(k % 2, 0);
-    let mut ys: Vec<Vec<f32>> = xs.iter().map(|_| vec![0.0f32; n]).collect();
-    let mut scratch = vec![0.0f32; BLOCK_ROWS * n];
-    let mut i0 = 0;
-    while i0 < k {
-        let rows = BLOCK_ROWS.min(k - i0);
-        debug_assert_eq!(rows % 2, 0, "plane row pairs require an even block");
-        for r in 0..rows / 2 {
-            let (lo, hi) = scratch[2 * r * n..(2 * r + 2) * n].split_at_mut(n);
-            planes.decode_row_pair_full(i0 / 2 + r, lo, hi);
+/// Inside each column shard the weight-row loop is outermost, so each
+/// row's bytes are streamed from memory exactly once per shard for the
+/// whole batch — the continuous-batching bandwidth win.  Each output
+/// element accumulates in the same `i`-ascending order as a serial batch
+/// of one, so results are bit-identical for every batch size and thread
+/// count.
+pub fn gemm_dense(
+    pool: &WorkerPool,
+    xs: &[f32],
+    b: usize,
+    w: &[f32],
+    k: usize,
+    n: usize,
+    ys: &mut [f32],
+) {
+    debug_assert_eq!(xs.len(), b * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(ys.len(), b * n);
+    let t = pool.threads();
+    let y = SharedSlice::new(ys);
+    pool.run(t, |s| {
+        let (j0, j1) = col_range(n, s, t);
+        if j0 == j1 {
+            return;
         }
-        for r in 0..rows {
-            let row = &scratch[r * n..(r + 1) * n];
-            for (y, x) in ys.iter_mut().zip(xs) {
-                axpy(y, x[i0 + r], row);
+        let width = j1 - j0;
+        for bi in 0..b {
+            // SAFETY: shard `s` exclusively owns columns j0..j1 of every
+            // batch row (col_range partitions 0..n disjointly).
+            unsafe { y.slice_mut(bi * n + j0, width) }.fill(0.0);
+        }
+        for i in 0..k {
+            let row = &w[i * n + j0..i * n + j1];
+            for bi in 0..b {
+                let x = xs[bi * k + i];
+                let yrow = unsafe { y.slice_mut(bi * n + j0, width) };
+                axpy(yrow, x, row);
             }
         }
-        i0 += rows;
-    }
-    ys
+    });
 }
 
-/// `X (B, k) @ draft(prefix, scales)` — the quarter-traffic draft kernel.
+/// `X (B, k) @ decode_full(planes)` — the full/verify pass kernel, into
+/// `ys (B, n)`.
+///
+/// Streams prefix + residual (2 bytes per weight, the FP16 footprint) and
+/// reconstructs each shard's columns of a [`BLOCK_ROWS`]-row block into a
+/// private region of `scratch` (length >= `BLOCK_ROWS * n`) via the
+/// Fig. 5(b) decoder before accumulating.  Row order inside a block is
+/// ascending, so results are bitwise equal to [`gemm_dense`] over the
+/// decoded values.
+pub fn gemm_full_planes(
+    pool: &WorkerPool,
+    xs: &[f32],
+    b: usize,
+    planes: &PlanePair,
+    scratch: &mut [f32],
+    ys: &mut [f32],
+) {
+    let (k, n) = (planes.k, planes.n);
+    debug_assert_eq!(xs.len(), b * k);
+    debug_assert_eq!(ys.len(), b * n);
+    debug_assert!(scratch.len() >= BLOCK_ROWS * n);
+    debug_assert_eq!(k % 2, 0);
+    let t = pool.threads();
+    let y = SharedSlice::new(ys);
+    let tiles = SharedSlice::new(&mut scratch[..BLOCK_ROWS * n]);
+    pool.run(t, |s| {
+        let (j0, j1) = col_range(n, s, t);
+        if j0 == j1 {
+            return;
+        }
+        let width = j1 - j0;
+        // SAFETY: per-shard regions are disjoint — shard widths sum to n,
+        // so `BLOCK_ROWS * j0` offsets never overlap; same for the output
+        // columns.
+        let tile = unsafe { tiles.slice_mut(BLOCK_ROWS * j0, BLOCK_ROWS * width) };
+        for bi in 0..b {
+            unsafe { y.slice_mut(bi * n + j0, width) }.fill(0.0);
+        }
+        let mut i0 = 0;
+        while i0 < k {
+            let rows = BLOCK_ROWS.min(k - i0);
+            debug_assert_eq!(rows % 2, 0, "plane row pairs require an even block");
+            for r in 0..rows / 2 {
+                let (lo, hi) = tile[2 * r * width..(2 * r + 2) * width].split_at_mut(width);
+                planes.decode_row_pair_full_cols(i0 / 2 + r, j0, j1, lo, hi);
+            }
+            for r in 0..rows {
+                let trow = &tile[r * width..(r + 1) * width];
+                for bi in 0..b {
+                    let x = xs[bi * k + i0 + r];
+                    let yrow = unsafe { y.slice_mut(bi * n + j0, width) };
+                    axpy(yrow, x, trow);
+                }
+            }
+            i0 += rows;
+        }
+    });
+}
+
+/// `X (B, k) @ draft(prefix, scales)` — the quarter-traffic draft kernel,
+/// into `ys (B, n)`.
 ///
 /// Streams only the nibble-packed prefix plane plus the Eq. 4 group
 /// scales.  Each decoded value is computed as
@@ -104,46 +198,63 @@ pub fn gemm_full_planes(xs: &[Vec<f32>], planes: &PlanePair) -> Vec<Vec<f32>> {
 /// tensor scale), so kernel outputs are bit-identical to the old
 /// materialized draft weights.  `tensor_scale` is 1.0 for in-domain
 /// tensors (division by 1.0 is an IEEE identity).
+#[allow(clippy::too_many_arguments)]
 pub fn gemm_draft_prefix(
-    xs: &[Vec<f32>],
+    pool: &WorkerPool,
+    xs: &[f32],
+    b: usize,
     prefix: &[u8],
     scales: &[f32],
     tensor_scale: f32,
     k: usize,
     n: usize,
-) -> Vec<Vec<f32>> {
-    debug_assert!(xs.iter().all(|x| x.len() == k));
+    scratch: &mut [f32],
+    ys: &mut [f32],
+) {
+    debug_assert_eq!(xs.len(), b * k);
+    debug_assert_eq!(ys.len(), b * n);
+    debug_assert!(scratch.len() >= BLOCK_ROWS * n);
     debug_assert_eq!(prefix.len(), k / 2 * n);
     debug_assert_eq!(scales.len(), k / GROUP_SIZE * n);
     debug_assert_eq!(k % GROUP_SIZE, 0);
-    let lut: [f32; 16] = std::array::from_fn(|c| draft_value(c as u8));
-    let mut ys: Vec<Vec<f32>> = xs.iter().map(|_| vec![0.0f32; n]).collect();
-    let mut scratch = vec![0.0f32; BLOCK_ROWS * n];
-    let mut i0 = 0;
-    while i0 < k {
-        let rows = BLOCK_ROWS.min(k - i0);
-        debug_assert_eq!(rows % 2, 0);
-        // BLOCK_ROWS divides GROUP_SIZE, so the whole block shares one
-        // scale-group row.
-        let srow = &scales[(i0 / GROUP_SIZE) * n..(i0 / GROUP_SIZE + 1) * n];
-        for r in 0..rows / 2 {
-            let prow = &prefix[(i0 / 2 + r) * n..(i0 / 2 + r + 1) * n];
-            let (lo, hi) = scratch[2 * r * n..(2 * r + 2) * n].split_at_mut(n);
-            for j in 0..n {
-                let byte = prow[j];
-                lo[j] = lut[(byte & 0xf) as usize] * srow[j] / tensor_scale;
-                hi[j] = lut[(byte >> 4) as usize] * srow[j] / tensor_scale;
-            }
+    let lut = draft_lut();
+    let t = pool.threads();
+    let y = SharedSlice::new(ys);
+    let tiles = SharedSlice::new(&mut scratch[..BLOCK_ROWS * n]);
+    pool.run(t, |s| {
+        let (j0, j1) = col_range(n, s, t);
+        if j0 == j1 {
+            return;
         }
-        for r in 0..rows {
-            let row = &scratch[r * n..(r + 1) * n];
-            for (y, x) in ys.iter_mut().zip(xs) {
-                axpy(y, x[i0 + r], row);
-            }
+        let width = j1 - j0;
+        // SAFETY: disjoint per-shard regions, as in `gemm_full_planes`.
+        let tile = unsafe { tiles.slice_mut(BLOCK_ROWS * j0, BLOCK_ROWS * width) };
+        for bi in 0..b {
+            unsafe { y.slice_mut(bi * n + j0, width) }.fill(0.0);
         }
-        i0 += rows;
-    }
-    ys
+        let mut i0 = 0;
+        while i0 < k {
+            let rows = BLOCK_ROWS.min(k - i0);
+            debug_assert_eq!(rows % 2, 0);
+            // BLOCK_ROWS divides GROUP_SIZE, so the whole block shares one
+            // scale-group row.
+            let srow = &scales[(i0 / GROUP_SIZE) * n + j0..(i0 / GROUP_SIZE) * n + j1];
+            for r in 0..rows / 2 {
+                let prow = &prefix[(i0 / 2 + r) * n + j0..(i0 / 2 + r) * n + j1];
+                let (lo, hi) = tile[2 * r * width..(2 * r + 2) * width].split_at_mut(width);
+                decode_draft_row_pair(prow, srow, &lut, tensor_scale, lo, hi);
+            }
+            for r in 0..rows {
+                let trow = &tile[r * width..(r + 1) * width];
+                for bi in 0..b {
+                    let x = xs[bi * k + i0 + r];
+                    let yrow = unsafe { y.slice_mut(bi * n + j0, width) };
+                    axpy(yrow, x, trow);
+                }
+            }
+            i0 += rows;
+        }
+    });
 }
 
 #[cfg(test)]
@@ -152,13 +263,48 @@ mod tests {
     use crate::bsfp::quantize_tensor;
     use crate::util::rng::Rng;
 
-    fn batch(b: usize, k: usize, seed: u64) -> Vec<Vec<f32>> {
+    fn batch(b: usize, k: usize, seed: u64) -> Vec<f32> {
         let mut rng = Rng::seed_from_u64(seed);
-        (0..b).map(|_| rng.normal_vec(k, 1.0)).collect()
+        let mut out = Vec::with_capacity(b * k);
+        for _ in 0..b {
+            out.extend(rng.normal_vec(k, 1.0));
+        }
+        out
+    }
+
+    fn run_dense(pool: &WorkerPool, xs: &[f32], b: usize, w: &[f32], k: usize, n: usize) -> Vec<f32> {
+        let mut ys = vec![f32::NAN; b * n];
+        gemm_dense(pool, xs, b, w, k, n, &mut ys);
+        ys
+    }
+
+    fn run_full(pool: &WorkerPool, xs: &[f32], b: usize, planes: &PlanePair) -> Vec<f32> {
+        let mut ys = vec![f32::NAN; b * planes.n];
+        let mut scratch = vec![0.0f32; BLOCK_ROWS * planes.n];
+        gemm_full_planes(pool, xs, b, planes, &mut scratch, &mut ys);
+        ys
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_draft(
+        pool: &WorkerPool,
+        xs: &[f32],
+        b: usize,
+        prefix: &[u8],
+        scales: &[f32],
+        ts: f32,
+        k: usize,
+        n: usize,
+    ) -> Vec<f32> {
+        let mut ys = vec![f32::NAN; b * n];
+        let mut scratch = vec![0.0f32; BLOCK_ROWS * n];
+        gemm_draft_prefix(pool, xs, b, prefix, scales, ts, k, n, &mut scratch, &mut ys);
+        ys
     }
 
     #[test]
     fn full_plane_kernel_matches_dense_bitwise() {
+        let pool = WorkerPool::new(1);
         let (k, n) = (256, 24);
         let w = Rng::seed_from_u64(3).uniform_vec(k * n, 0.4);
         let qt = quantize_tensor(&w, k, n);
@@ -167,17 +313,16 @@ mod tests {
         // order, so bits must match exactly.
         let decoded = planes.decode_full_f32();
         let xs = batch(3, k, 11);
-        let dense = gemm_dense(&xs, &decoded, k, n);
-        let packed = gemm_full_planes(&xs, &planes);
-        for (b, (dr, pr)) in dense.iter().zip(&packed).enumerate() {
-            for (j, (d, p)) in dr.iter().zip(pr).enumerate() {
-                assert_eq!(d.to_bits(), p.to_bits(), "batch {b} col {j}");
-            }
+        let dense = run_dense(&pool, &xs, 3, &decoded, k, n);
+        let packed = run_full(&pool, &xs, 3, &planes);
+        for (i, (d, p)) in dense.iter().zip(&packed).enumerate() {
+            assert_eq!(d.to_bits(), p.to_bits(), "flat idx {i}");
         }
     }
 
     #[test]
     fn draft_prefix_kernel_matches_retired_dequant_bitwise() {
+        let pool = WorkerPool::new(1);
         let (k, n) = (256, 16);
         let w = Rng::seed_from_u64(5).uniform_vec(k * n, 0.3);
         let qt = quantize_tensor(&w, k, n);
@@ -188,18 +333,17 @@ mod tests {
             *v /= qt.tensor_scale;
         }
         let xs = batch(2, k, 13);
-        let dense = gemm_dense(&xs, &old, k, n);
+        let dense = run_dense(&pool, &xs, 2, &old, k, n);
         let packed =
-            gemm_draft_prefix(&xs, &qt.packed_wq(), &qt.scales, qt.tensor_scale, k, n);
-        for (b, (dr, pr)) in dense.iter().zip(&packed).enumerate() {
-            for (j, (d, p)) in dr.iter().zip(pr).enumerate() {
-                assert_eq!(d.to_bits(), p.to_bits(), "batch {b} col {j}");
-            }
+            run_draft(&pool, &xs, 2, &qt.packed_wq(), &qt.scales, qt.tensor_scale, k, n);
+        for (i, (d, p)) in dense.iter().zip(&packed).enumerate() {
+            assert_eq!(d.to_bits(), p.to_bits(), "flat idx {i}");
         }
     }
 
     #[test]
     fn draft_kernel_handles_outlier_tensor_scale() {
+        let pool = WorkerPool::new(1);
         let (k, n) = (128, 4);
         let mut w = Rng::seed_from_u64(8).uniform_vec(k * n, 0.2);
         w[10] = 2.75; // force the Algorithm-1 pre-scale
@@ -210,24 +354,74 @@ mod tests {
             *v /= qt.tensor_scale;
         }
         let xs = batch(1, k, 17);
-        let dense = gemm_dense(&xs, &old, k, n);
+        let dense = run_dense(&pool, &xs, 1, &old, k, n);
         let packed =
-            gemm_draft_prefix(&xs, &qt.packed_wq(), &qt.scales, qt.tensor_scale, k, n);
-        assert_eq!(dense[0].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-                   packed[0].iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+            run_draft(&pool, &xs, 1, &qt.packed_wq(), &qt.scales, qt.tensor_scale, k, n);
+        assert_eq!(
+            dense.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            packed.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]
     fn kernels_are_batch_size_invariant() {
+        let pool = WorkerPool::new(1);
         let (k, n) = (128, 8);
         let w = Rng::seed_from_u64(21).uniform_vec(k * n, 0.3);
         let qt = quantize_tensor(&w, k, n);
         let planes = qt.planes();
         let xs = batch(4, k, 23);
-        let full_b4 = gemm_full_planes(&xs, &planes);
-        for (i, x) in xs.iter().enumerate() {
-            let solo = gemm_full_planes(std::slice::from_ref(x), &planes);
-            assert_eq!(solo[0], full_b4[i], "full kernel diverged for seq {i}");
+        let full_b4 = run_full(&pool, &xs, 4, &planes);
+        for i in 0..4 {
+            let solo = run_full(&pool, &xs[i * k..(i + 1) * k], 1, &planes);
+            assert_eq!(
+                solo,
+                full_b4[i * n..(i + 1) * n],
+                "full kernel diverged for seq {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn kernels_are_thread_count_invariant_bitwise() {
+        // The tentpole's pin: for any thread count, every kernel's output
+        // bits equal the serial (T=1) bits — including odd column counts
+        // that leave some shards wider than others or empty.
+        let (k, b) = (128usize, 3usize);
+        for n in [1usize, 7, 24, 33] {
+            let w = Rng::seed_from_u64(41).uniform_vec(k * n, 0.35);
+            let qt = quantize_tensor(&w, k, n);
+            let planes = qt.planes();
+            let xs = batch(b, k, 43);
+            let serial = WorkerPool::new(1);
+            let dense1 = run_dense(&serial, &xs, b, &w, k, n);
+            let full1 = run_full(&serial, &xs, b, &planes);
+            let draft1 =
+                run_draft(&serial, &xs, b, &qt.packed_wq(), &qt.scales, qt.tensor_scale, k, n);
+            for t in [2usize, 3, 4, 8] {
+                let pool = WorkerPool::new(t);
+                let dense_t = run_dense(&pool, &xs, b, &w, k, n);
+                let full_t = run_full(&pool, &xs, b, &planes);
+                let draft_t = run_draft(
+                    &pool,
+                    &xs,
+                    b,
+                    &qt.packed_wq(),
+                    &qt.scales,
+                    qt.tensor_scale,
+                    k,
+                    n,
+                );
+                for (i, (a, c)) in dense1.iter().zip(&dense_t).enumerate() {
+                    assert_eq!(a.to_bits(), c.to_bits(), "dense T={t} n={n} idx {i}");
+                }
+                for (i, (a, c)) in full1.iter().zip(&full_t).enumerate() {
+                    assert_eq!(a.to_bits(), c.to_bits(), "full T={t} n={n} idx {i}");
+                }
+                for (i, (a, c)) in draft1.iter().zip(&draft_t).enumerate() {
+                    assert_eq!(a.to_bits(), c.to_bits(), "draft T={t} n={n} idx {i}");
+                }
+            }
         }
     }
 }

@@ -16,6 +16,13 @@
 //!   planes on the fly: the draft kernel streams only the prefix plane
 //!   (quarter traffic), the full/verify kernel streams both planes, and
 //!   all kernels share one accumulation order (bit-identity across paths).
+//!   Kernels take flat strided batches and shard the output-column
+//!   dimension across the worker pool.
+//! * [`pool`] — the std-only persistent [`WorkerPool`] behind the
+//!   parallel kernels: static job assignment, contiguous column shards,
+//!   and a determinism contract that makes results bitwise identical for
+//!   every thread count ([`NativeConfig`] / `--threads` / `SPEQ_THREADS`
+//!   select the width).
 //! * `exec`/`hlo` (`pjrt` feature) — the `xla` crate wrapper: HLO text
 //!   loading, compilation, buffer-to-buffer execution.  The interchange is
 //!   HLO **text** (xla_extension 0.5.1 rejects jax >= 0.5's 64-bit-id
@@ -24,12 +31,16 @@
 pub mod backend;
 pub mod kernels;
 pub mod native;
+pub mod pool;
 
 pub use backend::{
-    load_backend, Backend, BackendState, ModelSource, PassKind, SeqSlot, SlotArena, StepOutput,
-    TrafficCounters, TrafficSnapshot, VerifyOutput,
+    load_backend, load_backend_with, Backend, BackendState, ModelSource, PassKind, SeqSlot,
+    SlotArena, StepOutput, TrafficCounters, TrafficSnapshot, VerifyOutput,
 };
-pub use native::{builtin_config, builtin_model_names, InitStyle, NativeBackend, S_SLOTS};
+pub use native::{
+    builtin_config, builtin_model_names, InitStyle, NativeBackend, NativeConfig, S_SLOTS,
+};
+pub use pool::WorkerPool;
 
 #[cfg(feature = "pjrt")]
 mod exec;

@@ -26,6 +26,22 @@
 //! the cold [`Backend::weights`] analysis/transform API — the redundant
 //! u16 bit copy is dropped at load (the planes are those bits).
 //!
+//! **Parallel runtime.**  Every GEMM runs on a backend-owned persistent
+//! [`WorkerPool`] ([`super::pool`]), sharded over contiguous
+//! output-column ranges; attention is parallelized over `(sequence,
+//! head)` pairs.  The pool width comes from [`NativeConfig`] (the
+//! `--threads` CLI knob / `SPEQ_THREADS` env var, 0 = auto-detect) and is
+//! *purely* a wall-clock knob: every output element keeps its exact
+//! ascending-index accumulation order, so results are bitwise identical
+//! for every thread count (pinned by `prop_threads.rs` and the goldens).
+//!
+//! **Flat workspace.**  `step_batch` runs entirely out of a reusable
+//! [`Workspace`] of flat `B x n` activation matrices (ping-pong residual
+//! stream, attention scores/context, MLP gate/up, logits, kernel decode
+//! scratch).  Buffers grow monotonically to the largest batch seen
+//! (warm-up); after that a step performs no heap allocation inside the
+//! interpreter — `step_batch` debug-asserts it.
+//!
 //! Determinism contract: `decode_full` and each row of `verify` run the
 //! exact same code path over the exact same f32 operations, which makes
 //! greedy speculative decoding *bit-identical* to the autoregressive
@@ -43,6 +59,7 @@
 //! * [`NativeBackend::synthetic`] — custom configs for tests.
 
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
@@ -50,10 +67,14 @@ use super::backend::{
     Backend, BackendState, PassKind, SeqSlot, SlotArena, StepOutput, TrafficCounters,
     TrafficSnapshot, VerifyOutput,
 };
-use super::kernels::{axpy, dot, gemm_dense, gemm_draft_prefix, gemm_full_planes};
+use super::kernels::{
+    axpy, decode_draft_row_pair, dot, draft_lut, gemm_dense, gemm_draft_prefix,
+    gemm_full_planes, BLOCK_ROWS,
+};
+use super::pool::{SharedSlice, WorkerPool};
 use crate::bsfp::{
-    draft_value, f16_bits_to_f32, f32_to_f16_bits, fp16_exact_in_domain, quantize_tensor,
-    unpack_nibbles, PlanePair, GROUP_SIZE,
+    f16_bits_to_f32, f32_to_f16_bits, fp16_exact_in_domain, quantize_tensor, PlanePair,
+    GROUP_SIZE,
 };
 use crate::model::{load_weights, HostWeights, Manifest, ModelConfig};
 use crate::util::rng::Rng;
@@ -85,10 +106,126 @@ pub enum InitStyle {
     Random,
 }
 
+/// Runtime knobs of the native backend (everything *outside* the model:
+/// results are bit-identical for every setting).
+#[derive(Debug, Clone)]
+pub struct NativeConfig {
+    /// Worker-pool width for the parallel kernels: the calling thread plus
+    /// `threads - 1` persistent workers.  `0` = auto-detect
+    /// (`std::thread::available_parallelism`).  Purely a wall-clock knob —
+    /// the column-sharded kernels keep every output element's accumulation
+    /// order thread-count invariant.
+    pub threads: usize,
+}
+
+impl Default for NativeConfig {
+    /// `SPEQ_THREADS` when set (`0` = auto-detect), else 1 (serial).
+    fn default() -> Self {
+        let threads = std::env::var("SPEQ_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(1);
+        Self { threads }
+    }
+}
+
+impl NativeConfig {
+    /// A config with an explicit pool width (`0` = auto-detect).
+    pub fn with_threads(threads: usize) -> Self {
+        Self { threads }
+    }
+
+    /// The pool width this config resolves to (`0` -> core count).
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            self.threads
+        }
+    }
+}
+
 /// Host-memory request state: the flattened KV cache
 /// `f32[L, 2, C, H, Dh]`.
 pub struct NativeState {
     kv: Vec<f32>,
+}
+
+/// Reusable flat activation buffers for `step_batch` — all row-major
+/// `B x n` matrices plus the kernels' block-decode scratch.  Buffers grow
+/// monotonically to the largest batch seen and are reused verbatim after
+/// that (`growths` counts the growth events; the steady state adds zero
+/// heap allocation per step).
+struct Workspace {
+    /// Batch rows the buffers are currently sized for.
+    cap_b: usize,
+    /// Residual stream, `B x d`.
+    x: Vec<f32>,
+    /// RMSNorm output (attention + MLP + final), `B x d`.
+    h: Vec<f32>,
+    /// Attention projections, `B x d` each.
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Attention context (head-concatenated), `B x d`.
+    ctx: Vec<f32>,
+    /// Linear output staging (wo / w_down), `B x d`.
+    o: Vec<f32>,
+    /// MLP intermediates, `B x d_ff` each.
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    /// Per-(sequence, head) attention scores, `B x n_heads x cache_len`.
+    scores: Vec<f32>,
+    /// Output logits, `B x vocab`.
+    logits: Vec<f32>,
+    /// Kernel decode tiles, `BLOCK_ROWS x max(d, d_ff, vocab)`.
+    scratch: Vec<f32>,
+    /// Buffer growth events since construction (warm-up counter).
+    growths: u64,
+}
+
+impl Workspace {
+    fn new() -> Self {
+        Self {
+            cap_b: 0,
+            x: Vec::new(),
+            h: Vec::new(),
+            q: Vec::new(),
+            k: Vec::new(),
+            v: Vec::new(),
+            ctx: Vec::new(),
+            o: Vec::new(),
+            gate: Vec::new(),
+            up: Vec::new(),
+            scores: Vec::new(),
+            logits: Vec::new(),
+            scratch: Vec::new(),
+            growths: 0,
+        }
+    }
+
+    /// Size every buffer for a batch of `b` (no-op once `b <= cap_b`).
+    fn prepare(&mut self, c: &ModelConfig, b: usize) {
+        if b <= self.cap_b {
+            return;
+        }
+        let d = c.d_model;
+        let n_max = d.max(c.d_ff).max(c.vocab);
+        self.x.resize(b * d, 0.0);
+        self.h.resize(b * d, 0.0);
+        self.q.resize(b * d, 0.0);
+        self.k.resize(b * d, 0.0);
+        self.v.resize(b * d, 0.0);
+        self.ctx.resize(b * d, 0.0);
+        self.o.resize(b * d, 0.0);
+        self.gate.resize(b * c.d_ff, 0.0);
+        self.up.resize(b * c.d_ff, 0.0);
+        self.scores.resize(b * c.n_heads * c.cache_len, 0.0);
+        self.logits.resize(b * c.vocab, 0.0);
+        self.scratch.resize(BLOCK_ROWS * n_max, 0.0);
+        self.cap_b = b;
+        self.growths += 1;
+    }
 }
 
 impl NativeState {
@@ -132,6 +269,11 @@ pub struct NativeBackend {
     layer_names: Vec<LayerNames>,
     /// Per-sequence KV states for the batched serving API.
     arena: SlotArena,
+    /// Persistent worker pool the column-sharded kernels run on.
+    pool: WorkerPool,
+    /// Reusable flat activation buffers (one in-flight step at a time;
+    /// the mutex keeps the backend `Sync` and is uncontended in practice).
+    workspace: Mutex<Workspace>,
 }
 
 /// Deterministic `(name, shape)` parameter list — mirrors
@@ -203,12 +345,25 @@ fn builtin_seed(name: &str) -> u64 {
 }
 
 impl NativeBackend {
-    /// Build from explicit weights (the general constructor).
+    /// Build from explicit weights with the env-default runtime config
+    /// (`SPEQ_THREADS`, else serial).
     pub fn from_weights(
+        config: ModelConfig,
+        linears: Vec<String>,
+        weights: HostWeights,
+        slots: usize,
+    ) -> Result<Self> {
+        Self::from_weights_with(config, linears, weights, slots, &NativeConfig::default())
+    }
+
+    /// Build from explicit weights (the general constructor); the worker
+    /// pool is built once at `native`'s resolved width.
+    pub fn from_weights_with(
         config: ModelConfig,
         linears: Vec<String>,
         mut weights: HostWeights,
         slots: usize,
+        native: &NativeConfig,
     ) -> Result<Self> {
         anyhow::ensure!(config.n_heads > 0 && config.d_model % config.n_heads == 0,
             "d_model {} not divisible by n_heads {}", config.d_model, config.n_heads);
@@ -252,26 +407,64 @@ impl NativeBackend {
             freqs,
             layer_names,
             arena: SlotArena::new(),
+            pool: WorkerPool::new(native.resolved_threads()),
+            workspace: Mutex::new(Workspace::new()),
         })
+    }
+
+    /// Resize the worker pool (`0` = auto-detect).  Results are
+    /// bit-identical for every width — this is purely a wall-clock knob.
+    pub fn set_threads(&mut self, threads: usize) {
+        let t = NativeConfig::with_threads(threads).resolved_threads();
+        if t != self.pool.threads() {
+            self.pool = WorkerPool::new(t);
+        }
+    }
+
+    /// Current worker-pool width (caller thread included).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Workspace buffer-growth events so far.  Growth happens only while
+    /// warming up to a larger batch; a steady-state `step_batch` performs
+    /// no heap allocation inside the interpreter (debug-asserted there).
+    pub fn workspace_growths(&self) -> u64 {
+        self.workspace.lock().unwrap_or_else(|e| e.into_inner()).growths
     }
 
     /// Load trained weights from an artifacts manifest (no HLO needed).
     pub fn from_manifest(manifest: &Manifest, name: &str) -> Result<Self> {
+        Self::from_manifest_with(manifest, name, &NativeConfig::default())
+    }
+
+    /// [`NativeBackend::from_manifest`] with an explicit runtime config.
+    pub fn from_manifest_with(
+        manifest: &Manifest,
+        name: &str,
+        native: &NativeConfig,
+    ) -> Result<Self> {
         let entry = manifest.model(name)?;
         let weights = load_weights(manifest.path(&entry.weights), entry)
             .with_context(|| format!("loading weights for {name}"))?;
-        Self::from_weights(
+        Self::from_weights_with(
             entry.config.clone(),
             entry.linears.clone(),
             weights,
             entry.state_slots,
+            native,
         )
     }
 
     /// A built-in synthetic model by zoo name (no artifacts required).
     pub fn builtin(name: &str) -> Result<Self> {
+        Self::builtin_with(name, &NativeConfig::default())
+    }
+
+    /// [`NativeBackend::builtin`] with an explicit runtime config.
+    pub fn builtin_with(name: &str, native: &NativeConfig) -> Result<Self> {
         let config = builtin_config(name)?;
-        Self::synthetic(config, S_SLOTS, builtin_seed(name), InitStyle::Confident)
+        Self::synthetic_with(config, S_SLOTS, builtin_seed(name), InitStyle::Confident, native)
     }
 
     /// Build a synthetic model for an arbitrary configuration.
@@ -280,15 +473,26 @@ impl NativeBackend {
     /// parameters are rounded to FP16 (the codec's substrate), exactly as
     /// the trained artifacts are.
     pub fn synthetic(
-        mut config: ModelConfig,
+        config: ModelConfig,
         slots: usize,
         seed: u64,
         style: InitStyle,
     ) -> Result<Self> {
+        Self::synthetic_with(config, slots, seed, style, &NativeConfig::default())
+    }
+
+    /// [`NativeBackend::synthetic`] with an explicit runtime config.
+    pub fn synthetic_with(
+        mut config: ModelConfig,
+        slots: usize,
+        seed: u64,
+        style: InitStyle,
+        native: &NativeConfig,
+    ) -> Result<Self> {
         config.param_count =
             param_shapes(&config).iter().map(|(_, s)| s.iter().product::<usize>()).sum();
         let weights = synthetic_weights(&config, seed, style);
-        Self::from_weights(config.clone(), linear_names(&config), weights, slots)
+        Self::from_weights_with(config.clone(), linear_names(&config), weights, slots, native)
     }
 
     fn kv_elements(&self) -> usize {
@@ -326,35 +530,71 @@ impl NativeBackend {
         self.weights.f32(name)
     }
 
-    /// Batched linear `X @ name`, routed through the bit-plane store and
-    /// counted against `kind`'s traffic bucket.  The draft pass streams
-    /// the prefix plane + Eq. 4 scales; every other pass streams prefix +
-    /// residual (packed tensors) or the dense fallback.
-    fn mm(&self, kind: PassKind, xs: &[Vec<f32>], name: &str, k: usize, n: usize) -> Vec<Vec<f32>> {
+    /// Batched linear `X (B, k) @ name`, flat row-major in and out, routed
+    /// through the bit-plane store and counted against `kind`'s traffic
+    /// bucket.  The draft pass streams the prefix plane + Eq. 4 scales;
+    /// every other pass streams prefix + residual (packed tensors) or the
+    /// dense fallback.  Traffic is counted **once per call**, on the
+    /// calling thread, never inside kernel shards — the pool only ever
+    /// executes closures that don't touch the counters.
+    #[allow(clippy::too_many_arguments)]
+    fn mm(
+        &self,
+        kind: PassKind,
+        xs: &[f32],
+        b: usize,
+        name: &str,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+        scratch: &mut [f32],
+    ) {
         match self.store.get(name) {
             Some(LinearStore::Packed { planes, scales }) => {
                 if kind == PassKind::Draft {
                     self.traffic
                         .add_bytes(kind, (planes.prefix_bytes() + scales.len() * 4) as u64);
-                    gemm_draft_prefix(xs, &planes.prefix, scales, 1.0, k, n)
+                    gemm_draft_prefix(
+                        &self.pool,
+                        xs,
+                        b,
+                        &planes.prefix,
+                        scales,
+                        1.0,
+                        k,
+                        n,
+                        scratch,
+                        out,
+                    )
                 } else {
                     self.traffic.add_bytes(kind, planes.full_bytes() as u64);
-                    gemm_full_planes(xs, planes)
+                    gemm_full_planes(&self.pool, xs, b, planes, scratch, out)
                 }
             }
             Some(LinearStore::Split { prefix, scales, tensor_scale }) => {
                 if kind == PassKind::Draft {
                     self.traffic
                         .add_bytes(kind, (prefix.len() + scales.len() * 4 + 4) as u64);
-                    gemm_draft_prefix(xs, prefix, scales, *tensor_scale, k, n)
+                    gemm_draft_prefix(
+                        &self.pool,
+                        xs,
+                        b,
+                        prefix,
+                        scales,
+                        *tensor_scale,
+                        k,
+                        n,
+                        scratch,
+                        out,
+                    )
                 } else {
                     self.traffic.add_bytes(kind, (k * n * 4) as u64);
-                    gemm_dense(xs, self.weights.f32(name), k, n)
+                    gemm_dense(&self.pool, xs, b, self.weights.f32(name), k, n, out)
                 }
             }
             None => {
                 self.traffic.add_bytes(kind, (k * n * 4) as u64);
-                gemm_dense(xs, self.weights.f32(name), k, n)
+                gemm_dense(&self.pool, xs, b, self.weights.f32(name), k, n, out)
             }
         }
     }
@@ -377,29 +617,32 @@ impl NativeBackend {
     pub fn decode_linear(&self, name: &str, draft: bool) -> Vec<f32> {
         let shape = self.weights.shape(name);
         let (k, n) = (shape[0], *shape.get(1).unwrap_or(&1));
-        let decode_draft = |codes: &[u8], scales: &[f32], tensor_scale: f32| -> Vec<f32> {
-            let lut: [f32; 16] = std::array::from_fn(|c| draft_value(c as u8));
+        // Stream the nibble-packed prefix plane row-pair-wise through the
+        // kernels' shared LUT path — no O(k*n) unpacked-code temporary.
+        // Row pairs (2p, 2p+1) share a scale-group row (GROUP_SIZE is
+        // even), exactly as the draft GEMM kernel reads them.
+        let decode_draft_plane = |prefix: &[u8], scales: &[f32], tensor_scale: f32| -> Vec<f32> {
+            let lut = draft_lut();
             let mut out = vec![0.0f32; k * n];
-            for i in 0..k {
-                let srow = &scales[(i / GROUP_SIZE) * n..(i / GROUP_SIZE + 1) * n];
-                for j in 0..n {
-                    out[i * n + j] =
-                        lut[(codes[i * n + j] & 0xf) as usize] * srow[j] / tensor_scale;
-                }
+            for p in 0..k / 2 {
+                let prow = &prefix[p * n..(p + 1) * n];
+                let srow = &scales[(2 * p / GROUP_SIZE) * n..(2 * p / GROUP_SIZE + 1) * n];
+                let (lo, hi) = out[2 * p * n..(2 * p + 2) * n].split_at_mut(n);
+                decode_draft_row_pair(prow, srow, &lut, tensor_scale, lo, hi);
             }
             out
         };
         match self.store.get(name) {
             Some(LinearStore::Packed { planes, scales }) => {
                 if draft {
-                    decode_draft(&planes.codes(), scales, 1.0)
+                    decode_draft_plane(&planes.prefix, scales, 1.0)
                 } else {
                     planes.decode_full_f32()
                 }
             }
             Some(LinearStore::Split { prefix, scales, tensor_scale }) => {
                 if draft {
-                    decode_draft(&unpack_nibbles(prefix, k, n), scales, *tensor_scale)
+                    decode_draft_plane(prefix, scales, *tensor_scale)
                 } else {
                     self.weights.f32(name).to_vec()
                 }
@@ -421,9 +664,13 @@ impl NativeBackend {
     ///
     /// Every linear streams each weight row exactly once for the whole
     /// batch (`B×K · K×N` instead of `B` GEMVs) — the memory-bandwidth win
-    /// continuous batching exists for.  Per-sequence accumulation order is
-    /// identical to a batch of one, so results are bit-identical to
-    /// sequential execution regardless of batch composition.
+    /// continuous batching exists for.  Activations live in the flat
+    /// backend-owned [`Workspace`] (no per-layer/per-token allocation
+    /// after warm-up; debug-asserted below), linears run column-sharded on
+    /// the worker pool, and attention runs parallel over `(sequence,
+    /// head)` pairs.  Per-sequence accumulation order is identical to a
+    /// serial batch of one on one thread, so results are bit-identical to
+    /// sequential execution regardless of batch composition or pool width.
     fn step_batch(
         &self,
         kind: PassKind,
@@ -448,75 +695,108 @@ impl NativeBackend {
             anyhow::ensure!(p < c.cache_len, "position {p} exceeds cache_len {}", c.cache_len);
         }
         let (d, hd, nh) = (c.d_model, c.head_dim, c.n_heads);
+        let (ff, v, clen) = (c.d_ff, c.vocab, c.cache_len);
         // Traffic: one token (or verify row) per sequence; the embedding
         // row gather per sequence plus each norm vector once per batch
         // (linears are counted inside `mm`).
         self.traffic.add_tokens(kind, b as u64);
         self.traffic
             .add_bytes(kind, ((b * d + (2 * c.n_layers + 1) * d) * 4) as u64);
+        let mut guard = self.workspace.lock().unwrap_or_else(|e| e.into_inner());
+        let ws = &mut *guard;
+        // A workspace already sized for this batch is warm: the entire
+        // step below must then run allocation-free (asserted at the end).
+        let was_warm = ws.cap_b >= b;
+        let growths_at_start = ws.growths;
+        ws.prepare(c, b);
         let embed = self.p("embed");
-        let mut xs: Vec<Vec<f32>> = tokens
-            .iter()
-            .map(|&t| embed[(t as usize) * d..(t as usize + 1) * d].to_vec())
-            .collect();
+        for (bi, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            ws.x[bi * d..(bi + 1) * d].copy_from_slice(&embed[t * d..(t + 1) * d]);
+        }
         for l in 0..c.n_layers {
             let names = &self.layer_names[l];
             // ---- attention ----
-            let hs: Vec<Vec<f32>> =
-                xs.iter().map(|x| rmsnorm(x, self.p(&names.attn_norm))).collect();
-            let mut qs = self.mm(kind, &hs, &names.wq, d, d);
-            let mut ks = self.mm(kind, &hs, &names.wk, d, d);
-            let vs = self.mm(kind, &hs, &names.wv, d, d);
-            let mut ctxs: Vec<Vec<f32>> = Vec::with_capacity(b);
+            rmsnorm_rows(&ws.x[..b * d], b, d, self.p(&names.attn_norm), &mut ws.h[..b * d]);
+            self.mm(kind, &ws.h[..b * d], b, &names.wq, d, d, &mut ws.q[..b * d], &mut ws.scratch);
+            self.mm(kind, &ws.h[..b * d], b, &names.wk, d, d, &mut ws.k[..b * d], &mut ws.scratch);
+            self.mm(kind, &ws.h[..b * d], b, &names.wv, d, d, &mut ws.v[..b * d], &mut ws.scratch);
             for i in 0..b {
-                rope_in_place(&mut qs[i], nh, hd, pos[i], &self.freqs);
-                rope_in_place(&mut ks[i], nh, hd, pos[i], &self.freqs);
+                rope_in_place(&mut ws.q[i * d..(i + 1) * d], nh, hd, pos[i], &self.freqs);
+                rope_in_place(&mut ws.k[i * d..(i + 1) * d], nh, hd, pos[i], &self.freqs);
                 let kv = &mut *kvs[i];
                 let kbase = self.kv_index(l, 0, pos[i]);
-                kv[kbase..kbase + d].copy_from_slice(&ks[i]);
+                kv[kbase..kbase + d].copy_from_slice(&ws.k[i * d..(i + 1) * d]);
                 let vbase = self.kv_index(l, 1, pos[i]);
-                kv[vbase..vbase + d].copy_from_slice(&vs[i]);
-                let mut ctx = vec![0.0f32; d];
+                kv[vbase..vbase + d].copy_from_slice(&ws.v[i * d..(i + 1) * d]);
+            }
+            ws.ctx[..b * d].fill(0.0);
+            {
+                // Parallel over (sequence, head) pairs.  Each pair owns a
+                // disjoint scores row and context slice; KV caches are
+                // read-only here (all writes happened in the loop above).
                 let scale = 1.0 / (hd as f32).sqrt();
-                let mut scores = vec![0.0f32; pos[i] + 1];
-                for head in 0..nh {
-                    let qh = &qs[i][head * hd..(head + 1) * hd];
-                    for (t, s) in scores.iter_mut().enumerate() {
+                let qs: &[f32] = &ws.q;
+                let scores = SharedSlice::new(&mut ws.scores);
+                let ctx = SharedSlice::new(&mut ws.ctx);
+                let kvs_ro: &[&mut [f32]] = kvs;
+                self.pool.run(b * nh, |pair| {
+                    let (i, head) = (pair / nh, pair % nh);
+                    let kv: &[f32] = &kvs_ro[i];
+                    let q = &qs[i * d + head * hd..i * d + (head + 1) * hd];
+                    // SAFETY: pair (i, head) exclusively owns its scores
+                    // row and its head's slice of sequence i's context.
+                    let srow = unsafe { scores.slice_mut((i * nh + head) * clen, pos[i] + 1) };
+                    let ch = unsafe { ctx.slice_mut(i * d + head * hd, hd) };
+                    for (t, s) in srow.iter_mut().enumerate() {
                         let kr = &kv[self.kv_index(l, 0, t) + head * hd..][..hd];
-                        *s = dot(qh, kr) * scale;
+                        *s = dot(q, kr) * scale;
                     }
-                    softmax_in_place(&mut scores);
-                    let ch = &mut ctx[head * hd..(head + 1) * hd];
-                    for (t, &a) in scores.iter().enumerate() {
+                    softmax_in_place(srow);
+                    for (t, &a) in srow.iter().enumerate() {
                         let vr = &kv[self.kv_index(l, 1, t) + head * hd..][..hd];
                         axpy(ch, a, vr);
                     }
-                }
-                ctxs.push(ctx);
+                });
             }
-            let os = self.mm(kind, &ctxs, &names.wo, d, d);
-            for (x, o) in xs.iter_mut().zip(&os) {
-                axpy(x, 1.0, o);
-            }
+            self.mm(kind, &ws.ctx[..b * d], b, &names.wo, d, d, &mut ws.o[..b * d], &mut ws.scratch);
+            axpy(&mut ws.x[..b * d], 1.0, &ws.o[..b * d]);
             // ---- MLP ----
-            let hs: Vec<Vec<f32>> =
-                xs.iter().map(|x| rmsnorm(x, self.p(&names.mlp_norm))).collect();
-            let mut gates = self.mm(kind, &hs, &names.w_gate, d, c.d_ff);
-            let ups = self.mm(kind, &hs, &names.w_up, d, c.d_ff);
-            for (gate, up) in gates.iter_mut().zip(&ups) {
-                for (g, &u) in gate.iter_mut().zip(up) {
-                    let s = *g / (1.0 + (-*g).exp());
-                    *g = s * u;
-                }
+            rmsnorm_rows(&ws.x[..b * d], b, d, self.p(&names.mlp_norm), &mut ws.h[..b * d]);
+            self.mm(
+                kind,
+                &ws.h[..b * d],
+                b,
+                &names.w_gate,
+                d,
+                ff,
+                &mut ws.gate[..b * ff],
+                &mut ws.scratch,
+            );
+            self.mm(kind, &ws.h[..b * d], b, &names.w_up, d, ff, &mut ws.up[..b * ff], &mut ws.scratch);
+            for (g, &u) in ws.gate[..b * ff].iter_mut().zip(&ws.up[..b * ff]) {
+                let s = *g / (1.0 + (-*g).exp());
+                *g = s * u;
             }
-            let downs = self.mm(kind, &gates, &names.w_down, c.d_ff, d);
-            for (x, down) in xs.iter_mut().zip(&downs) {
-                axpy(x, 1.0, down);
-            }
+            self.mm(
+                kind,
+                &ws.gate[..b * ff],
+                b,
+                &names.w_down,
+                ff,
+                d,
+                &mut ws.o[..b * d],
+                &mut ws.scratch,
+            );
+            axpy(&mut ws.x[..b * d], 1.0, &ws.o[..b * d]);
         }
-        let xfs: Vec<Vec<f32>> =
-            xs.iter().map(|x| rmsnorm(x, self.p("final_norm"))).collect();
-        Ok(self.mm(kind, &xfs, "lm_head", d, c.vocab))
+        rmsnorm_rows(&ws.x[..b * d], b, d, self.p("final_norm"), &mut ws.h[..b * d]);
+        self.mm(kind, &ws.h[..b * d], b, "lm_head", d, v, &mut ws.logits[..b * v], &mut ws.scratch);
+        debug_assert!(
+            !was_warm || ws.growths == growths_at_start,
+            "step_batch allocated workspace buffers after warm-up"
+        );
+        Ok((0..b).map(|i| ws.logits[i * v..(i + 1) * v].to_vec()).collect())
     }
 
     /// Move the native states of a slot batch out of the arena, validating
@@ -818,11 +1098,14 @@ impl Backend for NativeBackend {
             weights.bits.insert(name.clone(), new.iter().map(|&v| f32_to_f16_bits(v)).collect());
             weights.f32s.insert(name.clone(), new);
         }
-        let b = NativeBackend::from_weights(
+        // The transformed clone inherits this backend's pool width (the
+        // perplexity harness compares variants under one runtime config).
+        let b = NativeBackend::from_weights_with(
             self.config.clone(),
             self.linears.clone(),
             weights,
             self.slots,
+            &NativeConfig::with_threads(self.pool.threads()),
         )?;
         Ok(Box::new(b))
     }
@@ -921,10 +1204,20 @@ fn synthetic_weights(cfg: &ModelConfig, seed: u64, style: InitStyle) -> HostWeig
 
 // ---- f32 activation helpers (GEMM kernels live in `super::kernels`) --------
 
-fn rmsnorm(x: &[f32], w: &[f32]) -> Vec<f32> {
-    let ms = x.iter().map(|&v| v * v).sum::<f32>() / x.len() as f32;
-    let r = 1.0 / (ms + 1e-5).sqrt();
-    x.iter().zip(w).map(|(&v, &g)| v * r * g).collect()
+/// Row-wise RMSNorm over a flat `(b, d)` batch, written into `out` (no
+/// allocation).  Per-row arithmetic is exactly the retired per-`Vec`
+/// `rmsnorm`: ascending-index sum of squares, then `v * r * g`.
+fn rmsnorm_rows(x: &[f32], b: usize, d: usize, w: &[f32], out: &mut [f32]) {
+    debug_assert!(x.len() == b * d && out.len() == b * d && w.len() == d);
+    for i in 0..b {
+        let xr = &x[i * d..(i + 1) * d];
+        let or = &mut out[i * d..(i + 1) * d];
+        let ms = xr.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (ms + 1e-5).sqrt();
+        for (o, (&v, &g)) in or.iter_mut().zip(xr.iter().zip(w)) {
+            *o = v * r * g;
+        }
+    }
 }
 
 fn softmax_in_place(v: &mut [f32]) {
@@ -1186,6 +1479,87 @@ mod tests {
         let ver = b.drain_traffic();
         assert_eq!(ver.verify_rows, b.slots() as u64);
         assert_eq!(ver.verify_bytes, full.full_bytes * b.slots() as u64);
+    }
+
+    #[test]
+    fn workspace_reuses_buffers_after_warmup() {
+        let b = NativeBackend::synthetic(tiny_cfg(), 5, 7, InitStyle::Random).unwrap();
+        let toks = vec![3i32; b.prefill_len()];
+        let pre = b.prefill(&toks, 4).unwrap();
+        let grown = b.workspace_growths();
+        assert!(grown >= 1, "prefill must warm the workspace up");
+        // Steady-state steps reuse the warm buffers: zero further growth.
+        let step = b.decode_full(1, 4, pre.state).unwrap();
+        assert_eq!(b.workspace_growths(), grown, "decode step grew the workspace");
+        let step = b.decode_draft(2, 5, step.state).unwrap();
+        assert_eq!(b.workspace_growths(), grown, "draft step grew the workspace");
+        let vtokens: Vec<i32> = (0..b.slots() as i32).collect();
+        let _ = b.verify(&vtokens, 6, step.state).unwrap();
+        assert_eq!(b.workspace_growths(), grown, "verify pass grew the workspace");
+    }
+
+    #[test]
+    fn workspace_grows_once_for_a_larger_batch() {
+        let b = NativeBackend::synthetic(tiny_cfg(), 5, 7, InitStyle::Confident).unwrap();
+        let p = b.prefill_len();
+        let prompts1 = vec![vec![5i32; p]];
+        let slots1 = vec![b.alloc_slot()];
+        b.prefill_batch(&slots1, &prompts1, &[4]).unwrap();
+        let g1 = b.workspace_growths();
+        // A wider batch grows the buffers exactly once more...
+        let prompts4: Vec<Vec<i32>> = (0..4).map(|i| vec![5i32 + i; p]).collect();
+        let slots4: Vec<SeqSlot> = (0..4).map(|_| b.alloc_slot()).collect();
+        b.prefill_batch(&slots4, &prompts4, &[4, 4, 4, 4]).unwrap();
+        let g4 = b.workspace_growths();
+        assert_eq!(g4, g1 + 1, "batch-4 warm-up should be one growth event");
+        // ...and a subsequent narrower batch reuses them.
+        b.decode_full_batch(&slots1, &[1], &[4]).unwrap();
+        assert_eq!(b.workspace_growths(), g4);
+        for s in slots1.into_iter().chain(slots4) {
+            b.free_slot(s);
+        }
+    }
+
+    #[test]
+    fn thread_count_never_changes_output_bits() {
+        // The tentpole's end-to-end pin at the backend level: prefill,
+        // full/draft decode, and verify logits are bit-identical for any
+        // pool width (the zoo-wide engine-level sweep lives in
+        // rust/tests/prop_threads.rs).
+        let mk = |threads: usize| {
+            let mut b =
+                NativeBackend::synthetic(tiny_cfg(), 5, 9, InitStyle::Confident).unwrap();
+            b.set_threads(threads);
+            b
+        };
+        let base = mk(1);
+        let toks = vec![5i32; base.prefill_len()];
+        let pre = base.prefill(&toks, 6).unwrap();
+        let full = base.decode_full(1, 6, pre.state).unwrap();
+        let vtokens: Vec<i32> = (0..base.slots() as i32).collect();
+        let ver = base.verify(&vtokens, 7, full.state).unwrap();
+        for t in [2usize, 3, 4, 8] {
+            let b = mk(t);
+            assert_eq!(b.threads(), t);
+            let pre_t = b.prefill(&toks, 6).unwrap();
+            assert_eq!(
+                pre_t.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                pre.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "prefill logits diverged at T={t}"
+            );
+            let full_t = b.decode_full(1, 6, pre_t.state).unwrap();
+            assert_eq!(
+                full_t.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                full.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "decode logits diverged at T={t}"
+            );
+            let ver_t = b.verify(&vtokens, 7, full_t.state).unwrap();
+            assert_eq!(
+                ver_t.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                ver.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "verify logits diverged at T={t}"
+            );
+        }
     }
 
     #[test]

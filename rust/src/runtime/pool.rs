@@ -1,0 +1,387 @@
+//! Std-only persistent worker pool for the deterministic parallel runtime.
+//!
+//! [`WorkerPool`] owns `threads - 1` long-lived worker threads (the caller
+//! is always shard 0, so a pool of one thread spawns nothing and runs every
+//! job inline).  [`WorkerPool::run`] executes a borrowed closure over job
+//! indices `0..jobs` and returns only after every job has finished, which
+//! is what makes handing workers a non-`'static` closure sound.
+//!
+//! **Determinism contract.**  The pool assigns job `j` statically to
+//! participant `j % threads` — there is no work stealing and no
+//! load-dependent repartitioning.  Parallel kernels shard the
+//! *output-column* dimension into contiguous ranges (see [`col_range`]),
+//! so every output element is computed by exactly one shard, in exactly
+//! the same ascending-index accumulation order as the serial kernel.
+//! Results are therefore bitwise identical for every thread count; which
+//! OS thread happens to execute a shard can never change output bits.
+//!
+//! The pool is intentionally tiny: a published epoch counter, a static
+//! round-robin job split, and a spin-then-sleep wait on each side.  Workers
+//! spin briefly (kernel launches arrive in bursts — several per decode
+//! step) before parking on a condvar; the caller busy-yields for the
+//! stragglers since it just finished the same-sized shard itself.
+
+use std::cell::UnsafeCell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A borrowed task: the closure `run` is currently executing, type-erased.
+/// The `'static` lifetime is a lie told only between publish and the final
+/// `remaining` decrement — `run` does not return while any worker can still
+/// dereference it.
+type TaskRef = &'static (dyn Fn(usize) + Sync);
+
+/// Iterations of the workers' spin phase before parking on the condvar.
+const SPIN_ITERS: u32 = 4096;
+
+struct Shared {
+    /// Bumped once per published job batch; workers wait for a change.
+    epoch: AtomicU64,
+    /// The current task and its job count.  Written by `run` strictly
+    /// before the epoch bump (Release) and read by workers strictly after
+    /// observing it (Acquire), while `remaining` proves all workers idle.
+    task: UnsafeCell<Option<(TaskRef, usize)>>,
+    /// Workers that have not finished the current epoch yet.
+    remaining: AtomicUsize,
+    /// Set when any worker's shard panicked (the caller re-panics).
+    panicked: AtomicBool,
+    shutdown: AtomicBool,
+    /// Sleep lock + condvar for the workers' slow-path wait.
+    sleep: Mutex<()>,
+    cv: Condvar,
+}
+
+// SAFETY: the `UnsafeCell` is only written by `run` while every worker is
+// provably idle (`remaining == 0` from the previous epoch, observed via the
+// caller's wait), and only read by workers after an Acquire load of the
+// epoch that was bumped with Release after the write.
+unsafe impl Sync for Shared {}
+
+/// Persistent worker pool; see the module docs for the determinism
+/// contract.  Dropping the pool joins every worker.
+pub struct WorkerPool {
+    threads: usize,
+    shared: Arc<Shared>,
+    /// Serializes concurrent `run` calls (the pool runs one job batch at a
+    /// time; kernels never nest pool calls).
+    job_lock: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// A pool executing jobs across `threads` participants: the calling
+    /// thread plus `threads - 1` spawned workers.  `threads == 1` (or 0,
+    /// normalized up) spawns nothing and makes [`WorkerPool::run`] a plain
+    /// serial loop.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            epoch: AtomicU64::new(0),
+            task: UnsafeCell::new(None),
+            remaining: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+            sleep: Mutex::new(()),
+            cv: Condvar::new(),
+        });
+        let mut handles = Vec::new();
+        for w in 1..threads {
+            let shared = shared.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("speq-pool-{w}"))
+                    .spawn(move || worker_main(w, threads, shared))
+                    .expect("spawn pool worker"),
+            );
+        }
+        Self { threads, shared, job_lock: Mutex::new(()), handles }
+    }
+
+    /// Number of participants (caller + workers) a job batch is split over.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `f(j)` for every `j in 0..jobs`, returning when all are
+    /// done.  Job `j` runs on participant `j % threads()`; the caller is
+    /// participant 0 and does its share in place.  Panics from any shard
+    /// propagate to the caller after the batch drains (the pool stays
+    /// usable).  Must not be called from inside a running job.
+    pub fn run(&self, jobs: usize, f: impl Fn(usize) + Sync) {
+        if self.threads <= 1 || jobs <= 1 {
+            for j in 0..jobs {
+                f(j);
+            }
+            return;
+        }
+        let _serialize = self.job_lock.lock().unwrap_or_else(|e| e.into_inner());
+        // SAFETY: see `TaskRef` — the borrow is dead before `run` returns.
+        let task: TaskRef = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), TaskRef>(&f)
+        };
+        unsafe {
+            *self.shared.task.get() = Some((task, jobs));
+        }
+        self.shared.panicked.store(false, Ordering::Relaxed);
+        self.shared.remaining.store(self.threads - 1, Ordering::Release);
+        self.shared.epoch.fetch_add(1, Ordering::Release);
+        {
+            // Lock-then-notify pairs with the workers' epoch re-check under
+            // the same lock, so a worker can never sleep through a publish.
+            let _g = self.shared.sleep.lock().unwrap_or_else(|e| e.into_inner());
+            self.shared.cv.notify_all();
+        }
+
+        // The caller is participant 0.
+        let caller = catch_unwind(AssertUnwindSafe(|| {
+            let mut j = 0;
+            while j < jobs {
+                f(j);
+                j += self.threads;
+            }
+        }));
+
+        // The workers still borrow `f`: drain them before unwinding.  The
+        // wait is short — the caller just finished an equal share — so a
+        // yielding spin beats a condvar round-trip.
+        let mut spins = 0u32;
+        while self.shared.remaining.load(Ordering::Acquire) != 0 {
+            spins = spins.wrapping_add(1);
+            if spins % 64 == 0 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        unsafe {
+            *self.shared.task.get() = None;
+        }
+        if let Err(p) = caller {
+            resume_unwind(p);
+        }
+        if self.shared.panicked.load(Ordering::Acquire) {
+            panic!("worker thread panicked in parallel kernel shard");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let _g = self.shared.sleep.lock().unwrap_or_else(|e| e.into_inner());
+            self.shared.cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(index: usize, threads: usize, shared: Arc<Shared>) {
+    let mut seen = 0u64;
+    loop {
+        // Spin-then-sleep wait for a new epoch (or shutdown).
+        let mut iters = 0u32;
+        let epoch = loop {
+            let e = shared.epoch.load(Ordering::Acquire);
+            if e != seen || shared.shutdown.load(Ordering::Acquire) {
+                break e;
+            }
+            iters += 1;
+            if iters < SPIN_ITERS {
+                if iters % 32 == 0 {
+                    std::thread::yield_now();
+                } else {
+                    std::hint::spin_loop();
+                }
+            } else {
+                let mut g = shared.sleep.lock().unwrap_or_else(|e| e.into_inner());
+                loop {
+                    let e = shared.epoch.load(Ordering::Acquire);
+                    if e != seen || shared.shutdown.load(Ordering::Acquire) {
+                        break;
+                    }
+                    g = shared.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+                }
+                break shared.epoch.load(Ordering::Acquire);
+            }
+        };
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        seen = epoch;
+        // SAFETY: the publisher wrote the task before the Release epoch
+        // bump we just Acquired, and will not overwrite it until we
+        // decrement `remaining` below.
+        let (task, jobs) = unsafe { (*shared.task.get()).expect("pool epoch without a task") };
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut j = index;
+            while j < jobs {
+                task(j);
+                j += threads;
+            }
+        }));
+        if result.is_err() {
+            shared.panicked.store(true, Ordering::Release);
+        }
+        shared.remaining.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Columns `[j0, j1)` of shard `s` when `n` output columns are split into
+/// `t` contiguous, near-equal ranges (the first `n % t` shards get one
+/// extra column).  The split depends only on `(n, s, t)`, never on load —
+/// part of the determinism contract.
+pub fn col_range(n: usize, s: usize, t: usize) -> (usize, usize) {
+    debug_assert!(s < t);
+    let base = n / t;
+    let rem = n % t;
+    let j0 = s * base + s.min(rem);
+    let j1 = j0 + base + usize::from(s < rem);
+    (j0, j1)
+}
+
+/// A shared mutable f32 view for pool shards that write provably disjoint
+/// index ranges (kernel output columns, per-shard scratch tiles, per-head
+/// attention rows).  The *caller* of [`SharedSlice::slice_mut`] is
+/// responsible for disjointness; the type only carries the pointer across
+/// the closure boundary.
+pub struct SharedSlice<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [f32]>,
+}
+
+// SAFETY: f32 has no drop/aliasing semantics of its own; soundness rests
+// entirely on the disjoint-range contract of `slice_mut` callers.
+unsafe impl Send for SharedSlice<'_> {}
+unsafe impl Sync for SharedSlice<'_> {}
+
+impl<'a> SharedSlice<'a> {
+    pub fn new(slice: &'a mut [f32]) -> Self {
+        Self { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: std::marker::PhantomData }
+    }
+
+    /// Mutable view of `start..start + len`.
+    ///
+    /// # Safety
+    /// No two concurrently live views may overlap, and the underlying
+    /// slice must not be accessed through any other path while views are
+    /// live.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [f32] {
+        debug_assert!(start + len <= self.len, "SharedSlice range out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        let hits = AtomicUsize::new(0);
+        pool.run(7, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        for threads in [2usize, 3, 4, 8] {
+            let pool = WorkerPool::new(threads);
+            for jobs in [0usize, 1, 2, 5, 16, 33] {
+                let counts: Vec<AtomicUsize> =
+                    (0..jobs).map(|_| AtomicUsize::new(0)).collect();
+                pool.run(jobs, |j| {
+                    counts[j].fetch_add(1, Ordering::Relaxed);
+                });
+                for (j, c) in counts.iter().enumerate() {
+                    assert_eq!(
+                        c.load(Ordering::Relaxed),
+                        1,
+                        "job {j} ran a wrong number of times (T={threads}, jobs={jobs})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_batches() {
+        let pool = WorkerPool::new(4);
+        let total = AtomicUsize::new(0);
+        for _ in 0..200 {
+            pool.run(9, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 200 * 9);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            // Job 1 runs on the worker (1 % 2 == 1); job 0 on the caller.
+            pool.run(2, |j| {
+                if j == 1 {
+                    panic!("shard boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "worker panic must reach the caller");
+        // The pool keeps working afterwards.
+        let hits = AtomicUsize::new(0);
+        pool.run(4, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn col_range_partitions_exactly() {
+        for n in [0usize, 1, 5, 16, 127, 256] {
+            for t in [1usize, 2, 3, 4, 8] {
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for s in 0..t {
+                    let (j0, j1) = col_range(n, s, t);
+                    assert_eq!(j0, prev_end, "ranges must be contiguous");
+                    assert!(j1 >= j0);
+                    covered += j1 - j0;
+                    prev_end = j1;
+                }
+                assert_eq!(prev_end, n);
+                assert_eq!(covered, n);
+            }
+        }
+    }
+
+    #[test]
+    fn shared_slice_disjoint_writes() {
+        let mut buf = vec![0.0f32; 64];
+        let pool = WorkerPool::new(4);
+        {
+            let view = SharedSlice::new(&mut buf);
+            pool.run(4, |s| {
+                let (j0, j1) = col_range(64, s, 4);
+                // SAFETY: col_range partitions 0..64 disjointly.
+                let part = unsafe { view.slice_mut(j0, j1 - j0) };
+                for (off, v) in part.iter_mut().enumerate() {
+                    *v = (j0 + off) as f32;
+                }
+            });
+        }
+        for (i, &v) in buf.iter().enumerate() {
+            assert_eq!(v, i as f32);
+        }
+    }
+}

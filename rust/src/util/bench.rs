@@ -120,7 +120,10 @@ impl Bench {
     /// Emit a machine-readable `BENCH_JSON {...}` line (one JSON object per
     /// call) for CI and the report harness to consume — e.g. the
     /// `bytes_per_token_{draft,full}` traffic numbers the quarter-to-all
-    /// regression check reads.  Non-finite values are serialized as 0.
+    /// regression check reads, and the `threads`/`batch`/`tokens_per_sec`
+    /// cells of the engine bench's thread-scaling sweep (collected into
+    /// `BENCH_*.json` artifacts by CI so the perf trajectory accumulates
+    /// across commits).  Non-finite values are serialized as 0.
     pub fn metrics_json(&self, fields: &[(&str, f64)]) {
         let body: Vec<String> = fields
             .iter()

@@ -1,0 +1,220 @@
+//! Thread-invariance property suite: the parallel runtime must be
+//! bitwise-deterministic for every worker-pool width.
+//!
+//! For every builtin zoo model, speculative + autoregressive decoding at
+//! batch 1 and batch 4 is generated under `T in {1, 2, 4, 8}` kernel
+//! threads and asserted byte-identical across all widths — and, when the
+//! self-recording golden snapshots exist (`rust/tests/goldens/*.golden`,
+//! written by `golden_tokens.rs`), identical to the recorded streams too.
+//! A separate test pins raw *logits* bits (prefill / full decode / draft
+//! decode / verify) across widths, so a divergence is caught even where
+//! greedy argmax would mask it.
+//!
+//! Why this holds: the kernels shard the output-column dimension into
+//! contiguous per-shard ranges and every output element keeps its exact
+//! ascending-index accumulation order, so the thread count can only move
+//! work between cores, never change a single f32 operation.
+
+use std::path::PathBuf;
+
+use speq::model::SamplingParams;
+use speq::runtime::{Backend, NativeBackend};
+use speq::specdec::{ArSession, BatchEngine, Engine, GenSession, SpecConfig};
+
+const GEN_LEN: usize = 28;
+const MAX_DRAFT: usize = 8;
+const BASE_PROMPT: &[u8] = b"Q: ada has 3 apples and finds 4 more. how many apples now?\nA: ";
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn backend(model: &str, threads: usize) -> NativeBackend {
+    let mut b = NativeBackend::builtin(model).expect("builtin model");
+    b.set_threads(threads);
+    b
+}
+
+fn spec_cfg() -> SpecConfig {
+    SpecConfig { max_draft: MAX_DRAFT, gen_len: GEN_LEN, ..Default::default() }
+}
+
+/// The batch-4 prompts `golden_tokens.rs` pins (sequence 0 == batch-1).
+fn batch_prompts() -> Vec<Vec<u8>> {
+    (0..4usize)
+        .map(|i| {
+            let mut p = BASE_PROMPT.to_vec();
+            if i > 0 {
+                p.push(b'0' + i as u8);
+            }
+            p
+        })
+        .collect()
+}
+
+fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// The `tokens=` hex of one stream in a recorded golden snapshot, if the
+/// snapshot exists (they are self-recorded by `golden_tokens.rs`; absent
+/// on a fresh checkout, in which case cross-thread equality still pins
+/// the invariance).
+fn golden_tokens_hex(model: &str, key: &str) -> Option<String> {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/goldens")
+        .join(format!("{model}.golden"));
+    let text = std::fs::read_to_string(path).ok()?;
+    let prefix = format!("{key} tokens=");
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(&prefix) {
+            return Some(rest.split_whitespace().next().unwrap_or(rest).to_string());
+        }
+    }
+    None
+}
+
+struct Streams {
+    spec1: Vec<u8>,
+    ar1: Vec<u8>,
+    spec4: Vec<Vec<u8>>,
+    ar4: Vec<Vec<u8>>,
+}
+
+/// Generate every pinned stream for one model at one pool width.
+fn streams(model: &str, threads: usize) -> Streams {
+    let backend = backend(model, threads);
+    let engine = Engine::new(&backend);
+    let spec1 = engine.generate_spec(BASE_PROMPT, &spec_cfg()).expect("spec b1").tokens;
+    let ar1 = engine
+        .generate_ar(BASE_PROMPT, GEN_LEN, SamplingParams::greedy())
+        .expect("ar b1")
+        .tokens;
+    assert_eq!(spec1, ar1, "{model} T={threads}: greedy spec != AR");
+
+    let batch = BatchEngine::new(&backend);
+    let requests: Vec<(Vec<u8>, SpecConfig)> =
+        batch_prompts().into_iter().map(|p| (p, spec_cfg())).collect();
+    let spec4: Vec<Vec<u8>> =
+        batch.run_spec(&requests).expect("spec b4").into_iter().map(|r| r.tokens).collect();
+    let ar_sessions: Vec<GenSession> = batch_prompts()
+        .iter()
+        .map(|p| {
+            ArSession::new(&backend, p, GEN_LEN, SamplingParams::greedy())
+                .map(GenSession::Ar)
+                .expect("ar session")
+        })
+        .collect();
+    let ar4: Vec<Vec<u8>> =
+        batch.run(ar_sessions).expect("ar b4").into_iter().map(|r| r.tokens).collect();
+    assert_eq!(backend.arena().in_use(), 0, "{model} T={threads}: leaked KV slots");
+    Streams { spec1, ar1, spec4, ar4 }
+}
+
+fn check_model(model: &str) {
+    let base = streams(model, THREADS[0]);
+    // Against the recorded goldens, when present.
+    if let Some(want) = golden_tokens_hex(model, "spec_b1") {
+        assert_eq!(hex(&base.spec1), want, "{model}: spec_b1 diverged from recorded golden");
+    }
+    if let Some(want) = golden_tokens_hex(model, "ar_b1") {
+        assert_eq!(hex(&base.ar1), want, "{model}: ar_b1 diverged from recorded golden");
+    }
+    for i in 0..4 {
+        if let Some(want) = golden_tokens_hex(model, &format!("spec_b4[{i}]")) {
+            assert_eq!(hex(&base.spec4[i]), want, "{model}: spec_b4[{i}] diverged from golden");
+        }
+        if let Some(want) = golden_tokens_hex(model, &format!("ar_b4[{i}]")) {
+            assert_eq!(hex(&base.ar4[i]), want, "{model}: ar_b4[{i}] diverged from golden");
+        }
+    }
+    // Across every pool width: byte-identical streams.
+    for &t in &THREADS[1..] {
+        let s = streams(model, t);
+        assert_eq!(s.spec1, base.spec1, "{model}: spec_b1 diverged at T={t}");
+        assert_eq!(s.ar1, base.ar1, "{model}: ar_b1 diverged at T={t}");
+        assert_eq!(s.spec4, base.spec4, "{model}: spec_b4 diverged at T={t}");
+        assert_eq!(s.ar4, base.ar4, "{model}: ar_b4 diverged at T={t}");
+    }
+}
+
+#[test]
+fn threads_vicuna_7b_tiny() {
+    check_model("vicuna-7b-tiny");
+}
+
+#[test]
+fn threads_llama2_7b_tiny() {
+    check_model("llama2-7b-tiny");
+}
+
+#[test]
+fn threads_llama3_1_8b_tiny() {
+    check_model("llama3.1-8b-tiny");
+}
+
+#[test]
+fn threads_llama3_2_3b_tiny() {
+    check_model("llama3.2-3b-tiny");
+}
+
+#[test]
+fn threads_llama2_13b_tiny() {
+    check_model("llama2-13b-tiny");
+}
+
+/// Raw logits bits (not just greedy tokens) across pool widths, over the
+/// four request-path operations and a batch-4 decode.
+fn logits_bits(model: &str, threads: usize) -> Vec<u32> {
+    let b = backend(model, threads);
+    let mut toks: Vec<i32> = BASE_PROMPT.iter().map(|&c| c as i32).collect();
+    let plen = toks.len().min(b.prefill_len());
+    toks.resize(b.prefill_len(), b' ' as i32);
+    let mut bits = Vec::new();
+    let pre = b.prefill(&toks, plen).expect("prefill");
+    bits.extend(pre.logits.iter().map(|v| v.to_bits()));
+    let full = b.decode_full(65, plen, pre.state).expect("full");
+    bits.extend(full.logits.iter().map(|v| v.to_bits()));
+    let draft = b.decode_draft(66, plen + 1, full.state).expect("draft");
+    bits.extend(draft.logits.iter().map(|v| v.to_bits()));
+    let vtokens: Vec<i32> = (0..b.slots() as i32).collect();
+    let ver = b.verify(&vtokens, plen + 2, draft.state).expect("verify");
+    bits.extend(ver.logits.iter().map(|v| v.to_bits()));
+
+    // Batch-4 decode through the slot arena.
+    let prompts = batch_prompts();
+    let padded: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| {
+            let mut t: Vec<i32> = p.iter().map(|&c| c as i32).collect();
+            t.resize(b.prefill_len(), b' ' as i32);
+            t
+        })
+        .collect();
+    let lengths: Vec<usize> = prompts.iter().map(|p| p.len().min(b.prefill_len())).collect();
+    let slots: Vec<_> = (0..4).map(|_| b.alloc_slot()).collect();
+    for row in b.prefill_batch(&slots, &padded, &lengths).expect("prefill_batch") {
+        bits.extend(row.iter().map(|v| v.to_bits()));
+    }
+    for row in b
+        .decode_full_batch(&slots, &[65, 66, 67, 68], &lengths)
+        .expect("decode_full_batch")
+    {
+        bits.extend(row.iter().map(|v| v.to_bits()));
+    }
+    for &s in &slots {
+        b.free_slot(s);
+    }
+    bits
+}
+
+#[test]
+fn logits_bit_identical_across_thread_counts() {
+    for model in ["vicuna-7b-tiny", "llama2-13b-tiny"] {
+        let reference = logits_bits(model, THREADS[0]);
+        for &t in &THREADS[1..] {
+            assert_eq!(
+                logits_bits(model, t),
+                reference,
+                "{model}: logits bits diverged at T={t}"
+            );
+        }
+    }
+}
