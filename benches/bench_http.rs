@@ -1,0 +1,66 @@
+//! Micro-benchmarks for the serving front end's hot paths: HTTP request
+//! parsing, SSE event assembly, and the streaming-safe byte escaper.
+//! These run per-request / per-chunk on every connection thread, so their
+//! cost bounds the front end's overhead on top of generation.
+//!
+//! Run: cargo bench --bench bench_http [-- --smoke]
+
+use std::io::Cursor;
+
+use speq::net::api;
+use speq::net::http;
+use speq::util::bench::{black_box, Bench};
+use speq::util::json;
+
+fn main() {
+    let mut b = Bench::auto("net_http");
+
+    let post_body = r#"{"prompt":"Q: 1+1?\nA: ","gen_len":64,"seed":0,"gamma":0.6}"#;
+    let post = format!(
+        "POST /v1/generate HTTP/1.1\r\nhost: bench\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: keep-alive\r\n\r\n{}",
+        post_body.len(),
+        post_body
+    )
+    .into_bytes();
+    b.bench("parse_request_post_json", || {
+        let r = http::read_request(&mut Cursor::new(post.clone()), 1 << 20, || false)
+            .unwrap()
+            .unwrap();
+        black_box(r.body.len());
+    });
+
+    let body = r#"{"prompt":"Q: ada has 3 apples and finds 4 more. how many?\nA: ","gen_len":64,"mode":"spec","temperature":0,"seed":0,"max_draft":16,"gamma":0.6}"#;
+    b.bench("parse_generate_request_schema", || {
+        let g = speq::net::GenerateRequest::from_json(body).unwrap();
+        black_box(g.gen_len);
+    });
+
+    // A representative accepted-chunk payload: 17 byte tokens (max_draft
+    // 16 + bonus), mixed printable/non-printable.
+    let chunk: Vec<u8> = (0..17u8).map(|i| i.wrapping_mul(37).wrapping_add(9)).collect();
+    b.bench("sse_chunk_event_17_tokens", || {
+        let ev = api::sse_event("chunk", &api::chunk_event_data(&chunk));
+        black_box(ev.len());
+    });
+
+    let mixed: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+    let escape_stats = b.bench("escape_bytes_4k_mixed", || {
+        black_box(json::escape_bytes(&mixed).len());
+    });
+    let mb_per_s = mixed.len() as f64 / (escape_stats.mean_ns / 1e9) / 1e6;
+    b.metric("escape_bytes_throughput", mb_per_s, "MB/s");
+
+    let mut out = Vec::with_capacity(8192);
+    b.bench("write_chunked_sse_response", || {
+        out.clear();
+        http::write_chunked_head(&mut out, 200, "text/event-stream", true).unwrap();
+        for _ in 0..4 {
+            http::write_chunk(&mut out, &api::sse_event("chunk", &api::chunk_event_data(&chunk)))
+                .unwrap();
+        }
+        http::finish_chunked(&mut out).unwrap();
+        black_box(out.len());
+    });
+
+    b.metrics_json(&[("escape_mb_per_s", mb_per_s)]);
+}

@@ -7,6 +7,22 @@ use std::time::Instant;
 
 use crate::runtime::TrafficSnapshot;
 
+/// Latency reservoirs keep at most this many samples — a sliding window
+/// over the most recent completions — so a long-running server's snapshot
+/// cost and memory stay bounded.
+const LATENCY_SAMPLE_CAP: usize = 65_536;
+
+/// Append to a bounded reservoir: grow until the cap, then overwrite in
+/// ring order by completion index (keeps the newest `LATENCY_SAMPLE_CAP`
+/// observations).
+fn push_capped(v: &mut Vec<u64>, val: u64, nth: u64) {
+    if v.len() < LATENCY_SAMPLE_CAP {
+        v.push(val);
+    } else {
+        v[(nth as usize) % LATENCY_SAMPLE_CAP] = val;
+    }
+}
+
 /// Shared metrics sink (cheap atomic counters; latencies and the batch
 /// histogram under mutexes).
 pub struct Metrics {
@@ -16,6 +32,9 @@ pub struct Metrics {
     /// Generations that errored (admission failure or an engine-step
     /// failure) — previously invisible in the serving report.
     pub requests_failed: AtomicU64,
+    /// Requests retired between engine steps without completing (deadline
+    /// expired or client cancelled); their KV slots were freed.
+    pub requests_cancelled: AtomicU64,
     pub tokens_generated: AtomicU64,
     pub draft_steps: AtomicU64,
     pub verify_passes: AtomicU64,
@@ -37,6 +56,7 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     pub rejected: u64,
     pub failed: u64,
+    pub cancelled: u64,
     pub tokens: u64,
     pub draft_steps: u64,
     pub verify_passes: u64,
@@ -67,6 +87,7 @@ impl Metrics {
             requests_completed: AtomicU64::new(0),
             requests_rejected: AtomicU64::new(0),
             requests_failed: AtomicU64::new(0),
+            requests_cancelled: AtomicU64::new(0),
             tokens_generated: AtomicU64::new(0),
             draft_steps: AtomicU64::new(0),
             verify_passes: AtomicU64::new(0),
@@ -86,12 +107,20 @@ impl Metrics {
     }
 
     pub fn record_completion(&self, tokens: u64, drafts: u64, verifies: u64, latency_s: f64, exec_s: f64) {
-        self.requests_completed.fetch_add(1, Ordering::Relaxed);
+        let nth = self.requests_completed.fetch_add(1, Ordering::Relaxed);
         self.tokens_generated.fetch_add(tokens, Ordering::Relaxed);
         self.draft_steps.fetch_add(drafts, Ordering::Relaxed);
         self.verify_passes.fetch_add(verifies, Ordering::Relaxed);
-        self.latencies_us.lock().unwrap().push((latency_s * 1e6) as u64);
-        self.exec_us.lock().unwrap().push((exec_s * 1e6) as u64);
+        push_capped(&mut self.latencies_us.lock().unwrap(), (latency_s * 1e6) as u64, nth);
+        push_capped(&mut self.exec_us.lock().unwrap(), (exec_s * 1e6) as u64, nth);
+    }
+
+    /// The three per-token traffic numbers without building a full
+    /// snapshot — cheap enough to read per completed request (a snapshot
+    /// clones and sorts the latency reservoirs; see [`Metrics::snapshot`]).
+    pub fn traffic_fields(&self) -> (f64, f64, f64) {
+        let t = *self.traffic.lock().unwrap();
+        (t.draft_bytes_per_token(), t.full_bytes_per_token(), t.draft_full_ratio())
     }
 
     /// Record one scheduler engine step running `occupancy` sequences.
@@ -104,16 +133,12 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let pct = |v: &mut Vec<u64>, p: f64| -> f64 {
-            if v.is_empty() {
-                return 0.0;
-            }
-            v.sort_unstable();
-            let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
-            v[idx] as f64 / 1e3
-        };
-        let mut lat = self.latencies_us.lock().unwrap().clone();
-        let mut exec = self.exec_us.lock().unwrap().clone();
+        // Shared nearest-rank percentile (util::bench::percentile), µs → ms.
+        let pct = |v: &mut [f64], p: f64| -> f64 { crate::util::bench::percentile(v, p) / 1e3 };
+        let mut lat: Vec<f64> =
+            self.latencies_us.lock().unwrap().iter().map(|&v| v as f64).collect();
+        let mut exec: Vec<f64> =
+            self.exec_us.lock().unwrap().iter().map(|&v| v as f64).collect();
         let occupancy = self.batch_occupancy.lock().unwrap().clone();
         let traffic = *self.traffic.lock().unwrap();
         let steps: u64 = occupancy.iter().sum();
@@ -125,6 +150,7 @@ impl Metrics {
             completed: self.requests_completed.load(Ordering::Relaxed),
             rejected: self.requests_rejected.load(Ordering::Relaxed),
             failed: self.requests_failed.load(Ordering::Relaxed),
+            cancelled: self.requests_cancelled.load(Ordering::Relaxed),
             tokens,
             draft_steps: self.draft_steps.load(Ordering::Relaxed),
             verify_passes: self.verify_passes.load(Ordering::Relaxed),
@@ -183,6 +209,46 @@ mod tests {
         let m = Metrics::new();
         m.requests_failed.fetch_add(3, Ordering::Relaxed);
         assert_eq!(m.snapshot().failed, 3);
+    }
+
+    #[test]
+    fn cancellations_are_counted() {
+        let m = Metrics::new();
+        m.requests_cancelled.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.cancelled, 2);
+        assert_eq!(s.completed, 0);
+    }
+
+    #[test]
+    fn latency_reservoir_is_bounded() {
+        let mut v = Vec::new();
+        for nth in 0..(LATENCY_SAMPLE_CAP as u64 + 10) {
+            push_capped(&mut v, nth, nth);
+        }
+        assert_eq!(v.len(), LATENCY_SAMPLE_CAP);
+        // The overflow overwrote ring slots 0..10 with the newest values.
+        assert_eq!(v[0], LATENCY_SAMPLE_CAP as u64);
+        assert_eq!(v[9], LATENCY_SAMPLE_CAP as u64 + 9);
+        assert_eq!(v[10], 10);
+    }
+
+    #[test]
+    fn traffic_fields_match_the_snapshot() {
+        let m = Metrics::new();
+        m.record_traffic(&TrafficSnapshot {
+            draft_bytes: 100,
+            draft_tokens: 4,
+            full_bytes: 400,
+            full_tokens: 4,
+            ..Default::default()
+        });
+        let (d, f, r) = m.traffic_fields();
+        let s = m.snapshot();
+        assert_eq!(d, s.bytes_per_token_draft);
+        assert_eq!(f, s.bytes_per_token_full);
+        assert_eq!(r, s.draft_traffic_ratio);
+        assert!((r - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -25,8 +25,11 @@
 //!
 //! * [`queue`] — bounded priority queue with backpressure, FIFO fairness
 //!   within a class, and age-based promotion so batch traffic cannot
-//!   starve; plus the streaming `Chunk*/Done` response protocol.
-//! * [`server`] — scheduler pool, continuous-batching loop, graceful
+//!   starve; plus the streaming `Chunk* / (Done|Cancelled)` response
+//!   protocol and the [`CancelToken`] cooperative-cancellation handle.
+//! * [`server`] — scheduler pool, continuous-batching loop, per-request
+//!   deadlines and cancellation (expired or client-cancelled sequences
+//!   free their KV slots between engine steps), graceful drain +
 //!   shutdown, [`SubmitParams`].
 //! * [`session`] — multi-turn conversation state (token histories).
 //! * [`metrics`] — counters, latency percentiles, failure counts, batch
@@ -39,8 +42,8 @@ mod session;
 
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use queue::{
-    Mode, Priority, QueueError, Request, RequestQueue, Response, ResponseBody, ResponseEvent,
-    ResponseStream, DEFAULT_BATCH_PROMOTE_AFTER,
+    CancelKind, CancelToken, Mode, Priority, QueueError, Request, RequestQueue, Response,
+    ResponseBody, ResponseEvent, ResponseStream, DEFAULT_BATCH_PROMOTE_AFTER,
 };
 pub use server::{Server, ServerConfig, SubmitParams};
 pub use session::SessionStore;

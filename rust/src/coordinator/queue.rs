@@ -2,8 +2,9 @@
 //! response protocol between the scheduler and submitters.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Context;
@@ -31,6 +32,47 @@ pub enum Mode {
     Autoregressive,
 }
 
+/// Cooperative cancellation handle shared between a submitter (or the
+/// network front end, on client disconnect) and the scheduler.  Cheap to
+/// clone; setting it asks the scheduler to retire the request *between*
+/// engine steps — the sequence frees its KV slot instead of occupying a
+/// batch slot to completion.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation (idempotent).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Why a request was retired without completing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelKind {
+    /// The request's deadline expired before generation finished.
+    Deadline,
+    /// The submitter cancelled it (e.g. the HTTP client disconnected).
+    Cancelled,
+}
+
+impl std::fmt::Display for CancelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CancelKind::Deadline => write!(f, "deadline exceeded"),
+            CancelKind::Cancelled => write!(f, "cancelled by client"),
+        }
+    }
+}
+
 /// A generation request.
 pub struct Request {
     pub id: u64,
@@ -43,8 +85,33 @@ pub struct Request {
     pub priority: Priority,
     /// Session to append this exchange to (multi-turn), if any.
     pub session: Option<u64>,
+    /// Retire the request between engine steps once this instant passes.
+    pub deadline: Option<Instant>,
+    /// Cooperative cancellation (client disconnect); checked with the
+    /// deadline between steps.
+    pub cancel: CancelToken,
     pub submitted: Instant,
     pub respond_to: mpsc::Sender<Response>,
+}
+
+/// The single source of truth for cancellation precedence (explicit
+/// cancel beats deadline), shared by queued, held, and in-flight checks.
+pub(crate) fn cancel_reason(cancel: &CancelToken, deadline: Option<Instant>) -> Option<CancelKind> {
+    if cancel.is_cancelled() {
+        return Some(CancelKind::Cancelled);
+    }
+    match deadline {
+        Some(d) if Instant::now() >= d => Some(CancelKind::Deadline),
+        _ => None,
+    }
+}
+
+impl Request {
+    /// Whether the request should be retired now instead of (further)
+    /// occupying a batch slot, and why.
+    pub fn cancel_reason(&self) -> Option<CancelKind> {
+        cancel_reason(&self.cancel, self.deadline)
+    }
 }
 
 /// One message on a request's response channel.
@@ -54,7 +121,7 @@ pub struct Response {
 }
 
 /// The streaming response protocol: zero or more `Chunk`s followed by
-/// exactly one `Done`.
+/// exactly one terminal event (`Done` or `Cancelled`).
 pub enum ResponseEvent {
     /// Tokens accepted since the last chunk (clients can render these
     /// incrementally instead of waiting for the full generation).
@@ -62,6 +129,9 @@ pub enum ResponseEvent {
     /// Generation finished (the body repeats the full token stream) or
     /// failed.
     Done(anyhow::Result<ResponseBody>),
+    /// The request was retired between engine steps (deadline expired or
+    /// the submitter cancelled); its KV slot has been freed.  Terminal.
+    Cancelled(CancelKind),
 }
 
 pub struct ResponseBody {
@@ -77,24 +147,46 @@ pub struct ResponseBody {
 /// Client-side handle for one request's response stream.
 pub struct ResponseStream {
     rx: mpsc::Receiver<Response>,
+    cancel: CancelToken,
 }
 
 impl ResponseStream {
-    pub(crate) fn new(rx: mpsc::Receiver<Response>) -> Self {
-        Self { rx }
+    pub(crate) fn new(rx: mpsc::Receiver<Response>, cancel: CancelToken) -> Self {
+        Self { rx, cancel }
     }
 
-    /// Next event (a token chunk or the final completion).
+    /// The request's cancellation handle (clone it to cancel from another
+    /// thread, e.g. when an HTTP client disconnects mid-stream).
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// Next event (a token chunk or a terminal event).
     pub fn recv(&self) -> anyhow::Result<Response> {
         self.rx.recv().context("server dropped the request")
     }
 
-    /// Drain the stream to completion and return the final body.
+    /// [`ResponseStream::recv`] with a timeout: `Ok(None)` means no event
+    /// arrived yet (the caller can poll other work — e.g. the network
+    /// front end probes its socket for client disconnect between waits).
+    pub fn recv_timeout(&self, timeout: Duration) -> anyhow::Result<Option<Response>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Ok(Some(r)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("server dropped the request")
+            }
+        }
+    }
+
+    /// Drain the stream to completion and return the final body
+    /// (cancellation surfaces as an error).
     pub fn wait(self) -> anyhow::Result<ResponseBody> {
         loop {
             match self.recv()?.event {
                 ResponseEvent::Chunk(_) => {}
                 ResponseEvent::Done(result) => return result,
+                ResponseEvent::Cancelled(kind) => anyhow::bail!("request cancelled: {kind}"),
             }
         }
     }
@@ -243,11 +335,33 @@ mod tests {
                 mode: Mode::Speculative,
                 priority,
                 session: None,
+                deadline: None,
+                cancel: CancelToken::new(),
                 submitted: Instant::now(),
                 respond_to: tx,
             },
             rx,
         )
+    }
+
+    #[test]
+    fn cancel_token_is_shared_and_idempotent() {
+        let (r, _k) = dummy_request(1, Priority::Interactive);
+        let handle = r.cancel.clone();
+        assert!(r.cancel_reason().is_none());
+        handle.cancel();
+        handle.cancel();
+        assert_eq!(r.cancel_reason(), Some(CancelKind::Cancelled));
+    }
+
+    #[test]
+    fn expired_deadline_reports_deadline_kind() {
+        let (mut r, _k) = dummy_request(1, Priority::Interactive);
+        r.deadline = Some(Instant::now() - Duration::from_millis(1));
+        assert_eq!(r.cancel_reason(), Some(CancelKind::Deadline));
+        // Explicit cancellation outranks the deadline (it is checked first).
+        r.cancel.cancel();
+        assert_eq!(r.cancel_reason(), Some(CancelKind::Cancelled));
     }
 
     #[test]

@@ -18,8 +18,8 @@ use anyhow::{Context, Result};
 
 use super::metrics::Metrics;
 use super::queue::{
-    Mode, Priority, Request, RequestQueue, Response, ResponseBody, ResponseEvent, ResponseStream,
-    DEFAULT_BATCH_PROMOTE_AFTER,
+    CancelKind, CancelToken, Mode, Priority, QueueError, Request, RequestQueue, Response,
+    ResponseBody, ResponseEvent, ResponseStream, DEFAULT_BATCH_PROMOTE_AFTER,
 };
 use super::session::SessionStore;
 use crate::model::{Manifest, SamplingParams};
@@ -75,6 +75,10 @@ pub struct SubmitParams {
     pub session: Option<u64>,
     pub max_draft: usize,
     pub gamma: f32,
+    /// Absolute deadline: once it passes, the scheduler retires the
+    /// request between engine steps (freeing its batch slot) and sends a
+    /// terminal [`ResponseEvent::Cancelled`].
+    pub deadline: Option<Instant>,
 }
 
 impl Default for SubmitParams {
@@ -87,6 +91,7 @@ impl Default for SubmitParams {
             session: None,
             max_draft: 16,
             gamma: 0.6,
+            deadline: None,
         }
     }
 }
@@ -134,9 +139,26 @@ impl Server {
             }));
         }
         drop(ready_tx);
-        // Wait for all workers to finish loading (or fail).
+        // Wait for all workers to finish loading (or fail).  On failure the
+        // queue must be closed before returning, otherwise workers that
+        // *did* load successfully would block on `pop()` forever (leaked
+        // threads on a startup error).
+        let mut startup_err: Option<anyhow::Error> = None;
         for _ in 0..cfg.workers.max(1) {
-            ready_rx.recv().context("worker died during startup")??;
+            match ready_rx.recv().context("worker died during startup") {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) | Err(e) => {
+                    startup_err = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = startup_err {
+            queue.close();
+            for h in workers {
+                let _ = h.join();
+            }
+            return Err(e);
         }
         Ok(Self {
             queue,
@@ -150,9 +172,22 @@ impl Server {
     /// Submit a generation request; returns `(id, stream)`.  The stream
     /// yields incremental token chunks followed by the final body.
     pub fn submit(&self, prompt: &[u8], params: SubmitParams) -> Result<(u64, ResponseStream)> {
+        self.try_submit(prompt, params)
+            .map_err(|e| anyhow::anyhow!("submit failed: {e}"))
+    }
+
+    /// [`Server::submit`] with a typed rejection: callers that must map
+    /// backpressure onto a protocol (HTTP 429 vs 503) need to distinguish
+    /// `Full` from `Closed`, which the stringly `anyhow` path cannot.
+    pub fn try_submit(
+        &self,
+        prompt: &[u8],
+        params: SubmitParams,
+    ) -> Result<(u64, ResponseStream), QueueError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         self.metrics.requests_submitted.fetch_add(1, Ordering::Relaxed);
+        let cancel = CancelToken::new();
         let req = Request {
             id,
             prompt: prompt.to_vec(),
@@ -163,14 +198,16 @@ impl Server {
             mode: params.mode,
             priority: params.priority,
             session: params.session,
+            deadline: params.deadline,
+            cancel: cancel.clone(),
             submitted: Instant::now(),
             respond_to: tx,
         };
         if let Err(e) = self.queue.submit(req) {
             self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
-            anyhow::bail!("submit failed: {e}");
+            return Err(e);
         }
-        Ok((id, ResponseStream::new(rx)))
+        Ok((id, ResponseStream::new(rx, cancel)))
     }
 
     /// Convenience: submit with defaults and wait for the reply.
@@ -191,7 +228,46 @@ impl Server {
         self.queue.len()
     }
 
-    /// Drain and stop all workers.
+    /// Requests accepted but not yet terminally answered (queued, held, or
+    /// in-flight in a scheduler batch).  Computed from the monotonic
+    /// metrics counters, so it is eventually consistent — exact once the
+    /// queue is closed and the schedulers go idle.
+    pub fn pending_requests(&self) -> u64 {
+        let m = &self.metrics;
+        let submitted = m.requests_submitted.load(Ordering::Relaxed);
+        let terminal = m.requests_rejected.load(Ordering::Relaxed)
+            + m.requests_completed.load(Ordering::Relaxed)
+            + m.requests_failed.load(Ordering::Relaxed)
+            + m.requests_cancelled.load(Ordering::Relaxed);
+        submitted.saturating_sub(terminal)
+    }
+
+    /// Stop accepting new requests and wait (up to `timeout`) for every
+    /// accepted request to reach a terminal event — completed, failed, or
+    /// cancelled.  Returns `true` when fully drained; `false` means work
+    /// was still in flight at the timeout (the workers keep running — call
+    /// [`Server::shutdown`] to join them).  Idempotent; the graceful path
+    /// for the network front end is `drain(timeout)` then `shutdown()`.
+    pub fn drain(&self, timeout: Duration) -> bool {
+        self.queue.close();
+        let t0 = Instant::now();
+        loop {
+            if self.pending_requests() == 0 {
+                return true;
+            }
+            if t0.elapsed() >= timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Drain in-flight sequences to completion, then stop and join all
+    /// workers.  Closing the queue lets `pop()` hand out every request
+    /// already accepted, and each scheduler keeps stepping its active
+    /// batch until every session reaches a terminal event — so joining
+    /// the workers *is* the drain barrier: no accepted request is dropped
+    /// mid-generation.
     pub fn shutdown(mut self) {
         self.queue.close();
         for h in self.workers.drain(..) {
@@ -217,9 +293,25 @@ struct ActiveReq {
     conversation: Option<u64>,
     /// The submitted prompt (session history excluded), for the store.
     prompt: Vec<u8>,
+    deadline: Option<Instant>,
+    cancel: CancelToken,
     submitted: Instant,
     admitted: Instant,
     respond_to: mpsc::Sender<Response>,
+}
+
+impl ActiveReq {
+    fn cancel_reason(&self) -> Option<CancelKind> {
+        super::queue::cancel_reason(&self.cancel, self.deadline)
+    }
+}
+
+/// Retire a request without completing it: free its KV slot, count it,
+/// and send the terminal [`ResponseEvent::Cancelled`].
+fn cancel_active(mut a: ActiveReq, kind: CancelKind, backend: &dyn Backend, metrics: &Metrics) {
+    a.session.release(backend);
+    metrics.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+    let _ = a.respond_to.send(Response { id: a.id, event: ResponseEvent::Cancelled(kind) });
 }
 
 fn scheduler_main(
@@ -251,6 +343,35 @@ fn scheduler_main(
     let mut held: Vec<Request> = Vec::new();
 
     loop {
+        // ---- cancellation: retire expired/cancelled work between steps ----
+        // Cancelled sequences free their KV slots *here*, before admission,
+        // so an expired request never blocks a queued one from taking its
+        // batch slot.  Held requests are purged the same way (their
+        // deadline keeps ticking while they wait out a session conflict).
+        let mut i = 0;
+        while i < active.len() {
+            match active[i].cancel_reason() {
+                Some(kind) => {
+                    let a = active.swap_remove(i);
+                    cancel_active(a, kind, backend.as_ref(), &metrics);
+                }
+                None => i += 1,
+            }
+        }
+        let mut i = 0;
+        while i < held.len() {
+            match held[i].cancel_reason() {
+                Some(kind) => {
+                    let req = held.remove(i);
+                    metrics.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+                    let _ = req
+                        .respond_to
+                        .send(Response { id: req.id, event: ResponseEvent::Cancelled(kind) });
+                }
+                None => i += 1,
+            }
+        }
+
         // ---- admission: refill the batch (held conflicts first) ----
         let mut h = 0;
         while h < held.len() && active.len() < max_batch {
@@ -361,6 +482,15 @@ fn admit(
     metrics: &Metrics,
     active: &mut Vec<ActiveReq>,
 ) {
+    // A request that expired (or was cancelled) while queued is retired
+    // without ever leasing a KV slot.
+    if let Some(kind) = req.cancel_reason() {
+        metrics.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+        let _ = req
+            .respond_to
+            .send(Response { id: req.id, event: ResponseEvent::Cancelled(kind) });
+        return;
+    }
     let effective = sessions.effective_prompt(req.session, &req.prompt);
     if let Err(e) = validate_prompt(&effective, backend) {
         metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
@@ -391,6 +521,8 @@ fn admit(
             session,
             conversation: req.session,
             prompt: req.prompt,
+            deadline: req.deadline,
+            cancel: req.cancel,
             submitted: req.submitted,
             admitted: Instant::now(),
             respond_to: req.respond_to,

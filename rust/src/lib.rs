@@ -52,10 +52,20 @@
 //!   decoding).
 //! * [`coordinator`] — serving layer: bounded priority queue with
 //!   age-based anti-starvation, continuous-batching scheduler threads,
-//!   streaming chunked responses, sessions, metrics (failures, batch
-//!   occupancy, throughput, per-pass weight traffic drained from the
-//!   backends after every engine step) — the production wrapper around
-//!   the engine.
+//!   streaming chunked responses, per-request deadlines + cooperative
+//!   cancellation (retired sequences free their KV slots between engine
+//!   steps), graceful drain/shutdown, sessions, metrics (failures,
+//!   cancellations, batch occupancy, throughput, per-pass weight traffic
+//!   drained from the backends after every engine step) — the production
+//!   wrapper around the engine.
+//! * [`net`] — the std-only HTTP/1.1 front end over the coordinator:
+//!   `POST /v1/generate`, `POST /v1/stream` (Server-Sent Events over
+//!   chunked transfer), `GET /healthz`, `GET /metrics` (Prometheus
+//!   exposition with TTFT / inter-token / total latency histograms);
+//!   admission control (bounded queue → `429 + Retry-After`), deadline
+//!   and client-disconnect cancellation, graceful drain; plus the
+//!   closed/open-loop (Poisson) load generator behind `speq loadgen`.
+//!   Streamed tokens are bit-identical to offline generation.
 //!
 //! Evaluation layer:
 //! * [`accel`] — cycle-level simulator of the SPEQ accelerator (§IV):
@@ -81,6 +91,7 @@ pub mod accel;
 pub mod bsfp;
 pub mod coordinator;
 pub mod model;
+pub mod net;
 pub mod quant;
 pub mod report;
 pub mod runtime;

@@ -4,7 +4,11 @@
 //!   info                         model summary (artifacts or builtin zoo)
 //!   report --exp <id|all>        regenerate a paper table/figure (DESIGN.md §5)
 //!   generate --model M --prompt  one-off generation (spec + AR comparison)
-//!   serve --model M --workers N  run the serving coordinator on a workload
+//!   serve --model M --workers N  run the serving coordinator on a demo workload,
+//!                                or with --addr H:P, serve HTTP (SSE streaming,
+//!                                /healthz, /metrics) until --duration-s expires
+//!   loadgen --addr H:P           drive a running server: closed-loop (--users)
+//!                                or open-loop Poisson (--rate), BENCH_JSON out
 //!   bench-accel                  quick accelerator sanity sweep
 //!
 //! Every subcommand except `report` works without artifacts: models fall
@@ -16,6 +20,7 @@ use anyhow::Result;
 use speq::accel::{paper_dims, Accel, ArrayMode};
 use speq::coordinator::{Mode, Priority, Server, ServerConfig, SubmitParams};
 use speq::model::{Manifest, SamplingParams};
+use speq::net::{LoadConfig, LoadMode, NetConfig, NetServer};
 use speq::report::{run_experiment, ReportCtx, ReportOpts, EXPERIMENTS};
 use speq::runtime::{
     builtin_config, builtin_model_names, load_backend_with, Backend, ModelSource, NativeConfig,
@@ -63,6 +68,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("report") => report(args),
         Some("generate") => generate(args),
         Some("serve") => serve(args),
+        Some("loadgen") => loadgen(args),
         Some("bench-accel") => bench_accel(args),
         Some("version") => {
             println!("speq {}", speq::version());
@@ -73,11 +79,15 @@ fn dispatch(args: &Args) -> Result<()> {
                 eprintln!("unknown subcommand {o:?}\n");
             }
             println!(
-                "usage: speq <info|report|generate|serve|bench-accel|version> [flags]\n\
+                "usage: speq <info|report|generate|serve|loadgen|bench-accel|version> [flags]\n\
                  \n\
                  speq report --exp <{}|all> [--models a,b] [--n-prompts N] [--gen-len N] [--fresh] [--threads T]\n\
                  speq generate --model <name> --prompt <text> [--gen-len N] [--temperature T] [--threads T]\n\
                  speq serve --model <name> [--workers N] [--requests N] [--threads T]\n\
+                 speq serve --addr 127.0.0.1:8080 [--model M] [--workers N] [--max-batch B] [--queue Q]\n\
+                 \x20          [--deadline-ms D] [--duration-s S] [--threads T]   (HTTP front end)\n\
+                 speq loadgen --addr 127.0.0.1:8080 [--mode closed|open] [--users N] [--rate R]\n\
+                 \x20          [--requests N] [--gen-len N] [--deadline-ms D] [--smoke]\n\
                  speq info\n\
                  \n\
                  --threads T sizes the native kernel worker pool (0 = auto, default\n\
@@ -225,6 +235,9 @@ fn serve(args: &Args) -> Result<()> {
         threads: native_config(args),
         ..ServerConfig::default()
     };
+    if let Some(addr) = args.get("addr") {
+        return serve_http(args, addr, cfg);
+    }
     let n_requests = args.get_usize("requests", 12);
     let gen_len = args.get_usize("gen-len", 64);
     println!(
@@ -295,6 +308,95 @@ fn serve(args: &Args) -> Result<()> {
         );
     }
     server.shutdown();
+    Ok(())
+}
+
+/// `speq serve --addr H:P`: the HTTP/SSE front end.  Runs until
+/// `--duration-s` expires (0 = forever), then drains gracefully.
+fn serve_http(args: &Args, addr: &str, cfg: ServerConfig) -> Result<()> {
+    let duration_s = args.get_usize("duration-s", 0);
+    let deadline_ms = args.get_usize("deadline-ms", 0);
+    let net_cfg = NetConfig {
+        addr: addr.to_string(),
+        server: cfg,
+        default_deadline: if deadline_ms > 0 {
+            Some(std::time::Duration::from_millis(deadline_ms as u64))
+        } else {
+            None
+        },
+        ..NetConfig::default()
+    };
+    let workers = net_cfg.server.workers;
+    let max_batch = net_cfg.server.max_batch;
+    let threads = net_cfg.server.threads.resolved_threads();
+    let model = net_cfg.server.model.clone();
+    let mut server = NetServer::bind(net_cfg)?;
+    println!(
+        "speq serving {model} on http://{} ({} schedulers, max_batch {}, {} kernel thread(s))",
+        server.addr(),
+        workers,
+        max_batch,
+        threads
+    );
+    println!(
+        "routes: POST /v1/generate | POST /v1/stream (SSE) | GET /healthz | GET /metrics"
+    );
+    let t0 = std::time::Instant::now();
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        if duration_s > 0 && t0.elapsed().as_secs() >= duration_s as u64 {
+            break;
+        }
+    }
+    println!("duration elapsed; draining ...");
+    let drained = server.shutdown(std::time::Duration::from_secs(30));
+    let snap = server.snapshot();
+    println!(
+        "served {} requests ({} tokens, {} rejected, {} cancelled, {} failed), drained: {}",
+        snap.completed, snap.tokens, snap.rejected, snap.cancelled, snap.failed, drained
+    );
+    Ok(())
+}
+
+/// `speq loadgen`: drive a running server over real sockets and report
+/// throughput, goodput, and latency percentiles (+ one BENCH_JSON line).
+fn loadgen(args: &Args) -> Result<()> {
+    let smoke = args.has("smoke");
+    let mode = match args.get_or("mode", "closed") {
+        "closed" => LoadMode::Closed { users: args.get_usize("users", 4) },
+        "open" => LoadMode::Open { rate_rps: args.get_f64("rate", 8.0) },
+        other => anyhow::bail!("unknown loadgen mode {other:?} (closed|open)"),
+    };
+    // --smoke only shrinks the default request count and turns on the CI
+    // assertions below; an explicit --mode/--users/--rate is honored.
+    let cfg = LoadConfig {
+        addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
+        mode,
+        requests: args.get_usize("requests", if smoke { 8 } else { 32 }),
+        gen_len: args.get_usize("gen-len", 32),
+        seed: args.get_usize("seed", 0) as u64,
+        deadline_ms: {
+            let d = args.get_usize("deadline-ms", 0);
+            if d > 0 { Some(d as u64) } else { None }
+        },
+        timeout: std::time::Duration::from_secs(args.get_usize("timeout-s", 60) as u64),
+    };
+    let report = speq::net::loadgen::run(&cfg)?;
+    report.print();
+    println!("{}", report.bench_json());
+    if smoke {
+        // CI gate: every request must complete and produce tokens.
+        anyhow::ensure!(
+            report.completed == report.requests && report.failed == 0,
+            "loadgen smoke failed: {}/{} completed, {} failed",
+            report.completed,
+            report.requests,
+            report.failed
+        );
+        anyhow::ensure!(report.goodput_rps > 0.0, "loadgen smoke: zero goodput");
+        anyhow::ensure!(report.tokens > 0, "loadgen smoke: zero tokens streamed");
+        println!("loadgen smoke OK");
+    }
     Ok(())
 }
 

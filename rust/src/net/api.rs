@@ -1,0 +1,353 @@
+//! JSON request/response schema for the serving API, plus SSE event
+//! assembly.  Built on [`util::json`]; token payloads use the
+//! streaming-safe byte escaper ([`json::escape_bytes`]) because tokens are
+//! *bytes* and a streamed chunk can split multi-byte UTF-8 sequences.
+//!
+//! `POST /v1/generate` and `POST /v1/stream` share one request schema:
+//!
+//! ```json
+//! {
+//!   "prompt": "Q: ...",        // required; chars ≤ U+00FF map to bytes
+//!   "gen_len": 64,
+//!   "mode": "spec" | "ar",
+//!   "temperature": 0.0,
+//!   "seed": 0,
+//!   "max_draft": 16,
+//!   "gamma": 0.6,
+//!   "priority": "interactive" | "batch",
+//!   "session": 17,              // optional multi-turn conversation id
+//!   "deadline_ms": 2000         // optional per-request deadline
+//! }
+//! ```
+//!
+//! [`util::json`]: crate::util::json
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Mode, Priority, ResponseBody, SubmitParams};
+use crate::model::SamplingParams;
+use crate::util::json::{self, Value};
+
+/// A parsed generation request (defaults match [`SubmitParams::default`],
+/// so an HTTP request and a library `submit` with the same knobs produce
+/// bit-identical generations).
+#[derive(Debug, Clone)]
+pub struct GenerateRequest {
+    pub prompt: Vec<u8>,
+    pub gen_len: usize,
+    pub mode: Mode,
+    pub temperature: f32,
+    pub seed: u64,
+    pub max_draft: usize,
+    pub gamma: f32,
+    pub priority: Priority,
+    pub session: Option<u64>,
+    pub deadline_ms: Option<u64>,
+}
+
+impl Default for GenerateRequest {
+    fn default() -> Self {
+        let p = SubmitParams::default();
+        Self {
+            prompt: Vec::new(),
+            gen_len: p.gen_len,
+            mode: p.mode,
+            temperature: 0.0,
+            seed: 0,
+            max_draft: p.max_draft,
+            gamma: p.gamma,
+            priority: p.priority,
+            session: None,
+            deadline_ms: None,
+        }
+    }
+}
+
+impl GenerateRequest {
+    /// Parse a request body; `Err` carries a client-facing message (400).
+    pub fn from_json(text: &str) -> Result<Self, String> {
+        let v = json::parse(text).map_err(|e| e.to_string())?;
+        if v.as_obj().is_none() {
+            return Err("request body must be a JSON object".into());
+        }
+        let mut req = GenerateRequest::default();
+        let prompt = v
+            .get("prompt")
+            .and_then(Value::as_str)
+            .ok_or_else(|| "missing required string field \"prompt\"".to_string())?;
+        req.prompt = prompt_bytes(prompt).ok_or_else(|| {
+            "\"prompt\" chars must be ≤ U+00FF (byte tokens; escape raw UTF-8 bytes as \\u00XX)"
+                .to_string()
+        })?;
+        if req.prompt.is_empty() {
+            return Err("\"prompt\" must be non-empty".into());
+        }
+        if let Some(n) = v.get("gen_len") {
+            req.gen_len = n.as_usize().ok_or("\"gen_len\" must be a number")?;
+        }
+        if let Some(m) = v.get("mode") {
+            req.mode = match m.as_str() {
+                Some("spec") | Some("speculative") => Mode::Speculative,
+                Some("ar") | Some("autoregressive") => Mode::Autoregressive,
+                _ => return Err("\"mode\" must be \"spec\" or \"ar\"".into()),
+            };
+        }
+        if let Some(t) = v.get("temperature") {
+            req.temperature = t.as_f64().ok_or("\"temperature\" must be a number")? as f32;
+        }
+        if let Some(s) = v.get("seed") {
+            req.seed = s.as_f64().ok_or("\"seed\" must be a number")? as u64;
+        }
+        if let Some(d) = v.get("max_draft") {
+            req.max_draft = d.as_usize().ok_or("\"max_draft\" must be a number")?;
+        }
+        if let Some(g) = v.get("gamma") {
+            req.gamma = g.as_f64().ok_or("\"gamma\" must be a number")? as f32;
+        }
+        if let Some(p) = v.get("priority") {
+            req.priority = match p.as_str() {
+                Some("interactive") => Priority::Interactive,
+                Some("batch") => Priority::Batch,
+                _ => return Err("\"priority\" must be \"interactive\" or \"batch\"".into()),
+            };
+        }
+        if let Some(s) = v.get("session") {
+            req.session = Some(s.as_f64().ok_or("\"session\" must be a number")? as u64);
+        }
+        if let Some(d) = v.get("deadline_ms") {
+            req.deadline_ms = Some(d.as_f64().ok_or("\"deadline_ms\" must be a number")? as u64);
+        }
+        Ok(req)
+    }
+
+    /// Serialize for the wire (the loadgen client and tests).
+    pub fn to_json(&self) -> String {
+        let mut body = String::from("{\"prompt\":");
+        body.push_str(&json::escape_bytes(&self.prompt));
+        body.push_str(&format!(
+            ",\"gen_len\":{},\"mode\":\"{}\",\"temperature\":{},\"seed\":{},\"max_draft\":{},\"gamma\":{},\"priority\":\"{}\"",
+            self.gen_len,
+            match self.mode {
+                Mode::Speculative => "spec",
+                Mode::Autoregressive => "ar",
+            },
+            self.temperature,
+            self.seed,
+            self.max_draft,
+            self.gamma,
+            match self.priority {
+                Priority::Interactive => "interactive",
+                Priority::Batch => "batch",
+            },
+        ));
+        if let Some(s) = self.session {
+            body.push_str(&format!(",\"session\":{s}"));
+        }
+        if let Some(d) = self.deadline_ms {
+            body.push_str(&format!(",\"deadline_ms\":{d}"));
+        }
+        body.push('}');
+        body
+    }
+
+    /// The coordinator submission this request maps to.  `deadline_ms`
+    /// beats the server-wide default.
+    pub fn submit_params(&self, default_deadline: Option<Duration>) -> SubmitParams {
+        let deadline = self
+            .deadline_ms
+            .map(Duration::from_millis)
+            .or(default_deadline)
+            .map(|d| Instant::now() + d);
+        SubmitParams {
+            gen_len: self.gen_len,
+            mode: self.mode,
+            priority: self.priority,
+            sampling: SamplingParams { temperature: self.temperature, seed: self.seed },
+            session: self.session,
+            max_draft: self.max_draft,
+            gamma: self.gamma,
+            deadline,
+        }
+    }
+}
+
+/// Decode a JSON prompt string to byte tokens via the Latin-1 mapping —
+/// the exact inverse of [`json::escape_bytes`], so any byte sequence can
+/// be expressed and the decoding is *unambiguous* (the same character
+/// always yields the same byte, regardless of the rest of the string).
+/// Chars above U+00FF return `None` and are rejected as a 400: clients
+/// sending raw UTF-8 text must escape it per byte (`\u00XX`), exactly as
+/// the server's own `text` fields do.
+pub fn prompt_bytes(s: &str) -> Option<Vec<u8>> {
+    json::bytes_from_escaped(s)
+}
+
+/// `data:` payload for a `chunk` SSE event: the token byte values plus
+/// their escaper-rendered text form.
+pub fn chunk_event_data(tokens: &[u8]) -> String {
+    let toks: Vec<String> = tokens.iter().map(|b| b.to_string()).collect();
+    format!("{{\"tokens\":[{}],\"text\":{}}}", toks.join(","), json::escape_bytes(tokens))
+}
+
+/// `data:` payload for the terminal `done` SSE event (also the
+/// `/v1/generate` response body): the full token stream plus accept-rate
+/// and traffic statistics.
+pub fn done_data(
+    id: u64,
+    body: &ResponseBody,
+    ttft_ms: Option<f64>,
+    traffic: (f64, f64, f64),
+) -> String {
+    let (bpt_draft, bpt_full, ratio) = traffic;
+    let toks: Vec<String> = body.tokens.iter().map(|b| b.to_string()).collect();
+    let mut out = format!(
+        "{{\"id\":{id},\"tokens\":[{}],\"text\":{},\"tokens_total\":{},\"accept_rate\":{:.6},\"mean_accept_len\":{:.4},\"draft_steps\":{},\"verify_passes\":{},\"latency_ms\":{:.3},\"exec_ms\":{:.3},\"worker\":{}",
+        toks.join(","),
+        json::escape_bytes(&body.tokens),
+        body.tokens.len(),
+        finite(body.trace.accept_rate()),
+        finite(body.trace.mean_accept_len()),
+        body.trace.draft_steps(),
+        body.trace.verify_passes(),
+        body.latency_s * 1e3,
+        body.exec_s * 1e3,
+        body.worker,
+    );
+    if let Some(t) = ttft_ms {
+        out.push_str(&format!(",\"ttft_ms\":{t:.3}"));
+    }
+    out.push_str(&format!(
+        ",\"bytes_per_token_draft\":{:.1},\"bytes_per_token_full\":{:.1},\"draft_traffic_ratio\":{:.4}}}",
+        finite(bpt_draft),
+        finite(bpt_full),
+        finite(ratio)
+    ));
+    out
+}
+
+/// `data:` payload for an error (terminal) event / error response body.
+pub fn error_data(message: &str) -> String {
+    format!("{{\"error\":{}}}", json::escape_bytes(message.as_bytes()))
+}
+
+fn finite(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
+    }
+}
+
+/// Frame one Server-Sent Event (`event:` + single-line `data:`).  Payloads
+/// produced by this module never contain raw newlines (the byte escaper
+/// guarantees it), so one `data:` line always suffices.
+pub fn sse_event(event: &str, data: &str) -> Vec<u8> {
+    debug_assert!(!data.contains('\n'), "SSE data must be single-line");
+    format!("event: {event}\ndata: {data}\n\n").into_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_full_request() {
+        let r = GenerateRequest::from_json(
+            r#"{"prompt":"hi there","gen_len":32,"mode":"ar","temperature":0.5,"seed":7,
+                "max_draft":8,"gamma":0.4,"priority":"batch","session":3,"deadline_ms":250}"#,
+        )
+        .unwrap();
+        assert_eq!(r.prompt, b"hi there");
+        assert_eq!(r.gen_len, 32);
+        assert_eq!(r.mode, Mode::Autoregressive);
+        assert_eq!(r.seed, 7);
+        assert_eq!(r.max_draft, 8);
+        assert_eq!(r.priority, Priority::Batch);
+        assert_eq!(r.session, Some(3));
+        assert_eq!(r.deadline_ms, Some(250));
+    }
+
+    #[test]
+    fn defaults_match_submit_params_defaults() {
+        let r = GenerateRequest::from_json(r#"{"prompt":"x"}"#).unwrap();
+        let d = SubmitParams::default();
+        assert_eq!(r.gen_len, d.gen_len);
+        assert_eq!(r.max_draft, d.max_draft);
+        assert_eq!(r.gamma, d.gamma);
+        assert_eq!(r.mode, d.mode);
+        let p = r.submit_params(None);
+        assert!(p.deadline.is_none());
+        assert!(p.sampling.is_greedy());
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_every_field() {
+        let mut req = GenerateRequest::default();
+        req.prompt = vec![0u8, b'a', 0xff, b'\n'];
+        req.gen_len = 17;
+        req.mode = Mode::Autoregressive;
+        req.seed = 42;
+        req.session = Some(9);
+        req.deadline_ms = Some(125);
+        let back = GenerateRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back.prompt, req.prompt);
+        assert_eq!(back.gen_len, 17);
+        assert_eq!(back.mode, Mode::Autoregressive);
+        assert_eq!(back.seed, 42);
+        assert_eq!(back.session, Some(9));
+        assert_eq!(back.deadline_ms, Some(125));
+    }
+
+    #[test]
+    fn missing_or_empty_prompt_is_rejected() {
+        assert!(GenerateRequest::from_json(r#"{}"#).is_err());
+        assert!(GenerateRequest::from_json(r#"{"prompt":""}"#).is_err());
+        assert!(GenerateRequest::from_json("not json").is_err());
+        assert!(GenerateRequest::from_json(r#"[1,2]"#).is_err());
+    }
+
+    #[test]
+    fn prompt_decoding_is_unambiguous() {
+        // Latin-1 range decodes to one byte per char ...
+        let r = GenerateRequest::from_json("{\"prompt\":\"caf\\u00e9\"}").unwrap();
+        assert_eq!(r.prompt, vec![b'c', b'a', b'f', 0xe9]);
+        // ... and chars above U+00FF are rejected, never silently
+        // re-encoded (the same char must always map to the same byte).
+        let e = GenerateRequest::from_json("{\"prompt\":\"caf\\u00e9 \\ud83d\\ude00\"}")
+            .unwrap_err();
+        assert!(e.contains("U+00FF"), "{e}");
+    }
+
+    #[test]
+    fn chunk_event_data_is_parseable_and_lossless() {
+        let tokens = vec![72u8, 0, 10, 255];
+        let data = chunk_event_data(&tokens);
+        let v = crate::util::json::parse(&data).unwrap();
+        let nums: Vec<u8> = v
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|n| n.as_usize().unwrap() as u8)
+            .collect();
+        assert_eq!(nums, tokens);
+        let text = v.get("text").unwrap().as_str().unwrap();
+        assert_eq!(crate::util::json::bytes_from_escaped(text).unwrap(), tokens);
+        assert!(!data.contains('\n'));
+    }
+
+    #[test]
+    fn sse_event_frames() {
+        let e = sse_event("chunk", "{\"tokens\":[1]}");
+        assert_eq!(e, b"event: chunk\ndata: {\"tokens\":[1]}\n\n");
+    }
+
+    #[test]
+    fn error_data_escapes_newlines() {
+        let d = error_data("bad\nthing");
+        assert!(!d.contains('\n'));
+        let v = crate::util::json::parse(&d).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str(), Some("bad\nthing"));
+    }
+}

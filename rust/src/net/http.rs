@@ -1,0 +1,417 @@
+//! Minimal HTTP/1.1 on std sockets: request parsing, response writing,
+//! chunked transfer encoding, keep-alive.
+//!
+//! Scope is exactly what the serving front end needs — `Content-Length`
+//! framed request bodies, keep-alive connection reuse, and chunked
+//! responses for Server-Sent Events — with hard limits on header and body
+//! size so a misbehaving client cannot balloon memory.  Reads are written
+//! against a non-blocking/timeout socket: `WouldBlock`/`TimedOut` polls a
+//! caller-supplied shutdown flag, which is how connection threads notice a
+//! graceful shutdown while parked in a keep-alive read.
+
+use std::io::{ErrorKind, Read, Write};
+
+/// Request head (request line + headers) cap; crossing it is a 431.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// A parsed HTTP/1.1 request.
+#[derive(Debug)]
+pub struct HttpRequest {
+    /// Upper-case method as sent (`GET`, `POST`, ...).
+    pub method: String,
+    /// Request target, e.g. `/v1/generate` (query strings are not split).
+    pub path: String,
+    /// Header name/value pairs; names lower-cased at parse time.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Whether the client allows connection reuse (HTTP/1.1 default yes,
+    /// `Connection: close` opts out; HTTP/1.0 default no).
+    pub keep_alive: bool,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup (names are stored lower-cased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Parse/IO failures, each mapping to a response status (or none for raw
+/// socket errors, where no response can be delivered).
+#[derive(Debug)]
+pub enum HttpError {
+    /// Malformed request line, headers, or body framing (400).
+    Bad(String),
+    /// Request head exceeded [`MAX_HEADER_BYTES`] (431).
+    HeadersTooLarge,
+    /// Declared `Content-Length` exceeded the configured cap (413).
+    BodyTooLarge(usize),
+    /// Socket error or mid-request disconnect; no response possible.
+    Io(std::io::Error),
+}
+
+impl HttpError {
+    /// The status code to answer with, if a response can still be sent.
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            HttpError::Bad(_) => Some(400),
+            HttpError::HeadersTooLarge => Some(431),
+            HttpError::BodyTooLarge(_) => Some(413),
+            HttpError::Io(_) => None,
+        }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Bad(m) => write!(f, "bad request: {m}"),
+            HttpError::HeadersTooLarge => {
+                write!(f, "request head exceeds {MAX_HEADER_BYTES} bytes")
+            }
+            HttpError::BodyTooLarge(n) => write!(f, "request body of {n} bytes exceeds limit"),
+            HttpError::Io(e) => write!(f, "socket error: {e}"),
+        }
+    }
+}
+
+/// Read one request off the connection.  `Ok(None)` is a clean end of the
+/// connection: the peer closed between requests, or `shutdown()` turned
+/// true while no request was in progress.  The caller is expected to have
+/// set a short read timeout on the socket so the shutdown flag is polled.
+pub fn read_request<R: Read>(
+    stream: &mut R,
+    max_body: usize,
+    shutdown: impl Fn() -> bool,
+) -> Result<Option<HttpRequest>, HttpError> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 4096];
+
+    // ---- request head: read until the blank line ----
+    let head_end = loop {
+        if let Some(pos) = find_blank_line(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err(HttpError::HeadersTooLarge);
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => {
+                return if buf.is_empty() {
+                    Ok(None)
+                } else {
+                    Err(HttpError::Bad("connection closed mid-head".into()))
+                }
+            }
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                if shutdown() {
+                    // Draining: drop idle keep-alive connections; a client
+                    // caught mid-send gets the connection closed (the
+                    // coordinator is no longer accepting anyway).
+                    return Ok(None);
+                }
+            }
+            Err(e) => return Err(HttpError::Io(e)),
+        }
+    };
+
+    let (method, path, headers, keep_alive) = parse_head(&buf[..head_end])?;
+
+    // ---- body: exactly Content-Length bytes ----
+    let content_length = match header_of(&headers, "content-length") {
+        Some(v) => v
+            .trim()
+            .parse::<usize>()
+            .map_err(|_| HttpError::Bad(format!("bad content-length {v:?}")))?,
+        None => 0,
+    };
+    if content_length > max_body {
+        return Err(HttpError::BodyTooLarge(content_length));
+    }
+    if header_of(&headers, "transfer-encoding").is_some() {
+        return Err(HttpError::Bad("chunked request bodies are not supported".into()));
+    }
+    let mut body = buf.split_off(head_end + 4);
+    while body.len() < content_length {
+        // Never read past the declared body: each read is capped at the
+        // bytes still owed, so a well-behaved next request on a keep-alive
+        // connection stays in the socket for the next `read_request`.
+        let need = (content_length - body.len()).min(tmp.len());
+        match stream.read(&mut tmp[..need]) {
+            Ok(0) => return Err(HttpError::Bad("connection closed mid-body".into())),
+            Ok(n) => body.extend_from_slice(&tmp[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                if shutdown() {
+                    return Err(HttpError::Bad("connection aborted: server draining".into()));
+                }
+            }
+            Err(e) => return Err(HttpError::Io(e)),
+        }
+    }
+    // The head read can still have pulled pipelined bytes of a *next*
+    // request into the buffer; they cannot be replayed, so rather than
+    // serve a corrupted follow-up, downgrade the connection to close (the
+    // client re-sends on a fresh connection per HTTP semantics).
+    let pipelined = body.len() > content_length;
+    body.truncate(content_length);
+
+    Ok(Some(HttpRequest { method, path, headers, body, keep_alive: keep_alive && !pipelined }))
+}
+
+/// Parse the request line + header block (no trailing blank line).
+#[allow(clippy::type_complexity)]
+fn parse_head(head: &[u8]) -> Result<(String, String, Vec<(String, String)>, bool), HttpError> {
+    let text = std::str::from_utf8(head)
+        .map_err(|_| HttpError::Bad("request head is not valid UTF-8".into()))?;
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() {
+        return Err(HttpError::Bad(format!("bad request line {request_line:?}")));
+    }
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return Err(HttpError::Bad(format!("unsupported version {version:?}"))),
+    };
+
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::Bad(format!("bad header line {line:?}")))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let keep_alive = match header_of(&headers, "connection").map(str::to_ascii_lowercase) {
+        Some(c) if c == "close" => false,
+        Some(c) if c == "keep-alive" => true,
+        _ => http11,
+    };
+    Ok((method, path, headers, keep_alive))
+}
+
+fn header_of<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+}
+
+/// Position of the `\r\n\r\n` head terminator, if present.
+fn find_blank_line(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Human reason phrase for the statuses the front end emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete `Content-Length`-framed response.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+    extra_headers: &[(&str, &str)],
+) -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", status, status_reason(status))?;
+    write!(
+        w,
+        "content-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n",
+        content_type,
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    )?;
+    for (k, v) in extra_headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Start a chunked (streaming) response; follow with [`write_chunk`] calls
+/// and a final [`finish_chunked`].
+pub fn write_chunked_head<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", status, status_reason(status))?;
+    write!(
+        w,
+        "content-type: {}\r\ntransfer-encoding: chunked\r\ncache-control: no-store\r\nconnection: {}\r\n\r\n",
+        content_type,
+        if keep_alive { "keep-alive" } else { "close" }
+    )?;
+    w.flush()
+}
+
+/// One chunk of a chunked response (empty input is a no-op: a zero-length
+/// chunk would terminate the stream).
+pub fn write_chunk<W: Write>(w: &mut W, data: &[u8]) -> std::io::Result<()> {
+    if data.is_empty() {
+        return Ok(());
+    }
+    write!(w, "{:x}\r\n", data.len())?;
+    w.write_all(data)?;
+    w.write_all(b"\r\n")?;
+    w.flush()
+}
+
+/// Terminate a chunked response.
+pub fn finish_chunked<W: Write>(w: &mut W) -> std::io::Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn read_one(raw: &[u8]) -> Result<Option<HttpRequest>, HttpError> {
+        read_request(&mut Cursor::new(raw.to_vec()), 1024, || false)
+    }
+
+    #[test]
+    fn parses_a_post_with_body_and_headers() {
+        let raw = b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: 9\r\n\r\n{\"a\":123}";
+        let r = read_one(raw).unwrap().unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/v1/generate");
+        assert_eq!(r.header("content-type"), Some("application/json"));
+        assert_eq!(r.header("CONTENT-TYPE"), Some("application/json"));
+        assert_eq!(r.body, b"{\"a\":123}");
+        assert!(r.keep_alive, "HTTP/1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn get_without_body_and_connection_close() {
+        let raw = b"GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let r = read_one(raw).unwrap().unwrap();
+        assert_eq!(r.method, "GET");
+        assert!(r.body.is_empty());
+        assert!(!r.keep_alive);
+    }
+
+    #[test]
+    fn http10_defaults_to_close() {
+        let raw = b"GET / HTTP/1.0\r\n\r\n";
+        assert!(!read_one(raw).unwrap().unwrap().keep_alive);
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        assert!(read_one(b"").unwrap().is_none());
+    }
+
+    #[test]
+    fn truncated_head_is_bad_request() {
+        let e = read_one(b"POST /v1/generate HTTP/1.1\r\nContent-").unwrap_err();
+        assert_eq!(e.status(), Some(400));
+    }
+
+    #[test]
+    fn truncated_body_is_bad_request() {
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort";
+        assert_eq!(read_one(raw).unwrap_err().status(), Some(400));
+    }
+
+    #[test]
+    fn oversized_body_is_413_without_reading_it() {
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 9999\r\n\r\n";
+        match read_one(raw).unwrap_err() {
+            HttpError::BodyTooLarge(n) => assert_eq!(n, 9999),
+            other => panic!("expected BodyTooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_head_is_431() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        raw.extend(std::iter::repeat(b'x').take(MAX_HEADER_BYTES + 16));
+        let e = read_request(&mut Cursor::new(raw), 1024, || false).unwrap_err();
+        assert_eq!(e.status(), Some(431));
+    }
+
+    #[test]
+    fn bad_request_line_and_version_are_rejected() {
+        assert_eq!(read_one(b"\r\n\r\n").unwrap_err().status(), Some(400));
+        assert_eq!(read_one(b"GET / HTTP/2\r\n\r\n").unwrap_err().status(), Some(400));
+        assert_eq!(read_one(b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n").unwrap_err().status(), Some(400));
+    }
+
+    #[test]
+    fn pipelined_bytes_downgrade_keep_alive_instead_of_corrupting() {
+        // Bytes of a second pipelined request pulled in with the first
+        // head cannot be replayed — the body must stay exact and the
+        // connection must not be reused (no corrupted follow-up parse).
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 2\r\n\r\nabGET /healthz HTTP/1.1\r\n\r\n";
+        let r = read_one(raw).unwrap().unwrap();
+        assert_eq!(r.body, b"ab");
+        assert!(!r.keep_alive);
+    }
+
+    #[test]
+    fn response_writer_frames_correctly() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429, "application/json", b"{}", true, &[("retry-after", "1")])
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("content-length: 2\r\n"));
+        assert!(text.contains("retry-after: 1\r\n"));
+        assert!(text.contains("connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+    }
+
+    #[test]
+    fn chunked_stream_frames_and_terminates() {
+        let mut out = Vec::new();
+        write_chunked_head(&mut out, 200, "text/event-stream", true).unwrap();
+        write_chunk(&mut out, b"hello").unwrap();
+        write_chunk(&mut out, b"").unwrap(); // no-op, must not terminate
+        write_chunk(&mut out, b"world!").unwrap();
+        finish_chunked(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("transfer-encoding: chunked"));
+        assert!(text.contains("5\r\nhello\r\n"));
+        assert!(text.contains("6\r\nworld!\r\n"));
+        assert!(text.ends_with("0\r\n\r\n"));
+    }
+}

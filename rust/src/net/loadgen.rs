@@ -1,0 +1,538 @@
+//! Load generator: a std-only HTTP/SSE client plus closed-loop and
+//! open-loop drivers against a running [`NetServer`], reporting
+//! tokens/sec, goodput, and TTFT / total-latency percentiles.
+//!
+//! * **Closed loop** (`N` concurrent users): each user issues its next
+//!   request as soon as the previous one finishes — throughput-oriented,
+//!   models a fixed worker pool.
+//! * **Open loop** (fixed arrival rate): request arrivals follow a
+//!   Poisson process (exponential inter-arrivals from the deterministic
+//!   [`util::rng`]), independent of completions — latency-oriented,
+//!   models internet traffic and exposes queueing delay that closed-loop
+//!   measurement hides.
+//!
+//! The client drives `POST /v1/stream` so it observes true TTFT (first
+//! SSE `chunk` event) over a real socket; byte tokens are recovered from
+//! each event's `tokens` array, so the streamed output can be compared
+//! bit-for-bit against offline generation.
+//!
+//! [`NetServer`]: super::NetServer
+//! [`util::rng`]: crate::util::rng
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::api::GenerateRequest;
+use crate::util::json;
+use crate::util::rng::Rng;
+
+/// Fixed prompt set cycled by request index (all ASCII, valid for every
+/// zoo model's byte vocabulary).
+pub const PROMPTS: &[&str] = &[
+    "Q: ada has 3 apples and finds 4 more. how many apples now?\nA: ",
+    "def add_two(x):\n    return ",
+    "USER: hello, can we talk about music?\nBOT: ",
+    "Q: bob has 9 coins and spends 2. how many coins left?\nA: ",
+];
+
+/// How a streamed request terminated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Terminal {
+    /// `done` event received.
+    Done,
+    /// `cancelled` event (deadline or disconnect).
+    Cancelled,
+    /// `error` event or a non-200 response other than 429.
+    Error,
+    /// 429 (admission control) — counted separately from errors.
+    Rejected,
+    /// Connection ended without a terminal event.
+    Dropped,
+}
+
+/// One request's observation.
+#[derive(Debug, Clone)]
+pub struct StreamOutcome {
+    pub status: u16,
+    pub terminal: Terminal,
+    /// Byte tokens recovered from the SSE `chunk` events, in order.
+    pub tokens: Vec<u8>,
+    /// Seconds to the first `chunk` event.
+    pub ttft_s: Option<f64>,
+    pub total_s: f64,
+    /// Raw `data:` payload of the terminal `done` event, if any.
+    pub done_data: Option<String>,
+    /// Response body of a non-200 answer (error JSON), if any.
+    pub error_body: Option<String>,
+    /// `Retry-After` seconds, when the server answered 429.
+    pub retry_after_s: Option<u64>,
+}
+
+/// Issue one `POST /v1/stream` request and consume the SSE stream.
+pub fn stream_once(
+    addr: &str,
+    greq: &GenerateRequest,
+    timeout: Duration,
+) -> Result<StreamOutcome> {
+    let t0 = Instant::now();
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(timeout)).ok();
+    let body = greq.to_json();
+    let mut w = stream.try_clone().context("clone socket")?;
+    write!(
+        w,
+        "POST /v1/stream HTTP/1.1\r\nhost: {addr}\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n\r\n",
+        body.len()
+    )?;
+    w.write_all(body.as_bytes())?;
+    w.flush()?;
+
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    r.read_line(&mut line).context("read status line")?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("bad status line {line:?}"))?;
+
+    let mut chunked = false;
+    let mut content_length = 0usize;
+    let mut retry_after_s = None;
+    loop {
+        let mut l = String::new();
+        if r.read_line(&mut l)? == 0 {
+            anyhow::bail!("connection closed in response headers");
+        }
+        let l = l.trim_end().to_ascii_lowercase();
+        if l.is_empty() {
+            break;
+        }
+        if let Some(v) = l.strip_prefix("transfer-encoding:") {
+            chunked = v.trim() == "chunked";
+        }
+        if let Some(v) = l.strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+        if let Some(v) = l.strip_prefix("retry-after:") {
+            retry_after_s = v.trim().parse().ok();
+        }
+    }
+
+    if status != 200 || !chunked {
+        let mut buf = vec![0u8; content_length];
+        r.read_exact(&mut buf).context("read error body")?;
+        let terminal = if status == 429 { Terminal::Rejected } else { Terminal::Error };
+        return Ok(StreamOutcome {
+            status,
+            terminal,
+            tokens: Vec::new(),
+            ttft_s: None,
+            total_s: t0.elapsed().as_secs_f64(),
+            done_data: None,
+            error_body: Some(String::from_utf8_lossy(&buf).into_owned()),
+            retry_after_s,
+        });
+    }
+
+    // ---- chunked SSE body ----
+    let mut payload: Vec<u8> = Vec::new();
+    let mut scan = 0usize;
+    let mut tokens: Vec<u8> = Vec::new();
+    let mut ttft_s: Option<f64> = None;
+    let mut terminal = Terminal::Dropped;
+    let mut done_data: Option<String> = None;
+    'read: loop {
+        let mut szl = String::new();
+        if r.read_line(&mut szl)? == 0 {
+            break; // EOF without the zero chunk
+        }
+        let size = usize::from_str_radix(szl.trim(), 16)
+            .with_context(|| format!("bad chunk size {szl:?}"))?;
+        if size == 0 {
+            break; // terminator (trailing CRLF left unread; socket closes)
+        }
+        let mut chunk = vec![0u8; size + 2]; // payload + CRLF
+        r.read_exact(&mut chunk).context("read chunk")?;
+        chunk.truncate(size);
+        payload.extend_from_slice(&chunk);
+
+        // Parse complete SSE events (blocks separated by a blank line).
+        while let Some(rel) = find_sep(&payload[scan..]) {
+            let block = payload[scan..scan + rel].to_vec();
+            scan += rel + 2;
+            let (event, data) = parse_event(&block);
+            match event.as_str() {
+                "chunk" => {
+                    if ttft_s.is_none() {
+                        ttft_s = Some(t0.elapsed().as_secs_f64());
+                    }
+                    if let Ok(v) = json::parse(&data) {
+                        if let Some(arr) = v.get("tokens").and_then(json::Value::as_arr) {
+                            tokens.extend(arr.iter().filter_map(|n| n.as_usize()).map(|n| n as u8));
+                        }
+                    }
+                }
+                "done" => {
+                    terminal = Terminal::Done;
+                    done_data = Some(data);
+                    continue 'read; // server sends the zero chunk next
+                }
+                "cancelled" => {
+                    terminal = Terminal::Cancelled;
+                }
+                "error" => {
+                    terminal = Terminal::Error;
+                }
+                _ => {}
+            }
+        }
+    }
+    Ok(StreamOutcome {
+        status,
+        terminal,
+        tokens,
+        ttft_s,
+        total_s: t0.elapsed().as_secs_f64(),
+        done_data,
+        error_body: None,
+        retry_after_s,
+    })
+}
+
+/// Byte offset of the first SSE event separator (`\n\n`).
+fn find_sep(buf: &[u8]) -> Option<usize> {
+    buf.windows(2).position(|w| w == b"\n\n")
+}
+
+/// Split one SSE block into its `event:` name and `data:` payload.
+fn parse_event(block: &[u8]) -> (String, String) {
+    let text = String::from_utf8_lossy(block);
+    let mut event = String::new();
+    let mut data = String::new();
+    for line in text.lines() {
+        if let Some(v) = line.strip_prefix("event:") {
+            event = v.trim().to_string();
+        } else if let Some(v) = line.strip_prefix("data:") {
+            data = v.trim().to_string();
+        }
+    }
+    (event, data)
+}
+
+/// Arrival pattern for a load run.
+#[derive(Debug, Clone, Copy)]
+pub enum LoadMode {
+    /// `users` concurrent clients, each issuing back-to-back requests.
+    Closed { users: usize },
+    /// Poisson arrivals at `rate_rps` requests/second (open loop).
+    Open { rate_rps: f64 },
+}
+
+/// Load-run configuration.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    /// Server address, e.g. `127.0.0.1:8080`.
+    pub addr: String,
+    pub mode: LoadMode,
+    /// Total requests to issue.
+    pub requests: usize,
+    pub gen_len: usize,
+    /// Sampling seed sent with every request (generation stays greedy and
+    /// deterministic; prompts cycle through [`PROMPTS`]).
+    pub seed: u64,
+    pub deadline_ms: Option<u64>,
+    /// Per-request socket read timeout.
+    pub timeout: Duration,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:8080".to_string(),
+            mode: LoadMode::Closed { users: 4 },
+            requests: 16,
+            gen_len: 32,
+            seed: 0,
+            deadline_ms: None,
+            timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Latency percentiles, milliseconds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+fn percentiles_ms(samples: &mut [f64]) -> Percentiles {
+    // Shared nearest-rank percentile (util::bench::percentile), s → ms.
+    let mut pick = |p: f64| crate::util::bench::percentile(samples, p) * 1e3;
+    Percentiles { p50: pick(0.50), p95: pick(0.95), p99: pick(0.99) }
+}
+
+/// Aggregated results of one load run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub mode: String,
+    pub requests: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub cancelled: usize,
+    pub failed: usize,
+    pub tokens: u64,
+    pub wall_s: f64,
+    /// Tokens from *completed* requests per wall-clock second.
+    pub tokens_per_s: f64,
+    /// Completed requests per wall-clock second.
+    pub goodput_rps: f64,
+    pub ttft_ms: Percentiles,
+    pub total_ms: Percentiles,
+}
+
+impl LoadReport {
+    /// Human-readable summary (the CLI prints this).
+    pub fn print(&self) {
+        println!(
+            "loadgen [{}]: {} requests in {:.2} s | {} ok, {} rejected (429), {} cancelled, {} failed",
+            self.mode, self.requests, self.wall_s, self.completed, self.rejected,
+            self.cancelled, self.failed
+        );
+        println!(
+            "  throughput: {:.1} tok/s | goodput {:.2} req/s | {} tokens total",
+            self.tokens_per_s, self.goodput_rps, self.tokens
+        );
+        println!(
+            "  TTFT  p50 {:>8.1} ms | p95 {:>8.1} ms | p99 {:>8.1} ms",
+            self.ttft_ms.p50, self.ttft_ms.p95, self.ttft_ms.p99
+        );
+        println!(
+            "  total p50 {:>8.1} ms | p95 {:>8.1} ms | p99 {:>8.1} ms",
+            self.total_ms.p50, self.total_ms.p95, self.total_ms.p99
+        );
+    }
+
+    /// One machine-readable `BENCH_JSON` line (same convention as
+    /// [`util::bench::Bench::metrics_json`]; CI collects these into
+    /// `BENCH_server_*.json` artifacts).
+    ///
+    /// [`util::bench::Bench::metrics_json`]: crate::util::bench::Bench::metrics_json
+    pub fn bench_json(&self) -> String {
+        let f = |v: f64| if v.is_finite() { v } else { 0.0 };
+        format!(
+            "BENCH_JSON {{\"group\":\"net_loadgen\",\"mode\":\"{}\",\"requests\":{},\"completed\":{},\"rejected\":{},\"cancelled\":{},\"failed\":{},\"tokens\":{},\"wall_s\":{:.4},\"tokens_per_sec\":{:.3},\"goodput_rps\":{:.3},\"ttft_p50_ms\":{:.3},\"ttft_p95_ms\":{:.3},\"ttft_p99_ms\":{:.3},\"total_p50_ms\":{:.3},\"total_p95_ms\":{:.3},\"total_p99_ms\":{:.3}}}",
+            self.mode, self.requests, self.completed, self.rejected, self.cancelled,
+            self.failed, self.tokens, f(self.wall_s), f(self.tokens_per_s),
+            f(self.goodput_rps), f(self.ttft_ms.p50), f(self.ttft_ms.p95),
+            f(self.ttft_ms.p99), f(self.total_ms.p50), f(self.total_ms.p95),
+            f(self.total_ms.p99),
+        )
+    }
+}
+
+/// The request issued for global request index `i`.
+pub fn request_for(i: usize, cfg: &LoadConfig) -> GenerateRequest {
+    GenerateRequest {
+        prompt: PROMPTS[i % PROMPTS.len()].as_bytes().to_vec(),
+        gen_len: cfg.gen_len,
+        seed: cfg.seed,
+        deadline_ms: cfg.deadline_ms,
+        ..GenerateRequest::default()
+    }
+}
+
+/// Run the configured load against a live server.
+pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
+    let samples: Arc<Mutex<Vec<StreamOutcome>>> = Arc::new(Mutex::new(Vec::new()));
+    let cfg = Arc::new(cfg.clone());
+    let t0 = Instant::now();
+
+    match cfg.mode {
+        LoadMode::Closed { users } => {
+            let next = Arc::new(AtomicUsize::new(0));
+            let mut handles = Vec::new();
+            for _ in 0..users.max(1) {
+                let cfg = cfg.clone();
+                let samples = samples.clone();
+                let next = next.clone();
+                handles.push(std::thread::spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cfg.requests {
+                        return;
+                    }
+                    let outcome = issue(i, &cfg);
+                    samples.lock().unwrap().push(outcome);
+                }));
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+        LoadMode::Open { rate_rps } => {
+            anyhow::ensure!(rate_rps > 0.0, "open-loop rate must be positive");
+            // Poisson arrivals: exponential inter-arrival times from the
+            // deterministic RNG, precomputed so dispatch jitter does not
+            // perturb the schedule.
+            let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x4c6f_6164); // "Load"
+            let mut offsets = Vec::with_capacity(cfg.requests);
+            let mut t = 0.0f64;
+            for _ in 0..cfg.requests {
+                let u = rng.gen_f64();
+                t += -(1.0 - u).ln() / rate_rps;
+                offsets.push(t);
+            }
+            let start = Instant::now();
+            let mut handles = Vec::new();
+            for (i, off) in offsets.into_iter().enumerate() {
+                let target = start + Duration::from_secs_f64(off);
+                let now = Instant::now();
+                if target > now {
+                    std::thread::sleep(target - now);
+                }
+                let cfg = cfg.clone();
+                let samples = samples.clone();
+                handles.push(std::thread::spawn(move || {
+                    let outcome = issue(i, &cfg);
+                    samples.lock().unwrap().push(outcome);
+                }));
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+    }
+
+    let wall_s = t0.elapsed().as_secs_f64();
+    let samples = Arc::try_unwrap(samples)
+        .map_err(|_| anyhow::anyhow!("sample sink still shared"))?
+        .into_inner()
+        .unwrap();
+
+    let mut completed = 0;
+    let mut rejected = 0;
+    let mut cancelled = 0;
+    let mut failed = 0;
+    let mut tokens = 0u64;
+    let mut ttfts = Vec::new();
+    let mut totals = Vec::new();
+    for s in &samples {
+        match s.terminal {
+            Terminal::Done => {
+                completed += 1;
+                tokens += s.tokens.len() as u64;
+                if let Some(t) = s.ttft_s {
+                    ttfts.push(t);
+                }
+                totals.push(s.total_s);
+            }
+            Terminal::Rejected => rejected += 1,
+            Terminal::Cancelled => cancelled += 1,
+            Terminal::Error | Terminal::Dropped => failed += 1,
+        }
+    }
+
+    Ok(LoadReport {
+        mode: match cfg.mode {
+            LoadMode::Closed { users } => format!("closed users={users}"),
+            LoadMode::Open { rate_rps } => format!("open rate={rate_rps}/s"),
+        },
+        requests: cfg.requests,
+        completed,
+        rejected,
+        cancelled,
+        failed,
+        tokens,
+        wall_s,
+        tokens_per_s: if wall_s > 0.0 { tokens as f64 / wall_s } else { 0.0 },
+        goodput_rps: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
+        ttft_ms: percentiles_ms(&mut ttfts),
+        total_ms: percentiles_ms(&mut totals),
+    })
+}
+
+/// One request, with transport failures folded into the sample.
+fn issue(i: usize, cfg: &LoadConfig) -> StreamOutcome {
+    let greq = request_for(i, cfg);
+    match stream_once(&cfg.addr, &greq, cfg.timeout) {
+        Ok(o) => o,
+        Err(e) => StreamOutcome {
+            status: 0,
+            terminal: Terminal::Dropped,
+            tokens: Vec::new(),
+            ttft_s: None,
+            total_s: 0.0,
+            done_data: None,
+            error_body: Some(format!("{e:#}")),
+            retry_after_s: None,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_of_known_samples() {
+        let mut s: Vec<f64> = (1..=100).map(|i| i as f64 / 1000.0).collect();
+        let p = percentiles_ms(&mut s);
+        assert!((p.p50 - 50.0).abs() <= 2.0, "{}", p.p50);
+        assert!((p.p95 - 95.0).abs() <= 2.0, "{}", p.p95);
+        assert!((p.p99 - 99.0).abs() <= 2.0, "{}", p.p99);
+        assert_eq!(percentiles_ms(&mut Vec::new()).p50, 0.0);
+    }
+
+    #[test]
+    fn sse_event_block_parsing() {
+        let (e, d) = parse_event(b"event: chunk\ndata: {\"tokens\":[1,2]}");
+        assert_eq!(e, "chunk");
+        assert_eq!(d, "{\"tokens\":[1,2]}");
+        let (e, d) = parse_event(b"event: done\ndata: {}");
+        assert_eq!(e, "done");
+        assert_eq!(d, "{}");
+    }
+
+    #[test]
+    fn request_for_cycles_prompts_and_carries_knobs() {
+        let cfg = LoadConfig { gen_len: 7, seed: 9, ..Default::default() };
+        let a = request_for(0, &cfg);
+        let b = request_for(PROMPTS.len(), &cfg);
+        assert_eq!(a.prompt, b.prompt);
+        assert_eq!(a.gen_len, 7);
+        assert_eq!(a.seed, 9);
+        assert_ne!(request_for(1, &cfg).prompt, a.prompt);
+    }
+
+    #[test]
+    fn bench_json_line_is_parseable() {
+        let r = LoadReport {
+            mode: "closed users=4".into(),
+            requests: 8,
+            completed: 8,
+            rejected: 0,
+            cancelled: 0,
+            failed: 0,
+            tokens: 256,
+            wall_s: 1.5,
+            tokens_per_s: 170.6,
+            goodput_rps: 5.33,
+            ttft_ms: Percentiles { p50: 10.0, p95: 20.0, p99: 30.0 },
+            total_ms: Percentiles { p50: 100.0, p95: 200.0, p99: 300.0 },
+        };
+        let line = r.bench_json();
+        let json_part = line.strip_prefix("BENCH_JSON ").unwrap();
+        let v = crate::util::json::parse(json_part).unwrap();
+        assert_eq!(v.get("group").unwrap().as_str(), Some("net_loadgen"));
+        assert_eq!(v.get("completed").unwrap().as_usize(), Some(8));
+        assert!(v.get("tokens_per_sec").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,274 @@
+//! Serving-front-end metrics: per-request latency histograms (TTFT,
+//! inter-token, total) and the Prometheus text exposition for
+//! `GET /metrics`, combining the net layer's own observations with the
+//! coordinator's [`MetricsSnapshot`] counters.
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::MetricsSnapshot;
+
+/// Histogram bucket upper bounds, seconds.  Log-spaced from 0.5 ms to 30 s
+/// — wide enough to cover TTFT on a warm batch and multi-second total
+/// latencies under load; the implicit `+Inf` bucket catches the rest.
+pub const LATENCY_BUCKETS_S: &[f64] = &[
+    0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0,
+];
+
+/// Lock-free fixed-bucket latency histogram (Prometheus semantics: the
+/// rendered `_bucket` series are cumulative, `_sum`/`_count` included).
+pub struct LatencyHistogram {
+    /// Per-bucket (non-cumulative) counts; last entry is the `+Inf` bucket.
+    buckets: Vec<AtomicU64>,
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..=LATENCY_BUCKETS_S.len()).map(|_| AtomicU64::new(0)).collect(),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation, in seconds.
+    pub fn observe(&self, seconds: f64) {
+        let s = if seconds.is_finite() && seconds > 0.0 { seconds } else { 0.0 };
+        let idx = LATENCY_BUCKETS_S
+            .iter()
+            .position(|&le| s <= le)
+            .unwrap_or(LATENCY_BUCKETS_S.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add((s * 1e6) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observations, seconds.
+    pub fn sum_s(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Append the Prometheus exposition for this histogram.
+    pub fn render(&self, name: &str, help: &str, out: &mut String) {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let mut cumulative = 0u64;
+        for (i, &le) in LATENCY_BUCKETS_S.iter().enumerate() {
+            cumulative += self.buckets[i].load(Ordering::Relaxed);
+            let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cumulative}");
+        }
+        cumulative += self.buckets[LATENCY_BUCKETS_S.len()].load(Ordering::Relaxed);
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cumulative}");
+        let _ = writeln!(out, "{name}_sum {}", self.sum_s());
+        let _ = writeln!(out, "{name}_count {}", self.count());
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The front end's own metric sink, alongside the coordinator's.
+pub struct NetMetrics {
+    /// Time to first streamed token chunk, per request.
+    pub ttft: LatencyHistogram,
+    /// Per-token gap between streamed chunks (chunk gap divided by the
+    /// tokens it carried), after the first chunk.
+    pub inter_token: LatencyHistogram,
+    /// Total request latency (submit to terminal event), per request.
+    pub total: LatencyHistogram,
+    /// HTTP requests parsed off sockets (any route, any outcome).
+    pub http_requests: AtomicU64,
+    /// Requests answered 429 by admission control.
+    pub http_throttled: AtomicU64,
+    /// Connections accepted.
+    pub connections: AtomicU64,
+}
+
+impl NetMetrics {
+    pub fn new() -> Self {
+        Self {
+            ttft: LatencyHistogram::new(),
+            inter_token: LatencyHistogram::new(),
+            total: LatencyHistogram::new(),
+            http_requests: AtomicU64::new(0),
+            http_throttled: AtomicU64::new(0),
+            connections: AtomicU64::new(0),
+        }
+    }
+
+    /// The full `/metrics` page: front-end histograms + HTTP counters +
+    /// the coordinator's serving counters and traffic accounting.
+    pub fn render_prometheus(&self, snap: &MetricsSnapshot, queue_depth: usize) -> String {
+        let mut out = String::with_capacity(4096);
+        let mut counter = |name: &str, help: &str, v: f64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(
+                out,
+                "# TYPE {name} {}",
+                if name.ends_with("_total") { "counter" } else { "gauge" }
+            );
+            let _ = writeln!(out, "{name} {v}");
+        };
+        counter(
+            "speq_requests_submitted_total",
+            "Generation requests accepted by submit().",
+            snap.submitted as f64,
+        );
+        counter(
+            "speq_requests_completed_total",
+            "Generations that ran to completion.",
+            snap.completed as f64,
+        );
+        counter(
+            "speq_requests_rejected_total",
+            "Submissions rejected by queue backpressure.",
+            snap.rejected as f64,
+        );
+        counter(
+            "speq_requests_failed_total",
+            "Generations that errored (admission or engine step).",
+            snap.failed as f64,
+        );
+        counter(
+            "speq_requests_cancelled_total",
+            "Requests retired between steps (deadline or client cancel).",
+            snap.cancelled as f64,
+        );
+        counter(
+            "speq_tokens_generated_total",
+            "Tokens generated across all completed requests.",
+            snap.tokens as f64,
+        );
+        counter(
+            "speq_draft_steps_total",
+            "Quantized draft decode steps.",
+            snap.draft_steps as f64,
+        );
+        counter(
+            "speq_verify_passes_total",
+            "Full-precision verification passes.",
+            snap.verify_passes as f64,
+        );
+        counter(
+            "speq_http_requests_total",
+            "HTTP requests parsed by the front end.",
+            self.http_requests.load(Ordering::Relaxed) as f64,
+        );
+        counter(
+            "speq_http_throttled_total",
+            "HTTP requests answered 429 by admission control.",
+            self.http_throttled.load(Ordering::Relaxed) as f64,
+        );
+        counter(
+            "speq_http_connections_total",
+            "TCP connections accepted.",
+            self.connections.load(Ordering::Relaxed) as f64,
+        );
+        counter("speq_queue_depth", "Requests waiting in the admission queue.", queue_depth as f64);
+        counter(
+            "speq_batch_occupancy_mean",
+            "Mean sequences per scheduler engine step.",
+            snap.batch_occupancy_mean,
+        );
+        counter(
+            "speq_tokens_per_second",
+            "Generated tokens per wall-clock second since start.",
+            snap.tokens_per_s,
+        );
+        counter(
+            "speq_bytes_per_token_draft",
+            "Draft-pass weight bytes streamed per decoded token.",
+            snap.bytes_per_token_draft,
+        );
+        counter(
+            "speq_bytes_per_token_full",
+            "Full-pass weight bytes streamed per decoded token.",
+            snap.bytes_per_token_full,
+        );
+        counter(
+            "speq_draft_traffic_ratio",
+            "Measured quarter-to-all ratio (draft/full bytes per token).",
+            snap.draft_traffic_ratio,
+        );
+        self.ttft.render(
+            "speq_ttft_seconds",
+            "Time from HTTP submit to the first streamed token chunk.",
+            &mut out,
+        );
+        self.inter_token.render(
+            "speq_inter_token_seconds",
+            "Per-token gap between streamed chunks after the first.",
+            &mut out,
+        );
+        self.total.render(
+            "speq_request_duration_seconds",
+            "Total request latency, submit to terminal event.",
+            &mut out,
+        );
+        out
+    }
+}
+
+impl Default for NetMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metrics;
+
+    #[test]
+    fn observations_land_in_the_right_buckets() {
+        let h = LatencyHistogram::new();
+        h.observe(0.0004); // le 0.0005
+        h.observe(0.003); // le 0.005
+        h.observe(120.0); // +Inf
+        assert_eq!(h.count(), 3);
+        let mut out = String::new();
+        h.render("x_seconds", "help", &mut out);
+        assert!(out.contains("x_seconds_bucket{le=\"0.0005\"} 1"));
+        // Cumulative: 0.005 bucket includes the 0.0005 one.
+        assert!(out.contains("x_seconds_bucket{le=\"0.005\"} 2"));
+        assert!(out.contains("x_seconds_bucket{le=\"+Inf\"} 3"));
+        assert!(out.contains("x_seconds_count 3"));
+    }
+
+    #[test]
+    fn negative_and_nan_observations_are_clamped() {
+        let h = LatencyHistogram::new();
+        h.observe(-1.0);
+        h.observe(f64::NAN);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum_s(), 0.0);
+    }
+
+    #[test]
+    fn exposition_includes_coordinator_counters_and_histograms() {
+        let m = Metrics::new();
+        m.record_completion(10, 4, 2, 0.05, 0.04);
+        let net = NetMetrics::new();
+        net.ttft.observe(0.012);
+        net.total.observe(0.05);
+        let page = net.render_prometheus(&m.snapshot(), 3);
+        assert!(page.contains("speq_requests_completed_total 1"));
+        assert!(page.contains("speq_tokens_generated_total 10"));
+        assert!(page.contains("speq_queue_depth 3"));
+        assert!(page.contains("# TYPE speq_ttft_seconds histogram"));
+        assert!(page.contains("speq_ttft_seconds_count 1"));
+        assert!(page.contains("speq_request_duration_seconds_count 1"));
+        assert!(page.contains("# TYPE speq_requests_completed_total counter"));
+        assert!(page.contains("# TYPE speq_queue_depth gauge"));
+    }
+}

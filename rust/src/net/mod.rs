@@ -1,0 +1,44 @@
+//! `speq::net` — the std-only HTTP/1.1 serving front end.
+//!
+//! Turns the in-process [`coordinator`] into a network service, with no
+//! dependencies beyond `std::net` (consistent with the vendored-offline
+//! workspace):
+//!
+//! * [`http`] — HTTP/1.1 request parsing (Content-Length framing, header
+//!   and body size limits, keep-alive), response writing, and chunked
+//!   transfer encoding for streaming.
+//! * [`api`] — the JSON request/response schema shared by both generation
+//!   routes and the SSE event assembly; byte-level tokens travel through
+//!   the streaming-safe escaper (`util::json::escape_bytes`), so chunks
+//!   may split multi-byte UTF-8 sequences without corrupting the stream.
+//! * [`server`] — [`NetServer`]: accept loop + connection threads,
+//!   routing (`POST /v1/generate`, `POST /v1/stream` (SSE),
+//!   `GET /healthz`, `GET /metrics`), admission control (bounded queue →
+//!   `429 + Retry-After`), per-request deadlines and client-disconnect
+//!   cancellation propagated into the scheduler, and graceful shutdown
+//!   (stop accepting → drain in-flight sequences → join connections).
+//! * [`metrics`] — per-request latency histograms (TTFT, inter-token,
+//!   total) and the Prometheus text exposition combining them with the
+//!   coordinator's counters.
+//! * [`loadgen`] — a closed-loop / open-loop (Poisson) load-generator
+//!   client driving the server over real sockets, reporting tokens/sec,
+//!   goodput, and p50/p95/p99 TTFT + total latency with `BENCH_JSON`
+//!   output (the `speq loadgen` CLI subcommand).
+//!
+//! Determinism contract: a request over HTTP produces the exact token
+//! bytes of the equivalent offline `Engine::generate_spec` call — the
+//! front end adds transport, never touches generation (asserted by
+//! `rust/tests/integration_net.rs`).
+//!
+//! [`coordinator`]: crate::coordinator
+
+pub mod api;
+pub mod http;
+pub mod loadgen;
+pub mod metrics;
+pub mod server;
+
+pub use api::GenerateRequest;
+pub use loadgen::{LoadConfig, LoadMode, LoadReport};
+pub use metrics::{LatencyHistogram, NetMetrics};
+pub use server::{NetConfig, NetServer};

@@ -1,0 +1,620 @@
+//! The HTTP serving front end: accept loop, routing, admission control,
+//! SSE streaming, and graceful shutdown over the continuous-batching
+//! [`coordinator::Server`].
+//!
+//! Threading model (std-only, mirrors the coordinator's):
+//!
+//! ```text
+//!   TcpListener ──accept──► connection threads (keep-alive loop)
+//!        │ (nonblocking poll; shutdown flag)      │
+//!        │             parse HTTP/1.1 request ────┤
+//!        │                                        ▼
+//!        │           admission: Server::try_submit ──Full──► 429 + Retry-After
+//!        │                                        │
+//!        │              ResponseStream events ◄───┘ (scheduler threads)
+//!        │          Chunk* ──► SSE `chunk` events (chunked transfer)
+//!        │          Done/Cancelled ──► `done` / `cancelled` / `error`
+//! ```
+//!
+//! Per-request deadlines (`deadline_ms`, or the server-wide default) ride
+//! into the scheduler through [`SubmitParams::deadline`]; a client that
+//! disconnects mid-stream trips the request's [`CancelToken`], and either
+//! way the sequence frees its batch slot between engine steps.  Graceful
+//! shutdown stops accepting, drains in-flight sequences via
+//! [`Server::drain`], then joins connection threads.
+//!
+//! [`coordinator::Server`]: crate::coordinator::Server
+//! [`SubmitParams::deadline`]: crate::coordinator::SubmitParams
+//! [`CancelToken`]: crate::coordinator::CancelToken
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::api::{self, GenerateRequest};
+use super::http::{self, HttpRequest};
+use super::metrics::NetMetrics;
+use crate::coordinator::{
+    CancelKind, MetricsSnapshot, QueueError, ResponseEvent, ResponseStream, Server, ServerConfig,
+};
+
+/// Front-end configuration on top of the coordinator's [`ServerConfig`].
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Bind address, e.g. `127.0.0.1:8080` (`:0` picks an ephemeral port).
+    pub addr: String,
+    /// The continuous-batching coordinator under the front end.
+    pub server: ServerConfig,
+    /// Request body cap; larger declared bodies are answered 413.
+    pub max_body_bytes: usize,
+    /// Server-wide default deadline applied when a request carries no
+    /// `deadline_ms` (`None` = requests may run to completion).
+    pub default_deadline: Option<Duration>,
+    /// `Retry-After` seconds advertised on 429 responses.
+    pub retry_after_s: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            server: ServerConfig::default(),
+            max_body_bytes: 256 * 1024,
+            default_deadline: None,
+            retry_after_s: 1,
+        }
+    }
+}
+
+/// State shared by the accept loop and every connection thread.
+struct Shared {
+    server: Server,
+    net_metrics: NetMetrics,
+    shutdown: AtomicBool,
+    conns: Mutex<Vec<JoinHandle<()>>>,
+    max_body_bytes: usize,
+    default_deadline: Option<Duration>,
+    retry_after_s: u64,
+}
+
+/// A running HTTP serving instance.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    addr: SocketAddr,
+    closed: bool,
+}
+
+impl NetServer {
+    /// Start the coordinator, bind the listener, and begin accepting.
+    pub fn bind(cfg: NetConfig) -> Result<Self> {
+        let server = Server::start(cfg.server)?;
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("bind {}", cfg.addr))?;
+        let addr = listener.local_addr().context("local_addr")?;
+        // Nonblocking accept so the loop can poll the shutdown flag.
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let shared = Arc::new(Shared {
+            server,
+            net_metrics: NetMetrics::new(),
+            shutdown: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+            max_body_bytes: cfg.max_body_bytes,
+            default_deadline: cfg.default_deadline,
+            retry_after_s: cfg.retry_after_s,
+        });
+        let sh = shared.clone();
+        let accept = std::thread::spawn(move || accept_loop(listener, sh));
+        Ok(Self { shared, accept: Some(accept), addr, closed: false })
+    }
+
+    /// The bound address (resolves `:0` to the actual ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The underlying coordinator (metrics, queue depth) — for tests and
+    /// the CLI's shutdown report.
+    pub fn coordinator(&self) -> &Server {
+        &self.shared.server
+    }
+
+    /// Point-in-time coordinator metrics.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.shared.server.metrics().snapshot()
+    }
+
+    /// Graceful shutdown: stop accepting connections, drain in-flight
+    /// sequences (bounded by `drain_timeout`, see [`Server::drain`]), then
+    /// join connection threads.  Returns whether the drain completed
+    /// within the timeout; either way every accepted request still reaches
+    /// a terminal event before the method returns (generation lengths are
+    /// bounded, so this always terminates).  Idempotent.
+    pub fn shutdown(&mut self, drain_timeout: Duration) -> bool {
+        if self.closed {
+            return true;
+        }
+        self.closed = true;
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let drained = self.shared.server.drain(drain_timeout);
+        let conns: Vec<JoinHandle<()>> =
+            self.shared.conns.lock().unwrap().drain(..).collect();
+        for h in conns {
+            let _ = h.join();
+        }
+        drained
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown(Duration::from_secs(30));
+    }
+}
+
+fn accept_loop(listener: TcpListener, sh: Arc<Shared>) {
+    loop {
+        if sh.shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                sh.net_metrics.connections.fetch_add(1, Ordering::Relaxed);
+                let conn_sh = sh.clone();
+                let handle = std::thread::spawn(move || handle_connection(stream, conn_sh));
+                let mut conns = sh.conns.lock().unwrap();
+                conns.push(handle);
+                // Opportunistically reap finished connection threads so a
+                // long-lived server does not accumulate handles.
+                if conns.len() >= 64 {
+                    let (done, live): (Vec<_>, Vec<_>) =
+                        conns.drain(..).partition(|h| h.is_finished());
+                    *conns = live;
+                    drop(conns);
+                    for h in done {
+                        let _ = h.join();
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Keep-alive loop: parse requests off one connection until it closes,
+/// errors, opts out of keep-alive, or the server shuts down.
+fn handle_connection(mut stream: TcpStream, sh: Arc<Shared>) {
+    // BSD-derived platforms let accepted sockets inherit the listener's
+    // O_NONBLOCK; force blocking so the read timeout below governs.
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_nodelay(true);
+    // Short read timeout: read_request polls the shutdown flag on expiry,
+    // which is how idle keep-alive connections notice a graceful shutdown.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    // Bounded writes: a client that stops reading cannot park this thread
+    // in write_all forever (which would wedge shutdown's join).
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    loop {
+        let req = match http::read_request(&mut stream, sh.max_body_bytes, || {
+            sh.shutdown.load(Ordering::Relaxed)
+        }) {
+            Ok(Some(r)) => r,
+            Ok(None) => return,
+            Err(e) => {
+                if let Some(status) = e.status() {
+                    let _ = http::write_response(
+                        &mut stream,
+                        status,
+                        "application/json",
+                        api::error_data(&e.to_string()).as_bytes(),
+                        false,
+                        &[],
+                    );
+                }
+                return;
+            }
+        };
+        sh.net_metrics.http_requests.fetch_add(1, Ordering::Relaxed);
+        let keep_alive = req.keep_alive && !sh.shutdown.load(Ordering::Relaxed);
+        if route(&mut stream, &req, keep_alive, &sh).is_err() {
+            return; // socket gone; any in-flight request was cancelled
+        }
+        // A route may have shortened the read timeout for disconnect
+        // probing; restore the keep-alive polling interval.
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+        if !keep_alive {
+            return;
+        }
+    }
+}
+
+fn route(
+    stream: &mut TcpStream,
+    req: &HttpRequest,
+    keep_alive: bool,
+    sh: &Shared,
+) -> std::io::Result<()> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let body = format!(
+                "{{\"status\":\"ok\",\"queue_depth\":{},\"pending\":{}}}",
+                sh.server.queue_depth(),
+                sh.server.pending_requests()
+            );
+            http::write_response(
+                stream,
+                200,
+                "application/json",
+                body.as_bytes(),
+                keep_alive,
+                &[],
+            )
+        }
+        ("GET", "/metrics") => {
+            let page = sh
+                .net_metrics
+                .render_prometheus(&sh.server.metrics().snapshot(), sh.server.queue_depth());
+            http::write_response(
+                stream,
+                200,
+                "text/plain; version=0.0.4",
+                page.as_bytes(),
+                keep_alive,
+                &[],
+            )
+        }
+        ("POST", "/v1/generate") => handle_generate(stream, req, keep_alive, sh),
+        ("POST", "/v1/stream") => handle_stream(stream, req, keep_alive, sh),
+        (_, "/healthz") | (_, "/metrics") | (_, "/v1/generate") | (_, "/v1/stream") => {
+            http::write_response(
+                stream,
+                405,
+                "application/json",
+                api::error_data("method not allowed for this route").as_bytes(),
+                keep_alive,
+                &[],
+            )
+        }
+        (_, path) => http::write_response(
+            stream,
+            404,
+            "application/json",
+            api::error_data(&format!("no such route {path}")).as_bytes(),
+            keep_alive,
+            &[],
+        ),
+    }
+}
+
+/// Parse the body and run admission control; on rejection the HTTP error
+/// has already been written and `Ok(None)` is returned.
+fn admit(
+    stream: &mut TcpStream,
+    req: &HttpRequest,
+    keep_alive: bool,
+    sh: &Shared,
+) -> std::io::Result<Option<(u64, ResponseStream)>> {
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => {
+            http::write_response(
+                stream,
+                400,
+                "application/json",
+                api::error_data("body is not valid UTF-8").as_bytes(),
+                keep_alive,
+                &[],
+            )?;
+            return Ok(None);
+        }
+    };
+    let greq = match GenerateRequest::from_json(text) {
+        Ok(g) => g,
+        Err(msg) => {
+            http::write_response(
+                stream,
+                400,
+                "application/json",
+                api::error_data(&msg).as_bytes(),
+                keep_alive,
+                &[],
+            )?;
+            return Ok(None);
+        }
+    };
+    match sh.server.try_submit(&greq.prompt, greq.submit_params(sh.default_deadline)) {
+        Ok(pair) => Ok(Some(pair)),
+        Err(QueueError::Full) => {
+            // Backpressure: the bounded admission queue is at capacity.
+            sh.net_metrics.http_throttled.fetch_add(1, Ordering::Relaxed);
+            let retry = sh.retry_after_s.to_string();
+            http::write_response(
+                stream,
+                429,
+                "application/json",
+                api::error_data("queue full; retry later").as_bytes(),
+                keep_alive,
+                &[("retry-after", retry.as_str())],
+            )?;
+            Ok(None)
+        }
+        Err(QueueError::Closed) => {
+            http::write_response(
+                stream,
+                503,
+                "application/json",
+                api::error_data("server is shutting down").as_bytes(),
+                false,
+                &[],
+            )?;
+            Ok(None)
+        }
+    }
+}
+
+/// Latency bookkeeping shared by both generation routes.
+struct LatencyTrack {
+    t0: Instant,
+    last: Instant,
+    ttft: Option<Duration>,
+}
+
+impl LatencyTrack {
+    fn new() -> Self {
+        let now = Instant::now();
+        Self { t0: now, last: now, ttft: None }
+    }
+
+    /// Record a chunk of `n` tokens against the TTFT / inter-token sinks.
+    fn on_chunk(&mut self, n: usize, m: &NetMetrics) {
+        let now = Instant::now();
+        if self.ttft.is_none() {
+            let d = now - self.t0;
+            self.ttft = Some(d);
+            m.ttft.observe(d.as_secs_f64());
+        } else if n > 0 {
+            let per_token = (now - self.last).as_secs_f64() / n as f64;
+            for _ in 0..n {
+                m.inter_token.observe(per_token);
+            }
+        }
+        self.last = now;
+    }
+
+    fn finish(&self, m: &NetMetrics) -> Option<f64> {
+        m.total.observe(self.t0.elapsed().as_secs_f64());
+        self.ttft.map(|d| d.as_secs_f64() * 1e3)
+    }
+}
+
+/// Probe an idle socket for client disconnect between response events.
+/// The client owes no bytes until the response, so `Ok(0)` means it hung
+/// up, and early data is unreplayable pipelining — both report
+/// `Ok(false)` ("treat as gone", the client retries on a fresh
+/// connection).  `Ok(true)` = still connected.  Blocks up to the socket's
+/// read timeout (the routes set ~10ms while waiting).
+fn client_still_there(stream: &mut TcpStream) -> std::io::Result<bool> {
+    use std::io::Read as _;
+    let mut probe = [0u8; 1];
+    match stream.read(&mut probe) {
+        Ok(_) => Ok(false),
+        Err(e)
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock
+                    | std::io::ErrorKind::TimedOut
+                    | std::io::ErrorKind::Interrupted
+            ) =>
+        {
+            Ok(true)
+        }
+        Err(e) => Err(e),
+    }
+}
+
+/// `POST /v1/generate`: block until the terminal event, answer with one
+/// JSON body (TTFT/inter-token are still observed from the chunk stream).
+/// Between waits the socket is probed so an aborted client cancels the
+/// sequence (freeing its batch slot) instead of running to completion.
+fn handle_generate(
+    stream: &mut TcpStream,
+    req: &HttpRequest,
+    keep_alive: bool,
+    sh: &Shared,
+) -> std::io::Result<()> {
+    let (id, resp) = match admit(stream, req, keep_alive, sh)? {
+        Some(pair) => pair,
+        None => return Ok(()),
+    };
+    let cancel = resp.cancel_token();
+    // Short probe timeout while waiting so the disconnect check adds at
+    // most ~10ms to chunk observation (the connection loop restores the
+    // keep-alive timeout after this request).
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(10)));
+    let mut lat = LatencyTrack::new();
+    loop {
+        match resp.recv_timeout(Duration::from_millis(100)) {
+            Ok(None) => match client_still_there(stream) {
+                Ok(true) => {}
+                Ok(false) => {
+                    cancel.cancel();
+                    return Ok(());
+                }
+                Err(e) => {
+                    cancel.cancel();
+                    return Err(e);
+                }
+            },
+            Ok(Some(r)) => match r.event {
+                ResponseEvent::Chunk(c) => lat.on_chunk(c.len(), &sh.net_metrics),
+                ResponseEvent::Done(Ok(body)) => {
+                    let ttft_ms = lat.finish(&sh.net_metrics);
+                    let data =
+                        api::done_data(id, &body, ttft_ms, sh.server.metrics().traffic_fields());
+                    return http::write_response(
+                        stream,
+                        200,
+                        "application/json",
+                        data.as_bytes(),
+                        keep_alive,
+                        &[],
+                    );
+                }
+                ResponseEvent::Done(Err(e)) => {
+                    lat.finish(&sh.net_metrics);
+                    return http::write_response(
+                        stream,
+                        500,
+                        "application/json",
+                        api::error_data(&format!("{e:#}")).as_bytes(),
+                        keep_alive,
+                        &[],
+                    );
+                }
+                ResponseEvent::Cancelled(kind) => {
+                    lat.finish(&sh.net_metrics);
+                    let status = match kind {
+                        CancelKind::Deadline => 504,
+                        CancelKind::Cancelled => 503,
+                    };
+                    return http::write_response(
+                        stream,
+                        status,
+                        "application/json",
+                        api::error_data(&kind.to_string()).as_bytes(),
+                        keep_alive,
+                        &[],
+                    );
+                }
+            },
+            Err(_) => {
+                return http::write_response(
+                    stream,
+                    500,
+                    "application/json",
+                    api::error_data("server dropped the request").as_bytes(),
+                    false,
+                    &[],
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_binds_ephemeral_localhost() {
+        let cfg = NetConfig::default();
+        assert_eq!(cfg.addr, "127.0.0.1:0");
+        assert!(cfg.max_body_bytes >= 64 * 1024);
+        assert_eq!(cfg.retry_after_s, 1);
+        assert!(cfg.default_deadline.is_none());
+    }
+}
+
+/// `POST /v1/stream`: Server-Sent Events over chunked transfer — one
+/// `chunk` event per [`ResponseEvent::Chunk`] as the scheduler emits them,
+/// then a terminal `done` (with accept-rate/traffic stats), `cancelled`,
+/// or `error` event.  A client disconnect trips the request's cancel
+/// token so the sequence frees its batch slot between engine steps.
+fn handle_stream(
+    stream: &mut TcpStream,
+    req: &HttpRequest,
+    keep_alive: bool,
+    sh: &Shared,
+) -> std::io::Result<()> {
+    let (id, resp) = match admit(stream, req, keep_alive, sh)? {
+        Some(pair) => pair,
+        None => return Ok(()),
+    };
+    let cancel = resp.cancel_token();
+    if let Err(e) = http::write_chunked_head(stream, 200, "text/event-stream", keep_alive) {
+        // Client vanished between admission and the response head: free
+        // the batch slot instead of generating into a dead socket.
+        cancel.cancel();
+        return Err(e);
+    }
+    // Short probe timeout while waiting for events (see handle_generate);
+    // the connection loop restores the keep-alive timeout afterwards.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(10)));
+    let mut lat = LatencyTrack::new();
+    loop {
+        let event = match resp.recv_timeout(Duration::from_millis(100)) {
+            Ok(None) => {
+                // Nothing streamed yet (queued, or a slow step): a client
+                // that already hung up must not occupy a batch slot.
+                match client_still_there(stream) {
+                    Ok(true) => continue,
+                    Ok(false) => {
+                        cancel.cancel();
+                        return Ok(());
+                    }
+                    Err(e) => {
+                        cancel.cancel();
+                        return Err(e);
+                    }
+                }
+            }
+            Ok(Some(r)) => r.event,
+            Err(_) => {
+                let _ = http::write_chunk(
+                    stream,
+                    &api::sse_event("error", &api::error_data("server dropped the request")),
+                );
+                return http::finish_chunked(stream);
+            }
+        };
+        match event {
+            ResponseEvent::Chunk(c) => {
+                lat.on_chunk(c.len(), &sh.net_metrics);
+                let ev = api::sse_event("chunk", &api::chunk_event_data(&c));
+                if let Err(e) = http::write_chunk(stream, &ev) {
+                    // Client went away mid-stream: ask the scheduler to
+                    // retire the sequence between steps.
+                    cancel.cancel();
+                    return Err(e);
+                }
+            }
+            ResponseEvent::Done(Ok(body)) => {
+                let ttft_ms = lat.finish(&sh.net_metrics);
+                let data =
+                    api::done_data(id, &body, ttft_ms, sh.server.metrics().traffic_fields());
+                http::write_chunk(stream, &api::sse_event("done", &data))?;
+                return http::finish_chunked(stream);
+            }
+            ResponseEvent::Done(Err(e)) => {
+                lat.finish(&sh.net_metrics);
+                http::write_chunk(
+                    stream,
+                    &api::sse_event("error", &api::error_data(&format!("{e:#}"))),
+                )?;
+                return http::finish_chunked(stream);
+            }
+            ResponseEvent::Cancelled(kind) => {
+                lat.finish(&sh.net_metrics);
+                let reason = match kind {
+                    CancelKind::Deadline => "deadline",
+                    CancelKind::Cancelled => "cancelled",
+                };
+                http::write_chunk(
+                    stream,
+                    &api::sse_event("cancelled", &format!("{{\"reason\":\"{reason}\"}}")),
+                )?;
+                return http::finish_chunked(stream);
+            }
+        }
+    }
+}

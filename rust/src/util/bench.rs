@@ -140,6 +140,19 @@ impl Bench {
     }
 }
 
+/// Nearest-rank percentile (`p` in `[0, 1]`); sorts `values` in place and
+/// returns `0.0` when empty.  The single definition shared by the serving
+/// metrics snapshot and the loadgen report, so every report agrees on the
+/// rank convention (`round((n-1)·p)`).
+pub fn percentile(values: &mut [f64], p: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((values.len() as f64 - 1.0) * p).round() as usize;
+    values[idx.min(values.len() - 1)]
+}
+
 /// Format nanoseconds with an adaptive unit.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1_000.0 {
@@ -168,5 +181,17 @@ mod tests {
         assert_eq!(fmt_ns(12.0), "12.0 ns");
         assert_eq!(fmt_ns(12_500.0), "12.50 µs");
         assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&mut v, 0.0), 1.0);
+        assert_eq!(percentile(&mut v, 1.0), 100.0);
+        assert!((percentile(&mut v, 0.5) - 51.0).abs() <= 1.0);
+        assert!((percentile(&mut v, 0.95) - 95.0).abs() <= 1.0);
+        assert_eq!(percentile(&mut [], 0.5), 0.0);
+        let mut unsorted = vec![3.0, 1.0, 2.0];
+        assert_eq!(percentile(&mut unsorted, 1.0), 3.0);
     }
 }

@@ -352,6 +352,54 @@ fn write_into(v: &Value, out: &mut String) {
     }
 }
 
+/// Streaming-safe escaper for byte-level token payloads: renders raw bytes
+/// as a quoted JSON string that is also safe to embed in a single SSE
+/// `data:` line.
+///
+/// The serving stack's tokens are *bytes*, and a streamed chunk can split a
+/// multi-byte UTF-8 sequence at any boundary — so the bytes cannot be
+/// interpreted as UTF-8 text.  Instead each byte maps to the codepoint of
+/// the same value (Latin-1 style): printable ASCII passes through verbatim,
+/// everything else (control chars, `"`/`\`, DEL, and all bytes ≥ 0x80)
+/// becomes a `\u00XX` escape.  Properties:
+///
+/// * lossless: [`bytes_from_escaped`] inverts it exactly for every byte
+///   value (asserted exhaustively in tests);
+/// * the output is valid JSON parseable by [`parse`];
+/// * the output contains no raw control characters, so it can never break
+///   SSE's line-based `data:` framing.
+pub fn escape_bytes(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len() + 2);
+    out.push('"');
+    for &b in bytes {
+        match b {
+            b'"' => out.push_str("\\\""),
+            b'\\' => out.push_str("\\\\"),
+            0x20..=0x7e => out.push(b as char),
+            _ => {
+                let _ = write!(out, "\\u{:04x}", b as u32);
+            }
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Invert [`escape_bytes`]: map a parsed JSON string back to raw bytes.
+/// Returns `None` if the string contains a codepoint above U+00FF (i.e. it
+/// was not produced by the byte escaper).
+pub fn bytes_from_escaped(s: &str) -> Option<Vec<u8>> {
+    let mut out = Vec::with_capacity(s.len());
+    for c in s.chars() {
+        let cp = c as u32;
+        if cp > 0xff {
+            return None;
+        }
+        out.push(cp as u8);
+    }
+    Some(out)
+}
+
 fn write_str(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
@@ -413,6 +461,48 @@ mod tests {
         let v = parse(src).unwrap();
         let out = write(&v);
         assert_eq!(parse(&out).unwrap(), v);
+    }
+
+    #[test]
+    fn escape_bytes_roundtrips_every_single_byte_token() {
+        // Property over ALL single-byte tokens: escape → parse (the strict
+        // JSON parser) → invert must reproduce the byte, and the escaped
+        // form must be SSE-line-safe (no raw control chars).
+        for b in 0..=255u8 {
+            let escaped = escape_bytes(&[b]);
+            assert!(
+                escaped.chars().all(|c| (' '..='~').contains(&c)),
+                "byte {b:#04x} escaped to a non-printable form: {escaped:?}"
+            );
+            let parsed = parse(&escaped).unwrap_or_else(|e| panic!("byte {b:#04x}: {e}"));
+            let s = parsed.as_str().expect("escaped byte parses to a string");
+            assert_eq!(
+                bytes_from_escaped(s).as_deref(),
+                Some(&[b][..]),
+                "byte {b:#04x} did not roundtrip (escaped: {escaped:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn escape_bytes_roundtrips_random_byte_streams() {
+        use crate::util::prop;
+        prop::check(64, "escape_bytes_roundtrip", |rng| {
+            let n = rng.gen_range(64) + 1;
+            let bytes: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+            let escaped = escape_bytes(&bytes);
+            let parsed = parse(&escaped).expect("valid JSON");
+            let back = bytes_from_escaped(parsed.as_str().unwrap()).expect("latin-1 range");
+            assert_eq!(back, bytes);
+            // SSE framing safety: a data line may not contain raw CR/LF.
+            assert!(!escaped.contains('\n') && !escaped.contains('\r'));
+        });
+    }
+
+    #[test]
+    fn bytes_from_escaped_rejects_wide_codepoints() {
+        assert_eq!(bytes_from_escaped("ok"), Some(b"ok".to_vec()));
+        assert_eq!(bytes_from_escaped("😀"), None);
     }
 
     #[test]

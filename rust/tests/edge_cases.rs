@@ -185,6 +185,8 @@ fn queue_stress_many_producers() {
                     mode: speq::coordinator::Mode::Speculative,
                     priority: if i % 2 == 0 { Priority::Interactive } else { Priority::Batch },
                     session: None,
+                    deadline: None,
+                    cancel: speq::coordinator::CancelToken::new(),
                     submitted: std::time::Instant::now(),
                     respond_to: tx,
                 };
@@ -222,6 +224,8 @@ fn req_clone_hack(r: &speq::coordinator::Request) -> speq::coordinator::Request 
         mode: r.mode,
         priority: r.priority,
         session: r.session,
+        deadline: r.deadline,
+        cancel: r.cancel.clone(),
         submitted: r.submitted,
         respond_to: tx,
     }

@@ -108,6 +108,7 @@ fn responses_stream_incremental_chunks() {
                 streamed.extend(c);
             }
             ResponseEvent::Done(result) => break result.expect("generation ok"),
+            ResponseEvent::Cancelled(kind) => panic!("unexpected cancellation: {kind}"),
         }
     };
     assert!(chunks >= 2, "expected incremental chunks, got {chunks}");
@@ -209,6 +210,84 @@ fn sessions_carry_context_between_turns() {
         .unwrap();
     let out2 = s2.wait().unwrap();
     assert_eq!(out2.tokens.len(), 24);
+    server.shutdown();
+}
+
+#[test]
+fn deadline_expired_request_is_cancelled_between_steps() {
+    let server = server(1);
+    // A deadline far shorter than a 200-token generation: the scheduler
+    // must retire the sequence between engine steps, free its slot, emit
+    // the terminal Cancelled event, and count it.
+    let (_, stream) = server
+        .submit(
+            b"Q: ada has 3 apples and finds 4 more. how many apples now?\nA: ",
+            SubmitParams {
+                gen_len: 200,
+                deadline: Some(std::time::Instant::now() + std::time::Duration::from_millis(20)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let err = stream.wait().unwrap_err();
+    assert!(format!("{err}").contains("deadline"), "{err}");
+    // The slot is free again: a fresh request completes normally.
+    let body = server.generate(b"Q: 1 + 1 = ", 16).expect("generate after cancel");
+    assert_eq!(body.tokens.len(), 16);
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.cancelled, 1);
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.failed, 0);
+    server.shutdown();
+}
+
+#[test]
+fn client_cancel_token_retires_an_in_flight_request() {
+    let server = server(1);
+    let (_, stream) = server
+        .submit(
+            b"USER: hello, can we talk about music?\nBOT: ",
+            SubmitParams { gen_len: 200, ..Default::default() },
+        )
+        .unwrap();
+    let cancel = stream.cancel_token();
+    // Let it get admitted and produce at least one step, then cancel.
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    cancel.cancel();
+    let err = stream.wait().unwrap_err();
+    assert!(format!("{err}").contains("cancelled"), "{err}");
+    assert!(server.metrics().snapshot().cancelled >= 1);
+    // Scheduler is healthy afterwards.
+    let body = server.generate(b"Q: 2 + 2 = ", 8).expect("generate after cancel");
+    assert_eq!(body.tokens.len(), 8);
+    server.shutdown();
+}
+
+#[test]
+fn drain_completes_in_flight_work_and_rejects_new_submissions() {
+    let server = server(1);
+    let (_, stream) = server
+        .submit(
+            b"Q: dana has 6 pears and eats 1. how many pears left?\nA: ",
+            SubmitParams { gen_len: 48, ..Default::default() },
+        )
+        .unwrap();
+    assert!(
+        server.drain(std::time::Duration::from_secs(60)),
+        "drain must finish the in-flight request"
+    );
+    assert_eq!(server.pending_requests(), 0);
+    // Drained servers accept no new work ...
+    let err = server
+        .submit(b"Q: too late\nA: ", SubmitParams::default())
+        .unwrap_err();
+    assert!(format!("{err}").contains("closed"), "{err}");
+    // ... but the drained request completed in full.
+    let body = stream.wait().expect("in-flight request survives drain");
+    assert_eq!(body.tokens.len(), 48);
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.rejected, 1);
     server.shutdown();
 }
 

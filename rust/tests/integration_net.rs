@@ -1,0 +1,370 @@
+//! Integration: the HTTP/SSE serving front end over real TCP sockets —
+//! bit-identity of streamed tokens vs offline generation, malformed-request
+//! handling, admission-control backpressure (429), deadline cancellation,
+//! and graceful shutdown.  Everything runs on an ephemeral localhost port
+//! with the builtin native backend — no artifacts, no external deps.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use speq::coordinator::ServerConfig;
+use speq::net::loadgen::{self, stream_once, Terminal, PROMPTS};
+use speq::net::{GenerateRequest, LoadConfig, LoadMode, NetConfig, NetServer};
+use speq::runtime::{load_backend_with, ModelSource, NativeConfig};
+use speq::specdec::{Engine, SpecConfig};
+
+const MODEL: &str = "vicuna-7b-tiny";
+
+fn net_server(workers: usize, max_batch: usize, queue: usize) -> NetServer {
+    let cfg = NetConfig {
+        addr: "127.0.0.1:0".to_string(),
+        server: ServerConfig {
+            source: ModelSource::Builtin,
+            model: MODEL.into(),
+            workers,
+            queue_capacity: queue,
+            max_batch,
+            ..ServerConfig::default()
+        },
+        ..NetConfig::default()
+    };
+    NetServer::bind(cfg).expect("bind net server")
+}
+
+/// Offline reference: the same generation through `Engine::generate_spec`.
+fn offline_tokens(prompt: &[u8], gen_len: usize) -> Vec<u8> {
+    let backend =
+        load_backend_with(&ModelSource::Builtin, MODEL, &NativeConfig::default()).expect("backend");
+    let engine = Engine::new(backend.as_ref());
+    let cfg = SpecConfig { gen_len, ..Default::default() };
+    engine.generate_spec(prompt, &cfg).expect("offline generation").tokens
+}
+
+/// Send raw bytes, return `(status, full response text)`.
+fn raw_request(addr: std::net::SocketAddr, raw: &[u8]) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.write_all(raw).expect("send");
+    let mut out = Vec::new();
+    let _ = s.read_to_end(&mut out); // server closes (connection: close)
+    let text = String::from_utf8_lossy(&out).into_owned();
+    let status = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    (status, text)
+}
+
+fn post(path: &str, body: &str) -> Vec<u8> {
+    format!(
+        "POST {path} HTTP/1.1\r\nhost: t\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+#[test]
+fn streamed_tokens_bit_identical_to_offline_for_concurrent_clients() {
+    // ≥8 concurrent clients against one scheduler: continuous batching
+    // co-batches them, and every streamed byte sequence must still be
+    // bit-identical to the offline engine for the same prompt/seed.
+    let server = net_server(1, 8, 32);
+    let addr = server.addr().to_string();
+    let gen_len = 48;
+
+    let mut handles = Vec::new();
+    for i in 0..8 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let req = GenerateRequest {
+                prompt: PROMPTS[i % PROMPTS.len()].as_bytes().to_vec(),
+                gen_len,
+                ..GenerateRequest::default()
+            };
+            let out = stream_once(&addr, &req, Duration::from_secs(120)).expect("stream");
+            (i, out)
+        }));
+    }
+    for h in handles {
+        let (i, out) = h.join().expect("client thread");
+        assert_eq!(out.status, 200, "client {i}");
+        assert_eq!(out.terminal, Terminal::Done, "client {i}");
+        assert!(out.ttft_s.is_some(), "client {i} never saw a chunk event");
+        let expected = offline_tokens(PROMPTS[i % PROMPTS.len()].as_bytes(), gen_len);
+        assert_eq!(
+            out.tokens, expected,
+            "client {i}: streamed bytes differ from offline generation"
+        );
+        let done = out.done_data.expect("done event data");
+        assert!(done.contains("\"accept_rate\""), "done stats missing: {done}");
+        assert!(done.contains("\"draft_traffic_ratio\""), "traffic stats missing: {done}");
+    }
+    let snap = server.snapshot();
+    assert_eq!(snap.completed, 8);
+    assert_eq!(snap.failed, 0);
+}
+
+#[test]
+fn generate_route_returns_full_body_bit_identical_to_offline() {
+    let server = net_server(1, 4, 8);
+    let req = GenerateRequest {
+        prompt: PROMPTS[0].as_bytes().to_vec(),
+        gen_len: 24,
+        ..GenerateRequest::default()
+    };
+    let (status, text) = raw_request(server.addr(), &post("/v1/generate", &req.to_json()));
+    assert_eq!(status, 200, "{text}");
+    let body_start = text.find("\r\n\r\n").expect("header/body split") + 4;
+    let v = speq::util::json::parse(&text[body_start..]).expect("JSON body");
+    let tokens: Vec<u8> = v
+        .get("tokens")
+        .expect("tokens array")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|n| n.as_usize().unwrap() as u8)
+        .collect();
+    assert_eq!(tokens, offline_tokens(PROMPTS[0].as_bytes(), 24));
+    assert!(v.get("accept_rate").is_some());
+    assert!(v.get("ttft_ms").is_some(), "generate path must observe TTFT");
+    assert!(v.get("draft_traffic_ratio").is_some());
+}
+
+#[test]
+fn malformed_requests_get_4xx() {
+    let mut server = net_server(1, 2, 8);
+    let addr = server.addr();
+
+    // Bad JSON body.
+    let (status, _) = raw_request(addr, &post("/v1/generate", "{not json"));
+    assert_eq!(status, 400);
+    // Missing prompt.
+    let (status, _) = raw_request(addr, &post("/v1/generate", "{\"gen_len\":4}"));
+    assert_eq!(status, 400);
+    // Unknown route.
+    let (status, _) = raw_request(addr, &post("/v1/unknown", "{}"));
+    assert_eq!(status, 404);
+    // Known route, wrong method.
+    let (status, _) =
+        raw_request(addr, b"GET /v1/generate HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n");
+    assert_eq!(status, 405);
+    // Declared body above the configured cap.
+    let huge = NetConfig::default().max_body_bytes + 1;
+    let (status, _) = raw_request(
+        addr,
+        format!(
+            "POST /v1/generate HTTP/1.1\r\nhost: t\r\ncontent-length: {huge}\r\nconnection: close\r\n\r\n"
+        )
+        .as_bytes(),
+    );
+    assert_eq!(status, 413);
+    // Unsupported HTTP version.
+    let (status, _) = raw_request(addr, b"GET /healthz HTTP/3\r\n\r\n");
+    assert_eq!(status, 400);
+
+    // The server is still healthy afterwards.
+    let (status, text) =
+        raw_request(addr, b"GET /healthz HTTP/1.1\r\nconnection: close\r\n\r\n");
+    assert_eq!(status, 200);
+    assert!(text.contains("\"status\":\"ok\""));
+    assert!(server.shutdown(Duration::from_secs(30)));
+}
+
+#[test]
+fn queue_overflow_returns_429_with_retry_after() {
+    // One scheduler, batch of 1, queue of 1: a burst of 12 concurrent
+    // long generations must overflow admission and draw 429s.
+    let server = net_server(1, 1, 1);
+    let addr = server.addr().to_string();
+
+    let mut handles = Vec::new();
+    for i in 0..12 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let req = GenerateRequest {
+                prompt: PROMPTS[i % PROMPTS.len()].as_bytes().to_vec(),
+                gen_len: 96,
+                ..GenerateRequest::default()
+            };
+            stream_once(&addr, &req, Duration::from_secs(120)).expect("stream")
+        }));
+    }
+    let outcomes: Vec<_> = handles.into_iter().map(|h| h.join().expect("client")).collect();
+    let rejected: Vec<_> =
+        outcomes.iter().filter(|o| o.terminal == Terminal::Rejected).collect();
+    let completed = outcomes.iter().filter(|o| o.terminal == Terminal::Done).count();
+    assert!(
+        !rejected.is_empty(),
+        "expected admission-control 429s from a 12-request burst into a 1-deep queue"
+    );
+    assert!(completed >= 1, "some requests must still complete");
+    for r in &rejected {
+        assert_eq!(r.status, 429);
+        assert_eq!(r.retry_after_s, Some(1), "429 must carry Retry-After");
+    }
+    // No request may be silently dropped: every outcome is terminal.
+    assert_eq!(
+        outcomes.len(),
+        completed + rejected.len()
+            + outcomes.iter().filter(|o| o.terminal == Terminal::Cancelled).count(),
+        "unexpected error/drop outcomes: {outcomes:?}"
+    );
+
+    // The throttle shows up on /metrics.
+    let (status, page) =
+        raw_request(server.addr(), b"GET /metrics HTTP/1.1\r\nconnection: close\r\n\r\n");
+    assert_eq!(status, 200);
+    let throttled = metric_value(&page, "speq_http_throttled_total");
+    assert!(throttled >= 1.0, "throttle counter missing from:\n{page}");
+}
+
+#[test]
+fn deadline_expired_request_is_cancelled_and_frees_its_slot() {
+    let server = net_server(1, 2, 8);
+    let addr = server.addr().to_string();
+
+    // A long generation with a deadline far shorter than its runtime.
+    let req = GenerateRequest {
+        prompt: PROMPTS[0].as_bytes().to_vec(),
+        gen_len: 240,
+        deadline_ms: Some(30),
+        ..GenerateRequest::default()
+    };
+    let out = stream_once(&addr, &req, Duration::from_secs(120)).expect("stream");
+    assert_eq!(out.status, 200, "SSE starts before the deadline fires");
+    assert_eq!(
+        out.terminal,
+        Terminal::Cancelled,
+        "expected a terminal cancelled event, got {:?} ({:?})",
+        out.terminal,
+        out.error_body
+    );
+
+    // The cancelled sequence must have freed its batch slot: a normal
+    // request right after completes with bit-exact output.
+    let follow = GenerateRequest {
+        prompt: PROMPTS[1].as_bytes().to_vec(),
+        gen_len: 24,
+        ..GenerateRequest::default()
+    };
+    let out2 = stream_once(&addr, &follow, Duration::from_secs(120)).expect("stream");
+    assert_eq!(out2.terminal, Terminal::Done);
+    assert_eq!(out2.tokens, offline_tokens(PROMPTS[1].as_bytes(), 24));
+
+    let snap = server.snapshot();
+    assert!(snap.cancelled >= 1, "requests_cancelled not counted: {snap:?}");
+    let (_, page) =
+        raw_request(server.addr(), b"GET /metrics HTTP/1.1\r\nconnection: close\r\n\r\n");
+    assert!(
+        metric_value(&page, "speq_requests_cancelled_total") >= 1.0,
+        "cancellation missing from /metrics:\n{page}"
+    );
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_requests() {
+    let mut server = net_server(1, 4, 8);
+    let addr = server.addr().to_string();
+
+    let client = std::thread::spawn(move || {
+        let req = GenerateRequest {
+            prompt: PROMPTS[2].as_bytes().to_vec(),
+            gen_len: 64,
+            ..GenerateRequest::default()
+        };
+        stream_once(&addr, &req, Duration::from_secs(120)).expect("stream")
+    });
+    // Let the request reach the scheduler, then shut down underneath it.
+    std::thread::sleep(Duration::from_millis(50));
+    let drained = server.shutdown(Duration::from_secs(60));
+    let out = client.join().expect("client thread");
+    assert!(drained, "drain must complete within the timeout");
+    assert_eq!(
+        out.terminal,
+        Terminal::Done,
+        "in-flight request must finish during graceful shutdown ({:?})",
+        out.error_body
+    );
+    assert_eq!(out.tokens, offline_tokens(PROMPTS[2].as_bytes(), 64));
+    assert_eq!(server.snapshot().completed, 1);
+}
+
+#[test]
+fn metrics_expose_latency_histograms() {
+    let server = net_server(1, 4, 8);
+    let addr = server.addr().to_string();
+    let req = GenerateRequest {
+        prompt: PROMPTS[3].as_bytes().to_vec(),
+        gen_len: 32,
+        ..GenerateRequest::default()
+    };
+    let out = stream_once(&addr, &req, Duration::from_secs(120)).expect("stream");
+    assert_eq!(out.terminal, Terminal::Done);
+
+    let (status, page) =
+        raw_request(server.addr(), b"GET /metrics HTTP/1.1\r\nconnection: close\r\n\r\n");
+    assert_eq!(status, 200);
+    for series in ["speq_ttft_seconds", "speq_inter_token_seconds", "speq_request_duration_seconds"]
+    {
+        assert!(
+            page.contains(&format!("# TYPE {series} histogram")),
+            "{series} histogram missing from /metrics:\n{page}"
+        );
+        assert!(page.contains(&format!("{series}_bucket{{le=\"+Inf\"}}")));
+    }
+    assert!(metric_value(&page, "speq_ttft_seconds_count") >= 1.0);
+    assert!(
+        metric_value(&page, "speq_inter_token_seconds_count") >= 1.0,
+        "a 32-token stream must observe inter-token gaps"
+    );
+    assert!(metric_value(&page, "speq_requests_completed_total") >= 1.0);
+    assert!(metric_value(&page, "speq_tokens_generated_total") >= 32.0);
+}
+
+#[test]
+fn loadgen_closed_loop_smoke_over_real_sockets() {
+    let server = net_server(2, 4, 32);
+    let cfg = LoadConfig {
+        addr: server.addr().to_string(),
+        mode: LoadMode::Closed { users: 4 },
+        requests: 8,
+        gen_len: 24,
+        ..LoadConfig::default()
+    };
+    let report = loadgen::run(&cfg).expect("loadgen run");
+    assert_eq!(report.completed, 8, "all smoke requests must complete: {report:?}");
+    assert_eq!(report.failed, 0);
+    assert!(report.goodput_rps > 0.0);
+    assert!(report.tokens >= 8 * 24);
+    assert!(report.ttft_ms.p50 > 0.0);
+    assert!(report.total_ms.p99 >= report.total_ms.p50);
+    let line = report.bench_json();
+    assert!(line.starts_with("BENCH_JSON {"), "{line}");
+}
+
+#[test]
+fn loadgen_open_loop_poisson_arrivals_complete() {
+    let server = net_server(2, 4, 32);
+    let cfg = LoadConfig {
+        addr: server.addr().to_string(),
+        mode: LoadMode::Open { rate_rps: 40.0 },
+        requests: 6,
+        gen_len: 16,
+        ..LoadConfig::default()
+    };
+    let report = loadgen::run(&cfg).expect("loadgen run");
+    assert_eq!(report.completed + report.rejected, 6, "{report:?}");
+    assert!(report.completed >= 1);
+    assert_eq!(report.failed, 0);
+}
+
+/// Extract the value of an un-labelled metric line (`name value`).
+fn metric_value(page: &str, name: &str) -> f64 {
+    page.lines()
+        .find(|l| l.starts_with(name) && l.as_bytes().get(name.len()) == Some(&b' '))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(-1.0)
+}
