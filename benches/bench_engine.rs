@@ -7,7 +7,9 @@
 use std::collections::BTreeMap;
 
 use speq::model::SamplingParams;
-use speq::runtime::{load_backend, load_backend_with, Backend, ModelSource, NativeConfig, SeqSlot};
+use speq::runtime::{
+    load_backend, load_backend_with, Backend, ModelSource, NativeConfig, SeqSlot, SimdLevel,
+};
 use speq::specdec::{BatchEngine, Engine, SpecConfig};
 use speq::util::bench::{black_box, smoke_requested, Bench};
 
@@ -199,13 +201,47 @@ fn main() {
     let s = b.bench(format!("generate_spec_{gen}tok"), || {
         black_box(engine.generate_spec(prompt, &cfg).expect("spec").tokens.len());
     });
-    b.metric("spec_tokens_per_s", gen as f64 / (s.mean_ns * 1e-9), "tok/s (CPU)");
+    let spec_tps = gen as f64 / (s.mean_ns * 1e-9);
+    b.metric("spec_tokens_per_s", spec_tps, "tok/s (CPU)");
     let s = b.bench(format!("generate_ar_{gen}tok"), || {
         black_box(
             engine.generate_ar(prompt, gen, SamplingParams::greedy()).expect("ar").tokens.len(),
         );
     });
     b.metric("ar_tokens_per_s", gen as f64 / (s.mean_ns * 1e-9), "tok/s (CPU)");
+
+    // SIMD dispatch end-to-end: the same speculative generation with the
+    // kernels forced to the scalar tier, against the default (best
+    // detected) run above.  Token streams are bitwise identical across
+    // tiers (prop_simd.rs pins that), so this is purely the wall-clock
+    // win of the vector decode/axpy paths; no gate here — the kernel-level
+    // 1.5x decode bound lives in bench_kernels.
+    let best = SimdLevel::detect();
+    if best != SimdLevel::Scalar {
+        let scalar_backend = load_backend_with(
+            &source,
+            "vicuna-7b-tiny",
+            &NativeConfig::default().with_simd(SimdLevel::Scalar),
+        )
+        .expect("backend");
+        let scalar_engine = Engine::new(scalar_backend.as_ref());
+        let s = b.bench(format!("generate_spec_{gen}tok_scalar_simd"), || {
+            black_box(scalar_engine.generate_spec(prompt, &cfg).expect("spec").tokens.len());
+        });
+        let scalar_tps = gen as f64 / (s.mean_ns * 1e-9);
+        b.metric("spec_tokens_per_s_scalar_simd", scalar_tps, "tok/s (CPU)");
+        b.metric(
+            format!("simd_e2e_speedup_{}", best.name()),
+            spec_tps / scalar_tps,
+            "x vs scalar",
+        );
+        b.metrics_json(&[
+            ("simd_lanes", best.lanes() as f64),
+            ("spec_tokens_per_sec_best_simd", spec_tps),
+            ("spec_tokens_per_sec_scalar_simd", scalar_tps),
+            ("simd_e2e_speedup", spec_tps / scalar_tps),
+        ]);
+    }
 
     // Batched end-to-end speculative serving throughput at batch 8.
     let batch_engine = BatchEngine::new(model);

@@ -1,0 +1,159 @@
+//! Kernel-level throughput bench: plane decode and GEMM rates per SIMD
+//! dispatch tier, on one thread (so the numbers isolate the vector win
+//! from the thread-scaling lever `bench_engine` already sweeps).
+//!
+//! Run: cargo bench --bench bench_kernels
+//! Quick CI regression guard: cargo bench --bench bench_kernels -- --smoke
+//!
+//! Per tier it reports the full-plane and draft-prefix decode rates (GB/s
+//! of weight-plane bytes consumed) and the three GEMM kernels' GFLOP/s at
+//! batch 1/4/8, each as a `BENCH_JSON` line (collected into
+//! `BENCH_kernels_*.json` by CI; `benches/baselines/` keeps a reference
+//! snapshot).  The regression gate: on any host with a vector tier, the
+//! best tier's full-plane decode must be >= 1.5x scalar.
+
+use speq::bsfp::simd::{decode_draft_row_pair, draft_lut};
+use speq::bsfp::{quantize_tensor, SimdLevel, GROUP_SIZE};
+use speq::runtime::kernels::{gemm_dense, gemm_draft_prefix, gemm_full_planes, SCRATCH_ROWS};
+use speq::runtime::WorkerPool;
+use speq::util::bench::{black_box, Bench};
+use speq::util::rng::Rng;
+
+fn main() {
+    let (k, n) = (512usize, 512usize);
+    assert_eq!(k % GROUP_SIZE, 0);
+    let w = Rng::seed_from_u64(2024).uniform_vec(k * n, 0.3);
+    let qt = quantize_tensor(&w, k, n);
+    let planes = qt.planes();
+    let prefix = qt.packed_wq();
+    let decoded = planes.decode_full_f32();
+    let lut = draft_lut();
+    let pool = WorkerPool::new(1);
+
+    let full_plane_bytes = planes.full_bytes() as f64; // 2 B/weight
+    let draft_plane_bytes = prefix.len() as f64; // 0.5 B/weight
+
+    // (tier, full-plane decode GB/s) per tier, for the end-of-run gate.
+    let mut full_decode_rate: Vec<(SimdLevel, f64)> = Vec::new();
+
+    for level in SimdLevel::available() {
+        let mut b = Bench::auto(format!("bench_kernels[{}]", level.name()));
+        let mut json: Vec<(&str, f64)> = vec![
+            ("k", k as f64),
+            ("n", n as f64),
+            ("lanes", level.lanes() as f64),
+        ];
+
+        // Raw decoders: every row pair of the tensor, one shard.
+        let mut lo = vec![0.0f32; n];
+        let mut hi = vec![0.0f32; n];
+        let s = b.bench(format!("decode_full_{k}x{n}"), || {
+            for p in 0..k / 2 {
+                planes.decode_row_pair_full_cols_with(level, p, 0, n, &mut lo, &mut hi);
+            }
+            black_box(lo[0]);
+        });
+        let gbps = full_plane_bytes / (s.mean_ns * 1e-9) / 1e9;
+        b.metric("decode_full_gbps", gbps, "GB/s (plane bytes)");
+        json.push(("full_decode_gbps", gbps));
+        full_decode_rate.push((level, gbps));
+
+        let mut pre = vec![0.0f32; n];
+        let s = b.bench(format!("decode_draft_{k}x{n}"), || {
+            let mut cur_group = usize::MAX;
+            for p in 0..k / 2 {
+                let g = 2 * p / GROUP_SIZE;
+                if g != cur_group {
+                    cur_group = g;
+                    for (pv, &sv) in pre.iter_mut().zip(&qt.scales[g * n..(g + 1) * n]) {
+                        *pv = sv / qt.tensor_scale;
+                    }
+                }
+                let prow = &prefix[p * n..(p + 1) * n];
+                decode_draft_row_pair(level, prow, &pre, &lut, &mut lo, &mut hi);
+            }
+            black_box(lo[0]);
+        });
+        let gbps = draft_plane_bytes / (s.mean_ns * 1e-9) / 1e9;
+        b.metric("decode_draft_gbps", gbps, "GB/s (plane bytes)");
+        json.push(("draft_decode_gbps", gbps));
+
+        // The three GEMM kernels at batch 1/4/8 (2*k*n flops per row).
+        for bsz in [1usize, 4, 8] {
+            let xs = Rng::seed_from_u64(7 + bsz as u64).normal_vec(bsz * k, 1.0);
+            let mut ys = vec![0.0f32; bsz * n];
+            let mut scratch = vec![0.0f32; SCRATCH_ROWS * n];
+            let flops = (2 * bsz * k * n) as f64;
+
+            let s = b.bench(format!("gemm_dense_b{bsz}"), || {
+                gemm_dense(&pool, level, &xs, bsz, &decoded, k, n, &mut ys);
+                black_box(ys[0]);
+            });
+            let dense_gflops = flops / (s.mean_ns * 1e-9) / 1e9;
+            b.metric(format!("gemm_dense_b{bsz}_gflops"), dense_gflops, "GFLOP/s");
+
+            let s = b.bench(format!("gemm_full_planes_b{bsz}"), || {
+                gemm_full_planes(&pool, level, &xs, bsz, &planes, &mut scratch, &mut ys);
+                black_box(ys[0]);
+            });
+            let full_gflops = flops / (s.mean_ns * 1e-9) / 1e9;
+            b.metric(format!("gemm_full_planes_b{bsz}_gflops"), full_gflops, "GFLOP/s");
+
+            let s = b.bench(format!("gemm_draft_prefix_b{bsz}"), || {
+                gemm_draft_prefix(
+                    &pool,
+                    level,
+                    &xs,
+                    bsz,
+                    &prefix,
+                    &qt.scales,
+                    qt.tensor_scale,
+                    k,
+                    n,
+                    &mut scratch,
+                    &mut ys,
+                );
+                black_box(ys[0]);
+            });
+            let draft_gflops = flops / (s.mean_ns * 1e-9) / 1e9;
+            b.metric(format!("gemm_draft_prefix_b{bsz}_gflops"), draft_gflops, "GFLOP/s");
+
+            if bsz == 1 {
+                json.push(("gemm_dense_b1_gflops", dense_gflops));
+                json.push(("gemm_full_planes_b1_gflops", full_gflops));
+                json.push(("gemm_draft_prefix_b1_gflops", draft_gflops));
+            } else if bsz == 8 {
+                json.push(("gemm_dense_b8_gflops", dense_gflops));
+                json.push(("gemm_full_planes_b8_gflops", full_gflops));
+                json.push(("gemm_draft_prefix_b8_gflops", draft_gflops));
+            }
+        }
+        b.metrics_json(&json);
+    }
+
+    // Regression gate: the vector win on the hot full-plane decoder.  Only
+    // meaningful where a vector tier exists (scalar-only hosts pass
+    // trivially — there is nothing to gate).
+    let scalar_rate = full_decode_rate[0].1;
+    let (best, best_rate) = *full_decode_rate.last().expect("scalar always present");
+    let summary = Bench::auto("bench_kernels[summary]");
+    summary.metrics_json(&[
+        ("scalar_full_decode_gbps", scalar_rate),
+        ("best_full_decode_gbps", best_rate),
+        ("best_vs_scalar_speedup", best_rate / scalar_rate),
+    ]);
+    if best != SimdLevel::Scalar {
+        let speedup = best_rate / scalar_rate;
+        println!(
+            "bench_kernels: {} full-plane decode {speedup:.2}x scalar ({best_rate:.2} vs {scalar_rate:.2} GB/s)",
+            best.name()
+        );
+        assert!(
+            speedup >= 1.5,
+            "{} full-plane decode speedup {speedup:.3}x below the 1.5x bound",
+            best.name()
+        );
+    } else {
+        println!("bench_kernels: no vector tier on this host; speedup gate skipped");
+    }
+}

@@ -30,6 +30,7 @@ mod fp16;
 mod pack;
 mod planes;
 mod remap;
+pub mod simd;
 
 pub use bf16::{bf16_to_f32, bf16_to_speq_fp16, convert_bf16_tensor, f32_to_bf16, speq_fp16_to_bf16};
 pub use codec::{
@@ -46,3 +47,4 @@ pub use remap::{
     decode_draft_exp, decode_full_bits, draft_value, encode_bits, try_encode_bits, BsfpCode,
     CODE_TO_QEXP, FP16_BIAS, GROUP_SIZE, REMAP_CODE, REMAP_FLAG,
 };
+pub use simd::SimdLevel;

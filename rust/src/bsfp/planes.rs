@@ -19,9 +19,8 @@
 //! decode kernels (`runtime::kernels`) walk them with unit stride.
 
 use super::codec::QuantizedTensor;
-use super::fp16::f16_bits_to_f32;
 use super::pack::{pack_nibbles, unpack_nibbles};
-use super::remap::{decode_full_bits, BsfpCode};
+use super::simd::{decode_full_row_pair, SimdLevel};
 
 /// Pack a `(k, n)` row-major `W_r` matrix (12 significant bits per entry)
 /// into `(k/2, n)` 3-byte little-endian pairs: rows `2p` (low 12 bits) and
@@ -118,19 +117,28 @@ impl PlanePair {
         lo: &mut [f32],
         hi: &mut [f32],
     ) {
+        self.decode_row_pair_full_cols_with(SimdLevel::Scalar, p, j0, j1, lo, hi)
+    }
+
+    /// [`PlanePair::decode_row_pair_full_cols`] through a chosen SIMD
+    /// dispatch tier.  Every tier is bitwise identical to scalar (see
+    /// `bsfp::simd`), so callers pick a level purely for speed.
+    #[inline]
+    pub fn decode_row_pair_full_cols_with(
+        &self,
+        level: SimdLevel,
+        p: usize,
+        j0: usize,
+        j1: usize,
+        lo: &mut [f32],
+        hi: &mut [f32],
+    ) {
         let n = self.n;
         debug_assert!(j0 <= j1 && j1 <= n);
         debug_assert!(lo.len() == j1 - j0 && hi.len() == j1 - j0);
         let prow = &self.prefix[p * n + j0..p * n + j1];
         let rrow = &self.residual[3 * (p * n + j0)..3 * (p * n + j1)];
-        for (jj, &byte) in prow.iter().enumerate() {
-            let base = 3 * jj;
-            let (b0, b1, b2) = (rrow[base] as u16, rrow[base + 1] as u16, rrow[base + 2] as u16);
-            let c0 = BsfpCode { w_q: byte & 0xf, w_r: b0 | ((b1 & 0xf) << 8) };
-            let c1 = BsfpCode { w_q: byte >> 4, w_r: (b1 >> 4) | (b2 << 4) };
-            lo[jj] = f16_bits_to_f32(decode_full_bits(c0));
-            hi[jj] = f16_bits_to_f32(decode_full_bits(c1));
-        }
+        decode_full_row_pair(level, prow, rrow, lo, hi);
     }
 
     /// The unpacked 4-bit codes, row-major `(k, n)` (diagnostics/tests).
@@ -162,7 +170,7 @@ impl PlanePair {
 mod tests {
     use super::*;
     use crate::bsfp::codec::quantize_tensor;
-    use crate::bsfp::fp16::f32_to_f16_bits;
+    use crate::bsfp::fp16::{f16_bits_to_f32, f32_to_f16_bits};
     use crate::util::rng::Rng;
 
     #[test]

@@ -1,4 +1,9 @@
 //! Fig. 3 exponent remapping tables and the scalar encode/decode primitives.
+//!
+//! These scalar functions are the semantic ground truth; the vectorized
+//! decode paths in [`super::simd`] re-express [`decode_draft_exp`] /
+//! [`decode_full_bits`] as in-register table shuffles over the same
+//! constants and are tested bitwise-equal against them.
 
 use super::fp16::{join_fields, split_fields, Fp16Fields};
 

@@ -1,0 +1,857 @@
+//! Runtime-dispatched SIMD implementations of the Fig. 5 plane decoders.
+//!
+//! The hot loops of the plane-streaming GEMM kernels are the element-wise
+//! decoders: nibble-unpack + LUT for the draft prefix plane (Fig. 5(a))
+//! and the branch-free bit reconstruction + FP16→f32 widening for the
+//! full prefix+residual view (Fig. 5(b)).  Both are order-free per
+//! element, so they vectorize without touching the kernels' determinism
+//! contract (accumulation order stays scalar and ascending — see
+//! `runtime::kernels`).
+//!
+//! Dispatch tiers ([`SimdLevel`], best detected at backend init, forced
+//! via `SPEQ_SIMD` / `--simd`):
+//!
+//! * `scalar` — the reference implementation, always available; every
+//!   other tier must reproduce its output **bitwise** (pinned by the
+//!   exhaustive tests below and `rust/tests/prop_simd.rs`).
+//! * `sse4.1` (x86_64) — 4 columns per iteration; 16-byte `pshufb` tables
+//!   for the remap LUTs.
+//! * `avx2` (x86_64) — 8 columns per iteration; `vpermd` for the 8-entry
+//!   exponent/MUX tables, `pshufb` for residual byte extraction.
+//! * `neon` (aarch64) — 4 columns per iteration via `tbl` lookups.
+//!
+//! **Why the SIMD bits match scalar exactly.**  The draft LUT values are
+//! exact powers of two, so `draft_value(w_q)`'s f32 bits are constructed
+//! directly as `sign << 31 | (qexp + 112) << 23` — identical to the
+//! scalar `exp2` path — and the single multiply by the precomputed
+//! `scale / tensor_scale` row is the same one IEEE operation in both
+//! paths.  The full decode reconstructs the same FP16 bit pattern the
+//! scalar [`decode_full_bits`] produces (remap tables become in-register
+//! shuffles), then widens with a branch-free half→float: normals shift
+//! mantissa/rebias exponent exactly as `util::f16::f16_to_f32`; f16
+//! subnormals take an exact float subtraction (`(2^-14·(1 + m/1024)) -
+//! 2^-14 = m·2^-24`, exact by Sterbenz' lemma), yielding the same
+//! normalized f32 the scalar renormalization loop produces.  Inf/NaN
+//! cannot occur: the reconstructed exponent is `ehigh << 1 | e0 <= 15`
+//! for *every* input bit pattern.
+
+use super::fp16::f16_bits_to_f32;
+use super::remap::{decode_full_bits, draft_value, BsfpCode};
+
+/// One instruction-set tier of the plane decoders.
+///
+/// All variants exist on every architecture (so configs and tests can
+/// name them portably); a variant that is foreign to the compilation
+/// target simply reports `is_available() == false` and dispatches to
+/// scalar.  Callers must only pass available levels to the decode entry
+/// points (enforced by [`SimdLevel::resolve`] at config time and
+/// debug-asserted in dispatch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SimdLevel {
+    /// Reference implementation; always available.
+    Scalar,
+    /// x86_64 SSE4.1 (4 f32 lanes).
+    Sse41,
+    /// x86_64 AVX2 (8 f32 lanes).
+    Avx2,
+    /// aarch64 NEON (4 f32 lanes).
+    Neon,
+}
+
+impl SimdLevel {
+    /// The tiers usable on this host, ascending (always starts with
+    /// [`SimdLevel::Scalar`]; the last entry is what [`detect`] returns).
+    ///
+    /// [`detect`]: SimdLevel::detect
+    pub fn available() -> Vec<SimdLevel> {
+        let mut out = vec![SimdLevel::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("sse4.1") {
+                out.push(SimdLevel::Sse41);
+            }
+            if std::arch::is_x86_feature_detected!("avx2") {
+                out.push(SimdLevel::Avx2);
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            // NEON is a mandatory part of AArch64.
+            out.push(SimdLevel::Neon);
+        }
+        out
+    }
+
+    /// The best tier supported by this host (CPUID-style feature
+    /// detection, done once — callers cache the result at backend init).
+    pub fn detect() -> SimdLevel {
+        *Self::available().last().expect("scalar is always available")
+    }
+
+    /// Whether this tier can execute on this host.
+    pub fn is_available(self) -> bool {
+        Self::available().contains(&self)
+    }
+
+    /// Stable lowercase name (the `SPEQ_SIMD` / `--simd` vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse41 => "sse4.1",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// f32 lanes per decode iteration (1 for scalar).
+    pub fn lanes(self) -> usize {
+        match self {
+            SimdLevel::Scalar => 1,
+            SimdLevel::Sse41 | SimdLevel::Neon => 4,
+            SimdLevel::Avx2 => 8,
+        }
+    }
+
+    /// Parse a `SPEQ_SIMD` / `--simd` value.  `"auto"` resolves to
+    /// [`SimdLevel::detect`]; unknown strings are `None`.  The returned
+    /// level is *not* clamped to this host — call [`SimdLevel::resolve`].
+    pub fn parse(s: &str) -> Option<SimdLevel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => Some(Self::detect()),
+            "scalar" => Some(SimdLevel::Scalar),
+            "sse4.1" | "sse41" => Some(SimdLevel::Sse41),
+            "avx2" => Some(SimdLevel::Avx2),
+            "neon" => Some(SimdLevel::Neon),
+            _ => None,
+        }
+    }
+
+    /// This level if the host supports it, else the best detected tier
+    /// (with a warning — a forced-but-unsupported path must degrade, not
+    /// crash on an illegal instruction).
+    pub fn resolve(self) -> SimdLevel {
+        if self.is_available() {
+            self
+        } else {
+            let best = Self::detect();
+            eprintln!(
+                "warning: SIMD level {:?} unavailable on this host; using {:?}",
+                self.name(),
+                best.name()
+            );
+            best
+        }
+    }
+
+    /// The level `SPEQ_SIMD` selects: unset or `auto` detects the best
+    /// tier, anything else parses and resolves (unknown values warn and
+    /// fall back to detection).
+    pub fn from_env() -> SimdLevel {
+        match std::env::var("SPEQ_SIMD") {
+            Ok(v) => match Self::parse(&v) {
+                Some(level) => level.resolve(),
+                None => {
+                    let best = Self::detect();
+                    eprintln!(
+                        "warning: unknown SPEQ_SIMD={v:?} (auto|scalar|sse4.1|avx2|neon); \
+                         using {:?}",
+                        best.name()
+                    );
+                    best
+                }
+            },
+            Err(_) => Self::detect(),
+        }
+    }
+}
+
+/// The 16-entry Fig. 5(a) LUT: `draft_value` per 4-bit code.  Every entry
+/// is an exact power of two (`±2^(Q(E)-15)`), which is what makes the
+/// hoisted `scale / tensor_scale` factorization bitwise-exact.
+pub fn draft_lut() -> [f32; 16] {
+    std::array::from_fn(|c| draft_value(c as u8))
+}
+
+/// Scalar reference: decode one nibble-packed prefix row pair through the
+/// draft LUT and a precomputed per-column factor `pre[j] =
+/// scale[j] / tensor_scale` (hoisted out of the row loop — see
+/// `runtime::kernels`; the factorization is bitwise-exact because every
+/// LUT entry is a power of two and all intermediates stay normal).
+pub fn decode_draft_row_pair_scalar(
+    prow: &[u8],
+    pre: &[f32],
+    lut: &[f32; 16],
+    lo: &mut [f32],
+    hi: &mut [f32],
+) {
+    debug_assert!(prow.len() == pre.len() && prow.len() == lo.len() && prow.len() == hi.len());
+    for (jj, &byte) in prow.iter().enumerate() {
+        lo[jj] = lut[(byte & 0xf) as usize] * pre[jj];
+        hi[jj] = lut[(byte >> 4) as usize] * pre[jj];
+    }
+}
+
+/// Scalar reference: decode one prefix+residual row pair (columns of rows
+/// `2p` / `2p+1`) to f32 via the Fig. 5(b) reconstruction.  `rrow` holds
+/// the 3 packed residual bytes per column (`3 * prow.len()` bytes).
+pub fn decode_full_row_pair_scalar(prow: &[u8], rrow: &[u8], lo: &mut [f32], hi: &mut [f32]) {
+    debug_assert_eq!(rrow.len(), 3 * prow.len());
+    debug_assert!(prow.len() == lo.len() && prow.len() == hi.len());
+    for (jj, &byte) in prow.iter().enumerate() {
+        let base = 3 * jj;
+        let (b0, b1, b2) = (rrow[base] as u16, rrow[base + 1] as u16, rrow[base + 2] as u16);
+        let c0 = BsfpCode { w_q: byte & 0xf, w_r: b0 | ((b1 & 0xf) << 8) };
+        let c1 = BsfpCode { w_q: byte >> 4, w_r: (b1 >> 4) | (b2 << 4) };
+        lo[jj] = f16_bits_to_f32(decode_full_bits(c0));
+        hi[jj] = f16_bits_to_f32(decode_full_bits(c1));
+    }
+}
+
+/// Dispatched draft decode: `lo[j] = lut[prow[j] & 0xf] * pre[j]`,
+/// `hi[j] = lut[prow[j] >> 4] * pre[j]`.  Bitwise identical to
+/// [`decode_draft_row_pair_scalar`] on every tier.
+pub fn decode_draft_row_pair(
+    level: SimdLevel,
+    prow: &[u8],
+    pre: &[f32],
+    lut: &[f32; 16],
+    lo: &mut [f32],
+    hi: &mut [f32],
+) {
+    debug_assert!(level.is_available(), "dispatching unavailable SIMD level {:?}", level);
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the level is available (asserted above; enforced by
+        // `resolve()` at config time), so the target features exist.
+        SimdLevel::Avx2 => unsafe { x86::decode_draft_row_pair_avx2(prow, pre, lut, lo, hi) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::decode_draft_row_pair_sse41(prow, pre, lut, lo, hi) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::decode_draft_row_pair_neon(prow, pre, lut, lo, hi) },
+        _ => decode_draft_row_pair_scalar(prow, pre, lut, lo, hi),
+    }
+}
+
+/// Dispatched full (prefix + residual) row-pair decode.  Bitwise
+/// identical to [`decode_full_row_pair_scalar`] on every tier.
+pub fn decode_full_row_pair(
+    level: SimdLevel,
+    prow: &[u8],
+    rrow: &[u8],
+    lo: &mut [f32],
+    hi: &mut [f32],
+) {
+    debug_assert!(level.is_available(), "dispatching unavailable SIMD level {:?}", level);
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as in `decode_draft_row_pair`.
+        SimdLevel::Avx2 => unsafe { x86::decode_full_row_pair_avx2(prow, rrow, lo, hi) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::decode_full_row_pair_sse41(prow, rrow, lo, hi) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::decode_full_row_pair_neon(prow, rrow, lo, hi) },
+        _ => decode_full_row_pair_scalar(prow, rrow, lo, hi),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{decode_draft_row_pair_scalar, decode_full_row_pair_scalar};
+    use core::arch::x86_64::*;
+
+    /// `CODE_TO_QEXP + 112`: the f32 biased exponent of `2^(Q(E) - 15)`,
+    /// one entry per 3-bit code (indexed by `vpermd`, which reads only the
+    /// low 3 index bits).
+    const QEXP_BIASED: [i32; 8] = [121, 114, 123, 118, 120, 122, 124, 126];
+    /// `FLAG_MUX_EHIGH` replicated to 8 entries for `vpermd` (keyed by
+    /// `code & 3`; the table repeats so plain `code` indexes it too).
+    const MUX_EHIGH: [i32; 8] = [4, 0, 5, 2, 4, 0, 5, 2];
+    /// Byte-shuffle editions of the same tables for `pshufb` (index =
+    /// the full 4-bit `w_q`; the sign bit is ignored by replication).
+    const QEXP_BIASED_B: [u8; 16] =
+        [121, 114, 123, 118, 120, 122, 124, 126, 121, 114, 123, 118, 120, 122, 124, 126];
+    const MUX_EHIGH_B: [u8; 16] = [4, 0, 5, 2, 4, 0, 5, 2, 4, 0, 5, 2, 4, 0, 5, 2];
+
+    // Residual byte extraction for 8 columns (24 packed bytes).  Two
+    // overlapping 16-byte loads A = bytes[0..16], B = bytes[8..24] form
+    // the 256-bit vector [A | B]; `vpshufb` indexes within each 128-bit
+    // half, so lane j (columns 0..3 from A, 4..7 from B) picks its two
+    // residual bytes: column c reads bytes (3c, 3c+1) for r0 and
+    // (3c+1, 3c+2) for r1 (B-relative offsets subtract 8).  0x80 zeroes
+    // the upper lane bytes.
+    const R0_SHUF: [i8; 32] = [
+        0, 1, -128, -128, 3, 4, -128, -128, 6, 7, -128, -128, 9, 10, -128, -128, //
+        4, 5, -128, -128, 7, 8, -128, -128, 10, 11, -128, -128, 13, 14, -128, -128,
+    ];
+    const R1_SHUF: [i8; 32] = [
+        1, 2, -128, -128, 4, 5, -128, -128, 7, 8, -128, -128, 10, 11, -128, -128, //
+        5, 6, -128, -128, 8, 9, -128, -128, 11, 12, -128, -128, 14, 15, -128, -128,
+    ];
+    // SSE edition: 4 columns (12 packed bytes, loaded as 8 + 4 in-bounds).
+    const R0_SHUF128: [i8; 16] =
+        [0, 1, -128, -128, 3, 4, -128, -128, 6, 7, -128, -128, 9, 10, -128, -128];
+    const R1_SHUF128: [i8; 16] =
+        [1, 2, -128, -128, 4, 5, -128, -128, 7, 8, -128, -128, 10, 11, -128, -128];
+
+    /// Draft f32 bits for 8 lanes of 4-bit `w_q`:
+    /// `(w_q & 8) << 28 | QEXP_BIASED[w_q & 7] << 23`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn draft_bits_avx2(wq: __m256i) -> __m256 {
+        let tab = _mm256_loadu_si256(QEXP_BIASED.as_ptr() as *const __m256i);
+        let expf = _mm256_slli_epi32::<23>(_mm256_permutevar8x32_epi32(tab, wq));
+        let sign = _mm256_slli_epi32::<28>(_mm256_and_si256(wq, _mm256_set1_epi32(8)));
+        _mm256_castsi256_ps(_mm256_or_si256(expf, sign))
+    }
+
+    /// Branch-free FP16 → f32 widening of 8 lanes holding 16-bit half
+    /// patterns with exponent <= 15 (no inf/NaN lane can occur — the
+    /// Fig. 5(b) reconstruction bounds the exponent).  Matches
+    /// `util::f16::f16_to_f32` bitwise, including subnormals and ±0.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn half_to_f32_avx2(h: __m256i) -> __m256 {
+        let magnitude = _mm256_slli_epi32::<13>(_mm256_and_si256(h, _mm256_set1_epi32(0x7fff)));
+        let exp16 = _mm256_and_si256(magnitude, _mm256_set1_epi32(0x7c00 << 13));
+        // Normal: rebias the exponent by (127 - 15).
+        let norm = _mm256_add_epi32(magnitude, _mm256_set1_epi32((127 - 15) << 23));
+        // Subnormal (exp16 == 0): treat the mantissa as the fraction of
+        // 2^-14 and subtract the implicit leading 2^-14 — an exact float
+        // subtraction yielding the normalized m * 2^-24.
+        let magic = _mm256_castsi256_ps(_mm256_set1_epi32(113 << 23));
+        let sub = _mm256_sub_ps(
+            _mm256_castsi256_ps(_mm256_add_epi32(norm, _mm256_set1_epi32(1 << 23))),
+            magic,
+        );
+        let is_sub = _mm256_cmpeq_epi32(exp16, _mm256_setzero_si256());
+        let val = _mm256_blendv_epi8(norm, _mm256_castps_si256(sub), is_sub);
+        let sign = _mm256_slli_epi32::<16>(_mm256_and_si256(h, _mm256_set1_epi32(0x8000)));
+        _mm256_castsi256_ps(_mm256_or_si256(val, sign))
+    }
+
+    /// Fig. 5(b) reconstruction for 8 lanes: `(w_q, w_r)` → FP16 bits →
+    /// f32.  `REMAP`'s inverse tables run as in-register shuffles.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn full_values_avx2(wq: __m256i, wr: __m256i) -> __m256 {
+        let one = _mm256_set1_epi32(1);
+        let sign = _mm256_slli_epi32::<12>(_mm256_and_si256(wq, _mm256_set1_epi32(8)));
+        let code = _mm256_and_si256(wq, _mm256_set1_epi32(7));
+        let flag = _mm256_and_si256(_mm256_srli_epi32::<11>(wr), one);
+        let e0 = _mm256_and_si256(_mm256_srli_epi32::<10>(wr), one);
+        let man = _mm256_and_si256(wr, _mm256_set1_epi32(0x3ff));
+        let mux_tab = _mm256_loadu_si256(MUX_EHIGH.as_ptr() as *const __m256i);
+        let mux = _mm256_permutevar8x32_epi32(mux_tab, code);
+        let flagged = _mm256_cmpeq_epi32(flag, one);
+        let ehigh = _mm256_blendv_epi8(code, mux, flagged);
+        let exp = _mm256_or_si256(_mm256_slli_epi32::<1>(ehigh), e0);
+        let f16 = _mm256_or_si256(sign, _mm256_or_si256(_mm256_slli_epi32::<10>(exp), man));
+        half_to_f32_avx2(f16)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn decode_draft_row_pair_avx2(
+        prow: &[u8],
+        pre: &[f32],
+        lut: &[f32; 16],
+        lo: &mut [f32],
+        hi: &mut [f32],
+    ) {
+        let w = prow.len();
+        let nib = _mm256_set1_epi32(0xf);
+        let mut j = 0;
+        while j + 8 <= w {
+            let bytes =
+                _mm256_cvtepu8_epi32(_mm_loadl_epi64(prow.as_ptr().add(j) as *const __m128i));
+            let pre_v = _mm256_loadu_ps(pre.as_ptr().add(j));
+            let wq_lo = _mm256_and_si256(bytes, nib);
+            let wq_hi = _mm256_and_si256(_mm256_srli_epi32::<4>(bytes), nib);
+            let lo_v = _mm256_mul_ps(draft_bits_avx2(wq_lo), pre_v);
+            let hi_v = _mm256_mul_ps(draft_bits_avx2(wq_hi), pre_v);
+            _mm256_storeu_ps(lo.as_mut_ptr().add(j), lo_v);
+            _mm256_storeu_ps(hi.as_mut_ptr().add(j), hi_v);
+            j += 8;
+        }
+        decode_draft_row_pair_scalar(&prow[j..], &pre[j..], lut, &mut lo[j..], &mut hi[j..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn decode_full_row_pair_avx2(
+        prow: &[u8],
+        rrow: &[u8],
+        lo: &mut [f32],
+        hi: &mut [f32],
+    ) {
+        let w = prow.len();
+        let nib = _mm256_set1_epi32(0xf);
+        let r0_shuf = _mm256_loadu_si256(R0_SHUF.as_ptr() as *const __m256i);
+        let r1_shuf = _mm256_loadu_si256(R1_SHUF.as_ptr() as *const __m256i);
+        let mask12 = _mm256_set1_epi32(0xfff);
+        let mut j = 0;
+        while j + 8 <= w {
+            let bytes =
+                _mm256_cvtepu8_epi32(_mm_loadl_epi64(prow.as_ptr().add(j) as *const __m128i));
+            let wq_lo = _mm256_and_si256(bytes, nib);
+            let wq_hi = _mm256_and_si256(_mm256_srli_epi32::<4>(bytes), nib);
+            // 24 residual bytes for these 8 columns, via two overlapping
+            // in-bounds 16-byte loads (3*j + 24 <= 3*w holds when
+            // j + 8 <= w).
+            let a = _mm_loadu_si128(rrow.as_ptr().add(3 * j) as *const __m128i);
+            let bvec = _mm_loadu_si128(rrow.as_ptr().add(3 * j + 8) as *const __m128i);
+            let v = _mm256_set_m128i(bvec, a);
+            let r0 = _mm256_and_si256(_mm256_shuffle_epi8(v, r0_shuf), mask12);
+            let r1 =
+                _mm256_and_si256(_mm256_srli_epi32::<4>(_mm256_shuffle_epi8(v, r1_shuf)), mask12);
+            _mm256_storeu_ps(lo.as_mut_ptr().add(j), full_values_avx2(wq_lo, r0));
+            _mm256_storeu_ps(hi.as_mut_ptr().add(j), full_values_avx2(wq_hi, r1));
+            j += 8;
+        }
+        decode_full_row_pair_scalar(&prow[j..], &rrow[3 * j..], &mut lo[j..], &mut hi[j..]);
+    }
+
+    /// Draft f32 bits for 4 lanes (SSE edition of [`draft_bits_avx2`]):
+    /// `pshufb` on a byte table, then mask to the low byte of each lane.
+    #[inline]
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn draft_bits_sse41(wq: __m128i) -> __m128 {
+        let tab = _mm_loadu_si128(QEXP_BIASED_B.as_ptr() as *const __m128i);
+        // Index bytes 1..3 of each lane are zero and would read table[0];
+        // the 0xff mask keeps only the intended low byte.
+        let qexp = _mm_and_si128(_mm_shuffle_epi8(tab, wq), _mm_set1_epi32(0xff));
+        let expf = _mm_slli_epi32::<23>(qexp);
+        let sign = _mm_slli_epi32::<28>(_mm_and_si128(wq, _mm_set1_epi32(8)));
+        _mm_castsi128_ps(_mm_or_si128(expf, sign))
+    }
+
+    /// SSE edition of [`half_to_f32_avx2`] (same algorithm, 4 lanes).
+    #[inline]
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn half_to_f32_sse41(h: __m128i) -> __m128 {
+        let magnitude = _mm_slli_epi32::<13>(_mm_and_si128(h, _mm_set1_epi32(0x7fff)));
+        let exp16 = _mm_and_si128(magnitude, _mm_set1_epi32(0x7c00 << 13));
+        let norm = _mm_add_epi32(magnitude, _mm_set1_epi32((127 - 15) << 23));
+        let magic = _mm_castsi128_ps(_mm_set1_epi32(113 << 23));
+        let sub =
+            _mm_sub_ps(_mm_castsi128_ps(_mm_add_epi32(norm, _mm_set1_epi32(1 << 23))), magic);
+        let is_sub = _mm_cmpeq_epi32(exp16, _mm_setzero_si128());
+        let val = _mm_blendv_epi8(norm, _mm_castps_si128(sub), is_sub);
+        let sign = _mm_slli_epi32::<16>(_mm_and_si128(h, _mm_set1_epi32(0x8000)));
+        _mm_castsi128_ps(_mm_or_si128(val, sign))
+    }
+
+    /// SSE edition of [`full_values_avx2`] (4 lanes).
+    #[inline]
+    #[target_feature(enable = "sse4.1")]
+    unsafe fn full_values_sse41(wq: __m128i, wr: __m128i) -> __m128 {
+        let one = _mm_set1_epi32(1);
+        let sign = _mm_slli_epi32::<12>(_mm_and_si128(wq, _mm_set1_epi32(8)));
+        let code = _mm_and_si128(wq, _mm_set1_epi32(7));
+        let flag = _mm_and_si128(_mm_srli_epi32::<11>(wr), one);
+        let e0 = _mm_and_si128(_mm_srli_epi32::<10>(wr), one);
+        let man = _mm_and_si128(wr, _mm_set1_epi32(0x3ff));
+        let mux_tab = _mm_loadu_si128(MUX_EHIGH_B.as_ptr() as *const __m128i);
+        let mux = _mm_and_si128(_mm_shuffle_epi8(mux_tab, code), _mm_set1_epi32(0xff));
+        let flagged = _mm_cmpeq_epi32(flag, one);
+        let ehigh = _mm_blendv_epi8(code, mux, flagged);
+        let exp = _mm_or_si128(_mm_slli_epi32::<1>(ehigh), e0);
+        let f16 = _mm_or_si128(sign, _mm_or_si128(_mm_slli_epi32::<10>(exp), man));
+        half_to_f32_sse41(f16)
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn decode_draft_row_pair_sse41(
+        prow: &[u8],
+        pre: &[f32],
+        lut: &[f32; 16],
+        lo: &mut [f32],
+        hi: &mut [f32],
+    ) {
+        let w = prow.len();
+        let nib = _mm_set1_epi32(0xf);
+        let mut j = 0;
+        while j + 4 <= w {
+            let four = (prow.as_ptr().add(j) as *const i32).read_unaligned();
+            let bytes = _mm_cvtepu8_epi32(_mm_cvtsi32_si128(four));
+            let pre_v = _mm_loadu_ps(pre.as_ptr().add(j));
+            let wq_lo = _mm_and_si128(bytes, nib);
+            let wq_hi = _mm_and_si128(_mm_srli_epi32::<4>(bytes), nib);
+            _mm_storeu_ps(lo.as_mut_ptr().add(j), _mm_mul_ps(draft_bits_sse41(wq_lo), pre_v));
+            _mm_storeu_ps(hi.as_mut_ptr().add(j), _mm_mul_ps(draft_bits_sse41(wq_hi), pre_v));
+            j += 4;
+        }
+        decode_draft_row_pair_scalar(&prow[j..], &pre[j..], lut, &mut lo[j..], &mut hi[j..]);
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn decode_full_row_pair_sse41(
+        prow: &[u8],
+        rrow: &[u8],
+        lo: &mut [f32],
+        hi: &mut [f32],
+    ) {
+        let w = prow.len();
+        let nib = _mm_set1_epi32(0xf);
+        let r0_shuf = _mm_loadu_si128(R0_SHUF128.as_ptr() as *const __m128i);
+        let r1_shuf = _mm_loadu_si128(R1_SHUF128.as_ptr() as *const __m128i);
+        let mask12 = _mm_set1_epi32(0xfff);
+        let mut j = 0;
+        while j + 4 <= w {
+            let four = (prow.as_ptr().add(j) as *const i32).read_unaligned();
+            let bytes = _mm_cvtepu8_epi32(_mm_cvtsi32_si128(four));
+            let wq_lo = _mm_and_si128(bytes, nib);
+            let wq_hi = _mm_and_si128(_mm_srli_epi32::<4>(bytes), nib);
+            // 12 residual bytes for these 4 columns: an 8-byte load plus a
+            // 4-byte insert (both in-bounds; 3*j + 12 <= 3*w).
+            let head = _mm_loadl_epi64(rrow.as_ptr().add(3 * j) as *const __m128i);
+            let tail = (rrow.as_ptr().add(3 * j + 8) as *const i32).read_unaligned();
+            let v = _mm_insert_epi32::<2>(head, tail);
+            let r0 = _mm_and_si128(_mm_shuffle_epi8(v, r0_shuf), mask12);
+            let r1 = _mm_and_si128(_mm_srli_epi32::<4>(_mm_shuffle_epi8(v, r1_shuf)), mask12);
+            _mm_storeu_ps(lo.as_mut_ptr().add(j), full_values_sse41(wq_lo, r0));
+            _mm_storeu_ps(hi.as_mut_ptr().add(j), full_values_sse41(wq_hi, r1));
+            j += 4;
+        }
+        decode_full_row_pair_scalar(&prow[j..], &rrow[3 * j..], &mut lo[j..], &mut hi[j..]);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{decode_draft_row_pair_scalar, decode_full_row_pair_scalar};
+    use core::arch::aarch64::*;
+
+    /// `CODE_TO_QEXP + 112` indexed by the full 4-bit `w_q` via `tbl`.
+    const QEXP_BIASED_B: [u8; 16] =
+        [121, 114, 123, 118, 120, 122, 124, 126, 121, 114, 123, 118, 120, 122, 124, 126];
+    const MUX_EHIGH_B: [u8; 16] = [4, 0, 5, 2, 4, 0, 5, 2, 4, 0, 5, 2, 4, 0, 5, 2];
+    // Residual extraction for 4 columns from vcombine(bytes[0..8],
+    // bytes[4..12]): global byte g maps to index g (g < 8) or g + 4
+    // (g >= 8); 0xff indexes read as zero.
+    const R0_TBL: [u8; 16] = [0, 1, 255, 255, 3, 4, 255, 255, 6, 7, 255, 255, 13, 14, 255, 255];
+    const R1_TBL: [u8; 16] = [1, 2, 255, 255, 4, 5, 255, 255, 7, 12, 255, 255, 14, 15, 255, 255];
+
+    /// Load 4 prefix bytes into the low byte of four u32 lanes.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn load4_u32(p: *const u8) -> uint32x4_t {
+        let lanes =
+            [*p as u32, *p.add(1) as u32, *p.add(2) as u32, *p.add(3) as u32];
+        vld1q_u32(lanes.as_ptr())
+    }
+
+    /// `tbl` lookup keyed by the low byte of each u32 lane, masked back to
+    /// one byte (index bytes 1..3 are zero and would read `table[0]`).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn tbl_u32(table: &[u8; 16], idx: uint32x4_t) -> uint32x4_t {
+        let t = vld1q_u8(table.as_ptr());
+        let looked = vqtbl1q_u8(t, vreinterpretq_u8_u32(idx));
+        vandq_u32(vreinterpretq_u32_u8(looked), vdupq_n_u32(0xff))
+    }
+
+    /// Draft f32 bits for 4 lanes of 4-bit `w_q`.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn draft_bits_neon(wq: uint32x4_t) -> float32x4_t {
+        let expf = vshlq_n_u32::<23>(tbl_u32(&QEXP_BIASED_B, wq));
+        let sign = vshlq_n_u32::<28>(vandq_u32(wq, vdupq_n_u32(8)));
+        vreinterpretq_f32_u32(vorrq_u32(expf, sign))
+    }
+
+    /// NEON edition of the branch-free FP16 → f32 widening (exponent <=
+    /// 15 guaranteed by the Fig. 5(b) reconstruction).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn half_to_f32_neon(h: uint32x4_t) -> float32x4_t {
+        let magnitude = vshlq_n_u32::<13>(vandq_u32(h, vdupq_n_u32(0x7fff)));
+        let exp16 = vandq_u32(magnitude, vdupq_n_u32(0x7c00 << 13));
+        let norm = vaddq_u32(magnitude, vdupq_n_u32((127 - 15) << 23));
+        let magic = vreinterpretq_f32_u32(vdupq_n_u32(113 << 23));
+        let sub = vsubq_f32(
+            vreinterpretq_f32_u32(vaddq_u32(norm, vdupq_n_u32(1 << 23))),
+            magic,
+        );
+        let is_sub = vceqq_u32(exp16, vdupq_n_u32(0));
+        let val = vbslq_u32(is_sub, vreinterpretq_u32_f32(sub), norm);
+        let sign = vshlq_n_u32::<16>(vandq_u32(h, vdupq_n_u32(0x8000)));
+        vreinterpretq_f32_u32(vorrq_u32(val, sign))
+    }
+
+    /// Fig. 5(b) reconstruction for 4 lanes.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn full_values_neon(wq: uint32x4_t, wr: uint32x4_t) -> float32x4_t {
+        let one = vdupq_n_u32(1);
+        let sign = vshlq_n_u32::<12>(vandq_u32(wq, vdupq_n_u32(8)));
+        let code = vandq_u32(wq, vdupq_n_u32(7));
+        let flag = vandq_u32(vshrq_n_u32::<11>(wr), one);
+        let e0 = vandq_u32(vshrq_n_u32::<10>(wr), one);
+        let man = vandq_u32(wr, vdupq_n_u32(0x3ff));
+        let mux = tbl_u32(&MUX_EHIGH_B, code);
+        let flagged = vceqq_u32(flag, one);
+        let ehigh = vbslq_u32(flagged, mux, code);
+        let exp = vorrq_u32(vshlq_n_u32::<1>(ehigh), e0);
+        let f16 = vorrq_u32(sign, vorrq_u32(vshlq_n_u32::<10>(exp), man));
+        half_to_f32_neon(f16)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn decode_draft_row_pair_neon(
+        prow: &[u8],
+        pre: &[f32],
+        lut: &[f32; 16],
+        lo: &mut [f32],
+        hi: &mut [f32],
+    ) {
+        let w = prow.len();
+        let nib = vdupq_n_u32(0xf);
+        let mut j = 0;
+        while j + 4 <= w {
+            let bytes = load4_u32(prow.as_ptr().add(j));
+            let pre_v = vld1q_f32(pre.as_ptr().add(j));
+            let wq_lo = vandq_u32(bytes, nib);
+            let wq_hi = vandq_u32(vshrq_n_u32::<4>(bytes), nib);
+            vst1q_f32(lo.as_mut_ptr().add(j), vmulq_f32(draft_bits_neon(wq_lo), pre_v));
+            vst1q_f32(hi.as_mut_ptr().add(j), vmulq_f32(draft_bits_neon(wq_hi), pre_v));
+            j += 4;
+        }
+        decode_draft_row_pair_scalar(&prow[j..], &pre[j..], lut, &mut lo[j..], &mut hi[j..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn decode_full_row_pair_neon(
+        prow: &[u8],
+        rrow: &[u8],
+        lo: &mut [f32],
+        hi: &mut [f32],
+    ) {
+        let w = prow.len();
+        let nib = vdupq_n_u32(0xf);
+        let mask12 = vdupq_n_u32(0xfff);
+        let r0_tbl = vld1q_u8(R0_TBL.as_ptr());
+        let r1_tbl = vld1q_u8(R1_TBL.as_ptr());
+        let mut j = 0;
+        while j + 4 <= w {
+            let bytes = load4_u32(prow.as_ptr().add(j));
+            let wq_lo = vandq_u32(bytes, nib);
+            let wq_hi = vandq_u32(vshrq_n_u32::<4>(bytes), nib);
+            // 12 residual bytes via two overlapping in-bounds 8-byte
+            // loads (3*j + 12 <= 3*w).
+            let head = vld1_u8(rrow.as_ptr().add(3 * j));
+            let tail = vld1_u8(rrow.as_ptr().add(3 * j + 4));
+            let v = vcombine_u8(head, tail);
+            let r0 = vandq_u32(vreinterpretq_u32_u8(vqtbl1q_u8(v, r0_tbl)), mask12);
+            let r1 = vandq_u32(
+                vshrq_n_u32::<4>(vreinterpretq_u32_u8(vqtbl1q_u8(v, r1_tbl))),
+                mask12,
+            );
+            vst1q_f32(lo.as_mut_ptr().add(j), full_values_neon(wq_lo, r0));
+            vst1q_f32(hi.as_mut_ptr().add(j), full_values_neon(wq_hi, r1));
+            j += 4;
+        }
+        decode_full_row_pair_scalar(&prow[j..], &rrow[3 * j..], &mut lo[j..], &mut hi[j..]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bsfp::planes::pack_residuals;
+
+    #[test]
+    fn parse_vocabulary() {
+        assert_eq!(SimdLevel::parse("scalar"), Some(SimdLevel::Scalar));
+        assert_eq!(SimdLevel::parse("SSE4.1"), Some(SimdLevel::Sse41));
+        assert_eq!(SimdLevel::parse("sse41"), Some(SimdLevel::Sse41));
+        assert_eq!(SimdLevel::parse("avx2"), Some(SimdLevel::Avx2));
+        assert_eq!(SimdLevel::parse("neon"), Some(SimdLevel::Neon));
+        assert_eq!(SimdLevel::parse("auto"), Some(SimdLevel::detect()));
+        assert_eq!(SimdLevel::parse("bogus"), None);
+    }
+
+    #[test]
+    fn available_is_scalar_first_and_detect_last() {
+        let avail = SimdLevel::available();
+        assert_eq!(avail[0], SimdLevel::Scalar);
+        assert_eq!(*avail.last().unwrap(), SimdLevel::detect());
+        for level in avail {
+            assert!(level.is_available());
+            assert_eq!(level.resolve(), level);
+            assert!(level.lanes() >= 1);
+        }
+    }
+
+    #[test]
+    fn scalar_full_decode_matches_remap_reference() {
+        // The scalar row-pair decoder against the element-wise remap
+        // primitives, over every (w_q, w_r) combination.
+        let mut lo = [0.0f32; 1];
+        let mut hi = [0.0f32; 1];
+        for wq in 0..16u8 {
+            for wr in 0..4096u16 {
+                let prow = [wq | (wq << 4)];
+                let rrow = pack_residuals(&[wr, wr], 2, 1);
+                decode_full_row_pair_scalar(&prow, &rrow, &mut lo, &mut hi);
+                let want =
+                    f16_bits_to_f32(decode_full_bits(BsfpCode { w_q: wq, w_r: wr }));
+                assert_eq!(lo[0].to_bits(), want.to_bits(), "wq={wq} wr={wr}");
+                assert_eq!(hi[0].to_bits(), want.to_bits(), "wq={wq} wr={wr}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_full_decode_matches_scalar_exhaustively() {
+        // Every (w_q, w_r) bit pattern — including ones no encoder emits —
+        // through every available tier, at a width that exercises both the
+        // vector body and the scalar tail (19 = 2*8 + 3 = 4*4 + 3).
+        let width = 19usize;
+        let levels = SimdLevel::available();
+        let mut cursor = 0u64;
+        let mut next = || {
+            // Deterministic LCG over (w_q, w_r) pattern space.
+            cursor = cursor.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((cursor >> 20) & 0xffff) as u16
+        };
+        for round in 0..64 {
+            let mut w_q = vec![0u8; 2 * width];
+            let mut w_r = vec![0u16; 2 * width];
+            for j in 0..2 * width {
+                let bits = next();
+                w_q[j] = (bits & 0xf) as u8;
+                w_r[j] = (bits >> 4) & 0xfff;
+            }
+            // Row-pair layout: rows 0 and 1 of a (2, width) matrix.
+            let mut prow = vec![0u8; width];
+            for j in 0..width {
+                prow[j] = w_q[j] | (w_q[width + j] << 4);
+            }
+            let rrow = pack_residuals(&w_r, 2, width);
+            let mut slo = vec![0.0f32; width];
+            let mut shi = vec![0.0f32; width];
+            decode_full_row_pair_scalar(&prow, &rrow, &mut slo, &mut shi);
+            for &level in &levels {
+                let mut vlo = vec![f32::NAN; width];
+                let mut vhi = vec![f32::NAN; width];
+                decode_full_row_pair(level, &prow, &rrow, &mut vlo, &mut vhi);
+                for j in 0..width {
+                    assert_eq!(
+                        vlo[j].to_bits(),
+                        slo[j].to_bits(),
+                        "{} lo round={round} col={j} wq={} wr={}",
+                        level.name(),
+                        w_q[j],
+                        w_r[j]
+                    );
+                    assert_eq!(
+                        vhi[j].to_bits(),
+                        shi[j].to_bits(),
+                        "{} hi round={round} col={j}",
+                        level.name()
+                    );
+                }
+            }
+        }
+        // And the dense sweep: all 16 x 4096 patterns at width 1 (pure
+        // scalar tail) and width 8/4 (pure vector body).
+        let lut = draft_lut();
+        let _ = lut;
+        for wq in 0..16u8 {
+            for wr in (0..4096u16).step_by(7) {
+                let width = 8usize;
+                let prow = vec![wq | (wq << 4); width];
+                let w_r = vec![wr; 2 * width];
+                let rrow = pack_residuals(&w_r, 2, width);
+                let mut slo = vec![0.0f32; width];
+                let mut shi = vec![0.0f32; width];
+                decode_full_row_pair_scalar(&prow, &rrow, &mut slo, &mut shi);
+                for &level in &levels {
+                    let mut vlo = vec![f32::NAN; width];
+                    let mut vhi = vec![f32::NAN; width];
+                    decode_full_row_pair(level, &prow, &rrow, &mut vlo, &mut vhi);
+                    for j in 0..width {
+                        assert_eq!(
+                            vlo[j].to_bits(),
+                            slo[j].to_bits(),
+                            "{} wq={wq} wr={wr} col={j}",
+                            level.name()
+                        );
+                        assert_eq!(vhi[j].to_bits(), shi[j].to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_draft_decode_matches_scalar_exhaustively() {
+        let lut = draft_lut();
+        let levels = SimdLevel::available();
+        // All 256 packed prefix bytes, awkward widths around every lane
+        // count, and pre factors spanning sign/zero/subnormal-adjacent.
+        let pres = [1.0f32, 0.5, -0.25, 0.0, 1.0e-20, 3.141592e4, -7.5e-3];
+        for width in [1usize, 3, 4, 5, 7, 8, 9, 16, 17, 31] {
+            let mut prow = vec![0u8; width];
+            let mut pre = vec![0.0f32; width];
+            for j in 0..width {
+                prow[j] = ((j * 37 + width * 11) % 256) as u8;
+                pre[j] = pres[j % pres.len()] * (1.0 + j as f32 * 0.125);
+            }
+            let mut slo = vec![0.0f32; width];
+            let mut shi = vec![0.0f32; width];
+            decode_draft_row_pair_scalar(&prow, &pre, &lut, &mut slo, &mut shi);
+            for &level in &levels {
+                let mut vlo = vec![f32::NAN; width];
+                let mut vhi = vec![f32::NAN; width];
+                decode_draft_row_pair(level, &prow, &pre, &lut, &mut vlo, &mut vhi);
+                for j in 0..width {
+                    assert_eq!(
+                        vlo[j].to_bits(),
+                        slo[j].to_bits(),
+                        "{} width={width} col={j} byte={}",
+                        level.name(),
+                        prow[j]
+                    );
+                    assert_eq!(vhi[j].to_bits(), shi[j].to_bits());
+                }
+            }
+        }
+        // Dense byte sweep: every packed byte value in the vector body.
+        for base in (0..256usize).step_by(8) {
+            let prow: Vec<u8> = (0..8).map(|j| ((base + j) % 256) as u8).collect();
+            let pre = vec![0.173828125f32; 8];
+            let mut slo = vec![0.0f32; 8];
+            let mut shi = vec![0.0f32; 8];
+            decode_draft_row_pair_scalar(&prow, &pre, &lut, &mut slo, &mut shi);
+            for &level in &levels {
+                let mut vlo = vec![f32::NAN; 8];
+                let mut vhi = vec![f32::NAN; 8];
+                decode_draft_row_pair(level, &prow, &pre, &lut, &mut vlo, &mut vhi);
+                assert_eq!(
+                    vlo.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    slo.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{} base={base}",
+                    level.name()
+                );
+                assert_eq!(
+                    vhi.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    shi.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn draft_lut_entries_are_exact_powers_of_two() {
+        // The hoisted `scale / tensor_scale` factorization is bitwise
+        // exact only because multiplying by a LUT entry is an exact
+        // power-of-two scaling; pin that property.
+        for (c, &v) in draft_lut().iter().enumerate() {
+            let bits = v.to_bits();
+            assert_eq!(bits & 0x007f_ffff, 0, "code {c}: mantissa not zero");
+            let (sign, qexp) = super::super::remap::decode_draft_exp(c as u8);
+            assert_eq!(bits >> 31, sign as u32, "code {c}");
+            assert_eq!((bits >> 23) & 0xff, (qexp as u32) + 112, "code {c}");
+        }
+    }
+}

@@ -33,10 +33,15 @@
 //!   bit-identical to dense execution.  Kernels run column-sharded on a
 //!   std-only persistent worker pool (`runtime::pool`), attention runs
 //!   parallel over (sequence, head) pairs, and activations live in a
-//!   flat reusable workspace (no per-step allocation after warm-up);
-//!   because each output element keeps its exact ascending-index
-//!   accumulation order, results are bitwise identical for every thread
-//!   count ([`runtime::NativeConfig`], `--threads`, `SPEQ_THREADS`).
+//!   flat reusable workspace (no per-step allocation after warm-up).
+//!   The plane decoders and per-element updates run through
+//!   runtime-dispatched SIMD tiers ([`runtime::SimdLevel`]:
+//!   AVX2/SSE4.1/NEON behind an always-available scalar reference,
+//!   forced via `--simd` / `SPEQ_SIMD`); because vector code is confined
+//!   to element-wise work and each output element keeps its exact
+//!   ascending-index accumulation order, results are bitwise identical
+//!   for every thread count *and* dispatch tier
+//!   ([`runtime::NativeConfig`], `--threads`, `SPEQ_THREADS`).
 //!   Also here: the [`runtime::ModelSource`] factory, and — behind the
 //!   non-default `pjrt` cargo feature — the PJRT client wrapper that
 //!   executes AOT-compiled HLO graphs buffer-to-buffer.

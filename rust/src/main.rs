@@ -24,6 +24,7 @@ use speq::net::{LoadConfig, LoadMode, NetConfig, NetServer};
 use speq::report::{run_experiment, ReportCtx, ReportOpts, EXPERIMENTS};
 use speq::runtime::{
     builtin_config, builtin_model_names, load_backend_with, Backend, ModelSource, NativeConfig,
+    SimdLevel,
 };
 use speq::specdec::{Engine, SpecConfig};
 use speq::util::cli::Args;
@@ -56,10 +57,23 @@ fn model_source(args: &Args) -> ModelSource {
 }
 
 /// Native runtime config: `--threads N` (0 = auto-detect) beats the
-/// `SPEQ_THREADS` env default.  Thread count never changes output bits —
-/// it is purely a wall-clock knob.
+/// `SPEQ_THREADS` env default, and `--simd
+/// <auto|scalar|sse4.1|avx2|neon>` beats `SPEQ_SIMD` (default: best
+/// detected tier).  Neither knob ever changes output bits — both are
+/// purely wall-clock knobs.
 fn native_config(args: &Args) -> NativeConfig {
-    NativeConfig::with_threads(args.get_usize("threads", NativeConfig::default().threads))
+    let mut native =
+        NativeConfig::with_threads(args.get_usize("threads", NativeConfig::default().threads));
+    if let Some(s) = args.get("simd") {
+        match SimdLevel::parse(s) {
+            Some(level) => native.simd = level.resolve(),
+            None => eprintln!(
+                "warning: unknown --simd {s:?} (auto|scalar|sse4.1|avx2|neon); using {:?}",
+                native.simd.name()
+            ),
+        }
+    }
+    native
 }
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -91,7 +105,10 @@ fn dispatch(args: &Args) -> Result<()> {
                  speq info\n\
                  \n\
                  --threads T sizes the native kernel worker pool (0 = auto, default\n\
-                 $SPEQ_THREADS or 1); output bits are identical for every T.",
+                 $SPEQ_THREADS or 1); output bits are identical for every T.\n\
+                 --simd <auto|scalar|sse4.1|avx2|neon> forces the kernel SIMD tier\n\
+                 (default $SPEQ_SIMD or best detected); output bits are identical\n\
+                 for every tier.",
                 EXPERIMENTS.join("|")
             );
             Ok(())
@@ -167,9 +184,10 @@ fn generate(args: &Args) -> Result<()> {
     let native = native_config(args);
     let backend = load_backend_with(&source, model_name, &native)?;
     println!(
-        "model {model_name} on {} backend, {} thread(s) (source: {})",
+        "model {model_name} on {} backend, {} thread(s), simd {} (source: {})",
         backend.backend_name(),
         native.resolved_threads(),
+        native.simd.resolve().name(),
         match &source {
             ModelSource::Builtin => "builtin zoo".to_string(),
             ModelSource::Artifacts(p) => p.display().to_string(),

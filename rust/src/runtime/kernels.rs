@@ -11,29 +11,50 @@
 //! **Parallelism and determinism.**  Every kernel splits the *output
 //! column* dimension into contiguous per-shard ranges
 //! ([`pool::col_range`]) executed on a [`WorkerPool`].  A shard owns its
-//! columns outright: it zeroes them, decodes only those columns of each
-//! weight block into a private scratch tile, and accumulates in the exact
-//! ascending-`i` order of the serial loop.  Because each output element is
-//! produced by exactly one shard with an unchanged accumulation order,
-//! kernel outputs are **bitwise identical for every thread count** — the
-//! property `prop_threads.rs` and the golden harness pin.  Traffic
-//! accounting stays with the caller (one count per kernel call, never per
-//! shard — see [`super::TrafficCounters`]).
+//! columns outright: it decodes only those columns of each weight block
+//! into a private scratch tile, initializes them on the first accumulation
+//! block (`y = 0.0 + a·x`, folding the old separate zeroing pass into the
+//! first weight row), and accumulates in the exact ascending-`i` order of
+//! the serial loop.  Because each output element is produced by exactly
+//! one shard with an unchanged accumulation order, kernel outputs are
+//! **bitwise identical for every thread count** — the property
+//! `prop_threads.rs` and the golden harness pin.  Traffic accounting
+//! stays with the caller (one count per kernel call, never per shard —
+//! see [`super::TrafficCounters`]).
+//!
+//! **SIMD dispatch: SIMD decodes, scalar-order accumulates.**  Each kernel
+//! takes a [`SimdLevel`] (detected once at backend init, forced via
+//! `SPEQ_SIMD` / `--simd`).  Vector code is confined to the element-wise,
+//! order-free parts — the plane decoders (`bsfp::simd`) and the
+//! per-element `y[j] += a · x[j]` update ([`axpy_simd`], separate
+//! multiply + add, never a fused FMA) — while every output element keeps
+//! the serial ascending-`i` accumulation order.  Per-lane IEEE multiply
+//! and add round exactly like their scalar counterparts, so **every
+//! dispatch tier produces bitwise identical outputs** (pinned by
+//! `rust/tests/prop_simd.rs` and the goldens).  [`dot`] is deliberately
+//! *not* vectorized: a horizontal reduction changes the summation order
+//! and would break the bitwise contract.
 //!
 //! * [`gemm_dense`] — plain f32 weights (non-quantizable linears, the
 //!   Algorithm-1 outlier fallback, transformed-weight variants).
 //! * [`gemm_full_planes`] — decodes prefix + residual planes on the fly
 //!   ([`PlanePair::decode_row_pair_full_cols`]), one [`BLOCK_ROWS`]-row
 //!   block at a time into a scratch tile that stays cache-resident while
-//!   every batch row consumes it.
+//!   every batch row consumes it; prefetches the next block's plane bytes
+//!   during accumulation.
 //! * [`gemm_draft_prefix`] — decodes *only* the nibble-packed prefix plane
 //!   (plus Eq. 4 group scales), streaming a quarter of the full pass's
-//!   weight bytes per token.
+//!   weight bytes per token.  The per-column `scale / tensor_scale` factor
+//!   is hoisted to a once-per-scale-group row (an exact factorization —
+//!   every draft LUT entry is a power of two — so the decoded bits are
+//!   unchanged; see [`bsfp::simd::decode_draft_row_pair_scalar`]).
 //!
 //! [`pool::col_range`]: super::pool::col_range
+//! [`bsfp::simd::decode_draft_row_pair_scalar`]: crate::bsfp::simd::decode_draft_row_pair_scalar
 
 use super::pool::{col_range, SharedSlice, WorkerPool};
-use crate::bsfp::{draft_value, PlanePair, GROUP_SIZE};
+use crate::bsfp::simd::{decode_draft_row_pair, draft_lut, SimdLevel};
+use crate::bsfp::{PlanePair, GROUP_SIZE};
 
 /// Weight rows decoded per block.  Must be even (the planes pack row
 /// pairs) and divide [`GROUP_SIZE`] (so a block never straddles a scale
@@ -41,46 +62,212 @@ use crate::bsfp::{draft_value, PlanePair, GROUP_SIZE};
 /// inside L1.
 pub const BLOCK_ROWS: usize = 16;
 
+/// Scratch rows the blocked kernels need: the [`BLOCK_ROWS`] decode tile
+/// plus one extra row holding the draft kernel's hoisted
+/// `scale / tensor_scale` factors (recomputed only when the block enters a
+/// new scale group).  Callers size `scratch` as `SCRATCH_ROWS * n`.
+pub const SCRATCH_ROWS: usize = BLOCK_ROWS + 1;
+
 // Load-bearing invariant: `gemm_draft_prefix` reads one scale-group row
 // per block and the plane decoders walk row pairs — retuning BLOCK_ROWS
 // to a value violating either silently corrupts draft scales.
 const _: () = assert!(BLOCK_ROWS % 2 == 0 && GROUP_SIZE % BLOCK_ROWS == 0);
 
+/// Scalar dot product.  Deliberately not SIMD-dispatched: vectorizing a
+/// reduction reorders the partial sums, which would break the bitwise
+/// thread/SIMD invariance contract for the attention scores built on it.
 pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(&x, &y)| x * y).sum()
 }
 
-/// `y += a * x`.
+/// `y += a * x` (scalar reference; also the attention/residual update,
+/// which is not on the dispatched-kernel path).
 pub(crate) fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
     for (yi, &xi) in y.iter_mut().zip(x) {
         *yi += a * xi;
     }
 }
 
-/// The 16-entry draft dequantization LUT (`draft_value` per 4-bit code).
-pub(crate) fn draft_lut() -> [f32; 16] {
-    std::array::from_fn(|c| draft_value(c as u8))
+/// `y = 0.0 + a * x` (scalar reference): the first accumulation block,
+/// which doubles as the output zeroing.  The explicit `0.0 +` keeps the
+/// result bitwise identical to "fill with zero, then `+=`" — for
+/// `a * x = -0.0` the sum is `+0.0`, exactly what the old separate-zeroing
+/// code produced — and IEEE forbids folding `0.0 + z` to `z`, so the
+/// optimizer cannot change it.
+pub(crate) fn axpy_init(y: &mut [f32], a: f32, x: &[f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi = 0.0 + a * xi;
+    }
 }
 
-/// Decode one nibble-packed prefix row (rows `2p` / `2p+1` at the same
-/// columns) into `lo`/`hi` through the draft LUT:
-/// `draft_value(W_q) * scale / tensor_scale` — bitwise the exact sequence
-/// the retired `derive_draft` dequantization used.  Shared by the draft
-/// GEMM kernel and the cold `decode_linear` diagnostics path (which
-/// previously materialized the whole unpacked-code matrix instead).
+/// SIMD-dispatched `y += a * x`.  Per-lane multiply + add (never FMA)
+/// rounds exactly like the scalar loop, so all tiers are bitwise equal.
 #[inline]
-pub(crate) fn decode_draft_row_pair(
-    prow: &[u8],
-    srow: &[f32],
-    lut: &[f32; 16],
-    tensor_scale: f32,
-    lo: &mut [f32],
-    hi: &mut [f32],
-) {
-    debug_assert!(prow.len() == srow.len() && prow.len() == lo.len() && prow.len() == hi.len());
-    for (jj, &byte) in prow.iter().enumerate() {
-        lo[jj] = lut[(byte & 0xf) as usize] * srow[jj] / tensor_scale;
-        hi[jj] = lut[(byte >> 4) as usize] * srow[jj] / tensor_scale;
+pub(crate) fn axpy_simd(level: SimdLevel, y: &mut [f32], a: f32, x: &[f32]) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: available levels only (enforced at config resolve time).
+        SimdLevel::Avx2 => unsafe { x86::axpy_avx2(y, a, x) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::axpy_sse41(y, a, x) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::axpy_neon(y, a, x) },
+        _ => axpy(y, a, x),
+    }
+}
+
+/// SIMD-dispatched `y = 0.0 + a * x` (see [`axpy_init`]).
+#[inline]
+pub(crate) fn axpy_init_simd(level: SimdLevel, y: &mut [f32], a: f32, x: &[f32]) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: available levels only (enforced at config resolve time).
+        SimdLevel::Avx2 => unsafe { x86::axpy_init_avx2(y, a, x) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::axpy_init_sse41(y, a, x) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::axpy_init_neon(y, a, x) },
+        _ => axpy_init(y, a, x),
+    }
+}
+
+/// Software-prefetch a byte range into L1 (x86_64 only; a no-op
+/// elsewhere).  Used to pull the *next* weight block's plane bytes in
+/// while the current block's accumulation runs.
+#[inline]
+fn prefetch_bytes(data: &[u8]) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: `_mm_prefetch` is a hint over baseline SSE (always present
+    // on x86_64) and cannot fault even on a bad address; all addresses
+    // here are in-bounds anyway.
+    unsafe {
+        use core::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        let mut p = data.as_ptr();
+        let end = p.add(data.len());
+        while p < end {
+            _mm_prefetch::<_MM_HINT_T0>(p as *const i8);
+            p = p.add(64);
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = data;
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_avx2(y: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let n = y.len();
+        let av = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + 8 <= n {
+            let prod = _mm256_mul_ps(av, _mm256_loadu_ps(x.as_ptr().add(i)));
+            let sum = _mm256_add_ps(_mm256_loadu_ps(y.as_ptr().add(i)), prod);
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), sum);
+            i += 8;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_init_avx2(y: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let n = y.len();
+        let av = _mm256_set1_ps(a);
+        let zero = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let prod = _mm256_mul_ps(av, _mm256_loadu_ps(x.as_ptr().add(i)));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(zero, prod));
+            i += 8;
+        }
+        while i < n {
+            y[i] = 0.0 + a * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn axpy_sse41(y: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let n = y.len();
+        let av = _mm_set1_ps(a);
+        let mut i = 0;
+        while i + 4 <= n {
+            let prod = _mm_mul_ps(av, _mm_loadu_ps(x.as_ptr().add(i)));
+            let sum = _mm_add_ps(_mm_loadu_ps(y.as_ptr().add(i)), prod);
+            _mm_storeu_ps(y.as_mut_ptr().add(i), sum);
+            i += 4;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn axpy_init_sse41(y: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let n = y.len();
+        let av = _mm_set1_ps(a);
+        let zero = _mm_setzero_ps();
+        let mut i = 0;
+        while i + 4 <= n {
+            let prod = _mm_mul_ps(av, _mm_loadu_ps(x.as_ptr().add(i)));
+            _mm_storeu_ps(y.as_mut_ptr().add(i), _mm_add_ps(zero, prod));
+            i += 4;
+        }
+        while i < n {
+            y[i] = 0.0 + a * x[i];
+            i += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_neon(y: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let n = y.len();
+        let av = vdupq_n_f32(a);
+        let mut i = 0;
+        while i + 4 <= n {
+            let prod = vmulq_f32(av, vld1q_f32(x.as_ptr().add(i)));
+            let sum = vaddq_f32(vld1q_f32(y.as_ptr().add(i)), prod);
+            vst1q_f32(y.as_mut_ptr().add(i), sum);
+            i += 4;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_init_neon(y: &mut [f32], a: f32, x: &[f32]) {
+        debug_assert_eq!(y.len(), x.len());
+        let n = y.len();
+        let av = vdupq_n_f32(a);
+        let zero = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 4 <= n {
+            let prod = vmulq_f32(av, vld1q_f32(x.as_ptr().add(i)));
+            vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(zero, prod));
+            i += 4;
+        }
+        while i < n {
+            y[i] = 0.0 + a * x[i];
+            i += 1;
+        }
     }
 }
 
@@ -90,10 +277,11 @@ pub(crate) fn decode_draft_row_pair(
 /// row's bytes are streamed from memory exactly once per shard for the
 /// whole batch — the continuous-batching bandwidth win.  Each output
 /// element accumulates in the same `i`-ascending order as a serial batch
-/// of one, so results are bit-identical for every batch size and thread
-/// count.
+/// of one, so results are bit-identical for every batch size, thread
+/// count, and SIMD tier.
 pub fn gemm_dense(
     pool: &WorkerPool,
+    level: SimdLevel,
     xs: &[f32],
     b: usize,
     w: &[f32],
@@ -112,17 +300,28 @@ pub fn gemm_dense(
             return;
         }
         let width = j1 - j0;
-        for bi in 0..b {
-            // SAFETY: shard `s` exclusively owns columns j0..j1 of every
-            // batch row (col_range partitions 0..n disjointly).
-            unsafe { y.slice_mut(bi * n + j0, width) }.fill(0.0);
+        if k == 0 {
+            // No accumulation block will initialize the outputs.
+            for bi in 0..b {
+                // SAFETY: shard `s` exclusively owns columns j0..j1 of
+                // every batch row (col_range partitions 0..n disjointly).
+                unsafe { y.slice_mut(bi * n + j0, width) }.fill(0.0);
+            }
+            return;
         }
         for i in 0..k {
             let row = &w[i * n + j0..i * n + j1];
             for bi in 0..b {
                 let x = xs[bi * k + i];
+                // SAFETY: as above — disjoint column ranges per shard.
                 let yrow = unsafe { y.slice_mut(bi * n + j0, width) };
-                axpy(yrow, x, row);
+                if i == 0 {
+                    // First row initializes (zeroing folded into the
+                    // first accumulation — same bits as fill(0.0) + `+=`).
+                    axpy_init_simd(level, yrow, x, row);
+                } else {
+                    axpy_simd(level, yrow, x, row);
+                }
             }
         }
     });
@@ -133,12 +332,13 @@ pub fn gemm_dense(
 ///
 /// Streams prefix + residual (2 bytes per weight, the FP16 footprint) and
 /// reconstructs each shard's columns of a [`BLOCK_ROWS`]-row block into a
-/// private region of `scratch` (length >= `BLOCK_ROWS * n`) via the
-/// Fig. 5(b) decoder before accumulating.  Row order inside a block is
-/// ascending, so results are bitwise equal to [`gemm_dense`] over the
-/// decoded values.
+/// private region of `scratch` (length >= [`SCRATCH_ROWS`]` * n`) via the
+/// Fig. 5(b) decoder (SIMD-dispatched) before accumulating.  Row order
+/// inside a block is ascending, so results are bitwise equal to
+/// [`gemm_dense`] over the decoded values.
 pub fn gemm_full_planes(
     pool: &WorkerPool,
+    level: SimdLevel,
     xs: &[f32],
     b: usize,
     planes: &PlanePair,
@@ -163,8 +363,11 @@ pub fn gemm_full_planes(
         // so `BLOCK_ROWS * j0` offsets never overlap; same for the output
         // columns.
         let tile = unsafe { tiles.slice_mut(BLOCK_ROWS * j0, BLOCK_ROWS * width) };
-        for bi in 0..b {
-            unsafe { y.slice_mut(bi * n + j0, width) }.fill(0.0);
+        if k == 0 {
+            for bi in 0..b {
+                unsafe { y.slice_mut(bi * n + j0, width) }.fill(0.0);
+            }
+            return;
         }
         let mut i0 = 0;
         while i0 < k {
@@ -172,14 +375,30 @@ pub fn gemm_full_planes(
             debug_assert_eq!(rows % 2, 0, "plane row pairs require an even block");
             for r in 0..rows / 2 {
                 let (lo, hi) = tile[2 * r * width..(2 * r + 2) * width].split_at_mut(width);
-                planes.decode_row_pair_full_cols(i0 / 2 + r, j0, j1, lo, hi);
+                planes.decode_row_pair_full_cols_with(level, i0 / 2 + r, j0, j1, lo, hi);
+            }
+            // Pull the next block's plane bytes toward L1 while the
+            // accumulation below runs on the current tile.
+            if i0 + rows < k {
+                let nrows = BLOCK_ROWS.min(k - i0 - rows) / 2;
+                let np = (i0 + rows) / 2;
+                for r in 0..nrows {
+                    prefetch_bytes(&planes.prefix[(np + r) * n + j0..(np + r) * n + j1]);
+                    prefetch_bytes(
+                        &planes.residual[3 * ((np + r) * n + j0)..3 * ((np + r) * n + j1)],
+                    );
+                }
             }
             for r in 0..rows {
                 let trow = &tile[r * width..(r + 1) * width];
                 for bi in 0..b {
                     let x = xs[bi * k + i0 + r];
                     let yrow = unsafe { y.slice_mut(bi * n + j0, width) };
-                    axpy(yrow, x, trow);
+                    if i0 + r == 0 {
+                        axpy_init_simd(level, yrow, x, trow);
+                    } else {
+                        axpy_simd(level, yrow, x, trow);
+                    }
                 }
             }
             i0 += rows;
@@ -191,16 +410,20 @@ pub fn gemm_full_planes(
 /// into `ys (B, n)`.
 ///
 /// Streams only the nibble-packed prefix plane plus the Eq. 4 group
-/// scales.  Each decoded value is computed as
-/// `draft_value(W_q) * scale / tensor_scale` — bitwise the exact sequence
-/// the retired `derive_draft` dequantization used (`dequant_draft`
-/// multiplied code value by scale, then divided by the Algorithm-1
-/// tensor scale), so kernel outputs are bit-identical to the old
-/// materialized draft weights.  `tensor_scale` is 1.0 for in-domain
-/// tensors (division by 1.0 is an IEEE identity).
+/// scales.  Each decoded value is
+/// `draft_value(W_q) * (scale / tensor_scale)` with the parenthesized
+/// factor hoisted to a once-per-scale-group row kept in the extra
+/// [`SCRATCH_ROWS`] scratch row (`~GROUP_SIZE/2×` fewer divides than the
+/// old per-element divide).  The factorization is bitwise exact —
+/// `draft_value` is always a power of two, and all intermediates stay
+/// normal — so outputs remain bit-identical to the retired `derive_draft`
+/// dequantization (`dequant_draft` multiplied code value by scale, then
+/// divided by the Algorithm-1 tensor scale).  `tensor_scale` is 1.0 for
+/// in-domain tensors (division by 1.0 is an IEEE identity).
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_draft_prefix(
     pool: &WorkerPool,
+    level: SimdLevel,
     xs: &[f32],
     b: usize,
     prefix: &[u8],
@@ -213,43 +436,70 @@ pub fn gemm_draft_prefix(
 ) {
     debug_assert_eq!(xs.len(), b * k);
     debug_assert_eq!(ys.len(), b * n);
-    debug_assert!(scratch.len() >= BLOCK_ROWS * n);
+    debug_assert!(scratch.len() >= SCRATCH_ROWS * n);
     debug_assert_eq!(prefix.len(), k / 2 * n);
     debug_assert_eq!(scales.len(), k / GROUP_SIZE * n);
     debug_assert_eq!(k % GROUP_SIZE, 0);
     let lut = draft_lut();
     let t = pool.threads();
     let y = SharedSlice::new(ys);
-    let tiles = SharedSlice::new(&mut scratch[..BLOCK_ROWS * n]);
+    let tiles = SharedSlice::new(&mut scratch[..SCRATCH_ROWS * n]);
     pool.run(t, |s| {
         let (j0, j1) = col_range(n, s, t);
         if j0 == j1 {
             return;
         }
         let width = j1 - j0;
-        // SAFETY: disjoint per-shard regions, as in `gemm_full_planes`.
+        // SAFETY: disjoint per-shard regions, as in `gemm_full_planes`;
+        // the hoisted-factor row lives past the BLOCK_ROWS tiles at
+        // `BLOCK_ROWS * n + j0`, likewise partitioned by column.
         let tile = unsafe { tiles.slice_mut(BLOCK_ROWS * j0, BLOCK_ROWS * width) };
-        for bi in 0..b {
-            unsafe { y.slice_mut(bi * n + j0, width) }.fill(0.0);
+        let pre = unsafe { tiles.slice_mut(BLOCK_ROWS * n + j0, width) };
+        if k == 0 {
+            for bi in 0..b {
+                unsafe { y.slice_mut(bi * n + j0, width) }.fill(0.0);
+            }
+            return;
         }
+        let mut cur_group = usize::MAX;
         let mut i0 = 0;
         while i0 < k {
             let rows = BLOCK_ROWS.min(k - i0);
             debug_assert_eq!(rows % 2, 0);
             // BLOCK_ROWS divides GROUP_SIZE, so the whole block shares one
-            // scale-group row.
-            let srow = &scales[(i0 / GROUP_SIZE) * n + j0..(i0 / GROUP_SIZE) * n + j1];
+            // scale-group row; the hoisted factor is recomputed only when
+            // the block enters a new group.
+            let g = i0 / GROUP_SIZE;
+            if g != cur_group {
+                cur_group = g;
+                let srow = &scales[g * n + j0..g * n + j1];
+                for (p, &sv) in pre.iter_mut().zip(srow) {
+                    *p = sv / tensor_scale;
+                }
+            }
             for r in 0..rows / 2 {
                 let prow = &prefix[(i0 / 2 + r) * n + j0..(i0 / 2 + r) * n + j1];
                 let (lo, hi) = tile[2 * r * width..(2 * r + 2) * width].split_at_mut(width);
-                decode_draft_row_pair(prow, srow, &lut, tensor_scale, lo, hi);
+                decode_draft_row_pair(level, prow, pre, &lut, lo, hi);
+            }
+            // Prefetch the next block's prefix bytes during accumulation.
+            if i0 + rows < k {
+                let nrows = BLOCK_ROWS.min(k - i0 - rows) / 2;
+                let np = (i0 + rows) / 2;
+                for r in 0..nrows {
+                    prefetch_bytes(&prefix[(np + r) * n + j0..(np + r) * n + j1]);
+                }
             }
             for r in 0..rows {
                 let trow = &tile[r * width..(r + 1) * width];
                 for bi in 0..b {
                     let x = xs[bi * k + i0 + r];
                     let yrow = unsafe { y.slice_mut(bi * n + j0, width) };
-                    axpy(yrow, x, trow);
+                    if i0 + r == 0 {
+                        axpy_init_simd(level, yrow, x, trow);
+                    } else {
+                        axpy_simd(level, yrow, x, trow);
+                    }
                 }
             }
             i0 += rows;
@@ -272,22 +522,37 @@ mod tests {
         out
     }
 
-    fn run_dense(pool: &WorkerPool, xs: &[f32], b: usize, w: &[f32], k: usize, n: usize) -> Vec<f32> {
+    fn run_dense(
+        pool: &WorkerPool,
+        level: SimdLevel,
+        xs: &[f32],
+        b: usize,
+        w: &[f32],
+        k: usize,
+        n: usize,
+    ) -> Vec<f32> {
         let mut ys = vec![f32::NAN; b * n];
-        gemm_dense(pool, xs, b, w, k, n, &mut ys);
+        gemm_dense(pool, level, xs, b, w, k, n, &mut ys);
         ys
     }
 
-    fn run_full(pool: &WorkerPool, xs: &[f32], b: usize, planes: &PlanePair) -> Vec<f32> {
+    fn run_full(
+        pool: &WorkerPool,
+        level: SimdLevel,
+        xs: &[f32],
+        b: usize,
+        planes: &PlanePair,
+    ) -> Vec<f32> {
         let mut ys = vec![f32::NAN; b * planes.n];
-        let mut scratch = vec![0.0f32; BLOCK_ROWS * planes.n];
-        gemm_full_planes(pool, xs, b, planes, &mut scratch, &mut ys);
+        let mut scratch = vec![0.0f32; SCRATCH_ROWS * planes.n];
+        gemm_full_planes(pool, level, xs, b, planes, &mut scratch, &mut ys);
         ys
     }
 
     #[allow(clippy::too_many_arguments)]
     fn run_draft(
         pool: &WorkerPool,
+        level: SimdLevel,
         xs: &[f32],
         b: usize,
         prefix: &[u8],
@@ -297,8 +562,8 @@ mod tests {
         n: usize,
     ) -> Vec<f32> {
         let mut ys = vec![f32::NAN; b * n];
-        let mut scratch = vec![0.0f32; BLOCK_ROWS * n];
-        gemm_draft_prefix(pool, xs, b, prefix, scales, ts, k, n, &mut scratch, &mut ys);
+        let mut scratch = vec![0.0f32; SCRATCH_ROWS * n];
+        gemm_draft_prefix(pool, level, xs, b, prefix, scales, ts, k, n, &mut scratch, &mut ys);
         ys
     }
 
@@ -310,13 +575,15 @@ mod tests {
         let qt = quantize_tensor(&w, k, n);
         let planes = qt.planes();
         // Dense reference over the *decoded* values: same accumulation
-        // order, so bits must match exactly.
+        // order, so bits must match exactly — on every dispatch tier.
         let decoded = planes.decode_full_f32();
         let xs = batch(3, k, 11);
-        let dense = run_dense(&pool, &xs, 3, &decoded, k, n);
-        let packed = run_full(&pool, &xs, 3, &planes);
-        for (i, (d, p)) in dense.iter().zip(&packed).enumerate() {
-            assert_eq!(d.to_bits(), p.to_bits(), "flat idx {i}");
+        let dense = run_dense(&pool, SimdLevel::Scalar, &xs, 3, &decoded, k, n);
+        for level in SimdLevel::available() {
+            let packed = run_full(&pool, level, &xs, 3, &planes);
+            for (i, (d, p)) in dense.iter().zip(&packed).enumerate() {
+                assert_eq!(d.to_bits(), p.to_bits(), "{} flat idx {i}", level.name());
+            }
         }
     }
 
@@ -333,11 +600,22 @@ mod tests {
             *v /= qt.tensor_scale;
         }
         let xs = batch(2, k, 13);
-        let dense = run_dense(&pool, &xs, 2, &old, k, n);
-        let packed =
-            run_draft(&pool, &xs, 2, &qt.packed_wq(), &qt.scales, qt.tensor_scale, k, n);
-        for (i, (d, p)) in dense.iter().zip(&packed).enumerate() {
-            assert_eq!(d.to_bits(), p.to_bits(), "flat idx {i}");
+        let dense = run_dense(&pool, SimdLevel::Scalar, &xs, 2, &old, k, n);
+        for level in SimdLevel::available() {
+            let packed = run_draft(
+                &pool,
+                level,
+                &xs,
+                2,
+                &qt.packed_wq(),
+                &qt.scales,
+                qt.tensor_scale,
+                k,
+                n,
+            );
+            for (i, (d, p)) in dense.iter().zip(&packed).enumerate() {
+                assert_eq!(d.to_bits(), p.to_bits(), "{} flat idx {i}", level.name());
+            }
         }
     }
 
@@ -354,13 +632,26 @@ mod tests {
             *v /= qt.tensor_scale;
         }
         let xs = batch(1, k, 17);
-        let dense = run_dense(&pool, &xs, 1, &old, k, n);
-        let packed =
-            run_draft(&pool, &xs, 1, &qt.packed_wq(), &qt.scales, qt.tensor_scale, k, n);
-        assert_eq!(
-            dense.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
-            packed.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
-        );
+        let dense = run_dense(&pool, SimdLevel::Scalar, &xs, 1, &old, k, n);
+        for level in SimdLevel::available() {
+            let packed = run_draft(
+                &pool,
+                level,
+                &xs,
+                1,
+                &qt.packed_wq(),
+                &qt.scales,
+                qt.tensor_scale,
+                k,
+                n,
+            );
+            assert_eq!(
+                dense.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                packed.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{}",
+                level.name()
+            );
+        }
     }
 
     #[test]
@@ -371,15 +662,27 @@ mod tests {
         let qt = quantize_tensor(&w, k, n);
         let planes = qt.planes();
         let xs = batch(4, k, 23);
-        let full_b4 = run_full(&pool, &xs, 4, &planes);
-        for i in 0..4 {
-            let solo = run_full(&pool, &xs[i * k..(i + 1) * k], 1, &planes);
-            assert_eq!(
-                solo,
-                full_b4[i * n..(i + 1) * n],
-                "full kernel diverged for seq {i}"
-            );
+        for level in SimdLevel::available() {
+            let full_b4 = run_full(&pool, level, &xs, 4, &planes);
+            for i in 0..4 {
+                let solo = run_full(&pool, level, &xs[i * k..(i + 1) * k], 1, &planes);
+                assert_eq!(
+                    solo,
+                    full_b4[i * n..(i + 1) * n],
+                    "{}: full kernel diverged for seq {i}",
+                    level.name()
+                );
+            }
         }
+    }
+
+    #[test]
+    fn zero_k_dense_still_zeroes_output() {
+        // With the zeroing folded into the first accumulation block, an
+        // empty in-dimension must still initialize the outputs.
+        let pool = WorkerPool::new(2);
+        let out = run_dense(&pool, SimdLevel::Scalar, &[], 2, &[], 0, 5);
+        assert_eq!(out, vec![0.0f32; 10]);
     }
 
     #[test]
@@ -388,22 +691,33 @@ mod tests {
         // bits equal the serial (T=1) bits — including odd column counts
         // that leave some shards wider than others or empty.
         let (k, b) = (128usize, 3usize);
+        let best = SimdLevel::detect();
         for n in [1usize, 7, 24, 33] {
             let w = Rng::seed_from_u64(41).uniform_vec(k * n, 0.35);
             let qt = quantize_tensor(&w, k, n);
             let planes = qt.planes();
             let xs = batch(b, k, 43);
             let serial = WorkerPool::new(1);
-            let dense1 = run_dense(&serial, &xs, b, &w, k, n);
-            let full1 = run_full(&serial, &xs, b, &planes);
-            let draft1 =
-                run_draft(&serial, &xs, b, &qt.packed_wq(), &qt.scales, qt.tensor_scale, k, n);
+            let dense1 = run_dense(&serial, best, &xs, b, &w, k, n);
+            let full1 = run_full(&serial, best, &xs, b, &planes);
+            let draft1 = run_draft(
+                &serial,
+                best,
+                &xs,
+                b,
+                &qt.packed_wq(),
+                &qt.scales,
+                qt.tensor_scale,
+                k,
+                n,
+            );
             for t in [2usize, 3, 4, 8] {
                 let pool = WorkerPool::new(t);
-                let dense_t = run_dense(&pool, &xs, b, &w, k, n);
-                let full_t = run_full(&pool, &xs, b, &planes);
+                let dense_t = run_dense(&pool, best, &xs, b, &w, k, n);
+                let full_t = run_full(&pool, best, &xs, b, &planes);
                 let draft_t = run_draft(
                     &pool,
+                    best,
                     &xs,
                     b,
                     &qt.packed_wq(),

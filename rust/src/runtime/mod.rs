@@ -16,8 +16,12 @@
 //!   planes on the fly: the draft kernel streams only the prefix plane
 //!   (quarter traffic), the full/verify kernel streams both planes, and
 //!   all kernels share one accumulation order (bit-identity across paths).
-//!   Kernels take flat strided batches and shard the output-column
-//!   dimension across the worker pool.
+//!   Kernels take flat strided batches, shard the output-column dimension
+//!   across the worker pool, and run their decoders/updates through
+//!   runtime-dispatched SIMD tiers ([`SimdLevel`]: AVX2/SSE4.1 on x86_64,
+//!   NEON on aarch64, scalar reference everywhere; `SPEQ_SIMD` /
+//!   `--simd` force a tier).  SIMD is element-wise only — accumulation
+//!   order never changes, so every tier is bitwise identical.
 //! * [`pool`] — the std-only persistent [`WorkerPool`] behind the
 //!   parallel kernels: static job assignment, contiguous column shards,
 //!   and a determinism contract that makes results bitwise identical for
@@ -40,6 +44,7 @@ pub use backend::{
 pub use native::{
     builtin_config, builtin_model_names, InitStyle, NativeBackend, NativeConfig, S_SLOTS,
 };
+pub use crate::bsfp::SimdLevel;
 pub use pool::WorkerPool;
 
 #[cfg(feature = "pjrt")]

@@ -68,13 +68,13 @@ use super::backend::{
     TrafficSnapshot, VerifyOutput,
 };
 use super::kernels::{
-    axpy, decode_draft_row_pair, dot, draft_lut, gemm_dense, gemm_draft_prefix,
-    gemm_full_planes, BLOCK_ROWS,
+    axpy, dot, gemm_dense, gemm_draft_prefix, gemm_full_planes, SCRATCH_ROWS,
 };
 use super::pool::{SharedSlice, WorkerPool};
+use crate::bsfp::simd::{decode_draft_row_pair, draft_lut};
 use crate::bsfp::{
     f16_bits_to_f32, f32_to_f16_bits, fp16_exact_in_domain, quantize_tensor, PlanePair,
-    GROUP_SIZE,
+    SimdLevel, GROUP_SIZE,
 };
 use crate::model::{load_weights, HostWeights, Manifest, ModelConfig};
 use crate::util::rng::Rng;
@@ -116,23 +116,37 @@ pub struct NativeConfig {
     /// the column-sharded kernels keep every output element's accumulation
     /// order thread-count invariant.
     pub threads: usize,
+    /// SIMD dispatch tier for the plane decoders and kernel updates
+    /// (`SPEQ_SIMD` env var / `--simd` CLI knob; defaults to the best
+    /// tier this host supports).  Also purely a wall-clock knob: every
+    /// tier produces bitwise identical results (`bsfp::simd`).
+    pub simd: SimdLevel,
 }
 
 impl Default for NativeConfig {
-    /// `SPEQ_THREADS` when set (`0` = auto-detect), else 1 (serial).
+    /// `SPEQ_THREADS` when set (`0` = auto-detect), else 1 (serial);
+    /// `SPEQ_SIMD` when set, else the best detected tier.
     fn default() -> Self {
         let threads = std::env::var("SPEQ_THREADS")
             .ok()
             .and_then(|v| v.trim().parse().ok())
             .unwrap_or(1);
-        Self { threads }
+        Self { threads, simd: SimdLevel::from_env() }
     }
 }
 
 impl NativeConfig {
-    /// A config with an explicit pool width (`0` = auto-detect).
+    /// A config with an explicit pool width (`0` = auto-detect); the SIMD
+    /// tier still comes from `SPEQ_SIMD` / detection.
     pub fn with_threads(threads: usize) -> Self {
-        Self { threads }
+        Self { threads, ..Self::default() }
+    }
+
+    /// Builder-style SIMD tier override (clamped to this host's support
+    /// at backend construction).
+    pub fn with_simd(mut self, simd: SimdLevel) -> Self {
+        self.simd = simd;
+        self
     }
 
     /// The pool width this config resolves to (`0` -> core count).
@@ -178,7 +192,8 @@ struct Workspace {
     scores: Vec<f32>,
     /// Output logits, `B x vocab`.
     logits: Vec<f32>,
-    /// Kernel decode tiles, `BLOCK_ROWS x max(d, d_ff, vocab)`.
+    /// Kernel decode tiles plus the draft kernel's hoisted-factor row,
+    /// `SCRATCH_ROWS x max(d, d_ff, vocab)`.
     scratch: Vec<f32>,
     /// Buffer growth events since construction (warm-up counter).
     growths: u64,
@@ -222,7 +237,7 @@ impl Workspace {
         self.up.resize(b * c.d_ff, 0.0);
         self.scores.resize(b * c.n_heads * c.cache_len, 0.0);
         self.logits.resize(b * c.vocab, 0.0);
-        self.scratch.resize(BLOCK_ROWS * n_max, 0.0);
+        self.scratch.resize(SCRATCH_ROWS * n_max, 0.0);
         self.cap_b = b;
         self.growths += 1;
     }
@@ -271,6 +286,9 @@ pub struct NativeBackend {
     arena: SlotArena,
     /// Persistent worker pool the column-sharded kernels run on.
     pool: WorkerPool,
+    /// SIMD dispatch tier the kernels decode with (resolved once at
+    /// construction; always a level this host supports).
+    simd: SimdLevel,
     /// Reusable flat activation buffers (one in-flight step at a time;
     /// the mutex keeps the backend `Sync` and is uncontended in practice).
     workspace: Mutex<Workspace>,
@@ -408,6 +426,7 @@ impl NativeBackend {
             layer_names,
             arena: SlotArena::new(),
             pool: WorkerPool::new(native.resolved_threads()),
+            simd: native.simd.resolve(),
             workspace: Mutex::new(Workspace::new()),
         })
     }
@@ -424,6 +443,18 @@ impl NativeBackend {
     /// Current worker-pool width (caller thread included).
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// The SIMD dispatch tier the kernels run at.  Results are
+    /// bit-identical for every tier — this is purely a wall-clock knob.
+    pub fn simd_level(&self) -> SimdLevel {
+        self.simd
+    }
+
+    /// Force a SIMD tier (clamped to this host's support); tests and the
+    /// scalar-baseline bench comparison use this.
+    pub fn set_simd(&mut self, level: SimdLevel) {
+        self.simd = level.resolve();
     }
 
     /// Workspace buffer-growth events so far.  Growth happens only while
@@ -556,6 +587,7 @@ impl NativeBackend {
                         .add_bytes(kind, (planes.prefix_bytes() + scales.len() * 4) as u64);
                     gemm_draft_prefix(
                         &self.pool,
+                        self.simd,
                         xs,
                         b,
                         &planes.prefix,
@@ -568,7 +600,7 @@ impl NativeBackend {
                     )
                 } else {
                     self.traffic.add_bytes(kind, planes.full_bytes() as u64);
-                    gemm_full_planes(&self.pool, xs, b, planes, scratch, out)
+                    gemm_full_planes(&self.pool, self.simd, xs, b, planes, scratch, out)
                 }
             }
             Some(LinearStore::Split { prefix, scales, tensor_scale }) => {
@@ -577,6 +609,7 @@ impl NativeBackend {
                         .add_bytes(kind, (prefix.len() + scales.len() * 4 + 4) as u64);
                     gemm_draft_prefix(
                         &self.pool,
+                        self.simd,
                         xs,
                         b,
                         prefix,
@@ -589,12 +622,12 @@ impl NativeBackend {
                     )
                 } else {
                     self.traffic.add_bytes(kind, (k * n * 4) as u64);
-                    gemm_dense(&self.pool, xs, b, self.weights.f32(name), k, n, out)
+                    gemm_dense(&self.pool, self.simd, xs, b, self.weights.f32(name), k, n, out)
                 }
             }
             None => {
                 self.traffic.add_bytes(kind, (k * n * 4) as u64);
-                gemm_dense(&self.pool, xs, b, self.weights.f32(name), k, n, out)
+                gemm_dense(&self.pool, self.simd, xs, b, self.weights.f32(name), k, n, out)
             }
         }
     }
@@ -620,15 +653,24 @@ impl NativeBackend {
         // Stream the nibble-packed prefix plane row-pair-wise through the
         // kernels' shared LUT path — no O(k*n) unpacked-code temporary.
         // Row pairs (2p, 2p+1) share a scale-group row (GROUP_SIZE is
-        // even), exactly as the draft GEMM kernel reads them.
+        // even), and the `scale / tensor_scale` factor is hoisted to a
+        // once-per-group row, exactly as the draft GEMM kernel does.
         let decode_draft_plane = |prefix: &[u8], scales: &[f32], tensor_scale: f32| -> Vec<f32> {
             let lut = draft_lut();
             let mut out = vec![0.0f32; k * n];
+            let mut pre = vec![0.0f32; n];
+            let mut cur_group = usize::MAX;
             for p in 0..k / 2 {
+                let g = 2 * p / GROUP_SIZE;
+                if g != cur_group {
+                    cur_group = g;
+                    for (pv, &sv) in pre.iter_mut().zip(&scales[g * n..(g + 1) * n]) {
+                        *pv = sv / tensor_scale;
+                    }
+                }
                 let prow = &prefix[p * n..(p + 1) * n];
-                let srow = &scales[(2 * p / GROUP_SIZE) * n..(2 * p / GROUP_SIZE + 1) * n];
                 let (lo, hi) = out[2 * p * n..(2 * p + 2) * n].split_at_mut(n);
-                decode_draft_row_pair(prow, srow, &lut, tensor_scale, lo, hi);
+                decode_draft_row_pair(self.simd, prow, &pre, &lut, lo, hi);
             }
             out
         };
@@ -1098,14 +1140,15 @@ impl Backend for NativeBackend {
             weights.bits.insert(name.clone(), new.iter().map(|&v| f32_to_f16_bits(v)).collect());
             weights.f32s.insert(name.clone(), new);
         }
-        // The transformed clone inherits this backend's pool width (the
-        // perplexity harness compares variants under one runtime config).
+        // The transformed clone inherits this backend's pool width and
+        // SIMD tier (the perplexity harness compares variants under one
+        // runtime config).
         let b = NativeBackend::from_weights_with(
             self.config.clone(),
             self.linears.clone(),
             weights,
             self.slots,
-            &NativeConfig::with_threads(self.pool.threads()),
+            &NativeConfig::with_threads(self.pool.threads()).with_simd(self.simd),
         )?;
         Ok(Box::new(b))
     }
@@ -1558,6 +1601,54 @@ mod tests {
                 ver_t.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
                 ver.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
                 "verify logits diverged at T={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn simd_level_never_changes_output_bits() {
+        // Backend-level pin of the "SIMD decodes, scalar-order
+        // accumulates" contract: prefill, full/draft decode, and verify
+        // logits are bit-identical on every dispatch tier this host
+        // supports (the kernel-level sweep lives in
+        // rust/tests/prop_simd.rs).
+        let mk = |level: SimdLevel| {
+            let mut b =
+                NativeBackend::synthetic(tiny_cfg(), 5, 9, InitStyle::Confident).unwrap();
+            b.set_simd(level);
+            b.set_threads(2);
+            b
+        };
+        let base = mk(SimdLevel::Scalar);
+        assert_eq!(base.simd_level(), SimdLevel::Scalar);
+        let toks = vec![5i32; base.prefill_len()];
+        let pre = base.prefill(&toks, 6).unwrap();
+        let draft = base.decode_draft(1, 6, pre.state).unwrap();
+        let vtokens: Vec<i32> = (0..base.slots() as i32).collect();
+        let ver = base.verify(&vtokens, 7, draft.state).unwrap();
+        for level in SimdLevel::available() {
+            let b = mk(level);
+            assert_eq!(b.simd_level(), level);
+            let pre_l = b.prefill(&toks, 6).unwrap();
+            assert_eq!(
+                pre_l.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                pre.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "prefill logits diverged at {}",
+                level.name()
+            );
+            let draft_l = b.decode_draft(1, 6, pre_l.state).unwrap();
+            assert_eq!(
+                draft_l.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                draft.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "draft logits diverged at {}",
+                level.name()
+            );
+            let ver_l = b.verify(&vtokens, 7, draft_l.state).unwrap();
+            assert_eq!(
+                ver_l.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                ver.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "verify logits diverged at {}",
+                level.name()
             );
         }
     }

@@ -3,6 +3,12 @@
 //! Exact `f16 -> f32` widening and round-to-nearest-even `f32 -> f16`
 //! narrowing, matching numpy's behaviour bit-for-bit (cross-checked by the
 //! exhaustive round-trip test below and by the Python-emitted goldens).
+//!
+//! The vectorized plane decoders (`bsfp::simd`) widen halves with a
+//! branch-free magnitude-shift construction instead of this function's
+//! renormalization loop; the two are exhaustively pinned bitwise-equal
+//! over the BSFP domain (`exp <= 15`, subnormals included) by the simd
+//! module's tests.
 
 /// Widen an FP16 bit pattern to f32 (exact).
 pub fn f16_to_f32(bits: u16) -> f32 {

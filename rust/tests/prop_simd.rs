@@ -1,0 +1,333 @@
+//! SIMD-dispatch property suite: every dispatch tier must be bitwise
+//! identical to the scalar reference — for the raw plane decoders, for
+//! all three GEMM kernels, across thread counts, and end-to-end through
+//! the native backend.
+//!
+//! Why this holds: SIMD is confined to element-wise, order-free work (the
+//! plane decoders and the per-element `y += a·x` update, separate
+//! multiply + add, never FMA), while every output element keeps the
+//! serial ascending-index accumulation order.  Per-lane IEEE multiply and
+//! add round exactly like their scalar counterparts, so a vector tier can
+//! only move the *same* operations onto wider registers — never change a
+//! single f32 result.  The widths below deliberately straddle the vector
+//! lane counts (1, lane-1, lane, lane+1, odd primes) so both the vector
+//! body and the scalar tail of every path are exercised.
+
+use speq::bsfp::simd::{
+    decode_draft_row_pair, decode_draft_row_pair_scalar, decode_full_row_pair,
+    decode_full_row_pair_scalar, draft_lut,
+};
+use speq::bsfp::{quantize_tensor, PlanePair, SimdLevel, GROUP_SIZE};
+use speq::runtime::kernels::{gemm_dense, gemm_draft_prefix, gemm_full_planes, SCRATCH_ROWS};
+use speq::model::SamplingParams;
+use speq::runtime::{NativeBackend, WorkerPool};
+use speq::specdec::{Engine, SpecConfig};
+use speq::util::rng::Rng;
+
+/// Widths straddling every tier's lane count (AVX2 = 8, SSE/NEON = 4),
+/// plus odd primes that leave ragged scalar tails.
+const WIDTHS: [usize; 12] = [1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 37];
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}: idx {i} ({g:?} vs {w:?})");
+    }
+}
+
+#[test]
+fn dispatch_vocabulary_is_sane() {
+    let avail = SimdLevel::available();
+    assert_eq!(avail[0], SimdLevel::Scalar, "scalar must always be available");
+    assert_eq!(*avail.last().unwrap(), SimdLevel::detect(), "detect() is the best tier");
+    for level in &avail {
+        assert!(level.is_available());
+        assert_eq!(SimdLevel::parse(level.name()), Some(*level), "name/parse roundtrip");
+        assert_eq!(level.resolve(), *level, "available levels resolve to themselves");
+    }
+    assert_eq!(SimdLevel::parse("auto"), Some(SimdLevel::detect()));
+    assert_eq!(SimdLevel::parse(""), Some(SimdLevel::detect()));
+    assert_eq!(SimdLevel::parse("AVX2"), Some(SimdLevel::Avx2), "parse is case-insensitive");
+    assert_eq!(SimdLevel::parse("bogus"), None);
+}
+
+/// Raw full-plane decoder: every tier == scalar, bitwise, over widths
+/// that straddle the lane counts and over *all* 4-bit codes (the dense
+/// sweep covers all 256 prefix bytes x assorted residual bits).
+#[test]
+fn full_decoder_matches_scalar_bitwise() {
+    let mut rng = Rng::seed_from_u64(0xf00d);
+    for &n in &WIDTHS {
+        for round in 0..8u64 {
+            let prow: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+            let rrow: Vec<u8> = (0..3 * n).map(|_| rng.next_u32() as u8).collect();
+            let mut lo_s = vec![0.0f32; n];
+            let mut hi_s = vec![0.0f32; n];
+            decode_full_row_pair_scalar(&prow, &rrow, &mut lo_s, &mut hi_s);
+            for level in SimdLevel::available() {
+                let mut lo = vec![f32::NAN; n];
+                let mut hi = vec![f32::NAN; n];
+                decode_full_row_pair(level, &prow, &rrow, &mut lo, &mut hi);
+                let what = format!("full n={n} round={round} {}", level.name());
+                assert_bits_eq(&lo, &lo_s, &what);
+                assert_bits_eq(&hi, &hi_s, &what);
+            }
+        }
+    }
+    // Dense sweep: all 256 prefix bytes x a stride of residual patterns
+    // (covers every code/flag/e0 mux arm, subnormal and zero mantissas).
+    let n = 256;
+    for seed in 0..4u64 {
+        let prow: Vec<u8> = (0..n).map(|j| j as u8).collect();
+        let rrow: Vec<u8> = (0..3 * n).map(|j| (j as u64 * (2 * seed + 7) + seed) as u8).collect();
+        let mut lo_s = vec![0.0f32; n];
+        let mut hi_s = vec![0.0f32; n];
+        decode_full_row_pair_scalar(&prow, &rrow, &mut lo_s, &mut hi_s);
+        for level in SimdLevel::available() {
+            let mut lo = vec![f32::NAN; n];
+            let mut hi = vec![f32::NAN; n];
+            decode_full_row_pair(level, &prow, &rrow, &mut lo, &mut hi);
+            let what = format!("full dense seed={seed} {}", level.name());
+            assert_bits_eq(&lo, &lo_s, &what);
+            assert_bits_eq(&hi, &hi_s, &what);
+        }
+    }
+}
+
+/// Raw draft decoder: every tier == scalar, bitwise, including hoisted
+/// factors of exactly 0.0, negative, tiny (denormal-adjacent), and the
+/// outlier `tensor_scale` regime (factor > 1).
+#[test]
+fn draft_decoder_matches_scalar_bitwise() {
+    let lut = draft_lut();
+    let mut rng = Rng::seed_from_u64(0xbeef);
+    let factors = [1.0f32, 0.0, -0.37, 1e-20, 3.5e4, 0.73 / 0.9995];
+    for &n in &WIDTHS {
+        for (fi, &f) in factors.iter().enumerate() {
+            let prow: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+            let mut pre: Vec<f32> = (0..n).map(|_| rng.gen_f32() * 0.5).collect();
+            pre[0] = f; // pin the edge factor somewhere in every width
+            let mut lo_s = vec![0.0f32; n];
+            let mut hi_s = vec![0.0f32; n];
+            decode_draft_row_pair_scalar(&prow, &pre, &lut, &mut lo_s, &mut hi_s);
+            for level in SimdLevel::available() {
+                let mut lo = vec![f32::NAN; n];
+                let mut hi = vec![f32::NAN; n];
+                decode_draft_row_pair(level, &prow, &pre, &lut, &mut lo, &mut hi);
+                let what = format!("draft n={n} factor#{fi} {}", level.name());
+                assert_bits_eq(&lo, &lo_s, &what);
+                assert_bits_eq(&hi, &hi_s, &what);
+            }
+        }
+    }
+    // Dense byte sweep: all 256 nibble-pair bytes at once.
+    let n = 256;
+    let prow: Vec<u8> = (0..n).map(|j| j as u8).collect();
+    let pre: Vec<f32> = (0..n).map(|j| (j as f32 - 77.0) * 0.013).collect();
+    let mut lo_s = vec![0.0f32; n];
+    let mut hi_s = vec![0.0f32; n];
+    decode_draft_row_pair_scalar(&prow, &pre, &lut, &mut lo_s, &mut hi_s);
+    for level in SimdLevel::available() {
+        let mut lo = vec![f32::NAN; n];
+        let mut hi = vec![f32::NAN; n];
+        decode_draft_row_pair(level, &prow, &pre, &lut, &mut lo, &mut hi);
+        let what = format!("draft dense {}", level.name());
+        assert_bits_eq(&lo, &lo_s, &what);
+        assert_bits_eq(&hi, &hi_s, &what);
+    }
+}
+
+fn batch(b: usize, k: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut out = Vec::with_capacity(b * k);
+    for _ in 0..b {
+        out.extend(rng.normal_vec(k, 1.0));
+    }
+    out
+}
+
+/// All three GEMM kernels: every (tier, thread count, batch) combination
+/// produces the scalar/serial bits, over awkward column counts.
+#[test]
+fn gemm_kernels_match_scalar_across_tiers_and_threads() {
+    let k = 2 * GROUP_SIZE; // two scale groups
+    for &n in &[1usize, 5, 8, 17, 37] {
+        let w = Rng::seed_from_u64(100 + n as u64).uniform_vec(k * n, 0.3);
+        let qt = quantize_tensor(&w, k, n);
+        let planes = qt.planes();
+        let prefix = qt.packed_wq();
+        for b in [1usize, 3] {
+            let xs = batch(b, k, 200 + n as u64);
+            let serial = WorkerPool::new(1);
+            let mut dense_ref = vec![f32::NAN; b * n];
+            gemm_dense(&serial, SimdLevel::Scalar, &xs, b, &w, k, n, &mut dense_ref);
+            let mut full_ref = vec![f32::NAN; b * n];
+            let mut scratch = vec![0.0f32; SCRATCH_ROWS * n];
+            gemm_full_planes(&serial, SimdLevel::Scalar, &xs, b, &planes, &mut scratch, &mut full_ref);
+            let mut draft_ref = vec![f32::NAN; b * n];
+            gemm_draft_prefix(
+                &serial,
+                SimdLevel::Scalar,
+                &xs,
+                b,
+                &prefix,
+                &qt.scales,
+                qt.tensor_scale,
+                k,
+                n,
+                &mut scratch,
+                &mut draft_ref,
+            );
+            for level in SimdLevel::available() {
+                for t in [1usize, 2, 4] {
+                    let pool = WorkerPool::new(t);
+                    let what = format!("n={n} b={b} T={t} {}", level.name());
+                    let mut ys = vec![f32::NAN; b * n];
+                    gemm_dense(&pool, level, &xs, b, &w, k, n, &mut ys);
+                    assert_bits_eq(&ys, &dense_ref, &format!("dense {what}"));
+                    let mut ys = vec![f32::NAN; b * n];
+                    gemm_full_planes(&pool, level, &xs, b, &planes, &mut scratch, &mut ys);
+                    assert_bits_eq(&ys, &full_ref, &format!("full {what}"));
+                    let mut ys = vec![f32::NAN; b * n];
+                    gemm_draft_prefix(
+                        &pool,
+                        level,
+                        &xs,
+                        b,
+                        &prefix,
+                        &qt.scales,
+                        qt.tensor_scale,
+                        k,
+                        n,
+                        &mut scratch,
+                        &mut ys,
+                    );
+                    assert_bits_eq(&ys, &draft_ref, &format!("draft {what}"));
+                }
+            }
+        }
+    }
+}
+
+/// The outlier regime (Algorithm-1 pre-scale active, `tensor_scale < 1`)
+/// through the draft kernel, bitwise across tiers.
+#[test]
+fn outlier_tensor_scale_is_tier_invariant() {
+    let (k, n) = (GROUP_SIZE, 13usize);
+    let mut w = Rng::seed_from_u64(55).uniform_vec(k * n, 0.2);
+    w[3] = 2.75; // forces the pre-scale
+    let qt = quantize_tensor(&w, k, n);
+    assert!(qt.tensor_scale < 1.0, "outlier must trigger Algorithm 1");
+    let xs = batch(2, k, 56);
+    let pool = WorkerPool::new(2);
+    let prefix = qt.packed_wq();
+    let mut scratch = vec![0.0f32; SCRATCH_ROWS * n];
+    let mut reference = vec![f32::NAN; 2 * n];
+    gemm_draft_prefix(
+        &pool,
+        SimdLevel::Scalar,
+        &xs,
+        2,
+        &prefix,
+        &qt.scales,
+        qt.tensor_scale,
+        k,
+        n,
+        &mut scratch,
+        &mut reference,
+    );
+    for level in SimdLevel::available() {
+        let mut ys = vec![f32::NAN; 2 * n];
+        gemm_draft_prefix(
+            &pool,
+            level,
+            &xs,
+            2,
+            &prefix,
+            &qt.scales,
+            qt.tensor_scale,
+            k,
+            n,
+            &mut scratch,
+            &mut ys,
+        );
+        assert_bits_eq(&ys, &reference, &format!("outlier draft {}", level.name()));
+    }
+}
+
+/// Non-finite weights take the dense fallback path (they are outside the
+/// quantizable FP16 domain); the dense kernel must stay tier-invariant
+/// even with inf/NaN in the stream — vector multiply/add follows the same
+/// IEEE propagation rules as scalar, in the same order.
+#[test]
+fn non_finite_dense_fallback_is_tier_invariant() {
+    let (k, n) = (32usize, 17usize);
+    let mut w = Rng::seed_from_u64(77).uniform_vec(k * n, 0.4);
+    w[5] = f32::INFINITY;
+    w[n + 2] = f32::NEG_INFINITY;
+    w[2 * n + 9] = f32::NAN;
+    assert!(!speq::bsfp::fp16_exact_in_domain(&w), "must be outside the BSFP domain");
+    // Strictly nonzero activations: keeps inf columns at inf (0 * inf
+    // would make NaNs where the reference has them too, but nonzero is
+    // the clearer pin).
+    let xs: Vec<f32> = (0..2 * k).map(|i| 0.25 + (i as f32) * 0.01).collect();
+    let pool = WorkerPool::new(2);
+    let mut reference = vec![f32::NAN; 2 * n];
+    gemm_dense(&pool, SimdLevel::Scalar, &xs, 2, &w, k, n, &mut reference);
+    assert!(reference.iter().any(|v| !v.is_finite()), "non-finiteness must propagate");
+    for level in SimdLevel::available() {
+        let mut ys = vec![0.0f32; 2 * n];
+        gemm_dense(&pool, level, &xs, 2, &w, k, n, &mut ys);
+        assert_bits_eq(&ys, &reference, &format!("non-finite dense {}", level.name()));
+    }
+}
+
+/// A degenerate-width pool (more threads than columns) leaves some shards
+/// empty; every tier must still produce the serial bits.
+#[test]
+fn more_threads_than_columns_is_tier_invariant() {
+    let (k, n) = (GROUP_SIZE, 3usize);
+    let w = Rng::seed_from_u64(91).uniform_vec(k * n, 0.3);
+    let qt = quantize_tensor(&w, k, n);
+    let planes = qt.planes();
+    let xs = batch(1, k, 92);
+    let serial = WorkerPool::new(1);
+    let wide = WorkerPool::new(8);
+    let mut scratch = vec![0.0f32; SCRATCH_ROWS * n];
+    let mut reference = vec![f32::NAN; n];
+    gemm_full_planes(&serial, SimdLevel::Scalar, &xs, 1, &planes, &mut scratch, &mut reference);
+    for level in SimdLevel::available() {
+        let mut ys = vec![f32::NAN; n];
+        gemm_full_planes(&wide, level, &xs, 1, &planes, &mut scratch, &mut ys);
+        assert_bits_eq(&ys, &reference, &format!("narrow-n full {}", level.name()));
+    }
+}
+
+/// End-to-end: generated token streams are byte-identical for every
+/// dispatch tier (speculative and autoregressive, through the full
+/// backend: attention, norms, sampling — everything).
+#[test]
+fn generated_tokens_are_tier_invariant() {
+    const PROMPT: &[u8] = b"Q: ada has 3 apples and finds 4 more. how many apples now?\nA: ";
+    let cfg = SpecConfig { max_draft: 8, gen_len: 24, ..Default::default() };
+    let run = |level: SimdLevel| {
+        let mut b = NativeBackend::builtin("vicuna-7b-tiny").expect("builtin model");
+        b.set_simd(level);
+        b.set_threads(2);
+        assert_eq!(b.simd_level(), level);
+        let engine = Engine::new(&b);
+        let spec = engine.generate_spec(PROMPT, &cfg).expect("spec").tokens;
+        let ar = engine
+            .generate_ar(PROMPT, cfg.gen_len, SamplingParams::greedy())
+            .expect("ar")
+            .tokens;
+        (spec, ar)
+    };
+    let (spec_ref, ar_ref) = run(SimdLevel::Scalar);
+    assert_eq!(spec_ref, ar_ref, "greedy spec != AR at scalar");
+    for level in SimdLevel::available() {
+        let (spec, ar) = run(level);
+        assert_eq!(spec, spec_ref, "spec tokens diverged at {}", level.name());
+        assert_eq!(ar, ar_ref, "AR tokens diverged at {}", level.name());
+    }
+}
