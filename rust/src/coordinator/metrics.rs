@@ -5,7 +5,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::runtime::TrafficSnapshot;
+use crate::runtime::{KvStats, TrafficSnapshot};
 
 /// Latency reservoirs keep at most this many samples — a sliding window
 /// over the most recent completions — so a long-running server's snapshot
@@ -46,6 +46,10 @@ pub struct Metrics {
     /// Accumulated weight traffic drained from the backends after each
     /// scheduler engine step (the quarter-to-all accounting).
     traffic: Mutex<TrafficSnapshot>,
+    /// Latest paged-KV occupancy/sharing snapshot from the full backend
+    /// (point-in-time gauges plus monotonic prefix-cache counters; the
+    /// scheduler refreshes it wholesale after every engine step).
+    kv: Mutex<KvStats>,
     started: Instant,
 }
 
@@ -78,6 +82,20 @@ pub struct MetricsSnapshot {
     pub bytes_per_token_full: f64,
     /// The measured quarter-to-all ratio (draft / full bytes per token).
     pub draft_traffic_ratio: f64,
+    /// Raw paged-KV snapshot (zeros on backends without paging).
+    pub kv: KvStats,
+    /// KV pages currently allocated to live sequences or the prefix tree.
+    pub kv_pages_allocated: u64,
+    /// KV pages mapped by more than one owner (prefix sharing in effect).
+    pub kv_pages_shared: u64,
+    /// Pages copied on write into a shared page (monotonic).
+    pub kv_cow_copies: u64,
+    /// Prompt tokens served from the prefix cache instead of recomputed.
+    pub prefix_cache_hit_tokens: u64,
+    /// Prompt tokens that missed the prefix cache and ran the full pass.
+    pub prefix_cache_miss_tokens: u64,
+    /// Hit fraction over all prefill tokens (0 when nothing prefilled).
+    pub prefix_cache_hit_rate: f64,
 }
 
 impl Metrics {
@@ -95,6 +113,7 @@ impl Metrics {
             exec_us: Mutex::new(Vec::new()),
             batch_occupancy: Mutex::new(Vec::new()),
             traffic: Mutex::new(TrafficSnapshot::default()),
+            kv: Mutex::new(KvStats::default()),
             started: Instant::now(),
         }
     }
@@ -104,6 +123,13 @@ impl Metrics {
     /// step and reports the delta here).
     pub fn record_traffic(&self, delta: &TrafficSnapshot) {
         self.traffic.lock().unwrap().merge(delta);
+    }
+
+    /// Replace the stored paged-KV snapshot with the backend's latest.
+    /// Unlike traffic deltas this is not merged: `KvStats` is already a
+    /// point-in-time view (gauges) carrying its own monotonic counters.
+    pub fn record_kv(&self, stats: &KvStats) {
+        *self.kv.lock().unwrap() = *stats;
     }
 
     pub fn record_completion(&self, tokens: u64, drafts: u64, verifies: u64, latency_s: f64, exec_s: f64) {
@@ -141,6 +167,8 @@ impl Metrics {
             self.exec_us.lock().unwrap().iter().map(|&v| v as f64).collect();
         let occupancy = self.batch_occupancy.lock().unwrap().clone();
         let traffic = *self.traffic.lock().unwrap();
+        let kv = *self.kv.lock().unwrap();
+        let prefill_tokens = kv.prefix_hit_tokens + kv.prefix_miss_tokens;
         let steps: u64 = occupancy.iter().sum();
         let weighted: u64 = occupancy.iter().enumerate().map(|(b, &n)| b as u64 * n).sum();
         let tokens = self.tokens_generated.load(Ordering::Relaxed);
@@ -165,6 +193,17 @@ impl Metrics {
             bytes_per_token_draft: traffic.draft_bytes_per_token(),
             bytes_per_token_full: traffic.full_bytes_per_token(),
             draft_traffic_ratio: traffic.draft_full_ratio(),
+            kv,
+            kv_pages_allocated: kv.pages_in_use,
+            kv_pages_shared: kv.pages_shared,
+            kv_cow_copies: kv.cow_copies,
+            prefix_cache_hit_tokens: kv.prefix_hit_tokens,
+            prefix_cache_miss_tokens: kv.prefix_miss_tokens,
+            prefix_cache_hit_rate: if prefill_tokens > 0 {
+                kv.prefix_hit_tokens as f64 / prefill_tokens as f64
+            } else {
+                0.0
+            },
         }
     }
 }
@@ -277,6 +316,41 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert!(s.traffic.is_empty());
         assert_eq!(s.draft_traffic_ratio, 0.0);
+    }
+
+    #[test]
+    fn kv_snapshot_is_replaced_not_merged() {
+        let m = Metrics::new();
+        m.record_kv(&KvStats {
+            pages_in_use: 10,
+            pages_shared: 4,
+            cow_copies: 1,
+            prefix_hit_tokens: 30,
+            prefix_miss_tokens: 10,
+            ..Default::default()
+        });
+        m.record_kv(&KvStats {
+            pages_in_use: 6,
+            pages_shared: 2,
+            cow_copies: 3,
+            prefix_hit_tokens: 60,
+            prefix_miss_tokens: 20,
+            ..Default::default()
+        });
+        let s = m.snapshot();
+        assert_eq!(s.kv_pages_allocated, 6, "gauges track the latest snapshot");
+        assert_eq!(s.kv_pages_shared, 2);
+        assert_eq!(s.kv_cow_copies, 3);
+        assert_eq!(s.prefix_cache_hit_tokens, 60);
+        assert_eq!(s.prefix_cache_miss_tokens, 20);
+        assert!((s.prefix_cache_hit_rate - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_kv_snapshot_is_zeroed() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.kv_pages_allocated, 0);
+        assert_eq!(s.prefix_cache_hit_rate, 0.0);
     }
 
     #[test]

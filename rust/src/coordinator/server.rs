@@ -373,19 +373,41 @@ fn scheduler_main(
         }
 
         // ---- admission: refill the batch (held conflicts first) ----
+        // Prefix-aware pacing: each admission round may start at most
+        // `novel_budget` tokens of *fresh* prefill work — prompt tokens not
+        // already resident in the backend's prefix cache.  Cache-hot
+        // prompts (shared system prefixes, repeated turns) are nearly free
+        // to admit; a burst of cold prompts is spread across rounds so it
+        // cannot stall the in-flight batch behind one giant prefill wave.
+        // At least one request is always admitted per round (liveness),
+        // and deferred requests park in `held` for the next round.
+        let mut novel_budget = 2 * backend.prefill_len();
+        let mut admitted_this_round = 0usize;
         let mut h = 0;
         while h < held.len() && active.len() < max_batch {
             if session_conflicts(&active, held[h].session) {
                 h += 1;
-            } else {
-                let req = held.remove(h);
-                admit(req, backend.as_ref(), &sessions, &metrics, &mut active);
+                continue;
             }
+            let novel = novel_prompt_tokens(&held[h], backend.as_ref(), &sessions);
+            if admitted_this_round > 0 && novel > novel_budget {
+                h += 1; // cold prompt over budget: retry next round
+                continue;
+            }
+            let req = held.remove(h);
+            novel_budget = novel_budget.saturating_sub(novel);
+            admitted_this_round += 1;
+            admit(req, backend.as_ref(), &sessions, &metrics, &mut active);
         }
         if active.is_empty() && held.is_empty() {
             // Idle: block until a request arrives (or shutdown).
             match queue.pop() {
-                Some(req) => admit(req, backend.as_ref(), &sessions, &metrics, &mut active),
+                Some(req) => {
+                    novel_budget = novel_budget
+                        .saturating_sub(novel_prompt_tokens(&req, backend.as_ref(), &sessions));
+                    admitted_this_round += 1;
+                    admit(req, backend.as_ref(), &sessions, &metrics, &mut active);
+                }
                 None => return, // closed and drained
             }
         }
@@ -394,9 +416,16 @@ fn scheduler_main(
                 Some(req) => {
                     if session_conflicts(&active, req.session) {
                         held.push(req);
-                    } else {
-                        admit(req, backend.as_ref(), &sessions, &metrics, &mut active);
+                        continue;
                     }
+                    let novel = novel_prompt_tokens(&req, backend.as_ref(), &sessions);
+                    if admitted_this_round > 0 && novel > novel_budget {
+                        held.push(req); // over budget: admit next round
+                        continue;
+                    }
+                    novel_budget = novel_budget.saturating_sub(novel);
+                    admitted_this_round += 1;
+                    admit(req, backend.as_ref(), &sessions, &metrics, &mut active);
                 }
                 None => break,
             }
@@ -416,6 +445,9 @@ fn scheduler_main(
         // keeps per-backend counters from double-counting across workers;
         // backends without accounting report zeros).
         metrics.record_traffic(&backend.drain_traffic());
+        // Refresh the paged-KV occupancy/prefix-cache snapshot alongside it
+        // (point-in-time, so replace rather than merge).
+        metrics.record_kv(&backend.kv_stats());
         if let Err(e) = step_result {
             // A batched op failed: no per-sequence attribution, so fail the
             // whole in-flight batch (clients may retry; slots are freed).
@@ -456,6 +488,19 @@ fn session_conflicts(active: &[ActiveReq], session: Option<u64>) -> bool {
         Some(sid) => active.iter().any(|a| a.conversation == Some(sid)),
         None => false,
     }
+}
+
+/// How many prompt tokens this request would have to compute from
+/// scratch, after consulting the backend's prefix cache.  Mirrors
+/// `pad_prompt`'s windowing: the prompt is clipped to the trailing
+/// `prefill_len()` bytes, one byte per token.  Backends without a prefix
+/// cache report zero cached tokens, so the whole window counts as novel.
+fn novel_prompt_tokens(req: &Request, backend: &dyn Backend, sessions: &SessionStore) -> usize {
+    let effective = sessions.effective_prompt(req.session, &req.prompt);
+    let window = effective.len().min(backend.prefill_len());
+    let toks: Vec<i32> =
+        effective[effective.len() - window..].iter().map(|&b| b as i32).collect();
+    window.saturating_sub(backend.prefix_cached_tokens(&toks))
 }
 
 /// Validate the prompt window at admission: predictably bad input must be

@@ -42,6 +42,15 @@
 //!   ascending-index accumulation order, results are bitwise identical
 //!   for every thread count *and* dispatch tier
 //!   ([`runtime::NativeConfig`], `--threads`, `SPEQ_THREADS`).
+//!   KV history is paged, not dense: `runtime::paging` leases 16-token
+//!   refcounted pages (`PageAllocator`, generation-stamped ids, typed
+//!   double-free/stale-table errors, copy-on-write via `make_unique`),
+//!   and `runtime::prefix` keys a radix tree on token streams so
+//!   sequences sharing a prompt prefix reference the same physical
+//!   pages — prefill of a cached prefix computes only the novel suffix,
+//!   and decode COWs exactly the written page.  Paged gather/scatter
+//!   keeps the ascending-index accumulation order, so outputs stay
+//!   bitwise identical to the dense layout (`rust/tests/kv_paging.rs`).
 //!   Also here: the [`runtime::ModelSource`] factory, and — behind the
 //!   non-default `pjrt` cargo feature — the PJRT client wrapper that
 //!   executes AOT-compiled HLO graphs buffer-to-buffer.
@@ -61,8 +70,10 @@
 //!   cancellation (retired sequences free their KV slots between engine
 //!   steps), graceful drain/shutdown, sessions, metrics (failures,
 //!   cancellations, batch occupancy, throughput, per-pass weight traffic
-//!   drained from the backends after every engine step) — the production
-//!   wrapper around the engine.
+//!   and KV-paging stats drained from the backends after every engine
+//!   step); admission is prefix-aware — the per-round budget counts only
+//!   tokens the prefix cache can't serve — the production wrapper around
+//!   the engine.
 //! * [`net`] — the std-only HTTP/1.1 front end over the coordinator:
 //!   `POST /v1/generate`, `POST /v1/stream` (Server-Sent Events over
 //!   chunked transfer), `GET /healthz`, `GET /metrics` (Prometheus

@@ -20,7 +20,7 @@ use anyhow::Result;
 use speq::accel::{paper_dims, Accel, ArrayMode};
 use speq::coordinator::{Mode, Priority, Server, ServerConfig, SubmitParams};
 use speq::model::{Manifest, SamplingParams};
-use speq::net::{LoadConfig, LoadMode, NetConfig, NetServer};
+use speq::net::{LoadConfig, LoadMode, NetConfig, NetServer, Scenario};
 use speq::report::{run_experiment, ReportCtx, ReportOpts, EXPERIMENTS};
 use speq::runtime::{
     builtin_config, builtin_model_names, load_backend_with, Backend, ModelSource, NativeConfig,
@@ -101,7 +101,8 @@ fn dispatch(args: &Args) -> Result<()> {
                  speq serve --addr 127.0.0.1:8080 [--model M] [--workers N] [--max-batch B] [--queue Q]\n\
                  \x20          [--deadline-ms D] [--duration-s S] [--threads T]   (HTTP front end)\n\
                  speq loadgen --addr 127.0.0.1:8080 [--mode closed|open] [--users N] [--rate R]\n\
-                 \x20          [--requests N] [--gen-len N] [--deadline-ms D] [--smoke]\n\
+                 \x20          [--scenario oneshot|multiturn] [--requests N] [--gen-len N]\n\
+                 \x20          [--deadline-ms D] [--smoke]\n\
                  speq info\n\
                  \n\
                  --threads T sizes the native kernel worker pool (0 = auto, default\n\
@@ -385,6 +386,11 @@ fn loadgen(args: &Args) -> Result<()> {
         "open" => LoadMode::Open { rate_rps: args.get_f64("rate", 8.0) },
         other => anyhow::bail!("unknown loadgen mode {other:?} (closed|open)"),
     };
+    let scenario = match args.get_or("scenario", "oneshot") {
+        "oneshot" => Scenario::Oneshot,
+        "multiturn" => Scenario::Multiturn,
+        other => anyhow::bail!("unknown loadgen scenario {other:?} (oneshot|multiturn)"),
+    };
     // --smoke only shrinks the default request count and turns on the CI
     // assertions below; an explicit --mode/--users/--rate is honored.
     let cfg = LoadConfig {
@@ -393,6 +399,7 @@ fn loadgen(args: &Args) -> Result<()> {
         requests: args.get_usize("requests", if smoke { 8 } else { 32 }),
         gen_len: args.get_usize("gen-len", 32),
         seed: args.get_usize("seed", 0) as u64,
+        scenario,
         deadline_ms: {
             let d = args.get_usize("deadline-ms", 0);
             if d > 0 { Some(d as u64) } else { None }
@@ -413,6 +420,21 @@ fn loadgen(args: &Args) -> Result<()> {
         );
         anyhow::ensure!(report.goodput_rps > 0.0, "loadgen smoke: zero goodput");
         anyhow::ensure!(report.tokens > 0, "loadgen smoke: zero tokens streamed");
+        if scenario == Scenario::Multiturn {
+            // The shared system prompt must actually hit the prefix cache:
+            // pull /metrics and require a nonzero hit-token counter.
+            let page = speq::net::loadgen::fetch_metrics(&cfg.addr, cfg.timeout)?;
+            let hits = speq::net::loadgen::metric_value(
+                &page,
+                "speq_prefix_cache_hit_tokens_total",
+            )
+            .unwrap_or(0.0);
+            anyhow::ensure!(
+                hits > 0.0,
+                "loadgen smoke: multiturn scenario produced no prefix-cache hits"
+            );
+            println!("prefix cache hit tokens: {hits}");
+        }
         println!("loadgen smoke OK");
     }
     Ok(())

@@ -40,6 +40,53 @@ pub const PROMPTS: &[&str] = &[
     "Q: bob has 9 coins and spends 2. how many coins left?\nA: ",
 ];
 
+/// Common system prompt opening every multiturn conversation (75 bytes =
+/// four full 16-token KV pages of shared prefix, one token per byte).
+pub const SYSTEM_PROMPT: &str =
+    "SYSTEM: you are a concise assistant. answer briefly and helpfully, please.\n";
+
+/// Scenario shaping the prompt stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// Independent one-shot requests cycling through [`PROMPTS`].
+    Oneshot,
+    /// Multi-turn conversations that all open with [`SYSTEM_PROMPT`]:
+    /// heavy-tailed turns per session (Pareto-shaped, clamped to 1..=8),
+    /// every turn carrying its conversation's session id.  Exercises the
+    /// backend prefix cache (the system prompt is shared across sessions)
+    /// and session history (turns within a session are serialized).
+    Multiturn,
+}
+
+impl Scenario {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Scenario::Oneshot => "oneshot",
+            Scenario::Multiturn => "multiturn",
+        }
+    }
+}
+
+/// Deterministic multiturn schedule: map global request index `i` to its
+/// `(session id, turn index)`.  Session turn counts are drawn once from a
+/// seeded Pareto-shaped distribution — most conversations are 1–2 turns,
+/// a few run to the 8-turn clamp — so the schedule is identical for every
+/// caller with the same seed (threads need no shared state).
+pub fn multiturn_slot(i: usize, seed: u64) -> (u64, usize) {
+    let mut rng = Rng::seed_from_u64(seed ^ 0x4d75_6c74); // "Mult"
+    let mut covered = 0usize;
+    let mut session = 0u64;
+    loop {
+        let u = rng.gen_f64();
+        let turns = (((1.0 - u).powf(-0.8)).ceil() as usize).clamp(1, 8);
+        if i < covered + turns {
+            return (0x4d55_0000 + session, i - covered);
+        }
+        covered += turns;
+        session += 1;
+    }
+}
+
 /// How a streamed request terminated.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Terminal {
@@ -247,6 +294,8 @@ pub struct LoadConfig {
     /// Sampling seed sent with every request (generation stays greedy and
     /// deterministic; prompts cycle through [`PROMPTS`]).
     pub seed: u64,
+    /// Prompt-stream shape (one-shot prompts or multiturn conversations).
+    pub scenario: Scenario,
     pub deadline_ms: Option<u64>,
     /// Per-request socket read timeout.
     pub timeout: Duration,
@@ -260,6 +309,7 @@ impl Default for LoadConfig {
             requests: 16,
             gen_len: 32,
             seed: 0,
+            scenario: Scenario::Oneshot,
             deadline_ms: None,
             timeout: Duration::from_secs(60),
         }
@@ -284,6 +334,7 @@ fn percentiles_ms(samples: &mut [f64]) -> Percentiles {
 #[derive(Debug, Clone)]
 pub struct LoadReport {
     pub mode: String,
+    pub scenario: String,
     pub requests: usize,
     pub completed: usize,
     pub rejected: usize,
@@ -303,9 +354,9 @@ impl LoadReport {
     /// Human-readable summary (the CLI prints this).
     pub fn print(&self) {
         println!(
-            "loadgen [{}]: {} requests in {:.2} s | {} ok, {} rejected (429), {} cancelled, {} failed",
-            self.mode, self.requests, self.wall_s, self.completed, self.rejected,
-            self.cancelled, self.failed
+            "loadgen [{} {}]: {} requests in {:.2} s | {} ok, {} rejected (429), {} cancelled, {} failed",
+            self.mode, self.scenario, self.requests, self.wall_s, self.completed,
+            self.rejected, self.cancelled, self.failed
         );
         println!(
             "  throughput: {:.1} tok/s | goodput {:.2} req/s | {} tokens total",
@@ -329,9 +380,9 @@ impl LoadReport {
     pub fn bench_json(&self) -> String {
         let f = |v: f64| if v.is_finite() { v } else { 0.0 };
         format!(
-            "BENCH_JSON {{\"group\":\"net_loadgen\",\"mode\":\"{}\",\"requests\":{},\"completed\":{},\"rejected\":{},\"cancelled\":{},\"failed\":{},\"tokens\":{},\"wall_s\":{:.4},\"tokens_per_sec\":{:.3},\"goodput_rps\":{:.3},\"ttft_p50_ms\":{:.3},\"ttft_p95_ms\":{:.3},\"ttft_p99_ms\":{:.3},\"total_p50_ms\":{:.3},\"total_p95_ms\":{:.3},\"total_p99_ms\":{:.3}}}",
-            self.mode, self.requests, self.completed, self.rejected, self.cancelled,
-            self.failed, self.tokens, f(self.wall_s), f(self.tokens_per_s),
+            "BENCH_JSON {{\"group\":\"net_loadgen\",\"mode\":\"{}\",\"scenario\":\"{}\",\"requests\":{},\"completed\":{},\"rejected\":{},\"cancelled\":{},\"failed\":{},\"tokens\":{},\"wall_s\":{:.4},\"tokens_per_sec\":{:.3},\"goodput_rps\":{:.3},\"ttft_p50_ms\":{:.3},\"ttft_p95_ms\":{:.3},\"ttft_p99_ms\":{:.3},\"total_p50_ms\":{:.3},\"total_p95_ms\":{:.3},\"total_p99_ms\":{:.3}}}",
+            self.mode, self.scenario, self.requests, self.completed, self.rejected,
+            self.cancelled, self.failed, self.tokens, f(self.wall_s), f(self.tokens_per_s),
             f(self.goodput_rps), f(self.ttft_ms.p50), f(self.ttft_ms.p95),
             f(self.ttft_ms.p99), f(self.total_ms.p50), f(self.total_ms.p95),
             f(self.total_ms.p99),
@@ -341,12 +392,34 @@ impl LoadReport {
 
 /// The request issued for global request index `i`.
 pub fn request_for(i: usize, cfg: &LoadConfig) -> GenerateRequest {
-    GenerateRequest {
-        prompt: PROMPTS[i % PROMPTS.len()].as_bytes().to_vec(),
-        gen_len: cfg.gen_len,
-        seed: cfg.seed,
-        deadline_ms: cfg.deadline_ms,
-        ..GenerateRequest::default()
+    match cfg.scenario {
+        Scenario::Oneshot => GenerateRequest {
+            prompt: PROMPTS[i % PROMPTS.len()].as_bytes().to_vec(),
+            gen_len: cfg.gen_len,
+            seed: cfg.seed,
+            deadline_ms: cfg.deadline_ms,
+            ..GenerateRequest::default()
+        },
+        Scenario::Multiturn => {
+            let (sid, turn) = multiturn_slot(i, cfg.seed);
+            // Turn 0 opens the conversation: shared system prompt plus a
+            // per-session question (sessions share the prefix, not the
+            // whole prompt).  Later turns send only the follow-up; the
+            // server prepends the stored session history.
+            let prompt = if turn == 0 {
+                format!("{SYSTEM_PROMPT}USER: question {}: what should i read today?\nBOT: ", sid & 0xffff)
+            } else {
+                format!("\nUSER: tell me more about pick {turn}.\nBOT: ")
+            };
+            GenerateRequest {
+                prompt: prompt.into_bytes(),
+                gen_len: cfg.gen_len,
+                seed: cfg.seed,
+                session: Some(sid),
+                deadline_ms: cfg.deadline_ms,
+                ..GenerateRequest::default()
+            }
+        }
     }
 }
 
@@ -445,6 +518,7 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
             LoadMode::Closed { users } => format!("closed users={users}"),
             LoadMode::Open { rate_rps } => format!("open rate={rate_rps}/s"),
         },
+        scenario: cfg.scenario.as_str().to_string(),
         requests: cfg.requests,
         completed,
         rejected,
@@ -456,6 +530,57 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
         goodput_rps: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
         ttft_ms: percentiles_ms(&mut ttfts),
         total_ms: percentiles_ms(&mut totals),
+    })
+}
+
+/// `GET /metrics` and return the Prometheus page body (the smoke path
+/// uses this to assert prefix-cache activity after a multiturn run).
+pub fn fetch_metrics(addr: &str, timeout: Duration) -> Result<String> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(timeout)).ok();
+    let mut w = stream.try_clone().context("clone socket")?;
+    write!(w, "GET /metrics HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n\r\n")?;
+    w.flush()?;
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    r.read_line(&mut line).context("read status line")?;
+    anyhow::ensure!(
+        line.split_whitespace().nth(1) == Some("200"),
+        "GET /metrics answered {line:?}"
+    );
+    let mut content_length = 0usize;
+    loop {
+        let mut l = String::new();
+        if r.read_line(&mut l)? == 0 {
+            anyhow::bail!("connection closed in response headers");
+        }
+        let l = l.trim_end().to_ascii_lowercase();
+        if l.is_empty() {
+            break;
+        }
+        if let Some(v) = l.strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut buf = Vec::new();
+    if content_length > 0 {
+        buf.resize(content_length, 0);
+        r.read_exact(&mut buf).context("read metrics body")?;
+    } else {
+        r.read_to_end(&mut buf).context("read metrics body")?;
+    }
+    Ok(String::from_utf8_lossy(&buf).into_owned())
+}
+
+/// Value of a single-sample metric in a Prometheus text page.
+pub fn metric_value(page: &str, name: &str) -> Option<f64> {
+    page.lines().filter(|l| !l.starts_with('#')).find_map(|l| {
+        let (n, v) = l.split_once(' ')?;
+        if n == name {
+            v.trim().parse().ok()
+        } else {
+            None
+        }
     })
 }
 
@@ -513,9 +638,63 @@ mod tests {
     }
 
     #[test]
+    fn multiturn_schedule_is_deterministic_and_heavy_tailed() {
+        let slots: Vec<(u64, usize)> = (0..64).map(|i| multiturn_slot(i, 7)).collect();
+        let again: Vec<(u64, usize)> = (0..64).map(|i| multiturn_slot(i, 7)).collect();
+        assert_eq!(slots, again, "schedule must be a pure function of (i, seed)");
+        // Turn indexes stay under the clamp and restart per session.
+        for w in slots.windows(2) {
+            assert!(w[0].1 < 8);
+            if w[1].0 == w[0].0 {
+                assert_eq!(w[1].1, w[0].1 + 1);
+            } else {
+                assert_eq!(w[1].1, 0);
+            }
+        }
+        // Heavy tail: some conversation runs past one turn, and more than
+        // one distinct session appears.
+        assert!(slots.iter().any(|&(_, t)| t >= 1));
+        assert!(slots.iter().map(|&(s, _)| s).collect::<std::collections::HashSet<_>>().len() > 1);
+        // Different seeds reshuffle the schedule.
+        assert_ne!(slots, (0..64).map(|i| multiturn_slot(i, 8)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn multiturn_requests_share_the_system_prompt_and_carry_sessions() {
+        let cfg =
+            LoadConfig { scenario: Scenario::Multiturn, seed: 3, ..Default::default() };
+        let mut openers = 0;
+        for i in 0..32 {
+            let (sid, turn) = multiturn_slot(i, cfg.seed);
+            let req = request_for(i, &cfg);
+            assert_eq!(req.session, Some(sid), "every turn must carry its session id");
+            if turn == 0 {
+                openers += 1;
+                assert!(
+                    req.prompt.starts_with(SYSTEM_PROMPT.as_bytes()),
+                    "conversation openers must share the system prefix"
+                );
+            } else {
+                assert!(!req.prompt.starts_with(SYSTEM_PROMPT.as_bytes()));
+            }
+        }
+        assert!(openers > 1, "need multiple conversations to share the prefix");
+        assert!(SYSTEM_PROMPT.len() >= 64, "system prompt must span >= 4 full KV pages");
+    }
+
+    #[test]
+    fn prometheus_metric_values_parse() {
+        let page = "# HELP x h\n# TYPE x gauge\nx 4\nspeq_prefix_cache_hit_tokens_total 128\n";
+        assert_eq!(metric_value(page, "x"), Some(4.0));
+        assert_eq!(metric_value(page, "speq_prefix_cache_hit_tokens_total"), Some(128.0));
+        assert_eq!(metric_value(page, "missing"), None);
+    }
+
+    #[test]
     fn bench_json_line_is_parseable() {
         let r = LoadReport {
             mode: "closed users=4".into(),
+            scenario: "oneshot".into(),
             requests: 8,
             completed: 8,
             rejected: 0,
@@ -532,6 +711,7 @@ mod tests {
         let json_part = line.strip_prefix("BENCH_JSON ").unwrap();
         let v = crate::util::json::parse(json_part).unwrap();
         assert_eq!(v.get("group").unwrap().as_str(), Some("net_loadgen"));
+        assert_eq!(v.get("scenario").unwrap().as_str(), Some("oneshot"));
         assert_eq!(v.get("completed").unwrap().as_usize(), Some(8));
         assert!(v.get("tokens_per_sec").unwrap().as_f64().unwrap() > 0.0);
     }

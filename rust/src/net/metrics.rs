@@ -199,6 +199,36 @@ impl NetMetrics {
             "Measured quarter-to-all ratio (draft/full bytes per token).",
             snap.draft_traffic_ratio,
         );
+        counter(
+            "speq_kv_pages_allocated",
+            "KV pages held by live sequences or the prefix cache.",
+            snap.kv_pages_allocated as f64,
+        );
+        counter(
+            "speq_kv_pages_shared",
+            "KV pages mapped by more than one owner (prefix sharing).",
+            snap.kv_pages_shared as f64,
+        );
+        counter(
+            "speq_kv_cow_copies_total",
+            "Pages copied on write into a shared KV page.",
+            snap.kv_cow_copies as f64,
+        );
+        counter(
+            "speq_prefix_cache_hit_tokens_total",
+            "Prompt tokens served from the prefix cache (prefill skipped).",
+            snap.prefix_cache_hit_tokens as f64,
+        );
+        counter(
+            "speq_prefix_cache_miss_tokens_total",
+            "Prompt tokens computed by the full prefill pass.",
+            snap.prefix_cache_miss_tokens as f64,
+        );
+        counter(
+            "speq_prefix_cache_hit_rate",
+            "Fraction of prefill tokens served from the prefix cache.",
+            snap.prefix_cache_hit_rate,
+        );
         self.ttft.render(
             "speq_ttft_seconds",
             "Time from HTTP submit to the first streamed token chunk.",
@@ -270,5 +300,27 @@ mod tests {
         assert!(page.contains("speq_request_duration_seconds_count 1"));
         assert!(page.contains("# TYPE speq_requests_completed_total counter"));
         assert!(page.contains("# TYPE speq_queue_depth gauge"));
+    }
+
+    #[test]
+    fn exposition_includes_kv_paging_metrics() {
+        let m = Metrics::new();
+        m.record_kv(&crate::runtime::KvStats {
+            pages_in_use: 12,
+            pages_shared: 5,
+            cow_copies: 2,
+            prefix_hit_tokens: 48,
+            prefix_miss_tokens: 16,
+            ..Default::default()
+        });
+        let page = NetMetrics::new().render_prometheus(&m.snapshot(), 0);
+        assert!(page.contains("speq_kv_pages_allocated 12"));
+        assert!(page.contains("speq_kv_pages_shared 5"));
+        assert!(page.contains("speq_kv_cow_copies_total 2"));
+        assert!(page.contains("speq_prefix_cache_hit_tokens_total 48"));
+        assert!(page.contains("speq_prefix_cache_miss_tokens_total 16"));
+        assert!(page.contains("speq_prefix_cache_hit_rate 0.75"));
+        assert!(page.contains("# TYPE speq_kv_pages_allocated gauge"));
+        assert!(page.contains("# TYPE speq_prefix_cache_hit_tokens_total counter"));
     }
 }

@@ -506,6 +506,25 @@ pub trait Backend {
         TrafficSnapshot::default()
     }
 
+    // ---- KV paging / prefix-sharing surface ------------------------------
+    //
+    // Backends with a paged KV store (the native backend) report page
+    // occupancy, sharing, and prefix-cache hit rates here; the defaults
+    // describe a dense, unshared store so other backends stay conformant.
+
+    /// Point-in-time paged-KV occupancy and prefix-cache statistics
+    /// (all-zero for backends without a paged store).
+    fn kv_stats(&self) -> super::paging::KvStats {
+        super::paging::KvStats::default()
+    }
+
+    /// How many leading tokens of `tokens` the prefix cache could serve
+    /// without recomputation (0 for backends without a prefix cache).
+    /// Admission control uses this to budget novel prefill work per round.
+    fn prefix_cached_tokens(&self, _tokens: &[i32]) -> usize {
+        0
+    }
+
     fn vocab(&self) -> usize {
         self.config().vocab
     }

@@ -27,6 +27,16 @@
 //!   and a determinism contract that makes results bitwise identical for
 //!   every thread count ([`NativeConfig`] / `--threads` / `SPEQ_THREADS`
 //!   select the width).
+//! * [`paging`] — the paged KV store: fixed [`PAGE_TOKENS`]-position
+//!   pages handed out by the refcounted free-list [`PageAllocator`]
+//!   (generation-stamped [`PageId`]s reject double frees and stale page
+//!   tables; `make_unique` gives copy-on-write), plus the [`KvStats`]
+//!   occupancy/sharing snapshot surfaced through `Backend::kv_stats`.
+//! * [`prefix`] — the radix tree over token streams ([`PrefixTree`]):
+//!   each node owns one immutable KV page, so sequences sharing a prompt
+//!   prefix map the same pages copy-on-write and prefill of a cached
+//!   prefix is a tree lookup plus a forward pass over only the novel
+//!   suffix.  LRU leaf eviction bounds resident pages.
 //! * `exec`/`hlo` (`pjrt` feature) — the `xla` crate wrapper: HLO text
 //!   loading, compilation, buffer-to-buffer execution.  The interchange is
 //!   HLO **text** (xla_extension 0.5.1 rejects jax >= 0.5's 64-bit-id
@@ -35,7 +45,9 @@
 pub mod backend;
 pub mod kernels;
 pub mod native;
+pub mod paging;
 pub mod pool;
+pub mod prefix;
 
 pub use backend::{
     load_backend, load_backend_with, Backend, BackendState, ModelSource, PassKind, SeqSlot,
@@ -45,7 +57,9 @@ pub use native::{
     builtin_config, builtin_model_names, InitStyle, NativeBackend, NativeConfig, S_SLOTS,
 };
 pub use crate::bsfp::SimdLevel;
+pub use paging::{KvStats, PageAllocator, PageId, PAGE_TOKENS};
 pub use pool::WorkerPool;
+pub use prefix::PrefixTree;
 
 #[cfg(feature = "pjrt")]
 mod exec;

@@ -39,8 +39,27 @@
 //! [`Workspace`] of flat `B x n` activation matrices (ping-pong residual
 //! stream, attention scores/context, MLP gate/up, logits, kernel decode
 //! scratch).  Buffers grow monotonically to the largest batch seen
-//! (warm-up); after that a step performs no heap allocation inside the
-//! interpreter — `step_batch` debug-asserts it.
+//! (warm-up); after that a step performs no workspace allocation inside
+//! the interpreter — `step_batch` debug-asserts it.  The attention
+//! `scores` scratch is sized to the live max position of the batch
+//! (rounded up to page granularity), not to the full `cache_len`.
+//!
+//! **Paged KV cache + prefix sharing.**  A sequence's KV rows live in
+//! fixed-size pages ([`super::paging`]: [`PAGE_TOKENS`] positions x all
+//! layers/heads each) referenced through a per-sequence page table
+//! ([`NativeState`]), so a sequence only occupies memory for positions
+//! it has written — max concurrency is bounded by *live* tokens, not by
+//! worst-case context length.  Prompt prefixes are interned in a radix
+//! tree ([`super::prefix`]): prefill looks the prompt up first and
+//! reuses every cached whole-page prefix by reference (refcounted,
+//! copy-on-write on first write — including `verify` overwriting drafted
+//! positions), running the forward pass over only the novel suffix.
+//! Reuse is bit-exact because cached pages were written by a
+//! deterministic prefill of the same tokens at the same absolute
+//! positions.  All page-*data* access (gather in attention, the
+//! per-position KV write, COW clones) happens while the workspace lock
+//! is held, which serializes `step_batch` bodies; page *metadata* is
+//! guarded by the allocator's own lock.
 //!
 //! Determinism contract: `decode_full` and each row of `verify` run the
 //! exact same code path over the exact same f32 operations, which makes
@@ -59,7 +78,8 @@
 //! * [`NativeBackend::synthetic`] — custom configs for tests.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -70,7 +90,9 @@ use super::backend::{
 use super::kernels::{
     axpy, dot, gemm_dense, gemm_draft_prefix, gemm_full_planes, SCRATCH_ROWS,
 };
+use super::paging::{KvStats, PageAllocator, PageId, PagePtr, PAGE_TOKENS};
 use super::pool::{SharedSlice, WorkerPool};
+use super::prefix::PrefixTree;
 use crate::bsfp::simd::{decode_draft_row_pair, draft_lut};
 use crate::bsfp::{
     f16_bits_to_f32, f32_to_f16_bits, fp16_exact_in_domain, quantize_tensor, PlanePair,
@@ -82,6 +104,12 @@ use crate::util::rng::Rng;
 /// Logits slots in the state (max draft length 20 + 1 bonus), mirroring
 /// `python/compile/model.py::S_SLOTS`.
 pub const S_SLOTS: usize = 21;
+
+/// Max pages the prefix tree pins (LRU leaf eviction past this).  At the
+/// builtin-zoo geometry one page is `n_layers * 2 * 16 * d_model` f32s,
+/// so 1024 pages bound the cache to a few hundred MB worst case while
+/// covering far more distinct prompts than the serving queue admits.
+const PREFIX_CACHE_PAGES: usize = 1024;
 
 /// The built-in synthetic zoo: the five paper-analog configurations of
 /// `python/compile/model.py::MODEL_ZOO` (name, paper analog, layers,
@@ -159,10 +187,26 @@ impl NativeConfig {
     }
 }
 
-/// Host-memory request state: the flattened KV cache
-/// `f32[L, 2, C, H, Dh]`.
+/// Host-memory request state: a page table into the backend-owned
+/// [`PageAllocator`].  `table[pos / PAGE_TOKENS]` is the page holding
+/// position `pos`'s KV rows; the table grows as the sequence advances
+/// and only ever covers written positions.  Entries may be shared with
+/// the prefix tree or other sequences (refcounted) — the backend makes a
+/// page private (copy-on-write) before writing into it.  Dropping the
+/// state releases every reference.
 pub struct NativeState {
-    kv: Vec<f32>,
+    alloc: Arc<PageAllocator>,
+    table: Vec<PageId>,
+}
+
+impl Drop for NativeState {
+    fn drop(&mut self) {
+        for &p in &self.table {
+            // A failed release means the id went stale through allocator
+            // misuse; dropping is not the place to surface it.
+            let _ = self.alloc.release(p);
+        }
+    }
 }
 
 /// Reusable flat activation buffers for `step_batch` — all row-major
@@ -188,8 +232,13 @@ struct Workspace {
     /// MLP intermediates, `B x d_ff` each.
     gate: Vec<f32>,
     up: Vec<f32>,
-    /// Per-(sequence, head) attention scores, `B x n_heads x cache_len`.
+    /// Per-(sequence, head) attention scores, `B x n_heads x score_cols`
+    /// where `score_cols` is the live max position rounded up to page
+    /// granularity — not the full `cache_len` (monotonic growth).
     scores: Vec<f32>,
+    /// Per-sequence page-pointer tables the attention gather reads
+    /// through, `B x ceil(cache_len / PAGE_TOKENS)`; refilled each step.
+    page_ptrs: Vec<PagePtr>,
     /// Output logits, `B x vocab`.
     logits: Vec<f32>,
     /// Kernel decode tiles plus the draft kernel's hoisted-factor row,
@@ -213,19 +262,25 @@ impl Workspace {
             gate: Vec::new(),
             up: Vec::new(),
             scores: Vec::new(),
+            page_ptrs: Vec::new(),
             logits: Vec::new(),
             scratch: Vec::new(),
             growths: 0,
         }
     }
 
-    /// Size every buffer for a batch of `b` (no-op once `b <= cap_b`).
-    fn prepare(&mut self, c: &ModelConfig, b: usize) {
-        if b <= self.cap_b {
+    /// Size every buffer for a batch of `b` attending `score_cols`
+    /// positions (no-op once both fit).  `score_cols` tracks the live max
+    /// position rounded to page granularity, so short sequences never pay
+    /// `cache_len`-sized scores traffic; buffers only ever grow.
+    fn prepare(&mut self, c: &ModelConfig, b: usize, score_cols: usize) {
+        if b <= self.cap_b && self.scores.len() >= b * c.n_heads * score_cols {
             return;
         }
+        let b = b.max(self.cap_b);
         let d = c.d_model;
         let n_max = d.max(c.d_ff).max(c.vocab);
+        let pages = (c.cache_len + PAGE_TOKENS - 1) / PAGE_TOKENS;
         self.x.resize(b * d, 0.0);
         self.h.resize(b * d, 0.0);
         self.q.resize(b * d, 0.0);
@@ -235,7 +290,9 @@ impl Workspace {
         self.o.resize(b * d, 0.0);
         self.gate.resize(b * c.d_ff, 0.0);
         self.up.resize(b * c.d_ff, 0.0);
-        self.scores.resize(b * c.n_heads * c.cache_len, 0.0);
+        let sneed = (b * c.n_heads * score_cols).max(self.scores.len());
+        self.scores.resize(sneed, 0.0);
+        self.page_ptrs.resize(b * pages, PagePtr::dangling());
         self.logits.resize(b * c.vocab, 0.0);
         self.scratch.resize(SCRATCH_ROWS * n_max, 0.0);
         self.cap_b = b;
@@ -244,9 +301,14 @@ impl Workspace {
 }
 
 impl NativeState {
-    /// Total f32 elements in the cache (diagnostics).
+    /// Total f32 elements the sequence's pages occupy (diagnostics).
     pub fn kv_len(&self) -> usize {
-        self.kv.len()
+        self.table.len() * self.alloc.page_elems()
+    }
+
+    /// Pages currently referenced by this sequence (diagnostics).
+    pub fn pages(&self) -> usize {
+        self.table.len()
     }
 }
 
@@ -284,6 +346,13 @@ pub struct NativeBackend {
     layer_names: Vec<LayerNames>,
     /// Per-sequence KV states for the batched serving API.
     arena: SlotArena,
+    /// The paged KV store every sequence's page table points into.
+    page_alloc: Arc<PageAllocator>,
+    /// Radix tree interning prompt prefixes (pages shared by reference).
+    prefix: PrefixTree,
+    /// Whether prefill consults/feeds the prefix tree (on by default;
+    /// benches disable it to measure the dense-equivalent baseline).
+    prefix_enabled: AtomicBool,
     /// Persistent worker pool the column-sharded kernels run on.
     pool: WorkerPool,
     /// SIMD dispatch tier the kernels decode with (resolved once at
@@ -415,6 +484,9 @@ impl NativeBackend {
             .map(|j| (-(j as f32) * (10000.0f32).ln() / half as f32).exp())
             .collect();
         let layer_names = (0..config.n_layers).map(LayerNames::layer).collect();
+        // One page = all layers/heads of PAGE_TOKENS positions; the prefix
+        // tree may pin at most PREFIX_CACHE_PAGES pages (LRU past that).
+        let page_elems = config.n_layers * 2 * PAGE_TOKENS * config.d_model;
         Ok(Self {
             config,
             slots,
@@ -425,6 +497,9 @@ impl NativeBackend {
             freqs,
             layer_names,
             arena: SlotArena::new(),
+            page_alloc: Arc::new(PageAllocator::new(page_elems)),
+            prefix: PrefixTree::new(PREFIX_CACHE_PAGES),
+            prefix_enabled: AtomicBool::new(true),
             pool: WorkerPool::new(native.resolved_threads()),
             simd: native.simd.resolve(),
             workspace: Mutex::new(Workspace::new()),
@@ -458,10 +533,38 @@ impl NativeBackend {
     }
 
     /// Workspace buffer-growth events so far.  Growth happens only while
-    /// warming up to a larger batch; a steady-state `step_batch` performs
-    /// no heap allocation inside the interpreter (debug-asserted there).
+    /// warming up to a larger batch (or a deeper attended position); a
+    /// steady-state `step_batch` performs no workspace allocation inside
+    /// the interpreter (debug-asserted there).
     pub fn workspace_growths(&self) -> u64 {
         self.workspace.lock().unwrap_or_else(|e| e.into_inner()).growths
+    }
+
+    /// Enable/disable the prompt prefix cache.  Disabling also clears the
+    /// tree (releasing its page references), which makes the backend
+    /// behave exactly like the dense per-sequence layout — every prompt
+    /// token is recomputed and no page is ever shared.  Results are
+    /// bit-identical either way; this is purely a memory/throughput knob.
+    pub fn set_prefix_cache(&self, enabled: bool) {
+        self.prefix_enabled.store(enabled, Ordering::Relaxed);
+        if !enabled {
+            self.prefix.clear(&self.page_alloc);
+        }
+    }
+
+    /// Whether prefill currently consults the prefix tree.
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.prefix_enabled.load(Ordering::Relaxed)
+    }
+
+    /// The backend's page allocator (occupancy probes in tests/benches).
+    pub fn kv_allocator(&self) -> &Arc<PageAllocator> {
+        &self.page_alloc
+    }
+
+    /// The backend's prefix tree (diagnostics).
+    pub fn prefix_tree(&self) -> &PrefixTree {
+        &self.prefix
     }
 
     /// Load trained weights from an artifacts manifest (no HLO needed).
@@ -526,26 +629,34 @@ impl NativeBackend {
         Self::from_weights_with(config.clone(), linear_names(&config), weights, slots, native)
     }
 
-    fn kv_elements(&self) -> usize {
-        let c = &self.config;
-        c.n_layers * 2 * c.cache_len * c.n_heads * c.head_dim
+    /// Pages a full-length sequence spans (the page-table stride of the
+    /// workspace pointer table).
+    fn pages_per_seq(&self) -> usize {
+        (self.config.cache_len + PAGE_TOKENS - 1) / PAGE_TOKENS
     }
 
-    /// Base offset of cache row `(layer, which, pos)`; the row holds
-    /// `n_heads * head_dim` contiguous f32s.
-    fn kv_index(&self, layer: usize, which: usize, pos: usize) -> usize {
+    /// In-page offset of cache row `(layer, which, pos)`; the row holds
+    /// `n_heads * head_dim` contiguous f32s.  Pages are laid out
+    /// `[L, 2, PAGE_TOKENS, d_model]`, mirroring the retired flat
+    /// `[L, 2, cache_len, d_model]` layout with `cache_len` folded to
+    /// page granularity.
+    fn page_offset(&self, layer: usize, which: usize, pos: usize) -> usize {
         let c = &self.config;
-        ((layer * 2 + which) * c.cache_len + pos) * c.n_heads * c.head_dim
+        ((layer * 2 + which) * PAGE_TOKENS + pos % PAGE_TOKENS) * c.n_heads * c.head_dim
+    }
+
+    /// A fresh empty sequence state over this backend's page allocator.
+    fn fresh_state(&self) -> NativeState {
+        NativeState { alloc: Arc::clone(&self.page_alloc), table: Vec::new() }
     }
 
     fn take_state(&self, state: BackendState) -> Result<NativeState> {
         match state {
             BackendState::Native(s) => {
                 anyhow::ensure!(
-                    s.kv.len() == self.kv_elements(),
-                    "state has {} KV elements, this model needs {} (state from another model?)",
-                    s.kv.len(),
-                    self.kv_elements()
+                    Arc::ptr_eq(&s.alloc, &self.page_alloc),
+                    "state's KV elements live in another backend's page allocator \
+                     (state from another model?)"
                 );
                 Ok(s)
             }
@@ -554,6 +665,20 @@ impl NativeBackend {
                 anyhow::bail!("native backend received a PJRT device state")
             }
         }
+    }
+
+    /// Make `pos` writable for `st`: extend the page table up to `pos`'s
+    /// page (fresh zeroed pages) and take private ownership of that page
+    /// (copy-on-write when the prefix tree or another sequence shares
+    /// it).  Must run under the workspace lock — COW copies page data.
+    fn ensure_writable(&self, st: &mut NativeState, pos: usize) -> Result<()> {
+        let pi = pos / PAGE_TOKENS;
+        while st.table.len() <= pi {
+            st.table.push(self.page_alloc.alloc());
+        }
+        let (id, _copied) = self.page_alloc.make_unique(st.table[pi])?;
+        st.table[pi] = id;
+        Ok(())
     }
 
     /// Dense f32 view of a non-linear parameter (embed, norms).
@@ -697,8 +822,14 @@ impl NativeBackend {
     /// cache up to `pos`, returns the logits row.  Implemented as a
     /// batch of one so single-sequence and batched execution share one
     /// code path (the bit-identity contract of the batched serving API).
-    fn step(&self, kind: PassKind, token: i32, pos: usize, kv: &mut [f32]) -> Result<Vec<f32>> {
-        let mut rows = self.step_batch(kind, &[token], &[pos], &mut [kv])?;
+    fn step(
+        &self,
+        kind: PassKind,
+        token: i32,
+        pos: usize,
+        state: &mut NativeState,
+    ) -> Result<Vec<f32>> {
+        let mut rows = self.step_batch(kind, &[token], &[pos], &mut [state])?;
         Ok(rows.pop().expect("batch of one"))
     }
 
@@ -718,15 +849,15 @@ impl NativeBackend {
         kind: PassKind,
         tokens: &[i32],
         pos: &[usize],
-        kvs: &mut [&mut [f32]],
+        states: &mut [&mut NativeState],
     ) -> Result<Vec<Vec<f32>>> {
         let c = &self.config;
         let b = tokens.len();
         anyhow::ensure!(
-            pos.len() == b && kvs.len() == b,
+            pos.len() == b && states.len() == b,
             "step_batch: mismatched batch arity ({b} tokens, {} pos, {} states)",
             pos.len(),
-            kvs.len()
+            states.len()
         );
         for (&token, &p) in tokens.iter().zip(pos) {
             anyhow::ensure!(
@@ -737,7 +868,12 @@ impl NativeBackend {
             anyhow::ensure!(p < c.cache_len, "position {p} exceeds cache_len {}", c.cache_len);
         }
         let (d, hd, nh) = (c.d_model, c.head_dim, c.n_heads);
-        let (ff, v, clen) = (c.d_ff, c.vocab, c.cache_len);
+        let (ff, v) = (c.d_ff, c.vocab);
+        // Attention scratch covers the deepest attended position of this
+        // batch, rounded up to page granularity — not the full cache_len.
+        let max_pos = pos.iter().copied().max().unwrap_or(0);
+        let scols = (max_pos / PAGE_TOKENS + 1) * PAGE_TOKENS;
+        let stride = self.pages_per_seq();
         // Traffic: one token (or verify row) per sequence; the embedding
         // row gather per sequence plus each norm vector once per batch
         // (linears are counted inside `mm`).
@@ -747,10 +883,25 @@ impl NativeBackend {
         let mut guard = self.workspace.lock().unwrap_or_else(|e| e.into_inner());
         let ws = &mut *guard;
         // A workspace already sized for this batch is warm: the entire
-        // step below must then run allocation-free (asserted at the end).
-        let was_warm = ws.cap_b >= b;
+        // step below must then run workspace-allocation-free (asserted at
+        // the end; page-table growth is the allocator's business).
+        let was_warm = ws.cap_b >= b && ws.scores.len() >= b * nh * scols;
         let growths_at_start = ws.growths;
-        ws.prepare(c, b);
+        ws.prepare(c, b, scols);
+        // Page bookkeeping, serialized by the workspace lock held above:
+        // give every sequence private ownership of the page it is about
+        // to write (allocating/COW-cloning as needed), then snapshot the
+        // batch's page-pointer tables for the gather below.  Pointers
+        // stay valid for the whole step — slabs never move and pages
+        // referenced by live tables are never recycled.
+        for (i, st) in states.iter_mut().enumerate() {
+            self.ensure_writable(st, pos[i])?;
+        }
+        for (i, st) in states.iter().enumerate() {
+            for (j, &pid) in st.table.iter().enumerate().take(pos[i] / PAGE_TOKENS + 1) {
+                ws.page_ptrs[i * stride + j] = self.page_alloc.page_ptr(pid)?;
+            }
+        }
         let embed = self.p("embed");
         for (bi, &t) in tokens.iter().enumerate() {
             let t = t as usize;
@@ -766,37 +917,51 @@ impl NativeBackend {
             for i in 0..b {
                 rope_in_place(&mut ws.q[i * d..(i + 1) * d], nh, hd, pos[i], &self.freqs);
                 rope_in_place(&mut ws.k[i * d..(i + 1) * d], nh, hd, pos[i], &self.freqs);
-                let kv = &mut *kvs[i];
-                let kbase = self.kv_index(l, 0, pos[i]);
-                kv[kbase..kbase + d].copy_from_slice(&ws.k[i * d..(i + 1) * d]);
-                let vbase = self.kv_index(l, 1, pos[i]);
-                kv[vbase..vbase + d].copy_from_slice(&ws.v[i * d..(i + 1) * d]);
+                // This position's page is exclusively ours
+                // (`ensure_writable` above), so the mutable row cannot
+                // alias another sequence's data or the prefix tree's.
+                let page = ws.page_ptrs[i * stride + pos[i] / PAGE_TOKENS];
+                let krow = unsafe { page.row_mut(self.page_offset(l, 0, pos[i]), d) };
+                krow.copy_from_slice(&ws.k[i * d..(i + 1) * d]);
+                let vrow = unsafe { page.row_mut(self.page_offset(l, 1, pos[i]), d) };
+                vrow.copy_from_slice(&ws.v[i * d..(i + 1) * d]);
             }
             ws.ctx[..b * d].fill(0.0);
             {
                 // Parallel over (sequence, head) pairs.  Each pair owns a
-                // disjoint scores row and context slice; KV caches are
-                // read-only here (all writes happened in the loop above).
+                // disjoint scores row and context slice; pages are
+                // read-only here (all writes happened in the loop above)
+                // and the ascending-t gather visits positions in exactly
+                // the retired flat-buffer order, so accumulation — and
+                // therefore every output bit — is unchanged.
                 let scale = 1.0 / (hd as f32).sqrt();
                 let qs: &[f32] = &ws.q;
                 let scores = SharedSlice::new(&mut ws.scores);
                 let ctx = SharedSlice::new(&mut ws.ctx);
-                let kvs_ro: &[&mut [f32]] = kvs;
+                let pptrs: &[PagePtr] = &ws.page_ptrs;
                 self.pool.run(b * nh, |pair| {
                     let (i, head) = (pair / nh, pair % nh);
-                    let kv: &[f32] = &kvs_ro[i];
                     let q = &qs[i * d + head * hd..i * d + (head + 1) * hd];
                     // SAFETY: pair (i, head) exclusively owns its scores
                     // row and its head's slice of sequence i's context.
-                    let srow = unsafe { scores.slice_mut((i * nh + head) * clen, pos[i] + 1) };
+                    let srow = unsafe { scores.slice_mut((i * nh + head) * scols, pos[i] + 1) };
                     let ch = unsafe { ctx.slice_mut(i * d + head * hd, hd) };
                     for (t, s) in srow.iter_mut().enumerate() {
-                        let kr = &kv[self.kv_index(l, 0, t) + head * hd..][..hd];
+                        let page = pptrs[i * stride + t / PAGE_TOKENS];
+                        // SAFETY: position t <= pos[i] was written, so its
+                        // page is live; no mutable access is in flight.
+                        let kr = unsafe {
+                            page.row(self.page_offset(l, 0, t) + head * hd, hd)
+                        };
                         *s = dot(q, kr) * scale;
                     }
                     softmax_in_place(srow);
                     for (t, &a) in srow.iter().enumerate() {
-                        let vr = &kv[self.kv_index(l, 1, t) + head * hd..][..hd];
+                        let page = pptrs[i * stride + t / PAGE_TOKENS];
+                        // SAFETY: as above.
+                        let vr = unsafe {
+                            page.row(self.page_offset(l, 1, t) + head * hd, hd)
+                        };
                         axpy(ch, a, vr);
                     }
                 });
@@ -881,11 +1046,73 @@ impl NativeBackend {
             return Ok(Vec::new());
         }
         let mut states = self.take_native_states(slots)?;
-        let mut kvs: Vec<&mut [f32]> = states.iter_mut().map(|s| s.kv.as_mut_slice()).collect();
-        let result = self.step_batch(kind, tokens, pos, &mut kvs);
-        drop(kvs);
+        let mut refs: Vec<&mut NativeState> = states.iter_mut().collect();
+        let result = self.step_batch(kind, tokens, pos, &mut refs);
+        drop(refs);
         self.restore_states(slots, states);
         result
+    }
+
+    /// Shared body of `prefill` / `prefill_batch`: per-sequence prefix
+    /// lookup, position-lockstep forward pass over each sequence's novel
+    /// suffix, then prompt registration in the prefix tree.
+    ///
+    /// The lookup is capped at `len - 1` so the final prompt position —
+    /// whose logits the caller needs — is always computed.  Registration
+    /// includes the partial tail page, so the sequence's own next write
+    /// into that page (first decode or `verify`) copy-on-writes it.
+    fn prefill_states(
+        &self,
+        prompts: &[&[i32]],
+        lengths: &[usize],
+    ) -> Result<(Vec<NativeState>, Vec<Vec<f32>>)> {
+        let b = prompts.len();
+        let enabled = self.prefix_enabled.load(Ordering::Relaxed);
+        let mut states: Vec<NativeState> = Vec::with_capacity(b);
+        let mut reused: Vec<usize> = Vec::with_capacity(b);
+        for (toks, &len) in prompts.iter().zip(lengths) {
+            let (pages, r) = if enabled {
+                self.prefix.lookup(&self.page_alloc, &toks[..len], len - 1)
+            } else {
+                (Vec::new(), 0)
+            };
+            self.page_alloc.add_prefix_tokens(r as u64, (len - r) as u64);
+            states.push(NativeState { alloc: Arc::clone(&self.page_alloc), table: pages });
+            reused.push(r);
+        }
+        let mut logits: Vec<Vec<f32>> = vec![Vec::new(); b];
+        let maxlen = lengths.iter().copied().max().unwrap_or(0);
+        // Position-lockstep over the batch: sequences before their first
+        // novel position or past their own length drop out, the rest
+        // share one weight stream per position.
+        for t in 0..maxlen {
+            let active: Vec<usize> =
+                (0..b).filter(|&i| reused[i] <= t && t < lengths[i]).collect();
+            if active.is_empty() {
+                continue;
+            }
+            let toks: Vec<i32> = active.iter().map(|&i| prompts[i][t]).collect();
+            let poss: Vec<usize> = vec![t; active.len()];
+            let mut refs: Vec<&mut NativeState> = states
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| reused[*i] <= t && t < lengths[*i])
+                .map(|(_, s)| s)
+                .collect();
+            let rows = self.step_batch(PassKind::Prefill, &toks, &poss, &mut refs)?;
+            for (&i, row) in active.iter().zip(rows) {
+                logits[i] = row;
+            }
+        }
+        if enabled {
+            for ((toks, &len), st) in prompts.iter().zip(lengths).zip(&states) {
+                let n_pages = (len + PAGE_TOKENS - 1) / PAGE_TOKENS;
+                // Registration failure (a racing eviction starved a
+                // retain) only loses cache coverage, never correctness.
+                let _ = self.prefix.insert(&self.page_alloc, &toks[..len], &st.table[..n_pages]);
+            }
+        }
+        Ok((states, logits))
     }
 }
 
@@ -951,6 +1178,19 @@ impl Backend for NativeBackend {
         self.traffic.drain()
     }
 
+    fn kv_stats(&self) -> KvStats {
+        self.page_alloc.stats()
+    }
+
+    fn prefix_cached_tokens(&self, tokens: &[i32]) -> usize {
+        if tokens.is_empty() || !self.prefix_enabled.load(Ordering::Relaxed) {
+            return 0;
+        }
+        // Same `len - 1` cap as prefill's lookup: the final position is
+        // always computed, so it can never be served from the cache.
+        self.prefix.peek(tokens, tokens.len() - 1)
+    }
+
     fn prefill_batch(
         &self,
         slots: &[SeqSlot],
@@ -966,29 +1206,10 @@ impl Backend for NativeBackend {
             anyhow::ensure!(toks.len() == p, "prefill needs exactly {p} (padded) tokens");
             anyhow::ensure!(len >= 1 && len <= p, "prefill length out of range");
         }
-        let b = slots.len();
-        let mut kvbufs: Vec<Vec<f32>> = (0..b).map(|_| vec![0.0f32; self.kv_elements()]).collect();
-        let mut logits: Vec<Vec<f32>> = vec![Vec::new(); b];
-        let maxlen = lengths.iter().copied().max().unwrap_or(0);
-        // Position-lockstep over the batch: sequences past their own length
-        // drop out, the rest share one weight stream per position.
-        for t in 0..maxlen {
-            let active: Vec<usize> = (0..b).filter(|&i| t < lengths[i]).collect();
-            let toks: Vec<i32> = active.iter().map(|&i| prompts[i][t]).collect();
-            let poss: Vec<usize> = vec![t; active.len()];
-            let mut kvs: Vec<&mut [f32]> = kvbufs
-                .iter_mut()
-                .enumerate()
-                .filter(|(i, _)| t < lengths[*i])
-                .map(|(_, kv)| kv.as_mut_slice())
-                .collect();
-            let rows = self.step_batch(PassKind::Prefill, &toks, &poss, &mut kvs)?;
-            for (&i, row) in active.iter().zip(rows) {
-                logits[i] = row;
-            }
-        }
-        for (&slot, kv) in slots.iter().zip(kvbufs) {
-            self.arena.put(slot, BackendState::Native(NativeState { kv }))?;
+        let views: Vec<&[i32]> = prompts.iter().map(|t| t.as_slice()).collect();
+        let (states, logits) = self.prefill_states(&views, lengths)?;
+        for (&slot, st) in slots.iter().zip(states) {
+            self.arena.put(slot, BackendState::Native(st))?;
         }
         Ok(logits)
     }
@@ -1039,9 +1260,8 @@ impl Backend for NativeBackend {
         for row in 0..s {
             let toks: Vec<i32> = tokens.iter().map(|t| t[row]).collect();
             let poss: Vec<usize> = pos0.iter().map(|&p| p + row).collect();
-            let mut kvs: Vec<&mut [f32]> =
-                states.iter_mut().map(|st| st.kv.as_mut_slice()).collect();
-            match self.step_batch(PassKind::Verify, &toks, &poss, &mut kvs) {
+            let mut refs: Vec<&mut NativeState> = states.iter_mut().collect();
+            match self.step_batch(PassKind::Verify, &toks, &poss, &mut refs) {
                 Ok(rows) => {
                     for (i, r) in rows.into_iter().enumerate() {
                         out[i][row * v..(row + 1) * v].copy_from_slice(&r);
@@ -1064,23 +1284,21 @@ impl Backend for NativeBackend {
         let p = self.config.prefill_len;
         anyhow::ensure!(tokens.len() == p, "prefill needs exactly {p} (padded) tokens");
         anyhow::ensure!(length >= 1 && length <= p, "prefill length out of range");
-        let mut kv = vec![0.0f32; self.kv_elements()];
-        let mut logits = Vec::new();
-        for (t, &tok) in tokens.iter().enumerate().take(length) {
-            logits = self.step(PassKind::Prefill, tok, t, &mut kv)?;
-        }
-        Ok(StepOutput { logits, state: BackendState::Native(NativeState { kv }) })
+        let (states, logits) = self.prefill_states(&[tokens], &[length])?;
+        let state = states.into_iter().next().expect("batch of one");
+        let logits = logits.into_iter().next().expect("batch of one");
+        Ok(StepOutput { logits, state: BackendState::Native(state) })
     }
 
     fn decode_full(&self, token: i32, pos: usize, state: BackendState) -> Result<StepOutput> {
         let mut s = self.take_state(state)?;
-        let logits = self.step(PassKind::Full, token, pos, &mut s.kv)?;
+        let logits = self.step(PassKind::Full, token, pos, &mut s)?;
         Ok(StepOutput { logits, state: BackendState::Native(s) })
     }
 
     fn decode_draft(&self, token: i32, pos: usize, state: BackendState) -> Result<StepOutput> {
         let mut s = self.take_state(state)?;
-        let logits = self.step(PassKind::Draft, token, pos, &mut s.kv)?;
+        let logits = self.step(PassKind::Draft, token, pos, &mut s)?;
         Ok(StepOutput { logits, state: BackendState::Native(s) })
     }
 
@@ -1093,9 +1311,11 @@ impl Backend for NativeBackend {
         // Each row runs the same full-precision step as `decode_full`, so
         // verification is bit-identical to sequential decoding; rows past
         // the real draft length score padding tokens whose KV rows are
-        // never attended before being overwritten.
+        // never attended before being overwritten.  Overwriting a drafted
+        // position whose page is shared with the prefix tree (the prompt's
+        // tail page) copy-on-writes just that page inside `step_batch`.
         for (i, &tok) in tokens.iter().enumerate() {
-            let row = self.step(PassKind::Verify, tok, pos0 + i, &mut st.kv)?;
+            let row = self.step(PassKind::Verify, tok, pos0 + i, &mut st)?;
             logits[i * v..(i + 1) * v].copy_from_slice(&row);
         }
         Ok(VerifyOutput { logits, state: BackendState::Native(st) })
@@ -1107,10 +1327,13 @@ impl Backend for NativeBackend {
         anyhow::ensure!(length >= 1 && length <= p, "eval length out of range");
         anyhow::ensure!(p <= self.config.cache_len, "prefill window exceeds cache");
         let v = self.config.vocab;
-        let mut kv = vec![0.0f32; self.kv_elements()];
+        // The perplexity harness needs every position's logits, so this
+        // path stays cold: a fresh unshared state, no prefix-tree lookup
+        // or registration (cached positions would skip their logits row).
+        let mut state = self.fresh_state();
         let mut out = vec![0.0f32; p * v];
         for (t, &tok) in tokens.iter().enumerate().take(length) {
-            let row = self.step(PassKind::Prefill, tok, t, &mut kv)?;
+            let row = self.step(PassKind::Prefill, tok, t, &mut state)?;
             out[t * v..(t + 1) * v].copy_from_slice(&row);
         }
         Ok(out)
@@ -1729,5 +1952,84 @@ mod tests {
         let pre = b.prefill(&toks, 2).unwrap();
         let err = b.decode_full(64, 2, pre.state).unwrap_err();
         assert!(format!("{err}").contains("vocab"), "{err}");
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn prefix_cache_serves_repeat_prompts_bitwise() {
+        let b = NativeBackend::synthetic(tiny_cfg(), 5, 9, InitStyle::Confident).unwrap();
+        let toks: Vec<i32> = (0..32).map(|t| t % 64).collect();
+        let first = b.prefill(&toks, 32).unwrap();
+        let miss = b.kv_stats();
+        assert_eq!(miss.prefix_hit_tokens, 0);
+        assert_eq!(miss.prefix_miss_tokens, 32);
+        // The repeat prompt reuses the cached full page; the tail page is
+        // capped at len-1 (the final position's logits must be computed).
+        assert_eq!(b.prefix_cached_tokens(&toks), 16);
+        let second = b.prefill(&toks, 32).unwrap();
+        let hit = b.kv_stats();
+        assert_eq!(hit.prefix_hit_tokens, 16);
+        assert_eq!(hit.prefix_miss_tokens, 32 + 16);
+        assert_eq!(bits(&first.logits), bits(&second.logits), "reuse changed the logits");
+        assert!(hit.pages_shared > 0, "live sequences + tree should share pages");
+    }
+
+    #[test]
+    fn decode_into_a_shared_tail_page_cows_it() {
+        let b = NativeBackend::synthetic(tiny_cfg(), 5, 9, InitStyle::Confident).unwrap();
+        let toks: Vec<i32> = (0..32).map(|t| (t * 3) % 64).collect();
+        // 20-token prompt: one full page + a 4-token tail page, both
+        // registered in (and pinned by) the prefix tree.
+        let pre1 = b.prefill(&toks, 20).unwrap();
+        let cow0 = b.kv_stats().cow_copies;
+        let step1 = b.decode_full(7, 20, pre1.state).unwrap();
+        assert!(
+            b.kv_stats().cow_copies > cow0,
+            "writing into the tree-shared tail page must copy-on-write"
+        );
+        // The tree's copy kept the original bits: a fresh sequence over
+        // the same prompt + decode reproduces the logits bitwise.
+        let pre2 = b.prefill(&toks, 20).unwrap();
+        let step2 = b.decode_full(7, 20, pre2.state).unwrap();
+        assert_eq!(bits(&step1.logits), bits(&step2.logits));
+    }
+
+    #[test]
+    fn freed_sequences_return_their_pages() {
+        let b = NativeBackend::synthetic(tiny_cfg(), 5, 3, InitStyle::Random).unwrap();
+        b.set_prefix_cache(false);
+        let toks = vec![1i32; b.prefill_len()];
+        let pre = b.prefill(&toks, 32).unwrap();
+        assert_eq!(b.kv_stats().pages_in_use, 2, "32 positions = 2 pages");
+        drop(pre.state);
+        assert_eq!(b.kv_stats().pages_in_use, 0, "dropping the state must free its pages");
+        // And through the arena path too.
+        let slot = b.alloc_slot();
+        b.prefill_batch(&[slot], &[toks.clone()], &[20]).unwrap();
+        assert_eq!(b.kv_stats().pages_in_use, 2);
+        b.free_slot(slot);
+        assert_eq!(b.kv_stats().pages_in_use, 0);
+    }
+
+    #[test]
+    fn disabling_the_prefix_cache_matches_dense_behavior() {
+        let cached = NativeBackend::synthetic(tiny_cfg(), 5, 9, InitStyle::Confident).unwrap();
+        let dense = NativeBackend::synthetic(tiny_cfg(), 5, 9, InitStyle::Confident).unwrap();
+        dense.set_prefix_cache(false);
+        let toks: Vec<i32> = (0..32).map(|t| (t * 5) % 64).collect();
+        for _ in 0..2 {
+            let a = cached.prefill(&toks, 32).unwrap();
+            let d = dense.prefill(&toks, 32).unwrap();
+            assert_eq!(bits(&a.logits), bits(&d.logits));
+            let a2 = cached.decode_full(3, 32, a.state).unwrap();
+            let d2 = dense.decode_full(3, 32, d.state).unwrap();
+            assert_eq!(bits(&a2.logits), bits(&d2.logits));
+        }
+        assert_eq!(dense.kv_stats().prefix_hit_tokens, 0);
+        assert!(cached.kv_stats().prefix_hit_tokens > 0);
+        assert_eq!(dense.prefix_cached_tokens(&toks), 0);
     }
 }

@@ -1,0 +1,439 @@
+//! Paged KV cache: a refcounted free-list page allocator.
+//!
+//! The dense per-sequence KV buffer (`n_layers x 2 x cache_len x d_model`
+//! f32s, allocated up front at full context length) made worst-case
+//! context length the memory ceiling on concurrency.  This module splits
+//! the cache into fixed-size **pages** of [`PAGE_TOKENS`] token positions
+//! (all layers and heads of those positions), handed out by a free-list
+//! [`PageAllocator`] owned by the backend.  Sequences hold per-sequence
+//! page tables (`Vec<PageId>`) instead of flat buffers, so a sequence
+//! only ever occupies pages for positions it has actually written.
+//!
+//! **Sharing + copy-on-write.**  Pages are refcounted: the prefix tree
+//! ([`super::prefix`]) and any number of sequence tables may reference
+//! the same immutable page.  A sequence about to *write* a shared page
+//! (first decode into a cached prefix's tail page, `verify` overwriting
+//! drafted positions) calls [`PageAllocator::make_unique`], which clones
+//! just that page (copy-on-write) — every other reference keeps the
+//! original bits.
+//!
+//! **Safety model.**  [`PageId`]s carry a generation counter: releasing a
+//! page to refcount 0 bumps its generation, so any stale id (double
+//! free, use-after-free through an old page table) is rejected with an
+//! error instead of corrupting another sequence's cache —
+//! `rust/tests/kv_paging.rs` audits these paths.  Page *data* lives in
+//! boxed slabs whose addresses never move as capacity grows, so the raw
+//! row pointers the attention kernels gather through ([`PagePtr`])
+//! remain valid across allocator growth; all page-data access is
+//! serialized by the backend's workspace lock (see `native.rs`).
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+/// Token positions per KV page.  One page holds
+/// `n_layers * 2 * PAGE_TOKENS * d_model` f32s — all layers/heads of 16
+/// consecutive positions — so page-table indexing is `pos / PAGE_TOKENS`
+/// and in-page slotting is `pos % PAGE_TOKENS`.
+pub const PAGE_TOKENS: usize = 16;
+
+/// Pages per backing slab chunk (chunks are boxed so page addresses are
+/// stable as the pool grows).
+const CHUNK_PAGES: usize = 32;
+
+/// A checked handle to one page: slab index plus the generation the
+/// handle was issued at.  A page's generation bumps every time it is
+/// freed, so handles retained past a free are detected (use-after-free /
+/// double-free) instead of silently aliasing a reallocated page.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PageId {
+    index: u32,
+    gen: u32,
+}
+
+impl PageId {
+    /// Slab index (diagnostics; identity is `(index, gen)`).
+    pub fn index(&self) -> u32 {
+        self.index
+    }
+}
+
+/// A raw pointer to one page's f32 data.  `Send + Sync` so the attention
+/// pool's closures can gather through a batch-wide pointer table; safety
+/// rests on the backend's discipline (all page-data access runs under
+/// the workspace lock, and written pages are exclusively owned — see
+/// `native.rs`).
+#[derive(Debug, Clone, Copy)]
+pub struct PagePtr(*mut f32);
+
+unsafe impl Send for PagePtr {}
+unsafe impl Sync for PagePtr {}
+
+impl PagePtr {
+    /// A null placeholder for table slots beyond a sequence's length.
+    pub fn dangling() -> Self {
+        PagePtr(std::ptr::NonNull::dangling().as_ptr())
+    }
+
+    /// Read `len` f32s at `offset` into the page.
+    ///
+    /// # Safety
+    /// `offset + len` must lie inside the page and no `&mut` access to
+    /// that range may be live (the backend serializes page access).
+    pub unsafe fn row(&self, offset: usize, len: usize) -> &[f32] {
+        std::slice::from_raw_parts(self.0.add(offset), len)
+    }
+
+    /// Mutable view of `len` f32s at `offset` into the page.
+    ///
+    /// # Safety
+    /// As [`PagePtr::row`], plus the range must be exclusively owned by
+    /// the caller (refcount-1 pages only; COW guarantees this).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn row_mut(&self, offset: usize, len: usize) -> &mut [f32] {
+        std::slice::from_raw_parts_mut(self.0.add(offset), len)
+    }
+}
+
+/// Point-in-time KV paging statistics (gauges are current values,
+/// counters are cumulative since allocator construction).  Surfaced
+/// through [`Backend::kv_stats`] into coordinator metrics and the
+/// Prometheus `/metrics` page.
+///
+/// [`Backend::kv_stats`]: super::backend::Backend::kv_stats
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvStats {
+    /// Pages currently allocated (refcount >= 1).
+    pub pages_in_use: u64,
+    /// Pages currently referenced by more than one holder (shared
+    /// prefix pages).
+    pub pages_shared: u64,
+    /// Slab capacity in pages (grows on demand, never shrinks).
+    pub pages_capacity: u64,
+    /// High-water mark of `pages_in_use`.
+    pub pages_high_water: u64,
+    /// Cumulative copy-on-write page clones.
+    pub cow_copies: u64,
+    /// Cumulative prompt tokens served from the prefix cache (skipped
+    /// forward-pass positions).
+    pub prefix_hit_tokens: u64,
+    /// Cumulative prompt tokens computed by the forward pass.
+    pub prefix_miss_tokens: u64,
+}
+
+struct PageMeta {
+    refcount: u32,
+    gen: u32,
+}
+
+struct PageInner {
+    /// Backing slabs, `CHUNK_PAGES * page_elems` f32s each.  Boxed so
+    /// page addresses never move when `chunks` grows.
+    chunks: Vec<Box<[f32]>>,
+    meta: Vec<PageMeta>,
+    free: Vec<u32>,
+    in_use: u64,
+    high_water: u64,
+    cow_copies: u64,
+    prefix_hit_tokens: u64,
+    prefix_miss_tokens: u64,
+}
+
+/// Free-list allocator of fixed-size refcounted KV pages.
+pub struct PageAllocator {
+    page_elems: usize,
+    inner: Mutex<PageInner>,
+}
+
+impl PageAllocator {
+    /// An allocator of pages holding `page_elems` f32s each (the backend
+    /// sizes this as `n_layers * 2 * PAGE_TOKENS * d_model`).
+    pub fn new(page_elems: usize) -> Self {
+        assert!(page_elems > 0, "page_elems must be positive");
+        Self {
+            page_elems,
+            inner: Mutex::new(PageInner {
+                chunks: Vec::new(),
+                meta: Vec::new(),
+                free: Vec::new(),
+                in_use: 0,
+                high_water: 0,
+                cow_copies: 0,
+                prefix_hit_tokens: 0,
+                prefix_miss_tokens: 0,
+            }),
+        }
+    }
+
+    /// f32 elements per page.
+    pub fn page_elems(&self) -> usize {
+        self.page_elems
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, PageInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Allocate a zeroed page with refcount 1.
+    pub fn alloc(&self) -> PageId {
+        let mut g = self.lock();
+        let index = match g.free.pop() {
+            Some(i) => i,
+            None => {
+                let i = g.meta.len() as u32;
+                if (i as usize) % CHUNK_PAGES == 0 {
+                    g.chunks.push(vec![0.0f32; CHUNK_PAGES * self.page_elems].into_boxed_slice());
+                }
+                g.meta.push(PageMeta { refcount: 0, gen: 0 });
+                i
+            }
+        };
+        let gen = {
+            let m = &mut g.meta[index as usize];
+            debug_assert_eq!(m.refcount, 0, "free-list page had live references");
+            m.refcount = 1;
+            m.gen
+        };
+        // Recycled pages carry a previous sequence's KV rows; zero them so
+        // a fresh page is indistinguishable from the dense layout's
+        // zero-initialized buffers.
+        let (c, off) = (index as usize / CHUNK_PAGES, (index as usize % CHUNK_PAGES) * self.page_elems);
+        g.chunks[c][off..off + self.page_elems].fill(0.0);
+        g.in_use += 1;
+        g.high_water = g.high_water.max(g.in_use);
+        PageId { index, gen }
+    }
+
+    fn check(&self, g: &PageInner, id: PageId, op: &str) -> Result<()> {
+        let m = g
+            .meta
+            .get(id.index as usize)
+            .ok_or_else(|| anyhow::anyhow!("{op}: page index {} out of range", id.index))?;
+        anyhow::ensure!(
+            m.gen == id.gen,
+            "{op}: stale page id {} (gen {} != live gen {}): double free or use-after-free \
+             through an old page table",
+            id.index,
+            id.gen,
+            m.gen
+        );
+        anyhow::ensure!(
+            m.refcount > 0,
+            "{op}: page {} refcount underflow (page already free)",
+            id.index
+        );
+        Ok(())
+    }
+
+    /// Add a reference to a live page.
+    pub fn retain(&self, id: PageId) -> Result<()> {
+        let mut g = self.lock();
+        self.check(&g, id, "retain")?;
+        g.meta[id.index as usize].refcount += 1;
+        Ok(())
+    }
+
+    /// Drop a reference; the page returns to the free list (and its
+    /// generation bumps, invalidating every outstanding [`PageId`]) when
+    /// the count reaches zero.
+    pub fn release(&self, id: PageId) -> Result<()> {
+        let mut g = self.lock();
+        self.check(&g, id, "release")?;
+        let m = &mut g.meta[id.index as usize];
+        m.refcount -= 1;
+        if m.refcount == 0 {
+            m.gen = m.gen.wrapping_add(1);
+            g.free.push(id.index);
+            g.in_use -= 1;
+        }
+        Ok(())
+    }
+
+    /// Current reference count of a live page.
+    pub fn refcount(&self, id: PageId) -> Result<u32> {
+        let g = self.lock();
+        self.check(&g, id, "refcount")?;
+        Ok(g.meta[id.index as usize].refcount)
+    }
+
+    /// Ensure the caller holds the only reference to this page's data,
+    /// cloning it (copy-on-write) when it is shared.  Returns the id to
+    /// use in the caller's table and whether a copy happened; the
+    /// caller's original reference is consumed on copy.
+    pub fn make_unique(&self, id: PageId) -> Result<(PageId, bool)> {
+        let mut g = self.lock();
+        self.check(&g, id, "make_unique")?;
+        if g.meta[id.index as usize].refcount == 1 {
+            return Ok((id, false));
+        }
+        // Shared: allocate a private clone and move the caller's ref.
+        let new_index = match g.free.pop() {
+            Some(i) => i,
+            None => {
+                let i = g.meta.len() as u32;
+                if (i as usize) % CHUNK_PAGES == 0 {
+                    g.chunks.push(vec![0.0f32; CHUNK_PAGES * self.page_elems].into_boxed_slice());
+                }
+                g.meta.push(PageMeta { refcount: 0, gen: 0 });
+                i
+            }
+        };
+        let pe = self.page_elems;
+        let (sc, so) = (id.index as usize / CHUNK_PAGES, (id.index as usize % CHUNK_PAGES) * pe);
+        let (dc, dof) = (new_index as usize / CHUNK_PAGES, (new_index as usize % CHUNK_PAGES) * pe);
+        if sc == dc {
+            let chunk = &mut g.chunks[sc];
+            chunk.copy_within(so..so + pe, dof);
+        } else {
+            // Disjoint chunks: split-borrow the vector.
+            let (lo, hi) = g.chunks.split_at_mut(sc.max(dc));
+            let (src, dst) = if sc < dc {
+                (&lo[sc][so..so + pe], &mut hi[0][dof..dof + pe])
+            } else {
+                (&hi[0][so..so + pe], &mut lo[dc][dof..dof + pe])
+            };
+            dst.copy_from_slice(src);
+        }
+        let gen = {
+            let m = &mut g.meta[new_index as usize];
+            m.refcount = 1;
+            m.gen
+        };
+        g.meta[id.index as usize].refcount -= 1;
+        g.in_use += 1;
+        g.high_water = g.high_water.max(g.in_use);
+        g.cow_copies += 1;
+        Ok((PageId { index: new_index, gen }, true))
+    }
+
+    /// Raw pointer to a live page's data (stable until the page is freed
+    /// — slabs never move).  See [`PagePtr`] for the access contract.
+    pub fn page_ptr(&self, id: PageId) -> Result<PagePtr> {
+        let mut g = self.lock();
+        self.check(&g, id, "page_ptr")?;
+        let (c, off) = (id.index as usize / CHUNK_PAGES, (id.index as usize % CHUNK_PAGES) * self.page_elems);
+        Ok(PagePtr(g.chunks[c][off..].as_mut_ptr()))
+    }
+
+    /// Record prompt tokens served from the prefix cache vs computed.
+    pub fn add_prefix_tokens(&self, hit: u64, miss: u64) {
+        let mut g = self.lock();
+        g.prefix_hit_tokens += hit;
+        g.prefix_miss_tokens += miss;
+    }
+
+    /// Point-in-time statistics (see [`KvStats`]).
+    pub fn stats(&self) -> KvStats {
+        let g = self.lock();
+        KvStats {
+            pages_in_use: g.in_use,
+            pages_shared: g.meta.iter().filter(|m| m.refcount > 1).count() as u64,
+            pages_capacity: g.meta.len() as u64,
+            pages_high_water: g.high_water,
+            cow_copies: g.cow_copies,
+            prefix_hit_tokens: g.prefix_hit_tokens,
+            prefix_miss_tokens: g.prefix_miss_tokens,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_zeroes_and_tracks_occupancy() {
+        let a = PageAllocator::new(8);
+        let p = a.alloc();
+        let ptr = a.page_ptr(p).unwrap();
+        unsafe { ptr.row_mut(0, 8) }.copy_from_slice(&[1.0; 8]);
+        assert_eq!(a.stats().pages_in_use, 1);
+        a.release(p).unwrap();
+        assert_eq!(a.stats().pages_in_use, 0);
+        // The recycled page must come back zeroed.
+        let q = a.alloc();
+        assert_eq!(q.index(), p.index());
+        let ptr = a.page_ptr(q).unwrap();
+        assert!(unsafe { ptr.row(0, 8) }.iter().all(|&v| v == 0.0));
+        assert_eq!(a.stats().pages_high_water, 1);
+        a.release(q).unwrap();
+    }
+
+    #[test]
+    fn double_free_is_rejected() {
+        let a = PageAllocator::new(4);
+        let p = a.alloc();
+        a.release(p).unwrap();
+        let err = a.release(p).unwrap_err();
+        assert!(format!("{err}").contains("stale page id"), "{err}");
+    }
+
+    #[test]
+    fn stale_id_after_recycle_is_rejected() {
+        let a = PageAllocator::new(4);
+        let p = a.alloc();
+        a.release(p).unwrap();
+        let q = a.alloc(); // recycles the same slab index, new generation
+        assert_eq!(p.index(), q.index());
+        assert!(a.page_ptr(p).is_err(), "stale page_ptr must fail");
+        assert!(a.retain(p).is_err(), "stale retain must fail");
+        assert!(a.release(p).is_err(), "stale release must fail");
+        a.release(q).unwrap();
+    }
+
+    #[test]
+    fn refcounts_gate_the_free() {
+        let a = PageAllocator::new(4);
+        let p = a.alloc();
+        a.retain(p).unwrap();
+        assert_eq!(a.refcount(p).unwrap(), 2);
+        a.release(p).unwrap();
+        assert_eq!(a.stats().pages_in_use, 1, "still referenced");
+        a.release(p).unwrap();
+        assert_eq!(a.stats().pages_in_use, 0);
+        assert!(a.refcount(p).is_err(), "freed page has no refcount");
+    }
+
+    #[test]
+    fn make_unique_cows_shared_pages_only() {
+        let a = PageAllocator::new(4);
+        let p = a.alloc();
+        let ptr = a.page_ptr(p).unwrap();
+        unsafe { ptr.row_mut(0, 4) }.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        // Sole owner: no copy.
+        let (same, copied) = a.make_unique(p).unwrap();
+        assert_eq!(same, p);
+        assert!(!copied);
+        // Shared: the caller gets a private clone, the original survives.
+        a.retain(p).unwrap();
+        let (q, copied) = a.make_unique(p).unwrap();
+        assert!(copied);
+        assert_ne!(q.index(), p.index());
+        assert_eq!(a.refcount(p).unwrap(), 1);
+        assert_eq!(a.refcount(q).unwrap(), 1);
+        let qp = a.page_ptr(q).unwrap();
+        assert_eq!(unsafe { qp.row(0, 4) }, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.stats().cow_copies, 1);
+        // The clone is independent of the original.
+        unsafe { qp.row_mut(0, 1) }[0] = 9.0;
+        let pp = a.page_ptr(p).unwrap();
+        assert_eq!(unsafe { pp.row(0, 1) }[0], 1.0);
+        a.release(p).unwrap();
+        a.release(q).unwrap();
+    }
+
+    #[test]
+    fn pointers_survive_slab_growth() {
+        let a = PageAllocator::new(2);
+        let first = a.alloc();
+        let ptr = a.page_ptr(first).unwrap();
+        unsafe { ptr.row_mut(0, 2) }.copy_from_slice(&[7.0, 8.0]);
+        // Force several chunk allocations.
+        let many: Vec<PageId> = (0..CHUNK_PAGES * 3).map(|_| a.alloc()).collect();
+        assert_eq!(unsafe { ptr.row(0, 2) }, &[7.0, 8.0], "page data moved");
+        for p in many {
+            a.release(p).unwrap();
+        }
+        a.release(first).unwrap();
+    }
+}

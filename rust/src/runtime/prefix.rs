@@ -1,0 +1,405 @@
+//! Radix tree over token streams for KV prefix sharing.
+//!
+//! Each node covers one KV page: up to [`PAGE_TOKENS`] consecutive
+//! prompt tokens plus the (immutable, refcounted) page holding their KV
+//! rows.  Full nodes (exactly `PAGE_TOKENS` tokens) may have children;
+//! partial nodes (a prompt's sub-page tail) are terminal.  Prefill
+//! consults the tree first: every whole-node match contributes its page
+//! to the new sequence's table by reference (refcount bump) instead of
+//! recomputing those positions, so prefill of a cached prefix is a tree
+//! walk plus a forward pass over only the novel suffix.
+//!
+//! **Why reuse is bit-exact.**  A node's page was written by a
+//! deterministic prefill of exactly those tokens at exactly those
+//! absolute positions (RoPE positions always start at 0), and the
+//! runtime's kernels are bitwise reproducible across batch composition,
+//! thread count, and SIMD tier — so the cached rows are bit-identical to
+//! what recomputation would produce (pinned by `kv_paging.rs` /
+//! `prop_threads.rs` / `prop_simd.rs`).
+//!
+//! Tree references pin pages: a sequence that later *writes* into a
+//! tree-shared page (its first decode lands in the cached tail page;
+//! `verify` overwrites drafted positions) triggers copy-on-write of just
+//! that page ([`PageAllocator::make_unique`]).  Capacity is bounded:
+//! past `max_pages`, least-recently-used leaves are evicted and their
+//! pages released.
+//!
+//! Lock order: the tree's mutex is acquired *before* the allocator's
+//! (tree ops retain/release pages while holding their own lock); no path
+//! takes the locks in the opposite order.
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::paging::{PageAllocator, PageId, PAGE_TOKENS};
+
+struct Node {
+    /// The 1..=PAGE_TOKENS prompt tokens this node's page covers.
+    tokens: Vec<i32>,
+    /// The KV page; the tree holds one reference.
+    page: PageId,
+    /// Child node indices (full nodes only; partial nodes are terminal).
+    children: Vec<usize>,
+    parent: Option<usize>,
+    /// LRU clock stamp of the last lookup/insert touching this node.
+    last_used: u64,
+}
+
+struct TreeInner {
+    nodes: Vec<Option<Node>>,
+    free: Vec<usize>,
+    roots: Vec<usize>,
+    pages_held: usize,
+    clock: u64,
+}
+
+/// The prefix tree (interior mutability; shared by prefill and the
+/// admission path).
+pub struct PrefixTree {
+    max_pages: usize,
+    inner: Mutex<TreeInner>,
+}
+
+impl PrefixTree {
+    /// A tree pinning at most `max_pages` pages (LRU leaf eviction past
+    /// that).
+    pub fn new(max_pages: usize) -> Self {
+        Self {
+            max_pages,
+            inner: Mutex::new(TreeInner {
+                nodes: Vec::new(),
+                free: Vec::new(),
+                roots: Vec::new(),
+                pages_held: 0,
+                clock: 0,
+            }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, TreeInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Pages currently pinned by the tree.
+    pub fn pages_held(&self) -> usize {
+        self.lock().pages_held
+    }
+
+    /// Longest cached prefix of `tokens` reusable under the cap: pages
+    /// are retained for the caller (one reference each, in table order)
+    /// and the covered token count is returned.  The match never exceeds
+    /// `max_tokens` — prefill passes `len - 1` so the final prompt
+    /// position (whose logits the caller needs) is always computed.
+    pub fn lookup(
+        &self,
+        alloc: &PageAllocator,
+        tokens: &[i32],
+        max_tokens: usize,
+    ) -> (Vec<PageId>, usize) {
+        let mut g = self.lock();
+        g.clock += 1;
+        let clock = g.clock;
+        let mut pages = Vec::new();
+        let mut matched = 0usize;
+        let mut level: &[usize] = &g.roots;
+        let mut found: Vec<usize> = Vec::new(); // node path, for stamping
+        loop {
+            let rest = &tokens[matched..];
+            // Prefer the longest matching child (a full node over a
+            // partial sibling sharing its first tokens).
+            let mut best: Option<usize> = None;
+            for &ni in level {
+                let node = g.nodes[ni].as_ref().expect("live child");
+                if node.tokens.len() <= rest.len()
+                    && matched + node.tokens.len() <= max_tokens
+                    && node.tokens[..] == rest[..node.tokens.len()]
+                    && best.map_or(true, |b| {
+                        g.nodes[b].as_ref().expect("live child").tokens.len() < node.tokens.len()
+                    })
+                {
+                    best = Some(ni);
+                }
+            }
+            let Some(ni) = best else { break };
+            let node = g.nodes[ni].as_ref().expect("live child");
+            if alloc.retain(node.page).is_err() {
+                break; // defensive: tree refs keep pages live
+            }
+            pages.push(node.page);
+            matched += node.tokens.len();
+            found.push(ni);
+            if node.tokens.len() < PAGE_TOKENS {
+                break; // partial nodes are terminal
+            }
+            // Re-borrow for the next level (split lifetimes via raw walk).
+            let children: *const Vec<usize> =
+                &g.nodes[ni].as_ref().expect("live child").children;
+            // SAFETY: `g` is held for the whole loop; nodes are not
+            // mutated during lookup.
+            level = unsafe { &*children };
+        }
+        for ni in found {
+            if let Some(n) = g.nodes[ni].as_mut() {
+                n.last_used = clock;
+            }
+        }
+        (pages, matched)
+    }
+
+    /// Covered-token count [`PrefixTree::lookup`] would return, without
+    /// retaining pages or touching LRU stamps (the admission path's
+    /// read-only probe).
+    pub fn peek(&self, tokens: &[i32], max_tokens: usize) -> usize {
+        let g = self.lock();
+        let mut matched = 0usize;
+        let mut level: &[usize] = &g.roots;
+        loop {
+            let rest = &tokens[matched..];
+            let mut best: Option<usize> = None;
+            for &ni in level {
+                let node = g.nodes[ni].as_ref().expect("live child");
+                if node.tokens.len() <= rest.len()
+                    && matched + node.tokens.len() <= max_tokens
+                    && node.tokens[..] == rest[..node.tokens.len()]
+                    && best.map_or(true, |b| {
+                        g.nodes[b].as_ref().expect("live child").tokens.len() < node.tokens.len()
+                    })
+                {
+                    best = Some(ni);
+                }
+            }
+            let Some(ni) = best else { break };
+            let node = g.nodes[ni].as_ref().expect("live child");
+            matched += node.tokens.len();
+            if node.tokens.len() < PAGE_TOKENS {
+                break;
+            }
+            let children: *const Vec<usize> = &node.children;
+            // SAFETY: `g` is held; read-only walk.
+            level = unsafe { &*children };
+        }
+        matched
+    }
+
+    /// Register a freshly prefilled prompt: `pages` is the sequence's
+    /// page table covering `tokens` (`ceil(len / PAGE_TOKENS)` entries).
+    /// Nodes already present are reused untouched (their pages may
+    /// differ in identity from the caller's but hold identical bits —
+    /// prefill is deterministic); new nodes retain the caller's pages.
+    /// Past the page cap, least-recently-used leaves are evicted.
+    pub fn insert(&self, alloc: &PageAllocator, tokens: &[i32], pages: &[PageId]) -> Result<()> {
+        let len = tokens.len();
+        anyhow::ensure!(
+            pages.len() * PAGE_TOKENS >= len && (len + PAGE_TOKENS - 1) / PAGE_TOKENS <= pages.len(),
+            "insert: {} pages cannot cover {len} tokens",
+            pages.len()
+        );
+        let mut g = self.lock();
+        g.clock += 1;
+        let clock = g.clock;
+        let mut parent: Option<usize> = None;
+        let n_pages = (len + PAGE_TOKENS - 1) / PAGE_TOKENS;
+        for pi in 0..n_pages {
+            let lo = pi * PAGE_TOKENS;
+            let hi = (lo + PAGE_TOKENS).min(len);
+            let seg = &tokens[lo..hi];
+            let level: Vec<usize> = match parent {
+                Some(p) => g.nodes[p].as_ref().expect("live parent").children.clone(),
+                None => g.roots.clone(),
+            };
+            let existing = level.iter().copied().find(|&ni| {
+                g.nodes[ni].as_ref().expect("live child").tokens[..] == seg[..]
+            });
+            match existing {
+                Some(ni) => {
+                    let node = g.nodes[ni].as_mut().expect("live child");
+                    node.last_used = clock;
+                    if node.tokens.len() < PAGE_TOKENS {
+                        break; // identical partial tail already cached
+                    }
+                    parent = Some(ni);
+                }
+                None => {
+                    alloc.retain(pages[pi])?;
+                    let node = Node {
+                        tokens: seg.to_vec(),
+                        page: pages[pi],
+                        children: Vec::new(),
+                        parent,
+                        last_used: clock,
+                    };
+                    let ni = match g.free.pop() {
+                        Some(i) => {
+                            g.nodes[i] = Some(node);
+                            i
+                        }
+                        None => {
+                            g.nodes.push(Some(node));
+                            g.nodes.len() - 1
+                        }
+                    };
+                    match parent {
+                        Some(p) => g.nodes[p].as_mut().expect("live parent").children.push(ni),
+                        None => g.roots.push(ni),
+                    }
+                    g.pages_held += 1;
+                    if seg.len() < PAGE_TOKENS {
+                        break;
+                    }
+                    parent = Some(ni);
+                }
+            }
+        }
+        // Enforce the page cap: evict the least-recently-used leaves
+        // (fresh inserts carry the current clock, so cold branches go
+        // first).
+        while g.pages_held > self.max_pages {
+            let victim = g
+                .nodes
+                .iter()
+                .enumerate()
+                .filter_map(|(i, n)| n.as_ref().map(|n| (i, n)))
+                .filter(|(_, n)| n.children.is_empty())
+                .min_by_key(|(_, n)| n.last_used)
+                .map(|(i, _)| i);
+            let Some(vi) = victim else { break };
+            let node = g.nodes[vi].take().expect("victim is live");
+            match node.parent {
+                Some(p) => {
+                    let pc = &mut g.nodes[p].as_mut().expect("live parent").children;
+                    pc.retain(|&c| c != vi);
+                }
+                None => g.roots.retain(|&c| c != vi),
+            }
+            g.free.push(vi);
+            g.pages_held -= 1;
+            // Release under the tree lock (documented lock order:
+            // tree -> allocator).
+            let _ = alloc.release(node.page);
+        }
+        Ok(())
+    }
+
+    /// Drop every node and release every pinned page (tests; also lets a
+    /// backend disable caching retroactively).
+    pub fn clear(&self, alloc: &PageAllocator) {
+        let mut g = self.lock();
+        for node in g.nodes.iter_mut() {
+            if let Some(n) = node.take() {
+                let _ = alloc.release(n.page);
+            }
+        }
+        g.nodes.clear();
+        g.free.clear();
+        g.roots.clear();
+        g.pages_held = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn page(alloc: &PageAllocator) -> PageId {
+        alloc.alloc()
+    }
+
+    #[test]
+    fn lookup_matches_whole_nodes_under_the_cap() {
+        let alloc = PageAllocator::new(4);
+        let tree = PrefixTree::new(64);
+        // 40-token prompt: two full pages + one 8-token partial tail.
+        let toks: Vec<i32> = (0..40).collect();
+        let pages: Vec<PageId> = (0..3).map(|_| page(&alloc)).collect();
+        tree.insert(&alloc, &toks, &pages).unwrap();
+        assert_eq!(tree.pages_held(), 3);
+
+        // Same prompt, capped at len-1: the partial tail cannot fit.
+        let (hit, r) = tree.lookup(&alloc, &toks, 39);
+        assert_eq!(r, 32);
+        assert_eq!(hit, pages[..2].to_vec());
+        assert_eq!(alloc.refcount(pages[0]).unwrap(), 3, "table + tree + lookup");
+        for p in hit {
+            alloc.release(p).unwrap();
+        }
+
+        // A longer prompt sharing the full pages + partial tail.
+        let mut longer = toks.clone();
+        longer.extend(40..50);
+        let (hit, r) = tree.lookup(&alloc, &longer, longer.len() - 1);
+        assert_eq!(r, 40, "partial tail matches when it fits under the cap");
+        assert_eq!(hit.len(), 3);
+        for p in hit {
+            alloc.release(p).unwrap();
+        }
+
+        // A diverging prompt matches nothing.
+        let mut other = toks.clone();
+        other[3] = 999;
+        let (hit, r) = tree.lookup(&alloc, &other, other.len());
+        assert_eq!((hit.len(), r), (0, 0));
+        for p in pages {
+            alloc.release(p).unwrap();
+        }
+    }
+
+    #[test]
+    fn peek_matches_lookup_without_retaining() {
+        let alloc = PageAllocator::new(4);
+        let tree = PrefixTree::new(64);
+        let toks: Vec<i32> = (0..32).collect();
+        let pages: Vec<PageId> = (0..2).map(|_| page(&alloc)).collect();
+        tree.insert(&alloc, &toks, &pages).unwrap();
+        assert_eq!(tree.peek(&toks, 31), 16);
+        assert_eq!(tree.peek(&toks, 32), 32);
+        assert_eq!(alloc.refcount(pages[0]).unwrap(), 2, "peek must not retain");
+        for p in pages {
+            alloc.release(p).unwrap();
+        }
+    }
+
+    #[test]
+    fn identical_reinsert_adds_nothing() {
+        let alloc = PageAllocator::new(4);
+        let tree = PrefixTree::new(64);
+        let toks: Vec<i32> = (0..20).collect();
+        let pages: Vec<PageId> = (0..2).map(|_| page(&alloc)).collect();
+        tree.insert(&alloc, &toks, &pages).unwrap();
+        let fresh: Vec<PageId> = (0..2).map(|_| page(&alloc)).collect();
+        tree.insert(&alloc, &toks, &fresh).unwrap();
+        assert_eq!(tree.pages_held(), 2, "identical prompt must not duplicate nodes");
+        assert_eq!(alloc.refcount(fresh[0]).unwrap(), 1, "reinsert must not retain");
+        for p in pages.into_iter().chain(fresh) {
+            alloc.release(p).unwrap();
+        }
+    }
+
+    #[test]
+    fn eviction_releases_lru_leaves() {
+        let alloc = PageAllocator::new(4);
+        let tree = PrefixTree::new(2);
+        let a: Vec<i32> = (0..16).collect();
+        let b: Vec<i32> = (100..116).collect();
+        let c: Vec<i32> = (200..216).collect();
+        let (pa, pb, pc) = (page(&alloc), page(&alloc), page(&alloc));
+        tree.insert(&alloc, &a, &[pa]).unwrap();
+        tree.insert(&alloc, &b, &[pb]).unwrap();
+        // Touch `a` so `b` is the LRU when `c` overflows the cap.
+        let (hit, _) = tree.lookup(&alloc, &a, 16);
+        for p in hit {
+            alloc.release(p).unwrap();
+        }
+        tree.insert(&alloc, &c, &[pc]).unwrap();
+        assert_eq!(tree.pages_held(), 2);
+        assert_eq!(tree.peek(&b, 16), 0, "LRU entry evicted");
+        assert_eq!(tree.peek(&a, 16), 16);
+        assert_eq!(tree.peek(&c, 16), 16);
+        assert_eq!(alloc.refcount(pb).unwrap(), 1, "eviction released the tree ref");
+        for p in [pa, pb, pc] {
+            alloc.release(p).unwrap();
+        }
+        tree.clear(&alloc);
+        assert_eq!(alloc.stats().pages_in_use, 0);
+    }
+}

@@ -1,0 +1,289 @@
+//! Paged-KV + prefix-sharing property suite.
+//!
+//! Three layers of guarantees:
+//!
+//! * **Memory safety** — the [`PageAllocator`]'s generation-stamped page
+//!   ids turn double frees, stale-page-table use-after-free, and refcount
+//!   underflow into typed errors instead of silent corruption, and the
+//!   [`PrefixTree`]'s retain/release discipline never leaks or
+//!   double-frees a page.
+//! * **Copy-on-write** — overwriting a drafted/decoded position that
+//!   lands in a tree-shared page copies exactly that page, leaving the
+//!   cached prefix bits untouched.
+//! * **Bit identity** — decoding a batch of sequences that share a
+//!   prompt prefix through the prefix cache is bitwise identical to
+//!   decoding them as fully independent sequences, across kernel thread
+//!   counts T in {1, 4} and every available SIMD tier, including under
+//!   concurrent batch steps from multiple threads.
+
+use speq::runtime::{
+    Backend, NativeBackend, PageAllocator, PrefixTree, SimdLevel, PAGE_TOKENS,
+};
+use speq::specdec::{BatchEngine, Engine, SpecConfig};
+
+// ---------------------------------------------------------------------------
+// allocator + tree memory-safety audits
+// ---------------------------------------------------------------------------
+
+#[test]
+fn double_free_is_a_typed_error_not_corruption() {
+    let alloc = PageAllocator::new(64);
+    let id = alloc.alloc();
+    alloc.release(id).expect("first release");
+    let err = alloc.release(id).expect_err("second release must fail");
+    assert!(format!("{err}").contains("stale page id"), "{err}");
+    assert_eq!(alloc.stats().pages_in_use, 0);
+}
+
+#[test]
+fn stale_page_table_reads_are_rejected() {
+    // A sequence that kept page ids across a free (use-after-free through
+    // an old page table) must get an error, even after the slot is
+    // recycled to a new owner.
+    let alloc = PageAllocator::new(64);
+    let old = alloc.alloc();
+    alloc.release(old).unwrap();
+    let new = alloc.alloc(); // recycles the same slab slot, new generation
+    assert_eq!(old.index(), new.index(), "free list must recycle the slot");
+    for err in [
+        alloc.page_ptr(old).expect_err("stale page_ptr"),
+        alloc.retain(old).expect_err("stale retain"),
+        alloc.make_unique(old).map(|_| ()).expect_err("stale make_unique"),
+    ] {
+        assert!(format!("{err}").contains("stale page id"), "{err}");
+    }
+    // The new owner is untouched by the rejected accesses.
+    assert_eq!(alloc.refcount(new).unwrap(), 1);
+    alloc.release(new).unwrap();
+}
+
+#[test]
+fn refcount_underflow_is_impossible() {
+    let alloc = PageAllocator::new(64);
+    let id = alloc.alloc();
+    alloc.retain(id).unwrap();
+    alloc.release(id).unwrap();
+    alloc.release(id).unwrap(); // hits zero: page freed, generation bumped
+    let err = alloc.release(id).expect_err("release below zero must fail");
+    assert!(format!("{err}").contains("stale page id"), "{err}");
+    assert_eq!(alloc.stats().pages_in_use, 0);
+}
+
+#[test]
+fn tree_clear_returns_every_retained_page() {
+    let alloc = PageAllocator::new(8);
+    let tree = PrefixTree::new(1024);
+    let tokens: Vec<i32> = (0..3 * PAGE_TOKENS as i32).collect();
+    let pages: Vec<_> = (0..3).map(|_| alloc.alloc()).collect();
+    tree.insert(&alloc, &tokens, &pages).unwrap();
+    // The tree holds its own references; drop the caller's.
+    for p in pages {
+        alloc.release(p).unwrap();
+    }
+    assert_eq!(alloc.stats().pages_in_use, 3);
+    tree.clear(&alloc);
+    assert_eq!(alloc.stats().pages_in_use, 0, "clear leaked pages");
+    assert_eq!(tree.pages_held(), 0);
+}
+
+#[test]
+fn lookup_references_are_real_retains() {
+    let alloc = PageAllocator::new(8);
+    let tree = PrefixTree::new(1024);
+    let tokens: Vec<i32> = (0..2 * PAGE_TOKENS as i32).collect();
+    let pages: Vec<_> = (0..2).map(|_| alloc.alloc()).collect();
+    tree.insert(&alloc, &tokens, &pages).unwrap();
+    let (hit, reused) = tree.lookup(&alloc, &tokens, tokens.len());
+    assert_eq!(reused, 2 * PAGE_TOKENS);
+    // Caller now co-owns the pages: clearing the tree must NOT free them.
+    tree.clear(&alloc);
+    for &p in &hit {
+        assert!(alloc.refcount(p).unwrap() >= 2, "lookup must retain for the caller");
+    }
+    for p in hit.into_iter().chain(pages) {
+        alloc.release(p).unwrap();
+    }
+    assert_eq!(alloc.stats().pages_in_use, 0);
+}
+
+// ---------------------------------------------------------------------------
+// copy-on-write through the backend
+// ---------------------------------------------------------------------------
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn overwriting_a_drafted_position_cows_exactly_one_page() {
+    let b = NativeBackend::builtin("vicuna-7b-tiny").expect("builtin");
+    let prompt: Vec<u8> = b"SYSTEM: shared preamble here.\nQ: 2 + 2 = ".to_vec();
+    let mut toks: Vec<i32> = prompt.iter().map(|&c| c as i32).collect();
+    let plen = toks.len();
+    toks.resize(b.prefill_len(), b' ' as i32);
+
+    let pre = b.prefill(&toks, plen).expect("prefill");
+    let s0 = b.kv_stats();
+    // The prompt's tail page is pinned by the prefix tree; the first
+    // decode writes into position `plen`, which lives in that page.
+    let step = b.decode_full(65, plen, pre.state).expect("decode");
+    let s1 = b.kv_stats();
+    assert_eq!(s1.cow_copies, s0.cow_copies + 1, "exactly one page must be copied");
+    assert_eq!(s1.pages_in_use, s0.pages_in_use + 1, "the copy is one new page");
+    // The page is now private: the next write in the same page must not
+    // copy again.
+    let step2 = b.decode_full(66, plen + 1, step.state).expect("decode 2");
+    assert_eq!(b.kv_stats().cow_copies, s1.cow_copies, "private pages never re-COW");
+
+    // The cached prefix kept its original bits: replaying the prompt and
+    // the same two decodes reproduces the logits bitwise.
+    let pre_b = b.prefill(&toks, plen).expect("prefill replay");
+    assert!(b.kv_stats().prefix_hit_tokens > 0, "replay should hit the cache");
+    let r1 = b.decode_full(65, plen, pre_b.state).expect("decode replay");
+    let r2 = b.decode_full(66, plen + 1, r1.state).expect("decode replay 2");
+    assert_eq!(bits(&step2.logits), bits(&r2.logits), "COW corrupted the shared prefix");
+}
+
+// ---------------------------------------------------------------------------
+// shared-prefix == independent, across threads and SIMD tiers
+// ---------------------------------------------------------------------------
+
+const SHARED_PREFIX: &[u8] = b"SYSTEM: you are a terse assistant. answer briefly.\n";
+
+fn prefixed_prompts() -> Vec<Vec<u8>> {
+    [
+        &b"Q: ada has 3 apples and finds 4 more. how many apples now?\nA: "[..],
+        b"Q: bob has 9 coins and spends 2. how many coins left?\nA: ",
+        b"USER: hello, can we talk about music?\nBOT: ",
+        b"def add_two(x):\n    return ",
+    ]
+    .iter()
+    .map(|suffix| {
+        let mut p = SHARED_PREFIX.to_vec();
+        p.extend_from_slice(suffix);
+        p
+    })
+    .collect()
+}
+
+fn spec_cfg() -> SpecConfig {
+    SpecConfig { max_draft: 8, gen_len: 24, ..Default::default() }
+}
+
+/// Generated token streams for the shared-prefix workload: batched run
+/// plus a sequential re-run of prompt 0 (which by then fully hits the
+/// cache on a caching backend).
+fn workload_streams(backend: &NativeBackend) -> Vec<Vec<u8>> {
+    let batch = BatchEngine::new(backend);
+    let requests: Vec<(Vec<u8>, SpecConfig)> =
+        prefixed_prompts().into_iter().map(|p| (p, spec_cfg())).collect();
+    let mut streams: Vec<Vec<u8>> =
+        batch.run_spec(&requests).expect("batched spec").into_iter().map(|r| r.tokens).collect();
+    let engine = Engine::new(backend);
+    streams.push(engine.generate_spec(&prefixed_prompts()[0], &spec_cfg()).expect("rerun").tokens);
+    streams
+}
+
+#[test]
+fn shared_prefix_decoding_is_bit_identical_to_independent() {
+    let mut reference: Option<Vec<Vec<u8>>> = None;
+    for threads in [1usize, 4] {
+        for level in SimdLevel::available() {
+            // Caching backend: sequences share prompt pages copy-on-write.
+            let mut cached = NativeBackend::builtin("vicuna-7b-tiny").expect("builtin");
+            cached.set_threads(threads);
+            cached.set_simd(level);
+            // Independent backend: prefix cache disabled, every sequence
+            // owns all of its pages (the dense-equivalent layout).
+            let mut dense = NativeBackend::builtin("vicuna-7b-tiny").expect("builtin");
+            dense.set_threads(threads);
+            dense.set_simd(level);
+            dense.set_prefix_cache(false);
+
+            let got_cached = workload_streams(&cached);
+            let got_dense = workload_streams(&dense);
+            let what = format!("T={threads} simd={}", level.name());
+            assert_eq!(got_cached, got_dense, "{what}: sharing changed the tokens");
+            let stats = cached.kv_stats();
+            assert!(stats.prefix_hit_tokens > 0, "{what}: workload never hit the cache");
+            assert!(stats.cow_copies > 0, "{what}: decode never had to COW");
+            assert_eq!(dense.kv_stats().prefix_hit_tokens, 0, "{what}: dense backend cached");
+            match &reference {
+                None => reference = Some(got_cached),
+                Some(want) => {
+                    assert_eq!(&got_cached, want, "{what}: diverged from T=1 scalar")
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn concurrent_batch_steps_over_shared_pages_stay_bitwise_correct() {
+    // Two sequences sharing every prompt page, decoded simultaneously
+    // from two OS threads through the slot arena: the workspace lock
+    // serializes page access, COW keeps their writes private, and both
+    // must reproduce the single-threaded reference bitwise.
+    let prompt: Vec<u8> = {
+        let mut p = SHARED_PREFIX.to_vec();
+        p.extend_from_slice(b"Q: carol has 7 cards and gives away 3. how many left?\nA: ");
+        p
+    };
+    let b = NativeBackend::builtin("vicuna-7b-tiny").expect("builtin");
+    let mut toks: Vec<i32> = prompt.iter().map(|&c| c as i32).collect();
+    let plen = toks.len();
+    toks.resize(b.prefill_len(), b' ' as i32);
+    let steps: Vec<i32> = (0..8).map(|k| 65 + k).collect();
+
+    // Single-sequence reference on an independent backend.
+    let reference: Vec<Vec<u32>> = {
+        let dense = NativeBackend::builtin("vicuna-7b-tiny").expect("builtin");
+        dense.set_prefix_cache(false);
+        let mut state = dense.prefill(&toks, plen).expect("prefill").state;
+        let mut rows = Vec::new();
+        for (k, &t) in steps.iter().enumerate() {
+            let out = dense.decode_full(t, plen + k, state).expect("decode");
+            rows.push(bits(&out.logits));
+            state = out.state;
+        }
+        rows
+    };
+
+    // Two slots over the caching backend; the second prefill reuses the
+    // first's pages through the tree.
+    let slots = [b.alloc_slot(), b.alloc_slot()];
+    b.prefill_batch(&slots[..1], &[toks.clone()], &[plen]).expect("prefill a");
+    b.prefill_batch(&slots[1..], &[toks.clone()], &[plen]).expect("prefill b");
+    assert!(b.kv_stats().prefix_hit_tokens > 0, "second prefill must hit the cache");
+    assert!(b.kv_stats().pages_shared > 0, "the two sequences must share pages");
+
+    let cow_before = b.kv_stats().cow_copies;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..2)
+            .map(|w| {
+                let b = &b;
+                let slot = slots[w];
+                let steps = &steps;
+                scope.spawn(move || -> Vec<Vec<u32>> {
+                    let mut rows = Vec::new();
+                    for (k, &t) in steps.iter().enumerate() {
+                        let out = b
+                            .decode_full_batch(&[slot], &[t], &[plen + k])
+                            .expect("concurrent decode");
+                        rows.push(out[0].iter().map(|v| v.to_bits()).collect());
+                    }
+                    rows
+                })
+            })
+            .collect();
+        for h in handles {
+            let rows = h.join().expect("worker");
+            assert_eq!(rows, reference, "concurrent shared-page decode diverged");
+        }
+    });
+    assert!(b.kv_stats().cow_copies > cow_before, "shared tail pages must COW");
+    for s in slots {
+        b.free_slot(s);
+    }
+    assert_eq!(b.arena().in_use(), 0, "leaked KV slots");
+}

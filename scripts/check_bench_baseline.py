@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Diff a loadgen BENCH_server_*.json snapshot against its checked-in baseline.
+
+Usage:
+    check_bench_baseline.py <baseline.json> <current.json> [<current.json> ...]
+
+Each file holds one JSON object in the loadgen ``bench_json`` schema
+(``tokens_per_sec``, ``ttft_p95_ms``, ``scenario``, ...).  When several
+current files are given (CI passes a glob), the first one that parses is
+used.
+
+The tolerance band is deliberately wide: shared CI runners jitter by
+integer factors, so the gate only catches order-of-magnitude regressions:
+
+* ``tokens_per_sec`` must stay >= ``MIN_THROUGHPUT_RATIO`` x baseline;
+* ``ttft_p95_ms``    must stay <= ``MAX_TTFT_RATIO``       x baseline;
+* the scenario tags must match, and the run must have completed requests.
+
+Exit status 0 = within band, 1 = regression or malformed input.
+"""
+
+import json
+import sys
+
+MIN_THROUGHPUT_RATIO = 0.25  # current tokens/sec may drop to 1/4 of baseline
+MAX_TTFT_RATIO = 8.0         # current p95 TTFT may grow to 8x baseline
+
+
+def load_one(path):
+    with open(path, "r", encoding="utf-8") as fh:
+        text = fh.read().strip()
+    # CI artifacts are one BENCH_JSON object per line; take the first.
+    first_line = text.splitlines()[0] if text else ""
+    return json.loads(first_line)
+
+
+def first_parseable(paths):
+    errors = []
+    for path in paths:
+        try:
+            return path, load_one(path)
+        except (OSError, ValueError, IndexError) as exc:
+            errors.append(f"{path}: {exc}")
+    raise SystemExit("no parseable current snapshot:\n  " + "\n  ".join(errors))
+
+
+def main(argv):
+    if len(argv) < 3:
+        raise SystemExit(__doc__)
+    baseline_path, current_paths = argv[1], argv[2:]
+    baseline = load_one(baseline_path)
+    current_path, current = first_parseable(current_paths)
+
+    failures = []
+
+    base_scenario = baseline.get("scenario")
+    cur_scenario = current.get("scenario")
+    if base_scenario != cur_scenario:
+        failures.append(
+            f"scenario mismatch: baseline={base_scenario!r} current={cur_scenario!r}"
+        )
+
+    if current.get("completed", 0) <= 0:
+        failures.append("current run completed zero requests")
+
+    base_tps = float(baseline.get("tokens_per_sec", 0.0))
+    cur_tps = float(current.get("tokens_per_sec", 0.0))
+    tps_floor = MIN_THROUGHPUT_RATIO * base_tps
+    if base_tps > 0.0 and cur_tps < tps_floor:
+        failures.append(
+            f"tokens_per_sec {cur_tps:.1f} below floor {tps_floor:.1f} "
+            f"({MIN_THROUGHPUT_RATIO}x baseline {base_tps:.1f})"
+        )
+
+    base_ttft = float(baseline.get("ttft_p95_ms", 0.0))
+    cur_ttft = float(current.get("ttft_p95_ms", 0.0))
+    ttft_ceiling = MAX_TTFT_RATIO * base_ttft
+    if base_ttft > 0.0 and cur_ttft > ttft_ceiling:
+        failures.append(
+            f"ttft_p95_ms {cur_ttft:.1f} above ceiling {ttft_ceiling:.1f} "
+            f"({MAX_TTFT_RATIO}x baseline {base_ttft:.1f})"
+        )
+
+    print(f"baseline: {baseline_path} (scenario={base_scenario})")
+    print(f"current:  {current_path} (scenario={cur_scenario})")
+    print(
+        f"tokens_per_sec: {cur_tps:.1f} vs baseline {base_tps:.1f} "
+        f"(floor {tps_floor:.1f})"
+    )
+    print(
+        f"ttft_p95_ms:    {cur_ttft:.1f} vs baseline {base_ttft:.1f} "
+        f"(ceiling {ttft_ceiling:.1f})"
+    )
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    print("OK: within tolerance band")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
