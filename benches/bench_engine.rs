@@ -10,7 +10,7 @@ use speq::model::SamplingParams;
 use speq::runtime::{
     load_backend, load_backend_with, Backend, ModelSource, NativeConfig, SeqSlot, SimdLevel,
 };
-use speq::specdec::{BatchEngine, Engine, SpecConfig};
+use speq::specdec::{AdaptiveConfig, BatchEngine, Engine, SpecConfig};
 use speq::util::bench::{black_box, smoke_requested, Bench};
 
 fn main() {
@@ -209,6 +209,23 @@ fn main() {
         );
     });
     b.metric("ar_tokens_per_s", gen as f64 / (s.mean_ns * 1e-9), "tok/s (CPU)");
+
+    // Same generation with the per-sequence adaptive draft-length
+    // controller steering the budget.  Greedy adaptation is lossless
+    // (token stream identical to static), so the delta against
+    // spec_tokens_per_s is pure controller overhead plus whatever its
+    // budget choices win or lose on this prompt.
+    let mut acfg = cfg;
+    acfg.adaptive = AdaptiveConfig::enabled();
+    let s = b.bench(format!("generate_spec_{gen}tok_adaptive"), || {
+        black_box(engine.generate_spec(prompt, &acfg).expect("adaptive spec").tokens.len());
+    });
+    let adaptive_tps = gen as f64 / (s.mean_ns * 1e-9);
+    b.metric("adaptive_spec_tokens_per_s", adaptive_tps, "tok/s (CPU)");
+    b.metrics_json(&[
+        ("spec_tokens_per_sec", spec_tps),
+        ("adaptive_spec_tokens_per_sec", adaptive_tps),
+    ]);
 
     // SIMD dispatch end-to-end: the same speculative generation with the
     // kernels forced to the scalar tier, against the default (best

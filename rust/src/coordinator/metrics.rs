@@ -50,6 +50,10 @@ pub struct Metrics {
     /// (point-in-time gauges plus monotonic prefix-cache counters; the
     /// scheduler refreshes it wholesale after every engine step).
     kv: Mutex<KvStats>,
+    /// Latest adaptive-speculation state across the active batch:
+    /// `(sessions, summed draft budget, summed accept-rate estimate)`.
+    /// Replaced after every engine step, like the KV snapshot.
+    spec_adaptive: Mutex<(u64, f64, f64)>,
     started: Instant,
 }
 
@@ -96,6 +100,13 @@ pub struct MetricsSnapshot {
     pub prefix_cache_miss_tokens: u64,
     /// Hit fraction over all prefill tokens (0 when nothing prefilled).
     pub prefix_cache_hit_rate: f64,
+    /// Active sessions currently running the adaptive controller.
+    pub adaptive_sessions: u64,
+    /// Mean draft budget those sessions chose for the current iteration
+    /// (0 when none are adaptive).
+    pub adaptive_draft_len_mean: f64,
+    /// Mean live EWMA accept-rate estimate across them (0 when none).
+    pub adaptive_accept_rate_mean: f64,
 }
 
 impl Metrics {
@@ -114,6 +125,7 @@ impl Metrics {
             batch_occupancy: Mutex::new(Vec::new()),
             traffic: Mutex::new(TrafficSnapshot::default()),
             kv: Mutex::new(KvStats::default()),
+            spec_adaptive: Mutex::new((0, 0.0, 0.0)),
             started: Instant::now(),
         }
     }
@@ -130,6 +142,14 @@ impl Metrics {
     /// point-in-time view (gauges) carrying its own monotonic counters.
     pub fn record_kv(&self, stats: &KvStats) {
         *self.kv.lock().unwrap() = *stats;
+    }
+
+    /// Replace the adaptive-speculation aggregate for the current batch:
+    /// `sessions` adaptive sessions whose chosen draft budgets sum to
+    /// `sum_budget` and whose accept-rate estimates sum to `sum_rate`.
+    /// Point-in-time like [`Metrics::record_kv`].
+    pub fn record_spec_adaptive(&self, sessions: u64, sum_budget: f64, sum_rate: f64) {
+        *self.spec_adaptive.lock().unwrap() = (sessions, sum_budget, sum_rate);
     }
 
     pub fn record_completion(&self, tokens: u64, drafts: u64, verifies: u64, latency_s: f64, exec_s: f64) {
@@ -168,6 +188,7 @@ impl Metrics {
         let occupancy = self.batch_occupancy.lock().unwrap().clone();
         let traffic = *self.traffic.lock().unwrap();
         let kv = *self.kv.lock().unwrap();
+        let (ad_n, ad_budget, ad_rate) = *self.spec_adaptive.lock().unwrap();
         let prefill_tokens = kv.prefix_hit_tokens + kv.prefix_miss_tokens;
         let steps: u64 = occupancy.iter().sum();
         let weighted: u64 = occupancy.iter().enumerate().map(|(b, &n)| b as u64 * n).sum();
@@ -204,6 +225,9 @@ impl Metrics {
             } else {
                 0.0
             },
+            adaptive_sessions: ad_n,
+            adaptive_draft_len_mean: if ad_n > 0 { ad_budget / ad_n as f64 } else { 0.0 },
+            adaptive_accept_rate_mean: if ad_n > 0 { ad_rate / ad_n as f64 } else { 0.0 },
         }
     }
 }
@@ -351,6 +375,23 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.kv_pages_allocated, 0);
         assert_eq!(s.prefix_cache_hit_rate, 0.0);
+    }
+
+    #[test]
+    fn adaptive_gauges_are_replaced_and_averaged() {
+        let m = Metrics::new();
+        m.record_spec_adaptive(4, 24.0, 3.2);
+        m.record_spec_adaptive(2, 6.0, 1.0);
+        let s = m.snapshot();
+        assert_eq!(s.adaptive_sessions, 2, "point-in-time, not merged");
+        assert!((s.adaptive_draft_len_mean - 3.0).abs() < 1e-12);
+        assert!((s.adaptive_accept_rate_mean - 0.5).abs() < 1e-12);
+        // Empty batch zeroes the means without dividing by zero.
+        m.record_spec_adaptive(0, 0.0, 0.0);
+        let s = m.snapshot();
+        assert_eq!(s.adaptive_sessions, 0);
+        assert_eq!(s.adaptive_draft_len_mean, 0.0);
+        assert_eq!(s.adaptive_accept_rate_mean, 0.0);
     }
 
     #[test]

@@ -80,6 +80,9 @@ pub struct Request {
     pub gen_len: usize,
     pub max_draft: usize,
     pub gamma: f32,
+    /// Run the adaptive draft-length controller for this request
+    /// (speculative mode only; static `max_draft` when false).
+    pub adaptive: bool,
     pub sampling: SamplingParams,
     pub mode: Mode,
     pub priority: Priority,
@@ -331,6 +334,7 @@ mod tests {
                 gen_len: 1,
                 max_draft: 16,
                 gamma: 0.6,
+                adaptive: false,
                 sampling: SamplingParams::greedy(),
                 mode: Mode::Speculative,
                 priority,

@@ -24,7 +24,9 @@ use super::queue::{
 use super::session::SessionStore;
 use crate::model::{Manifest, SamplingParams};
 use crate::runtime::{builtin_config, load_backend_with, Backend, ModelSource, NativeConfig};
-use crate::specdec::{ArSession, BatchEngine, GenSession, SpecConfig, SpecSession};
+use crate::specdec::{
+    AdaptiveConfig, ArSession, BatchEngine, BatchSpecPolicy, GenSession, SpecConfig, SpecSession,
+};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -75,6 +77,10 @@ pub struct SubmitParams {
     pub session: Option<u64>,
     pub max_draft: usize,
     pub gamma: f32,
+    /// Run the per-sequence adaptive draft-length controller (speculative
+    /// mode only).  Off by default: static sessions are bit-identical to
+    /// the pre-controller engine and ignore the batch speculation policy.
+    pub adaptive: bool,
     /// Absolute deadline: once it passes, the scheduler retires the
     /// request between engine steps (freeing its batch slot) and sends a
     /// terminal [`ResponseEvent::Cancelled`].
@@ -91,6 +97,7 @@ impl Default for SubmitParams {
             session: None,
             max_draft: 16,
             gamma: 0.6,
+            adaptive: false,
             deadline: None,
         }
     }
@@ -194,6 +201,7 @@ impl Server {
             gen_len: params.gen_len,
             max_draft: params.max_draft,
             gamma: params.gamma,
+            adaptive: params.adaptive,
             sampling: params.sampling,
             mode: params.mode,
             priority: params.priority,
@@ -336,6 +344,7 @@ fn scheduler_main(
     };
     let engine = BatchEngine::new(backend.as_ref());
     let max_batch = cfg.max_batch.max(1);
+    let spec_policy = BatchSpecPolicy::default();
     let mut active: Vec<ActiveReq> = Vec::new();
     // Requests whose conversation already has an in-flight turn: co-batching
     // them would read session history before the earlier turn appends it,
@@ -435,6 +444,18 @@ fn scheduler_main(
         }
         metrics.record_batch_step(active.len());
 
+        // ---- batch-level speculation policy ----
+        // At high occupancy the shared verification pass amortizes the
+        // full-weight stream across the batch, so long drafts stop paying;
+        // cap (or at full occupancy disable) the draft budget of adaptive
+        // sessions for the coming step.  Static sessions ignore the cap —
+        // their token streams must stay bit-identical to the policy-free
+        // engine.
+        let cap = spec_policy.draft_cap(active.len(), max_batch);
+        for a in &mut active {
+            a.session.apply_spec_policy(cap);
+        }
+
         // ---- one lockstep engine step over the whole batch ----
         let step_result = {
             let mut refs: Vec<&mut GenSession> =
@@ -448,6 +469,19 @@ fn scheduler_main(
         // Refresh the paged-KV occupancy/prefix-cache snapshot alongside it
         // (point-in-time, so replace rather than merge).
         metrics.record_kv(&backend.kv_stats());
+        // Aggregate live adaptive-controller state (chosen draft budget +
+        // accept-rate estimate) across the batch for the gauges; replaced,
+        // not merged, like the KV snapshot.
+        let mut n = 0u64;
+        let (mut sum_budget, mut sum_rate) = (0f64, 0f64);
+        for a in &active {
+            if let Some((budget, rate)) = a.session.adaptive_state() {
+                n += 1;
+                sum_budget += budget as f64;
+                sum_rate += rate;
+            }
+        }
+        metrics.record_spec_adaptive(n, sum_budget, sum_rate);
         if let Err(e) = step_result {
             // A batched op failed: no per-sequence attribution, so fail the
             // whole in-flight batch (clients may retry; slots are freed).
@@ -553,6 +587,11 @@ fn admit(
                 gamma: req.gamma,
                 sampling: req.sampling,
                 gen_len: req.gen_len,
+                adaptive: if req.adaptive {
+                    AdaptiveConfig::enabled()
+                } else {
+                    AdaptiveConfig::default()
+                },
             },
         )
         .map(GenSession::Spec),

@@ -60,10 +60,12 @@
 //! Decoding + serving layer:
 //! * [`specdec`] — the speculative decoding engine over any backend:
 //!   quantized draft pass, full verification pass, shared KV cache, early
-//!   exit (§III-C), the Eq. 1–2 analytic model, and the step-driven
-//!   continuous-batching engine (`SpecSession`/`ArSession` state machines
-//!   driven in lockstep by `BatchEngine`, bit-identical to sequential
-//!   decoding).
+//!   exit (§III-C), the Eq. 1–2 analytic model, the per-sequence adaptive
+//!   draft-length controller (censoring-corrected EWMA accept-rate
+//!   estimate + Eq. 2 argmax over traffic-measured cost ratios), and the
+//!   step-driven continuous-batching engine (`SpecSession`/`ArSession`
+//!   state machines driven in lockstep by `BatchEngine`, bit-identical to
+//!   sequential decoding).
 //! * [`coordinator`] — serving layer: bounded priority queue with
 //!   age-based anti-starvation, continuous-batching scheduler threads,
 //!   streaming chunked responses, per-request deadlines + cooperative

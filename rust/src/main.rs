@@ -21,12 +21,12 @@ use speq::accel::{paper_dims, Accel, ArrayMode};
 use speq::coordinator::{Mode, Priority, Server, ServerConfig, SubmitParams};
 use speq::model::{Manifest, SamplingParams};
 use speq::net::{LoadConfig, LoadMode, NetConfig, NetServer, Scenario};
-use speq::report::{run_experiment, ReportCtx, ReportOpts, EXPERIMENTS};
+use speq::report::{run_adaptive, run_experiment, ReportCtx, ReportOpts, EXPERIMENTS};
 use speq::runtime::{
     builtin_config, builtin_model_names, load_backend_with, Backend, ModelSource, NativeConfig,
     SimdLevel,
 };
-use speq::specdec::{Engine, SpecConfig};
+use speq::specdec::{AdaptiveConfig, Engine, SpecConfig};
 use speq::util::cli::Args;
 use speq::workload::{load_task_or_builtin, task_names};
 
@@ -96,13 +96,14 @@ fn dispatch(args: &Args) -> Result<()> {
                 "usage: speq <info|report|generate|serve|loadgen|bench-accel|version> [flags]\n\
                  \n\
                  speq report --exp <{}|all> [--models a,b] [--n-prompts N] [--gen-len N] [--fresh] [--threads T]\n\
-                 speq generate --model <name> --prompt <text> [--gen-len N] [--temperature T] [--threads T]\n\
+                 speq generate --model <name> --prompt <text> [--gen-len N] [--temperature T]\n\
+                 \x20          [--adaptive] [--threads T]\n\
                  speq serve --model <name> [--workers N] [--requests N] [--threads T]\n\
                  speq serve --addr 127.0.0.1:8080 [--model M] [--workers N] [--max-batch B] [--queue Q]\n\
                  \x20          [--deadline-ms D] [--duration-s S] [--threads T]   (HTTP front end)\n\
                  speq loadgen --addr 127.0.0.1:8080 [--mode closed|open] [--users N] [--rate R]\n\
                  \x20          [--scenario oneshot|multiturn] [--requests N] [--gen-len N]\n\
-                 \x20          [--deadline-ms D] [--smoke]\n\
+                 \x20          [--adaptive] [--deadline-ms D] [--smoke]\n\
                  speq info\n\
                  \n\
                  --threads T sizes the native kernel worker pool (0 = auto, default\n\
@@ -167,6 +168,13 @@ fn report(args: &Args) -> Result<()> {
         fresh: args.has("fresh"),
         threads: native_config(args),
     };
+    // `adaptive` is defined on the builtin zoo: when no artifacts exist,
+    // run it standalone so CI can gate the controller without a trained
+    // checkpoint (with artifacts it goes through the ctx for results/).
+    if exp == "adaptive" && Manifest::load(&opts.artifacts_root).is_err() {
+        run_adaptive(&opts.threads, opts.gen_len, &opts.models)?;
+        return Ok(());
+    }
     let mut ctx = ReportCtx::new(opts)?;
     run_experiment(&mut ctx, &exp)
 }
@@ -202,6 +210,11 @@ fn generate(args: &Args) -> Result<()> {
         gamma: args.get_f64("gamma", 0.6) as f32,
         sampling,
         gen_len,
+        adaptive: if args.has("adaptive") {
+            AdaptiveConfig::enabled()
+        } else {
+            AdaptiveConfig::default()
+        },
     };
     let spec = engine.generate_spec(&prompt, &cfg)?;
     println!("--- speculative ({:?}) ---", spec.wall);
@@ -400,6 +413,7 @@ fn loadgen(args: &Args) -> Result<()> {
         gen_len: args.get_usize("gen-len", 32),
         seed: args.get_usize("seed", 0) as u64,
         scenario,
+        adaptive: args.has("adaptive"),
         deadline_ms: {
             let d = args.get_usize("deadline-ms", 0);
             if d > 0 { Some(d as u64) } else { None }

@@ -17,5 +17,5 @@ mod weights;
 #[cfg(feature = "pjrt")]
 pub use exec::ModelRuntime;
 pub use manifest::{GraphEntry, Manifest, ModelConfig, ModelEntry, ParamInfo};
-pub use sampling::{argmax, log_softmax, sample_from_logits, softmax, SamplingParams};
+pub use sampling::{argmax, log_softmax, sample_from_logits, softmax, softmax_top, SamplingParams};
 pub use weights::{load_weights, HostWeights};

@@ -50,6 +50,21 @@ pub fn softmax(logits: &[f32]) -> Vec<f32> {
     exps.into_iter().map(|e| e / z).collect()
 }
 
+/// Maximum softmax probability, allocation-free.
+///
+/// Bitwise identical to `softmax(logits).iter().fold(0.0, max)`: the max
+/// logit's exponent is exactly `exp(0) = 1.0`, IEEE division by a positive
+/// `z` is monotone (so the max exponent maps to the max probability), and
+/// `z` is summed in the same index order as `softmax` — hence the result
+/// is exactly `1.0 / z`, bit-for-bit the value the allocating path yields.
+/// Used by the §III-C gamma early-exit check in greedy drafting, where the
+/// full distribution is never read.
+pub fn softmax_top(logits: &[f32]) -> f32 {
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let z: f32 = logits.iter().map(|&v| (v - m).exp()).sum();
+    1.0 / z
+}
+
 /// Numerically-stable log-softmax.
 pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
     let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
@@ -99,6 +114,23 @@ mod tests {
         let p = softmax(&[1000.0, 1000.0, 999.0]);
         assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
         assert!(p[0] > p[2]);
+    }
+
+    #[test]
+    fn softmax_top_is_bitwise_the_softmax_max() {
+        // Regression for the greedy draft path: the allocation-free top
+        // probability must equal the allocating softmax's max exactly
+        // (bit-for-bit), or greedy early-exit decisions would drift.
+        let cases: [&[f32]; 4] = [
+            &[0.3, -1.2, 2.0, 0.0],
+            &[1000.0, 1000.0, 999.0],
+            &[-5.0; 7],
+            &[0.0],
+        ];
+        for logits in cases {
+            let via_vec = softmax(logits).iter().fold(0.0f32, |m, &p| m.max(p));
+            assert_eq!(softmax_top(logits).to_bits(), via_vec.to_bits());
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //!   "seed": 0,
 //!   "max_draft": 16,
 //!   "gamma": 0.6,
+//!   "adaptive": false,          // per-sequence adaptive draft-length controller
 //!   "priority": "interactive" | "batch",
 //!   "session": 17,              // optional multi-turn conversation id
 //!   "deadline_ms": 2000         // optional per-request deadline
@@ -40,6 +41,7 @@ pub struct GenerateRequest {
     pub seed: u64,
     pub max_draft: usize,
     pub gamma: f32,
+    pub adaptive: bool,
     pub priority: Priority,
     pub session: Option<u64>,
     pub deadline_ms: Option<u64>,
@@ -56,6 +58,7 @@ impl Default for GenerateRequest {
             seed: 0,
             max_draft: p.max_draft,
             gamma: p.gamma,
+            adaptive: p.adaptive,
             priority: p.priority,
             session: None,
             deadline_ms: None,
@@ -104,6 +107,9 @@ impl GenerateRequest {
         if let Some(g) = v.get("gamma") {
             req.gamma = g.as_f64().ok_or("\"gamma\" must be a number")? as f32;
         }
+        if let Some(a) = v.get("adaptive") {
+            req.adaptive = a.as_bool().ok_or("\"adaptive\" must be a boolean")?;
+        }
         if let Some(p) = v.get("priority") {
             req.priority = match p.as_str() {
                 Some("interactive") => Priority::Interactive,
@@ -125,7 +131,7 @@ impl GenerateRequest {
         let mut body = String::from("{\"prompt\":");
         body.push_str(&json::escape_bytes(&self.prompt));
         body.push_str(&format!(
-            ",\"gen_len\":{},\"mode\":\"{}\",\"temperature\":{},\"seed\":{},\"max_draft\":{},\"gamma\":{},\"priority\":\"{}\"",
+            ",\"gen_len\":{},\"mode\":\"{}\",\"temperature\":{},\"seed\":{},\"max_draft\":{},\"gamma\":{},\"adaptive\":{},\"priority\":\"{}\"",
             self.gen_len,
             match self.mode {
                 Mode::Speculative => "spec",
@@ -135,6 +141,7 @@ impl GenerateRequest {
             self.seed,
             self.max_draft,
             self.gamma,
+            self.adaptive,
             match self.priority {
                 Priority::Interactive => "interactive",
                 Priority::Batch => "batch",
@@ -166,6 +173,7 @@ impl GenerateRequest {
             session: self.session,
             max_draft: self.max_draft,
             gamma: self.gamma,
+            adaptive: self.adaptive,
             deadline,
         }
     }
@@ -192,6 +200,10 @@ pub fn chunk_event_data(tokens: &[u8]) -> String {
 /// `data:` payload for the terminal `done` SSE event (also the
 /// `/v1/generate` response body): the full token stream plus accept-rate
 /// and traffic statistics.
+///
+/// `accept_rate` is `0.0` for sessions that drafted nothing (pure AR
+/// requests): zero drafted tokens is zero accept-rate evidence, not a
+/// perfect score — see `SpecTrace::accept_rate`.
 pub fn done_data(
     id: u64,
     body: &ResponseBody,
@@ -254,7 +266,7 @@ mod tests {
     fn parses_a_full_request() {
         let r = GenerateRequest::from_json(
             r#"{"prompt":"hi there","gen_len":32,"mode":"ar","temperature":0.5,"seed":7,
-                "max_draft":8,"gamma":0.4,"priority":"batch","session":3,"deadline_ms":250}"#,
+                "max_draft":8,"gamma":0.4,"adaptive":true,"priority":"batch","session":3,"deadline_ms":250}"#,
         )
         .unwrap();
         assert_eq!(r.prompt, b"hi there");
@@ -262,6 +274,7 @@ mod tests {
         assert_eq!(r.mode, Mode::Autoregressive);
         assert_eq!(r.seed, 7);
         assert_eq!(r.max_draft, 8);
+        assert!(r.adaptive);
         assert_eq!(r.priority, Priority::Batch);
         assert_eq!(r.session, Some(3));
         assert_eq!(r.deadline_ms, Some(250));
@@ -274,6 +287,7 @@ mod tests {
         assert_eq!(r.gen_len, d.gen_len);
         assert_eq!(r.max_draft, d.max_draft);
         assert_eq!(r.gamma, d.gamma);
+        assert_eq!(r.adaptive, d.adaptive);
         assert_eq!(r.mode, d.mode);
         let p = r.submit_params(None);
         assert!(p.deadline.is_none());
@@ -287,6 +301,7 @@ mod tests {
         req.gen_len = 17;
         req.mode = Mode::Autoregressive;
         req.seed = 42;
+        req.adaptive = true;
         req.session = Some(9);
         req.deadline_ms = Some(125);
         let back = GenerateRequest::from_json(&req.to_json()).unwrap();
@@ -294,6 +309,7 @@ mod tests {
         assert_eq!(back.gen_len, 17);
         assert_eq!(back.mode, Mode::Autoregressive);
         assert_eq!(back.seed, 42);
+        assert!(back.adaptive);
         assert_eq!(back.session, Some(9));
         assert_eq!(back.deadline_ms, Some(125));
     }

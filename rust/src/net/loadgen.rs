@@ -296,6 +296,8 @@ pub struct LoadConfig {
     pub seed: u64,
     /// Prompt-stream shape (one-shot prompts or multiturn conversations).
     pub scenario: Scenario,
+    /// Request the per-sequence adaptive draft-length controller.
+    pub adaptive: bool,
     pub deadline_ms: Option<u64>,
     /// Per-request socket read timeout.
     pub timeout: Duration,
@@ -310,6 +312,7 @@ impl Default for LoadConfig {
             gen_len: 32,
             seed: 0,
             scenario: Scenario::Oneshot,
+            adaptive: false,
             deadline_ms: None,
             timeout: Duration::from_secs(60),
         }
@@ -335,6 +338,8 @@ fn percentiles_ms(samples: &mut [f64]) -> Percentiles {
 pub struct LoadReport {
     pub mode: String,
     pub scenario: String,
+    /// Whether requests asked for the adaptive draft-length controller.
+    pub adaptive: bool,
     pub requests: usize,
     pub completed: usize,
     pub rejected: usize,
@@ -380,8 +385,8 @@ impl LoadReport {
     pub fn bench_json(&self) -> String {
         let f = |v: f64| if v.is_finite() { v } else { 0.0 };
         format!(
-            "BENCH_JSON {{\"group\":\"net_loadgen\",\"mode\":\"{}\",\"scenario\":\"{}\",\"requests\":{},\"completed\":{},\"rejected\":{},\"cancelled\":{},\"failed\":{},\"tokens\":{},\"wall_s\":{:.4},\"tokens_per_sec\":{:.3},\"goodput_rps\":{:.3},\"ttft_p50_ms\":{:.3},\"ttft_p95_ms\":{:.3},\"ttft_p99_ms\":{:.3},\"total_p50_ms\":{:.3},\"total_p95_ms\":{:.3},\"total_p99_ms\":{:.3}}}",
-            self.mode, self.scenario, self.requests, self.completed, self.rejected,
+            "BENCH_JSON {{\"group\":\"net_loadgen\",\"mode\":\"{}\",\"scenario\":\"{}\",\"adaptive\":{},\"requests\":{},\"completed\":{},\"rejected\":{},\"cancelled\":{},\"failed\":{},\"tokens\":{},\"wall_s\":{:.4},\"tokens_per_sec\":{:.3},\"goodput_rps\":{:.3},\"ttft_p50_ms\":{:.3},\"ttft_p95_ms\":{:.3},\"ttft_p99_ms\":{:.3},\"total_p50_ms\":{:.3},\"total_p95_ms\":{:.3},\"total_p99_ms\":{:.3}}}",
+            self.mode, self.scenario, self.adaptive, self.requests, self.completed, self.rejected,
             self.cancelled, self.failed, self.tokens, f(self.wall_s), f(self.tokens_per_s),
             f(self.goodput_rps), f(self.ttft_ms.p50), f(self.ttft_ms.p95),
             f(self.ttft_ms.p99), f(self.total_ms.p50), f(self.total_ms.p95),
@@ -397,6 +402,7 @@ pub fn request_for(i: usize, cfg: &LoadConfig) -> GenerateRequest {
             prompt: PROMPTS[i % PROMPTS.len()].as_bytes().to_vec(),
             gen_len: cfg.gen_len,
             seed: cfg.seed,
+            adaptive: cfg.adaptive,
             deadline_ms: cfg.deadline_ms,
             ..GenerateRequest::default()
         },
@@ -415,6 +421,7 @@ pub fn request_for(i: usize, cfg: &LoadConfig) -> GenerateRequest {
                 prompt: prompt.into_bytes(),
                 gen_len: cfg.gen_len,
                 seed: cfg.seed,
+                adaptive: cfg.adaptive,
                 session: Some(sid),
                 deadline_ms: cfg.deadline_ms,
                 ..GenerateRequest::default()
@@ -519,6 +526,7 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
             LoadMode::Open { rate_rps } => format!("open rate={rate_rps}/s"),
         },
         scenario: cfg.scenario.as_str().to_string(),
+        adaptive: cfg.adaptive,
         requests: cfg.requests,
         completed,
         rejected,
@@ -628,12 +636,13 @@ mod tests {
 
     #[test]
     fn request_for_cycles_prompts_and_carries_knobs() {
-        let cfg = LoadConfig { gen_len: 7, seed: 9, ..Default::default() };
+        let cfg = LoadConfig { gen_len: 7, seed: 9, adaptive: true, ..Default::default() };
         let a = request_for(0, &cfg);
         let b = request_for(PROMPTS.len(), &cfg);
         assert_eq!(a.prompt, b.prompt);
         assert_eq!(a.gen_len, 7);
         assert_eq!(a.seed, 9);
+        assert!(a.adaptive, "adaptive knob must reach the wire request");
         assert_ne!(request_for(1, &cfg).prompt, a.prompt);
     }
 
@@ -695,6 +704,7 @@ mod tests {
         let r = LoadReport {
             mode: "closed users=4".into(),
             scenario: "oneshot".into(),
+            adaptive: true,
             requests: 8,
             completed: 8,
             rejected: 0,
@@ -712,6 +722,7 @@ mod tests {
         let v = crate::util::json::parse(json_part).unwrap();
         assert_eq!(v.get("group").unwrap().as_str(), Some("net_loadgen"));
         assert_eq!(v.get("scenario").unwrap().as_str(), Some("oneshot"));
+        assert_eq!(v.get("adaptive").unwrap().as_bool(), Some(true));
         assert_eq!(v.get("completed").unwrap().as_usize(), Some(8));
         assert!(v.get("tokens_per_sec").unwrap().as_f64().unwrap() > 0.0);
     }

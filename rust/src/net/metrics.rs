@@ -229,6 +229,21 @@ impl NetMetrics {
             "Fraction of prefill tokens served from the prefix cache.",
             snap.prefix_cache_hit_rate,
         );
+        counter(
+            "speq_adaptive_sessions",
+            "Active sequences running the adaptive draft-length controller.",
+            snap.adaptive_sessions as f64,
+        );
+        counter(
+            "speq_adaptive_draft_len",
+            "Mean live draft budget across adaptive sequences, last step.",
+            snap.adaptive_draft_len_mean,
+        );
+        counter(
+            "speq_adaptive_accept_rate",
+            "Mean EWMA accept-rate estimate across adaptive sequences.",
+            snap.adaptive_accept_rate_mean,
+        );
         self.ttft.render(
             "speq_ttft_seconds",
             "Time from HTTP submit to the first streamed token chunk.",
@@ -322,5 +337,17 @@ mod tests {
         assert!(page.contains("speq_prefix_cache_hit_rate 0.75"));
         assert!(page.contains("# TYPE speq_kv_pages_allocated gauge"));
         assert!(page.contains("# TYPE speq_prefix_cache_hit_tokens_total counter"));
+    }
+
+    #[test]
+    fn exposition_includes_adaptive_speculation_gauges() {
+        let m = Metrics::new();
+        m.record_spec_adaptive(2, 12.0, 1.5);
+        let page = NetMetrics::new().render_prometheus(&m.snapshot(), 0);
+        assert!(page.contains("speq_adaptive_sessions 2"));
+        assert!(page.contains("speq_adaptive_draft_len 6"));
+        assert!(page.contains("speq_adaptive_accept_rate 0.75"));
+        assert!(page.contains("# TYPE speq_adaptive_sessions gauge"));
+        assert!(page.contains("# TYPE speq_adaptive_draft_len gauge"));
     }
 }

@@ -1,0 +1,202 @@
+//! E12: static-vs-adaptive draft-length sweep on the builtin zoo.
+//!
+//! Runs the single-sequence engine over a ladder of static draft lengths
+//! and once with the per-sequence adaptive controller, then compares
+//! weight bytes streamed per produced token — the deterministic stand-in
+//! for decode cost (tokens and byte counts are bit-exact across runs and
+//! machines, unlike wall-clock).  Requires no artifacts: models come from
+//! the builtin synthetic zoo, so the experiment doubles as the CI gate
+//! for the controller.
+//!
+//! The gate: the adaptive run must land within [`BYTES_TOLERANCE`] of the
+//! best static ladder point, byte-wise.  The controller starts from a
+//! neutral prior and pays a few exploratory iterations, so exact parity
+//! is not expected; landing *near* the best static point without being
+//! told which one it is, is the whole point.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::{load_backend_with, ModelSource, NativeConfig, TrafficSnapshot};
+use crate::specdec::{AdaptiveConfig, Engine, SpecConfig};
+use crate::util::json::Value;
+
+/// Static draft-length ladder the adaptive run competes against.
+pub const STATIC_LADDER: [usize; 4] = [2, 4, 8, 16];
+
+/// Adaptive may stream at most this multiple of the best static arm's
+/// bytes per token (cold-start exploration is paid inside this margin).
+pub const BYTES_TOLERANCE: f64 = 1.25;
+
+/// Below this generation length the cold-start fraction dominates and the
+/// byte gate is skipped (the sweep still prints and emits BENCH_JSON).
+const GATE_MIN_GEN_LEN: usize = 128;
+
+/// Builtin-zoo models the sweep runs by default (a subset keeps the CI
+/// leg fast; `--models` overrides).
+const DEFAULT_MODELS: [&str; 2] = ["vicuna-7b-tiny", "llama3.2-3b-tiny"];
+
+const PROMPT: &[u8] = b"Q: ada has 3 apples and finds 4 more. how many apples now?\nA: ";
+
+/// One measured arm of the sweep.
+struct Arm {
+    label: String,
+    tokens: usize,
+    wall_s: f64,
+    bytes_per_token: f64,
+    accept_rate: f64,
+    /// Mean drafted tokens per iteration over the final quarter of
+    /// iterations — for adaptive arms, where the controller converged.
+    late_draft_len: f64,
+}
+
+/// Decode-path weight bytes in a traffic delta (prefill excluded: it is
+/// identical across arms and would dilute the comparison).
+fn decode_bytes(t: &TrafficSnapshot) -> u64 {
+    t.draft_bytes + t.full_bytes + t.verify_bytes
+}
+
+fn delta(before: &TrafficSnapshot, after: &TrafficSnapshot) -> u64 {
+    decode_bytes(after).saturating_sub(decode_bytes(before))
+}
+
+fn run_arm(engine: &Engine, cfg: &SpecConfig, label: &str) -> Result<Arm> {
+    let before = engine.backend().traffic();
+    let t0 = Instant::now();
+    let out = engine.generate_spec(PROMPT, cfg)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let after = engine.backend().traffic();
+    let bytes = delta(&before, &after);
+    let iters = &out.trace.iterations;
+    let tail = &iters[iters.len() - iters.len() / 4..];
+    let late_draft_len = if tail.is_empty() {
+        0.0
+    } else {
+        tail.iter().map(|i| i.drafted as f64).sum::<f64>() / tail.len() as f64
+    };
+    Ok(Arm {
+        label: label.to_string(),
+        tokens: out.tokens.len(),
+        wall_s,
+        bytes_per_token: if out.tokens.is_empty() {
+            0.0
+        } else {
+            bytes as f64 / out.tokens.len() as f64
+        },
+        accept_rate: out.trace.accept_rate(),
+        late_draft_len,
+    })
+}
+
+/// Run the sweep; the returned JSON mirrors the printed table (the
+/// artifact-backed report run persists it under `results/`).
+pub fn run_adaptive(native: &NativeConfig, gen_len: usize, models: &[String]) -> Result<Value> {
+    println!("\n== E12: static vs adaptive draft length (builtin zoo, gen_len {gen_len}) ==");
+    let names: Vec<String> = if models.is_empty() {
+        DEFAULT_MODELS.iter().map(|s| s.to_string()).collect()
+    } else {
+        models.to_vec()
+    };
+    let mut out = BTreeMap::new();
+    for name in &names {
+        let backend = load_backend_with(&ModelSource::Builtin, name, native)?;
+        let engine = Engine::new(backend.as_ref());
+
+        // Warm the traffic meters so the adaptive run's cost ratios are
+        // measured, not the compiled-in fallbacks (the counters are never
+        // drained here; arms are measured as snapshot deltas).
+        engine.generate_spec(
+            PROMPT,
+            &SpecConfig { max_draft: 4, gen_len: 16, ..Default::default() },
+        )?;
+
+        let mut arms = Vec::new();
+        for l in STATIC_LADDER {
+            let cfg = SpecConfig { max_draft: l, gen_len, ..Default::default() };
+            arms.push(run_arm(&engine, &cfg, &format!("static_L{l}"))?);
+        }
+        // Faster EWMA than the serving default: the sweep is one sequence,
+        // so convergence has to happen within a single generation.
+        let mut ac = AdaptiveConfig::enabled();
+        ac.alpha = 0.2;
+        let cfg = SpecConfig { max_draft: 16, adaptive: ac, gen_len, ..Default::default() };
+        arms.push(run_arm(&engine, &cfg, "adaptive")?);
+
+        println!("\n  {name}");
+        println!(
+            "  {:<12} {:>7} {:>9} {:>13} {:>8} {:>10}",
+            "arm", "tokens", "tok/s", "bytes/tok", "r", "late L-bar"
+        );
+        for a in &arms {
+            let tps = if a.wall_s > 0.0 { a.tokens as f64 / a.wall_s } else { 0.0 };
+            println!(
+                "  {:<12} {:>7} {:>9.1} {:>13.0} {:>8.3} {:>10.2}",
+                a.label, a.tokens, tps, a.bytes_per_token, a.accept_rate, a.late_draft_len
+            );
+            println!(
+                "BENCH_JSON {{\"group\":\"report_adaptive\",\"model\":\"{name}\",\"arm\":\"{}\",\"tokens\":{},\"wall_s\":{:.4},\"tokens_per_sec\":{:.3},\"bytes_per_token\":{:.1},\"accept_rate\":{:.4},\"late_draft_len\":{:.3}}}",
+                a.label, a.tokens, a.wall_s, tps, a.bytes_per_token, a.accept_rate,
+                a.late_draft_len
+            );
+        }
+
+        let best_static = arms[..arms.len() - 1]
+            .iter()
+            .map(|a| a.bytes_per_token)
+            .fold(f64::INFINITY, f64::min);
+        let adaptive = arms.last().expect("adaptive arm");
+        if gen_len >= GATE_MIN_GEN_LEN {
+            anyhow::ensure!(
+                adaptive.tokens > 0 && adaptive.bytes_per_token > 0.0,
+                "adaptive arm on {name} produced no traffic"
+            );
+            anyhow::ensure!(
+                adaptive.bytes_per_token <= best_static * BYTES_TOLERANCE,
+                "adaptive draft control on {name} streamed {:.0} B/tok vs best static {:.0} \
+                 (allowed {:.0}); controller failed to track the accept rate",
+                adaptive.bytes_per_token,
+                best_static,
+                best_static * BYTES_TOLERANCE
+            );
+            println!(
+                "  gate OK: adaptive {:.0} B/tok <= best static {:.0} x {BYTES_TOLERANCE}",
+                adaptive.bytes_per_token, best_static
+            );
+        } else {
+            println!("  gate skipped (gen_len {gen_len} < {GATE_MIN_GEN_LEN})");
+        }
+
+        out.insert(
+            name.clone(),
+            Value::Obj(
+                arms.iter()
+                    .map(|a| {
+                        (
+                            a.label.clone(),
+                            Value::Obj(
+                                [
+                                    ("tokens".to_string(), Value::Num(a.tokens as f64)),
+                                    (
+                                        "bytes_per_token".to_string(),
+                                        Value::Num(a.bytes_per_token),
+                                    ),
+                                    ("accept_rate".to_string(), Value::Num(a.accept_rate)),
+                                    (
+                                        "late_draft_len".to_string(),
+                                        Value::Num(a.late_draft_len),
+                                    ),
+                                ]
+                                .into_iter()
+                                .collect(),
+                            ),
+                        )
+                    })
+                    .collect(),
+            ),
+        );
+    }
+    println!("\n(adaptive must land near the best static point without being told which)");
+    Ok(Value::Obj(out))
+}

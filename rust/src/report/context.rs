@@ -116,6 +116,7 @@ impl ReportCtx {
                 gamma,
                 sampling: SamplingParams::greedy(),
                 gen_len,
+                ..Default::default()
             };
             let res = engine.generate_spec(prompt, &cfg)?;
             merged.merge(&res.trace);

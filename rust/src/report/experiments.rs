@@ -19,9 +19,9 @@ use crate::workload::{heldout_windows, task_names};
 /// All experiment ids, in DESIGN.md order (`traffic` is the measured
 /// quarter-to-all weight-stream accounting added with the bit-plane
 /// weight store).
-pub const EXPERIMENTS: [&str; 11] = [
+pub const EXPERIMENTS: [&str; 12] = [
     "fig2c", "table1", "table2", "table3", "table4", "fig7", "fig8", "fig9",
-    "specdec-cmp", "theory", "traffic",
+    "specdec-cmp", "theory", "traffic", "adaptive",
 ];
 
 /// Run one experiment (or `all`).
@@ -44,6 +44,14 @@ pub fn run_experiment(ctx: &mut ReportCtx, exp: &str) -> Result<()> {
         "specdec-cmp" => specdec_cmp(ctx),
         "theory" => theory(ctx),
         "traffic" => traffic(ctx),
+        "adaptive" => {
+            let v = super::adaptive::run_adaptive(
+                &ctx.opts.threads,
+                ctx.opts.gen_len,
+                &ctx.opts.models,
+            )?;
+            ctx.save_result("adaptive", &v)
+        }
         other => anyhow::bail!("unknown experiment {other:?} (have {EXPERIMENTS:?} or 'all')"),
     }
 }

@@ -13,14 +13,19 @@
 //! | `fig9`        | L / gamma ablation                     |
 //! | `specdec-cmp` | §V-D vs Medusa / Swift                 |
 //! | `theory`      | Eq. 1–2 vs simulation (E10)            |
+//! | `adaptive`    | static vs adaptive draft length (E12)  |
 //!
 //! Results print as paper-style tables and persist as JSON under
-//! `artifacts/results/` for EXPERIMENTS.md.
+//! `artifacts/results/` for EXPERIMENTS.md.  `adaptive` is special: it
+//! runs on the builtin zoo and needs no artifacts ([`run_adaptive`] is
+//! callable standalone; the CLI uses it when no manifest exists).
 
+mod adaptive;
 mod context;
 mod experiments;
 mod perplexity;
 
+pub use adaptive::run_adaptive;
 pub use context::{ReportCtx, ReportOpts};
 pub use experiments::{run_experiment, EXPERIMENTS};
 pub use perplexity::{perplexity, perplexity_with_transform};

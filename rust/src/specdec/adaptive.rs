@@ -1,0 +1,350 @@
+//! Adaptive draft-length control: pick the next draft budget by maximizing
+//! the paper's Eq. 2 speedup model at a live accept-rate estimate.
+//!
+//! The static `max_draft: 16` default is only optimal at the paper's
+//! operating point (r ≈ 0.976); the spec-decoding literature (survey
+//! 2401.07851, "Decoding Speculative Decoding" 2402.01528) shows the
+//! optimum moves with the workload's accept rate and with batch occupancy.
+//! This module supplies the three pieces:
+//!
+//! * [`AdaptiveController`] — a per-sequence EWMA accept-rate estimator fed
+//!   from verify outcomes, with the §III-C **censoring correction**: an
+//!   early-exited draft chain is a *censored* observation, not a
+//!   full-length sample.  Per verify pass we observe `accepted` Bernoulli
+//!   successes plus **exactly one failure iff `accepted < drafted`** (the
+//!   first rejected token); tokens after the first rejection were never
+//!   tested, and the un-drafted tail of an early-exited chain was never
+//!   proposed — neither contributes a trial.  Counting the truncated chain
+//!   as if it were full-length would bias r̂ upward exactly when γ fires
+//!   most (low-confidence stretches).
+//! * [`CostRatios`] — measured `T_d/T_ar` and `T_v/T_ar` from the
+//!   deterministic weight-traffic counters (the native backend is
+//!   memory-bound, so bytes-streamed is the cost model), with the paper's
+//!   constants as a fallback before any traffic has been metered.
+//! * [`BatchSpecPolicy`] — the coordinator-level occupancy policy: at high
+//!   batch occupancy the verification pass amortizes weight traffic across
+//!   sequences and long drafts waste work, so the policy caps (and at full
+//!   occupancy disables) speculation for adaptive sessions.
+//!
+//! Determinism contract: the controller is a pure function of the observed
+//! `(drafted, accepted)` stream and its config — no wall clock, no
+//! randomness — so a replayed request sequence reproduces the exact budget
+//! sequence bit-for-bit.
+
+use crate::runtime::TrafficSnapshot;
+
+use super::theory::theoretical_speedup;
+
+/// Paper §IV draft/full weight-traffic ratio (the "quarter" in
+/// quarter-to-all), used before any traffic has been metered.
+pub const FALLBACK_TD_RATIO: f64 = 0.27;
+/// One parallel verification pass streams the full weights once ≈ one AR
+/// step (both are memory-bound full-precision passes).
+pub const FALLBACK_TV_RATIO: f64 = 1.0;
+
+/// Per-sequence adaptive draft-length knobs, embedded in `SpecConfig`.
+///
+/// Defaults to disabled: with `enabled: false` sessions take the static
+/// `max_draft` path and are bit-identical to the pre-controller engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveConfig {
+    /// Off by default; the static path is untouched when disabled.
+    pub enabled: bool,
+    /// Smallest draft budget the controller may pick (the batch policy may
+    /// still force 0 = speculation disabled).
+    pub min_draft: usize,
+    /// EWMA step per observed accept/reject trial.  Small enough to
+    /// average over many verify passes, large enough to track a mid-run
+    /// accept-rate shift within a few dozen iterations.
+    pub alpha: f64,
+    /// Cold-start accept-rate estimate.  Neutral 0.5 — deliberately not
+    /// `SpecTrace::accept_rate()`'s empty-trace value (0.0, "no
+    /// evidence"), and not the optimistic 1.0 that would open at
+    /// `max_draft`.
+    pub prior: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        Self { enabled: false, min_draft: 1, alpha: 0.05, prior: 0.5 }
+    }
+}
+
+impl AdaptiveConfig {
+    /// Enabled with default estimator knobs.
+    pub fn enabled() -> Self {
+        Self { enabled: true, ..Self::default() }
+    }
+}
+
+/// Measured draft/verify cost ratios relative to one AR step, in units of
+/// weight bytes streamed (the memory-bound cost model the paper argues
+/// from, and deterministic across runs unlike wall-clock timing).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostRatios {
+    /// `T_d / T_ar`: one draft step over one full-precision decode step.
+    pub td: f64,
+    /// `T_v / T_ar`: one parallel verification pass over one decode step.
+    pub tv: f64,
+}
+
+impl Default for CostRatios {
+    fn default() -> Self {
+        Self { td: FALLBACK_TD_RATIO, tv: FALLBACK_TV_RATIO }
+    }
+}
+
+impl CostRatios {
+    /// Derive ratios from a traffic snapshot.  The verification pass
+    /// always scores all `slots` rows regardless of how many drafts the
+    /// chain produced (the graph shape is fixed), so `tv` is
+    /// `verify_bytes_per_row × slots / full_bytes_per_token`.  Falls back
+    /// to the paper constants for any pass type the snapshot has not
+    /// metered yet — `theoretical_speedup` sanitizes its inputs, but a
+    /// half-empty counter would silently skew the argmax.
+    pub fn from_traffic(t: &TrafficSnapshot, slots: usize) -> Self {
+        let full = t.full_bytes_per_token();
+        if !(full.is_finite() && full > 0.0) {
+            return Self::default();
+        }
+        let draft = t.draft_bytes_per_token();
+        let verify = t.verify_bytes_per_row();
+        let td = if draft.is_finite() && draft > 0.0 {
+            draft / full
+        } else {
+            FALLBACK_TD_RATIO
+        };
+        let tv = if verify.is_finite() && verify > 0.0 {
+            verify * slots as f64 / full
+        } else {
+            FALLBACK_TV_RATIO
+        };
+        Self { td, tv }
+    }
+}
+
+/// Per-sequence EWMA accept-rate estimator + Eq. 2 budget picker.
+#[derive(Debug, Clone)]
+pub struct AdaptiveController {
+    cfg: AdaptiveConfig,
+    /// EWMA accept-rate estimate r̂ ∈ [0, 1].
+    rate: f64,
+    /// Uncensored Bernoulli trials observed so far.
+    trials: u64,
+    /// Batch-policy ceiling on the next budget (`usize::MAX` = no cap,
+    /// 0 = speculation disabled this iteration).
+    policy_cap: usize,
+}
+
+impl AdaptiveController {
+    pub fn new(cfg: AdaptiveConfig) -> Self {
+        let rate = if cfg.prior.is_nan() { 0.5 } else { cfg.prior.clamp(0.0, 1.0) };
+        Self { cfg, rate, trials: 0, policy_cap: usize::MAX }
+    }
+
+    /// Fold one verify outcome into the estimate, with the censoring
+    /// correction (module docs): `accepted` successes, plus one failure
+    /// only when a draft was actually rejected.  A chain where every
+    /// drafted token was accepted — whether it ran to budget or γ-exited
+    /// early — ends in censoring, not failure: the tokens that would have
+    /// followed were never tested.
+    pub fn observe(&mut self, drafted: usize, accepted: usize) {
+        let a = self.cfg.alpha;
+        for _ in 0..accepted.min(drafted) {
+            self.rate = (1.0 - a) * self.rate + a;
+            self.trials += 1;
+        }
+        if accepted < drafted {
+            self.rate *= 1.0 - a;
+            self.trials += 1;
+        }
+    }
+
+    /// Current accept-rate estimate r̂.
+    pub fn accept_rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Uncensored trials folded in so far (0 = still on the prior).
+    pub fn trials(&self) -> u64 {
+        self.trials
+    }
+
+    /// Apply the batch-level policy ceiling for the next iteration.
+    pub fn set_policy_cap(&mut self, cap: usize) {
+        self.policy_cap = cap;
+    }
+
+    /// Pick the next draft budget: argmax of `theoretical_speedup` over
+    /// L ∈ [min_draft, min(max_draft, policy_cap)], ties to the smallest L
+    /// (less speculative work for equal predicted speedup).  A policy cap
+    /// of 0 disables speculation outright (budget 0 = verify-only
+    /// iteration producing exactly the bonus token).
+    pub fn pick_budget(&self, max_draft: usize, ratios: &CostRatios) -> usize {
+        let cap = max_draft.min(self.policy_cap);
+        if cap == 0 {
+            return 0;
+        }
+        let lo = self.cfg.min_draft.clamp(1, cap);
+        let mut best_l = lo;
+        let mut best_s = f64::NEG_INFINITY;
+        for l in lo..=cap {
+            let s = theoretical_speedup(self.rate, l, ratios.td, ratios.tv);
+            if s > best_s {
+                best_s = s;
+                best_l = l;
+            }
+        }
+        best_l
+    }
+}
+
+/// Batch-level speculation policy, evaluated by the coordinator scheduler
+/// each engine step from the live occupancy `active / max_batch`.
+///
+/// Below `high_occupancy` the batch is draft-bound and long chains pay off;
+/// above it the shared verification pass already amortizes the full-weight
+/// stream across many sequences, so drafts are capped at `high_cap`; at
+/// full occupancy speculation is disabled (cap 0) — every sequence decodes
+/// through verify-only iterations until the batch drains.  The policy only
+/// constrains sessions running the adaptive controller; static sessions
+/// keep their configured `max_draft` bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchSpecPolicy {
+    /// Occupancy fraction at which drafts are capped.
+    pub high_occupancy: f64,
+    /// Draft cap applied in the high-occupancy band.
+    pub high_cap: usize,
+}
+
+impl Default for BatchSpecPolicy {
+    fn default() -> Self {
+        Self { high_occupancy: 0.75, high_cap: 4 }
+    }
+}
+
+impl BatchSpecPolicy {
+    /// Draft-budget ceiling for the coming engine step.
+    pub fn draft_cap(&self, active: usize, max_batch: usize) -> usize {
+        if max_batch == 0 {
+            return usize::MAX;
+        }
+        let occ = active as f64 / max_batch as f64;
+        if occ >= 1.0 {
+            0
+        } else if occ >= self.high_occupancy {
+            self.high_cap
+        } else {
+            usize::MAX
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_start_opens_conservatively() {
+        // On the neutral prior the Eq. 2 argmax sits at a short chain, not
+        // max_draft — the regression the `SpecTrace::accept_rate() == 1.0`
+        // bug would have caused.
+        let c = AdaptiveController::new(AdaptiveConfig::enabled());
+        let budget = c.pick_budget(16, &CostRatios::default());
+        assert!(
+            (1..=4).contains(&budget),
+            "cold-start budget {budget} should be short, not max_draft"
+        );
+    }
+
+    #[test]
+    fn observe_applies_censoring_correction() {
+        let cfg = AdaptiveConfig { enabled: true, alpha: 0.5, ..Default::default() };
+        // Full acceptance of a truncated (early-exited) chain: successes
+        // only, no failure trial.
+        let mut c = AdaptiveController::new(cfg);
+        c.observe(2, 2);
+        assert_eq!(c.trials(), 2);
+        assert!(c.accept_rate() > 0.8);
+        // A rejection contributes exactly one failure regardless of how
+        // many drafts followed it (they were never tested).
+        let mut c = AdaptiveController::new(cfg);
+        c.observe(8, 0);
+        assert_eq!(c.trials(), 1);
+        // A fully censored iteration (nothing drafted) is no evidence.
+        let mut c = AdaptiveController::new(cfg);
+        c.observe(0, 0);
+        assert_eq!(c.trials(), 0);
+        assert_eq!(c.accept_rate(), cfg.prior);
+    }
+
+    #[test]
+    fn budget_tracks_accept_rate() {
+        let cfg = AdaptiveConfig { enabled: true, alpha: 0.2, ..Default::default() };
+        let ratios = CostRatios::default();
+        let mut c = AdaptiveController::new(cfg);
+        // Sustained rejections: the argmax collapses to L = 1.
+        for _ in 0..64 {
+            c.observe(4, 0);
+        }
+        assert_eq!(c.pick_budget(16, &ratios), 1);
+        // Sustained full acceptance: the argmax climbs to max_draft.
+        for _ in 0..256 {
+            c.observe(4, 4);
+        }
+        assert!(c.accept_rate() > 0.99);
+        assert_eq!(c.pick_budget(16, &ratios), 16);
+    }
+
+    #[test]
+    fn policy_cap_bounds_and_disables() {
+        let mut c = AdaptiveController::new(AdaptiveConfig::enabled());
+        for _ in 0..256 {
+            c.observe(4, 4);
+        }
+        let ratios = CostRatios::default();
+        assert_eq!(c.pick_budget(16, &ratios), 16);
+        c.set_policy_cap(4);
+        assert_eq!(c.pick_budget(16, &ratios), 4);
+        c.set_policy_cap(0);
+        assert_eq!(c.pick_budget(16, &ratios), 0);
+        c.set_policy_cap(usize::MAX);
+        assert_eq!(c.pick_budget(16, &ratios), 16);
+    }
+
+    #[test]
+    fn occupancy_policy_bands() {
+        let p = BatchSpecPolicy::default();
+        assert_eq!(p.draft_cap(1, 8), usize::MAX);
+        assert_eq!(p.draft_cap(5, 8), usize::MAX);
+        assert_eq!(p.draft_cap(6, 8), p.high_cap); // 0.75 boundary
+        assert_eq!(p.draft_cap(7, 8), p.high_cap);
+        assert_eq!(p.draft_cap(8, 8), 0);
+        assert_eq!(p.draft_cap(9, 8), 0);
+        assert_eq!(p.draft_cap(3, 0), usize::MAX);
+    }
+
+    #[test]
+    fn cost_ratios_fall_back_on_empty_traffic() {
+        let r = CostRatios::from_traffic(&TrafficSnapshot::default(), 17);
+        assert_eq!(r, CostRatios::default());
+    }
+
+    #[test]
+    fn controller_is_deterministic() {
+        let cfg = AdaptiveConfig::enabled();
+        let ratios = CostRatios::default();
+        let run = || {
+            let mut c = AdaptiveController::new(cfg);
+            let mut budgets = Vec::new();
+            for i in 0..100usize {
+                let drafted = 1 + i % 5;
+                let accepted = drafted * (i % 3) / 2;
+                c.observe(drafted, accepted.min(drafted));
+                budgets.push(c.pick_budget(16, &ratios));
+            }
+            (budgets, c.accept_rate().to_bits())
+        };
+        assert_eq!(run(), run());
+    }
+}

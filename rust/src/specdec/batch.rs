@@ -24,10 +24,11 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::accept::{greedy_accept, speculative_sample_accept};
+use super::adaptive::{AdaptiveController, CostRatios};
 use super::engine::{capacity, pad_prompt};
 use super::trace::{IterRecord, SpecTrace};
 use super::{GenResult, SpecConfig};
-use crate::model::{sample_from_logits, softmax, SamplingParams};
+use crate::model::{argmax, sample_from_logits, softmax, softmax_top, SamplingParams};
 use crate::runtime::{Backend, SeqSlot};
 use crate::util::rng::Rng;
 
@@ -78,6 +79,12 @@ pub struct SpecSession {
     early_exit: bool,
     /// Next token to feed the draft pass.
     draft_tok: usize,
+    /// Adaptive draft-length controller (`None` = static `max_draft`).
+    adaptive: Option<AdaptiveController>,
+    /// Draft/verify cost ratios for the controller, sampled once at
+    /// session creation (the scheduler drains traffic every step, so the
+    /// live counter is not a usable per-step source).
+    ratios: CostRatios,
     started: Instant,
     wall: Duration,
 }
@@ -116,6 +123,12 @@ impl SpecSession {
             budget: 0,
             early_exit: false,
             draft_tok: 0,
+            adaptive: if cfg.adaptive.enabled {
+                Some(AdaptiveController::new(cfg.adaptive))
+            } else {
+                None
+            },
+            ratios: CostRatios::from_traffic(&backend.traffic(), slots),
             started: Instant::now(),
             wall: Duration::ZERO,
         };
@@ -138,12 +151,22 @@ impl SpecSession {
             self.finish();
             return;
         }
-        self.budget = self.cfg.max_draft.min(self.gen_len - self.out.len());
+        let ceiling = match &self.adaptive {
+            Some(c) => c.pick_budget(self.cfg.max_draft, &self.ratios),
+            None => self.cfg.max_draft,
+        };
+        self.budget = ceiling.min(self.gen_len - self.out.len());
         self.drafts.clear();
         self.draft_probs.clear();
         self.early_exit = false;
         self.draft_tok = self.carry;
-        self.phase = SpecPhase::Draft;
+        // A zero budget (batch policy: speculation disabled) skips the
+        // draft phase entirely — `on_draft` is the only Draft → Verify
+        // transition, so entering Draft with nothing to draft would hang
+        // the batch loop.  The verify pass then scores only the carry
+        // token: autoregression expressed through the verify graph.
+        self.phase =
+            if self.budget == 0 { SpecPhase::Verify } else { SpecPhase::Draft };
     }
 
     fn on_prefill(&mut self, logits: &[f32]) {
@@ -160,20 +183,26 @@ impl SpecSession {
     }
 
     fn on_draft(&mut self, logits: &[f32]) {
-        let probs = if self.cfg.sampling.is_greedy() {
-            softmax(logits)
+        let (d, top) = if self.cfg.sampling.is_greedy() {
+            // Greedy acceptance never reads the draft distribution
+            // (`greedy_accept` re-derives argmax from the verify logits),
+            // so don't allocate or retain a full-vocab softmax Vec per
+            // draft token: `softmax_top` yields bitwise the same max
+            // probability for the γ check, allocation-free.
+            (argmax(logits), softmax_top(logits))
         } else {
-            softmax(
+            let probs = softmax(
                 &logits
                     .iter()
                     .map(|&v| v / self.cfg.sampling.temperature)
                     .collect::<Vec<_>>(),
-            )
+            );
+            let (d, _) = sample_from_logits(logits, &self.cfg.sampling, &mut self.rng);
+            let top = probs.iter().fold(0.0f32, |m, &p| m.max(p));
+            self.draft_probs.push(probs);
+            (d, top)
         };
-        let (d, _) = sample_from_logits(logits, &self.cfg.sampling, &mut self.rng);
-        let top = probs.iter().fold(0.0f32, |m, &p| m.max(p));
         self.drafts.push(d);
-        self.draft_probs.push(probs);
         self.draft_tok = d;
         if self.drafts.len() == self.budget {
             // Budget exhausted: a full-length draft is not an early exit.
@@ -218,6 +247,9 @@ impl SpecSession {
             accepted: outcome.accepted as u32,
             early_exit: self.early_exit,
         });
+        if let Some(c) = &mut self.adaptive {
+            c.observe(self.drafts.len(), outcome.accepted);
+        }
         // Emit accepted drafts + the bonus/correction token.
         for &d in &self.drafts[..outcome.accepted] {
             self.out.push(d as u8);
@@ -344,6 +376,29 @@ impl GenSession {
         let chunk = out[*emitted..hi].to_vec();
         *emitted = hi;
         chunk
+    }
+
+    /// Apply the batch-level speculation policy's draft cap for upcoming
+    /// iterations.  Only adaptive speculative sessions respond; static and
+    /// AR sessions are untouched (their decode path must stay bit-identical
+    /// to the policy-free engine).
+    pub fn apply_spec_policy(&mut self, cap: usize) {
+        if let GenSession::Spec(s) = self {
+            if let Some(c) = &mut s.adaptive {
+                c.set_policy_cap(cap);
+            }
+        }
+    }
+
+    /// Live controller state for metrics: `(current draft budget,
+    /// accept-rate estimate)`.  `None` for AR and non-adaptive sessions.
+    pub fn adaptive_state(&self) -> Option<(usize, f64)> {
+        match self {
+            GenSession::Spec(s) => {
+                s.adaptive.as_ref().map(|c| (s.budget, c.accept_rate()))
+            }
+            GenSession::Ar(_) => None,
+        }
     }
 
     /// Release the session's KV slot (idempotent; called by the engine on

@@ -9,8 +9,9 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::accept::{greedy_accept, speculative_sample_accept};
+use super::adaptive::{AdaptiveConfig, AdaptiveController, CostRatios};
 use super::trace::{IterRecord, SpecTrace};
-use crate::model::{sample_from_logits, softmax, SamplingParams};
+use crate::model::{argmax, sample_from_logits, softmax, softmax_top, SamplingParams};
 use crate::runtime::Backend;
 use crate::util::rng::Rng;
 
@@ -18,6 +19,7 @@ use crate::util::rng::Rng;
 #[derive(Debug, Clone, Copy)]
 pub struct SpecConfig {
     /// Maximum draft length L per iteration (must be < model slots).
+    /// With adaptation enabled this is the controller's ceiling.
     pub max_draft: usize,
     /// §III-C early-exit threshold γ: stop drafting when the draft's top
     /// probability falls below γ.
@@ -25,11 +27,20 @@ pub struct SpecConfig {
     pub sampling: SamplingParams,
     /// Tokens to generate.
     pub gen_len: usize,
+    /// Per-sequence adaptive draft-length control (off by default; the
+    /// static path is bit-identical to the pre-controller engine).
+    pub adaptive: AdaptiveConfig,
 }
 
 impl Default for SpecConfig {
     fn default() -> Self {
-        Self { max_draft: 16, gamma: 0.6, sampling: SamplingParams::greedy(), gen_len: 256 }
+        Self {
+            max_draft: 16,
+            gamma: 0.6,
+            sampling: SamplingParams::greedy(),
+            gen_len: 256,
+            adaptive: AdaptiveConfig::default(),
+        }
     }
 }
 
@@ -148,6 +159,13 @@ impl<'m> Engine<'m> {
             return Ok(GenResult { tokens: vec![], trace, wall: t0.elapsed() });
         }
         let mut rng = Rng::seed_from_u64(cfg.sampling.seed);
+        // Cost ratios for the controller come from whatever traffic the
+        // backend has already metered (fallback constants when none);
+        // sampled once so the budget picker stays a pure function of the
+        // verify outcomes.
+        let ratios = CostRatios::from_traffic(&self.backend.traffic(), slots);
+        let mut ctrl =
+            if cfg.adaptive.enabled { Some(AdaptiveController::new(cfg.adaptive)) } else { None };
 
         let pre = self.backend.prefill(&toks, plen)?;
         let mut state = pre.state;
@@ -159,7 +177,11 @@ impl<'m> Engine<'m> {
 
         while out.len() < gen_len {
             // ---- draft phase (quantized pass, shared KV) ----
-            let budget = cfg.max_draft.min(gen_len - out.len());
+            let ceiling = match &ctrl {
+                Some(c) => c.pick_budget(cfg.max_draft, &ratios),
+                None => cfg.max_draft,
+            };
+            let budget = ceiling.min(gen_len - out.len());
             let mut drafts: Vec<usize> = Vec::with_capacity(budget);
             let mut draft_probs: Vec<Vec<f32>> = Vec::with_capacity(budget);
             let mut early_exit = false;
@@ -167,21 +189,26 @@ impl<'m> Engine<'m> {
             for i in 0..budget {
                 let step = self.backend.decode_draft(tok as i32, pos0 + i, state)?;
                 state = step.state;
-                let probs = if cfg.sampling.is_greedy() {
-                    softmax(&step.logits)
+                let (d, top) = if cfg.sampling.is_greedy() {
+                    // Greedy never reads the distribution (greedy_accept
+                    // re-derives argmax from the verify logits), so skip
+                    // the full-vocab softmax Vec: `softmax_top` is bitwise
+                    // the same max probability, allocation-free.
+                    (argmax(&step.logits), softmax_top(&step.logits))
                 } else {
-                    softmax(
+                    let probs = softmax(
                         &step
                             .logits
                             .iter()
                             .map(|&v| v / cfg.sampling.temperature)
                             .collect::<Vec<_>>(),
-                    )
+                    );
+                    let (d, _) = sample_from_logits(&step.logits, &cfg.sampling, &mut rng);
+                    let top = probs.iter().fold(0.0f32, |m, &p| m.max(p));
+                    draft_probs.push(probs);
+                    (d, top)
                 };
-                let (d, _) = sample_from_logits(&step.logits, &cfg.sampling, &mut rng);
-                let top = probs.iter().fold(0.0f32, |m, &p| m.max(p));
                 drafts.push(d);
-                draft_probs.push(probs);
                 tok = d;
                 // §III-C: if the draft is not confident, verification will
                 // likely reject — stop drafting.
@@ -222,6 +249,9 @@ impl<'m> Engine<'m> {
                 accepted: outcome.accepted as u32,
                 early_exit,
             });
+            if let Some(c) = &mut ctrl {
+                c.observe(drafts.len(), outcome.accepted);
+            }
 
             // Emit accepted drafts + the bonus/correction token.
             for &d in &drafts[..outcome.accepted] {

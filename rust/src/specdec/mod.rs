@@ -16,16 +16,31 @@
 //! * [`trace`] — per-iteration records consumed by the accelerator
 //!   simulator and the report harness.
 //! * [`theory`] — the paper's Eq. 1 (expected accept length) and Eq. 2
-//!   (speedup), validated against simulation in experiment E10.
+//!   (speedup), validated against simulation in experiment E10.  Total
+//!   over NaN/out-of-range inputs so live estimators can call it.
+//! * [`adaptive`] — per-sequence adaptive draft-length controller: an EWMA
+//!   accept-rate estimate driven by verify outcomes, with the §III-C
+//!   censoring correction (an early-exited or rejected chain yields
+//!   `accepted` success trials plus at most one failure — the untested
+//!   tail is censored, not counted), maximizing Eq. 2 over the draft
+//!   budget each iteration; plus the coordinator's batch-occupancy policy.
+//!
+//! Adaptation is opt-in (`SpecConfig::adaptive.enabled`); with it off the
+//! decode path is bit-identical to the static engine (pinned by goldens).
 
 mod accept;
+mod adaptive;
 mod batch;
 mod engine;
 mod theory;
 mod trace;
 
 pub use accept::{greedy_accept, speculative_sample_accept, AcceptOutcome};
+pub use adaptive::{
+    AdaptiveConfig, AdaptiveController, BatchSpecPolicy, CostRatios, FALLBACK_TD_RATIO,
+    FALLBACK_TV_RATIO,
+};
 pub use batch::{ArSession, BatchEngine, GenSession, SpecSession};
 pub use engine::{Engine, GenResult, SpecConfig};
-pub use theory::{expected_accept_length, theoretical_speedup};
+pub use theory::{expected_accept_length, theoretical_speedup, MIN_COST_RATIO};
 pub use trace::{IterRecord, SpecTrace};

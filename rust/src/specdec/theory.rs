@@ -1,9 +1,47 @@
 //! The paper's analytic model (Eq. 1 and Eq. 2, after [Leviathan et al.]).
+//!
+//! Both entry points are **total**: a live accept-rate estimator can hand
+//! them `0/0` (NaN), ε-out-of-range values from floating-point accumulation,
+//! or zero cost ratios from an empty traffic counter, and they must never
+//! panic a serving thread.  Inputs are sanitized — NaN accept rates read as
+//! 0 (pessimistic: no draft evidence), finite rates clamp into `[0, 1]`,
+//! and non-positive/non-finite cost ratios floor at [`MIN_COST_RATIO`] — so
+//! the result is always finite and non-negative.
+
+/// Smallest cost ratio the model will use.  A measured `T_d/T_ar` or
+/// `T_v/T_ar` at or below zero (or NaN/inf) means the counters were empty
+/// or nonsense; flooring instead of panicking keeps Eq. 2 total while
+/// making degenerate inputs yield an (obviously huge but finite) speedup
+/// rather than a division by zero.
+pub const MIN_COST_RATIO: f64 = 1e-6;
+
+/// Clamp an accept-rate estimate into `[0, 1]`; NaN reads as 0.
+fn sanitize_rate(r: f64) -> f64 {
+    if r.is_nan() {
+        return 0.0;
+    }
+    r.clamp(0.0, 1.0)
+}
+
+/// Floor a cost ratio at [`MIN_COST_RATIO`]; NaN/inf/non-positive read as
+/// the floor.  (`f64::clamp` propagates NaN, so the finite check is
+/// explicit.)
+fn sanitize_ratio(v: f64) -> f64 {
+    if v.is_finite() && v > MIN_COST_RATIO {
+        v
+    } else {
+        MIN_COST_RATIO
+    }
+}
 
 /// Eq. 1: expected accept length `L_a = (1 - r^(L+1)) / (1 - r)` for draft
 /// length `L` and per-token accept rate `r`.
+///
+/// Total over all inputs: `r` is sanitized per the module docs, and
+/// `draft_len == 0` is meaningful (speculation disabled — only the bonus
+/// token survives, `L_a = 1`).
 pub fn expected_accept_length(r: f64, draft_len: usize) -> f64 {
-    assert!((0.0..=1.0).contains(&r), "accept rate out of range: {r}");
+    let r = sanitize_rate(r);
     if (1.0 - r).abs() < 1e-12 {
         return draft_len as f64 + 1.0;
     }
@@ -16,9 +54,13 @@ pub fn expected_accept_length(r: f64, draft_len: usize) -> f64 {
 /// `td_ratio` is `T_d / T_ar` (draft step cost relative to an
 /// autoregressive step) and `tv_ratio` is `T_v / T_ar` (one parallel
 /// verification pass relative to an autoregressive step).
+///
+/// Total over all inputs: ratios are floored at [`MIN_COST_RATIO`], `r` is
+/// sanitized, and `draft_len == 0` degenerates to `1 / tv_ratio` (pure
+/// verify-driven decoding).
 pub fn theoretical_speedup(r: f64, draft_len: usize, td_ratio: f64, tv_ratio: f64) -> f64 {
     let la = expected_accept_length(r, draft_len);
-    la / (draft_len as f64 * td_ratio + tv_ratio)
+    la / (draft_len as f64 * sanitize_ratio(td_ratio) + sanitize_ratio(tv_ratio))
 }
 
 #[cfg(test)]
@@ -62,5 +104,44 @@ mod tests {
         let fast = theoretical_speedup(0.95, 8, 0.2, 1.0);
         let slow = theoretical_speedup(0.95, 8, 0.9, 1.0);
         assert!(fast > slow);
+    }
+
+    #[test]
+    fn total_over_nan_and_out_of_range_rates() {
+        // NaN (a 0/0 estimator cold start) reads as r = 0.
+        let nan = expected_accept_length(f64::NAN, 16);
+        assert!(nan.is_finite());
+        assert!((nan - 1.0).abs() < 1e-12);
+        // ε-out-of-range values clamp rather than panic.
+        assert!((expected_accept_length(1.0 + 1e-9, 8) - 9.0).abs() < 1e-12);
+        assert!((expected_accept_length(-1e-9, 8) - 1.0).abs() < 1e-12);
+        assert!((expected_accept_length(f64::INFINITY, 8) - 9.0).abs() < 1e-12);
+        let s = theoretical_speedup(f64::NAN, 16, 0.27, 1.0);
+        assert!(s.is_finite() && s >= 0.0, "speedup {s}");
+    }
+
+    #[test]
+    fn total_over_degenerate_cost_ratios() {
+        // Empty traffic counters produce 0/0 = NaN or 0.0 ratios; the
+        // model floors them and stays finite.
+        for &(td, tv) in &[
+            (0.0, 0.0),
+            (f64::NAN, 1.0),
+            (0.27, f64::NAN),
+            (-1.0, 1.0),
+            (f64::INFINITY, f64::INFINITY),
+        ] {
+            let s = theoretical_speedup(0.8, 8, td, tv);
+            assert!(s.is_finite() && s >= 0.0, "td={td} tv={tv} -> {s}");
+        }
+    }
+
+    #[test]
+    fn zero_draft_len_means_speculation_disabled() {
+        // L = 0 is the batch policy's "disable" setting: one verify pass
+        // scoring only the carry token yields exactly the bonus token.
+        assert!((expected_accept_length(0.9, 0) - 1.0).abs() < 1e-12);
+        let s = theoretical_speedup(0.9, 0, 0.27, 1.0);
+        assert!((s - 1.0).abs() < 1e-12, "L=0 speedup should be 1/tv, got {s}");
     }
 }

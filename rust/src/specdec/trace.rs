@@ -46,10 +46,19 @@ impl SpecTrace {
     }
 
     /// Empirical per-token accept rate r: accepted / drafted.
+    ///
+    /// With zero drafted tokens there is no evidence either way, so this
+    /// returns the documented neutral value `0.0` ("no drafts accepted")
+    /// rather than the optimistic `1.0` it used to claim — a cold-start
+    /// controller reading `1.0` here would jump straight to `max_draft`.
+    /// Controllers wanting an informative prior must supply their own
+    /// (see `adaptive::AdaptiveConfig::prior`); API consumers see `0.0`
+    /// for autoregressive sessions, which honestly reports that nothing
+    /// was speculated.
     pub fn accept_rate(&self) -> f64 {
         let drafted: u64 = self.draft_steps();
         if drafted == 0 {
-            return 1.0;
+            return 0.0;
         }
         let accepted: u64 = self.iterations.iter().map(|i| i.accepted as u64).sum();
         accepted as f64 / drafted as f64
@@ -103,6 +112,22 @@ mod tests {
         assert!((t.accept_rate() - 5.0 / 9.0).abs() < 1e-12);
         assert!((t.mean_accept_len() - (5.0 + 3.0) / 3.0).abs() < 1e-12);
         assert!((t.early_exit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_trace_reports_neutral_accept_rate() {
+        // No drafted tokens (AR session, or a spec session before its
+        // first verify) is zero evidence, not a perfect accept rate.
+        let t = SpecTrace::default();
+        assert_eq!(t.accept_rate(), 0.0);
+        // Iterations that drafted nothing (early exit before the first
+        // draft token) likewise carry no accept-rate evidence.
+        let t = SpecTrace {
+            iterations: vec![IterRecord { drafted: 0, accepted: 0, early_exit: true }],
+            produced: 1,
+            prompt_len: 4,
+        };
+        assert_eq!(t.accept_rate(), 0.0);
     }
 
     #[test]

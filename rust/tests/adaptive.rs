@@ -1,0 +1,171 @@
+//! Adaptive draft-length controller: convergence properties of the EWMA
+//! estimator + Eq. 2 argmax, and end-to-end losslessness/determinism of
+//! adaptive generation (static-path bit-identity is pinned by the golden
+//! suite, which runs with the controller disabled).
+
+use speq::model::SamplingParams;
+use speq::runtime::NativeBackend;
+use speq::specdec::{
+    theoretical_speedup, AdaptiveConfig, AdaptiveController, BatchEngine, CostRatios, Engine,
+    SpecConfig,
+};
+use speq::util::rng::Rng;
+
+/// Brute-force argmax of the Eq. 2 speedup model over L ∈ [1, max].
+fn theory_argmax(r: f64, max: usize, ratios: &CostRatios) -> (usize, f64) {
+    let mut best = (1, f64::NEG_INFINITY);
+    for l in 1..=max {
+        let s = theoretical_speedup(r, l, ratios.td, ratios.tv);
+        if s > best.1 {
+            best = (l, s);
+        }
+    }
+    best
+}
+
+/// Drive a controller with Bernoulli(r) accept streams (geometric
+/// acceptance, as verification produces) at its own chosen budgets for
+/// `iters` verify outcomes; returns the budget chosen at each iteration.
+fn drive(
+    c: &mut AdaptiveController,
+    r: f64,
+    iters: usize,
+    ratios: &CostRatios,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let mut budgets = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let drafted = c.pick_budget(16, ratios).max(1);
+        let mut accepted = 0;
+        for _ in 0..drafted {
+            if rng.gen_f64() < r {
+                accepted += 1;
+            } else {
+                break;
+            }
+        }
+        c.observe(drafted, accepted);
+        budgets.push(c.pick_budget(16, ratios));
+    }
+    budgets
+}
+
+/// Mean budget over the final `n` entries (smooths EWMA wobble).
+fn tail_mean(budgets: &[usize], n: usize) -> f64 {
+    let tail = &budgets[budgets.len().saturating_sub(n)..];
+    tail.iter().sum::<usize>() as f64 / tail.len() as f64
+}
+
+#[test]
+fn controller_converges_to_the_theory_argmax() {
+    // Property: for a stationary accept rate, the controller's typical
+    // late-run budget must be near-optimal under the true rate — within
+    // 10% of the brute-force optimum (the EWMA estimate wobbles around r,
+    // so the instantaneous argmax visits neighboring L values; the tail
+    // mean is the controller's operating point).
+    let ratios = CostRatios::default();
+    for (i, &r) in [0.3f64, 0.6, 0.8, 0.95].iter().enumerate() {
+        let cfg = AdaptiveConfig { enabled: true, alpha: 0.05, ..Default::default() };
+        let mut c = AdaptiveController::new(cfg);
+        let mut rng = Rng::seed_from_u64(0xADA0 + i as u64);
+        let budgets = drive(&mut c, r, 800, &ratios, &mut rng);
+        let typical = tail_mean(&budgets, 200).round().max(1.0) as usize;
+        let (opt_l, opt_s) = theory_argmax(r, 16, &ratios);
+        let got_s = theoretical_speedup(r, typical, ratios.td, ratios.tv);
+        assert!(
+            got_s >= 0.9 * opt_s,
+            "r={r}: operating at L={typical} (S={got_s:.3}) vs optimum L={opt_l} (S={opt_s:.3})"
+        );
+        assert!(
+            (c.accept_rate() - r).abs() < 0.2,
+            "r={r}: EWMA estimate {:.3} drifted",
+            c.accept_rate()
+        );
+    }
+}
+
+#[test]
+fn controller_tracks_a_mid_run_shift() {
+    // An easy stretch followed by a hard one: the typical budget must
+    // climb, then collapse back to a short chain.
+    let ratios = CostRatios::default();
+    let cfg = AdaptiveConfig { enabled: true, alpha: 0.05, ..Default::default() };
+    let mut c = AdaptiveController::new(cfg);
+    let mut rng = Rng::seed_from_u64(0x5417);
+    let high = tail_mean(&drive(&mut c, 0.95, 500, &ratios, &mut rng), 100);
+    assert!(high >= 4.0, "high-accept phase should open long chains, got {high:.2}");
+    let low = tail_mean(&drive(&mut c, 0.05, 150, &ratios, &mut rng), 50);
+    assert!(low <= 2.0, "low-accept phase should collapse the budget, got {low:.2}");
+    assert!(high > low);
+}
+
+#[test]
+fn greedy_adaptation_is_lossless() {
+    // Greedy speculative decoding is exactly lossless, with or without the
+    // controller: adaptation changes *when* verify passes happen, never
+    // which tokens survive them.
+    let model = NativeBackend::builtin("vicuna-7b-tiny").unwrap();
+    let engine = Engine::new(&model);
+    let prompt: &[u8] = b"def add_two(x):\n    return ";
+    let gen_len = 96;
+    let ar = engine.generate_ar(prompt, gen_len, SamplingParams::greedy()).unwrap();
+    let stat = engine
+        .generate_spec(prompt, &SpecConfig { gen_len, ..Default::default() })
+        .unwrap();
+    let acfg = SpecConfig { gen_len, adaptive: AdaptiveConfig::enabled(), ..Default::default() };
+    let adap = engine.generate_spec(prompt, &acfg).unwrap();
+    assert_eq!(stat.tokens, ar.tokens, "static spec must match AR (greedy lossless)");
+    assert_eq!(adap.tokens, ar.tokens, "adaptive spec must match AR (greedy lossless)");
+    assert_eq!(adap.trace.produced, adap.tokens.len());
+}
+
+#[test]
+fn adaptive_generation_is_deterministic() {
+    // The controller is a pure function of observed outcomes: two
+    // identical adaptive runs must agree token-for-token and
+    // iteration-for-iteration (budget sequence included, via `drafted`).
+    let model = NativeBackend::builtin("llama3.2-3b-tiny").unwrap();
+    let engine = Engine::new(&model);
+    let prompt: &[u8] = b"Q: bob has 9 coins and spends 2. how many coins left?\nA: ";
+    let cfg =
+        SpecConfig { gen_len: 64, adaptive: AdaptiveConfig::enabled(), ..Default::default() };
+    let a = engine.generate_spec(prompt, &cfg).unwrap();
+    let b = engine.generate_spec(prompt, &cfg).unwrap();
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.trace.iterations, b.trace.iterations);
+    assert_eq!(a.trace.produced, b.trace.produced);
+}
+
+#[test]
+fn batched_adaptive_matches_static_tokens() {
+    // The batched state machine with per-session controllers must still be
+    // lossless under greedy sampling — mixed static/adaptive batches
+    // produce the same byte streams as all-static ones.
+    let model = NativeBackend::builtin("vicuna-7b-tiny").unwrap();
+    let be = BatchEngine::new(&model);
+    let prompts: [&[u8]; 3] = [
+        b"Q: ada has 3 apples and finds 4 more. how many apples now?\nA: ",
+        b"def add_two(x):\n    return ",
+        b"USER: hello, can we talk about music?\nBOT: ",
+    ];
+    let mk = |adaptive: bool| -> Vec<(Vec<u8>, SpecConfig)> {
+        prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let ad = if adaptive && i % 2 == 0 {
+                    AdaptiveConfig::enabled()
+                } else {
+                    AdaptiveConfig::default()
+                };
+                (p.to_vec(), SpecConfig { gen_len: 48, adaptive: ad, ..Default::default() })
+            })
+            .collect()
+    };
+    let stat = be.run_spec(&mk(false)).unwrap();
+    let adap = be.run_spec(&mk(true)).unwrap();
+    assert_eq!(stat.len(), adap.len());
+    for (i, (s, a)) in stat.iter().zip(&adap).enumerate() {
+        assert_eq!(s.tokens, a.tokens, "request {i}: adaptive batch diverged");
+    }
+}

@@ -181,6 +181,7 @@ fn queue_stress_many_producers() {
                     gen_len: 1,
                     max_draft: 16,
                     gamma: 0.6,
+                    adaptive: false,
                     sampling: SamplingParams::greedy(),
                     mode: speq::coordinator::Mode::Speculative,
                     priority: if i % 2 == 0 { Priority::Interactive } else { Priority::Batch },
@@ -220,6 +221,7 @@ fn req_clone_hack(r: &speq::coordinator::Request) -> speq::coordinator::Request 
         gen_len: r.gen_len,
         max_draft: r.max_draft,
         gamma: r.gamma,
+        adaptive: r.adaptive,
         sampling: r.sampling,
         mode: r.mode,
         priority: r.priority,

@@ -107,6 +107,7 @@ fn prop_native_greedy_spec_is_lossless() {
             gamma: [0.0f32, 0.5, 0.9][rng.gen_range(3)],
             sampling: SamplingParams::greedy(),
             gen_len,
+            ..Default::default()
         };
         let ar = engine.generate_ar(&prompt, gen_len, SamplingParams::greedy()).expect("ar");
         let spec = engine.generate_spec(&prompt, &cfg).expect("spec");
