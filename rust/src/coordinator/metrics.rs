@@ -35,6 +35,14 @@ pub struct Metrics {
     /// Requests retired between engine steps without completing (deadline
     /// expired or client cancelled); their KV slots were freed.
     pub requests_cancelled: AtomicU64,
+    /// Requests evicted from a live batch because an engine-step op they
+    /// were part of failed or panicked (blast-radius isolation); always a
+    /// subset of `requests_failed`.
+    pub requests_quarantined: AtomicU64,
+    /// Current rung on the graceful-degradation ladder: 0 = healthy,
+    /// 1 = prefix-cache eviction, 2 = speculation capped, 3 = shedding
+    /// new admissions.  A gauge, not a counter.
+    pub degradation_level: AtomicU64,
     pub tokens_generated: AtomicU64,
     pub draft_steps: AtomicU64,
     pub verify_passes: AtomicU64,
@@ -65,6 +73,15 @@ pub struct MetricsSnapshot {
     pub rejected: u64,
     pub failed: u64,
     pub cancelled: u64,
+    /// Failed requests that were quarantined out of a live batch while the
+    /// rest of the batch kept stepping (subset of `failed`).
+    pub quarantined: u64,
+    /// Current graceful-degradation rung (0 healthy .. 3 shedding).
+    pub degradation_level: u64,
+    /// Faults fired by the process-wide injection plan (0 without one).
+    pub faults_injected: u64,
+    /// Fault events the serving stack contained and recovered from.
+    pub faults_recovered: u64,
     pub tokens: u64,
     pub draft_steps: u64,
     pub verify_passes: u64,
@@ -117,6 +134,8 @@ impl Metrics {
             requests_rejected: AtomicU64::new(0),
             requests_failed: AtomicU64::new(0),
             requests_cancelled: AtomicU64::new(0),
+            requests_quarantined: AtomicU64::new(0),
+            degradation_level: AtomicU64::new(0),
             tokens_generated: AtomicU64::new(0),
             draft_steps: AtomicU64::new(0),
             verify_passes: AtomicU64::new(0),
@@ -200,6 +219,10 @@ impl Metrics {
             rejected: self.requests_rejected.load(Ordering::Relaxed),
             failed: self.requests_failed.load(Ordering::Relaxed),
             cancelled: self.requests_cancelled.load(Ordering::Relaxed),
+            quarantined: self.requests_quarantined.load(Ordering::Relaxed),
+            degradation_level: self.degradation_level.load(Ordering::Relaxed),
+            faults_injected: crate::faults::injected_total(),
+            faults_recovered: crate::faults::recovered_total(),
             tokens,
             draft_steps: self.draft_steps.load(Ordering::Relaxed),
             verify_passes: self.verify_passes.load(Ordering::Relaxed),

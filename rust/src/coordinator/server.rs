@@ -48,6 +48,26 @@ pub struct ServerConfig {
     /// default from `SPEQ_THREADS`, else serial).  Purely a wall-clock
     /// knob: generated tokens are bit-identical for every value.
     pub threads: NativeConfig,
+    /// Hard cap on live KV pages per scheduler backend (`None` =
+    /// unbounded).  Allocation past the budget fails with a typed
+    /// `PageExhausted`, which the scheduler contains per-request and
+    /// answers with the degradation ladder instead of crashing.
+    pub kv_page_budget: Option<u64>,
+    /// Watchdog deadline for a single engine step.  A step that runs
+    /// longer is declared stuck: once it returns, the whole batch is
+    /// failed with `FailureKind::StepTimeout` (its KV state is suspect)
+    /// and the scheduler keeps serving.  Default 30s, overridable with
+    /// `SPEQ_STEP_DEADLINE_MS`.
+    pub step_deadline: Duration,
+}
+
+/// Default watchdog deadline: `SPEQ_STEP_DEADLINE_MS` or 30 seconds.
+fn default_step_deadline() -> Duration {
+    std::env::var("SPEQ_STEP_DEADLINE_MS")
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(Duration::from_secs(30))
 }
 
 impl Default for ServerConfig {
@@ -61,6 +81,8 @@ impl Default for ServerConfig {
             max_batch: 8,
             batch_promote_after: DEFAULT_BATCH_PROMOTE_AFTER,
             threads: NativeConfig::default(),
+            kv_page_budget: None,
+            step_deadline: default_step_deadline(),
         }
     }
 }
@@ -103,12 +125,79 @@ impl Default for SubmitParams {
     }
 }
 
+/// One scheduler's step-in-progress marker for the watchdog.
+struct WatchSlot {
+    /// Milliseconds since watchdog origin when the in-flight step began,
+    /// plus one (so 0 can mean "idle, nothing to time").
+    step_start: std::sync::atomic::AtomicU64,
+    /// Set by the watchdog thread when the in-flight step overruns the
+    /// deadline; consumed by the scheduler when the step finally returns.
+    timed_out: std::sync::atomic::AtomicBool,
+}
+
+/// Detects stuck engine steps.  Scheduler threads bracket every step with
+/// [`Watchdog::begin_step`] / [`Watchdog::end_step`]; a monitor thread
+/// polls the slots and flags any step older than the deadline.  The
+/// flagged batch is failed *by its own scheduler* once the step returns —
+/// the watchdog never touches backend state from outside (backends are
+/// not `Sync`), it only renders the verdict.
+struct Watchdog {
+    origin: Instant,
+    deadline: Duration,
+    slots: Vec<WatchSlot>,
+    stop: std::sync::atomic::AtomicBool,
+}
+
+impl Watchdog {
+    fn new(workers: usize, deadline: Duration) -> Self {
+        let slots = (0..workers)
+            .map(|_| WatchSlot {
+                step_start: std::sync::atomic::AtomicU64::new(0),
+                timed_out: std::sync::atomic::AtomicBool::new(false),
+            })
+            .collect();
+        Self { origin: Instant::now(), deadline, slots, stop: std::sync::atomic::AtomicBool::new(false) }
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.origin.elapsed().as_millis() as u64
+    }
+
+    fn begin_step(&self, wid: usize) {
+        self.slots[wid].step_start.store(self.now_ms() + 1, Ordering::Release);
+    }
+
+    /// Clear the in-progress marker; returns `true` when the watchdog
+    /// declared this step stuck while it ran.
+    fn end_step(&self, wid: usize) -> bool {
+        self.slots[wid].step_start.store(0, Ordering::Release);
+        self.slots[wid].timed_out.swap(false, Ordering::AcqRel)
+    }
+
+    /// Monitor loop body (runs on its own thread until `stop`).
+    fn run(&self) {
+        let deadline_ms = self.deadline.as_millis() as u64;
+        while !self.stop.load(Ordering::Acquire) {
+            let now = self.now_ms();
+            for slot in &self.slots {
+                let started = slot.step_start.load(Ordering::Acquire);
+                if started != 0 && now.saturating_sub(started - 1) > deadline_ms {
+                    slot.timed_out.store(true, Ordering::Release);
+                }
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+}
+
 /// A running SPEQ serving instance.
 pub struct Server {
     queue: Arc<RequestQueue>,
     metrics: Arc<Metrics>,
     sessions: Arc<SessionStore>,
     workers: Vec<JoinHandle<()>>,
+    watchdog: Arc<Watchdog>,
+    watchdog_thread: Option<JoinHandle<()>>,
     next_id: std::sync::atomic::AtomicU64,
 }
 
@@ -132,6 +221,11 @@ impl Server {
             Arc::new(RequestQueue::with_promotion(cfg.queue_capacity, cfg.batch_promote_after));
         let metrics = Arc::new(Metrics::new());
         let sessions = Arc::new(SessionStore::new(cfg.session_history));
+        let watchdog = Arc::new(Watchdog::new(cfg.workers.max(1), cfg.step_deadline));
+        let watchdog_thread = {
+            let w = watchdog.clone();
+            std::thread::spawn(move || w.run())
+        };
 
         let mut workers = Vec::new();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
@@ -139,10 +233,11 @@ impl Server {
             let queue = queue.clone();
             let metrics = metrics.clone();
             let sessions = sessions.clone();
+            let watchdog = watchdog.clone();
             let cfg = cfg.clone();
             let ready = ready_tx.clone();
             workers.push(std::thread::spawn(move || {
-                scheduler_main(wid, cfg, queue, metrics, sessions, ready);
+                scheduler_main(wid, cfg, queue, metrics, sessions, watchdog, ready);
             }));
         }
         drop(ready_tx);
@@ -165,6 +260,8 @@ impl Server {
             for h in workers {
                 let _ = h.join();
             }
+            watchdog.stop.store(true, Ordering::Release);
+            let _ = watchdog_thread.join();
             return Err(e);
         }
         Ok(Self {
@@ -172,6 +269,8 @@ impl Server {
             metrics,
             sessions,
             workers,
+            watchdog,
+            watchdog_thread: Some(watchdog_thread),
             next_id: std::sync::atomic::AtomicU64::new(1),
         })
     }
@@ -277,8 +376,16 @@ impl Server {
     /// the workers *is* the drain barrier: no accepted request is dropped
     /// mid-generation.
     pub fn shutdown(mut self) {
+        self.stop_threads();
+    }
+
+    fn stop_threads(&mut self) {
         self.queue.close();
         for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        self.watchdog.stop.store(true, Ordering::Release);
+        if let Some(h) = self.watchdog_thread.take() {
             let _ = h.join();
         }
     }
@@ -286,10 +393,7 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.queue.close();
-        for h in self.workers.drain(..) {
-            let _ = h.join();
-        }
+        self.stop_threads();
     }
 }
 
@@ -322,12 +426,66 @@ fn cancel_active(mut a: ActiveReq, kind: CancelKind, backend: &dyn Backend, metr
     let _ = a.respond_to.send(Response { id: a.id, event: ResponseEvent::Cancelled(kind) });
 }
 
+/// Graceful-degradation ladder state (per scheduler thread; each thread
+/// owns one backend and therefore one KV pool).
+///
+/// Rungs: 0 healthy → 1 evict prefix-cache LRU leaves → 2 cap/disable
+/// speculation → 3 shed new network admissions (the net front end turns
+/// the shared gauge into `503 + Retry-After`).  KV pressure — a
+/// `PageExhausted` failure — escalates one rung per failing step; a run
+/// of clean steps walks back down one rung at a time.
+struct Ladder {
+    level: u64,
+    clean_steps: u32,
+}
+
+/// Consecutive clean engine steps required to step one rung back down.
+const LADDER_RECOVER_STEPS: u32 = 32;
+/// Prefix-cache pages evicted per rung-1 relief attempt.
+const LADDER_EVICT_PAGES: usize = 8;
+
+impl Ladder {
+    fn new() -> Self {
+        Self { level: 0, clean_steps: 0 }
+    }
+
+    /// KV pressure observed this step: climb one rung and apply its
+    /// relief action.  Returns the new level.
+    fn escalate(&mut self, backend: &dyn Backend, metrics: &Metrics) -> u64 {
+        self.clean_steps = 0;
+        self.level = (self.level + 1).min(3);
+        if self.level >= 1 {
+            // Rung 1: give pages back before anything else degrades —
+            // cached prefixes are strictly recomputable.
+            backend.relieve_kv_pressure(LADDER_EVICT_PAGES);
+        }
+        metrics.degradation_level.store(self.level, Ordering::Relaxed);
+        self.level
+    }
+
+    /// A step finished without KV pressure: after enough of them, walk
+    /// one rung back down (and count the recovery).
+    fn step_clean(&mut self, metrics: &Metrics) {
+        if self.level == 0 {
+            return;
+        }
+        self.clean_steps += 1;
+        if self.clean_steps >= LADDER_RECOVER_STEPS {
+            self.clean_steps = 0;
+            self.level -= 1;
+            metrics.degradation_level.store(self.level, Ordering::Relaxed);
+            crate::faults::note_recovered();
+        }
+    }
+}
+
 fn scheduler_main(
     wid: usize,
     cfg: ServerConfig,
     queue: Arc<RequestQueue>,
     metrics: Arc<Metrics>,
     sessions: Arc<SessionStore>,
+    watchdog: Arc<Watchdog>,
     ready: mpsc::Sender<Result<()>>,
 ) {
     // Build the per-scheduler backend stack.
@@ -342,9 +500,11 @@ fn scheduler_main(
             return;
         }
     };
+    backend.set_kv_page_budget(cfg.kv_page_budget);
     let engine = BatchEngine::new(backend.as_ref());
     let max_batch = cfg.max_batch.max(1);
     let spec_policy = BatchSpecPolicy::default();
+    let mut ladder = Ladder::new();
     let mut active: Vec<ActiveReq> = Vec::new();
     // Requests whose conversation already has an in-flight turn: co-batching
     // them would read session history before the earlier turn appends it,
@@ -451,17 +611,24 @@ fn scheduler_main(
         // sessions for the coming step.  Static sessions ignore the cap —
         // their token streams must stay bit-identical to the policy-free
         // engine.
-        let cap = spec_policy.draft_cap(active.len(), max_batch);
+        // Rung 2 of the degradation ladder overrides the occupancy cap:
+        // under sustained KV pressure speculation is disabled outright
+        // (draft chains are the most page-hungry transient allocation).
+        // Static sessions still ignore the cap, preserving their
+        // bit-identical contract.
+        let cap = if ladder.level >= 2 { 0 } else { spec_policy.draft_cap(active.len(), max_batch) };
         for a in &mut active {
             a.session.apply_spec_policy(cap);
         }
 
         // ---- one lockstep engine step over the whole batch ----
-        let step_result = {
+        watchdog.begin_step(wid);
+        let report = {
             let mut refs: Vec<&mut GenSession> =
                 active.iter_mut().map(|a| &mut a.session).collect();
-            engine.step(&mut refs)
+            engine.step_report(&mut refs)
         };
+        let step_stuck = watchdog.end_step(wid);
         // Fold this step's weight traffic into the shared sink (the drain
         // keeps per-backend counters from double-counting across workers;
         // backends without accounting report zeros).
@@ -482,18 +649,66 @@ fn scheduler_main(
             }
         }
         metrics.record_spec_adaptive(n, sum_budget, sum_rate);
-        if let Err(e) = step_result {
-            // A batched op failed: no per-sequence attribution, so fail the
-            // whole in-flight batch (clients may retry; slots are freed).
+
+        // ---- watchdog verdict: a stuck step poisons the whole batch ----
+        // The step did eventually return (we only get here afterwards),
+        // but a step that blew the deadline points at wedged backend state
+        // (or an injected stall); every in-flight sequence is failed with
+        // a typed `StepTimeout` and the scheduler keeps serving.
+        if step_stuck {
             for mut a in active.drain(..) {
                 a.session.release(backend.as_ref());
                 metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+                metrics.requests_quarantined.fetch_add(1, Ordering::Relaxed);
                 let _ = a.respond_to.send(Response {
                     id: a.id,
-                    event: ResponseEvent::Done(Err(anyhow::anyhow!("engine step failed: {e:#}"))),
+                    event: ResponseEvent::Done(Err(anyhow::anyhow!(
+                        "request failed ({}): engine step exceeded the {}ms watchdog deadline",
+                        crate::faults::FailureKind::StepTimeout,
+                        cfg.step_deadline.as_millis(),
+                    ))),
                 });
             }
+            crate::faults::note_recovered();
+            ladder.step_clean(&metrics);
             continue;
+        }
+
+        // ---- quarantine: contain step failures to the sessions they hit ----
+        // `step_report` attributes each failed batched op to exactly the
+        // sessions it was operating on; those (and only those) are evicted
+        // from the batch with a typed error while the survivors keep their
+        // bit-identical token streams.  Removal walks indices descending so
+        // `swap_remove` never disturbs a still-pending failure index.
+        if !report.failures.is_empty() {
+            let mut failures = report.failures;
+            failures.sort_by(|x, y| y.session.cmp(&x.session));
+            let mut kv_pressure = false;
+            for f in failures {
+                kv_pressure |= f.kind == crate::faults::FailureKind::PageExhausted;
+                let mut a = active.swap_remove(f.session);
+                a.session.release(backend.as_ref());
+                metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+                metrics.requests_quarantined.fetch_add(1, Ordering::Relaxed);
+                let _ = a.respond_to.send(Response {
+                    id: a.id,
+                    event: ResponseEvent::Done(Err(anyhow::anyhow!(
+                        "request failed ({}): {}",
+                        f.kind,
+                        f.detail
+                    ))),
+                });
+            }
+            // The fault is contained: survivors keep stepping, the
+            // scheduler thread is still alive.
+            crate::faults::note_recovered();
+            if kv_pressure {
+                ladder.escalate(backend.as_ref(), &metrics);
+            } else {
+                ladder.step_clean(&metrics);
+            }
+        } else {
+            ladder.step_clean(&metrics);
         }
 
         // ---- stream chunks; retire completed sessions ----
@@ -570,6 +785,16 @@ fn admit(
             .send(Response { id: req.id, event: ResponseEvent::Cancelled(kind) });
         return;
     }
+    // Fault site `sched.admit`: an injected stall here widens the window
+    // between the cancel check above and the session build below, making
+    // the cancel-during-admission race deterministically testable.
+    if crate::faults::enabled() {
+        if let Some(crate::faults::FaultAction::Stall(ms)) =
+            crate::faults::hit(crate::faults::FaultSite::SchedAdmit)
+        {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+    }
     let effective = sessions.effective_prompt(req.session, &req.prompt);
     if let Err(e) = validate_prompt(&effective, backend) {
         metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
@@ -600,17 +825,32 @@ fn admit(
         }
     };
     match built {
-        Ok(session) => active.push(ActiveReq {
-            id: req.id,
-            session,
-            conversation: req.session,
-            prompt: req.prompt,
-            deadline: req.deadline,
-            cancel: req.cancel,
-            submitted: req.submitted,
-            admitted: Instant::now(),
-            respond_to: req.respond_to,
-        }),
+        Ok(mut session) => {
+            // Re-check cancellation *after* the session build: admission
+            // runs a prefill-sized amount of work, and a request cancelled
+            // during it (client disconnect racing `Server::drain`) used to
+            // slip into the batch anyway and burn an engine step.  Release
+            // the KV slot the build just leased and retire it here instead.
+            if let Some(kind) = req.cancel_reason() {
+                session.release(backend);
+                metrics.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+                let _ = req
+                    .respond_to
+                    .send(Response { id: req.id, event: ResponseEvent::Cancelled(kind) });
+                return;
+            }
+            active.push(ActiveReq {
+                id: req.id,
+                session,
+                conversation: req.session,
+                prompt: req.prompt,
+                deadline: req.deadline,
+                cancel: req.cancel,
+                submitted: req.submitted,
+                admitted: Instant::now(),
+                respond_to: req.respond_to,
+            });
+        }
         Err(e) => {
             metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
             let _ = req

@@ -1,0 +1,471 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a seeded, schedule-driven list of rules, each naming
+//! a *site* (a probe point compiled into the stack) and an *action* to
+//! take when that site is hit.  Plans come from the `SPEQ_FAULTS` env var
+//! or the `--faults` CLI flag (see [`FaultPlan::parse`] for the grammar),
+//! or are built programmatically by the chaos tests.
+//!
+//! Sites are hot-path probes, so the disabled cost is one relaxed atomic
+//! load and a branch ([`hit`] returns `None` immediately); no lock is
+//! taken and no site counter is maintained unless a plan is installed.
+//! With a plan installed, every decision is deterministic: per-site hit
+//! counters drive `@n` triggers, and probabilistic `%p` triggers draw from
+//! the plan's own SplitMix64 stream, so the same plan against the same
+//! request sequence injects the same faults.
+//!
+//! Fault sites (the names accepted by the plan grammar):
+//!
+//! | site           | where it fires                                  | actions        |
+//! |----------------|--------------------------------------------------|---------------|
+//! | `step.prefill` | batched prefill op in [`BatchEngine::step`]      | `error`, `panic`, `stall<ms>` |
+//! | `step.draft`   | batched draft-decode op                          | `error`, `panic`, `stall<ms>` |
+//! | `step.verify`  | batched verify op                                | `error`, `panic`, `stall<ms>` |
+//! | `step.decode`  | batched full-decode (AR) op                      | `error`, `panic`, `stall<ms>` |
+//! | `worker.shard` | inside the native backend's sharded kernel loop  | `panic`        |
+//! | `page.alloc`   | [`PageAllocator::try_alloc`]                     | `exhaust`      |
+//! | `sched.admit`  | scheduler admission, after the cancel check      | `stall<ms>`    |
+//! | `sock.write`   | before each SSE chunk write in the net server    | `slow<ms>`, `reset` |
+//!
+//! The failure taxonomy surfaced to clients is [`FailureKind`]; the
+//! blast-radius containment that turns an injected (or organic) fault
+//! into per-request typed errors lives in the coordinator scheduler.
+//!
+//! [`BatchEngine::step`]: crate::specdec::BatchEngine::step
+//! [`PageAllocator::try_alloc`]: crate::runtime::paging::PageAllocator::try_alloc
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Rng;
+
+/// A named probe point in the serving stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    StepPrefill,
+    StepDraft,
+    StepVerify,
+    StepDecode,
+    WorkerShard,
+    PageAlloc,
+    SchedAdmit,
+    SockWrite,
+}
+
+const N_SITES: usize = 8;
+
+impl FaultSite {
+    fn index(self) -> usize {
+        match self {
+            FaultSite::StepPrefill => 0,
+            FaultSite::StepDraft => 1,
+            FaultSite::StepVerify => 2,
+            FaultSite::StepDecode => 3,
+            FaultSite::WorkerShard => 4,
+            FaultSite::PageAlloc => 5,
+            FaultSite::SchedAdmit => 6,
+            FaultSite::SockWrite => 7,
+        }
+    }
+
+    /// The name used by the plan grammar (and `--faults` docs).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::StepPrefill => "step.prefill",
+            FaultSite::StepDraft => "step.draft",
+            FaultSite::StepVerify => "step.verify",
+            FaultSite::StepDecode => "step.decode",
+            FaultSite::WorkerShard => "worker.shard",
+            FaultSite::PageAlloc => "page.alloc",
+            FaultSite::SchedAdmit => "sched.admit",
+            FaultSite::SockWrite => "sock.write",
+        }
+    }
+
+    fn from_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "step.prefill" => FaultSite::StepPrefill,
+            "step.draft" => FaultSite::StepDraft,
+            "step.verify" => FaultSite::StepVerify,
+            "step.decode" => FaultSite::StepDecode,
+            "worker.shard" => FaultSite::WorkerShard,
+            "page.alloc" => FaultSite::PageAlloc,
+            "sched.admit" => FaultSite::SchedAdmit,
+            "sock.write" => FaultSite::SockWrite,
+            _ => return None,
+        })
+    }
+}
+
+/// What an armed site does when its trigger fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Return a typed error from the probed operation.
+    Error,
+    /// Panic (exercises the `catch_unwind` + worker-pool panic plumbing).
+    Panic,
+    /// Report KV page exhaustion (only meaningful at `page.alloc`).
+    Exhaust,
+    /// Sleep this many milliseconds, then proceed (watchdog fodder).
+    Stall(u64),
+    /// Sleep this many milliseconds before a socket write (slow client /
+    /// slow network emulation).
+    Slow(u64),
+    /// Hard-close the socket mid-stream.
+    Reset,
+}
+
+/// The typed failure taxonomy surfaced to clients when a fault (injected
+/// or organic) is contained by the scheduler.  Stringified into the
+/// request's `Done(Err)` payload, so both the in-process API and the HTTP
+/// error body carry it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureKind {
+    /// A batched backend op returned an error.
+    StepError,
+    /// A panic unwound out of an engine step (e.g. a kernel worker shard).
+    WorkerPanic,
+    /// The KV page budget was exhausted mid-decode.
+    PageExhausted,
+    /// The watchdog declared the engine step stuck past its deadline.
+    StepTimeout,
+}
+
+impl FailureKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FailureKind::StepError => "step_error",
+            FailureKind::WorkerPanic => "worker_panic",
+            FailureKind::PageExhausted => "page_exhausted",
+            FailureKind::StepTimeout => "step_timeout",
+        }
+    }
+}
+
+impl std::fmt::Display for FailureKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// When a rule fires, relative to its site's hit counter.
+#[derive(Debug, Clone, Copy)]
+enum Trigger {
+    /// Every hit.
+    Always,
+    /// Hits `n .. n + count` (1-based).
+    Nth { n: u64, count: u64 },
+    /// Each hit independently with probability `p` (seeded stream).
+    Prob(f64),
+}
+
+#[derive(Debug, Clone)]
+struct FaultRule {
+    site: FaultSite,
+    trigger: Trigger,
+    action: FaultAction,
+}
+
+/// A seeded, schedule-driven fault plan.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+    rng: Rng,
+    hits: [u64; N_SITES],
+}
+
+impl FaultPlan {
+    /// An empty plan (no rules) with the given seed for `%p` triggers.
+    pub fn seeded(seed: u64) -> Self {
+        Self { rules: Vec::new(), rng: Rng::seed_from_u64(seed), hits: [0; N_SITES] }
+    }
+
+    /// Arm `site` to take `action` on its `n`th hit (1-based).
+    pub fn on_nth(mut self, site: FaultSite, n: u64, action: FaultAction) -> Self {
+        self.rules.push(FaultRule { site, trigger: Trigger::Nth { n, count: 1 }, action });
+        self
+    }
+
+    /// Arm `site` to take `action` on hits `n .. n + count` (1-based).
+    pub fn on_range(mut self, site: FaultSite, n: u64, count: u64, action: FaultAction) -> Self {
+        self.rules.push(FaultRule { site, trigger: Trigger::Nth { n, count }, action });
+        self
+    }
+
+    /// Arm `site` to take `action` on each hit with probability `p`.
+    pub fn with_prob(mut self, site: FaultSite, p: f64, action: FaultAction) -> Self {
+        self.rules.push(FaultRule { site, trigger: Trigger::Prob(p), action });
+        self
+    }
+
+    /// Parse the `SPEQ_FAULTS` / `--faults` grammar: `;`-separated rules,
+    /// optionally starting with `seed=<u64>`.  Each rule is
+    /// `<site>[@<n>[x<count>]][%<p>]=<action>` where `<action>` is one of
+    /// `error`, `panic`, `exhaust`, `stall<ms>`, `slow<ms>`, `reset`.
+    /// No trigger means "every hit".  Examples:
+    ///
+    /// ```text
+    /// seed=7;step.verify@2=error
+    /// page.alloc@5x3=exhaust;sock.write%0.1=slow25
+    /// ```
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = FaultPlan::seeded(0);
+        for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            if let Some(seed) = part.strip_prefix("seed=") {
+                plan.rng = Rng::seed_from_u64(
+                    seed.parse::<u64>().with_context(|| format!("bad fault seed {seed:?}"))?,
+                );
+                continue;
+            }
+            let (lhs, rhs) = part
+                .split_once('=')
+                .with_context(|| format!("fault rule {part:?} missing '=<action>'"))?;
+            let action = parse_action(rhs.trim())
+                .with_context(|| format!("fault rule {part:?}: bad action {rhs:?}"))?;
+            let (site_part, trigger) = parse_trigger(lhs.trim())
+                .with_context(|| format!("fault rule {part:?}: bad trigger"))?;
+            let site = FaultSite::from_name(site_part)
+                .with_context(|| format!("unknown fault site {site_part:?}"))?;
+            match (site, action) {
+                (FaultSite::PageAlloc, FaultAction::Exhaust)
+                | (FaultSite::WorkerShard, FaultAction::Panic)
+                | (FaultSite::SchedAdmit, FaultAction::Stall(_))
+                | (FaultSite::SockWrite, FaultAction::Slow(_) | FaultAction::Reset)
+                | (
+                    FaultSite::StepPrefill
+                    | FaultSite::StepDraft
+                    | FaultSite::StepVerify
+                    | FaultSite::StepDecode,
+                    FaultAction::Error | FaultAction::Panic | FaultAction::Stall(_),
+                ) => {}
+                _ => bail!(
+                    "fault rule {part:?}: action not valid at site {}",
+                    site.name()
+                ),
+            }
+            plan.rules.push(FaultRule { site, trigger, action });
+        }
+        Ok(plan)
+    }
+
+    /// Evaluate one hit of `site` (increments the site counter).
+    fn eval(&mut self, site: FaultSite) -> Option<FaultAction> {
+        self.hits[site.index()] += 1;
+        let hit = self.hits[site.index()];
+        for rule in &self.rules {
+            if rule.site != site {
+                continue;
+            }
+            let fire = match rule.trigger {
+                Trigger::Always => true,
+                Trigger::Nth { n, count } => hit >= n && hit < n + count,
+                Trigger::Prob(p) => self.rng.gen_f64() < p,
+            };
+            if fire {
+                return Some(rule.action);
+            }
+        }
+        None
+    }
+}
+
+fn parse_trigger(lhs: &str) -> Result<(&str, Trigger)> {
+    if let Some((site, prob)) = lhs.split_once('%') {
+        let p: f64 = prob.parse().with_context(|| format!("bad probability {prob:?}"))?;
+        anyhow::ensure!((0.0..=1.0).contains(&p), "probability {p} outside [0, 1]");
+        return Ok((site, Trigger::Prob(p)));
+    }
+    if let Some((site, nth)) = lhs.split_once('@') {
+        let (n, count) = match nth.split_once('x') {
+            Some((n, c)) => (
+                n.parse::<u64>().with_context(|| format!("bad hit index {n:?}"))?,
+                c.parse::<u64>().with_context(|| format!("bad repeat count {c:?}"))?,
+            ),
+            None => (nth.parse::<u64>().with_context(|| format!("bad hit index {nth:?}"))?, 1),
+        };
+        anyhow::ensure!(n >= 1, "hit indices are 1-based");
+        return Ok((site, Trigger::Nth { n, count }));
+    }
+    Ok((lhs, Trigger::Always))
+}
+
+fn parse_action(s: &str) -> Result<FaultAction> {
+    Ok(match s {
+        "error" => FaultAction::Error,
+        "panic" => FaultAction::Panic,
+        "exhaust" => FaultAction::Exhaust,
+        "reset" => FaultAction::Reset,
+        _ if s.starts_with("stall") => FaultAction::Stall(parse_ms(&s["stall".len()..])?),
+        _ if s.starts_with("slow") => FaultAction::Slow(parse_ms(&s["slow".len()..])?),
+        _ => bail!("unknown action {s:?}"),
+    })
+}
+
+fn parse_ms(s: &str) -> Result<u64> {
+    if s.is_empty() {
+        return Ok(50); // default stall/slow duration
+    }
+    s.parse::<u64>().with_context(|| format!("bad millisecond count {s:?}"))
+}
+
+// ---- global plan registry ----
+
+/// Fast-path guard: `false` means no plan is installed and [`hit`] is one
+/// relaxed load + branch.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ACTIVE: Mutex<Option<FaultPlan>> = Mutex::new(None);
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+static RECOVERED: AtomicU64 = AtomicU64::new(0);
+/// Serializes tests that install global plans (the plan registry is
+/// process-wide; `cargo test` runs test fns concurrently).
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// Install `plan` process-wide (replacing any prior plan).
+pub fn install(plan: FaultPlan) {
+    *ACTIVE.lock().unwrap_or_else(|e| e.into_inner()) = Some(plan);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Remove the installed plan; every site goes back to the no-op fast path.
+pub fn clear() {
+    ENABLED.store(false, Ordering::SeqCst);
+    *ACTIVE.lock().unwrap_or_else(|e| e.into_inner()) = None;
+}
+
+/// Whether a plan is installed.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Parse and install `SPEQ_FAULTS` if set.  Called once from the CLI
+/// entry point; library embedders call [`install`] directly.
+pub fn init_from_env() -> Result<()> {
+    if let Ok(spec) = std::env::var("SPEQ_FAULTS") {
+        if !spec.trim().is_empty() {
+            install(FaultPlan::parse(&spec).context("parsing SPEQ_FAULTS")?);
+        }
+    }
+    Ok(())
+}
+
+/// Probe a fault site.  Returns the action to take, if the installed
+/// plan's trigger fires on this hit.  `Stall`/`Slow` sleeps are performed
+/// by the *caller* (the probe itself never blocks), so call sites can
+/// honor them where sleeping is safe.
+pub fn hit(site: FaultSite) -> Option<FaultAction> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let action = ACTIVE
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .as_mut()
+        .and_then(|plan| plan.eval(site));
+    if action.is_some() {
+        INJECTED.fetch_add(1, Ordering::Relaxed);
+    }
+    action
+}
+
+/// Total faults whose trigger fired since process start (monotonic; spans
+/// plan reinstalls).
+pub fn injected_total() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+/// Record that a fault's blast radius was contained (the scheduler kept
+/// serving after handling it).
+pub fn note_recovered() {
+    RECOVERED.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Total contained faults since process start.
+pub fn recovered_total() -> u64 {
+    RECOVERED.load(Ordering::Relaxed)
+}
+
+/// Serialize a test that installs global plans.  Hold the guard for the
+/// whole test; the returned guard clears any leftover plan on drop.
+pub fn test_guard() -> TestGuard {
+    let guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    clear();
+    TestGuard { _guard: guard }
+}
+
+pub struct TestGuard {
+    _guard: MutexGuard<'static, ()>,
+}
+
+impl Drop for TestGuard {
+    fn drop(&mut self) {
+        clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_the_readme_examples() {
+        let plan = FaultPlan::parse("seed=7;step.verify@2=error").unwrap();
+        assert_eq!(plan.rules.len(), 1);
+        let plan = FaultPlan::parse("page.alloc@5x3=exhaust;sock.write%0.1=slow25").unwrap();
+        assert_eq!(plan.rules.len(), 2);
+        assert_eq!(plan.rules[1].action, FaultAction::Slow(25));
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FaultPlan::parse("nonsite@1=error").is_err());
+        assert!(FaultPlan::parse("step.verify@1").is_err());
+        assert!(FaultPlan::parse("step.verify@0=error").is_err());
+        assert!(FaultPlan::parse("step.verify%1.5=error").is_err());
+        assert!(FaultPlan::parse("page.alloc@1=panic").is_err(), "action/site mismatch");
+        assert!(FaultPlan::parse("sock.write@1=error").is_err(), "action/site mismatch");
+    }
+
+    #[test]
+    fn nth_trigger_fires_exactly_once() {
+        let mut plan =
+            FaultPlan::seeded(1).on_nth(FaultSite::StepVerify, 3, FaultAction::Error);
+        let fired: Vec<bool> =
+            (0..6).map(|_| plan.eval(FaultSite::StepVerify).is_some()).collect();
+        assert_eq!(fired, vec![false, false, true, false, false, false]);
+        // Other sites never fire.
+        assert!(plan.eval(FaultSite::StepDraft).is_none());
+    }
+
+    #[test]
+    fn range_trigger_fires_count_times() {
+        let mut plan =
+            FaultPlan::seeded(1).on_range(FaultSite::PageAlloc, 2, 3, FaultAction::Exhaust);
+        let fired: Vec<bool> =
+            (0..6).map(|_| plan.eval(FaultSite::PageAlloc).is_some()).collect();
+        assert_eq!(fired, vec![false, true, true, true, false, false]);
+    }
+
+    #[test]
+    fn prob_trigger_is_seed_deterministic() {
+        let decisions = |seed: u64| -> Vec<bool> {
+            let mut plan =
+                FaultPlan::seeded(seed).with_prob(FaultSite::SockWrite, 0.5, FaultAction::Reset);
+            (0..32).map(|_| plan.eval(FaultSite::SockWrite).is_some()).collect()
+        };
+        assert_eq!(decisions(9), decisions(9), "same seed, same schedule");
+        assert_ne!(decisions(9), decisions(10), "different seeds diverge");
+        assert!(decisions(9).iter().any(|&f| f) && decisions(9).iter().any(|&f| !f));
+    }
+
+    #[test]
+    fn disabled_fast_path_returns_none() {
+        let _g = test_guard();
+        assert!(hit(FaultSite::StepVerify).is_none());
+        install(FaultPlan::seeded(0).on_nth(FaultSite::StepVerify, 1, FaultAction::Error));
+        assert_eq!(hit(FaultSite::StepVerify), Some(FaultAction::Error));
+        clear();
+        assert!(hit(FaultSite::StepVerify).is_none());
+    }
+}

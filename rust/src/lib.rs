@@ -85,6 +85,17 @@
 //!   closed/open-loop (Poisson) load generator behind `speq loadgen`.
 //!   Streamed tokens are bit-identical to offline generation.
 //!
+//! Robustness layer:
+//! * [`faults`] — deterministic fault injection for the serving stack: a
+//!   seeded, schedule-driven `FaultPlan` (`SPEQ_FAULTS` / `--faults`)
+//!   arming named probe sites — batched-step errors/panics/stalls, KV
+//!   page exhaustion, scheduler-admission stalls, socket slow-writes and
+//!   resets — plus the typed [`faults::FailureKind`] taxonomy the
+//!   scheduler attaches when it contains a failure.  Disabled sites cost
+//!   one relaxed atomic load; the blast-radius isolation, degradation
+//!   ladder, and watchdog that consume these probes live in
+//!   [`coordinator`] and [`net`].
+//!
 //! Evaluation layer:
 //! * [`accel`] — cycle-level simulator of the SPEQ accelerator (§IV):
 //!   reconfigurable PE array, BSFP decoders, SRAM buffers, DRAM channel,
@@ -108,6 +119,7 @@
 pub mod accel;
 pub mod bsfp;
 pub mod coordinator;
+pub mod faults;
 pub mod model;
 pub mod net;
 pub mod quant;

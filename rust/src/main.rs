@@ -77,6 +77,12 @@ fn native_config(args: &Args) -> NativeConfig {
 }
 
 fn dispatch(args: &Args) -> Result<()> {
+    // Fault-injection plan: `--faults <spec>` beats `SPEQ_FAULTS`.  With
+    // neither set, every probe stays a single relaxed atomic load.
+    match args.get("faults") {
+        Some(spec) => speq::faults::install(speq::faults::FaultPlan::parse(spec)?),
+        None => speq::faults::init_from_env()?,
+    }
     match args.subcommand.as_deref() {
         Some("info") => info(args),
         Some("report") => report(args),
@@ -100,9 +106,11 @@ fn dispatch(args: &Args) -> Result<()> {
                  \x20          [--adaptive] [--threads T]\n\
                  speq serve --model <name> [--workers N] [--requests N] [--threads T]\n\
                  speq serve --addr 127.0.0.1:8080 [--model M] [--workers N] [--max-batch B] [--queue Q]\n\
-                 \x20          [--deadline-ms D] [--duration-s S] [--threads T]   (HTTP front end)\n\
+                 \x20          [--deadline-ms D] [--duration-s S] [--threads T]\n\
+                 \x20          [--kv-page-budget P] [--faults SPEC]   (HTTP front end)\n\
                  speq loadgen --addr 127.0.0.1:8080 [--mode closed|open] [--users N] [--rate R]\n\
-                 \x20          [--scenario oneshot|multiturn] [--requests N] [--gen-len N]\n\
+                 \x20          [--scenario oneshot|multiturn|slowreader|cancelstorm]\n\
+                 \x20          [--requests N] [--gen-len N] [--retries R]\n\
                  \x20          [--adaptive] [--deadline-ms D] [--smoke]\n\
                  speq info\n\
                  \n\
@@ -110,7 +118,9 @@ fn dispatch(args: &Args) -> Result<()> {
                  $SPEQ_THREADS or 1); output bits are identical for every T.\n\
                  --simd <auto|scalar|sse4.1|avx2|neon> forces the kernel SIMD tier\n\
                  (default $SPEQ_SIMD or best detected); output bits are identical\n\
-                 for every tier.",
+                 for every tier.\n\
+                 --faults SPEC (or $SPEQ_FAULTS) arms the fault-injection plan, e.g.\n\
+                 \x20 'seed=7;step.verify@3=error;page.alloc%0.01=exhaust' (see README).",
                 EXPERIMENTS.join("|")
             );
             Ok(())
@@ -265,6 +275,10 @@ fn serve(args: &Args) -> Result<()> {
         queue_capacity: args.get_usize("queue", 64),
         max_batch: args.get_usize("max-batch", 8),
         threads: native_config(args),
+        kv_page_budget: {
+            let b = args.get_usize("kv-page-budget", 0);
+            if b > 0 { Some(b as u64) } else { None }
+        },
         ..ServerConfig::default()
     };
     if let Some(addr) = args.get("addr") {
@@ -399,10 +413,12 @@ fn loadgen(args: &Args) -> Result<()> {
         "open" => LoadMode::Open { rate_rps: args.get_f64("rate", 8.0) },
         other => anyhow::bail!("unknown loadgen mode {other:?} (closed|open)"),
     };
-    let scenario = match args.get_or("scenario", "oneshot") {
-        "oneshot" => Scenario::Oneshot,
-        "multiturn" => Scenario::Multiturn,
-        other => anyhow::bail!("unknown loadgen scenario {other:?} (oneshot|multiturn)"),
+    let scenario = match Scenario::from_name(args.get_or("scenario", "oneshot")) {
+        Some(s) => s,
+        None => anyhow::bail!(
+            "unknown loadgen scenario {:?} (oneshot|multiturn|slowreader|cancelstorm)",
+            args.get_or("scenario", "oneshot")
+        ),
     };
     // --smoke only shrinks the default request count and turns on the CI
     // assertions below; an explicit --mode/--users/--rate is honored.
@@ -419,19 +435,37 @@ fn loadgen(args: &Args) -> Result<()> {
             if d > 0 { Some(d as u64) } else { None }
         },
         timeout: std::time::Duration::from_secs(args.get_usize("timeout-s", 60) as u64),
+        retries: args.get_usize("retries", 2),
     };
     let report = speq::net::loadgen::run(&cfg)?;
     report.print();
     println!("{}", report.bench_json());
     if smoke {
-        // CI gate: every request must complete and produce tokens.
-        anyhow::ensure!(
-            report.completed == report.requests && report.failed == 0,
-            "loadgen smoke failed: {}/{} completed, {} failed",
-            report.completed,
-            report.requests,
-            report.failed
-        );
+        if scenario == Scenario::Cancelstorm {
+            // Storm clients hang up on purpose, so "all complete" is the
+            // wrong gate: require that the patient readers all finished,
+            // the storm actually cancelled work, and nothing *failed*.
+            anyhow::ensure!(
+                report.completed > 0 && report.cancelled > 0,
+                "cancelstorm smoke: {} completed, {} cancelled (need both nonzero)",
+                report.completed,
+                report.cancelled
+            );
+            anyhow::ensure!(
+                report.failed == 0,
+                "cancelstorm smoke: {} requests failed (disconnects must cancel, not error)",
+                report.failed
+            );
+        } else {
+            // CI gate: every request must complete and produce tokens.
+            anyhow::ensure!(
+                report.completed == report.requests && report.failed == 0,
+                "loadgen smoke failed: {}/{} completed, {} failed",
+                report.completed,
+                report.requests,
+                report.failed
+            );
+        }
         anyhow::ensure!(report.goodput_rps > 0.0, "loadgen smoke: zero goodput");
         anyhow::ensure!(report.tokens > 0, "loadgen smoke: zero tokens streamed");
         if scenario == Scenario::Multiturn {

@@ -56,6 +56,16 @@ pub enum Scenario {
     /// backend prefix cache (the system prompt is shared across sessions)
     /// and session history (turns within a session are serialized).
     Multiturn,
+    /// One-shot prompts drained through a deliberately slow SSE reader
+    /// (a per-read delay trickles the chunked body): exercises the
+    /// server's bounded-write path and shows whether one congested client
+    /// can stall co-batched streams.
+    Slowreader,
+    /// One-shot prompts where bursts of clients hang up mid-stream after
+    /// a few tokens (every fourth request reads to completion, so goodput
+    /// stays nonzero): exercises disconnect-driven cancellation, KV slot
+    /// reclamation, and the admit/cancel race under churn.
+    Cancelstorm,
 }
 
 impl Scenario {
@@ -63,8 +73,31 @@ impl Scenario {
         match self {
             Scenario::Oneshot => "oneshot",
             Scenario::Multiturn => "multiturn",
+            Scenario::Slowreader => "slowreader",
+            Scenario::Cancelstorm => "cancelstorm",
         }
     }
+
+    /// Parse a CLI scenario name.
+    pub fn from_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "oneshot" => Scenario::Oneshot,
+            "multiturn" => Scenario::Multiturn,
+            "slowreader" => Scenario::Slowreader,
+            "cancelstorm" => Scenario::Cancelstorm,
+            _ => return None,
+        })
+    }
+}
+
+/// Client-side read shaping for one streamed request.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StreamOptions {
+    /// Sleep this long before every chunk read (slow-reader emulation).
+    pub read_delay: Option<Duration>,
+    /// Hang up (hard socket close, no terminal event consumed) once this
+    /// many tokens have been streamed — a mid-stream client disconnect.
+    pub hangup_after_tokens: Option<usize>,
 }
 
 /// Deterministic multiturn schedule: map global request index `i` to its
@@ -125,6 +158,17 @@ pub fn stream_once(
     addr: &str,
     greq: &GenerateRequest,
     timeout: Duration,
+) -> Result<StreamOutcome> {
+    stream_once_opts(addr, greq, timeout, StreamOptions::default())
+}
+
+/// [`stream_once`] with client-side read shaping (slow reads, mid-stream
+/// hangups) for the failure-mode scenarios.
+pub fn stream_once_opts(
+    addr: &str,
+    greq: &GenerateRequest,
+    timeout: Duration,
+    opts: StreamOptions,
 ) -> Result<StreamOutcome> {
     let t0 = Instant::now();
     let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
@@ -196,6 +240,11 @@ pub fn stream_once(
     let mut terminal = Terminal::Dropped;
     let mut done_data: Option<String> = None;
     'read: loop {
+        if let Some(d) = opts.read_delay {
+            // Slow reader: trickle-drain the stream so server-side chunk
+            // writes see a congested socket.
+            std::thread::sleep(d);
+        }
         let mut szl = String::new();
         if r.read_line(&mut szl)? == 0 {
             break; // EOF without the zero chunk
@@ -223,6 +272,24 @@ pub fn stream_once(
                     if let Ok(v) = json::parse(&data) {
                         if let Some(arr) = v.get("tokens").and_then(json::Value::as_arr) {
                             tokens.extend(arr.iter().filter_map(|n| n.as_usize()).map(|n| n as u8));
+                        }
+                    }
+                    if let Some(k) = opts.hangup_after_tokens {
+                        if tokens.len() >= k {
+                            // Mid-stream disconnect: hard-close without
+                            // consuming a terminal event.  The server must
+                            // notice and cancel the sequence.
+                            let _ = r.get_ref().shutdown(std::net::Shutdown::Both);
+                            return Ok(StreamOutcome {
+                                status,
+                                terminal: Terminal::Cancelled,
+                                tokens,
+                                ttft_s,
+                                total_s: t0.elapsed().as_secs_f64(),
+                                done_data: None,
+                                error_body: None,
+                                retry_after_s,
+                            });
                         }
                     }
                 }
@@ -301,6 +368,10 @@ pub struct LoadConfig {
     pub deadline_ms: Option<u64>,
     /// Per-request socket read timeout.
     pub timeout: Duration,
+    /// Client-side retries after a 429 rejection or a transport drop,
+    /// with seeded jittered exponential backoff (0 disables).  Retries
+    /// honor the server's `Retry-After` when it answered 429.
+    pub retries: usize,
 }
 
 impl Default for LoadConfig {
@@ -315,6 +386,7 @@ impl Default for LoadConfig {
             adaptive: false,
             deadline_ms: None,
             timeout: Duration::from_secs(60),
+            retries: 2,
         }
     }
 }
@@ -345,6 +417,8 @@ pub struct LoadReport {
     pub rejected: usize,
     pub cancelled: usize,
     pub failed: usize,
+    /// Retry attempts issued after 429s/drops (0 when retries disabled).
+    pub retries: usize,
     pub tokens: u64,
     pub wall_s: f64,
     /// Tokens from *completed* requests per wall-clock second.
@@ -359,9 +433,9 @@ impl LoadReport {
     /// Human-readable summary (the CLI prints this).
     pub fn print(&self) {
         println!(
-            "loadgen [{} {}]: {} requests in {:.2} s | {} ok, {} rejected (429), {} cancelled, {} failed",
+            "loadgen [{} {}]: {} requests in {:.2} s | {} ok, {} rejected (429), {} cancelled, {} failed, {} retries",
             self.mode, self.scenario, self.requests, self.wall_s, self.completed,
-            self.rejected, self.cancelled, self.failed
+            self.rejected, self.cancelled, self.failed, self.retries
         );
         println!(
             "  throughput: {:.1} tok/s | goodput {:.2} req/s | {} tokens total",
@@ -385,9 +459,9 @@ impl LoadReport {
     pub fn bench_json(&self) -> String {
         let f = |v: f64| if v.is_finite() { v } else { 0.0 };
         format!(
-            "BENCH_JSON {{\"group\":\"net_loadgen\",\"mode\":\"{}\",\"scenario\":\"{}\",\"adaptive\":{},\"requests\":{},\"completed\":{},\"rejected\":{},\"cancelled\":{},\"failed\":{},\"tokens\":{},\"wall_s\":{:.4},\"tokens_per_sec\":{:.3},\"goodput_rps\":{:.3},\"ttft_p50_ms\":{:.3},\"ttft_p95_ms\":{:.3},\"ttft_p99_ms\":{:.3},\"total_p50_ms\":{:.3},\"total_p95_ms\":{:.3},\"total_p99_ms\":{:.3}}}",
+            "BENCH_JSON {{\"group\":\"net_loadgen\",\"mode\":\"{}\",\"scenario\":\"{}\",\"adaptive\":{},\"requests\":{},\"completed\":{},\"rejected\":{},\"cancelled\":{},\"failed\":{},\"retries\":{},\"tokens\":{},\"wall_s\":{:.4},\"tokens_per_sec\":{:.3},\"goodput_rps\":{:.3},\"ttft_p50_ms\":{:.3},\"ttft_p95_ms\":{:.3},\"ttft_p99_ms\":{:.3},\"total_p50_ms\":{:.3},\"total_p95_ms\":{:.3},\"total_p99_ms\":{:.3}}}",
             self.mode, self.scenario, self.adaptive, self.requests, self.completed, self.rejected,
-            self.cancelled, self.failed, self.tokens, f(self.wall_s), f(self.tokens_per_s),
+            self.cancelled, self.failed, self.retries, self.tokens, f(self.wall_s), f(self.tokens_per_s),
             f(self.goodput_rps), f(self.ttft_ms.p50), f(self.ttft_ms.p95),
             f(self.ttft_ms.p99), f(self.total_ms.p50), f(self.total_ms.p95),
             f(self.total_ms.p99),
@@ -398,7 +472,10 @@ impl LoadReport {
 /// The request issued for global request index `i`.
 pub fn request_for(i: usize, cfg: &LoadConfig) -> GenerateRequest {
     match cfg.scenario {
-        Scenario::Oneshot => GenerateRequest {
+        // The failure-mode scenarios reuse the one-shot prompt stream;
+        // their character comes from client-side read shaping (see
+        // [`stream_options_for`]), not the prompts.
+        Scenario::Oneshot | Scenario::Slowreader | Scenario::Cancelstorm => GenerateRequest {
             prompt: PROMPTS[i % PROMPTS.len()].as_bytes().to_vec(),
             gen_len: cfg.gen_len,
             seed: cfg.seed,
@@ -433,6 +510,7 @@ pub fn request_for(i: usize, cfg: &LoadConfig) -> GenerateRequest {
 /// Run the configured load against a live server.
 pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
     let samples: Arc<Mutex<Vec<StreamOutcome>>> = Arc::new(Mutex::new(Vec::new()));
+    let retries_total = Arc::new(AtomicUsize::new(0));
     let cfg = Arc::new(cfg.clone());
     let t0 = Instant::now();
 
@@ -443,13 +521,15 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
             for _ in 0..users.max(1) {
                 let cfg = cfg.clone();
                 let samples = samples.clone();
+                let retries_total = retries_total.clone();
                 let next = next.clone();
                 handles.push(std::thread::spawn(move || loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= cfg.requests {
                         return;
                     }
-                    let outcome = issue(i, &cfg);
+                    let (outcome, retries) = issue(i, &cfg);
+                    retries_total.fetch_add(retries, Ordering::Relaxed);
                     samples.lock().unwrap().push(outcome);
                 }));
             }
@@ -480,8 +560,10 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
                 }
                 let cfg = cfg.clone();
                 let samples = samples.clone();
+                let retries_total = retries_total.clone();
                 handles.push(std::thread::spawn(move || {
-                    let outcome = issue(i, &cfg);
+                    let (outcome, retries) = issue(i, &cfg);
+                    retries_total.fetch_add(retries, Ordering::Relaxed);
                     samples.lock().unwrap().push(outcome);
                 }));
             }
@@ -532,6 +614,7 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
         rejected,
         cancelled,
         failed,
+        retries: retries_total.load(Ordering::Relaxed),
         tokens,
         wall_s,
         tokens_per_s: if wall_s > 0.0 { tokens as f64 / wall_s } else { 0.0 },
@@ -592,21 +675,67 @@ pub fn metric_value(page: &str, name: &str) -> Option<f64> {
     })
 }
 
-/// One request, with transport failures folded into the sample.
-fn issue(i: usize, cfg: &LoadConfig) -> StreamOutcome {
-    let greq = request_for(i, cfg);
-    match stream_once(&cfg.addr, &greq, cfg.timeout) {
-        Ok(o) => o,
-        Err(e) => StreamOutcome {
-            status: 0,
-            terminal: Terminal::Dropped,
-            tokens: Vec::new(),
-            ttft_s: None,
-            total_s: 0.0,
-            done_data: None,
-            error_body: Some(format!("{e:#}")),
-            retry_after_s: None,
+/// Client-side read shaping for global request index `i` under the
+/// configured scenario.  Deterministic in `i` alone so reruns replay the
+/// same storm.
+pub fn stream_options_for(i: usize, cfg: &LoadConfig) -> StreamOptions {
+    match cfg.scenario {
+        Scenario::Oneshot | Scenario::Multiturn => StreamOptions::default(),
+        Scenario::Slowreader => StreamOptions {
+            // ~2ms per chunk read trickles a 32-token stream over tens of
+            // milliseconds without making smoke runs crawl.
+            read_delay: Some(Duration::from_millis(2)),
+            hangup_after_tokens: None,
         },
+        Scenario::Cancelstorm => StreamOptions {
+            read_delay: None,
+            // Bursts of three hangup clients (after 1, 2, 3 tokens), then
+            // one patient reader — goodput stays nonzero by construction.
+            hangup_after_tokens: match i % 4 {
+                3 => None,
+                k => Some(k + 1),
+            },
+        },
+    }
+}
+
+/// One request, with transport failures folded into the sample.  Retries
+/// (rejections and transport drops only — never a request the server
+/// already worked on) back off exponentially with seeded jitter; returns
+/// the final outcome and how many retries it took.
+fn issue(i: usize, cfg: &LoadConfig) -> (StreamOutcome, usize) {
+    let greq = request_for(i, cfg);
+    let opts = stream_options_for(i, cfg);
+    let mut rng = Rng::seed_from_u64(cfg.seed ^ 0x5265_7472 ^ (i as u64) << 20); // "Retr"
+    let mut retries = 0usize;
+    loop {
+        let outcome = match stream_once_opts(&cfg.addr, &greq, cfg.timeout, opts) {
+            Ok(o) => o,
+            Err(e) => StreamOutcome {
+                status: 0,
+                terminal: Terminal::Dropped,
+                tokens: Vec::new(),
+                ttft_s: None,
+                total_s: 0.0,
+                done_data: None,
+                error_body: Some(format!("{e:#}")),
+                retry_after_s: None,
+            },
+        };
+        let retryable = matches!(outcome.terminal, Terminal::Rejected | Terminal::Dropped);
+        if !retryable || retries >= cfg.retries {
+            return (outcome, retries);
+        }
+        // Jittered exponential backoff: base 10ms doubling per attempt,
+        // +0..100% jitter, floored by the server's Retry-After on a 429.
+        let base_ms = 10u64 << retries.min(6);
+        let jitter_ms = rng.gen_range(base_ms as usize + 1) as u64;
+        let server_floor_ms = outcome.retry_after_s.map(|s| s * 1000).unwrap_or(0);
+        // Cap the wait so smoke runs stay fast even when the server
+        // advertises a whole-second Retry-After.
+        let wait_ms = (base_ms + jitter_ms).max(server_floor_ms).min(500);
+        std::thread::sleep(Duration::from_millis(wait_ms));
+        retries += 1;
     }
 }
 
@@ -710,6 +839,7 @@ mod tests {
             rejected: 0,
             cancelled: 0,
             failed: 0,
+            retries: 3,
             tokens: 256,
             wall_s: 1.5,
             tokens_per_s: 170.6,
@@ -724,6 +854,55 @@ mod tests {
         assert_eq!(v.get("scenario").unwrap().as_str(), Some("oneshot"));
         assert_eq!(v.get("adaptive").unwrap().as_bool(), Some(true));
         assert_eq!(v.get("completed").unwrap().as_usize(), Some(8));
+        assert_eq!(v.get("retries").unwrap().as_usize(), Some(3));
         assert!(v.get("tokens_per_sec").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn scenario_names_round_trip() {
+        for s in [
+            Scenario::Oneshot,
+            Scenario::Multiturn,
+            Scenario::Slowreader,
+            Scenario::Cancelstorm,
+        ] {
+            assert_eq!(Scenario::from_name(s.as_str()), Some(s));
+        }
+        assert_eq!(Scenario::from_name("chaos"), None);
+    }
+
+    #[test]
+    fn cancelstorm_schedule_keeps_a_patient_reader_per_burst() {
+        let cfg = LoadConfig { scenario: Scenario::Cancelstorm, ..Default::default() };
+        let mut patient = 0;
+        let mut hangups = 0;
+        for i in 0..16 {
+            let o = stream_options_for(i, &cfg);
+            assert!(o.read_delay.is_none());
+            match o.hangup_after_tokens {
+                None => patient += 1,
+                Some(k) => {
+                    hangups += 1;
+                    assert!((1..=3).contains(&k), "hangup point {k} out of burst range");
+                }
+            }
+        }
+        assert_eq!(patient, 4, "every fourth request reads to completion");
+        assert_eq!(hangups, 12);
+        // Deterministic: same index, same shape.
+        assert_eq!(
+            stream_options_for(5, &cfg).hangup_after_tokens,
+            stream_options_for(5, &cfg).hangup_after_tokens
+        );
+    }
+
+    #[test]
+    fn slowreader_trickles_and_never_hangs_up() {
+        let cfg = LoadConfig { scenario: Scenario::Slowreader, ..Default::default() };
+        for i in 0..8 {
+            let o = stream_options_for(i, &cfg);
+            assert!(o.read_delay.is_some());
+            assert!(o.hangup_after_tokens.is_none());
+        }
     }
 }

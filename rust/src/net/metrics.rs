@@ -144,6 +144,26 @@ impl NetMetrics {
             snap.cancelled as f64,
         );
         counter(
+            "speq_requests_quarantined_total",
+            "Requests evicted from a live batch by blast-radius isolation.",
+            snap.quarantined as f64,
+        );
+        counter(
+            "speq_faults_injected_total",
+            "Faults fired by the configured injection plan.",
+            snap.faults_injected as f64,
+        );
+        counter(
+            "speq_faults_recovered_total",
+            "Fault events the serving stack contained and recovered from.",
+            snap.faults_recovered as f64,
+        );
+        counter(
+            "speq_degradation_level",
+            "Graceful-degradation rung: 0 healthy, 1 evicting prefix cache, 2 speculation capped, 3 shedding admissions.",
+            snap.degradation_level as f64,
+        );
+        counter(
             "speq_tokens_generated_total",
             "Tokens generated across all completed requests.",
             snap.tokens as f64,
@@ -203,6 +223,11 @@ impl NetMetrics {
             "speq_kv_pages_allocated",
             "KV pages held by live sequences or the prefix cache.",
             snap.kv_pages_allocated as f64,
+        );
+        counter(
+            "speq_kv_pages_budget",
+            "Configured KV page budget (0 = unbounded).",
+            snap.kv.pages_budget as f64,
         );
         counter(
             "speq_kv_pages_shared",
@@ -337,6 +362,22 @@ mod tests {
         assert!(page.contains("speq_prefix_cache_hit_rate 0.75"));
         assert!(page.contains("# TYPE speq_kv_pages_allocated gauge"));
         assert!(page.contains("# TYPE speq_prefix_cache_hit_tokens_total counter"));
+    }
+
+    #[test]
+    fn exposition_includes_robustness_metrics() {
+        let m = Metrics::new();
+        m.requests_quarantined.fetch_add(2, Ordering::Relaxed);
+        m.degradation_level.store(1, Ordering::Relaxed);
+        let page = NetMetrics::new().render_prometheus(&m.snapshot(), 0);
+        assert!(page.contains("speq_requests_quarantined_total 2"));
+        assert!(page.contains("speq_degradation_level 1"));
+        assert!(page.contains("# TYPE speq_degradation_level gauge"));
+        // The fault counters are process-global (shared with any other
+        // test in this binary that injects), so only assert presence.
+        assert!(page.contains("# TYPE speq_faults_injected_total counter"));
+        assert!(page.contains("# TYPE speq_faults_recovered_total counter"));
+        assert!(page.contains("speq_kv_pages_budget 0"));
     }
 
     #[test]

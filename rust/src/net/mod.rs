@@ -39,6 +39,6 @@ pub mod metrics;
 pub mod server;
 
 pub use api::GenerateRequest;
-pub use loadgen::{LoadConfig, LoadMode, LoadReport, Scenario};
+pub use loadgen::{LoadConfig, LoadMode, LoadReport, Scenario, StreamOptions};
 pub use metrics::{LatencyHistogram, NetMetrics};
 pub use server::{NetConfig, NetServer};

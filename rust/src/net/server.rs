@@ -332,6 +332,23 @@ fn admit(
             return Ok(None);
         }
     };
+    // Rung 3 of the degradation ladder: sustained KV pressure sheds new
+    // admissions at the front door with `503 + Retry-After` so the
+    // in-flight batch can finish and release pages.  Already-admitted
+    // requests are unaffected.
+    if sh.server.metrics().degradation_level.load(Ordering::Relaxed) >= 3 {
+        sh.net_metrics.http_throttled.fetch_add(1, Ordering::Relaxed);
+        let retry = sh.retry_after_s.to_string();
+        http::write_response(
+            stream,
+            503,
+            "application/json",
+            api::error_data("shedding load (kv pressure); retry later").as_bytes(),
+            keep_alive,
+            &[("retry-after", retry.as_str())],
+        )?;
+        return Ok(None);
+    }
     match sh.server.try_submit(&greq.prompt, greq.submit_params(sh.default_deadline)) {
         Ok(pair) => Ok(Some(pair)),
         Err(QueueError::Full) => {
@@ -580,6 +597,23 @@ fn handle_stream(
         match event {
             ResponseEvent::Chunk(c) => {
                 lat.on_chunk(c.len(), &sh.net_metrics);
+                // Fault site `sock.write`: emulate a congested client
+                // (`slow<ms>` delays the chunk write) or a mid-stream
+                // connection reset (`reset` hard-closes the socket, which
+                // must cancel the sequence like a real disconnect).
+                if crate::faults::enabled() {
+                    match crate::faults::hit(crate::faults::FaultSite::SockWrite) {
+                        Some(crate::faults::FaultAction::Slow(ms)) => {
+                            std::thread::sleep(Duration::from_millis(ms));
+                        }
+                        Some(crate::faults::FaultAction::Reset) => {
+                            let _ = stream.shutdown(std::net::Shutdown::Both);
+                            cancel.cancel();
+                            return Ok(());
+                        }
+                        _ => {}
+                    }
+                }
                 let ev = api::sse_event("chunk", &api::chunk_event_data(&c));
                 if let Err(e) = http::write_chunk(stream, &ev) {
                     // Client went away mid-stream: ask the scheduler to

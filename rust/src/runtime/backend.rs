@@ -525,6 +525,21 @@ pub trait Backend {
         0
     }
 
+    /// Cap the paged-KV store at `budget` live pages (`None` = unbounded);
+    /// allocations past the budget fail with a typed
+    /// [`PageExhausted`](super::paging::PageExhausted) step error.  No-op
+    /// for backends without a paged store.
+    fn set_kv_page_budget(&self, _budget: Option<u64>) {}
+
+    /// Rung 1 of the degradation ladder: release up to `n_pages` of
+    /// reclaimable cached KV (prefix-cache LRU leaves), returning how many
+    /// pages were actually freed.  `0` for backends without a reclaimable
+    /// cache — the scheduler then escalates straight to capping
+    /// speculation / shedding admissions.
+    fn relieve_kv_pressure(&self, _n_pages: usize) -> usize {
+        0
+    }
+
     fn vocab(&self) -> usize {
         self.config().vocab
     }

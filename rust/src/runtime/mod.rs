@@ -57,7 +57,7 @@ pub use native::{
     builtin_config, builtin_model_names, InitStyle, NativeBackend, NativeConfig, S_SLOTS,
 };
 pub use crate::bsfp::SimdLevel;
-pub use paging::{KvStats, PageAllocator, PageId, PAGE_TOKENS};
+pub use paging::{KvStats, PageAllocator, PageExhausted, PageId, PAGE_TOKENS};
 pub use pool::WorkerPool;
 pub use prefix::PrefixTree;
 

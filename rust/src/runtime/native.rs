@@ -674,7 +674,11 @@ impl NativeBackend {
     fn ensure_writable(&self, st: &mut NativeState, pos: usize) -> Result<()> {
         let pi = pos / PAGE_TOKENS;
         while st.table.len() <= pi {
-            st.table.push(self.page_alloc.alloc());
+            // Fallible: a configured page budget (or an injected
+            // `page.alloc=exhaust` fault) surfaces here as a typed
+            // `PageExhausted` step error that the scheduler can contain
+            // per-sequence and answer with the degradation ladder.
+            st.table.push(self.page_alloc.try_alloc()?);
         }
         let (id, _copied) = self.page_alloc.make_unique(st.table[pi])?;
         st.table[pi] = id;
@@ -866,6 +870,25 @@ impl NativeBackend {
                 c.vocab
             );
             anyhow::ensure!(p < c.cache_len, "position {p} exceeds cache_len {}", c.cache_len);
+        }
+        // Fault probe: an armed `worker.shard` site panics inside a pool
+        // job, exercising the worker pool's real panic plumbing (drain,
+        // re-raise on the caller) and the engine's `catch_unwind`
+        // containment above.  Single atomic load when no plan is active.
+        if crate::faults::enabled()
+            && matches!(
+                crate::faults::hit(crate::faults::FaultSite::WorkerShard),
+                Some(crate::faults::FaultAction::Panic)
+            )
+        {
+            // Job 1 lands on a pool worker when one exists (job 0 runs on
+            // the caller); on a serial pool both run on the caller — the
+            // panic is raised either way.
+            self.pool.run(2, |j| {
+                if j == 1 {
+                    panic!("injected worker shard panic (fault site worker.shard)");
+                }
+            });
         }
         let (d, hd, nh) = (c.d_model, c.head_dim, c.n_heads);
         let (ff, v) = (c.d_ff, c.vocab);
@@ -1189,6 +1212,18 @@ impl Backend for NativeBackend {
         // Same `len - 1` cap as prefill's lookup: the final position is
         // always computed, so it can never be served from the cache.
         self.prefix.peek(tokens, tokens.len() - 1)
+    }
+
+    fn set_kv_page_budget(&self, budget: Option<u64>) {
+        self.page_alloc.set_page_budget(budget);
+    }
+
+    fn relieve_kv_pressure(&self, n_pages: usize) -> usize {
+        // Evicting childless LRU leaves only drops *cached* prefixes —
+        // live sequences hold their own page references, so their token
+        // streams are unaffected (a later identical prompt just recomputes
+        // its prefill, bit-identically).
+        self.prefix.evict_lru(&self.page_alloc, n_pages)
     }
 
     fn prefill_batch(

@@ -110,6 +110,9 @@ pub struct KvStats {
     pub pages_shared: u64,
     /// Slab capacity in pages (grows on demand, never shrinks).
     pub pages_capacity: u64,
+    /// Configured page budget (`0` = unbounded); allocations beyond it
+    /// fail typed and start the scheduler's degradation ladder.
+    pub pages_budget: u64,
     /// High-water mark of `pages_in_use`.
     pub pages_high_water: u64,
     /// Cumulative copy-on-write page clones.
@@ -120,6 +123,31 @@ pub struct KvStats {
     /// Cumulative prompt tokens computed by the forward pass.
     pub prefix_miss_tokens: u64,
 }
+
+/// Typed KV-page exhaustion error: the allocator's page budget (or an
+/// injected `page.alloc=exhaust` fault) refused an allocation.  Its
+/// Display prefix (`"kv page budget exhausted"`) is a stable contract:
+/// the batch engine classifies a failed step carrying it as
+/// [`FailureKind::PageExhausted`] and starts the degradation ladder (the
+/// vendored anyhow shim flattens error chains to strings, so there is no
+/// downcast).
+///
+/// [`FailureKind::PageExhausted`]: crate::faults::FailureKind::PageExhausted
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageExhausted {
+    /// Pages live at the refused allocation.
+    pub in_use: u64,
+    /// The configured budget (`u64::MAX` when the refusal was injected).
+    pub budget: u64,
+}
+
+impl std::fmt::Display for PageExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "kv page budget exhausted ({} pages in use, budget {})", self.in_use, self.budget)
+    }
+}
+
+impl std::error::Error for PageExhausted {}
 
 struct PageMeta {
     refcount: u32,
@@ -132,6 +160,9 @@ struct PageInner {
     chunks: Vec<Box<[f32]>>,
     meta: Vec<PageMeta>,
     free: Vec<u32>,
+    /// Maximum live pages [`PageAllocator::try_alloc`] will grant
+    /// (`None` = unbounded, the historical behavior).
+    budget: Option<u64>,
     in_use: u64,
     high_water: u64,
     cow_copies: u64,
@@ -156,6 +187,7 @@ impl PageAllocator {
                 chunks: Vec::new(),
                 meta: Vec::new(),
                 free: Vec::new(),
+                budget: None,
                 in_use: 0,
                 high_water: 0,
                 cow_copies: 0,
@@ -174,9 +206,43 @@ impl PageAllocator {
         self.inner.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Allocate a zeroed page with refcount 1.
+    /// Cap live pages at `budget` (`None` removes the cap).  Existing
+    /// pages are never reclaimed here — a lowered budget only refuses
+    /// *new* [`PageAllocator::try_alloc`] calls until usage drops.
+    pub fn set_page_budget(&self, budget: Option<u64>) {
+        self.lock().budget = budget;
+    }
+
+    /// The configured page budget, if any.
+    pub fn page_budget(&self) -> Option<u64> {
+        self.lock().budget
+    }
+
+    /// Allocate a zeroed page with refcount 1.  Panics if a page budget
+    /// is configured and exhausted — budget-aware callers (the native
+    /// backend's decode path) use [`PageAllocator::try_alloc`].
     pub fn alloc(&self) -> PageId {
+        self.try_alloc().expect("kv page budget exhausted in an infallible alloc path")
+    }
+
+    /// Allocate a zeroed page with refcount 1, refusing (typed) when the
+    /// page budget is exhausted or a `page.alloc=exhaust` fault fires.
+    pub fn try_alloc(&self) -> Result<PageId, PageExhausted> {
+        // Probe before taking the page lock (the fault registry has its
+        // own lock; keep the order registry-free → page lock acyclic).
+        let injected = matches!(
+            crate::faults::hit(crate::faults::FaultSite::PageAlloc),
+            Some(crate::faults::FaultAction::Exhaust)
+        );
         let mut g = self.lock();
+        if injected {
+            return Err(PageExhausted { in_use: g.in_use, budget: u64::MAX });
+        }
+        if let Some(budget) = g.budget {
+            if g.in_use >= budget {
+                return Err(PageExhausted { in_use: g.in_use, budget });
+            }
+        }
         let index = match g.free.pop() {
             Some(i) => i,
             None => {
@@ -201,7 +267,7 @@ impl PageAllocator {
         g.chunks[c][off..off + self.page_elems].fill(0.0);
         g.in_use += 1;
         g.high_water = g.high_water.max(g.in_use);
-        PageId { index, gen }
+        Ok(PageId { index, gen })
     }
 
     fn check(&self, g: &PageInner, id: PageId, op: &str) -> Result<()> {
@@ -266,6 +332,13 @@ impl PageAllocator {
         if g.meta[id.index as usize].refcount == 1 {
             return Ok((id, false));
         }
+        // A COW clone is a net new live page; it honors the budget too
+        // (the caller's shared reference stays intact on refusal).
+        if let Some(budget) = g.budget {
+            if g.in_use >= budget {
+                return Err(PageExhausted { in_use: g.in_use, budget }.into());
+            }
+        }
         // Shared: allocate a private clone and move the caller's ref.
         let new_index = match g.free.pop() {
             Some(i) => i,
@@ -329,6 +402,7 @@ impl PageAllocator {
             pages_in_use: g.in_use,
             pages_shared: g.meta.iter().filter(|m| m.refcount > 1).count() as u64,
             pages_capacity: g.meta.len() as u64,
+            pages_budget: g.budget.unwrap_or(0),
             pages_high_water: g.high_water,
             cow_copies: g.cow_copies,
             prefix_hit_tokens: g.prefix_hit_tokens,
@@ -340,6 +414,46 @@ impl PageAllocator {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn page_budget_refuses_then_recovers() {
+        let a = PageAllocator::new(4);
+        a.set_page_budget(Some(2));
+        let p = a.try_alloc().unwrap();
+        let q = a.try_alloc().unwrap();
+        let err = a.try_alloc().unwrap_err();
+        assert_eq!(err, PageExhausted { in_use: 2, budget: 2 });
+        assert_eq!(a.stats().pages_budget, 2);
+        // Freeing a page restores headroom; lifting the budget unbounds.
+        a.release(q).unwrap();
+        let r = a.try_alloc().unwrap();
+        a.set_page_budget(None);
+        let s = a.try_alloc().unwrap();
+        for id in [p, r, s] {
+            a.release(id).unwrap();
+        }
+        assert_eq!(a.stats().pages_in_use, 0);
+    }
+
+    #[test]
+    fn injected_exhaustion_fails_one_alloc_typed() {
+        let _g = crate::faults::test_guard();
+        crate::faults::install(
+            crate::faults::FaultPlan::seeded(1).on_nth(
+                crate::faults::FaultSite::PageAlloc,
+                2,
+                crate::faults::FaultAction::Exhaust,
+            ),
+        );
+        let a = PageAllocator::new(4);
+        let p = a.try_alloc().unwrap();
+        let err = a.try_alloc().unwrap_err();
+        assert_eq!(err.budget, u64::MAX, "injected refusal, not a real budget");
+        let q = a.try_alloc().unwrap();
+        for id in [p, q] {
+            a.release(id).unwrap();
+        }
+    }
 
     #[test]
     fn alloc_zeroes_and_tracks_occupancy() {

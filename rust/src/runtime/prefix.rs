@@ -255,30 +255,30 @@ impl PrefixTree {
         // (fresh inserts carry the current clock, so cold branches go
         // first).
         while g.pages_held > self.max_pages {
-            let victim = g
-                .nodes
-                .iter()
-                .enumerate()
-                .filter_map(|(i, n)| n.as_ref().map(|n| (i, n)))
-                .filter(|(_, n)| n.children.is_empty())
-                .min_by_key(|(_, n)| n.last_used)
-                .map(|(i, _)| i);
-            let Some(vi) = victim else { break };
-            let node = g.nodes[vi].take().expect("victim is live");
-            match node.parent {
-                Some(p) => {
-                    let pc = &mut g.nodes[p].as_mut().expect("live parent").children;
-                    pc.retain(|&c| c != vi);
-                }
-                None => g.roots.retain(|&c| c != vi),
+            if !evict_one(&mut g, alloc) {
+                break;
             }
-            g.free.push(vi);
-            g.pages_held -= 1;
-            // Release under the tree lock (documented lock order:
-            // tree -> allocator).
-            let _ = alloc.release(node.page);
         }
         Ok(())
+    }
+
+    /// On-demand pressure relief: evict up to `n` least-recently-used
+    /// childless leaves and release their pages, returning how many were
+    /// evicted.  This is rung 1 of the coordinator's degradation ladder —
+    /// under KV page exhaustion, cached prefixes are sacrificed before
+    /// speculation is capped or admissions shed.  Evicting only childless
+    /// leaves keeps every remaining root-to-leaf path intact, so cache
+    /// hits stay bit-exact.
+    pub fn evict_lru(&self, alloc: &PageAllocator, n: usize) -> usize {
+        let mut g = self.lock();
+        let mut evicted = 0;
+        while evicted < n {
+            if !evict_one(&mut g, alloc) {
+                break;
+            }
+            evicted += 1;
+        }
+        evicted
     }
 
     /// Drop every node and release every pinned page (tests; also lets a
@@ -297,12 +297,72 @@ impl PrefixTree {
     }
 }
 
+/// Evict the single least-recently-used childless leaf, releasing its
+/// page (under the tree lock; documented lock order: tree -> allocator).
+/// Returns `false` when no evictable leaf exists.
+fn evict_one(g: &mut TreeInner, alloc: &PageAllocator) -> bool {
+    let victim = g
+        .nodes
+        .iter()
+        .enumerate()
+        .filter_map(|(i, n)| n.as_ref().map(|n| (i, n)))
+        .filter(|(_, n)| n.children.is_empty())
+        .min_by_key(|(_, n)| n.last_used)
+        .map(|(i, _)| i);
+    let Some(vi) = victim else { return false };
+    let node = g.nodes[vi].take().expect("victim is live");
+    match node.parent {
+        Some(p) => {
+            let pc = &mut g.nodes[p].as_mut().expect("live parent").children;
+            pc.retain(|&c| c != vi);
+        }
+        None => g.roots.retain(|&c| c != vi),
+    }
+    g.free.push(vi);
+    g.pages_held -= 1;
+    let _ = alloc.release(node.page);
+    true
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn page(alloc: &PageAllocator) -> PageId {
         alloc.alloc()
+    }
+
+    #[test]
+    fn evict_lru_releases_leaves_on_demand() {
+        let alloc = PageAllocator::new(4);
+        let tree = PrefixTree::new(64);
+        // Three independent single-page prompts, then a two-page chain.
+        for (i, base) in [0i32, 100, 200].into_iter().enumerate() {
+            let toks: Vec<i32> = (base..base + 16).collect();
+            let p = page(&alloc);
+            tree.insert(&alloc, &toks, &[p]).unwrap();
+            alloc.release(p).unwrap();
+            let _ = i;
+        }
+        let chain: Vec<i32> = (300..332).collect();
+        let cp: Vec<PageId> = (0..2).map(|_| page(&alloc)).collect();
+        tree.insert(&alloc, &chain, &cp).unwrap();
+        for p in &cp {
+            alloc.release(*p).unwrap();
+        }
+        assert_eq!(tree.pages_held(), 5);
+        let before = alloc.stats().pages_in_use;
+        // Evict two: the two oldest childless leaves go; interior chain
+        // nodes survive until their children are gone.
+        assert_eq!(tree.evict_lru(&alloc, 2), 2);
+        assert_eq!(tree.pages_held(), 3);
+        assert_eq!(alloc.stats().pages_in_use, before - 2, "evicted pages were released");
+        // Evicting far more than exists drains the tree and reports the
+        // true count.
+        assert_eq!(tree.evict_lru(&alloc, 100), 3);
+        assert_eq!(tree.pages_held(), 0);
+        assert_eq!(alloc.stats().pages_in_use, 0);
+        assert_eq!(tree.evict_lru(&alloc, 1), 0, "empty tree has nothing to evict");
     }
 
     #[test]

@@ -432,6 +432,87 @@ pub struct BatchEngine<'m> {
     backend: &'m dyn Backend,
 }
 
+/// Per-session outcome of one engine step ([`BatchEngine::step_report`]):
+/// the sessions touched by a failing batched op, with a typed
+/// [`FailureKind`] and detail message each.  An empty report is a fully
+/// successful step.  Reported sessions are *poisoned* — their KV slot
+/// state is unspecified (the failing op may have partially written it) —
+/// so the caller must retire them (release the slot, answer the request)
+/// and must not step them again; every other session was untouched by the
+/// failure and continues bit-identically.
+///
+/// [`FailureKind`]: crate::faults::FailureKind
+#[derive(Debug, Default)]
+pub struct StepReport {
+    pub failures: Vec<StepFailure>,
+}
+
+/// One poisoned session from a failed batched op.
+#[derive(Debug)]
+pub struct StepFailure {
+    /// Index into the `sessions` slice passed to the step.
+    pub session: usize,
+    pub kind: crate::faults::FailureKind,
+    pub detail: String,
+}
+
+/// Run one batched op behind a fault probe and a panic trap.  Returns the
+/// op's rows, or the typed failure shared by every session in the op.
+/// Panics (a kernel worker shard, an injected `panic` action) are caught
+/// here so one poisoned op cannot take down the scheduler thread; the
+/// backend's error contract already guarantees arena consistency on both
+/// unwind (taken states drop, releasing their pages) and `Err`.
+fn run_op<T>(
+    site: crate::faults::FaultSite,
+    op: impl FnOnce() -> Result<Vec<T>>,
+) -> std::result::Result<Vec<T>, (crate::faults::FailureKind, String)> {
+    use crate::faults::{FailureKind, FaultAction};
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let mut injected = None;
+    if crate::faults::enabled() {
+        injected = crate::faults::hit(site);
+        if let Some(FaultAction::Stall(ms)) = injected {
+            // An armed stall delays the op (watchdog fodder) but does not
+            // fail it.
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            injected = None;
+        }
+    }
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        match injected {
+            Some(FaultAction::Panic) => panic!("injected fault at {}", site.name()),
+            Some(FaultAction::Error) => {
+                anyhow::bail!("injected fault at {} (step error)", site.name())
+            }
+            _ => {}
+        }
+        op()
+    }));
+    match result {
+        Ok(Ok(rows)) => Ok(rows),
+        Ok(Err(e)) => {
+            // The vendored anyhow shim flattens source chains to strings
+            // at `?`-conversion (no downcast), so a typed `PageExhausted`
+            // is recognized by its stable Display prefix anywhere in the
+            // chain.
+            let exhausted = e.chain().any(|c| c.starts_with("kv page budget exhausted"));
+            let kind =
+                if exhausted { FailureKind::PageExhausted } else { FailureKind::StepError };
+            Err((kind, format!("{e:#}")))
+        }
+        Err(panic) => {
+            let msg = if let Some(s) = panic.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = panic.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "opaque panic payload".to_string()
+            };
+            Err((FailureKind::WorkerPanic, format!("panic in engine step: {msg}")))
+        }
+    }
+}
+
 impl<'m> BatchEngine<'m> {
     pub fn new(backend: &'m dyn Backend) -> Self {
         Self { backend }
@@ -441,7 +522,26 @@ impl<'m> BatchEngine<'m> {
         self.backend
     }
 
-    /// Advance every non-done session by one engine step.
+    /// Advance every non-done session by one engine step, aborting the
+    /// whole step on the first failed batched op (the historical
+    /// contract; offline drivers and tests).  The serving scheduler uses
+    /// [`BatchEngine::step_report`] instead, which contains a failure to
+    /// the sessions the failing op touched.
+    pub fn step(&self, sessions: &mut [&mut GenSession]) -> Result<()> {
+        let report = self.step_report(sessions);
+        match report.failures.into_iter().next() {
+            None => Ok(()),
+            Some(f) => Err(anyhow::anyhow!(
+                "engine step failed for session {} ({}): {}",
+                f.session,
+                f.kind,
+                f.detail
+            )),
+        }
+    }
+
+    /// Advance every non-done session by one engine step, with blast-radius
+    /// isolation.
     ///
     /// Phases inside a step: (1) batched prefill for newly admitted
     /// sessions, (2) batched draft decode repeated until every speculative
@@ -449,11 +549,35 @@ impl<'m> BatchEngine<'m> {
     /// finished drafters out of later sub-steps), (3) one batched
     /// verification pass, (4) a burst of batched full-precision decodes
     /// for autoregressive sessions.  Completed sessions release their KV
-    /// slots; the error of any batched op aborts the whole step.
-    pub fn step(&self, sessions: &mut [&mut GenSession]) -> Result<()> {
+    /// slots.
+    ///
+    /// A failing (or panicking) batched op poisons exactly the sessions it
+    /// was operating on — each phase's index set gives the attribution —
+    /// and they are reported in the returned [`StepReport`] and excluded
+    /// from the rest of the step; every other session continues through
+    /// its remaining phases bit-identically to a failure-free step.
+    pub fn step_report(&self, sessions: &mut [&mut GenSession]) -> StepReport {
         let backend = self.backend;
         let slots_per_state = backend.slots();
         let vocab = backend.vocab();
+        let mut report = StepReport::default();
+        // Sessions poisoned by a failed op this step: excluded from every
+        // later phase (their KV slot state is unspecified).
+        let mut poisoned = vec![false; sessions.len()];
+        let poison = |report: &mut StepReport,
+                          poisoned: &mut Vec<bool>,
+                          members: &[usize],
+                          kind: crate::faults::FailureKind,
+                          detail: &str| {
+            for &i in members {
+                poisoned[i] = true;
+                report.failures.push(StepFailure {
+                    session: i,
+                    kind,
+                    detail: detail.to_string(),
+                });
+            }
+        };
 
         // ---- phase 1: prefill newly admitted sessions ----
         let idx: Vec<usize> = (0..sessions.len())
@@ -478,12 +602,18 @@ impl<'m> BatchEngine<'m> {
                     GenSession::Ar(s) => s.prompt_len,
                 })
                 .collect();
-            let logits = backend.prefill_batch(&slots, &prompts, &lengths)?;
-            for (&i, row) in idx.iter().zip(&logits) {
-                match &mut *sessions[i] {
-                    GenSession::Spec(s) => s.on_prefill(row),
-                    GenSession::Ar(s) => s.on_prefill(row),
+            match run_op(crate::faults::FaultSite::StepPrefill, || {
+                backend.prefill_batch(&slots, &prompts, &lengths)
+            }) {
+                Ok(logits) => {
+                    for (&i, row) in idx.iter().zip(&logits) {
+                        match &mut *sessions[i] {
+                            GenSession::Spec(s) => s.on_prefill(row),
+                            GenSession::Ar(s) => s.on_prefill(row),
+                        }
+                    }
                 }
+                Err((kind, detail)) => poison(&mut report, &mut poisoned, &idx, kind, &detail),
             }
         }
 
@@ -491,7 +621,8 @@ impl<'m> BatchEngine<'m> {
         loop {
             let drafting: Vec<usize> = (0..sessions.len())
                 .filter(|&i| {
-                    matches!(&*sessions[i], GenSession::Spec(s) if s.phase == SpecPhase::Draft)
+                    !poisoned[i]
+                        && matches!(&*sessions[i], GenSession::Spec(s) if s.phase == SpecPhase::Draft)
                 })
                 .collect();
             if drafting.is_empty() {
@@ -507,10 +638,21 @@ impl<'m> BatchEngine<'m> {
                     pos.push(p);
                 }
             }
-            let rows = backend.decode_draft_batch(&slots, &tokens, &pos)?;
-            for (&i, row) in drafting.iter().zip(&rows) {
-                if let GenSession::Spec(s) = &mut *sessions[i] {
-                    s.on_draft(row);
+            match run_op(crate::faults::FaultSite::StepDraft, || {
+                backend.decode_draft_batch(&slots, &tokens, &pos)
+            }) {
+                Ok(rows) => {
+                    for (&i, row) in drafting.iter().zip(&rows) {
+                        if let GenSession::Spec(s) = &mut *sessions[i] {
+                            s.on_draft(row);
+                        }
+                    }
+                }
+                Err((kind, detail)) => {
+                    // Every drafter was in the failing op; nothing is left
+                    // to keep sub-stepping.
+                    poison(&mut report, &mut poisoned, &drafting, kind, &detail);
+                    break;
                 }
             }
         }
@@ -518,7 +660,8 @@ impl<'m> BatchEngine<'m> {
         // ---- phase 3: one batched verification pass ----
         let verifying: Vec<usize> = (0..sessions.len())
             .filter(|&i| {
-                matches!(&*sessions[i], GenSession::Spec(s) if s.phase == SpecPhase::Verify)
+                !poisoned[i]
+                    && matches!(&*sessions[i], GenSession::Spec(s) if s.phase == SpecPhase::Verify)
             })
             .collect();
         if !verifying.is_empty() {
@@ -531,10 +674,18 @@ impl<'m> BatchEngine<'m> {
                     pos0.push(s.pos0);
                 }
             }
-            let rows = backend.verify_batch(&slots, &tokens, &pos0)?;
-            for (&i, row) in verifying.iter().zip(&rows) {
-                if let GenSession::Spec(s) = &mut *sessions[i] {
-                    s.on_verify(row, vocab);
+            match run_op(crate::faults::FaultSite::StepVerify, || {
+                backend.verify_batch(&slots, &tokens, &pos0)
+            }) {
+                Ok(rows) => {
+                    for (&i, row) in verifying.iter().zip(&rows) {
+                        if let GenSession::Spec(s) = &mut *sessions[i] {
+                            s.on_verify(row, vocab);
+                        }
+                    }
+                }
+                Err((kind, detail)) => {
+                    poison(&mut report, &mut poisoned, &verifying, kind, &detail)
                 }
             }
         }
@@ -542,7 +693,10 @@ impl<'m> BatchEngine<'m> {
         // ---- phase 4: autoregressive decode burst ----
         for _ in 0..AR_BURST {
             let decoding: Vec<usize> = (0..sessions.len())
-                .filter(|&i| matches!(&*sessions[i], GenSession::Ar(s) if !s.done && s.prefilled))
+                .filter(|&i| {
+                    !poisoned[i]
+                        && matches!(&*sessions[i], GenSession::Ar(s) if !s.done && s.prefilled)
+                })
                 .collect();
             if decoding.is_empty() {
                 break;
@@ -556,21 +710,33 @@ impl<'m> BatchEngine<'m> {
                     pos.push(s.pos);
                 }
             }
-            let rows = backend.decode_full_batch(&slots, &tokens, &pos)?;
-            for (&i, row) in decoding.iter().zip(&rows) {
-                if let GenSession::Ar(s) = &mut *sessions[i] {
-                    s.on_decode(row);
+            match run_op(crate::faults::FaultSite::StepDecode, || {
+                backend.decode_full_batch(&slots, &tokens, &pos)
+            }) {
+                Ok(rows) => {
+                    for (&i, row) in decoding.iter().zip(&rows) {
+                        if let GenSession::Ar(s) = &mut *sessions[i] {
+                            s.on_decode(row);
+                        }
+                    }
+                }
+                Err((kind, detail)) => {
+                    poison(&mut report, &mut poisoned, &decoding, kind, &detail);
+                    break;
                 }
             }
         }
 
         // ---- retire: release slots of completed sessions ----
-        for s in sessions.iter_mut() {
-            if s.is_done() {
+        // Poisoned sessions keep their slots here; the caller releases
+        // them when it retires the failed requests (the release is
+        // idempotent either way).
+        for (i, s) in sessions.iter_mut().enumerate() {
+            if !poisoned[i] && s.is_done() {
                 s.release(backend);
             }
         }
-        Ok(())
+        report
     }
 
     /// Convenience driver: run a set of sessions to completion and return

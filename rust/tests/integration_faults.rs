@@ -1,0 +1,470 @@
+//! Integration: fault injection, blast-radius isolation, and graceful
+//! degradation over the builtin native backend — no artifacts.
+//!
+//! Every test holds `faults::test_guard()` for its whole body: the fault
+//! plan and its counters are process-global, so tests in this binary must
+//! serialize and start from a clean (disarmed) registry.
+
+use std::time::Duration;
+
+use speq::coordinator::{ResponseEvent, Server, ServerConfig, SubmitParams};
+use speq::faults::{self, FailureKind, FaultAction, FaultPlan, FaultSite};
+use speq::model::SamplingParams;
+use speq::runtime::{load_backend_with, Backend, ModelSource, NativeConfig};
+use speq::specdec::{
+    AdaptiveConfig, ArSession, BatchEngine, Engine, GenSession, SpecConfig, SpecSession,
+};
+
+fn backend() -> Box<dyn Backend> {
+    load_backend_with(&ModelSource::Builtin, "vicuna-7b-tiny", &NativeConfig::default())
+        .expect("builtin backend")
+}
+
+fn server(workers: usize) -> Server {
+    let cfg = ServerConfig {
+        source: ModelSource::Builtin,
+        model: "vicuna-7b-tiny".into(),
+        workers,
+        queue_capacity: 32,
+        ..ServerConfig::default()
+    };
+    Server::start(cfg).expect("server start")
+}
+
+fn spec_session(backend: &dyn Backend, prompt: &[u8], gen_len: usize) -> GenSession {
+    GenSession::Spec(
+        SpecSession::new(
+            backend,
+            prompt,
+            SpecConfig {
+                max_draft: 16,
+                gamma: 0.6,
+                sampling: SamplingParams::greedy(),
+                gen_len,
+                adaptive: AdaptiveConfig::default(),
+            },
+        )
+        .expect("spec session"),
+    )
+}
+
+fn ar_session(backend: &dyn Backend, prompt: &[u8], gen_len: usize) -> GenSession {
+    GenSession::Ar(
+        ArSession::new(backend, prompt, gen_len, SamplingParams::greedy()).expect("ar session"),
+    )
+}
+
+/// Outcome of driving a batch to quiescence with `step_report`:
+/// per-session `Ok(tokens)` or the `(kind, detail)` that quarantined it.
+type BatchOutcome = Vec<Result<Vec<u8>, (FailureKind, String)>>;
+
+/// Step the batch like the scheduler does — failed sessions are released
+/// and excluded from later steps; everyone else runs to completion.
+fn run_batch(backend: &dyn Backend, mut sessions: Vec<GenSession>, max_steps: usize) -> BatchOutcome {
+    let engine = BatchEngine::new(backend);
+    let mut failure: Vec<Option<(FailureKind, String)>> = vec![None; sessions.len()];
+    for _ in 0..max_steps {
+        let mut live_map = Vec::new();
+        let mut refs: Vec<&mut GenSession> = Vec::new();
+        for (i, s) in sessions.iter_mut().enumerate() {
+            if failure[i].is_none() && !s.is_done() {
+                live_map.push(i);
+                refs.push(s);
+            }
+        }
+        if refs.is_empty() {
+            break;
+        }
+        let report = engine.step_report(&mut refs);
+        for f in report.failures {
+            let gi = live_map[f.session];
+            failure[gi] = Some((f.kind, f.detail));
+        }
+        for (i, s) in sessions.iter_mut().enumerate() {
+            if failure[i].is_some() {
+                s.release(backend);
+            }
+        }
+    }
+    sessions
+        .into_iter()
+        .zip(failure)
+        .map(|(s, f)| match f {
+            Some(fk) => Err(fk),
+            None => {
+                assert!(s.is_done(), "session neither failed nor finished in the step budget");
+                Ok(s.into_result().tokens)
+            }
+        })
+        .collect()
+}
+
+const PROMPTS: [&[u8]; 4] = [
+    b"Q: ada has 3 apples and finds 4 more. how many apples now?\nA: ",
+    b"def add_two(x):\n    return ",
+    b"USER: hello, can we talk about music?\nBOT: ",
+    b"Q: bob has 9 coins and spends 2. how many coins left?\nA: ",
+];
+
+/// The acceptance scenario: a seeded plan injects a step failure into a
+/// 4-sequence batch; exactly the sessions in the failing op get typed
+/// errors, and the others complete bit-identically to a fault-free run.
+#[test]
+fn step_failure_quarantines_only_the_faulted_op_sessions() {
+    let _g = faults::test_guard();
+
+    // Fault-free reference run: 2 speculative + 2 autoregressive.
+    let clean = {
+        let b = backend();
+        let sessions = vec![
+            spec_session(b.as_ref(), PROMPTS[0], 24),
+            spec_session(b.as_ref(), PROMPTS[1], 24),
+            ar_session(b.as_ref(), PROMPTS[2], 24),
+            ar_session(b.as_ref(), PROMPTS[3], 24),
+        ];
+        run_batch(b.as_ref(), sessions, 256)
+    };
+    for r in &clean {
+        assert!(r.is_ok(), "fault-free run must not fail: {r:?}");
+    }
+
+    // Same batch with the first draft op failing: the draft op carries
+    // exactly the two speculative sessions.
+    faults::install(FaultPlan::seeded(3).on_nth(FaultSite::StepDraft, 1, FaultAction::Error));
+    let b = backend();
+    let sessions = vec![
+        spec_session(b.as_ref(), PROMPTS[0], 24),
+        spec_session(b.as_ref(), PROMPTS[1], 24),
+        ar_session(b.as_ref(), PROMPTS[2], 24),
+        ar_session(b.as_ref(), PROMPTS[3], 24),
+    ];
+    let faulted = run_batch(b.as_ref(), sessions, 256);
+
+    for i in [0usize, 1] {
+        match &faulted[i] {
+            Err((kind, detail)) => {
+                assert_eq!(*kind, FailureKind::StepError, "session {i}");
+                assert!(detail.contains("injected fault at step.draft"), "{detail}");
+            }
+            Ok(_) => panic!("spec session {i} was in the failing draft op and must fail"),
+        }
+    }
+    for i in [2usize, 3] {
+        let survivor = faulted[i].as_ref().expect("AR session was not in the failing op");
+        assert_eq!(
+            survivor,
+            clean[i].as_ref().unwrap(),
+            "survivor {i} must stream bit-identical tokens to the fault-free run"
+        );
+    }
+    assert!(faults::injected_total() >= 1);
+}
+
+/// An injected worker-shard panic surfaces as a typed `WorkerPanic` on the
+/// sessions in the panicking op, and the backend (worker pool included)
+/// keeps serving afterwards.
+#[test]
+fn worker_panic_is_contained_and_backend_survives() {
+    let _g = faults::test_guard();
+    faults::install(FaultPlan::seeded(5).on_nth(FaultSite::WorkerShard, 1, FaultAction::Panic));
+
+    let b = backend();
+    // The first batched decode through the backend is the spec session's
+    // draft sub-step, so the panic lands there; the AR session's decode
+    // burst comes later in the step and must survive.
+    let sessions = vec![
+        spec_session(b.as_ref(), PROMPTS[0], 16),
+        ar_session(b.as_ref(), PROMPTS[2], 16),
+    ];
+    let out = run_batch(b.as_ref(), sessions, 256);
+    let (kind, detail) = out[0].as_ref().expect_err("spec session must be quarantined");
+    assert_eq!(*kind, FailureKind::WorkerPanic);
+    assert!(detail.contains("panic in engine step"), "{detail}");
+    let ar_tokens = out[1].as_ref().expect("AR session must survive the contained panic");
+    assert_eq!(ar_tokens.len(), 16);
+
+    // Pool plumbing survived: a fresh session on the same backend runs
+    // clean end to end (the plan's single shot is spent).
+    let again = run_batch(b.as_ref(), vec![spec_session(b.as_ref(), PROMPTS[1], 16)], 256);
+    assert_eq!(again[0].as_ref().unwrap().len(), 16);
+}
+
+/// KV page exhaustion mid-decode fails only the page-hungry sequence with
+/// a typed `PageExhausted`, frees every page it retained, and leaves the
+/// allocator + prefix tree consistent (full eviction drains to zero).
+#[test]
+fn page_exhaustion_mid_decode_fails_alone_and_frees_pages() {
+    let _g = faults::test_guard();
+    let b = backend();
+    let engine = BatchEngine::new(b.as_ref());
+
+    // One long speculative generation (must allocate pages beyond its
+    // prompt) and one short AR generation that fits its prefill slack.
+    let mut spec = spec_session(b.as_ref(), PROMPTS[0], 64);
+    let mut ar = ar_session(b.as_ref(), PROMPTS[3], 8);
+
+    // Step once so both prefills land, then clamp the budget to exactly
+    // the pages now in use: the next allocation anyone needs must fail.
+    {
+        let mut refs: Vec<&mut GenSession> = vec![&mut spec, &mut ar];
+        let report = engine.step_report(&mut refs);
+        assert!(report.failures.is_empty(), "no faults armed yet: {:?}", report.failures);
+    }
+    let in_use = b.kv_stats().pages_in_use;
+    assert!(in_use > 0);
+    b.set_kv_page_budget(Some(in_use));
+
+    let mut spec_failure = None;
+    for _ in 0..64 {
+        if spec_failure.is_some() || spec.is_done() {
+            break;
+        }
+        let mut refs: Vec<&mut GenSession> = Vec::new();
+        let mut map = Vec::new();
+        if !spec.is_done() {
+            map.push("spec");
+            refs.push(&mut spec);
+        }
+        if !ar.is_done() {
+            map.push("ar");
+            refs.push(&mut ar);
+        }
+        if refs.is_empty() {
+            break;
+        }
+        let report = engine.step_report(&mut refs);
+        for f in report.failures {
+            assert_eq!(map[f.session], "spec", "only the growing sequence may exhaust");
+            assert_eq!(f.kind, FailureKind::PageExhausted);
+            assert!(f.detail.contains("kv page budget exhausted"), "{}", f.detail);
+            spec_failure = Some(f);
+        }
+    }
+    let spec_failure = spec_failure.expect("64-token generation must outgrow a zero-slack budget");
+    assert_eq!(spec_failure.kind, FailureKind::PageExhausted);
+    assert!(ar.is_done(), "the short AR sequence must finish untouched");
+
+    // Quarantine-release the failed sequence: its pages must come back.
+    let held_before_release = b.kv_stats().pages_in_use;
+    spec.release(b.as_ref());
+    assert!(
+        b.kv_stats().pages_in_use < held_before_release,
+        "releasing the quarantined sequence must free its pages"
+    );
+
+    // Recovery: with the budget lifted, a fresh identical generation runs
+    // to completion on the same backend.
+    b.set_kv_page_budget(None);
+    let redo = run_batch(b.as_ref(), vec![spec_session(b.as_ref(), PROMPTS[0], 64)], 256);
+    assert_eq!(redo[0].as_ref().unwrap().len(), 64);
+
+    // Leak check: all that remains is the prefix cache, and evicting it
+    // drains the allocator to zero — refcounts were consistent throughout.
+    b.relieve_kv_pressure(usize::MAX);
+    assert_eq!(b.kv_stats().pages_in_use, 0, "pages leaked past release + full eviction");
+}
+
+/// Chaos property: under a randomized plan mixing step errors, panics,
+/// and page exhaustion, every surviving request's token stream is bitwise
+/// identical to the fault-free reference, and the server drains cleanly.
+#[test]
+fn chaos_survivors_stream_bit_identical_tokens() {
+    let _g = faults::test_guard();
+
+    // Fault-free reference streams from the offline engine (the serving
+    // determinism contract: HTTP/scheduler transport never changes bits).
+    let expected: Vec<Vec<u8>> = {
+        let b = backend();
+        let engine = Engine::new(b.as_ref());
+        PROMPTS
+            .iter()
+            .map(|p| {
+                engine
+                    .generate_spec(
+                        p,
+                        &SpecConfig {
+                            max_draft: 16,
+                            gamma: 0.6,
+                            sampling: SamplingParams::greedy(),
+                            gen_len: 32,
+                            adaptive: AdaptiveConfig::default(),
+                        },
+                    )
+                    .expect("reference generation")
+                    .tokens
+            })
+            .collect()
+    };
+
+    for seed in [11u64, 29, 47] {
+        faults::install(
+            FaultPlan::seeded(seed)
+                .with_prob(FaultSite::StepDraft, 0.05, FaultAction::Error)
+                .with_prob(FaultSite::StepVerify, 0.04, FaultAction::Panic)
+                .with_prob(FaultSite::StepDecode, 0.04, FaultAction::Error)
+                .with_prob(FaultSite::PageAlloc, 0.02, FaultAction::Exhaust),
+        );
+        let server = server(1);
+        let mut streams = Vec::new();
+        for p in PROMPTS.iter() {
+            let (_, stream) = server
+                .submit(p, SubmitParams { gen_len: 32, ..Default::default() })
+                .expect("submit");
+            streams.push(stream);
+        }
+        let mut survivors = 0;
+        let mut failed = 0;
+        for (i, stream) in streams.into_iter().enumerate() {
+            let mut tokens = Vec::new();
+            loop {
+                match stream.recv().expect("terminal event").event {
+                    ResponseEvent::Chunk(c) => tokens.extend(c),
+                    ResponseEvent::Done(Ok(body)) => {
+                        assert_eq!(tokens, body.tokens, "chunks must reassemble the body");
+                        assert_eq!(
+                            tokens, expected[i],
+                            "survivor {i} diverged from the fault-free stream (seed {seed})"
+                        );
+                        survivors += 1;
+                        break;
+                    }
+                    ResponseEvent::Done(Err(e)) => {
+                        assert!(!e.to_string().is_empty());
+                        failed += 1;
+                        break;
+                    }
+                    ResponseEvent::Cancelled(k) => panic!("nothing cancels here: {k}"),
+                }
+            }
+        }
+        assert!(
+            server.drain(Duration::from_secs(120)),
+            "server must drain after the storm (seed {seed})"
+        );
+        let snap = server.metrics().snapshot();
+        assert_eq!(snap.submitted, 4);
+        assert_eq!(snap.completed, survivors as u64);
+        assert_eq!(snap.failed, failed as u64);
+        assert_eq!(
+            snap.submitted,
+            snap.completed + snap.failed + snap.cancelled + snap.rejected,
+            "terminal accounting must balance (seed {seed})"
+        );
+        server.shutdown();
+        faults::clear();
+    }
+}
+
+/// Regression (admit/cancel race): a request cancelled *while being
+/// admitted* must be retired with `Cancelled` before entering the batch —
+/// it must never stream a token.  The `sched.admit` stall widens the
+/// window deterministically.
+#[test]
+fn cancel_during_admission_never_streams_tokens() {
+    let _g = faults::test_guard();
+    let server = server(1);
+
+    // Warm up so the scheduler is loaded and idle (model cold-start must
+    // not eat the stall window).
+    server.generate(PROMPTS[1], 8).expect("warmup");
+
+    faults::install(FaultPlan::seeded(0).on_nth(FaultSite::SchedAdmit, 1, FaultAction::Stall(250)));
+    let (_, stream) = server
+        .submit(PROMPTS[0], SubmitParams { gen_len: 16, ..Default::default() })
+        .expect("submit");
+    let cancel = stream.cancel_token();
+    // Land the cancel inside the admission stall: after the entry check,
+    // before the session enters the active batch.
+    std::thread::sleep(Duration::from_millis(60));
+    cancel.cancel();
+
+    let mut saw_chunk = false;
+    loop {
+        match stream.recv().expect("terminal event").event {
+            ResponseEvent::Chunk(_) => saw_chunk = true,
+            ResponseEvent::Cancelled(_) => break,
+            ResponseEvent::Done(r) => {
+                panic!("expected cancellation, got Done ({:?} tokens)", r.map(|b| b.tokens.len()))
+            }
+        }
+    }
+    assert!(!saw_chunk, "a cancelled admission must never stream tokens");
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.cancelled, 1);
+    assert_eq!(snap.completed, 1, "only the warmup completed");
+    server.shutdown();
+}
+
+/// Drain settles under a cancel storm and the terminal accounting
+/// balances: every submitted request reaches exactly one terminal event.
+#[test]
+fn drain_settles_under_cancel_storm() {
+    let _g = faults::test_guard();
+    let server = server(2);
+    let mut streams = Vec::new();
+    for i in 0..8 {
+        let (_, stream) = server
+            .submit(PROMPTS[i % PROMPTS.len()], SubmitParams { gen_len: 24, ..Default::default() })
+            .expect("submit");
+        if i % 2 == 1 {
+            stream.cancel_token().cancel();
+        }
+        streams.push(stream);
+    }
+    assert!(server.drain(Duration::from_secs(120)), "drain must settle");
+    for stream in streams {
+        let mut terminals = 0;
+        loop {
+            match stream.recv() {
+                Ok(r) => match r.event {
+                    ResponseEvent::Chunk(_) => {}
+                    ResponseEvent::Done(_) | ResponseEvent::Cancelled(_) => terminals += 1,
+                },
+                Err(_) => break, // channel closed after the terminal event
+            }
+        }
+        assert_eq!(terminals, 1, "exactly one terminal event per request");
+    }
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.submitted, 8);
+    assert_eq!(
+        snap.submitted,
+        snap.completed + snap.failed + snap.cancelled + snap.rejected,
+        "terminal accounting must balance after drain"
+    );
+    assert!(snap.cancelled >= 1, "the storm must cancel something");
+    assert!(snap.completed >= 1, "unstormed requests must complete");
+    server.shutdown();
+}
+
+/// The step watchdog converts an injected stall into a typed
+/// `step_timeout` failure and the server keeps serving afterwards.
+#[test]
+fn watchdog_fails_a_stuck_step_and_recovers() {
+    let _g = faults::test_guard();
+    faults::install(FaultPlan::seeded(0).on_nth(FaultSite::StepVerify, 1, FaultAction::Stall(800)));
+    let cfg = ServerConfig {
+        source: ModelSource::Builtin,
+        model: "vicuna-7b-tiny".into(),
+        workers: 1,
+        queue_capacity: 32,
+        // Wide enough that honest debug-build steps never trip it; the
+        // 800ms injected stall overshoots it by 4x.
+        step_deadline: Duration::from_millis(200),
+        ..ServerConfig::default()
+    };
+    let server = Server::start(cfg).expect("server start");
+    let err = server
+        .generate(PROMPTS[0], 24)
+        .expect_err("the stalled step must fail the batch via the watchdog");
+    assert!(err.to_string().contains("step_timeout"), "{err:#}");
+
+    // The scheduler survived the verdict: the next request completes.
+    let body = server.generate(PROMPTS[1], 12).expect("post-timeout request");
+    assert_eq!(body.tokens.len(), 12);
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.failed, 1);
+    assert_eq!(snap.completed, 1);
+    assert!(snap.faults_recovered >= 1, "containment must count as recovery");
+    server.shutdown();
+}
