@@ -134,8 +134,9 @@ impl SimdLevel {
             self
         } else {
             let best = Self::detect();
-            eprintln!(
-                "warning: SIMD level {:?} unavailable on this host; using {:?}",
+            crate::log_warn!(
+                "speq::bsfp::simd",
+                "SIMD level {:?} unavailable on this host; using {:?}",
                 self.name(),
                 best.name()
             );
@@ -152,9 +153,9 @@ impl SimdLevel {
                 Some(level) => level.resolve(),
                 None => {
                     let best = Self::detect();
-                    eprintln!(
-                        "warning: unknown SPEQ_SIMD={v:?} (auto|scalar|sse4.1|avx2|neon); \
-                         using {:?}",
+                    crate::log_warn!(
+                        "speq::bsfp::simd",
+                        "unknown SPEQ_SIMD={v:?} (auto|scalar|sse4.1|avx2|neon); using {:?}",
                         best.name()
                     );
                     best

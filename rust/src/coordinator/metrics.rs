@@ -23,6 +23,35 @@ fn push_capped(v: &mut Vec<u64>, val: u64, nth: u64) {
     }
 }
 
+/// Per-request latency attribution: where one completed request's wall
+/// time went.  The scheduler constructs this at finalize so that
+/// `queue_wait_s + prefill_s + draft_s + verify_s + stall_s == latency_s`
+/// by construction: the compute buckets come from the batch engine's
+/// per-phase charging (each batched op's full wall duration, charged to
+/// every participant), `queue_wait_s` is submission→admission, and
+/// `stall_s` is the batch-engine residency remainder — lockstep waits on
+/// co-batched sequences, chunk streaming, scheduler bookkeeping.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RequestPhases {
+    /// Submission to admission (queued and/or held), seconds.
+    pub queue_wait_s: f64,
+    /// Batched prefill ops this request participated in, seconds.
+    pub prefill_s: f64,
+    /// Batched quantized-draft ops, seconds.
+    pub draft_s: f64,
+    /// Batched verify / full-precision decode ops, seconds.
+    pub verify_s: f64,
+    /// Batch residency not covered by a compute op, seconds.
+    pub stall_s: f64,
+}
+
+impl RequestPhases {
+    /// Sum of every bucket — equals total request latency by construction.
+    pub fn total_s(&self) -> f64 {
+        self.queue_wait_s + self.prefill_s + self.draft_s + self.verify_s + self.stall_s
+    }
+}
+
 /// Shared metrics sink (cheap atomic counters; latencies and the batch
 /// histogram under mutexes).
 pub struct Metrics {
@@ -46,6 +75,14 @@ pub struct Metrics {
     pub tokens_generated: AtomicU64,
     pub draft_steps: AtomicU64,
     pub verify_passes: AtomicU64,
+    /// Accumulated per-phase latency attribution across completed
+    /// requests, microseconds (see [`RequestPhases`]); the snapshot turns
+    /// these into per-request means.
+    phase_queue_wait_us: AtomicU64,
+    phase_prefill_us: AtomicU64,
+    phase_draft_us: AtomicU64,
+    phase_verify_us: AtomicU64,
+    phase_stall_us: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
     exec_us: Mutex<Vec<u64>>,
     /// `occupancy[b]` = number of engine steps that ran with `b` active
@@ -89,6 +126,14 @@ pub struct MetricsSnapshot {
     pub latency_p95_ms: f64,
     pub latency_p99_ms: f64,
     pub exec_p50_ms: f64,
+    /// Mean per-completed-request phase attribution, milliseconds (zeros
+    /// when nothing completed).  The five buckets sum to the mean total
+    /// latency by construction (see [`RequestPhases`]).
+    pub phase_queue_wait_mean_ms: f64,
+    pub phase_prefill_mean_ms: f64,
+    pub phase_draft_mean_ms: f64,
+    pub phase_verify_mean_ms: f64,
+    pub phase_stall_mean_ms: f64,
     /// Tokens generated per wall-clock second since the sink was created.
     pub tokens_per_s: f64,
     /// Histogram of engine-step batch occupancy (`[b]` = steps at size b).
@@ -139,6 +184,11 @@ impl Metrics {
             tokens_generated: AtomicU64::new(0),
             draft_steps: AtomicU64::new(0),
             verify_passes: AtomicU64::new(0),
+            phase_queue_wait_us: AtomicU64::new(0),
+            phase_prefill_us: AtomicU64::new(0),
+            phase_draft_us: AtomicU64::new(0),
+            phase_verify_us: AtomicU64::new(0),
+            phase_stall_us: AtomicU64::new(0),
             latencies_us: Mutex::new(Vec::new()),
             exec_us: Mutex::new(Vec::new()),
             batch_occupancy: Mutex::new(Vec::new()),
@@ -171,11 +221,25 @@ impl Metrics {
         *self.spec_adaptive.lock().unwrap() = (sessions, sum_budget, sum_rate);
     }
 
-    pub fn record_completion(&self, tokens: u64, drafts: u64, verifies: u64, latency_s: f64, exec_s: f64) {
+    pub fn record_completion(
+        &self,
+        tokens: u64,
+        drafts: u64,
+        verifies: u64,
+        latency_s: f64,
+        exec_s: f64,
+        phases: &RequestPhases,
+    ) {
         let nth = self.requests_completed.fetch_add(1, Ordering::Relaxed);
         self.tokens_generated.fetch_add(tokens, Ordering::Relaxed);
         self.draft_steps.fetch_add(drafts, Ordering::Relaxed);
         self.verify_passes.fetch_add(verifies, Ordering::Relaxed);
+        let us = |s: f64| if s.is_finite() && s > 0.0 { (s * 1e6) as u64 } else { 0 };
+        self.phase_queue_wait_us.fetch_add(us(phases.queue_wait_s), Ordering::Relaxed);
+        self.phase_prefill_us.fetch_add(us(phases.prefill_s), Ordering::Relaxed);
+        self.phase_draft_us.fetch_add(us(phases.draft_s), Ordering::Relaxed);
+        self.phase_verify_us.fetch_add(us(phases.verify_s), Ordering::Relaxed);
+        self.phase_stall_us.fetch_add(us(phases.stall_s), Ordering::Relaxed);
         push_capped(&mut self.latencies_us.lock().unwrap(), (latency_s * 1e6) as u64, nth);
         push_capped(&mut self.exec_us.lock().unwrap(), (exec_s * 1e6) as u64, nth);
     }
@@ -213,9 +277,18 @@ impl Metrics {
         let weighted: u64 = occupancy.iter().enumerate().map(|(b, &n)| b as u64 * n).sum();
         let tokens = self.tokens_generated.load(Ordering::Relaxed);
         let elapsed_s = self.started.elapsed().as_secs_f64();
+        let completed = self.requests_completed.load(Ordering::Relaxed);
+        // Phase totals µs → per-completed-request mean ms.
+        let phase_mean_ms = |total: &AtomicU64| -> f64 {
+            if completed > 0 {
+                total.load(Ordering::Relaxed) as f64 / completed as f64 / 1e3
+            } else {
+                0.0
+            }
+        };
         MetricsSnapshot {
             submitted: self.requests_submitted.load(Ordering::Relaxed),
-            completed: self.requests_completed.load(Ordering::Relaxed),
+            completed,
             rejected: self.requests_rejected.load(Ordering::Relaxed),
             failed: self.requests_failed.load(Ordering::Relaxed),
             cancelled: self.requests_cancelled.load(Ordering::Relaxed),
@@ -230,6 +303,11 @@ impl Metrics {
             latency_p95_ms: pct(&mut lat, 0.95),
             latency_p99_ms: pct(&mut lat, 0.99),
             exec_p50_ms: pct(&mut exec, 0.50),
+            phase_queue_wait_mean_ms: phase_mean_ms(&self.phase_queue_wait_us),
+            phase_prefill_mean_ms: phase_mean_ms(&self.phase_prefill_us),
+            phase_draft_mean_ms: phase_mean_ms(&self.phase_draft_us),
+            phase_verify_mean_ms: phase_mean_ms(&self.phase_verify_us),
+            phase_stall_mean_ms: phase_mean_ms(&self.phase_stall_us),
             tokens_per_s: if elapsed_s > 0.0 { tokens as f64 / elapsed_s } else { 0.0 },
             batch_occupancy: occupancy,
             batch_occupancy_mean: if steps > 0 { weighted as f64 / steps as f64 } else { 0.0 },
@@ -269,7 +347,14 @@ mod tests {
     fn percentiles_from_recorded_latencies() {
         let m = Metrics::new();
         for i in 1..=100u64 {
-            m.record_completion(10, 5, 2, i as f64 / 1000.0, i as f64 / 2000.0);
+            m.record_completion(
+                10,
+                5,
+                2,
+                i as f64 / 1000.0,
+                i as f64 / 2000.0,
+                &RequestPhases::default(),
+            );
         }
         let s = m.snapshot();
         assert_eq!(s.completed, 100);
@@ -415,6 +500,60 @@ mod tests {
         assert_eq!(s.adaptive_sessions, 0);
         assert_eq!(s.adaptive_draft_len_mean, 0.0);
         assert_eq!(s.adaptive_accept_rate_mean, 0.0);
+    }
+
+    #[test]
+    fn phase_attribution_means_and_sum_identity() {
+        let m = Metrics::new();
+        let p1 = RequestPhases {
+            queue_wait_s: 0.010,
+            prefill_s: 0.020,
+            draft_s: 0.030,
+            verify_s: 0.040,
+            stall_s: 0.100,
+        };
+        let p2 = RequestPhases {
+            queue_wait_s: 0.030,
+            prefill_s: 0.040,
+            draft_s: 0.050,
+            verify_s: 0.060,
+            stall_s: 0.020,
+        };
+        m.record_completion(8, 4, 2, p1.total_s(), p1.total_s() - p1.queue_wait_s, &p1);
+        m.record_completion(8, 4, 2, p2.total_s(), p2.total_s() - p2.queue_wait_s, &p2);
+        let s = m.snapshot();
+        assert!((s.phase_queue_wait_mean_ms - 20.0).abs() < 0.01, "{}", s.phase_queue_wait_mean_ms);
+        assert!((s.phase_prefill_mean_ms - 30.0).abs() < 0.01);
+        assert!((s.phase_draft_mean_ms - 40.0).abs() < 0.01);
+        assert!((s.phase_verify_mean_ms - 50.0).abs() < 0.01);
+        assert!((s.phase_stall_mean_ms - 60.0).abs() < 0.01);
+        // The five mean buckets reconstruct the mean total latency.
+        let sum = s.phase_queue_wait_mean_ms
+            + s.phase_prefill_mean_ms
+            + s.phase_draft_mean_ms
+            + s.phase_verify_mean_ms
+            + s.phase_stall_mean_ms;
+        let mean_latency_ms = (p1.total_s() + p2.total_s()) / 2.0 * 1e3;
+        assert!((sum - mean_latency_ms).abs() < 0.01, "{sum} vs {mean_latency_ms}");
+        // Non-finite or negative buckets are dropped, not poisoning totals.
+        m.record_completion(
+            1,
+            1,
+            1,
+            0.001,
+            0.001,
+            &RequestPhases { queue_wait_s: f64::NAN, stall_s: -5.0, ..Default::default() },
+        );
+        let s = m.snapshot();
+        assert!(s.phase_queue_wait_mean_ms.is_finite());
+        assert!(s.phase_stall_mean_ms >= 0.0);
+    }
+
+    #[test]
+    fn empty_phase_means_are_zero() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.phase_queue_wait_mean_ms, 0.0);
+        assert_eq!(s.phase_stall_mean_ms, 0.0);
     }
 
     #[test]

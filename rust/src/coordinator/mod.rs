@@ -40,7 +40,7 @@ mod queue;
 mod server;
 mod session;
 
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, RequestPhases};
 pub use queue::{
     CancelKind, CancelToken, Mode, Priority, QueueError, Request, RequestQueue, Response,
     ResponseBody, ResponseEvent, ResponseStream, DEFAULT_BATCH_PROMOTE_AFTER,

@@ -144,6 +144,9 @@ pub struct ResponseBody {
     pub latency_s: f64,
     /// Time in the batch engine (admission to completion), seconds.
     pub exec_s: f64,
+    /// Per-phase latency attribution; the buckets sum to `latency_s` by
+    /// construction (see [`super::metrics::RequestPhases`]).
+    pub phases: super::metrics::RequestPhases,
     pub worker: usize,
 }
 

@@ -314,6 +314,10 @@ impl Server {
             self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
             return Err(e);
         }
+        // The request span opens only once the queue accepted it (rejected
+        // submissions never enter the lifecycle), and closes at whichever
+        // terminal event retires it: done, cancelled, failed, quarantined.
+        crate::trace::request_begin(id, &[("gen_len", params.gen_len as f64)]);
         Ok((id, ResponseStream::new(rx, cancel)))
     }
 
@@ -423,6 +427,7 @@ impl ActiveReq {
 fn cancel_active(mut a: ActiveReq, kind: CancelKind, backend: &dyn Backend, metrics: &Metrics) {
     a.session.release(backend);
     metrics.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+    crate::trace::request_end(a.id, "cancelled", &[]);
     let _ = a.respond_to.send(Response { id: a.id, event: ResponseEvent::Cancelled(kind) });
 }
 
@@ -533,6 +538,7 @@ fn scheduler_main(
                 Some(kind) => {
                     let req = held.remove(i);
                     metrics.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+                    crate::trace::request_end(req.id, "cancelled", &[]);
                     let _ = req
                         .respond_to
                         .send(Response { id: req.id, event: ResponseEvent::Cancelled(kind) });
@@ -622,6 +628,7 @@ fn scheduler_main(
         }
 
         // ---- one lockstep engine step over the whole batch ----
+        let step_start = if crate::trace::armed() { crate::trace::now_us() } else { 0 };
         watchdog.begin_step(wid);
         let report = {
             let mut refs: Vec<&mut GenSession> =
@@ -632,10 +639,27 @@ fn scheduler_main(
         // Fold this step's weight traffic into the shared sink (the drain
         // keeps per-backend counters from double-counting across workers;
         // backends without accounting report zeros).
-        metrics.record_traffic(&backend.drain_traffic());
+        let traffic_delta = backend.drain_traffic();
+        metrics.record_traffic(&traffic_delta);
         // Refresh the paged-KV occupancy/prefix-cache snapshot alongside it
         // (point-in-time, so replace rather than merge).
-        metrics.record_kv(&backend.kv_stats());
+        let kv_stats = backend.kv_stats();
+        metrics.record_kv(&kv_stats);
+        // One complete ("X") event per engine step, carrying the batch
+        // occupancy, this step's drained weight-byte deltas, and the KV
+        // page gauge — the per-step view that the per-request spans can't
+        // show (a step serves the whole batch at once).
+        crate::trace::complete(
+            "sched",
+            "step",
+            step_start,
+            &[
+                ("n", active.len() as f64),
+                ("draft_bytes", traffic_delta.draft_bytes as f64),
+                ("full_bytes", traffic_delta.full_bytes as f64),
+                ("kv_pages", kv_stats.pages_in_use as f64),
+            ],
+        );
         // Aggregate live adaptive-controller state (chosen draft budget +
         // accept-rate estimate) across the batch for the gauges; replaced,
         // not merged, like the KV snapshot.
@@ -660,6 +684,7 @@ fn scheduler_main(
                 a.session.release(backend.as_ref());
                 metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
                 metrics.requests_quarantined.fetch_add(1, Ordering::Relaxed);
+                crate::trace::request_end(a.id, "quarantined", &[]);
                 let _ = a.respond_to.send(Response {
                     id: a.id,
                     event: ResponseEvent::Done(Err(anyhow::anyhow!(
@@ -690,6 +715,7 @@ fn scheduler_main(
                 a.session.release(backend.as_ref());
                 metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
                 metrics.requests_quarantined.fetch_add(1, Ordering::Relaxed);
+                crate::trace::request_end(a.id, "quarantined", &[]);
                 let _ = a.respond_to.send(Response {
                     id: a.id,
                     event: ResponseEvent::Done(Err(anyhow::anyhow!(
@@ -780,6 +806,7 @@ fn admit(
     // without ever leasing a KV slot.
     if let Some(kind) = req.cancel_reason() {
         metrics.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+        crate::trace::request_end(req.id, "cancelled", &[]);
         let _ = req
             .respond_to
             .send(Response { id: req.id, event: ResponseEvent::Cancelled(kind) });
@@ -798,6 +825,7 @@ fn admit(
     let effective = sessions.effective_prompt(req.session, &req.prompt);
     if let Err(e) = validate_prompt(&effective, backend) {
         metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+        crate::trace::request_end(req.id, "failed", &[]);
         let _ = req
             .respond_to
             .send(Response { id: req.id, event: ResponseEvent::Done(Err(e)) });
@@ -834,11 +862,13 @@ fn admit(
             if let Some(kind) = req.cancel_reason() {
                 session.release(backend);
                 metrics.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+                crate::trace::request_end(req.id, "cancelled", &[]);
                 let _ = req
                     .respond_to
                     .send(Response { id: req.id, event: ResponseEvent::Cancelled(kind) });
                 return;
             }
+            crate::trace::request_instant(req.id, "admit");
             active.push(ActiveReq {
                 id: req.id,
                 session,
@@ -853,6 +883,7 @@ fn admit(
         }
         Err(e) => {
             metrics.requests_failed.fetch_add(1, Ordering::Relaxed);
+            crate::trace::request_end(req.id, "failed", &[]);
             let _ = req
                 .respond_to
                 .send(Response { id: req.id, event: ResponseEvent::Done(Err(e)) });
@@ -864,6 +895,19 @@ fn admit(
 fn finalize(a: ActiveReq, wid: usize, metrics: &Metrics, sessions: &SessionStore) {
     let exec_s = a.admitted.elapsed().as_secs_f64();
     let latency_s = a.submitted.elapsed().as_secs_f64();
+    // Latency attribution: the batch engine charged each batched op's wall
+    // time to this session's compute buckets; queue wait is everything
+    // before admission, and the stall bucket absorbs the batch-residency
+    // remainder (lockstep waits on co-batched sequences, chunk streaming,
+    // scheduler bookkeeping) so the five buckets sum to `latency_s`.
+    let compute = a.session.phase_seconds();
+    let phases = super::metrics::RequestPhases {
+        queue_wait_s: (latency_s - exec_s).max(0.0),
+        prefill_s: compute.prefill_s,
+        draft_s: compute.draft_s,
+        verify_s: compute.verify_s,
+        stall_s: (exec_s - compute.total()).max(0.0),
+    };
     let r = a.session.into_result();
     metrics.record_completion(
         r.tokens.len() as u64,
@@ -871,15 +915,29 @@ fn finalize(a: ActiveReq, wid: usize, metrics: &Metrics, sessions: &SessionStore
         r.trace.verify_passes(),
         latency_s,
         exec_s,
+        &phases,
     );
     if let Some(sid) = a.conversation {
         sessions.append(sid, &a.prompt, &r.tokens);
     }
+    crate::trace::request_end(
+        a.id,
+        "done",
+        &[
+            ("tokens", r.tokens.len() as f64),
+            ("queue_wait_ms", phases.queue_wait_s * 1e3),
+            ("prefill_ms", phases.prefill_s * 1e3),
+            ("draft_ms", phases.draft_s * 1e3),
+            ("verify_ms", phases.verify_s * 1e3),
+            ("stall_ms", phases.stall_s * 1e3),
+        ],
+    );
     let body = ResponseBody {
         tokens: r.tokens,
         trace: r.trace,
         latency_s,
         exec_s,
+        phases,
         worker: wid,
     };
     let _ = a.respond_to.send(Response { id: a.id, event: ResponseEvent::Done(Ok(body)) });

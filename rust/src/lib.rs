@@ -85,7 +85,7 @@
 //!   closed/open-loop (Poisson) load generator behind `speq loadgen`.
 //!   Streamed tokens are bit-identical to offline generation.
 //!
-//! Robustness layer:
+//! Robustness + observability layer:
 //! * [`faults`] — deterministic fault injection for the serving stack: a
 //!   seeded, schedule-driven `FaultPlan` (`SPEQ_FAULTS` / `--faults`)
 //!   arming named probe sites — batched-step errors/panics/stalls, KV
@@ -95,6 +95,14 @@
 //!   one relaxed atomic load; the blast-radius isolation, degradation
 //!   ladder, and watchdog that consume these probes live in
 //!   [`coordinator`] and [`net`].
+//! * [`trace`] — always-compiled structured tracing (same disarmed-cost
+//!   discipline as [`faults`]): per-request async spans (enqueue → admit
+//!   → terminal outcome with per-phase latency attribution), per-step
+//!   engine phase spans and scheduler step events with traffic/KV args,
+//!   and per-iteration speculation instants, recorded into fixed-capacity
+//!   per-thread rings and exported as Chrome trace-event JSON
+//!   (Perfetto-loadable) via `GET /debug/trace` or `--trace-out`; the
+//!   recorded accept histograms feed the `--exp accel-replay` projection.
 //!
 //! Evaluation layer:
 //! * [`accel`] — cycle-level simulator of the SPEQ accelerator (§IV):
@@ -126,6 +134,7 @@ pub mod quant;
 pub mod report;
 pub mod runtime;
 pub mod specdec;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

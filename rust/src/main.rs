@@ -21,7 +21,7 @@ use speq::accel::{paper_dims, Accel, ArrayMode};
 use speq::coordinator::{Mode, Priority, Server, ServerConfig, SubmitParams};
 use speq::model::{Manifest, SamplingParams};
 use speq::net::{LoadConfig, LoadMode, NetConfig, NetServer, Scenario};
-use speq::report::{run_adaptive, run_experiment, ReportCtx, ReportOpts, EXPERIMENTS};
+use speq::report::{run_accel_replay, run_adaptive, run_experiment, ReportCtx, ReportOpts, EXPERIMENTS};
 use speq::runtime::{
     builtin_config, builtin_model_names, load_backend_with, Backend, ModelSource, NativeConfig,
     SimdLevel,
@@ -76,6 +76,24 @@ fn native_config(args: &Args) -> NativeConfig {
     native
 }
 
+/// Arm structured tracing when `--trace-out` was given (`serve` arms
+/// unconditionally so `/debug/trace` always has data).
+fn arm_trace_out(args: &Args) {
+    if args.get("trace-out").is_some() {
+        speq::trace::arm();
+    }
+}
+
+/// After a run: export everything still retained in the rings to the
+/// `--trace-out` sink, if one was requested.
+fn write_trace_out(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("trace-out") {
+        speq::trace::write_file(std::path::Path::new(path), usize::MAX)?;
+        println!("trace: wrote {path} (load in Perfetto / chrome://tracing)");
+    }
+    Ok(())
+}
+
 fn dispatch(args: &Args) -> Result<()> {
     // Fault-injection plan: `--faults <spec>` beats `SPEQ_FAULTS`.  With
     // neither set, every probe stays a single relaxed atomic load.
@@ -83,6 +101,9 @@ fn dispatch(args: &Args) -> Result<()> {
         Some(spec) => speq::faults::install(speq::faults::FaultPlan::parse(spec)?),
         None => speq::faults::init_from_env()?,
     }
+    // Structured tracing: `SPEQ_TRACE=1` arms recording for any
+    // subcommand; `--trace-out` / `serve` arm it themselves below.
+    speq::trace::init_from_env();
     match args.subcommand.as_deref() {
         Some("info") => info(args),
         Some("report") => report(args),
@@ -102,16 +123,17 @@ fn dispatch(args: &Args) -> Result<()> {
                 "usage: speq <info|report|generate|serve|loadgen|bench-accel|version> [flags]\n\
                  \n\
                  speq report --exp <{}|all> [--models a,b] [--n-prompts N] [--gen-len N] [--fresh] [--threads T]\n\
+                 \x20          [--trace-in FILE]   (accel-replay: replay a recorded trace)\n\
                  speq generate --model <name> --prompt <text> [--gen-len N] [--temperature T]\n\
-                 \x20          [--adaptive] [--threads T]\n\
+                 \x20          [--adaptive] [--threads T] [--trace-out FILE]\n\
                  speq serve --model <name> [--workers N] [--requests N] [--threads T]\n\
                  speq serve --addr 127.0.0.1:8080 [--model M] [--workers N] [--max-batch B] [--queue Q]\n\
-                 \x20          [--deadline-ms D] [--duration-s S] [--threads T]\n\
+                 \x20          [--deadline-ms D] [--duration-s S] [--threads T] [--trace-out FILE]\n\
                  \x20          [--kv-page-budget P] [--faults SPEC]   (HTTP front end)\n\
                  speq loadgen --addr 127.0.0.1:8080 [--mode closed|open] [--users N] [--rate R]\n\
                  \x20          [--scenario oneshot|multiturn|slowreader|cancelstorm]\n\
                  \x20          [--requests N] [--gen-len N] [--retries R]\n\
-                 \x20          [--adaptive] [--deadline-ms D] [--smoke]\n\
+                 \x20          [--adaptive] [--deadline-ms D] [--smoke] [--trace-out FILE]\n\
                  speq info\n\
                  \n\
                  --threads T sizes the native kernel worker pool (0 = auto, default\n\
@@ -120,7 +142,10 @@ fn dispatch(args: &Args) -> Result<()> {
                  (default $SPEQ_SIMD or best detected); output bits are identical\n\
                  for every tier.\n\
                  --faults SPEC (or $SPEQ_FAULTS) arms the fault-injection plan, e.g.\n\
-                 \x20 'seed=7;step.verify@3=error;page.alloc%0.01=exhaust' (see README).",
+                 \x20 'seed=7;step.verify@3=error;page.alloc%0.01=exhaust' (see README).\n\
+                 --trace-out FILE (or $SPEQ_TRACE=1) arms structured tracing and writes\n\
+                 \x20 a Perfetto-loadable Chrome trace JSON; `serve` always records and\n\
+                 \x20 also exposes GET /debug/trace?last=N (loadgen --trace-out pulls it).",
                 EXPERIMENTS.join("|")
             );
             Ok(())
@@ -177,19 +202,36 @@ fn report(args: &Args) -> Result<()> {
         ppl_windows: args.get_usize("ppl-windows", 12),
         fresh: args.has("fresh"),
         threads: native_config(args),
+        trace_in: args.get("trace-in").map(Into::into),
     };
-    // `adaptive` is defined on the builtin zoo: when no artifacts exist,
-    // run it standalone so CI can gate the controller without a trained
-    // checkpoint (with artifacts it goes through the ctx for results/).
-    if exp == "adaptive" && Manifest::load(&opts.artifacts_root).is_err() {
-        run_adaptive(&opts.threads, opts.gen_len, &opts.models)?;
-        return Ok(());
+    // `adaptive` and `accel-replay` are defined on the builtin zoo: when
+    // no artifacts exist, run them standalone so CI can gate them without
+    // a trained checkpoint (with artifacts they go through the ctx for
+    // results/).
+    if Manifest::load(&opts.artifacts_root).is_err() {
+        match exp.as_str() {
+            "adaptive" => {
+                run_adaptive(&opts.threads, opts.gen_len, &opts.models)?;
+                return Ok(());
+            }
+            "accel-replay" => {
+                run_accel_replay(
+                    &opts.threads,
+                    opts.gen_len,
+                    &opts.models,
+                    opts.trace_in.as_deref(),
+                )?;
+                return Ok(());
+            }
+            _ => {}
+        }
     }
     let mut ctx = ReportCtx::new(opts)?;
     run_experiment(&mut ctx, &exp)
 }
 
 fn generate(args: &Args) -> Result<()> {
+    arm_trace_out(args);
     let model_name = args.get_or("model", "vicuna-7b-tiny");
     let prompt = args
         .get("prompt")
@@ -263,10 +305,14 @@ fn generate(args: &Args) -> Result<()> {
             );
         }
     }
-    Ok(())
+    write_trace_out(args)
 }
 
 fn serve(args: &Args) -> Result<()> {
+    // Serving always records: the rings are bounded, the disarmed check
+    // is the only alternative cost, and `/debug/trace` (HTTP mode) or
+    // `--trace-out` should never come back empty.
+    speq::trace::arm();
     let source = model_source(args);
     let cfg = ServerConfig {
         source: source.clone(),
@@ -344,6 +390,14 @@ fn serve(args: &Args) -> Result<()> {
         "batch occupancy: mean {:.2} seqs/step | failed {}",
         snap.batch_occupancy_mean, snap.failed
     );
+    println!(
+        "phase means: queue {:.1} ms | prefill {:.1} ms | draft {:.1} ms | verify {:.1} ms | stall {:.1} ms",
+        snap.phase_queue_wait_mean_ms,
+        snap.phase_prefill_mean_ms,
+        snap.phase_draft_mean_ms,
+        snap.phase_verify_mean_ms,
+        snap.phase_stall_mean_ms
+    );
     if !snap.traffic.is_empty() {
         println!(
             "weight traffic: draft {:.1} KB/tok | full {:.1} KB/tok | verify {:.1} KB/row | quarter ratio {:.3}",
@@ -354,7 +408,7 @@ fn serve(args: &Args) -> Result<()> {
         );
     }
     server.shutdown();
-    Ok(())
+    write_trace_out(args)
 }
 
 /// `speq serve --addr H:P`: the HTTP/SSE front end.  Runs until
@@ -385,7 +439,7 @@ fn serve_http(args: &Args, addr: &str, cfg: ServerConfig) -> Result<()> {
         threads
     );
     println!(
-        "routes: POST /v1/generate | POST /v1/stream (SSE) | GET /healthz | GET /metrics"
+        "routes: POST /v1/generate | POST /v1/stream (SSE) | GET /healthz | GET /metrics | GET /debug/trace"
     );
     let t0 = std::time::Instant::now();
     loop {
@@ -401,7 +455,7 @@ fn serve_http(args: &Args, addr: &str, cfg: ServerConfig) -> Result<()> {
         "served {} requests ({} tokens, {} rejected, {} cancelled, {} failed), drained: {}",
         snap.completed, snap.tokens, snap.rejected, snap.cancelled, snap.failed, drained
     );
-    Ok(())
+    write_trace_out(args)
 }
 
 /// `speq loadgen`: drive a running server over real sockets and report
@@ -440,6 +494,13 @@ fn loadgen(args: &Args) -> Result<()> {
     let report = speq::net::loadgen::run(&cfg)?;
     report.print();
     println!("{}", report.bench_json());
+    // The engine trace lives server-side: pull it over HTTP before the
+    // smoke gates so a failed gate still leaves the trace for triage.
+    if let Some(path) = args.get("trace-out") {
+        let body = speq::net::loadgen::fetch_trace(&cfg.addr, 1_000_000, cfg.timeout)?;
+        std::fs::write(path, &body)?;
+        println!("trace: wrote {path} ({} bytes from {})", body.len(), cfg.addr);
+    }
     if smoke {
         if scenario == Scenario::Cancelstorm {
             // Storm clients hang up on purpose, so "all complete" is the

@@ -228,6 +228,16 @@ pub fn done_data(
     if let Some(t) = ttft_ms {
         out.push_str(&format!(",\"ttft_ms\":{t:.3}"));
     }
+    // Per-phase latency attribution: the five buckets sum to latency_ms
+    // by construction (see `coordinator::RequestPhases`).
+    out.push_str(&format!(
+        ",\"queue_wait_ms\":{:.3},\"prefill_ms\":{:.3},\"draft_ms\":{:.3},\"verify_ms\":{:.3},\"stall_ms\":{:.3}",
+        finite(body.phases.queue_wait_s * 1e3),
+        finite(body.phases.prefill_s * 1e3),
+        finite(body.phases.draft_s * 1e3),
+        finite(body.phases.verify_s * 1e3),
+        finite(body.phases.stall_s * 1e3),
+    ));
     out.push_str(&format!(
         ",\"bytes_per_token_draft\":{:.1},\"bytes_per_token_full\":{:.1},\"draft_traffic_ratio\":{:.4}}}",
         finite(bpt_draft),
@@ -350,6 +360,38 @@ mod tests {
         assert_eq!(nums, tokens);
         let text = v.get("text").unwrap().as_str().unwrap();
         assert_eq!(crate::util::json::bytes_from_escaped(text).unwrap(), tokens);
+        assert!(!data.contains('\n'));
+    }
+
+    #[test]
+    fn done_data_carries_phase_breakdown_summing_to_latency() {
+        use crate::coordinator::RequestPhases;
+        use crate::specdec::SpecTrace;
+        let phases = RequestPhases {
+            queue_wait_s: 0.010,
+            prefill_s: 0.020,
+            draft_s: 0.030,
+            verify_s: 0.025,
+            stall_s: 0.015,
+        };
+        let body = ResponseBody {
+            tokens: vec![1, 2, 3],
+            trace: SpecTrace { iterations: vec![], produced: 3, prompt_len: 4 },
+            latency_s: phases.total_s(),
+            exec_s: phases.total_s() - phases.queue_wait_s,
+            phases,
+            worker: 0,
+        };
+        let data = done_data(7, &body, Some(12.0), (0.0, 0.0, 0.0));
+        let v = crate::util::json::parse(&data).unwrap();
+        let ms = |k: &str| v.get(k).unwrap().as_f64().unwrap();
+        let sum = ms("queue_wait_ms")
+            + ms("prefill_ms")
+            + ms("draft_ms")
+            + ms("verify_ms")
+            + ms("stall_ms");
+        let latency = ms("latency_ms");
+        assert!((sum - latency).abs() <= 0.05 * latency, "{sum} vs {latency}");
         assert!(!data.contains('\n'));
     }
 

@@ -624,20 +624,20 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
     })
 }
 
-/// `GET /metrics` and return the Prometheus page body (the smoke path
-/// uses this to assert prefix-cache activity after a multiturn run).
-pub fn fetch_metrics(addr: &str, timeout: Duration) -> Result<String> {
+/// `GET` a non-chunked route and return the body (shared by the metrics
+/// and trace fetchers; both routes answer with `content-length` bodies).
+fn http_get(addr: &str, path: &str, timeout: Duration) -> Result<String> {
     let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
     stream.set_read_timeout(Some(timeout)).ok();
     let mut w = stream.try_clone().context("clone socket")?;
-    write!(w, "GET /metrics HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n\r\n")?;
+    write!(w, "GET {path} HTTP/1.1\r\nhost: {addr}\r\nconnection: close\r\n\r\n")?;
     w.flush()?;
     let mut r = BufReader::new(stream);
     let mut line = String::new();
     r.read_line(&mut line).context("read status line")?;
     anyhow::ensure!(
         line.split_whitespace().nth(1) == Some("200"),
-        "GET /metrics answered {line:?}"
+        "GET {path} answered {line:?}"
     );
     let mut content_length = 0usize;
     loop {
@@ -656,11 +656,24 @@ pub fn fetch_metrics(addr: &str, timeout: Duration) -> Result<String> {
     let mut buf = Vec::new();
     if content_length > 0 {
         buf.resize(content_length, 0);
-        r.read_exact(&mut buf).context("read metrics body")?;
+        r.read_exact(&mut buf).context("read response body")?;
     } else {
-        r.read_to_end(&mut buf).context("read metrics body")?;
+        r.read_to_end(&mut buf).context("read response body")?;
     }
     Ok(String::from_utf8_lossy(&buf).into_owned())
+}
+
+/// `GET /metrics` and return the Prometheus page body (the smoke path
+/// uses this to assert prefix-cache activity after a multiturn run).
+pub fn fetch_metrics(addr: &str, timeout: Duration) -> Result<String> {
+    http_get(addr, "/metrics", timeout)
+}
+
+/// `GET /debug/trace?last=N` and return the Chrome trace-event JSON
+/// document (the loadgen CLI writes this to `--trace-out`; empty when
+/// the server process never armed tracing).
+pub fn fetch_trace(addr: &str, last: usize, timeout: Duration) -> Result<String> {
+    http_get(addr, &format!("/debug/trace?last={last}"), timeout)
 }
 
 /// Value of a single-sample metric in a Prometheus text page.

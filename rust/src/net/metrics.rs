@@ -34,8 +34,16 @@ impl LatencyHistogram {
     }
 
     /// Record one observation, in seconds.
+    ///
+    /// Non-finite samples are **dropped** (uncounted): a NaN must never
+    /// reach the bucket search or `_sum`, and counting it as zero would
+    /// silently skew the distribution.  Negative samples (clock
+    /// adjustment artifacts) clamp to zero and count.
     pub fn observe(&self, seconds: f64) {
-        let s = if seconds.is_finite() && seconds > 0.0 { seconds } else { 0.0 };
+        if !seconds.is_finite() {
+            return;
+        }
+        let s = seconds.max(0.0);
         let idx = LATENCY_BUCKETS_S
             .iter()
             .position(|&le| s <= le)
@@ -85,6 +93,23 @@ pub struct NetMetrics {
     pub inter_token: LatencyHistogram,
     /// Total request latency (submit to terminal event), per request.
     pub total: LatencyHistogram,
+    /// Per-request latency attribution, from the completion body's
+    /// [`RequestPhases`]: time queued before batch admission.
+    ///
+    /// [`RequestPhases`]: crate::coordinator::RequestPhases
+    pub phase_queue_wait: LatencyHistogram,
+    /// Attribution: time inside batched prefill ops.
+    pub phase_prefill: LatencyHistogram,
+    /// Attribution: time inside batched quantized draft ops.
+    pub phase_draft: LatencyHistogram,
+    /// Attribution: time inside batched verification / full-decode ops.
+    pub phase_verify: LatencyHistogram,
+    /// Attribution: admitted wall time outside any engine op (scheduler
+    /// bookkeeping, waiting on co-batched sequences).
+    pub phase_stall: LatencyHistogram,
+    /// Wall time spent writing SSE chunks to the client socket (overlaps
+    /// the phases above; measured in the net layer, not the scheduler).
+    pub phase_sse_write: LatencyHistogram,
     /// HTTP requests parsed off sockets (any route, any outcome).
     pub http_requests: AtomicU64,
     /// Requests answered 429 by admission control.
@@ -99,6 +124,12 @@ impl NetMetrics {
             ttft: LatencyHistogram::new(),
             inter_token: LatencyHistogram::new(),
             total: LatencyHistogram::new(),
+            phase_queue_wait: LatencyHistogram::new(),
+            phase_prefill: LatencyHistogram::new(),
+            phase_draft: LatencyHistogram::new(),
+            phase_verify: LatencyHistogram::new(),
+            phase_stall: LatencyHistogram::new(),
+            phase_sse_write: LatencyHistogram::new(),
             http_requests: AtomicU64::new(0),
             http_throttled: AtomicU64::new(0),
             connections: AtomicU64::new(0),
@@ -284,7 +315,48 @@ impl NetMetrics {
             "Total request latency, submit to terminal event.",
             &mut out,
         );
+        self.phase_queue_wait.render(
+            "speq_phase_queue_wait_seconds",
+            "Per-request latency attribution: queued before batch admission.",
+            &mut out,
+        );
+        self.phase_prefill.render(
+            "speq_phase_prefill_seconds",
+            "Per-request latency attribution: batched prefill ops.",
+            &mut out,
+        );
+        self.phase_draft.render(
+            "speq_phase_draft_seconds",
+            "Per-request latency attribution: batched quantized draft ops.",
+            &mut out,
+        );
+        self.phase_verify.render(
+            "speq_phase_verify_seconds",
+            "Per-request latency attribution: batched verify / full-decode ops.",
+            &mut out,
+        );
+        self.phase_stall.render(
+            "speq_phase_stall_seconds",
+            "Per-request latency attribution: admitted wall time outside engine ops.",
+            &mut out,
+        );
+        self.phase_sse_write.render(
+            "speq_phase_sse_write_seconds",
+            "Wall time writing SSE chunks to the client socket (overlaps other phases).",
+            &mut out,
+        );
         out
+    }
+
+    /// Feed one completed request's scheduler-side phase attribution into
+    /// the histograms (`sse_write` is observed by the stream handler,
+    /// which is the only place that time exists).
+    pub fn observe_phases(&self, p: &crate::coordinator::RequestPhases) {
+        self.phase_queue_wait.observe(p.queue_wait_s);
+        self.phase_prefill.observe(p.prefill_s);
+        self.phase_draft.observe(p.draft_s);
+        self.phase_verify.observe(p.verify_s);
+        self.phase_stall.observe(p.stall_s);
     }
 }
 
@@ -316,21 +388,39 @@ mod tests {
     }
 
     #[test]
-    fn negative_and_nan_observations_are_clamped() {
+    fn negative_observations_clamp_and_non_finite_are_dropped() {
         let h = LatencyHistogram::new();
-        h.observe(-1.0);
-        h.observe(f64::NAN);
-        assert_eq!(h.count(), 2);
+        h.observe(-1.0); // clamps to 0, counts
+        h.observe(f64::NAN); // dropped
+        h.observe(f64::INFINITY); // dropped
+        h.observe(f64::NEG_INFINITY); // dropped
+        assert_eq!(h.count(), 1);
         assert_eq!(h.sum_s(), 0.0);
+        // The rendered exposition must stay numeric: no NaN in _sum, and
+        // the single clamped sample lands in the smallest bucket.
+        let mut out = String::new();
+        h.render("x_seconds", "help", &mut out);
+        assert!(out.contains("x_seconds_bucket{le=\"0.0005\"} 1"));
+        assert!(out.contains("x_seconds_sum 0"));
+        assert!(!out.contains("NaN"));
     }
 
     #[test]
     fn exposition_includes_coordinator_counters_and_histograms() {
         let m = Metrics::new();
-        m.record_completion(10, 4, 2, 0.05, 0.04);
+        let phases = crate::coordinator::RequestPhases {
+            queue_wait_s: 0.01,
+            prefill_s: 0.01,
+            draft_s: 0.01,
+            verify_s: 0.01,
+            stall_s: 0.01,
+        };
+        m.record_completion(10, 4, 2, 0.05, 0.04, &phases);
         let net = NetMetrics::new();
         net.ttft.observe(0.012);
         net.total.observe(0.05);
+        net.observe_phases(&phases);
+        net.phase_sse_write.observe(0.002);
         let page = net.render_prometheus(&m.snapshot(), 3);
         assert!(page.contains("speq_requests_completed_total 1"));
         assert!(page.contains("speq_tokens_generated_total 10"));
@@ -338,6 +428,13 @@ mod tests {
         assert!(page.contains("# TYPE speq_ttft_seconds histogram"));
         assert!(page.contains("speq_ttft_seconds_count 1"));
         assert!(page.contains("speq_request_duration_seconds_count 1"));
+        assert!(page.contains("# TYPE speq_phase_queue_wait_seconds histogram"));
+        assert!(page.contains("speq_phase_queue_wait_seconds_count 1"));
+        assert!(page.contains("speq_phase_prefill_seconds_count 1"));
+        assert!(page.contains("speq_phase_draft_seconds_count 1"));
+        assert!(page.contains("speq_phase_verify_seconds_count 1"));
+        assert!(page.contains("speq_phase_stall_seconds_count 1"));
+        assert!(page.contains("speq_phase_sse_write_seconds_count 1"));
         assert!(page.contains("# TYPE speq_requests_completed_total counter"));
         assert!(page.contains("# TYPE speq_queue_depth gauge"));
     }

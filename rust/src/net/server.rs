@@ -275,6 +275,27 @@ fn route(
         }
         ("POST", "/v1/generate") => handle_generate(stream, req, keep_alive, sh),
         ("POST", "/v1/stream") => handle_stream(stream, req, keep_alive, sh),
+        // The path still carries its query string here (`?last=N`), so the
+        // match is a prefix guard rather than a literal.
+        ("GET", p) if is_trace_path(p) => {
+            let body = crate::trace::export_json(trace_last_param(p));
+            http::write_response(
+                stream,
+                200,
+                "application/json",
+                body.as_bytes(),
+                keep_alive,
+                &[],
+            )
+        }
+        (_, p) if is_trace_path(p) => http::write_response(
+            stream,
+            405,
+            "application/json",
+            api::error_data("method not allowed for this route").as_bytes(),
+            keep_alive,
+            &[],
+        ),
         (_, "/healthz") | (_, "/metrics") | (_, "/v1/generate") | (_, "/v1/stream") => {
             http::write_response(
                 stream,
@@ -294,6 +315,23 @@ fn route(
             &[],
         ),
     }
+}
+
+/// `GET /debug/trace[?last=N]` serves the structured engine trace.
+fn is_trace_path(path: &str) -> bool {
+    path == "/debug/trace" || path.starts_with("/debug/trace?")
+}
+
+/// Events to keep when `?last=N` is absent: two full default rings —
+/// enough for a scheduler thread plus the submit-side thread.
+const TRACE_DEFAULT_LAST: usize = 65_536;
+
+/// Parse `last=N` out of the `/debug/trace?last=N` query string.
+fn trace_last_param(path: &str) -> usize {
+    path.split_once('?')
+        .and_then(|(_, q)| q.split('&').find_map(|kv| kv.strip_prefix("last=")))
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(TRACE_DEFAULT_LAST)
 }
 
 /// Parse the body and run admission control; on rejection the HTTP error
@@ -476,9 +514,11 @@ fn handle_generate(
                 ResponseEvent::Chunk(c) => lat.on_chunk(c.len(), &sh.net_metrics),
                 ResponseEvent::Done(Ok(body)) => {
                     let ttft_ms = lat.finish(&sh.net_metrics);
+                    sh.net_metrics.observe_phases(&body.phases);
                     let data =
                         api::done_data(id, &body, ttft_ms, sh.server.metrics().traffic_fields());
-                    return http::write_response(
+                    let w0 = Instant::now();
+                    let res = http::write_response(
                         stream,
                         200,
                         "application/json",
@@ -486,6 +526,8 @@ fn handle_generate(
                         keep_alive,
                         &[],
                     );
+                    sh.net_metrics.phase_sse_write.observe(w0.elapsed().as_secs_f64());
+                    return res;
                 }
                 ResponseEvent::Done(Err(e)) => {
                     lat.finish(&sh.net_metrics);
@@ -540,6 +582,18 @@ mod tests {
         assert_eq!(cfg.retry_after_s, 1);
         assert!(cfg.default_deadline.is_none());
     }
+
+    #[test]
+    fn trace_route_matching_and_last_param() {
+        assert!(is_trace_path("/debug/trace"));
+        assert!(is_trace_path("/debug/trace?last=100"));
+        assert!(!is_trace_path("/debug/tracer"));
+        assert!(!is_trace_path("/metrics"));
+        assert_eq!(trace_last_param("/debug/trace"), TRACE_DEFAULT_LAST);
+        assert_eq!(trace_last_param("/debug/trace?last=100"), 100);
+        assert_eq!(trace_last_param("/debug/trace?foo=1&last=7"), 7);
+        assert_eq!(trace_last_param("/debug/trace?last=bogus"), TRACE_DEFAULT_LAST);
+    }
 }
 
 /// `POST /v1/stream`: Server-Sent Events over chunked transfer — one
@@ -568,6 +622,10 @@ fn handle_stream(
     // the connection loop restores the keep-alive timeout afterwards.
     let _ = stream.set_read_timeout(Some(Duration::from_millis(10)));
     let mut lat = LatencyTrack::new();
+    // Wall time spent writing SSE frames to this client's socket — the
+    // net-side attribution bucket (overlaps the scheduler-side phases,
+    // so it is reported separately, never summed with them).
+    let mut sse_write_s = 0.0f64;
     loop {
         let event = match resp.recv_timeout(Duration::from_millis(100)) {
             Ok(None) => {
@@ -615,7 +673,10 @@ fn handle_stream(
                     }
                 }
                 let ev = api::sse_event("chunk", &api::chunk_event_data(&c));
-                if let Err(e) = http::write_chunk(stream, &ev) {
+                let w0 = Instant::now();
+                let written = http::write_chunk(stream, &ev);
+                sse_write_s += w0.elapsed().as_secs_f64();
+                if let Err(e) = written {
                     // Client went away mid-stream: ask the scheduler to
                     // retire the sequence between steps.
                     cancel.cancel();
@@ -624,9 +685,14 @@ fn handle_stream(
             }
             ResponseEvent::Done(Ok(body)) => {
                 let ttft_ms = lat.finish(&sh.net_metrics);
+                sh.net_metrics.observe_phases(&body.phases);
                 let data =
                     api::done_data(id, &body, ttft_ms, sh.server.metrics().traffic_fields());
-                http::write_chunk(stream, &api::sse_event("done", &data))?;
+                let w0 = Instant::now();
+                let written = http::write_chunk(stream, &api::sse_event("done", &data));
+                sse_write_s += w0.elapsed().as_secs_f64();
+                sh.net_metrics.phase_sse_write.observe(sse_write_s);
+                written?;
                 return http::finish_chunked(stream);
             }
             ResponseEvent::Done(Err(e)) => {

@@ -1,0 +1,215 @@
+//! E13: accel-model trace replay — feed a recorded engine trace into the
+//! accelerator simulator and project paper-scale speedup.
+//!
+//! Two sources for the speculation histogram:
+//!
+//! * `--trace-in FILE`: a Chrome trace-event JSON export (from
+//!   `--trace-out` or `GET /debug/trace`).  The `cat:"spec"` / `name:"iter"`
+//!   instants carry drafted/accepted/early-exit per draft→verify round —
+//!   exactly the statistics [`Accel::run_trace`] consumes — so a serving
+//!   run on one machine can be replayed through the hardware model on
+//!   another, with no checkpoint or prompt set.
+//! * no `--trace-in`: record live.  Each builtin-zoo model runs once with
+//!   tracing armed; the trace rebuilt from the exported JSON must agree
+//!   with the engine's own [`SpecTrace`] (a roundtrip self-check of the
+//!   recorder + exporter + parser), and is then projected.
+//!
+//! The CI gate: projected SPEQ speedup vs FP16 must land in (1.0, 5.0) —
+//! speculation must help, and the model must not claim absurd wins.
+//!
+//! [`Accel::run_trace`]: crate::accel::Accel::run_trace
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::accel::{paper_dims, speedup_vs_fp16, Accel, BaselineKind};
+use crate::runtime::{load_backend_with, ModelSource, NativeConfig};
+use crate::specdec::{Engine, IterRecord, SpecConfig, SpecTrace};
+use crate::util::json::Value;
+
+/// Builtin-zoo models projected by default (`--models` overrides).
+const DEFAULT_MODELS: [&str; 2] = ["vicuna-7b-tiny", "llama3.2-3b-tiny"];
+
+const PROMPT: &[u8] = b"Q: ada has 3 apples and finds 4 more. how many apples now?\nA: ";
+
+/// Projected speedup must stay inside this open interval for the gate.
+pub const SPEEDUP_GATE: (f64, f64) = (1.0, 5.0);
+
+/// Rebuild a [`SpecTrace`] from the `cat:"spec"` / `name:"iter"` instants
+/// of a Chrome trace-event JSON document.  Every other event category is
+/// ignored, so a full engine trace (spans, scheduler steps, request
+/// lifecycles) parses cleanly.
+pub fn spec_trace_from_chrome_json(text: &str) -> Result<SpecTrace> {
+    let doc = crate::util::json::parse(text)
+        .map_err(|e| anyhow::anyhow!("trace JSON parse error: {e}"))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Value::as_arr)
+        .context("trace JSON has no traceEvents array")?;
+    let mut trace = SpecTrace { iterations: Vec::new(), produced: 0, prompt_len: 1024 };
+    for ev in events {
+        if ev.get("cat").and_then(Value::as_str) != Some("spec")
+            || ev.get("name").and_then(Value::as_str) != Some("iter")
+        {
+            continue;
+        }
+        let args = ev.get("args").context("spec iter event without args")?;
+        let field = |k: &str| args.get(k).and_then(Value::as_f64).unwrap_or(0.0);
+        let accepted = field("accepted") as u32;
+        trace.iterations.push(IterRecord {
+            drafted: field("drafted") as u32,
+            accepted,
+            early_exit: field("early_exit") != 0.0,
+        });
+        // Accepted drafts + the bonus/correction token, mirroring the engine.
+        trace.produced += accepted as usize + 1;
+    }
+    Ok(trace)
+}
+
+/// Run E13; the returned JSON mirrors the printed table.
+pub fn run_accel_replay(
+    native: &NativeConfig,
+    gen_len: usize,
+    models: &[String],
+    trace_in: Option<&Path>,
+) -> Result<Value> {
+    let names: Vec<String> = if models.is_empty() {
+        DEFAULT_MODELS.iter().map(|s| s.to_string()).collect()
+    } else {
+        models.to_vec()
+    };
+    let accel = Accel::default();
+    let mut out = BTreeMap::new();
+
+    // One recorded file can be projected at several paper-scale dims; a
+    // live recording is per model.  `source` tags the BENCH_JSON rows.
+    let (file_trace, source) = match trace_in {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let t = spec_trace_from_chrome_json(&text)?;
+            anyhow::ensure!(
+                !t.iterations.is_empty(),
+                "{} holds no spec/iter events — was the recording armed?",
+                path.display()
+            );
+            println!(
+                "\n== E13: accel replay of {} ({} spec iterations) ==",
+                path.display(),
+                t.iterations.len()
+            );
+            (Some(t), "file")
+        }
+        None => {
+            println!("\n== E13: accel replay (live recording, builtin zoo, gen_len {gen_len}) ==");
+            (None, "engine")
+        }
+    };
+
+    println!(
+        "{:<18} {:>6} {:>8} {:>10} {:>11} {:>12}",
+        "model", "iters", "r", "vs FP16", "vs Olive-8b", "vs Tender-8b"
+    );
+    for name in &names {
+        let dims = paper_dims(name)
+            .ok_or_else(|| anyhow::anyhow!("no paper dims for {name}"))?;
+        let trace = match &file_trace {
+            Some(t) => t.clone(),
+            None => {
+                // Live mode: record this run, then prove the exported JSON
+                // reconstructs the engine's own accounting bit-for-bit.
+                let backend = load_backend_with(&ModelSource::Builtin, name, native)?;
+                let engine = Engine::new(backend.as_ref());
+                crate::trace::arm();
+                crate::trace::clear();
+                let spec = engine
+                    .generate_spec(PROMPT, &SpecConfig { max_draft: 16, gen_len, ..Default::default() })?;
+                let rebuilt = spec_trace_from_chrome_json(&crate::trace::export_json(usize::MAX))?;
+                crate::trace::disarm();
+                anyhow::ensure!(
+                    rebuilt.iterations == spec.trace.iterations,
+                    "trace roundtrip mismatch on {name}: engine recorded {} iterations, \
+                     export rebuilt {}",
+                    spec.trace.iterations.len(),
+                    rebuilt.iterations.len()
+                );
+                rebuilt
+            }
+        };
+        let speedups: Vec<f64> = [BaselineKind::Speq, BaselineKind::Olive8, BaselineKind::Tender8]
+            .iter()
+            .map(|&k| speedup_vs_fp16(k, &accel, dims, 1024, Some(&trace)))
+            .collect();
+        let (speq, olive, tender) = (speedups[0], speedups[1], speedups[2]);
+        let r = trace.accept_rate();
+        println!(
+            "{name:<18} {:>6} {r:>8.3} {:>9.2}x {:>10.2}x {:>11.2}x",
+            trace.iterations.len(),
+            speq,
+            speq / olive,
+            speq / tender
+        );
+        println!(
+            "BENCH_JSON {{\"group\":\"report_accel_replay\",\"model\":\"{name}\",\"source\":\"{source}\",\"iters\":{},\"accept_rate\":{:.4},\"speedup_vs_fp16\":{:.4},\"speedup_vs_olive8\":{:.4},\"speedup_vs_tender8\":{:.4}}}",
+            trace.iterations.len(),
+            r,
+            speq,
+            speq / olive,
+            speq / tender
+        );
+        anyhow::ensure!(
+            speq > SPEEDUP_GATE.0 && speq < SPEEDUP_GATE.1,
+            "accel replay on {name}: projected {speq:.2}x vs FP16 outside ({}, {}) — \
+             the replayed accept statistics or the hardware model are broken",
+            SPEEDUP_GATE.0,
+            SPEEDUP_GATE.1
+        );
+        out.insert(
+            name.clone(),
+            Value::Obj(
+                [
+                    ("source".to_string(), Value::Str(source.to_string())),
+                    ("iters".to_string(), Value::Num(trace.iterations.len() as f64)),
+                    ("accept_rate".to_string(), Value::Num(r)),
+                    ("speedup_vs_fp16".to_string(), Value::Num(speq)),
+                    ("speedup_vs_olive8".to_string(), Value::Num(speq / olive)),
+                    ("speedup_vs_tender8".to_string(), Value::Num(speq / tender)),
+                ]
+                .into_iter()
+                .collect(),
+            ),
+        );
+    }
+    println!("(gate: projected SPEQ speedup vs FP16 within (1.0, 5.0); paper: ~2.07x)");
+    Ok(Value::Obj(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rebuilds_spec_trace_from_chrome_json() {
+        let text = r#"{"traceEvents":[
+            {"name":"step","cat":"sched","ph":"X","ts":1,"dur":5,"pid":1,"tid":1,"args":{"n":2}},
+            {"name":"iter","cat":"spec","ph":"i","ts":2,"pid":1,"tid":1,"s":"t",
+             "args":{"drafted":8,"accepted":6,"early_exit":0}},
+            {"name":"iter","cat":"spec","ph":"i","ts":3,"pid":1,"tid":1,"s":"t",
+             "args":{"drafted":4,"accepted":4,"early_exit":1}}
+        ]}"#;
+        let t = spec_trace_from_chrome_json(text).unwrap();
+        assert_eq!(t.iterations.len(), 2);
+        assert_eq!(t.iterations[0], IterRecord { drafted: 8, accepted: 6, early_exit: false });
+        assert_eq!(t.iterations[1], IterRecord { drafted: 4, accepted: 4, early_exit: true });
+        assert_eq!(t.produced, 6 + 1 + 4 + 1);
+    }
+
+    #[test]
+    fn rejects_documents_without_trace_events() {
+        assert!(spec_trace_from_chrome_json("{}").is_err());
+        assert!(spec_trace_from_chrome_json("not json").is_err());
+    }
+}

@@ -28,6 +28,9 @@ pub struct ReportOpts {
     /// Native kernel worker-pool width (`--threads`; bit-identical results
     /// for every value, so cached traces stay valid across widths).
     pub threads: NativeConfig,
+    /// Recorded Chrome trace-event JSON to replay through the accelerator
+    /// model (`--trace-in`, `accel-replay` only; `None` = record live).
+    pub trace_in: Option<PathBuf>,
 }
 
 impl Default for ReportOpts {
@@ -40,6 +43,7 @@ impl Default for ReportOpts {
             ppl_windows: 12,
             fresh: false,
             threads: NativeConfig::default(),
+            trace_in: None,
         }
     }
 }

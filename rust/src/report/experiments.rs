@@ -19,9 +19,9 @@ use crate::workload::{heldout_windows, task_names};
 /// All experiment ids, in DESIGN.md order (`traffic` is the measured
 /// quarter-to-all weight-stream accounting added with the bit-plane
 /// weight store).
-pub const EXPERIMENTS: [&str; 12] = [
+pub const EXPERIMENTS: [&str; 13] = [
     "fig2c", "table1", "table2", "table3", "table4", "fig7", "fig8", "fig9",
-    "specdec-cmp", "theory", "traffic", "adaptive",
+    "specdec-cmp", "theory", "traffic", "adaptive", "accel-replay",
 ];
 
 /// Run one experiment (or `all`).
@@ -51,6 +51,15 @@ pub fn run_experiment(ctx: &mut ReportCtx, exp: &str) -> Result<()> {
                 &ctx.opts.models,
             )?;
             ctx.save_result("adaptive", &v)
+        }
+        "accel-replay" => {
+            let v = super::accel_replay::run_accel_replay(
+                &ctx.opts.threads,
+                ctx.opts.gen_len,
+                &ctx.opts.models,
+                ctx.opts.trace_in.as_deref(),
+            )?;
+            ctx.save_result("accel_replay", &v)
         }
         other => anyhow::bail!("unknown experiment {other:?} (have {EXPERIMENTS:?} or 'all')"),
     }

@@ -14,17 +14,21 @@
 //! | `specdec-cmp` | §V-D vs Medusa / Swift                 |
 //! | `theory`      | Eq. 1–2 vs simulation (E10)            |
 //! | `adaptive`    | static vs adaptive draft length (E12)  |
+//! | `accel-replay`| accel-model replay of a recorded trace (E13) |
 //!
 //! Results print as paper-style tables and persist as JSON under
-//! `artifacts/results/` for EXPERIMENTS.md.  `adaptive` is special: it
-//! runs on the builtin zoo and needs no artifacts ([`run_adaptive`] is
-//! callable standalone; the CLI uses it when no manifest exists).
+//! `artifacts/results/` for EXPERIMENTS.md.  `adaptive` and
+//! `accel-replay` are special: they run on the builtin zoo and need no
+//! artifacts ([`run_adaptive`] / [`run_accel_replay`] are callable
+//! standalone; the CLI uses them when no manifest exists).
 
+mod accel_replay;
 mod adaptive;
 mod context;
 mod experiments;
 mod perplexity;
 
+pub use accel_replay::{run_accel_replay, spec_trace_from_chrome_json};
 pub use adaptive::run_adaptive;
 pub use context::{ReportCtx, ReportOpts};
 pub use experiments::{run_experiment, EXPERIMENTS};

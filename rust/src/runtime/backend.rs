@@ -620,7 +620,10 @@ pub fn load_backend_with(
                     match pjrt_backend(&manifest, model) {
                         Ok(b) => return Ok(b),
                         Err(e) => {
-                            eprintln!("pjrt backend unavailable ({e:#}); falling back to native")
+                            crate::log_warn!(
+                                "speq::runtime::backend",
+                                "pjrt backend unavailable ({e:#}); falling back to native"
+                            );
                         }
                     }
                 }

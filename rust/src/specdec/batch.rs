@@ -37,6 +37,29 @@ use crate::util::rng::Rng;
 /// iteration emits several tokens per step).
 const AR_BURST: usize = 8;
 
+/// Wall seconds a session has spent inside batched engine ops, by phase.
+///
+/// [`BatchEngine::step_report`] times every batched op and charges each
+/// participating session the op's **full** wall duration — the session
+/// was blocked on the op either way, so the sum over phases (plus queue
+/// wait and out-of-op stall, computed by the scheduler at completion) is
+/// exactly the request's latency.  AR sessions charge their
+/// full-precision decode burst to `verify_s` (the same pass kind as
+/// verification; they never draft).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseSeconds {
+    pub prefill_s: f64,
+    pub draft_s: f64,
+    pub verify_s: f64,
+}
+
+impl PhaseSeconds {
+    /// Total attributed in-op time.
+    pub fn total(&self) -> f64 {
+        self.prefill_s + self.draft_s + self.verify_s
+    }
+}
+
 /// Where a speculative session is in its draft → verify cycle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum SpecPhase {
@@ -87,6 +110,8 @@ pub struct SpecSession {
     ratios: CostRatios,
     started: Instant,
     wall: Duration,
+    /// Batched-op time attribution (charged by the engine each step).
+    phases: PhaseSeconds,
 }
 
 impl SpecSession {
@@ -131,6 +156,7 @@ impl SpecSession {
             ratios: CostRatios::from_traffic(&backend.traffic(), slots),
             started: Instant::now(),
             wall: Duration::ZERO,
+            phases: PhaseSeconds::default(),
         };
         if s.gen_len == 0 {
             s.finish();
@@ -247,6 +273,15 @@ impl SpecSession {
             accepted: outcome.accepted as u32,
             early_exit: self.early_exit,
         });
+        crate::trace::instant(
+            "spec",
+            "iter",
+            &[
+                ("drafted", self.drafts.len() as f64),
+                ("accepted", outcome.accepted as f64),
+                ("early_exit", if self.early_exit { 1.0 } else { 0.0 }),
+            ],
+        );
         if let Some(c) = &mut self.adaptive {
             c.observe(self.drafts.len(), outcome.accepted);
         }
@@ -280,6 +315,8 @@ pub struct ArSession {
     tok: usize,
     started: Instant,
     wall: Duration,
+    /// Batched-op time attribution (charged by the engine each step).
+    phases: PhaseSeconds,
 }
 
 impl ArSession {
@@ -308,6 +345,7 @@ impl ArSession {
             tok: 0,
             started: Instant::now(),
             wall: Duration::ZERO,
+            phases: PhaseSeconds::default(),
         };
         if s.gen_len == 0 {
             s.finish();
@@ -387,6 +425,22 @@ impl GenSession {
             if let Some(c) = &mut s.adaptive {
                 c.set_policy_cap(cap);
             }
+        }
+    }
+
+    /// Per-phase batched-op time charged to this session so far (see
+    /// [`PhaseSeconds`]).
+    pub fn phase_seconds(&self) -> PhaseSeconds {
+        match self {
+            GenSession::Spec(s) => s.phases,
+            GenSession::Ar(s) => s.phases,
+        }
+    }
+
+    fn phases_mut(&mut self) -> &mut PhaseSeconds {
+        match self {
+            GenSession::Spec(s) => &mut s.phases,
+            GenSession::Ar(s) => &mut s.phases,
         }
     }
 
@@ -602,9 +656,17 @@ impl<'m> BatchEngine<'m> {
                     GenSession::Ar(s) => s.prompt_len,
                 })
                 .collect();
-            match run_op(crate::faults::FaultSite::StepPrefill, || {
+            let span = crate::trace::span("engine", "prefill", &[("n", idx.len() as f64)]);
+            let t0 = Instant::now();
+            let res = run_op(crate::faults::FaultSite::StepPrefill, || {
                 backend.prefill_batch(&slots, &prompts, &lengths)
-            }) {
+            });
+            drop(span);
+            let dt = t0.elapsed().as_secs_f64();
+            for &i in &idx {
+                sessions[i].phases_mut().prefill_s += dt;
+            }
+            match res {
                 Ok(logits) => {
                     for (&i, row) in idx.iter().zip(&logits) {
                         match &mut *sessions[i] {
@@ -638,9 +700,17 @@ impl<'m> BatchEngine<'m> {
                     pos.push(p);
                 }
             }
-            match run_op(crate::faults::FaultSite::StepDraft, || {
+            let span = crate::trace::span("engine", "draft", &[("n", drafting.len() as f64)]);
+            let t0 = Instant::now();
+            let res = run_op(crate::faults::FaultSite::StepDraft, || {
                 backend.decode_draft_batch(&slots, &tokens, &pos)
-            }) {
+            });
+            drop(span);
+            let dt = t0.elapsed().as_secs_f64();
+            for &i in &drafting {
+                sessions[i].phases_mut().draft_s += dt;
+            }
+            match res {
                 Ok(rows) => {
                     for (&i, row) in drafting.iter().zip(&rows) {
                         if let GenSession::Spec(s) = &mut *sessions[i] {
@@ -674,9 +744,17 @@ impl<'m> BatchEngine<'m> {
                     pos0.push(s.pos0);
                 }
             }
-            match run_op(crate::faults::FaultSite::StepVerify, || {
+            let span = crate::trace::span("engine", "verify", &[("n", verifying.len() as f64)]);
+            let t0 = Instant::now();
+            let res = run_op(crate::faults::FaultSite::StepVerify, || {
                 backend.verify_batch(&slots, &tokens, &pos0)
-            }) {
+            });
+            drop(span);
+            let dt = t0.elapsed().as_secs_f64();
+            for &i in &verifying {
+                sessions[i].phases_mut().verify_s += dt;
+            }
+            match res {
                 Ok(rows) => {
                     for (&i, row) in verifying.iter().zip(&rows) {
                         if let GenSession::Spec(s) = &mut *sessions[i] {
@@ -710,9 +788,19 @@ impl<'m> BatchEngine<'m> {
                     pos.push(s.pos);
                 }
             }
-            match run_op(crate::faults::FaultSite::StepDecode, || {
+            let span = crate::trace::span("engine", "ar_decode", &[("n", decoding.len() as f64)]);
+            let t0 = Instant::now();
+            let res = run_op(crate::faults::FaultSite::StepDecode, || {
                 backend.decode_full_batch(&slots, &tokens, &pos)
-            }) {
+            });
+            drop(span);
+            // AR full-precision decode charges the verify bucket (same
+            // pass kind; AR sessions never draft).
+            let dt = t0.elapsed().as_secs_f64();
+            for &i in &decoding {
+                sessions[i].phases_mut().verify_s += dt;
+            }
+            match res {
                 Ok(rows) => {
                     for (&i, row) in decoding.iter().zip(&rows) {
                         if let GenSession::Ar(s) = &mut *sessions[i] {
@@ -812,6 +900,26 @@ mod tests {
         g.release(&model);
         assert_eq!(model.arena().in_use(), 0);
         assert!(g.into_result().tokens.is_empty());
+    }
+
+    #[test]
+    fn step_report_charges_phase_time_to_participants() {
+        let model = NativeBackend::synthetic(tiny_cfg(), 6, 13, InitStyle::Confident).unwrap();
+        let cfg = SpecConfig { gen_len: 16, max_draft: 4, ..Default::default() };
+        let engine = BatchEngine::new(&model);
+        let mut sessions =
+            vec![GenSession::Spec(SpecSession::new(&model, b"phase time", cfg).unwrap())];
+        while !sessions[0].is_done() {
+            let mut refs: Vec<&mut GenSession> = sessions.iter_mut().collect();
+            engine.step(&mut refs).unwrap();
+        }
+        let p = sessions[0].phase_seconds();
+        assert!(
+            p.prefill_s > 0.0 && p.draft_s > 0.0 && p.verify_s > 0.0,
+            "every phase ran at least once: {p:?}"
+        );
+        assert!(p.total() < 60.0, "attribution must be wall time, not a counter: {p:?}");
+        sessions.pop().unwrap().release(&model);
     }
 
     #[test]

@@ -122,13 +122,19 @@ impl<'m> Engine<'m> {
             return Ok(GenResult { tokens: vec![], trace, wall: t0.elapsed() });
         }
         let mut rng = Rng::seed_from_u64(sampling.seed);
-        let pre = self.backend.prefill(&toks, plen)?;
+        let pre = {
+            let _span = crate::trace::span("engine", "prefill", &[("n", 1.0)]);
+            self.backend.prefill(&toks, plen)?
+        };
         let mut state = pre.state;
         let (mut tok, _) = sample_from_logits(&pre.logits, &sampling, &mut rng);
         let mut out = vec![tok as u8];
         let mut pos = plen;
         while out.len() < gen_len {
-            let step = self.backend.decode_full(tok as i32, pos, state)?;
+            let step = {
+                let _span = crate::trace::span("engine", "ar_decode", &[("n", 1.0)]);
+                self.backend.decode_full(tok as i32, pos, state)?
+            };
             state = step.state;
             let (t, _) = sample_from_logits(&step.logits, &sampling, &mut rng);
             tok = t;
@@ -167,7 +173,10 @@ impl<'m> Engine<'m> {
         let mut ctrl =
             if cfg.adaptive.enabled { Some(AdaptiveController::new(cfg.adaptive)) } else { None };
 
-        let pre = self.backend.prefill(&toks, plen)?;
+        let pre = {
+            let _span = crate::trace::span("engine", "prefill", &[("n", 1.0)]);
+            self.backend.prefill(&toks, plen)?
+        };
         let mut state = pre.state;
         // The carry token: sampled from the target's prefill logits, not yet
         // fed through the model.
@@ -186,6 +195,7 @@ impl<'m> Engine<'m> {
             let mut draft_probs: Vec<Vec<f32>> = Vec::with_capacity(budget);
             let mut early_exit = false;
             let mut tok = carry;
+            let draft_span = crate::trace::span("engine", "draft", &[("n", 1.0)]);
             for i in 0..budget {
                 let step = self.backend.decode_draft(tok as i32, pos0 + i, state)?;
                 state = step.state;
@@ -217,6 +227,7 @@ impl<'m> Engine<'m> {
                     break;
                 }
             }
+            drop(draft_span);
 
             // ---- verification (one parallel full-precision pass) ----
             let mut vtokens: Vec<i32> = Vec::with_capacity(slots);
@@ -225,7 +236,10 @@ impl<'m> Engine<'m> {
             while vtokens.len() < slots {
                 vtokens.push(0);
             }
-            let ver = self.backend.verify(&vtokens, pos0, state)?;
+            let ver = {
+                let _span = crate::trace::span("engine", "verify", &[("n", 1.0)]);
+                self.backend.verify(&vtokens, pos0, state)?
+            };
             state = ver.state;
 
             let outcome = if cfg.sampling.is_greedy() {
@@ -249,6 +263,15 @@ impl<'m> Engine<'m> {
                 accepted: outcome.accepted as u32,
                 early_exit,
             });
+            crate::trace::instant(
+                "spec",
+                "iter",
+                &[
+                    ("drafted", drafts.len() as f64),
+                    ("accepted", outcome.accepted as f64),
+                    ("early_exit", if early_exit { 1.0 } else { 0.0 }),
+                ],
+            );
             if let Some(c) = &mut ctrl {
                 c.observe(drafts.len(), outcome.accepted);
             }

@@ -40,7 +40,9 @@ pub use adaptive::{
     AdaptiveConfig, AdaptiveController, BatchSpecPolicy, CostRatios, FALLBACK_TD_RATIO,
     FALLBACK_TV_RATIO,
 };
-pub use batch::{ArSession, BatchEngine, GenSession, SpecSession, StepFailure, StepReport};
+pub use batch::{
+    ArSession, BatchEngine, GenSession, PhaseSeconds, SpecSession, StepFailure, StepReport,
+};
 pub use engine::{Engine, GenResult, SpecConfig};
 pub use theory::{expected_accept_length, theoretical_speedup, MIN_COST_RATIO};
 pub use trace::{IterRecord, SpecTrace};

@@ -1,0 +1,139 @@
+//! Chrome trace-event JSON export (the `{"traceEvents":[...]}` object
+//! format, loadable in Perfetto and chrome://tracing).
+//!
+//! Rendering is hand-rolled string building: every name/category is a
+//! static ASCII identifier and every arg value a sanitized finite number
+//! (or static string), so no escaping is required — but the output is
+//! still strict JSON, asserted by parsing it back through
+//! [`crate::util::json`] in the roundtrip tests.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use super::{snapshot_events, ArgVal, Event};
+
+/// Render the newest `last` recorded events as a Chrome trace JSON
+/// document.
+pub fn export_json(last: usize) -> String {
+    render(&snapshot_events(last))
+}
+
+/// Export the newest `last` events to `path` (the `--trace-out` sink).
+pub fn write_file(path: &Path, last: usize) -> std::io::Result<()> {
+    std::fs::write(path, export_json(last))
+}
+
+fn push_num(out: &mut String, v: f64) {
+    // Finite by construction (args are sanitized at record time); render
+    // integral values without a fraction, like `util::json::write`.
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        let _ = write!(out, "{}", v as i64);
+    } else {
+        let _ = write!(out, "{v}");
+    }
+}
+
+/// Render an explicit event list (exporter + tests).
+pub fn render(events: &[Event]) -> String {
+    let mut out = String::with_capacity(events.len() * 96 + 32);
+    out.push_str("{\"traceEvents\":[");
+    for (i, ev) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"{}\",\"ts\":{},\"pid\":1,\"tid\":{}",
+            ev.name, ev.cat, ev.ph as char, ev.ts_us, ev.tid
+        );
+        if ev.ph == b'X' {
+            let _ = write!(out, ",\"dur\":{}", ev.dur_us);
+        }
+        if ev.ph == b'i' {
+            // Thread-scoped instants.
+            out.push_str(",\"s\":\"t\"");
+        }
+        if matches!(ev.ph, b'b' | b'n' | b'e') {
+            let _ = write!(out, ",\"id\":\"{}\"", ev.id);
+        }
+        if !ev.args.is_empty() {
+            out.push_str(",\"args\":{");
+            for (j, (k, v)) in ev.args.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "\"{k}\":");
+                match v {
+                    ArgVal::Num(n) => push_num(&mut out, *n),
+                    ArgVal::Str(s) => {
+                        let _ = write!(out, "\"{s}\"");
+                    }
+                }
+            }
+            out.push('}');
+        }
+        out.push('}');
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn ev(ph: u8, name: &'static str, ts: u64) -> Event {
+        Event {
+            ts_us: ts,
+            dur_us: if ph == b'X' { 7 } else { 0 },
+            ph,
+            name,
+            cat: "engine",
+            tid: 3,
+            id: if matches!(ph, b'b' | b'n' | b'e') { 11 } else { 0 },
+            args: vec![("n", ArgVal::Num(4.0))],
+        }
+    }
+
+    #[test]
+    fn rendered_trace_parses_back_as_strict_json() {
+        let events = vec![
+            ev(b'B', "prefill", 10),
+            ev(b'i', "iter", 12),
+            ev(b'E', "prefill", 20),
+            ev(b'X', "step", 10),
+            ev(b'b', "request", 5),
+            ev(b'e', "request", 30),
+        ];
+        let text = render(&events);
+        let v = json::parse(&text).expect("exporter must emit strict JSON");
+        let arr = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 6);
+        let first = &arr[0];
+        assert_eq!(first.get("name").unwrap().as_str(), Some("prefill"));
+        assert_eq!(first.get("ph").unwrap().as_str(), Some("B"));
+        assert_eq!(first.get("ts").unwrap().as_f64(), Some(10.0));
+        assert_eq!(first.get("tid").unwrap().as_f64(), Some(3.0));
+        assert_eq!(first.get("args").unwrap().get("n").unwrap().as_f64(), Some(4.0));
+        // X carries dur; instants carry scope; async events carry id.
+        assert_eq!(arr[3].get("dur").unwrap().as_f64(), Some(7.0));
+        assert_eq!(arr[1].get("s").unwrap().as_str(), Some("t"));
+        assert_eq!(arr[4].get("id").unwrap().as_str(), Some("11"));
+    }
+
+    #[test]
+    fn empty_trace_is_a_valid_document() {
+        let v = json::parse(&render(&[])).unwrap();
+        assert_eq!(v.get("traceEvents").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn string_args_render_quoted() {
+        let mut e = ev(b'e', "request", 9);
+        e.args.push(("outcome", ArgVal::Str("done")));
+        let v = json::parse(&render(&[e])).unwrap();
+        let first = &v.get("traceEvents").unwrap().as_arr().unwrap()[0];
+        assert_eq!(first.get("args").unwrap().get("outcome").unwrap().as_str(), Some("done"));
+    }
+}

@@ -1,0 +1,443 @@
+//! Structured engine tracing: per-request spans and per-step phase events
+//! with monotonic timestamps, recorded into fixed-capacity per-thread ring
+//! buffers and exported as Chrome trace-event JSON (Perfetto-loadable).
+//!
+//! The subsystem is always compiled and follows the `faults` discipline:
+//! disarmed, every probe is a single relaxed atomic load
+//! ([`armed`]) and nothing else runs — no clock reads, no allocation, no
+//! locks — so the decode hot path pays one predictable branch.  Armed, an
+//! event costs one `Instant` read plus an uncontended per-thread mutex
+//! push (the mutex exists only so the exporter can snapshot rings owned
+//! by other threads).  Recording never touches RNG state or logits, so
+//! token streams are bit-identical armed or disarmed (pinned by
+//! `rust/tests/tracing.rs`).
+//!
+//! Event vocabulary (all timestamps µs since the process trace origin):
+//!
+//! * **Request spans** (`cat: "req"`, async `ph: b/n/e`, keyed by request
+//!   id): `b` at enqueue, an `n` "admit" instant at batch admission, `e`
+//!   at the terminal event with an `outcome` arg
+//!   (`done`/`cancelled`/`failed`/`quarantined`) and, for completions,
+//!   the per-phase latency attribution in seconds.
+//! * **Engine phase spans** (`cat: "engine"`, thread-scoped `ph: B/E`):
+//!   one span per batched op — `prefill`, `draft` (per sub-step),
+//!   `verify`, `ar_decode` — with the participating batch size in `args`.
+//! * **Scheduler steps** (`cat: "sched"`, `ph: X`): one complete event
+//!   per scheduler loop iteration carrying batch occupancy, drafted /
+//!   accepted token counts, weight-byte deltas (from `TrafficCounters`)
+//!   and KV page gauges.
+//! * **Speculation iterations** (`cat: "spec"`, `ph: i` instants named
+//!   `iter`): drafted / accepted / early-exit per draft→verify round —
+//!   the accept histogram consumed by `--exp accel-replay`.
+//!
+//! Ring truncation is inherent (fixed capacity, oldest events drop), so
+//! consumers treat an unmatched `E` at the start of a window as a span
+//! opened before the capture; `scripts/check_trace.py` encodes exactly
+//! that tolerance.
+
+mod export;
+
+pub use export::{export_json, write_file};
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Events retained per thread; the oldest are overwritten once full.  At
+/// ~10 events per engine step this holds several thousand steps — enough
+/// for a loadgen run — in a few MiB per recording thread.
+pub const RING_CAPACITY: usize = 32_768;
+
+/// Single process-wide arm bit.  Relaxed is sufficient: arming is a mode
+/// switch, not a synchronization edge, and a racing probe on another core
+/// merely records (or skips) one event at the boundary.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Registry of every thread's ring, for the exporter.  Rings are never
+/// removed: a dead thread's tail stays exportable (cheap — capacity is
+/// bounded) and tids are never reused.
+static REGISTRY: Mutex<Vec<Arc<Mutex<VecDeque<Event>>>>> = Mutex::new(Vec::new());
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// Trace origin: first clock read after process start (or first probe).
+static ORIGIN: OnceLock<Instant> = OnceLock::new();
+
+thread_local! {
+    static LOCAL: RefCell<Option<(u64, Arc<Mutex<VecDeque<Event>>>)>> =
+        const { RefCell::new(None) };
+}
+
+/// One event argument value (trace args are flat key→scalar maps).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArgVal {
+    Num(f64),
+    Str(&'static str),
+}
+
+/// One recorded trace event (Chrome trace-event semantics; see the
+/// module docs for the vocabulary).
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Microseconds since the process trace origin.
+    pub ts_us: u64,
+    /// Duration in µs (complete `X` events only; 0 otherwise).
+    pub dur_us: u64,
+    /// Chrome phase byte: `B`/`E` (thread span), `X` (complete),
+    /// `i` (instant), `b`/`n`/`e` (async span, keyed by `(cat, id)`).
+    pub ph: u8,
+    pub name: &'static str,
+    pub cat: &'static str,
+    /// Recording thread (dense ids assigned at first record).
+    pub tid: u64,
+    /// Async span key (request id); 0 for thread-scoped events.
+    pub id: u64,
+    pub args: Vec<(&'static str, ArgVal)>,
+}
+
+/// Is tracing armed?  The only cost a disarmed probe pays.
+#[inline]
+pub fn armed() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Arm recording process-wide.
+pub fn arm() {
+    ORIGIN.get_or_init(Instant::now);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm recording (already-recorded events stay exportable).
+pub fn disarm() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Drop every recorded event (rings stay registered).
+pub fn clear() {
+    let rings = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    for ring in rings.iter() {
+        ring.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    }
+}
+
+/// Arm from the environment: `SPEQ_TRACE=1` (any non-empty value other
+/// than `0`) turns recording on at startup.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("SPEQ_TRACE") {
+        if !v.is_empty() && v != "0" {
+            arm();
+        }
+    }
+}
+
+/// Microseconds since the trace origin (monotonic).
+pub fn now_us() -> u64 {
+    ORIGIN.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// Record one event into the calling thread's ring.  Callers gate on
+/// [`armed`] first; this does the ring bookkeeping unconditionally.
+fn record(mut ev: Event) {
+    LOCAL.with(|l| {
+        let mut slot = l.borrow_mut();
+        if slot.is_none() {
+            let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            let ring = Arc::new(Mutex::new(VecDeque::with_capacity(RING_CAPACITY)));
+            REGISTRY.lock().unwrap_or_else(|e| e.into_inner()).push(Arc::clone(&ring));
+            *slot = Some((tid, ring));
+        }
+        let (tid, ring) = slot.as_ref().expect("local ring just installed");
+        ev.tid = *tid;
+        let mut ring = ring.lock().unwrap_or_else(|e| e.into_inner());
+        if ring.len() >= RING_CAPACITY {
+            ring.pop_front();
+        }
+        ring.push_back(ev);
+    });
+}
+
+fn num_args(args: &[(&'static str, f64)]) -> Vec<(&'static str, ArgVal)> {
+    args.iter().map(|&(k, v)| (k, ArgVal::Num(if v.is_finite() { v } else { 0.0 }))).collect()
+}
+
+/// Thread-scoped span: emits `B` now and `E` when dropped.  Inert when
+/// recording was disarmed at construction; if disarming races the span,
+/// the `E` is still emitted so recorded rings stay balanced.
+pub struct SpanGuard {
+    live: bool,
+    cat: &'static str,
+    name: &'static str,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.live {
+            record(Event {
+                ts_us: now_us(),
+                dur_us: 0,
+                ph: b'E',
+                name: self.name,
+                cat: self.cat,
+                tid: 0,
+                id: 0,
+                args: Vec::new(),
+            });
+        }
+    }
+}
+
+/// Open a thread-scoped `B`/`E` span (see [`SpanGuard`]).
+pub fn span(cat: &'static str, name: &'static str, args: &[(&'static str, f64)]) -> SpanGuard {
+    if !armed() {
+        return SpanGuard { live: false, cat, name };
+    }
+    record(Event {
+        ts_us: now_us(),
+        dur_us: 0,
+        ph: b'B',
+        name,
+        cat,
+        tid: 0,
+        id: 0,
+        args: num_args(args),
+    });
+    SpanGuard { live: true, cat, name }
+}
+
+/// Thread-scoped instant event (`ph: i`).
+pub fn instant(cat: &'static str, name: &'static str, args: &[(&'static str, f64)]) {
+    if !armed() {
+        return;
+    }
+    record(Event {
+        ts_us: now_us(),
+        dur_us: 0,
+        ph: b'i',
+        name,
+        cat,
+        tid: 0,
+        id: 0,
+        args: num_args(args),
+    });
+}
+
+/// Complete event (`ph: X`) for a window that started at `start_us`
+/// (from [`now_us`]).
+pub fn complete(
+    cat: &'static str,
+    name: &'static str,
+    start_us: u64,
+    args: &[(&'static str, f64)],
+) {
+    if !armed() {
+        return;
+    }
+    let end = now_us();
+    record(Event {
+        ts_us: start_us,
+        dur_us: end.saturating_sub(start_us),
+        ph: b'X',
+        name,
+        cat,
+        tid: 0,
+        id: 0,
+        args: num_args(args),
+    });
+}
+
+/// Async request-span begin (`ph: b`, `cat: "req"`), keyed by request id.
+pub fn request_begin(id: u64, args: &[(&'static str, f64)]) {
+    if !armed() {
+        return;
+    }
+    record(Event {
+        ts_us: now_us(),
+        dur_us: 0,
+        ph: b'b',
+        name: "request",
+        cat: "req",
+        tid: 0,
+        id,
+        args: num_args(args),
+    });
+}
+
+/// Async instant inside a request span (`ph: n`), e.g. `admit`.
+pub fn request_instant(id: u64, name: &'static str) {
+    if !armed() {
+        return;
+    }
+    record(Event {
+        ts_us: now_us(),
+        dur_us: 0,
+        ph: b'n',
+        name,
+        cat: "req",
+        tid: 0,
+        id,
+        args: Vec::new(),
+    });
+}
+
+/// Async request-span end (`ph: e`) with a terminal `outcome` arg.
+pub fn request_end(id: u64, outcome: &'static str, args: &[(&'static str, f64)]) {
+    if !armed() {
+        return;
+    }
+    let mut a = num_args(args);
+    a.push(("outcome", ArgVal::Str(outcome)));
+    record(Event {
+        ts_us: now_us(),
+        dur_us: 0,
+        ph: b'e',
+        name: "request",
+        cat: "req",
+        tid: 0,
+        id,
+        args: a,
+    });
+}
+
+/// Snapshot the newest `last` events across every thread's ring, in
+/// timestamp order (stable: same-thread recording order is preserved for
+/// equal timestamps).
+pub fn snapshot_events(last: usize) -> Vec<Event> {
+    let rings: Vec<Arc<Mutex<VecDeque<Event>>>> =
+        REGISTRY.lock().unwrap_or_else(|e| e.into_inner()).clone();
+    let mut events = Vec::new();
+    for ring in rings {
+        let ring = ring.lock().unwrap_or_else(|e| e.into_inner());
+        events.extend(ring.iter().cloned());
+    }
+    events.sort_by_key(|e| e.ts_us);
+    if events.len() > last {
+        events.drain(..events.len() - last);
+    }
+    events
+}
+
+/// Serializes tests (and benches) that arm the process-wide recorder, the
+/// same way `faults::test_guard` serializes fault plans.
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// Exclusive tracing session for tests: clears and disarms on acquire
+/// and again on drop, so state never leaks across test fns.
+pub struct TestGuard {
+    _guard: MutexGuard<'static, ()>,
+}
+
+impl Drop for TestGuard {
+    fn drop(&mut self) {
+        disarm();
+        clear();
+    }
+}
+
+pub fn test_guard() -> TestGuard {
+    let guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    disarm();
+    clear();
+    TestGuard { _guard: guard }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_probes_record_nothing() {
+        let _g = test_guard();
+        instant("test", "nothing", &[("x", 1.0)]);
+        let _span = span("test", "quiet", &[]);
+        drop(_span);
+        assert!(!armed());
+        let evs = snapshot_events(usize::MAX);
+        assert!(
+            evs.iter().all(|e| e.cat != "test"),
+            "disarmed probes must not record"
+        );
+    }
+
+    #[test]
+    fn spans_balance_and_instants_carry_args() {
+        let _g = test_guard();
+        arm();
+        {
+            let _s = span("test", "outer", &[("n", 2.0)]);
+            instant("test", "tick", &[("v", 7.0)]);
+        }
+        disarm();
+        let evs: Vec<Event> =
+            snapshot_events(usize::MAX).into_iter().filter(|e| e.cat == "test").collect();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].ph, b'B');
+        assert_eq!(evs[1].ph, b'i');
+        assert_eq!(evs[2].ph, b'E');
+        assert!(evs[0].ts_us <= evs[1].ts_us && evs[1].ts_us <= evs[2].ts_us);
+        assert_eq!(evs[1].args, vec![("v", ArgVal::Num(7.0))]);
+        // All from this thread, so one tid.
+        assert!(evs.iter().all(|e| e.tid == evs[0].tid));
+    }
+
+    #[test]
+    fn request_span_lifecycle_records_outcome() {
+        let _g = test_guard();
+        // An id no concurrently-running serving test will collide with
+        // (arming is process-wide; other threads may record too).
+        const ID: u64 = 987_654_321;
+        arm();
+        request_begin(ID, &[("prompt_len", 8.0)]);
+        request_instant(ID, "admit");
+        request_end(ID, "done", &[("latency_s", 0.5)]);
+        disarm();
+        let evs: Vec<Event> =
+            snapshot_events(usize::MAX).into_iter().filter(|e| e.id == ID).collect();
+        assert_eq!(evs.len(), 3);
+        assert_eq!((evs[0].ph, evs[1].ph, evs[2].ph), (b'b', b'n', b'e'));
+        assert!(evs[2].args.contains(&("outcome", ArgVal::Str("done"))));
+    }
+
+    #[test]
+    fn ring_drops_oldest_at_capacity() {
+        let _g = test_guard();
+        arm();
+        for _ in 0..RING_CAPACITY + 10 {
+            instant("test", "fill", &[]);
+        }
+        disarm();
+        let evs = snapshot_events(usize::MAX);
+        let mine = evs.iter().filter(|e| e.cat == "test").count();
+        assert!(mine <= RING_CAPACITY);
+        assert!(mine >= RING_CAPACITY - 16, "ring should retain the newest events");
+    }
+
+    #[test]
+    fn non_finite_args_are_sanitized() {
+        let _g = test_guard();
+        arm();
+        instant("test", "nan", &[("v", f64::NAN), ("w", f64::INFINITY)]);
+        disarm();
+        let evs: Vec<Event> =
+            snapshot_events(usize::MAX).into_iter().filter(|e| e.name == "nan").collect();
+        assert_eq!(evs[0].args, vec![("v", ArgVal::Num(0.0)), ("w", ArgVal::Num(0.0))]);
+    }
+
+    #[test]
+    fn snapshot_last_n_keeps_the_newest() {
+        let _g = test_guard();
+        arm();
+        for _ in 0..8 {
+            instant("test", "old", &[]);
+        }
+        instant("test", "new", &[]);
+        disarm();
+        // The cap bounds the window size (other test threads may have
+        // recorded too, so assert on size and on our own newest event).
+        assert!(snapshot_events(3).len() <= 3);
+        let mine: Vec<Event> =
+            snapshot_events(usize::MAX).into_iter().filter(|e| e.cat == "test").collect();
+        assert_eq!(mine.last().expect("recorded events").name, "new");
+    }
+}

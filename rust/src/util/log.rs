@@ -1,0 +1,172 @@
+//! Minimal leveled stderr diagnostics for the serving stack.
+//!
+//! The crate's scattered `eprintln!` warnings (pjrt fallback, SIMD tier
+//! resolution, workload skips) route through one sink so serving logs are
+//! grep-able: every line carries an epoch timestamp, a level, and a
+//! target prefix —
+//!
+//! ```text
+//! [1754640000.123 WARN speq::bsfp::simd] SIMD level Avx2 unavailable ...
+//! ```
+//!
+//! The threshold comes from `SPEQ_LOG={error,warn,info,debug}` (default
+//! `warn`), read once on first use; [`set_level`] overrides it for tests.
+//! Disabled levels cost one relaxed atomic load at the macro call site.
+//!
+//! Use via the crate-root macros: `log_error!`, `log_warn!`, `log_info!`,
+//! `log_debug!`, each taking a target followed by `format!` arguments.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Log severity, ordered: a message is emitted when its level is at or
+/// below the configured threshold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+        }
+    }
+}
+
+/// Unset sentinel: resolved from `SPEQ_LOG` on first probe.
+const UNSET: usize = usize::MAX;
+
+static LEVEL: AtomicUsize = AtomicUsize::new(UNSET);
+
+fn from_env() -> usize {
+    match std::env::var("SPEQ_LOG").ok().as_deref() {
+        Some("error") => Level::Error as usize,
+        Some("warn") => Level::Warn as usize,
+        Some("info") => Level::Info as usize,
+        Some("debug") => Level::Debug as usize,
+        // Unknown values fall back to the default rather than erroring:
+        // logging must never take the process down.
+        _ => Level::Warn as usize,
+    }
+}
+
+/// Current threshold (lazily resolved from the environment).
+pub fn threshold() -> usize {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != UNSET {
+        return l;
+    }
+    let resolved = from_env();
+    LEVEL.store(resolved, Ordering::Relaxed);
+    resolved
+}
+
+/// Override the threshold (tests; wins over `SPEQ_LOG`).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as usize, Ordering::Relaxed);
+}
+
+/// Is `level` currently emitted?
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    (level as usize) <= threshold()
+}
+
+/// Format one log line (separated from [`emit`] so tests can assert on
+/// the exact shape without capturing stderr).
+pub fn format_line(level: Level, target: &str, msg: std::fmt::Arguments<'_>) -> String {
+    let now = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+    format!(
+        "[{}.{:03} {} {}] {}",
+        now.as_secs(),
+        now.subsec_millis(),
+        level.name(),
+        target,
+        msg
+    )
+}
+
+/// Write one line to stderr.  Called by the macros after their level
+/// check; callable directly for pre-formatted messages.
+pub fn emit(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    eprintln!("{}", format_line(level, target, msg));
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Error) {
+            $crate::util::log::emit($crate::util::log::Level::Error, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Warn) {
+            $crate::util::log::emit($crate::util::log::Level::Warn, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Info) {
+            $crate::util::log::emit($crate::util::log::Level::Info, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Debug) {
+            $crate::util::log::emit($crate::util::log::Level::Debug, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_shape_has_timestamp_level_and_target() {
+        let line = format_line(Level::Warn, "speq::test", format_args!("x = {}", 7));
+        // "[<secs>.<millis> WARN speq::test] x = 7"
+        assert!(line.starts_with('['), "{line}");
+        assert!(line.contains(" WARN speq::test] x = 7"), "{line}");
+        let ts = line[1..].split(' ').next().unwrap();
+        let (secs, millis) = ts.split_once('.').expect("secs.millis");
+        assert!(secs.chars().all(|c| c.is_ascii_digit()));
+        assert_eq!(millis.len(), 3);
+    }
+
+    #[test]
+    fn threshold_gates_levels_and_macros_expand() {
+        // One test fn: the threshold is process-global, so splitting the
+        // set_level assertions across parallel test fns would race.
+        set_level(Level::Info);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Error);
+        assert!(!enabled(Level::Warn));
+        // Macro smoke: the expansions type-check and run (stderr only).
+        crate::log_error!("speq::test", "e {}", 1);
+        crate::log_warn!("speq::test", "w");
+        crate::log_info!("speq::test", "i");
+        crate::log_debug!("speq::test", "d");
+        set_level(Level::Warn);
+    }
+}

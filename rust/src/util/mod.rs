@@ -14,10 +14,13 @@
 //!   run with `harness = false`).
 //! * [`prop`] — a tiny property-testing driver (randomized invariant checks
 //!   with seed reporting on failure).
+//! * [`log`] — leveled stderr diagnostics (`SPEQ_LOG`, timestamps, target
+//!   prefixes) behind the crate-root `log_warn!`-family macros.
 
 pub mod bench;
 pub mod cli;
 pub mod f16;
 pub mod json;
+pub mod log;
 pub mod prop;
 pub mod rng;

@@ -131,7 +131,7 @@ mod tests {
     #[test]
     fn loads_all_three_tasks() {
         let Some(m) = manifest() else {
-            eprintln!("skipping (no artifacts)");
+            crate::log_info!("speq::workload::tasks", "skipping (no artifacts)");
             return;
         };
         for t in task_names() {
@@ -147,7 +147,7 @@ mod tests {
     #[test]
     fn paper_analog_mapping() {
         let Some(m) = manifest() else {
-            eprintln!("skipping (no artifacts)");
+            crate::log_info!("speq::workload::tasks", "skipping (no artifacts)");
             return;
         };
         assert_eq!(load_task(&m, "math").unwrap().paper_analog, "GSM8K");
@@ -173,7 +173,7 @@ mod tests {
     #[test]
     fn heldout_windows_are_disjoint_and_sized() {
         let Some(m) = manifest() else {
-            eprintln!("skipping (no artifacts)");
+            crate::log_info!("speq::workload::tasks", "skipping (no artifacts)");
             return;
         };
         let w = heldout_windows(&m, 256, 8).unwrap();

@@ -1,0 +1,250 @@
+//! Integration: structured engine tracing — recording must never change
+//! output bits, the Chrome trace export must be strict JSON with balanced
+//! spans and a lossless speculation histogram, the coordinator must emit
+//! a complete request lifecycle whose phase attribution sums to the
+//! measured latency, and `/debug/trace` must serve it all over HTTP.
+//!
+//! Every test takes `trace::test_guard()` — arming is process-global, so
+//! tests that record (or assert disarmed behavior) serialize.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use speq::coordinator::{Mode, Priority, Server, ServerConfig, SubmitParams};
+use speq::model::SamplingParams;
+use speq::net::loadgen::PROMPTS;
+use speq::net::{GenerateRequest, NetConfig, NetServer};
+use speq::runtime::{load_backend_with, ModelSource, NativeConfig};
+use speq::specdec::{Engine, SpecConfig};
+use speq::trace;
+use speq::util::json::{self, Value};
+
+const MODEL: &str = "vicuna-7b-tiny";
+const PROMPT: &[u8] = b"Q: ada has 3 apples and finds 4 more. how many apples now?\nA: ";
+
+fn spec_tokens(threads: usize, gen_len: usize) -> Vec<u8> {
+    let native = NativeConfig::with_threads(threads);
+    let backend = load_backend_with(&ModelSource::Builtin, MODEL, &native).expect("backend");
+    let engine = Engine::new(backend.as_ref());
+    let cfg = SpecConfig { gen_len, ..Default::default() };
+    engine.generate_spec(PROMPT, &cfg).expect("generation").tokens
+}
+
+/// Recording is pure observation: token streams are bit-identical armed
+/// vs disarmed, at every worker-pool width.
+#[test]
+fn token_streams_bit_identical_armed_vs_disarmed() {
+    let _g = trace::test_guard();
+    for threads in [1usize, 4] {
+        let disarmed = spec_tokens(threads, 48);
+        trace::arm();
+        let armed = spec_tokens(threads, 48);
+        trace::disarm();
+        trace::clear();
+        assert_eq!(
+            armed, disarmed,
+            "tracing changed output bits at {threads} thread(s)"
+        );
+        assert!(!disarmed.is_empty(), "generation produced no tokens");
+    }
+}
+
+/// Walk exported events: per-tid `B`/`E` spans must balance LIFO (strict
+/// — the test cleared the rings, so no truncation excuse applies) and
+/// timestamps must be non-decreasing per thread.
+fn assert_spans_balanced(events: &[Value]) {
+    let mut stacks: std::collections::BTreeMap<u64, Vec<&str>> = Default::default();
+    let mut last_ts: std::collections::BTreeMap<u64, f64> = Default::default();
+    for ev in events {
+        let ph = ev.get("ph").and_then(Value::as_str).expect("ph");
+        let tid = ev.get("tid").and_then(Value::as_f64).expect("tid") as u64;
+        let name = ev.get("name").and_then(Value::as_str).expect("name");
+        let ts = ev.get("ts").and_then(Value::as_f64).expect("ts");
+        let prev = last_ts.entry(tid).or_insert(0.0);
+        assert!(ts >= *prev, "timestamps regressed on tid {tid}: {ts} < {prev}");
+        *prev = ts;
+        match ph {
+            "B" => stacks.entry(tid).or_default().push(name),
+            "E" => {
+                let top = stacks.get_mut(&tid).and_then(Vec::pop);
+                assert_eq!(top, Some(name), "E {name:?} without matching B on tid {tid}");
+            }
+            _ => {}
+        }
+    }
+    for (tid, stack) in stacks {
+        assert!(stack.is_empty(), "unclosed spans on tid {tid}: {stack:?}");
+    }
+}
+
+/// The export is strict JSON, spans balance, and the `spec`/`iter`
+/// instants rebuild the engine's own `SpecTrace` exactly.
+#[test]
+fn exported_trace_is_strict_json_and_round_trips_the_spec_histogram() {
+    let _g = trace::test_guard();
+    trace::arm();
+    let backend = load_backend_with(&ModelSource::Builtin, MODEL, &NativeConfig::default())
+        .expect("backend");
+    let engine = Engine::new(backend.as_ref());
+    let cfg = SpecConfig { gen_len: 48, ..Default::default() };
+    let out = engine.generate_spec(PROMPT, &cfg).expect("generation");
+    trace::disarm();
+
+    let text = trace::export_json(usize::MAX);
+    let doc = json::parse(&text).expect("export must be strict JSON");
+    let events = doc.get("traceEvents").and_then(Value::as_arr).expect("traceEvents");
+    assert!(!events.is_empty(), "armed generation recorded nothing");
+    assert_spans_balanced(events);
+    for cat in ["engine", "spec"] {
+        assert!(
+            events.iter().any(|e| e.get("cat").and_then(Value::as_str) == Some(cat)),
+            "no {cat:?} events in the export"
+        );
+    }
+
+    let rebuilt = speq::report::spec_trace_from_chrome_json(&text).expect("rebuild");
+    assert_eq!(rebuilt.iterations, out.trace.iterations, "spec histogram must survive export");
+    assert_eq!(rebuilt.produced, out.trace.produced);
+}
+
+/// The coordinator emits the full request lifecycle (`b` → `n admit` →
+/// `e outcome=done`) and the per-phase attribution on the response sums
+/// to the measured latency (the ±5% acceptance gate; by construction it
+/// is exact up to float rounding).
+#[test]
+fn coordinator_emits_request_lifecycle_and_phase_sum_matches_latency() {
+    let _g = trace::test_guard();
+    trace::arm();
+    let server = Server::start(ServerConfig {
+        source: ModelSource::Builtin,
+        model: MODEL.into(),
+        workers: 1,
+        max_batch: 4,
+        ..ServerConfig::default()
+    })
+    .expect("coordinator");
+    let (id, stream) = server
+        .submit(
+            PROMPT,
+            SubmitParams {
+                gen_len: 32,
+                mode: Mode::Speculative,
+                priority: Priority::Interactive,
+                sampling: SamplingParams::greedy(),
+                ..Default::default()
+            },
+        )
+        .expect("submit");
+    let body = stream.wait().expect("completion");
+    server.shutdown();
+    trace::disarm();
+
+    let phase_sum = body.phases.total_s();
+    assert!(body.latency_s > 0.0);
+    assert!(
+        (phase_sum - body.latency_s).abs() <= 0.05 * body.latency_s,
+        "phase buckets sum to {phase_sum:.6}s but latency is {:.6}s",
+        body.latency_s
+    );
+
+    let events = trace::snapshot_events(usize::MAX);
+    let req: Vec<_> = events.iter().filter(|e| e.cat == "req" && e.id == id).collect();
+    let phases: Vec<u8> = req.iter().map(|e| e.ph).collect();
+    assert_eq!(phases, vec![b'b', b'n', b'e'], "lifecycle for request {id}: {req:?}");
+    assert_eq!(req[1].name, "admit");
+    assert!(
+        req[2].args.contains(&("outcome", trace::ArgVal::Str("done"))),
+        "terminal event must carry the outcome: {:?}",
+        req[2].args
+    );
+    assert!(
+        req[2].args.iter().any(|&(k, _)| k == "queue_wait_ms"),
+        "done event must carry the phase attribution: {:?}",
+        req[2].args
+    );
+    // One scheduler step per engine loop iteration.
+    assert!(
+        events.iter().any(|e| e.cat == "sched" && e.name == "step" && e.ph == b'X'),
+        "no scheduler step events recorded"
+    );
+}
+
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.write_all(format!("GET {path} HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n").as_bytes())
+        .expect("send");
+    let mut out = Vec::new();
+    let _ = s.read_to_end(&mut out);
+    let text = String::from_utf8_lossy(&out).into_owned();
+    let status = text.split_whitespace().nth(1).and_then(|v| v.parse().ok()).unwrap_or(0);
+    (status, text)
+}
+
+fn body_of(text: &str) -> &str {
+    &text[text.find("\r\n\r\n").expect("header/body split") + 4..]
+}
+
+/// `GET /debug/trace` serves the live ring as Perfetto-loadable JSON;
+/// `?last=N` bounds the window; non-GET methods are rejected.
+#[test]
+fn debug_trace_endpoint_serves_the_recording() {
+    let _g = trace::test_guard();
+    trace::arm();
+    let mut server = NetServer::bind(NetConfig {
+        addr: "127.0.0.1:0".to_string(),
+        server: ServerConfig {
+            source: ModelSource::Builtin,
+            model: MODEL.into(),
+            workers: 1,
+            max_batch: 4,
+            queue_capacity: 8,
+            ..ServerConfig::default()
+        },
+        ..NetConfig::default()
+    })
+    .expect("bind");
+    let req = GenerateRequest {
+        prompt: PROMPTS[0].as_bytes().to_vec(),
+        gen_len: 16,
+        ..GenerateRequest::default()
+    };
+    let post = format!(
+        "POST /v1/generate HTTP/1.1\r\nhost: t\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{}",
+        req.to_json().len(),
+        req.to_json()
+    );
+    let mut s = TcpStream::connect(server.addr()).expect("connect");
+    s.write_all(post.as_bytes()).expect("send");
+    let mut resp = Vec::new();
+    let _ = s.read_to_end(&mut resp);
+    assert!(String::from_utf8_lossy(&resp).starts_with("HTTP/1.1 200"), "generate failed");
+
+    let (status, text) = http_get(server.addr(), "/debug/trace");
+    assert_eq!(status, 200, "{text}");
+    let doc = json::parse(body_of(&text)).expect("trace body must be strict JSON");
+    let events = doc.get("traceEvents").and_then(Value::as_arr).expect("traceEvents");
+    assert!(!events.is_empty(), "served trace is empty after a completed request");
+    assert!(
+        events.iter().any(|e| e.get("cat").and_then(Value::as_str) == Some("req")),
+        "no request lifecycle events in the served trace"
+    );
+
+    let (status, text) = http_get(server.addr(), "/debug/trace?last=3");
+    assert_eq!(status, 200);
+    let doc = json::parse(body_of(&text)).expect("bounded trace JSON");
+    assert!(doc.get("traceEvents").and_then(Value::as_arr).expect("arr").len() <= 3);
+
+    // Wrong method on the route.
+    let mut s = TcpStream::connect(server.addr()).expect("connect");
+    s.write_all(b"POST /debug/trace HTTP/1.1\r\nhost: t\r\ncontent-length: 0\r\nconnection: close\r\n\r\n")
+        .expect("send");
+    let mut out = Vec::new();
+    let _ = s.read_to_end(&mut out);
+    let text = String::from_utf8_lossy(&out);
+    assert!(text.starts_with("HTTP/1.1 405"), "expected 405, got: {text}");
+
+    server.shutdown(Duration::from_secs(30));
+    trace::disarm();
+}

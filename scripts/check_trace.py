@@ -1,0 +1,148 @@
+#!/usr/bin/env python3
+"""Validate a SPEQ Chrome trace-event JSON export (Perfetto-loadable).
+
+Usage:
+    check_trace.py <trace.json> [--require-cats cat1,cat2,...]
+
+Checks, in order:
+
+* the document parses as strict JSON and holds a ``traceEvents`` array
+  of objects with the mandatory Chrome trace fields (``name``, ``cat``,
+  ``ph``, ``ts``, ``pid``, ``tid``);
+* per-thread timestamps are monotonically non-decreasing;
+* thread-scoped ``B``/``E`` spans balance LIFO by name.  The recorder
+  uses fixed-capacity rings, so a window may begin mid-span: unmatched
+  ``E`` events *before the first ``B`` on that thread* are tolerated
+  (and counted), but any other mismatch fails;
+* async request spans (``ph`` in ``b``/``n``/``e``, keyed by ``id``)
+  are ordered begin -> instants -> end per key, with the same
+  truncation tolerance for keys whose ``b`` predates the window;
+* ``e`` request events carry an ``outcome`` arg;
+* every category named via ``--require-cats`` appears at least once
+  (the CI serving smoke requires ``req,engine,sched,spec``).
+
+Exit status 0 = valid, 1 = malformed or inconsistent.
+"""
+
+import json
+import sys
+
+MANDATORY_FIELDS = ("name", "cat", "ph", "ts", "pid", "tid")
+
+
+def fail(msg):
+    print(f"FAIL: {msg}", file=sys.stderr)
+    return 1
+
+
+def main(argv):
+    if len(argv) < 2:
+        raise SystemExit(__doc__)
+    path = argv[1]
+    require_cats = []
+    if len(argv) >= 4 and argv[2] == "--require-cats":
+        require_cats = [c for c in argv[3].split(",") if c]
+
+    with open(path, "r", encoding="utf-8") as fh:
+        try:
+            doc = json.load(fh)
+        except ValueError as exc:
+            return fail(f"{path}: not valid JSON: {exc}")
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return fail(f"{path}: no traceEvents array")
+    if not events:
+        return fail(f"{path}: traceEvents is empty")
+
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            return fail(f"event {i} is not an object")
+        for field in MANDATORY_FIELDS:
+            if field not in ev:
+                return fail(f"event {i} ({ev.get('name')!r}) missing {field!r}")
+
+    # Per-thread timestamp monotonicity + LIFO span balance.  The export
+    # is globally ts-sorted with same-thread order preserved, so walking
+    # in file order per tid is walking in record order.
+    last_ts = {}
+    stacks = {}
+    truncated_e = 0
+    for i, ev in enumerate(events):
+        tid = ev["tid"]
+        ts = ev["ts"]
+        if ts < last_ts.get(tid, 0):
+            return fail(f"event {i}: ts {ts} regressed on tid {tid}")
+        last_ts[tid] = ts
+        ph = ev["ph"]
+        if ph == "B":
+            stacks.setdefault(tid, []).append(ev["name"])
+        elif ph == "E":
+            stack = stacks.get(tid, [])
+            if stack:
+                top = stack.pop()
+                if top != ev["name"]:
+                    return fail(
+                        f"event {i}: E {ev['name']!r} closes B {top!r} on tid {tid}"
+                    )
+            else:
+                # An empty-stack E can only close a span whose B fell off
+                # the front of the bounded ring — tolerated and counted.
+                truncated_e += 1
+    # Spans still open at the end are a live capture racing an in-flight
+    # step (e.g. /debug/trace mid-generation) — warn, don't fail.
+    unclosed = {t: s for t, s in stacks.items() if s}
+    if unclosed:
+        print(f"note: spans open at end of window (live capture): {unclosed}")
+
+    # Async request lifecycles: b before n/e, e terminal, outcome present.
+    state = {}
+    truncated_async = 0
+    for i, ev in enumerate(events):
+        ph = ev["ph"]
+        if ph not in ("b", "n", "e"):
+            continue
+        if "id" not in ev:
+            return fail(f"event {i}: async {ph!r} without id")
+        key = (ev["cat"], ev["id"])
+        cur = state.get(key)
+        if ph == "b":
+            if cur == "open":
+                return fail(f"event {i}: duplicate b for request {key}")
+            state[key] = "open"
+        elif ph == "n":
+            if cur is None:
+                truncated_async += 1
+                state[key] = "open"
+            elif cur == "closed":
+                return fail(f"event {i}: n after e for request {key}")
+        else:  # "e"
+            if cur is None:
+                truncated_async += 1
+            elif cur == "closed":
+                return fail(f"event {i}: duplicate e for request {key}")
+            if "outcome" not in ev.get("args", {}):
+                return fail(f"event {i}: request e without outcome arg ({key})")
+            state[key] = "closed"
+
+    cats = {ev["cat"] for ev in events}
+    missing = [c for c in require_cats if c not in cats]
+    if missing:
+        return fail(f"required categories absent: {missing} (have {sorted(cats)})")
+
+    outcomes = {}
+    for ev in events:
+        if ev["ph"] == "e":
+            o = ev.get("args", {}).get("outcome", "?")
+            outcomes[o] = outcomes.get(o, 0) + 1
+    print(
+        f"OK: {len(events)} events, {len(last_ts)} threads, "
+        f"{sum(1 for e in events if e['ph'] == 'B')} spans, "
+        f"request outcomes {outcomes or '{}'}, "
+        f"truncated: {truncated_e} span E / {truncated_async} async"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
